@@ -1,0 +1,64 @@
+//! Contention study (miniature Figure 1): throughput of the three
+//! engines as zipfian skew (α) grows, in-process.
+//!
+//! ```bash
+//! cargo run --release --example contention_study [-- <threads> <ops_per_thread>]
+//! ```
+//!
+//! The paper mediates contention through access skew: higher α focuses
+//! traffic on fewer keys (and their buckets/locks). This example runs a
+//! scaled-down version of the Fig. 1 sweep; the full regeneration lives
+//! in `cargo bench --bench fig1_throughput`.
+
+use fleec::cache::{build_engine, CacheConfig, ENGINES};
+use fleec::workload::{
+    driver::StopRule, run_driver, DriverOptions, ValueSize, WorkloadSpec,
+};
+
+fn main() -> fleec::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let threads: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let ops: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(100_000);
+
+    println!("contention study: {threads} threads, {ops} ops/thread, 99% reads, 64 B values\n");
+    println!(
+        "{:>6} | {:>12} {:>12} {:>12} | {:>8} {:>8}",
+        "alpha", "memcached/s", "memclock/s", "fleec/s", "mclk ×", "fleec ×"
+    );
+    for &alpha in &[0.50, 0.90, 0.99, 1.20] {
+        let spec = WorkloadSpec {
+            catalog: 100_000,
+            alpha,
+            read_ratio: 0.99,
+            value_size: ValueSize::Fixed(64),
+            seed: 42,
+        };
+        let opts = DriverOptions {
+            threads,
+            stop: StopRule::OpsPerThread(ops),
+            prefill: true,
+            sample_every: 8,
+            validate: false,
+        };
+        let mut tputs = Vec::new();
+        for engine in ENGINES {
+            let cache = build_engine(engine, CacheConfig {
+                mem_limit: 64 << 20,
+                ..CacheConfig::default()
+            })?;
+            let report = run_driver(&cache, &spec, &opts);
+            tputs.push(report.throughput());
+        }
+        println!(
+            "{:>6.2} | {:>12.0} {:>12.0} {:>12.0} | {:>7.2}x {:>7.2}x",
+            alpha,
+            tputs[0],
+            tputs[1],
+            tputs[2],
+            tputs[1] / tputs[0],
+            tputs[2] / tputs[0],
+        );
+    }
+    println!("\n(single-core host: see DESIGN.md §4 on how contention is simulated)");
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Quickstart: use FLeeC as an embedded cache library.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Shows the engine-neutral [`Cache`] API: store/lookup/CAS/counters,
+//! eviction under a tight memory budget, and the stats surface. Swap
+//! `"fleec"` for `"memcached"` or `"memclock"` to drive the paper's
+//! baselines through the identical interface.
+
+use fleec::cache::{build_engine, CacheConfig, StoreOutcome};
+
+fn main() -> fleec::Result<()> {
+    // A 4 MiB cache with the paper's defaults (1.5 load factor,
+    // multi-bit CLOCK with max=3).
+    let cache = build_engine(
+        "fleec",
+        CacheConfig {
+            mem_limit: 4 << 20,
+            ..CacheConfig::default()
+        },
+    )?;
+
+    // Basic store + lookup.
+    assert_eq!(cache.set(b"greeting", b"hello fleec", 0, 0), StoreOutcome::Stored);
+    let hit = cache.get(b"greeting").expect("just stored");
+    println!("greeting = {:?}", String::from_utf8_lossy(&hit.data));
+
+    // Conditional stores.
+    assert_eq!(cache.add(b"greeting", b"nope", 0, 0), StoreOutcome::NotStored);
+    assert_eq!(cache.replace(b"greeting", b"hello again", 0, 0), StoreOutcome::Stored);
+
+    // Optimistic concurrency with CAS tokens.
+    let token = cache.get(b"greeting").unwrap().cas;
+    assert_eq!(cache.cas(b"greeting", b"v2", 0, 0, token), StoreOutcome::Stored);
+    assert_eq!(
+        cache.cas(b"greeting", b"v3", 0, 0, token),
+        StoreOutcome::Exists,
+        "stale token must be rejected"
+    );
+
+    // Counters.
+    cache.set(b"visits", b"0", 0, 0);
+    for _ in 0..10 {
+        cache.incr(b"visits", 1);
+    }
+    println!("visits = {:?}", cache.incr(b"visits", 0));
+
+    // Fill past the memory budget: the embedded CLOCK policy evicts cold
+    // buckets while sets keep succeeding (a cache never refuses writes).
+    let value = vec![0u8; 4096];
+    for i in 0..5_000u32 {
+        let key = format!("bulk-{i}");
+        assert_eq!(cache.set(key.as_bytes(), &value, 0, 0), StoreOutcome::Stored);
+        // Keep one key hot: CLOCK should protect it.
+        if i % 64 == 0 {
+            cache.get(b"greeting");
+        }
+    }
+    assert!(
+        cache.get(b"greeting").is_some(),
+        "hot key survived 5k evicting inserts"
+    );
+
+    let m = cache.metrics().snapshot();
+    println!(
+        "items={} buckets={} mem={}B evictions={} expansions={} hit_ratio={:.3}",
+        cache.item_count(),
+        cache.bucket_count(),
+        cache.mem_used(),
+        m.evictions,
+        m.expansions,
+        m.hit_ratio(),
+    );
+    assert!(m.evictions > 0, "the 4 MiB budget must have forced eviction");
+    Ok(())
+}

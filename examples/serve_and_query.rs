@@ -1,0 +1,131 @@
+//! End-to-end driver (experiment E5): full server + protocol + clients.
+//!
+//! ```bash
+//! cargo run --release --example serve_and_query [-- <engine> <clients> <requests>]
+//! ```
+//!
+//! Proves all layers compose: a FLeeC engine is wrapped by the TCP server
+//! and the coordinator (which loads the AOT planner artifact when
+//! `make artifacts` has run); multiple protocol clients then issue a
+//! batched zipfian request mix over real sockets, and the run reports
+//! throughput, latency percentiles and server-side stats. Recorded in
+//! EXPERIMENTS.md §E5.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fleec::cache::{build_engine, CacheConfig};
+use fleec::client::Client;
+use fleec::coordinator::{Coordinator, CoordinatorConfig};
+use fleec::metrics::LatencyHistogram;
+use fleec::runtime::artifacts_dir;
+use fleec::server::{Server, ServerConfig};
+use fleec::sync::Xoshiro256;
+use fleec::workload::{encode_key, fill_value, Zipf, KEY_LEN};
+
+fn main() -> fleec::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let engine = args.first().map(String::as_str).unwrap_or("fleec").to_string();
+    let clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let requests: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(20_000);
+    let catalog: u64 = 20_000;
+    let value_len = 64;
+
+    // --- Server side: engine + coordinator (with planner if built) + TCP.
+    let cache = build_engine(&engine, CacheConfig {
+        mem_limit: 32 << 20,
+        ..CacheConfig::default()
+    })?;
+    let planner_dir = artifacts_dir();
+    let planner = planner_dir.join("planner.hlo.txt").exists().then_some(planner_dir);
+    if planner.is_none() {
+        eprintln!("note: artifacts missing (run `make artifacts`); coordinator uses defaults");
+    }
+    let _coordinator = Coordinator::start(Arc::clone(&cache), planner, CoordinatorConfig::default());
+    let server = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            nodelay: true,
+        },
+        Arc::clone(&cache),
+    )?;
+    let addr = server.addr();
+    println!("serving engine={engine} on {addr}; {clients} clients × {requests} requests");
+
+    // --- Warm the cache over the wire.
+    {
+        let mut c = Client::connect(addr)?;
+        let mut key = [0u8; KEY_LEN];
+        let mut value = vec![0u8; value_len];
+        for id in 0..catalog {
+            fill_value(id, &mut value);
+            c.set_noreply(encode_key(&mut key, id), &value)?;
+        }
+        // One replied op to flush the pipeline.
+        c.set(b"warmup-done", b"1", 0, 0)?;
+    }
+
+    // --- Client fleet: 99% reads, zipf(0.99), measured per request.
+    let start = Instant::now();
+    let histogram = Arc::new(LatencyHistogram::new());
+    let mut handles = Vec::new();
+    for cid in 0..clients {
+        let histogram = Arc::clone(&histogram);
+        handles.push(std::thread::spawn(move || -> fleec::Result<(u64, u64)> {
+            let mut client = Client::connect(addr)?;
+            let zipf = Zipf::new(catalog, 0.99);
+            let mut rng = Xoshiro256::seeded(0xE2E + cid as u64);
+            let mut key = [0u8; KEY_LEN];
+            let mut value = vec![0u8; value_len];
+            let (mut hits, mut gets) = (0u64, 0u64);
+            for _ in 0..requests {
+                let id = zipf.sample(&mut rng) - 1;
+                let k = encode_key(&mut key, id);
+                let t0 = Instant::now();
+                if rng.chance(0.99) {
+                    gets += 1;
+                    if client.get(k)?.is_some() {
+                        hits += 1;
+                    }
+                } else {
+                    fill_value(id, &mut value);
+                    client.set(k, &value, 0, 0)?;
+                }
+                histogram.record(t0.elapsed().as_nanos() as u64);
+            }
+            Ok((hits, gets))
+        }));
+    }
+    let (mut hits, mut gets) = (0u64, 0u64);
+    for h in handles {
+        let (h_, g_) = h.join().expect("client thread")?;
+        hits += h_;
+        gets += g_;
+    }
+    let elapsed = start.elapsed();
+    let total = clients as u64 * requests;
+    let s = histogram.summary();
+
+    println!("\n=== end-to-end results (engine={engine}) ===");
+    println!("requests        : {total}");
+    println!("elapsed         : {:.2}s", elapsed.as_secs_f64());
+    println!("throughput      : {:.0} req/s", total as f64 / elapsed.as_secs_f64());
+    println!("hit ratio       : {:.4}", hits as f64 / gets.max(1) as f64);
+    println!(
+        "latency         : p50={}µs p95={}µs p99={}µs p999={}µs max={}µs",
+        s.p50_ns / 1000,
+        s.p95_ns / 1000,
+        s.p99_ns / 1000,
+        s.p999_ns / 1000,
+        s.max_ns / 1000
+    );
+
+    // --- Server-side stats over the wire (protocol `stats`).
+    let mut c = Client::connect(addr)?;
+    println!("\nserver stats:");
+    for (k, v) in c.stats()? {
+        println!("  {k:<20} {v}");
+    }
+    assert!(hits > 0, "end-to-end path must produce hits");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for Rust.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import eviction_planner, hit_ratio_model, SNAPSHOT
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple so the Rust
+    side can `to_tuple()` uniformly)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_planner() -> str:
+    clocks = jax.ShapeDtypeStruct((SNAPSHOT,), jnp.int32)
+    pressure = jax.ShapeDtypeStruct((), jnp.float32)
+    return to_hlo_text(jax.jit(eviction_planner).lower(clocks, pressure))
+
+
+def lower_hit_ratio() -> str:
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return to_hlo_text(jax.jit(hit_ratio_model).lower(scalar, scalar))
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, text in [
+        ("planner.hlo.txt", lower_planner()),
+        ("hit_ratio.hlo.txt", lower_hit_ratio()),
+    ]:
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: per-tile histogram of CLOCK values.
+
+The eviction planner reasons over the *distribution* of CLOCK values
+(how much of the table is hot vs evictable). This kernel computes a
+BINS-wide histogram per VMEM tile via a one-hot compare-and-sum -- a
+vectorizable formulation (VPU-friendly) instead of scatter-adds, which
+TPUs handle poorly. The per-tile partials are reduced by XLA outside the
+kernel (one fused `sum` over a [tiles, BINS] array).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .clock_sweep import TILE
+
+# CLOCK values are u8 in the engine but small (clock_max defaults to 3);
+# 8 bins cover every value the planner distinguishes, clamping the rest.
+BINS = 8
+
+
+def _hist_kernel(clocks_ref, hist_ref):
+    clocks = jnp.clip(clocks_ref[...], 0, BINS - 1)
+    one_hot = (clocks[:, None] == jnp.arange(BINS, dtype=jnp.int32)[None, :])
+    hist_ref[...] = jnp.sum(one_hot.astype(jnp.int32), axis=0, keepdims=True)
+
+
+def clock_histogram(clocks: jax.Array) -> jax.Array:
+    """Histogram of CLOCK values.
+
+    Args:
+      clocks: int32[N], N divisible by TILE.
+
+    Returns:
+      int32[BINS] counts (values clamped into the last bin).
+    """
+    n = clocks.shape[0]
+    assert n % TILE == 0
+    tiles = n // TILE
+    partials = pl.pallas_call(
+        _hist_kernel,
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, BINS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tiles, BINS), jnp.int32),
+        interpret=True,
+    )(clocks)
+    return jnp.sum(partials, axis=0)

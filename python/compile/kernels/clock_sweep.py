@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: the CLOCK sweep.
+
+The paper's eviction insight is that per-bucket CLOCK values live in one
+*contiguous* array, so the eviction hand streams through memory instead of
+chasing list pointers. This kernel expresses that insight as an explicit
+HBM->VMEM tile schedule: `BlockSpec((TILE,), lambda i: (i,))` pulls one
+VMEM-resident tile per grid step and computes, elementwise:
+
+  * the decayed CLOCK values  `max(clock - decay, 0)`,
+  * the per-tile count of evictable buckets (`clock == 0`),
+  * the per-tile minimum CLOCK value.
+
+All three come out of one pass over the data, so the kernel is purely
+bandwidth-bound (VPU work only, no MXU) -- the same roofline position the
+paper's CPU sweep occupies. VMEM footprint per step: TILE x 4 B x ~3 live
+refs (~6 KiB at TILE=512), far under any TPU generation's VMEM.
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode keeps the artifact runnable everywhere
+(see DESIGN.md section "Hardware adaptation").
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile width: 512 x int32 = 2 KiB per input tile. Must divide the snapshot
+# length used by the planner (4096).
+TILE = 512
+
+
+def _sweep_kernel(decay_ref, clocks_ref, decayed_ref, count_ref, min_ref):
+    """One grid step: process a TILE-wide window of the CLOCK array."""
+    clocks = clocks_ref[...]
+    decay = decay_ref[0]
+    decayed_ref[...] = jnp.maximum(clocks - decay, 0)
+    count_ref[0] = jnp.sum((clocks == 0).astype(jnp.int32))
+    min_ref[0] = jnp.min(clocks)
+
+
+def clock_sweep(clocks: jax.Array, decay: jax.Array):
+    """Run the sweep over the full CLOCK array.
+
+    Args:
+      clocks: int32[N] with N divisible by TILE.
+      decay:  int32[1] amount to subtract from every CLOCK value.
+
+    Returns:
+      (decayed int32[N], evictable_per_tile int32[N//TILE],
+       min_per_tile int32[N//TILE])
+    """
+    n = clocks.shape[0]
+    assert n % TILE == 0, f"snapshot length {n} must be a multiple of {TILE}"
+    grid = (n // TILE,)
+    return pl.pallas_call(
+        _sweep_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),      # decay: broadcast
+            pl.BlockSpec((TILE,), lambda i: (i,)),   # clocks: streamed
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.int32),
+        ],
+        interpret=True,
+    )(decay, clocks)

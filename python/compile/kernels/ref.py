@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: `pytest python/tests` sweeps
+shapes/values with hypothesis and asserts the Pallas outputs match these
+to the bit (integer kernels -- no tolerance games).
+"""
+
+import jax.numpy as jnp
+
+from .clock_sweep import TILE
+from .clock_histogram import BINS
+
+
+def clock_sweep_ref(clocks, decay):
+    """Reference semantics of :func:`..clock_sweep.clock_sweep`."""
+    clocks = jnp.asarray(clocks, jnp.int32)
+    decay = jnp.asarray(decay, jnp.int32).reshape(())
+    decayed = jnp.maximum(clocks - decay, 0)
+    tiles = clocks.shape[0] // TILE
+    tiled = clocks.reshape(tiles, TILE)
+    evictable = jnp.sum((tiled == 0).astype(jnp.int32), axis=1)
+    mins = jnp.min(tiled, axis=1)
+    return decayed, evictable, mins
+
+
+def clock_histogram_ref(clocks):
+    """Reference semantics of :func:`..clock_histogram.clock_histogram`."""
+    clocks = jnp.clip(jnp.asarray(clocks, jnp.int32), 0, BINS - 1)
+    return jnp.sum(
+        (clocks[:, None] == jnp.arange(BINS, dtype=jnp.int32)[None, :]).astype(jnp.int32),
+        axis=0,
+    )

@@ -1,0 +1,118 @@
+"""L2 JAX models: the eviction planner and the analytic hit-ratio model.
+
+Both are lowered once (``python -m compile.aot``) to HLO text that the
+Rust coordinator executes via PJRT -- Python never runs at serve time.
+
+* :func:`eviction_planner` -- composes the L1 Pallas kernels
+  (`clock_sweep`, `clock_histogram`) into the decision the coordinator
+  applies: how fast to drain CLOCK values (`decay`) and how many items to
+  evict per allocation stall (`batch`). The decision contract matches
+  `fleec::coordinator::fallback_decision` exactly; the Rust integration
+  test asserts both agree.
+
+* :func:`hit_ratio_model` -- Che's approximation for strict LRU and the
+  corresponding fixed point for FIFO-like policies. The paper's first
+  evaluation question is "what does approximating LRU with CLOCK cost in
+  hit-ratio?"; CLOCK sits between FIFO (no use-bits) and LRU, so these
+  two curves bracket the measured values in the hit-ratio bench.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.clock_sweep import clock_sweep
+from .kernels.clock_histogram import clock_histogram, BINS
+
+# Snapshot length the planner is lowered for (rust resamples onto this).
+SNAPSHOT = 4096
+# clock_max the engines default to; baked into the lowered decision rule.
+CLOCK_MAX = 3
+# Catalog size the hit-ratio model is lowered for.
+CATALOG = 100_000
+
+
+def eviction_planner(clocks: jax.Array, pressure: jax.Array):
+    """Decide eviction parameters from a CLOCK snapshot.
+
+    Args:
+      clocks:   int32[SNAPSHOT] resampled CLOCK values.
+      pressure: f32 scalar in [0,1] -- fraction of allocations stalling.
+
+    Returns:
+      (decay int32[1], batch int32[1], evictable_frac f32[1],
+       histogram int32[BINS])
+    """
+    hist = clock_histogram(clocks)
+    # One sweep probe with decay=1 exercises the same kernel the real
+    # sweep uses; its per-tile evictable counts cross-check the histogram
+    # (and keep the sweep kernel in the lowered artifact).
+    _, evictable_tiles, _ = clock_sweep(clocks, jnp.array([1], jnp.int32))
+    evictable = jnp.sum(evictable_tiles).astype(jnp.float32)
+    total = jnp.float32(SNAPSHOT)
+    evictable_frac = evictable / total
+
+    # Contract shared with fleec::coordinator::fallback_decision:
+    #   hot table (evictable < 10%) under real pressure (> 0.5)
+    #   -> drain multi-bit CLOCKs faster; otherwise gentle decay.
+    aggressive = jnp.logical_and(pressure > 0.5, evictable_frac < 0.1)
+    decay = jnp.where(aggressive, CLOCK_MAX // 2 + 1, 1).astype(jnp.int32)
+    batch = (8.0 + 56.0 * jnp.clip(pressure, 0.0, 1.0)).astype(jnp.int32)
+
+    return (
+        decay.reshape(1),
+        batch.reshape(1),
+        evictable_frac.reshape(1),
+        hist.astype(jnp.int32),
+    )
+
+
+def _zipf_pmf(alpha: jax.Array, n: int) -> jax.Array:
+    ranks = jnp.arange(1, n + 1, dtype=jnp.float32)
+    w = jnp.exp(-alpha * jnp.log(ranks))
+    return w / jnp.sum(w)
+
+
+def _bisect(f, lo: float, hi: float, iters: int = 60):
+    """Monotone root find for f(T) = 0 with T log-spaced in [lo, hi]."""
+    log_lo = jnp.log(jnp.float32(lo))
+    log_hi = jnp.log(jnp.float32(hi))
+
+    def body(_, bounds):
+        blo, bhi = bounds
+        mid = 0.5 * (blo + bhi)
+        val = f(jnp.exp(mid))
+        # f is increasing in T: value too small -> move lo up.
+        blo = jnp.where(val < 0.0, mid, blo)
+        bhi = jnp.where(val < 0.0, bhi, mid)
+        return blo, bhi
+
+    blo, bhi = jax.lax.fori_loop(0, iters, body, (log_lo, log_hi))
+    return jnp.exp(0.5 * (blo + bhi))
+
+
+def hit_ratio_model(alpha: jax.Array, capacity: jax.Array):
+    """Analytic hit ratios for a zipf(alpha) stream over CATALOG keys.
+
+    Args:
+      alpha:    f32 scalar zipf exponent.
+      capacity: f32 scalar cache capacity in items (clamped to CATALOG-1).
+
+    Returns:
+      (hit_lru f32[1], hit_fifo f32[1])
+
+    LRU follows Che's approximation: find T with
+        sum_i 1 - exp(-p_i T) = C,      hit = sum_i p_i (1 - exp(-p_i T)).
+    FIFO follows the corresponding fixed point (Dan & Towsley form):
+        sum_i p_i T / (1 + p_i T) = C,  hit = sum_i p_i^2 T / (1 + p_i T).
+    CLOCK with use-bits lands between the two curves.
+    """
+    p = _zipf_pmf(alpha, CATALOG)
+    cap = jnp.clip(capacity, 1.0, jnp.float32(CATALOG - 1))
+
+    t_lru = _bisect(lambda t: jnp.sum(1.0 - jnp.exp(-p * t)) - cap, 1e-2, 1e12)
+    hit_lru = jnp.sum(p * (1.0 - jnp.exp(-p * t_lru)))
+
+    t_fifo = _bisect(lambda t: jnp.sum(p * t / (1.0 + p * t)) - cap, 1e-2, 1e14)
+    hit_fifo = jnp.sum(p * (p * t_fifo / (1.0 + p * t_fifo)))
+
+    return hit_lru.reshape(1), hit_fifo.reshape(1)

@@ -1,0 +1,84 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Integer kernels must match the reference exactly; hypothesis sweeps
+array contents and (TILE-multiple) lengths.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.clock_sweep import clock_sweep, TILE
+from compile.kernels.clock_histogram import clock_histogram, BINS
+from compile.kernels.ref import clock_sweep_ref, clock_histogram_ref
+
+
+def _assert_sweep_matches(clocks, decay):
+    clocks = jnp.asarray(clocks, jnp.int32)
+    got = clock_sweep(clocks, jnp.asarray([decay], jnp.int32))
+    want = clock_sweep_ref(clocks, decay)
+    for g, w, name in zip(got, want, ["decayed", "evictable", "min"]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+
+
+def test_sweep_basic_decay():
+    clocks = np.arange(TILE * 2) % 5
+    _assert_sweep_matches(clocks, 1)
+
+
+def test_sweep_zero_decay_is_identity_on_values():
+    clocks = np.arange(TILE) % 4
+    got_decayed = clock_sweep(jnp.asarray(clocks, jnp.int32), jnp.asarray([0], jnp.int32))[0]
+    np.testing.assert_array_equal(np.asarray(got_decayed), clocks)
+
+
+def test_sweep_saturates_at_zero():
+    clocks = np.ones(TILE, np.int32)
+    decayed = clock_sweep(jnp.asarray(clocks), jnp.asarray([100], jnp.int32))[0]
+    assert np.all(np.asarray(decayed) == 0)
+
+
+def test_sweep_counts_evictable_per_tile():
+    # Tile 0 all zeros, tile 1 all threes.
+    clocks = np.concatenate([np.zeros(TILE, np.int32), np.full(TILE, 3, np.int32)])
+    _, evictable, mins = clock_sweep(jnp.asarray(clocks), jnp.asarray([1], jnp.int32))
+    assert np.asarray(evictable).tolist() == [TILE, 0]
+    assert np.asarray(mins).tolist() == [0, 3]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    decay=st.integers(min_value=0, max_value=7),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sweep_matches_ref_property(tiles, decay, seed):
+    rng = np.random.default_rng(seed)
+    clocks = rng.integers(0, 8, size=tiles * TILE, dtype=np.int32)
+    _assert_sweep_matches(clocks, decay)
+
+
+def test_histogram_basic():
+    clocks = np.array([0] * TILE, np.int32)
+    hist = np.asarray(clock_histogram(jnp.asarray(clocks)))
+    assert hist[0] == TILE and hist[1:].sum() == 0
+
+
+def test_histogram_clamps_large_values():
+    clocks = np.full(TILE, 100, np.int32)
+    hist = np.asarray(clock_histogram(jnp.asarray(clocks)))
+    assert hist[BINS - 1] == TILE
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_histogram_matches_ref_property(tiles, seed):
+    rng = np.random.default_rng(seed)
+    clocks = rng.integers(0, 12, size=tiles * TILE, dtype=np.int32)
+    got = np.asarray(clock_histogram(jnp.asarray(clocks, jnp.int32)))
+    want = np.asarray(clock_histogram_ref(clocks))
+    np.testing.assert_array_equal(got, want)
+    assert got.sum() == tiles * TILE, "histogram must account for every bucket"

@@ -1,0 +1,179 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   A1  multi-bit CLOCK (`clock_max`) — hit-ratio vs eviction precision
+//!       (the paper: "CLOCK values are not limited to just one bit").
+//!   A2  eviction batch size — OOM-stall amortization vs overshoot.
+//!   A3  DEBRA-variant laziness (`retire_threshold`) — the paper's "only
+//!       progress when absolutely necessary" vs eager reclamation.
+//!   A4  lock stripes in the blocking engines — how much of the paper's
+//!       gap is just "not enough stripes".
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+use std::sync::Arc;
+
+use fleec::cache::fleec::FleecCache;
+use fleec::cache::{build_engine, Cache, CacheConfig};
+use fleec::ebr::{Collector, Config as EbrConfig};
+use fleec::workload::{
+    driver::{replay_trace, run_driver, StopRule},
+    DriverOptions, Trace, ValueSize, WorkloadSpec,
+};
+
+fn main() {
+    ablation_clock_max();
+    ablation_evict_batch();
+    ablation_ebr_laziness();
+    ablation_lock_stripes();
+}
+
+/// A1: 1-bit CLOCK (classic second chance) vs multi-bit.
+fn ablation_clock_max() {
+    println!("== A1: clock_max (multi-bit CLOCK) — hit-ratio at 2 MiB =========");
+    println!("{:>10} | {:>10} {:>10}", "clock_max", "memclock", "fleec");
+    let spec = WorkloadSpec {
+        catalog: 100_000,
+        alpha: 0.99,
+        read_ratio: 0.99,
+        value_size: ValueSize::Fixed(64),
+        seed: 21,
+    };
+    let trace = Trace::generate(&spec, 200_000);
+    for clock_max in [1u8, 2, 3, 7] {
+        let mut ratios = Vec::new();
+        for engine in ["memclock", "fleec"] {
+            let cache = build_engine(
+                engine,
+                CacheConfig {
+                    mem_limit: 2 << 20,
+                    clock_max,
+                    ..CacheConfig::default()
+                },
+            )
+            .unwrap();
+            let (r, _, _) = replay_trace(cache.as_ref(), &trace);
+            ratios.push(r);
+        }
+        println!("{:>10} | {:>10.4} {:>10.4}", clock_max, ratios[0], ratios[1]);
+    }
+    println!("# paper: multi-bit distinguishes mildly vs highly popular buckets\n");
+}
+
+/// A2: eviction batch under write pressure.
+fn ablation_evict_batch() {
+    println!("== A2: evict_batch — write throughput at the memory limit ========");
+    println!("{:>10} | {:>12} {:>12}", "batch", "sets/s", "oom_stalls");
+    for batch in [1u32, 8, 32, 128] {
+        let cache: Arc<dyn Cache> = Arc::new(FleecCache::new(CacheConfig {
+            mem_limit: 4 << 20,
+            evict_batch: batch,
+            ..CacheConfig::default()
+        }));
+        let spec = WorkloadSpec {
+            catalog: 50_000,
+            alpha: 0.8,
+            read_ratio: 0.0, // pure writes: maximal eviction pressure
+            value_size: ValueSize::Fixed(1024),
+            seed: 3,
+        };
+        let opts = DriverOptions {
+            threads: 4,
+            stop: StopRule::OpsPerThread(10_000),
+            prefill: false,
+            sample_every: 32,
+            validate: false,
+        };
+        let report = run_driver(&cache, &spec, &opts);
+        let m = cache.metrics().snapshot();
+        println!(
+            "{:>10} | {:>12.0} {:>12}",
+            batch,
+            report.throughput(),
+            m.oom_stalls
+        );
+    }
+    println!();
+}
+
+/// A3: the paper's lazy reclamation vs eager (low threshold).
+fn ablation_ebr_laziness() {
+    println!("== A3: DEBRA-variant laziness — retire_threshold sweep ===========");
+    println!(
+        "{:>10} | {:>12} {:>14} {:>12}",
+        "threshold", "ns/retire", "advance_tries", "peak_pending"
+    );
+    for threshold in [8usize, 64, 512, 4096] {
+        let c = Arc::new(Collector::new(EbrConfig {
+            retire_threshold: threshold,
+        }));
+        let iters = 200_000u64;
+        let t0 = std::time::Instant::now();
+        let mut peak = 0usize;
+        for i in 0..iters {
+            let g = c.pin();
+            unsafe { g.defer_drop_box(Box::into_raw(Box::new([0u64; 4]))) };
+            if i % 1024 == 0 {
+                peak = peak.max(c.pending_items());
+            }
+        }
+        drop(c.pin());
+        let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        let (attempts, _) = c.advance_stats();
+        println!("{:>10} | {:>12.1} {:>14} {:>12}", threshold, ns, attempts, peak);
+        c.force_reclaim(4);
+    }
+    println!("# paper: high threshold (lazy) trades bounded limbo memory for fewer scans\n");
+}
+
+/// A4: does giving the blocking baseline more stripes close the gap?
+fn ablation_lock_stripes() {
+    println!("== A4: lock stripes in the memcached baseline ====================");
+    println!("{:>10} | {:>12} {:>12}", "stripes", "memcached/s", "fleec ×");
+    let spec = WorkloadSpec {
+        catalog: 100_000,
+        alpha: 0.99,
+        read_ratio: 0.99,
+        value_size: ValueSize::Fixed(64),
+        seed: 5,
+    };
+    let opts = DriverOptions {
+        threads: 8,
+        stop: StopRule::OpsPerThread(60_000),
+        prefill: true,
+        sample_every: 16,
+        validate: false,
+    };
+    // FLeeC reference point.
+    let fleec = build_engine(
+        "fleec",
+        CacheConfig {
+            mem_limit: 64 << 20,
+            initial_buckets: 1 << 16,
+            ..CacheConfig::default()
+        },
+    )
+    .unwrap();
+    let fleec_tput = run_driver(&fleec, &spec, &opts).throughput();
+    for stripes in [1usize, 4, 16, 64, 256] {
+        let cache = build_engine(
+            "memcached",
+            CacheConfig {
+                mem_limit: 64 << 20,
+                initial_buckets: 1 << 16,
+                lock_stripes: stripes,
+                ..CacheConfig::default()
+            },
+        )
+        .unwrap();
+        let tput = run_driver(&cache, &spec, &opts).throughput();
+        println!(
+            "{:>10} | {:>12.0} {:>11.2}x",
+            stripes,
+            tput,
+            fleec_tput / tput
+        );
+    }
+    println!("# paper's point: the strict-LRU list serializes hits regardless of stripes");
+}

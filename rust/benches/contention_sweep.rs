@@ -1,0 +1,74 @@
+//! Regenerates the **contention-mediation sweep** (evaluation setup):
+//! the paper notes contention is mediated by item size, access skew and
+//! bandwidth. This bench sweeps item size × thread count at fixed α and
+//! reports throughput per engine — with large items, memory copies (and
+//! on the paper's testbed, the network) dominate and the engines
+//! converge; with small items the concurrency design decides.
+//!
+//! ```bash
+//! cargo bench --bench contention_sweep
+//! # knobs: FLEEC_BENCH_OPS
+//! ```
+
+use fleec::cache::{build_engine, CacheConfig, ENGINES};
+use fleec::workload::{
+    driver::StopRule, run_driver, DriverOptions, ValueSize, WorkloadSpec,
+};
+
+fn env_or<T: std::str::FromStr>(name: &str, default: T) -> T {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let ops: u64 = env_or("FLEEC_BENCH_OPS", 60_000);
+    println!("# Contention sweep: α=0.99, 99% reads; throughput (ops/s)");
+    println!(
+        "{:>8} {:>8} | {:>12} {:>12} {:>12} | {:>8}",
+        "value_B", "threads", "memcached", "memclock", "fleec", "fleec ×"
+    );
+    for &value_bytes in &[64usize, 1024, 8192, 65536] {
+        for &threads in &[2usize, 8, 32] {
+            let spec = WorkloadSpec {
+                catalog: 10_000,
+                alpha: 0.99,
+                read_ratio: 0.99,
+                value_size: ValueSize::Fixed(value_bytes),
+                seed: 0xC0,
+            };
+            let opts = DriverOptions {
+                threads,
+                stop: StopRule::OpsPerThread(ops / threads as u64),
+                prefill: true,
+                sample_every: 16,
+                validate: false,
+            };
+            let mut tput = Vec::new();
+            for engine in ENGINES {
+                let cache = build_engine(
+                    engine,
+                    CacheConfig {
+                        // Budget sized so the catalog always fits: this
+                        // sweep isolates copy/concurrency costs, not
+                        // eviction.
+                        mem_limit: (value_bytes + 256) * 10_000 * 2,
+                        ..CacheConfig::default()
+                    },
+                )
+                .expect("engine");
+                let report = run_driver(&cache, &spec, &opts);
+                tput.push(report.throughput());
+            }
+            println!(
+                "{:>8} {:>8} | {:>12.0} {:>12.0} {:>12.0} | {:>7.2}x",
+                value_bytes,
+                threads,
+                tput[0],
+                tput[1],
+                tput[2],
+                tput[2] / tput[0]
+            );
+        }
+    }
+    println!("\n# expected shape: fleec× largest at small values (concurrency-bound),");
+    println!("# converging toward 1.0 as copies dominate (bandwidth-bound).");
+}

@@ -1,0 +1,86 @@
+//! Regenerates **Figure 1a + 1b**: throughput and speedup of
+//! {Memcached, MemcLock, FLeeC} under a read-intensive (99 % reads)
+//! workload with small items, sweeping zipfian α.
+//!
+//! ```bash
+//! cargo bench --bench fig1_throughput
+//! # knobs: FLEEC_BENCH_THREADS, FLEEC_BENCH_OPS, FLEEC_BENCH_ALPHAS
+//! ```
+//!
+//! Paper shape to reproduce: FLeeC ≥ the others everywhere, with the gap
+//! growing as α (contention) grows; MemcLock ≈ Memcached. Absolute
+//! numbers differ from the paper (single-core host — DESIGN.md §4).
+
+use fleec::cache::{build_engine, CacheConfig, ENGINES};
+use fleec::workload::{
+    driver::StopRule, run_driver, DriverOptions, ValueSize, WorkloadSpec,
+};
+
+fn env_or<T: std::str::FromStr>(name: &str, default: T) -> T {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let threads: usize = env_or("FLEEC_BENCH_THREADS", 8);
+    let ops: u64 = env_or("FLEEC_BENCH_OPS", 150_000);
+    let alphas: Vec<f64> = std::env::var("FLEEC_BENCH_ALPHAS")
+        .map(|s| s.split(',').filter_map(|a| a.parse().ok()).collect())
+        .unwrap_or_else(|_| vec![0.50, 0.70, 0.90, 0.99, 1.10, 1.30]);
+
+    println!("# Figure 1 regeneration: 99% reads, 64 B items, catalog=100k,");
+    println!("# {threads} threads × {ops} ops, mem=64 MiB (no eviction pressure — Fig 1 isolates concurrency)");
+    println!();
+    println!(
+        "{:>6} | {:>12} {:>12} {:>12} | {:>9} {:>9}   <- Fig 1a (ops/s) | Fig 1b (speedup vs memcached)",
+        "alpha", "memcached", "memclock", "fleec", "memclock", "fleec"
+    );
+
+    let mut rows = Vec::new();
+    for &alpha in &alphas {
+        let spec = WorkloadSpec {
+            catalog: 100_000,
+            alpha,
+            read_ratio: 0.99,
+            value_size: ValueSize::Fixed(64),
+            seed: 0xF16_1A,
+        };
+        let opts = DriverOptions {
+            threads,
+            stop: StopRule::OpsPerThread(ops),
+            prefill: true,
+            sample_every: 16,
+            validate: false,
+        };
+        let mut tput = Vec::new();
+        for engine in ENGINES {
+            let cache = build_engine(
+                engine,
+                CacheConfig {
+                    mem_limit: 64 << 20,
+                    initial_buckets: 1 << 16, // steady-state table, like the paper's warm runs
+                    ..CacheConfig::default()
+                },
+            )
+            .expect("engine");
+            let report = run_driver(&cache, &spec, &opts);
+            assert_eq!(report.validation_failures, 0);
+            tput.push(report.throughput());
+        }
+        println!(
+            "{:>6.2} | {:>12.0} {:>12.0} {:>12.0} | {:>8.2}x {:>8.2}x",
+            alpha,
+            tput[0],
+            tput[1],
+            tput[2],
+            tput[1] / tput[0],
+            tput[2] / tput[0],
+        );
+        rows.push((alpha, tput[0], tput[1], tput[2]));
+    }
+
+    // Machine-readable block for EXPERIMENTS.md extraction.
+    println!("\n# csv: alpha,memcached,memclock,fleec,speedup_memclock,speedup_fleec");
+    for (alpha, a, b, c) in rows {
+        println!("csv,{alpha},{a:.0},{b:.0},{c:.0},{:.3},{:.3}", b / a, c / a);
+    }
+}

@@ -1,0 +1,72 @@
+//! Regenerates the **latency claim**: "FLeeC … up to 1/6 of the latency
+//! w.r.t. Memcached under very high contention".
+//!
+//! ```bash
+//! cargo bench --bench latency
+//! # knobs: FLEEC_BENCH_THREADS, FLEEC_BENCH_OPS
+//! ```
+//!
+//! Reports p50/p95/p99/p999 per engine per α. Under blocking designs the
+//! tail (p99+) is where lock convoys and lock-holder preemption appear;
+//! lock-free ops cannot be stalled by a descheduled peer, so the paper's
+//! latency gap should reappear in the tail percentiles.
+
+use fleec::cache::{build_engine, CacheConfig, ENGINES};
+use fleec::workload::{
+    driver::StopRule, run_driver, DriverOptions, ValueSize, WorkloadSpec,
+};
+
+fn env_or<T: std::str::FromStr>(name: &str, default: T) -> T {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let threads: usize = env_or("FLEEC_BENCH_THREADS", 16);
+    let ops: u64 = env_or("FLEEC_BENCH_OPS", 80_000);
+
+    println!("# Latency percentiles (ns): 99% reads, 64 B items, {threads} threads × {ops} ops");
+    println!(
+        "{:>6} {:>10} | {:>9} {:>9} {:>9} {:>10} {:>10}",
+        "alpha", "engine", "p50", "p95", "p99", "p999", "max"
+    );
+    for &alpha in &[0.50, 0.99, 1.30] {
+        let spec = WorkloadSpec {
+            catalog: 100_000,
+            alpha,
+            read_ratio: 0.99,
+            value_size: ValueSize::Fixed(64),
+            seed: 0x1A7,
+        };
+        let opts = DriverOptions {
+            threads,
+            stop: StopRule::OpsPerThread(ops),
+            prefill: true,
+            sample_every: 1, // every op: tails need samples
+            validate: false,
+        };
+        let mut p99s = Vec::new();
+        for engine in ENGINES {
+            let cache = build_engine(
+                engine,
+                CacheConfig {
+                    mem_limit: 64 << 20,
+                    initial_buckets: 1 << 16,
+                    ..CacheConfig::default()
+                },
+            )
+            .expect("engine");
+            let report = run_driver(&cache, &spec, &opts);
+            let l = &report.latency;
+            println!(
+                "{:>6.2} {:>10} | {:>9} {:>9} {:>9} {:>10} {:>10}",
+                alpha, engine, l.p50_ns, l.p95_ns, l.p99_ns, l.p999_ns, l.max_ns
+            );
+            p99s.push(l.p99_ns as f64);
+        }
+        println!(
+            "       {:>10} | fleec p99 = {:.2}x memcached (paper: down to ~1/6 under high contention)",
+            "ratio",
+            p99s[2] / p99s[0].max(1.0),
+        );
+    }
+}

@@ -1,0 +1,231 @@
+//! Component micro-benchmarks (experiment E4): per-operation costs of
+//! the substrates FLeeC is built from, and of the design choices
+//! DESIGN.md calls out.
+//!
+//! ```bash
+//! cargo bench --bench micro
+//! ```
+//!
+//! Sections:
+//!   list      — Harris lock-free list vs a mutexed BTreeSet, 1..N threads
+//!   ebr       — pin/unpin cost; retire+reclaim cost
+//!   slab      — alloc/free fast path vs malloc (Box)
+//!   stack     — tagged Treiber stack push/pop
+//!   clock     — eviction sweep over a warm vs cold CLOCK array
+//!   proto     — text-protocol parse throughput
+//!   engines   — single-threaded get/set per engine (baseline op cost)
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use fleec::cache::{build_engine, CacheConfig};
+use fleec::ebr::Collector;
+use fleec::lockfree::{HarrisList, TaggedStack};
+use fleec::slab::{Slab, SlabConfig};
+use fleec::sync::Xoshiro256;
+
+fn bench(name: &str, iters: u64, f: impl FnOnce()) {
+    let t0 = Instant::now();
+    f();
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{name:<48} {ns:>10.1} ns/op   ({iters} iters)");
+}
+
+fn bench_threads(name: &str, threads: usize, iters_per_thread: u64, f: impl Fn(u64) + Send + Sync) {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let f = &f;
+            s.spawn(move || f(t as u64));
+        }
+    });
+    let total = threads as u64 * iters_per_thread;
+    let ns = t0.elapsed().as_nanos() as f64 / total as f64;
+    println!("{name:<48} {ns:>10.1} ns/op   ({threads}×{iters_per_thread})");
+}
+
+fn main() {
+    println!("== list: Harris lock-free vs Mutex<BTreeSet> =====================");
+    for &threads in &[1usize, 4, 16] {
+        let iters = 50_000u64;
+        let collector = Arc::new(Collector::default());
+        let harris: Arc<HarrisList<u64, u64>> = Arc::new(HarrisList::new(collector));
+        bench_threads(
+            &format!("harris list mixed ops ({threads} thr)"),
+            threads,
+            iters,
+            |t| {
+                let mut rng = Xoshiro256::seeded(t);
+                for _ in 0..iters {
+                    let k = rng.next_below(512);
+                    match rng.next_below(10) {
+                        0..=6 => {
+                            let _ = harris.get(&k, |v| *v);
+                        }
+                        7..=8 => {
+                            let _ = harris.insert(k, t);
+                        }
+                        _ => {
+                            let _ = harris.remove(&k);
+                        }
+                    }
+                }
+            },
+        );
+        let locked: Arc<Mutex<std::collections::BTreeMap<u64, u64>>> =
+            Arc::new(Mutex::new(std::collections::BTreeMap::new()));
+        bench_threads(
+            &format!("mutex btreemap mixed ops ({threads} thr)"),
+            threads,
+            iters,
+            |t| {
+                let mut rng = Xoshiro256::seeded(t);
+                for _ in 0..iters {
+                    let k = rng.next_below(512);
+                    let mut m = locked.lock().unwrap();
+                    match rng.next_below(10) {
+                        0..=6 => {
+                            let _ = m.get(&k).copied();
+                        }
+                        7..=8 => {
+                            m.insert(k, t);
+                        }
+                        _ => {
+                            m.remove(&k);
+                        }
+                    }
+                }
+            },
+        );
+    }
+
+    println!("\n== ebr ============================================================");
+    {
+        let c = Arc::new(Collector::default());
+        let iters = 2_000_000u64;
+        bench("ebr pin+unpin", iters, || {
+            for _ in 0..iters {
+                drop(c.pin());
+            }
+        });
+        let iters = 200_000u64;
+        bench("ebr retire box + amortized reclaim", iters, || {
+            for _ in 0..iters {
+                let g = c.pin();
+                unsafe { g.defer_drop_box(Box::into_raw(Box::new(0u64))) };
+            }
+            c.force_reclaim(3);
+        });
+    }
+
+    println!("\n== slab vs malloc =================================================");
+    {
+        let slab = Slab::new(SlabConfig::default());
+        let iters = 1_000_000u64;
+        bench("slab alloc+free 100 B", iters, || {
+            for _ in 0..iters {
+                let (p, c) = slab.alloc(100).unwrap();
+                unsafe { slab.free(p, c) };
+            }
+        });
+        bench("box alloc+free 100 B", iters, || {
+            for _ in 0..iters {
+                drop(std::hint::black_box(vec![0u8; 100]));
+            }
+        });
+    }
+
+    println!("\n== tagged stack ===================================================");
+    {
+        let stack = TaggedStack::new();
+        let mut blocks: Vec<Box<[u8; 64]>> = (0..64).map(|_| Box::new([0u8; 64])).collect();
+        for b in blocks.iter_mut() {
+            unsafe { stack.push(b.as_mut_ptr()) };
+        }
+        let iters = 2_000_000u64;
+        bench("tagged stack pop+push", iters, || {
+            for _ in 0..iters {
+                let p = unsafe { stack.pop() }.unwrap();
+                unsafe { stack.push(p) };
+            }
+        });
+    }
+
+    println!("\n== clock sweep (engine eviction path) =============================");
+    {
+        // Warm cache at its memory limit: every set drives the CLOCK hand.
+        let cache = build_engine(
+            "fleec",
+            CacheConfig {
+                mem_limit: 4 << 20,
+                ..CacheConfig::default()
+            },
+        )
+        .unwrap();
+        let value = vec![0u8; 1024];
+        for i in 0..8_000u32 {
+            cache.set(format!("warm-{i}").as_bytes(), &value, 0, 0);
+        }
+        let iters = 20_000u64;
+        bench("set on full cache (evicting)", iters, || {
+            for i in 0..iters {
+                cache.set(format!("evict-{i}").as_bytes(), &value, 0, 0);
+            }
+        });
+        let m = cache.metrics().snapshot();
+        println!("  (evictions={} oom_stalls={})", m.evictions, m.oom_stalls);
+    }
+
+    println!("\n== proto parse ====================================================");
+    {
+        let wire = b"set somekey0001 7 60 64\r\nxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxx\r\n";
+        let iters = 2_000_000u64;
+        bench("parse storage command (64 B payload)", iters, || {
+            for _ in 0..iters {
+                match fleec::proto::parse(std::hint::black_box(wire)) {
+                    fleec::proto::Parsed::Done(_, n) => {
+                        assert_eq!(n, wire.len());
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        });
+        let getw = b"get somekey0001\r\n";
+        bench("parse get command", iters, || {
+            for _ in 0..iters {
+                let _ = std::hint::black_box(fleec::proto::parse(std::hint::black_box(getw)));
+            }
+        });
+    }
+
+    println!("\n== engines: single-thread op cost =================================");
+    for engine in fleec::cache::ENGINES {
+        let cache = build_engine(
+            engine,
+            CacheConfig {
+                mem_limit: 64 << 20,
+                ..CacheConfig::default()
+            },
+        )
+        .unwrap();
+        let iters = 500_000u64;
+        for i in 0..10_000u32 {
+            cache.set(format!("k{i:08}").as_bytes(), b"0123456789abcdef", 0, 0);
+        }
+        let mut rng = Xoshiro256::seeded(1);
+        bench(&format!("{engine}: get hit (16 B value)"), iters, || {
+            for _ in 0..iters {
+                let k = format!("k{:08}", rng.next_below(10_000));
+                std::hint::black_box(cache.get(k.as_bytes()));
+            }
+        });
+        let mut rng = Xoshiro256::seeded(2);
+        let iters = 200_000u64;
+        bench(&format!("{engine}: set overwrite (16 B)"), iters, || {
+            for _ in 0..iters {
+                let k = format!("k{:08}", rng.next_below(10_000));
+                std::hint::black_box(cache.set(k.as_bytes(), b"fedcba9876543210", 0, 0));
+            }
+        });
+    }
+}

@@ -1,0 +1,234 @@
+//! FLeeC item and node representation.
+//!
+//! A cache entry is split in two:
+//!
+//! * the **item** — header + value bytes in one slab chunk. Items are
+//!   immutable after publication; every mutation allocates a fresh item
+//!   and swings the node's `item` word, so readers never observe torn
+//!   values and CAS semantics (`gets`/`cas`) fall out of pointer identity.
+//! * the **node** — the Harris-list entry owning the key. Its `item` word
+//!   packs a state tag in the low bits of the item pointer:
+//!   `LIVE(ptr)` / `TOMB` (logically deleted) / `MOVED` (transferred to
+//!   the successor table during non-blocking expansion).
+//!
+//! The `item` word is the linearization point for set/delete/cas, which is
+//! what makes eviction, deletion and migration commute safely: whoever
+//! swaps the word owns the old item and is responsible for retiring it.
+
+use std::sync::atomic::AtomicUsize;
+use std::sync::Arc;
+
+use crate::ebr::Guard;
+use crate::slab::Slab;
+use crate::sync::tagged::{tag_of, untagged};
+
+/// `next`-word tag: node is logically deleted (Harris mark).
+pub const DEL: usize = 0b01;
+/// `next`-word tag: node's links are frozen for migration.
+pub const FRZ: usize = 0b10;
+
+/// `item`-word state tags.
+pub const STATE_LIVE: usize = 0b00;
+pub const STATE_TOMB: usize = 0b01;
+pub const STATE_MOVED: usize = 0b10;
+
+/// Packed `TOMB` word (no pointer payload).
+pub const TOMB_WORD: usize = STATE_TOMB;
+/// Packed `MOVED` word.
+pub const MOVED_WORD: usize = STATE_MOVED;
+
+/// Item header; value bytes follow contiguously in the same slab chunk.
+#[repr(C)]
+pub struct Item {
+    pub vlen: u32,
+    pub flags: u32,
+    pub cas: u64,
+    /// Absolute uptime deadline (0 = never expires).
+    pub deadline: u32,
+    /// Slab class the chunk came from (needed to free it).
+    pub class: u8,
+    _pad: [u8; 3],
+}
+
+pub const ITEM_HEADER: usize = std::mem::size_of::<Item>();
+
+impl Item {
+    /// Allocate an item from the slab and copy `value` in. `None` under
+    /// memory pressure.
+    pub fn alloc(
+        slab: &Slab,
+        value: &[u8],
+        flags: u32,
+        deadline: u32,
+        cas: u64,
+    ) -> Option<*mut Item> {
+        let total = ITEM_HEADER + value.len();
+        let (ptr, class) = slab.alloc(total)?;
+        let item = ptr as *mut Item;
+        unsafe {
+            item.write(Item {
+                vlen: value.len() as u32,
+                flags,
+                cas,
+                deadline,
+                class,
+                _pad: [0; 3],
+            });
+            std::ptr::copy_nonoverlapping(value.as_ptr(), ptr.add(ITEM_HEADER), value.len());
+        }
+        Some(item)
+    }
+
+    /// The value bytes of an item.
+    ///
+    /// # Safety
+    /// `ptr` must be a live item protected by an EBR guard.
+    pub unsafe fn data<'a>(ptr: *const Item) -> &'a [u8] {
+        let vlen = (*ptr).vlen as usize;
+        std::slice::from_raw_parts((ptr as *const u8).add(ITEM_HEADER), vlen)
+    }
+
+    /// Total slab bytes the item occupies.
+    pub fn footprint(ptr: *const Item) -> usize {
+        unsafe { ITEM_HEADER + (*ptr).vlen as usize }
+    }
+
+    /// Retire an item: after a grace period the chunk returns to `slab`.
+    /// The `Arc` travels through the context word so the slab (and its
+    /// pages) outlive every retired chunk no matter the drop order.
+    pub fn retire(guard: &Guard, slab: &Arc<Slab>, ptr: *mut Item) {
+        unsafe fn reclaim(p: *mut u8, ctx: usize) {
+            let slab = Arc::from_raw(ctx as *const Slab);
+            let class = (*(p as *mut Item)).class;
+            slab.free(p, class);
+            // `slab` Arc dropped here; last one frees the pages.
+        }
+        let ctx = Arc::into_raw(Arc::clone(slab)) as usize;
+        let bytes = Item::footprint(ptr);
+        unsafe { guard.defer(ptr as *mut u8, ctx, bytes, reclaim) };
+    }
+}
+
+/// Pack a live item pointer into an `item` word.
+#[inline]
+pub fn live_word(item: *mut Item) -> usize {
+    debug_assert_eq!(item as usize & 0b11, 0);
+    item as usize | STATE_LIVE
+}
+
+/// Decode an `item` word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ItemState {
+    Live(*mut Item),
+    Tomb,
+    Moved,
+}
+
+#[inline]
+pub fn decode_item(word: usize) -> ItemState {
+    match tag_of(word) & 0b11 {
+        STATE_LIVE => ItemState::Live(untagged(word) as *mut Item),
+        STATE_TOMB => ItemState::Tomb,
+        _ => ItemState::Moved,
+    }
+}
+
+/// One Harris-list node. Nodes own their key; items are slab chunks hung
+/// off the `item` word.
+pub struct Node {
+    pub hash: u64,
+    /// Successor pointer | [`DEL`] | [`FRZ`].
+    pub next: AtomicUsize,
+    /// Packed item word (see [`decode_item`]).
+    pub item: AtomicUsize,
+    pub key: Box<[u8]>,
+}
+
+impl Node {
+    /// Heap-allocate a node holding `item` (already slab-allocated).
+    pub fn alloc(hash: u64, key: &[u8], item: *mut Item) -> *mut Node {
+        Box::into_raw(Box::new(Node {
+            hash,
+            next: AtomicUsize::new(0),
+            item: AtomicUsize::new(live_word(item)),
+            key: key.to_vec().into_boxed_slice(),
+        }))
+    }
+
+    /// Ordering key within a bucket: (hash, key bytes).
+    #[inline]
+    pub fn order(&self) -> (u64, &[u8]) {
+        (self.hash, &self.key)
+    }
+
+    /// Whether this node matches (hash, key).
+    #[inline]
+    pub fn matches(&self, hash: u64, key: &[u8]) -> bool {
+        self.hash == hash && *self.key == *key
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+    use crate::ebr::Collector;
+    use crate::slab::SlabConfig;
+
+    #[test]
+    fn item_roundtrips_value_and_metadata() {
+        let slab = Slab::new(SlabConfig::small(1 << 20));
+        let item = Item::alloc(&slab, b"hello world", 42, 7, 99).unwrap();
+        unsafe {
+            assert_eq!(Item::data(item), b"hello world");
+            assert_eq!((*item).flags, 42);
+            assert_eq!((*item).deadline, 7);
+            assert_eq!((*item).cas, 99);
+            assert_eq!(Item::footprint(item), ITEM_HEADER + 11);
+            slab.free(item as *mut u8, (*item).class);
+        }
+    }
+
+    #[test]
+    fn item_word_encoding() {
+        let fake = 0x7000_0000_1000usize as *mut Item;
+        assert_eq!(decode_item(live_word(fake)), ItemState::Live(fake));
+        assert_eq!(decode_item(TOMB_WORD), ItemState::Tomb);
+        assert_eq!(decode_item(MOVED_WORD), ItemState::Moved);
+    }
+
+    #[test]
+    fn retire_keeps_slab_alive_until_reclaim() {
+        let collector = Arc::new(Collector::default());
+        let slab = Arc::new(Slab::new(SlabConfig::small(1 << 20)));
+        let item = Item::alloc(&slab, b"x", 0, 0, 1).unwrap();
+        {
+            let g = collector.pin();
+            Item::retire(&g, &slab, item);
+        }
+        // Drop our slab handle before reclamation: the ctx Arc must keep
+        // the pages alive until the deferred free runs.
+        let weak = Arc::downgrade(&slab);
+        drop(slab);
+        assert!(weak.upgrade().is_some(), "retired item must hold the slab");
+        collector.force_reclaim(3);
+        assert!(weak.upgrade().is_none(), "slab released after reclaim");
+    }
+
+    #[test]
+    fn node_ordering_and_matching() {
+        let slab = Slab::new(SlabConfig::small(1 << 20));
+        let item = Item::alloc(&slab, b"v", 0, 0, 1).unwrap();
+        let n = Node::alloc(7, b"abc", item);
+        unsafe {
+            assert!((*n).matches(7, b"abc"));
+            assert!(!(*n).matches(7, b"abd"));
+            assert!(!(*n).matches(8, b"abc"));
+            assert_eq!((*n).order(), (7, b"abc" as &[u8]));
+            let boxed = Box::from_raw(n);
+            if let ItemState::Live(p) = decode_item(boxed.item.load(Ordering::Relaxed)) {
+                slab.free(p as *mut u8, (*p).class);
+            }
+        }
+    }
+}

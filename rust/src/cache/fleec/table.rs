@@ -1,0 +1,572 @@
+//! FLeeC's hash table: lock-free buckets with an embedded CLOCK array and
+//! non-blocking expansion.
+//!
+//! ## Bucket lists
+//! Each bucket head is one atomic word pointing at a Harris list ordered
+//! by `(hash, key)`. Deletion is logical-then-physical via the `DEL` mark;
+//! traversals unlink marked nodes opportunistically.
+//!
+//! ## Embedded CLOCK (the paper's eviction design)
+//! A parallel `AtomicU8` array holds one multi-bit CLOCK value per bucket
+//! — the paper's *medium-grained* compromise: per-item CLOCK would make
+//! the eviction sweep chase list pointers through cold memory, while
+//! per-bucket values keep the sweep inside a contiguous array (cache
+//! friendly), and the 1.5 load factor bounds each value to ≈1.5 items.
+//! Hits store `clock_max`; the sweep decrements and evicts buckets that
+//! reach zero. Everything is plain atomics — any number of threads may
+//! sweep concurrently.
+//!
+//! ## Non-blocking expansion
+//! When the cache installs a successor table (2× buckets), old buckets
+//! migrate one at a time, cooperatively:
+//!
+//! 1. **Freeze** the bucket head (`BUCKET_FROZEN` tag) — head insertions
+//!    now fail their CAS and help.
+//! 2. **Freeze the links**: set the `FRZ` bit on every node's `next` so
+//!    mid-list insertions/unlinks fail too (Braginsky & Petrank-style
+//!    freezing). The list is now immutable *structurally*; item words
+//!    stay mutable.
+//! 3. **Transfer items**: `swap` each node's item word to `MOVED`; the
+//!    winner of each swap re-inserts the live item into the successor
+//!    table. Writers that lose the race observe `MOVED` and retry in the
+//!    new table, so no update is ever lost.
+//! 4. **Forward**: CAS the head to `BUCKET_FORWARD`; the winner retires
+//!    the frozen node chain through EBR.
+//!
+//! Readers never block: a frozen bucket is still searchable, a forwarded
+//! bucket redirects to the successor. A `get` racing step 3 may miss an
+//! item mid-flight — acceptable for a cache (documented in DESIGN.md §4).
+
+use std::sync::atomic::{AtomicPtr, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::ebr::Guard;
+use crate::slab::Slab;
+use crate::sync::tagged::{tag_of, untagged};
+
+use super::node::{decode_item, Item, ItemState, Node, DEL, FRZ, MOVED_WORD};
+
+/// Bucket-head tag: bucket is being migrated (head immutable).
+pub const BUCKET_FROZEN: usize = 0b01;
+/// Bucket-head tag: bucket fully migrated; look in `next` table.
+pub const BUCKET_FORWARD: usize = 0b10;
+/// The packed forward word.
+pub const FORWARD_WORD: usize = BUCKET_FORWARD;
+
+/// One table generation: bucket heads + CLOCK values + successor link.
+pub struct Table {
+    pub mask: usize,
+    pub buckets: Box<[AtomicUsize]>,
+    /// The embedded eviction state: one multi-bit CLOCK value per bucket.
+    pub clocks: Box<[AtomicU8]>,
+    /// Eviction hand (bucket index, wraps with the mask).
+    pub hand: AtomicUsize,
+    /// Successor table during expansion (null otherwise).
+    pub next: AtomicPtr<Table>,
+    /// Buckets already forwarded; expansion completes at `len()`.
+    pub migrated: AtomicUsize,
+}
+
+impl Table {
+    /// Allocate a table with `size` buckets (power of two).
+    pub fn alloc(size: usize) -> *mut Table {
+        assert!(size.is_power_of_two());
+        let buckets = (0..size)
+            .map(|_| AtomicUsize::new(0))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        let clocks = (0..size)
+            .map(|_| AtomicU8::new(0))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Box::into_raw(Box::new(Table {
+            mask: size - 1,
+            buckets,
+            clocks,
+            hand: AtomicUsize::new(0),
+            next: AtomicPtr::new(std::ptr::null_mut()),
+            migrated: AtomicUsize::new(0),
+        }))
+    }
+
+    /// Bucket count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Bucket index for a hash.
+    #[inline]
+    pub fn index(&self, hash: u64) -> usize {
+        (hash as usize) & self.mask
+    }
+
+    /// Whether every bucket has been forwarded.
+    pub fn fully_migrated(&self) -> bool {
+        self.migrated.load(Ordering::Acquire) == self.len()
+    }
+}
+
+/// Where a bucket traversal ended up.
+pub enum Find {
+    /// Node with this exact key (pointer valid under the guard).
+    Found(*mut Node),
+    /// Key absent; `pred` is the link to CAS for an ordered insert and
+    /// `succ_word` the exact word it held (tag 0).
+    Absent {
+        pred: *const AtomicUsize,
+        succ_word: usize,
+    },
+    /// Bucket is frozen (mutations must help + retry in the successor).
+    Frozen,
+    /// Bucket fully forwarded to the successor table.
+    Forwarded,
+}
+
+/// Search `table[idx]` for `(hash, key)`.
+///
+/// Unlinks marked nodes along the way (only while the bucket is unfrozen).
+/// `for_write` controls whether a frozen bucket is an error ([`Find::Frozen`])
+/// or still searchable (reads).
+pub fn search(
+    table: &Table,
+    hash: u64,
+    key: &[u8],
+    for_write: bool,
+    guard: &Guard,
+) -> Find {
+    let bucket = &table.buckets[table.index(hash)];
+    'retry: loop {
+        let head = bucket.load(Ordering::Acquire);
+        match tag_of(head) {
+            BUCKET_FORWARD => return Find::Forwarded,
+            BUCKET_FROZEN if for_write => return Find::Frozen,
+            _ => {}
+        }
+        let frozen = tag_of(head) == BUCKET_FROZEN;
+        let mut pred: *const AtomicUsize = bucket;
+        let mut pred_is_frozen = frozen;
+        let mut curr_word = if frozen { untagged(head) } else { head };
+        loop {
+            let curr = untagged(curr_word) as *mut Node;
+            if curr.is_null() {
+                if frozen || pred_is_frozen {
+                    // Exhausted a (partially) frozen list without finding
+                    // the key: writers must help; readers follow — the
+                    // item may already live in the successor.
+                    return if for_write { Find::Frozen } else { Find::Forwarded };
+                }
+                return Find::Absent {
+                    pred,
+                    succ_word: curr_word,
+                };
+            }
+            let node = unsafe { &*curr };
+            let next = node.next.load(Ordering::Acquire);
+            if next & DEL != 0 {
+                // Logically deleted. Unlink if the structure is mutable.
+                if next & FRZ == 0 && !pred_is_frozen && !frozen {
+                    let clean = untagged(next);
+                    match unsafe {
+                        (*pred).compare_exchange(curr_word, clean, Ordering::AcqRel, Ordering::Acquire)
+                    } {
+                        Ok(_) => {
+                            // Unlinked: retire the node (its item was
+                            // already retired by whoever tombstoned it).
+                            unsafe { guard.defer_drop_box(curr) };
+                            curr_word = clean;
+                            continue;
+                        }
+                        Err(_) => continue 'retry,
+                    }
+                }
+                // Frozen or racing: just step over it.
+                pred = &node.next;
+                pred_is_frozen = true;
+                curr_word = untagged(next);
+                continue;
+            }
+            match node.order() {
+                o if o < (hash, key) => {
+                    pred = &node.next;
+                    pred_is_frozen = next & FRZ != 0;
+                    // DEL is clear here, so this is the exact stored word
+                    // when unfrozen (what an insert CAS must expect) and a
+                    // clean pointer when frozen (read-only traversal).
+                    curr_word = untagged(next);
+                    continue;
+                }
+                o if o == (hash, key) => return Find::Found(curr),
+                _ => {
+                    if frozen || pred_is_frozen {
+                        if for_write {
+                            return Find::Frozen;
+                        }
+                        // Read miss in a frozen prefix: the key may have
+                        // been migrated already.
+                        return Find::Forwarded;
+                    }
+                    return Find::Absent {
+                        pred,
+                        succ_word: curr_word,
+                    };
+                }
+            }
+        }
+    }
+}
+
+/// Migrate one bucket of `table` into `next_table` (idempotent, any number
+/// of helpers). Returns once the bucket is forwarded.
+pub fn migrate_bucket(
+    table: &Table,
+    idx: usize,
+    next_table: &Table,
+    slab: &Arc<Slab>,
+    items_delta: &AtomicUsize,
+    guard: &Guard,
+) {
+    let bucket = &table.buckets[idx];
+    // Phase 1: freeze the head.
+    let head = loop {
+        let w = bucket.load(Ordering::Acquire);
+        match tag_of(w) {
+            BUCKET_FORWARD => return,
+            BUCKET_FROZEN => break untagged(w),
+            _ => {
+                if bucket
+                    .compare_exchange(w, untagged(w) | BUCKET_FROZEN, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    break untagged(w);
+                }
+            }
+        }
+    };
+
+    // Phase 2: freeze every link so the structure is immutable.
+    let mut cur = head as *mut Node;
+    while !cur.is_null() {
+        let node = unsafe { &*cur };
+        let mut w = node.next.load(Ordering::Acquire);
+        while w & FRZ == 0 {
+            match node
+                .next
+                .compare_exchange_weak(w, w | FRZ, Ordering::AcqRel, Ordering::Acquire)
+            {
+                Ok(_) => {
+                    w |= FRZ;
+                }
+                Err(cur_w) => w = cur_w,
+            }
+        }
+        cur = untagged(w) as *mut Node;
+    }
+
+    // Phase 3: transfer live items.
+    let mut cur = head as *mut Node;
+    while !cur.is_null() {
+        let node = unsafe { &*cur };
+        let next = node.next.load(Ordering::Acquire);
+        if next & DEL == 0 {
+            let prev = node.item.swap(MOVED_WORD, Ordering::AcqRel);
+            if let ItemState::Live(item) = decode_item(prev) {
+                insert_migrated(next_table, node.hash, &node.key, item, slab, items_delta, guard);
+            }
+        } else {
+            // Deleted node: make sure the word is MOVED so late writers
+            // bounce to the successor rather than resurrecting it.
+            node.item.swap(MOVED_WORD, Ordering::AcqRel);
+        }
+        cur = untagged(next) as *mut Node;
+    }
+
+    // Phase 4: forward the bucket; the winner retires the chain.
+    if bucket
+        .compare_exchange(
+            head | BUCKET_FROZEN,
+            FORWARD_WORD,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        )
+        .is_ok()
+    {
+        table.migrated.fetch_add(1, Ordering::AcqRel);
+        let mut cur = head as *mut Node;
+        while !cur.is_null() {
+            let node = unsafe { &*cur };
+            let next = untagged(node.next.load(Ordering::Acquire)) as *mut Node;
+            unsafe { guard.defer_drop_box(cur) };
+            cur = next;
+        }
+    }
+}
+
+/// Insert an already-allocated item into `table` during migration. If the
+/// key already exists (a writer beat the migration), the *newer* value
+/// wins and the migrated item is retired instead.
+fn insert_migrated(
+    table: &Table,
+    hash: u64,
+    key: &[u8],
+    item: *mut Item,
+    slab: &Arc<Slab>,
+    items_delta: &AtomicUsize,
+    guard: &Guard,
+) {
+    let mut node: *mut Node = std::ptr::null_mut();
+    loop {
+        match search(table, hash, key, true, guard) {
+            Find::Found(_) => {
+                // A racing writer already stored a newer value there.
+                Item::retire(guard, slab, item);
+                items_delta.fetch_sub(1, Ordering::Relaxed);
+                break;
+            }
+            Find::Absent { pred, succ_word } => {
+                if node.is_null() {
+                    node = Node::alloc(hash, key, item);
+                }
+                unsafe { (*node).next.store(succ_word, Ordering::Relaxed) };
+                if unsafe {
+                    (*pred).compare_exchange(succ_word, node as usize, Ordering::AcqRel, Ordering::Acquire)
+                }
+                .is_ok()
+                {
+                    break;
+                }
+            }
+            Find::Frozen | Find::Forwarded => {
+                // The *successor* is itself expanding; follow its chain.
+                let next = table.next.load(Ordering::Acquire);
+                assert!(!next.is_null(), "frozen bucket without successor");
+                // Free the node shell if we allocated one for this table.
+                if !node.is_null() {
+                    unsafe { drop(Box::from_raw(node)) };
+                }
+                insert_migrated(
+                    unsafe { &*next },
+                    hash,
+                    key,
+                    item,
+                    slab,
+                    items_delta,
+                    guard,
+                );
+                break;
+            }
+        }
+    }
+    // Mildly warm: a migrated bucket starts with CLOCK = 1, matching the
+    // "not recently used but present" state.
+    let idx = table.index(hash);
+    let _ = table.clocks[idx].compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed);
+}
+
+impl Drop for Table {
+    fn drop(&mut self) {
+        // Exclusive: free any remaining chains. Items inside nodes are
+        // slab chunks — freed when the slab drops its pages, or already
+        // retired; nodes are ours.
+        for bucket in self.buckets.iter() {
+            let mut cur = untagged(bucket.load(Ordering::Relaxed)) as *mut Node;
+            if tag_of(bucket.load(Ordering::Relaxed)) == BUCKET_FORWARD {
+                continue;
+            }
+            while !cur.is_null() {
+                let node = unsafe { Box::from_raw(cur) };
+                cur = untagged(node.next.load(Ordering::Relaxed)) as *mut Node;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::hash_key;
+    use crate::ebr::Collector;
+    use crate::slab::SlabConfig;
+
+    fn setup() -> (Arc<Collector>, Arc<Slab>, *mut Table) {
+        (
+            Arc::new(Collector::default()),
+            Arc::new(Slab::new(SlabConfig::small(1 << 20))),
+            Table::alloc(8),
+        )
+    }
+
+    fn insert_fresh(
+        table: &Table,
+        slab: &Arc<Slab>,
+        key: &[u8],
+        val: &[u8],
+        guard: &Guard,
+    ) -> bool {
+        let hash = hash_key(key);
+        loop {
+            match search(table, hash, key, true, guard) {
+                Find::Found(_) => return false,
+                Find::Absent { pred, succ_word } => {
+                    let item = Item::alloc(slab, val, 0, 0, 1).unwrap();
+                    let node = Node::alloc(hash, key, item);
+                    unsafe { (*node).next.store(succ_word, Ordering::Relaxed) };
+                    if unsafe {
+                        (*pred).compare_exchange(
+                            succ_word,
+                            node as usize,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                    }
+                    .is_ok()
+                    {
+                        return true;
+                    }
+                    unsafe {
+                        let b = Box::from_raw(node);
+                        if let ItemState::Live(p) = decode_item(b.item.load(Ordering::Relaxed)) {
+                            slab.free(p as *mut u8, (*p).class);
+                        }
+                    }
+                }
+                _ => panic!("unexpected frozen/forwarded in fresh table"),
+            }
+        }
+    }
+
+    fn lookup(table: &Table, key: &[u8], guard: &Guard) -> Option<Vec<u8>> {
+        let hash = hash_key(key);
+        match search(table, hash, key, false, guard) {
+            Find::Found(n) => {
+                let w = unsafe { (*n).item.load(Ordering::Acquire) };
+                match decode_item(w) {
+                    ItemState::Live(item) => Some(unsafe { Item::data(item) }.to_vec()),
+                    _ => None,
+                }
+            }
+            _ => None,
+        }
+    }
+
+    #[test]
+    fn insert_and_lookup_across_buckets() {
+        let (collector, slab, table) = setup();
+        let table_ref = unsafe { &*table };
+        let g = collector.pin();
+        for i in 0..64u32 {
+            let key = format!("key-{i}");
+            assert!(insert_fresh(table_ref, &slab, key.as_bytes(), &i.to_le_bytes(), &g));
+        }
+        for i in 0..64u32 {
+            let key = format!("key-{i}");
+            assert_eq!(
+                lookup(table_ref, key.as_bytes(), &g),
+                Some(i.to_le_bytes().to_vec())
+            );
+        }
+        assert_eq!(lookup(table_ref, b"missing", &g), None);
+        drop(g);
+        unsafe { drop(Box::from_raw(table)) };
+    }
+
+    #[test]
+    fn duplicate_insert_is_rejected() {
+        let (collector, slab, table) = setup();
+        let table_ref = unsafe { &*table };
+        let g = collector.pin();
+        assert!(insert_fresh(table_ref, &slab, b"dup", b"1", &g));
+        assert!(!insert_fresh(table_ref, &slab, b"dup", b"2", &g));
+        drop(g);
+        unsafe { drop(Box::from_raw(table)) };
+    }
+
+    #[test]
+    fn migration_transfers_live_items() {
+        let (collector, slab, table) = setup();
+        let table_ref = unsafe { &*table };
+        let next = Table::alloc(16);
+        let next_ref = unsafe { &*next };
+        let items = AtomicUsize::new(0);
+        {
+            let g = collector.pin();
+            for i in 0..32u32 {
+                let key = format!("mig-{i}");
+                insert_fresh(table_ref, &slab, key.as_bytes(), &i.to_le_bytes(), &g);
+            }
+            table_ref.next.store(next, Ordering::Release);
+            for idx in 0..table_ref.len() {
+                migrate_bucket(table_ref, idx, next_ref, &slab, &items, &g);
+            }
+            assert!(table_ref.fully_migrated());
+            for i in 0..32u32 {
+                let key = format!("mig-{i}");
+                assert_eq!(
+                    lookup(next_ref, key.as_bytes(), &g),
+                    Some(i.to_le_bytes().to_vec()),
+                    "item lost in migration"
+                );
+            }
+            // Old buckets all forward.
+            for b in table_ref.buckets.iter() {
+                assert_eq!(tag_of(b.load(Ordering::Relaxed)), BUCKET_FORWARD);
+            }
+        }
+        collector.force_reclaim(4);
+        unsafe {
+            drop(Box::from_raw(table));
+            drop(Box::from_raw(next));
+        }
+    }
+
+    #[test]
+    fn migration_is_idempotent_with_concurrent_helpers() {
+        let (collector, slab, table) = setup();
+        let table_ref = unsafe { &*table };
+        let next = Table::alloc(16);
+        let items = AtomicUsize::new(0);
+        {
+            let g = collector.pin();
+            for i in 0..64u32 {
+                let key = format!("cm-{i}");
+                insert_fresh(table_ref, &slab, key.as_bytes(), &i.to_le_bytes(), &g);
+            }
+        }
+        table_ref.next.store(next, Ordering::Release);
+        // 4 helper threads race over every bucket.
+        let table_addr = table as usize;
+        let next_addr = next as usize;
+        let items_ref: &'static AtomicUsize = unsafe { std::mem::transmute(&items) };
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let collector = Arc::clone(&collector);
+                let slab = Arc::clone(&slab);
+                s.spawn(move || {
+                    let g = collector.pin();
+                    let t = unsafe { &*(table_addr as *const Table) };
+                    let n = unsafe { &*(next_addr as *const Table) };
+                    for idx in 0..t.len() {
+                        migrate_bucket(t, idx, n, &slab, items_ref, &g);
+                    }
+                });
+            }
+        });
+        assert!(table_ref.fully_migrated());
+        {
+            let g = collector.pin();
+            let next_ref = unsafe { &*next };
+            for i in 0..64u32 {
+                let key = format!("cm-{i}");
+                assert_eq!(
+                    lookup(next_ref, key.as_bytes(), &g),
+                    Some(i.to_le_bytes().to_vec())
+                );
+            }
+        }
+        collector.force_reclaim(4);
+        unsafe {
+            drop(Box::from_raw(table));
+            drop(Box::from_raw(next));
+        }
+    }
+}

@@ -1,0 +1,702 @@
+//! Baseline engine modeling **Memcached's blocking design** — the system
+//! the paper compares against.
+//!
+//! Synchronization structure (the property under test):
+//!
+//! * the hash table is guarded by **striped mutexes** (Memcached's item
+//!   locks; stripe chosen by key hash),
+//! * strict LRU lives in **one intrusive doubly-linked list under a single
+//!   mutex** (Memcached's `cache_lock`): *every hit takes the global LRU
+//!   lock* to move the item to the front — the serialization point that
+//!   collapses under skewed/high-contention load,
+//! * expansion is **stop-the-world**: all stripes are held while the
+//!   bucket array is rebuilt.
+//!
+//! Unlike FLeeC there is no epoch machinery: everything is mutated in
+//! place under locks. Value memory is accounted per entry (key + value +
+//! fixed overhead) against `mem_limit`, and eviction pops the LRU tail
+//! with `try_lock` on the victim's stripe (Memcached's discipline, which
+//! also avoids lock-order inversion).
+//!
+//! Lock ordering: stripe → LRU. The evictor holds LRU and only
+//! `try_lock`s stripes, so the orders never deadlock.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::cache::{
+    deadline_from_exptime, hash_key, is_expired, Cache, CacheConfig, GetResult, StoreOutcome,
+    MAX_KEY_LEN,
+};
+use crate::metrics::EngineMetrics;
+
+/// Fixed per-entry overhead charged against the memory budget (headers,
+/// pointers; mirrors the slab chunk slack the lock-free engine pays).
+const ENTRY_OVERHEAD: usize = 64;
+
+/// One cache entry. LRU links are only touched under the LRU lock; all
+/// other fields only under the entry's stripe lock.
+struct MEntry {
+    hash: u64,
+    key: Box<[u8]>,
+    value: Vec<u8>,
+    flags: u32,
+    deadline: u32,
+    cas: u64,
+    prev: *mut MEntry,
+    next: *mut MEntry,
+}
+
+impl MEntry {
+    fn footprint(&self) -> usize {
+        self.key.len() + self.value.len() + ENTRY_OVERHEAD
+    }
+}
+
+/// Strict-LRU intrusive list; `head` = most recently used.
+#[derive(Default)]
+struct Lru {
+    head: *mut MEntry,
+    tail: *mut MEntry,
+}
+
+unsafe impl Send for Lru {}
+
+impl Lru {
+    unsafe fn push_front(&mut self, e: *mut MEntry) {
+        (*e).prev = std::ptr::null_mut();
+        (*e).next = self.head;
+        if !self.head.is_null() {
+            (*self.head).prev = e;
+        }
+        self.head = e;
+        if self.tail.is_null() {
+            self.tail = e;
+        }
+    }
+
+    unsafe fn unlink(&mut self, e: *mut MEntry) {
+        let (p, n) = ((*e).prev, (*e).next);
+        if p.is_null() {
+            self.head = n;
+        } else {
+            (*p).next = n;
+        }
+        if n.is_null() {
+            self.tail = p;
+        } else {
+            (*n).prev = p;
+        }
+        (*e).prev = std::ptr::null_mut();
+        (*e).next = std::ptr::null_mut();
+    }
+
+    unsafe fn move_to_front(&mut self, e: *mut MEntry) {
+        if self.head == e {
+            return;
+        }
+        self.unlink(e);
+        self.push_front(e);
+    }
+}
+
+/// Bucket array; replaced wholesale by stop-the-world expansion.
+struct TableState {
+    buckets: Vec<Vec<*mut MEntry>>,
+    mask: usize,
+}
+
+/// The blocking baseline engine.
+pub struct MemcachedCache {
+    stripes: Box<[Mutex<()>]>,
+    state: UnsafeCell<TableState>,
+    lru: Mutex<Lru>,
+    items: AtomicUsize,
+    bytes: AtomicUsize,
+    cas_counter: AtomicU64,
+    metrics: EngineMetrics,
+    config: CacheConfig,
+}
+
+unsafe impl Send for MemcachedCache {}
+unsafe impl Sync for MemcachedCache {}
+
+impl MemcachedCache {
+    pub fn new(config: CacheConfig) -> Self {
+        let buckets = config.initial_buckets.next_power_of_two();
+        let stripes = (0..config.lock_stripes.next_power_of_two())
+            .map(|_| Mutex::new(()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        MemcachedCache {
+            stripes,
+            state: UnsafeCell::new(TableState {
+                buckets: (0..buckets).map(|_| Vec::new()).collect(),
+                mask: buckets - 1,
+            }),
+            lru: Mutex::new(Lru::default()),
+            items: AtomicUsize::new(0),
+            bytes: AtomicUsize::new(0),
+            cas_counter: AtomicU64::new(0),
+            metrics: EngineMetrics::default(),
+            config,
+        }
+    }
+
+    #[inline]
+    fn stripe(&self, hash: u64) -> &Mutex<()> {
+        &self.stripes[(hash as usize) & (self.stripes.len() - 1)]
+    }
+
+    /// Access the table state. Caller must hold at least one stripe (reads
+    /// of the array structure) — expansion holds *all* stripes to mutate.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn state(&self) -> &mut TableState {
+        &mut *self.state.get()
+    }
+
+    /// Find an entry in its bucket. Caller holds the stripe.
+    unsafe fn find(&self, hash: u64, key: &[u8]) -> Option<(usize, usize, *mut MEntry)> {
+        let st = self.state();
+        let idx = (hash as usize) & st.mask;
+        for (pos, &e) in st.buckets[idx].iter().enumerate() {
+            if (*e).hash == hash && *(*e).key == *key {
+                return Some((idx, pos, e));
+            }
+        }
+        None
+    }
+
+    /// Remove `e` from its bucket and the LRU and free it.
+    /// Caller holds the stripe; takes the LRU lock itself.
+    unsafe fn remove_entry(&self, idx: usize, pos: usize, e: *mut MEntry) {
+        let st = self.state();
+        st.buckets[idx].swap_remove(pos);
+        {
+            let mut lru = self.lru.lock().unwrap();
+            lru.unlink(e);
+        }
+        self.bytes.fetch_sub((*e).footprint(), Ordering::Relaxed);
+        self.items.fetch_sub(1, Ordering::Relaxed);
+        drop(Box::from_raw(e));
+    }
+
+    /// Evict from the LRU tail until `bytes ≤ mem_limit`. Holds the LRU
+    /// lock and `try_lock`s victim stripes (skipping contended ones).
+    fn evict_to_limit(&self) {
+        while self.bytes.load(Ordering::Relaxed) > self.config.mem_limit {
+            let mut lru = self.lru.lock().unwrap();
+            let mut victim = lru.tail;
+            let mut evicted = false;
+            // Walk tail-ward candidates (bounded) looking for one whose
+            // stripe we can grab without blocking.
+            for _ in 0..8 {
+                if victim.is_null() {
+                    break;
+                }
+                let hash = unsafe { (*victim).hash };
+                if let Ok(_s) = self.stripe(hash).try_lock() {
+                    unsafe {
+                        let key = (*victim).key.clone();
+                        if let Some((idx, pos, e)) = self.find(hash, &key) {
+                            debug_assert_eq!(e, victim);
+                            let st = self.state();
+                            st.buckets[idx].swap_remove(pos);
+                            lru.unlink(e);
+                            self.bytes.fetch_sub((*e).footprint(), Ordering::Relaxed);
+                            self.items.fetch_sub(1, Ordering::Relaxed);
+                            self.metrics.evictions.inc();
+                            drop(Box::from_raw(e));
+                            evicted = true;
+                        }
+                    }
+                    break;
+                }
+                victim = unsafe { (*victim).prev };
+            }
+            drop(lru);
+            if !evicted {
+                // Everything contended: yield and retry (blocking behavior
+                // is the point of this baseline).
+                std::thread::yield_now();
+                if self.items.load(Ordering::Relaxed) == 0 {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Stop-the-world expansion: hold every stripe, rebuild the array.
+    fn maybe_expand(&self) {
+        let need = |items: usize, buckets: usize| {
+            (items as f64) > self.config.load_factor * buckets as f64
+        };
+        {
+            // Cheap pre-check under one stripe.
+            let _s0 = self.stripes[0].lock().unwrap();
+            let st = unsafe { self.state() };
+            if !need(self.items.load(Ordering::Relaxed), st.mask + 1) {
+                return;
+            }
+        }
+        // Acquire ALL stripes in index order (the stop-the-world phase).
+        let guards: Vec<MutexGuard<()>> =
+            self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        let st = unsafe { self.state() };
+        if !need(self.items.load(Ordering::Relaxed), st.mask + 1) {
+            return; // someone else expanded while we queued
+        }
+        let new_size = (st.mask + 1) * 2;
+        let mut new_buckets: Vec<Vec<*mut MEntry>> = (0..new_size).map(|_| Vec::new()).collect();
+        for bucket in st.buckets.drain(..) {
+            for e in bucket {
+                let idx = unsafe { (*e).hash as usize } & (new_size - 1);
+                new_buckets[idx].push(e);
+            }
+        }
+        st.buckets = new_buckets;
+        st.mask = new_size - 1;
+        self.metrics.expansions.inc();
+        drop(guards);
+    }
+
+    fn store_inner(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32, mode: Mode) -> StoreOutcome {
+        if key.len() > MAX_KEY_LEN || key.is_empty() {
+            return StoreOutcome::NotStored;
+        }
+        self.metrics.sets.inc();
+        let hash = hash_key(key);
+        let deadline = deadline_from_exptime(exptime);
+        let cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
+        let outcome = {
+            let _s = self.stripe(hash).lock().unwrap();
+            unsafe {
+                match self.find(hash, key) {
+                    Some((idx, pos, e)) => {
+                        if is_expired((*e).deadline) {
+                            self.remove_entry(idx, pos, e);
+                            self.metrics.expired.inc();
+                            match mode {
+                                Mode::Replace | Mode::Cas(_) => StoreOutcome::NotFound,
+                                _ => self.insert_new(hash, key, value, flags, deadline, cas),
+                            }
+                        } else {
+                            match mode {
+                                Mode::Add => StoreOutcome::NotStored,
+                                Mode::Cas(tok) if (*e).cas != tok => StoreOutcome::Exists,
+                                _ => {
+                                    let old = (*e).value.len();
+                                    (*e).value.clear();
+                                    (*e).value.extend_from_slice(value);
+                                    (*e).flags = flags;
+                                    (*e).deadline = deadline;
+                                    (*e).cas = cas;
+                                    if value.len() >= old {
+                                        self.bytes.fetch_add(value.len() - old, Ordering::Relaxed);
+                                    } else {
+                                        self.bytes.fetch_sub(old - value.len(), Ordering::Relaxed);
+                                    }
+                                    let mut lru = self.lru.lock().unwrap();
+                                    lru.move_to_front(e);
+                                    StoreOutcome::Stored
+                                }
+                            }
+                        }
+                    }
+                    None => match mode {
+                        Mode::Replace | Mode::Cas(_) => StoreOutcome::NotFound,
+                        _ => self.insert_new(hash, key, value, flags, deadline, cas),
+                    },
+                }
+            }
+        };
+        if outcome == StoreOutcome::Stored {
+            self.evict_to_limit();
+            self.maybe_expand();
+        }
+        outcome
+    }
+
+    /// Insert a brand-new entry. Caller holds the stripe.
+    unsafe fn insert_new(
+        &self,
+        hash: u64,
+        key: &[u8],
+        value: &[u8],
+        flags: u32,
+        deadline: u32,
+        cas: u64,
+    ) -> StoreOutcome {
+        let e = Box::into_raw(Box::new(MEntry {
+            hash,
+            key: key.to_vec().into_boxed_slice(),
+            value: value.to_vec(),
+            flags,
+            deadline,
+            cas,
+            prev: std::ptr::null_mut(),
+            next: std::ptr::null_mut(),
+        }));
+        let st = self.state();
+        let idx = (hash as usize) & st.mask;
+        st.buckets[idx].push(e);
+        self.bytes.fetch_add((*e).footprint(), Ordering::Relaxed);
+        self.items.fetch_add(1, Ordering::Relaxed);
+        let mut lru = self.lru.lock().unwrap();
+        lru.push_front(e);
+        StoreOutcome::Stored
+    }
+
+    /// In-place read-modify-write under the stripe lock (the blocking
+    /// engines don't need token dances).
+    fn rmw_inner(
+        &self,
+        key: &[u8],
+        f: impl FnOnce(&mut MEntry) -> bool,
+    ) -> Option<()> {
+        let hash = hash_key(key);
+        let _s = self.stripe(hash).lock().unwrap();
+        unsafe {
+            let (idx, pos, e) = self.find(hash, key)?;
+            if is_expired((*e).deadline) {
+                self.remove_entry(idx, pos, e);
+                self.metrics.expired.inc();
+                return None;
+            }
+            let before = (*e).footprint();
+            if !f(&mut *e) {
+                return None;
+            }
+            let after = (*e).footprint();
+            if after >= before {
+                self.bytes.fetch_add(after - before, Ordering::Relaxed);
+            } else {
+                self.bytes.fetch_sub(before - after, Ordering::Relaxed);
+            }
+            (*e).cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
+            let mut lru = self.lru.lock().unwrap();
+            lru.move_to_front(e);
+        }
+        Some(())
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Set,
+    Add,
+    Replace,
+    Cas(u64),
+}
+
+impl Cache for MemcachedCache {
+    fn engine_name(&self) -> &'static str {
+        "memcached"
+    }
+
+    fn get(&self, key: &[u8]) -> Option<GetResult> {
+        self.metrics.gets.inc();
+        let hash = hash_key(key);
+        let result = {
+            let _s = self.stripe(hash).lock().unwrap();
+            unsafe {
+                match self.find(hash, key) {
+                    Some((idx, pos, e)) => {
+                        if is_expired((*e).deadline) {
+                            self.remove_entry(idx, pos, e);
+                            self.metrics.expired.inc();
+                            None
+                        } else {
+                            let r = GetResult {
+                                data: (*e).value.clone(),
+                                flags: (*e).flags,
+                                cas: (*e).cas,
+                            };
+                            // THE bottleneck the paper attacks: every hit
+                            // serializes on the global LRU lock.
+                            let mut lru = self.lru.lock().unwrap();
+                            lru.move_to_front(e);
+                            Some(r)
+                        }
+                    }
+                    None => None,
+                }
+            }
+        };
+        if result.is_some() {
+            self.metrics.hits.inc();
+        } else {
+            self.metrics.misses.inc();
+        }
+        result
+    }
+
+    fn set(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
+        self.store_inner(key, value, flags, exptime, Mode::Set)
+    }
+
+    fn add(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
+        self.store_inner(key, value, flags, exptime, Mode::Add)
+    }
+
+    fn replace(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
+        self.store_inner(key, value, flags, exptime, Mode::Replace)
+    }
+
+    fn cas(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32, cas: u64) -> StoreOutcome {
+        self.store_inner(key, value, flags, exptime, Mode::Cas(cas))
+    }
+
+    fn append(&self, key: &[u8], suffix: &[u8]) -> StoreOutcome {
+        match self.rmw_inner(key, |e| {
+            e.value.extend_from_slice(suffix);
+            true
+        }) {
+            Some(()) => StoreOutcome::Stored,
+            None => StoreOutcome::NotStored,
+        }
+    }
+
+    fn prepend(&self, key: &[u8], prefix: &[u8]) -> StoreOutcome {
+        match self.rmw_inner(key, |e| {
+            let mut v = Vec::with_capacity(prefix.len() + e.value.len());
+            v.extend_from_slice(prefix);
+            v.extend_from_slice(&e.value);
+            e.value = v;
+            true
+        }) {
+            Some(()) => StoreOutcome::Stored,
+            None => StoreOutcome::NotStored,
+        }
+    }
+
+    fn delete(&self, key: &[u8]) -> bool {
+        self.metrics.deletes.inc();
+        let hash = hash_key(key);
+        let _s = self.stripe(hash).lock().unwrap();
+        unsafe {
+            match self.find(hash, key) {
+                Some((idx, pos, e)) => {
+                    self.remove_entry(idx, pos, e);
+                    true
+                }
+                None => false,
+            }
+        }
+    }
+
+    fn incr(&self, key: &[u8], delta: u64) -> Option<u64> {
+        let mut out = None;
+        self.rmw_inner(key, |e| {
+            if let Ok(n) = std::str::from_utf8(&e.value)
+                .unwrap_or("")
+                .trim()
+                .parse::<u64>()
+            {
+                let v = n.wrapping_add(delta);
+                e.value = v.to_string().into_bytes();
+                out = Some(v);
+                true
+            } else {
+                false
+            }
+        })?;
+        out
+    }
+
+    fn decr(&self, key: &[u8], delta: u64) -> Option<u64> {
+        let mut out = None;
+        self.rmw_inner(key, |e| {
+            if let Ok(n) = std::str::from_utf8(&e.value)
+                .unwrap_or("")
+                .trim()
+                .parse::<u64>()
+            {
+                let v = n.saturating_sub(delta);
+                e.value = v.to_string().into_bytes();
+                out = Some(v);
+                true
+            } else {
+                false
+            }
+        })?;
+        out
+    }
+
+    fn touch(&self, key: &[u8], exptime: u32) -> bool {
+        let deadline = deadline_from_exptime(exptime);
+        self.rmw_inner(key, |e| {
+            e.deadline = deadline;
+            true
+        })
+        .is_some()
+    }
+
+    fn flush_all(&self) {
+        let _guards: Vec<MutexGuard<()>> =
+            self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        let mut lru = self.lru.lock().unwrap();
+        let st = unsafe { self.state() };
+        for bucket in st.buckets.iter_mut() {
+            for e in bucket.drain(..) {
+                unsafe {
+                    lru.unlink(e);
+                    drop(Box::from_raw(e));
+                }
+            }
+        }
+        self.items.store(0, Ordering::Relaxed);
+        self.bytes.store(0, Ordering::Relaxed);
+    }
+
+    fn item_count(&self) -> usize {
+        self.items.load(Ordering::Relaxed)
+    }
+
+    fn bucket_count(&self) -> usize {
+        let _s = self.stripes[0].lock().unwrap();
+        unsafe { self.state().mask + 1 }
+    }
+
+    fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+
+    fn mem_used(&self) -> usize {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for MemcachedCache {
+    fn drop(&mut self) {
+        let st = self.state.get_mut();
+        for bucket in st.buckets.iter_mut() {
+            for e in bucket.drain(..) {
+                unsafe { drop(Box::from_raw(e)) };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn small() -> MemcachedCache {
+        MemcachedCache::new(CacheConfig::small())
+    }
+
+    #[test]
+    fn roundtrip_and_semantics() {
+        let c = small();
+        assert_eq!(c.set(b"k", b"v", 9, 0), StoreOutcome::Stored);
+        let r = c.get(b"k").unwrap();
+        assert_eq!((r.data.as_slice(), r.flags), (b"v" as &[u8], 9));
+        assert_eq!(c.add(b"k", b"x", 0, 0), StoreOutcome::NotStored);
+        assert_eq!(c.replace(b"k", b"w", 0, 0), StoreOutcome::Stored);
+        assert_eq!(c.get(b"k").unwrap().data, b"w");
+        assert!(c.delete(b"k"));
+        assert!(c.get(b"k").is_none());
+        assert_eq!(c.replace(b"k", b"z", 0, 0), StoreOutcome::NotFound);
+    }
+
+    #[test]
+    fn cas_incr_append() {
+        let c = small();
+        c.set(b"n", b"5", 0, 0);
+        let tok = c.get(b"n").unwrap().cas;
+        assert_eq!(c.cas(b"n", b"6", 0, 0, tok), StoreOutcome::Stored);
+        assert_eq!(c.cas(b"n", b"7", 0, 0, tok), StoreOutcome::Exists);
+        assert_eq!(c.incr(b"n", 4), Some(10));
+        assert_eq!(c.decr(b"n", 20), Some(0));
+        c.set(b"s", b"b", 0, 0);
+        c.append(b"s", b"c");
+        c.prepend(b"s", b"a");
+        assert_eq!(c.get(b"s").unwrap().data, b"abc");
+    }
+
+    #[test]
+    fn strict_lru_evicts_least_recent() {
+        let c = MemcachedCache::new(CacheConfig {
+            mem_limit: 10 * (ENTRY_OVERHEAD + 6 + 1024),
+            initial_buckets: 64,
+            ..CacheConfig::small()
+        });
+        let v = vec![0u8; 1024];
+        for i in 0..10u32 {
+            c.set(format!("key{i:02}").as_bytes(), &v, 0, 0);
+        }
+        // Touch key00 so it is MRU, then overflow by one.
+        assert!(c.get(b"key00").is_some());
+        c.set(b"key10", &v, 0, 0);
+        // The LRU victim must be key01 (oldest untouched), NOT key00.
+        assert!(c.get(b"key00").is_some(), "recently used key survived");
+        assert!(c.get(b"key01").is_none(), "LRU victim evicted");
+        assert!(c.metrics().snapshot().evictions >= 1);
+    }
+
+    #[test]
+    fn stop_the_world_expansion_preserves_items() {
+        let c = MemcachedCache::new(CacheConfig {
+            initial_buckets: 8,
+            ..CacheConfig::small()
+        });
+        for i in 0..100u32 {
+            c.set(format!("e{i}").as_bytes(), &i.to_le_bytes(), 0, 0);
+        }
+        assert!(c.bucket_count() > 8);
+        for i in 0..100u32 {
+            assert_eq!(
+                c.get(format!("e{i}").as_bytes()).unwrap().data,
+                i.to_le_bytes().to_vec()
+            );
+        }
+    }
+
+    #[test]
+    fn concurrent_storm_consistency() {
+        use crate::workload::{check_value, encode_key, fill_value, KEY_LEN};
+        let c = Arc::new(MemcachedCache::new(CacheConfig {
+            mem_limit: 4 << 20,
+            initial_buckets: 32,
+            ..CacheConfig::small()
+        }));
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    let mut rng = crate::sync::Xoshiro256::seeded(t);
+                    let mut key = [0u8; KEY_LEN];
+                    let mut val = vec![0u8; 128];
+                    for _ in 0..5_000 {
+                        let id = rng.next_below(300);
+                        let k = encode_key(&mut key, id);
+                        if rng.chance(0.7) {
+                            if let Some(r) = c.get(k) {
+                                assert!(check_value(id, &r.data));
+                            }
+                        } else {
+                            let len = 16 + (id as usize % 100);
+                            fill_value(id, &mut val[..len]);
+                            c.set(k, &val[..len], 0, 0);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn flush_all_resets() {
+        let c = small();
+        for i in 0..50u32 {
+            c.set(format!("f{i}").as_bytes(), b"v", 0, 0);
+        }
+        c.flush_all();
+        assert_eq!(c.item_count(), 0);
+        assert_eq!(c.mem_used(), 0);
+        assert!(c.get(b"f0").is_none());
+    }
+}

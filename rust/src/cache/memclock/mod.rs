@@ -1,0 +1,579 @@
+//! MemcLock — the paper's **intermediate system**: Memcached's blocking
+//! striped-lock hash table, but with the strict-LRU list replaced by the
+//! hash-table-embedded CLOCK policy (one multi-bit CLOCK value per
+//! bucket).
+//!
+//! This isolates the *eviction-policy* change from the *concurrency
+//! control* change: hits bump an atomic CLOCK value instead of taking the
+//! global LRU lock, yet every lookup/store still serializes on its stripe
+//! and expansion is still stop-the-world. The paper's evaluation question
+//! — "what does approximating LRU cost in hit-ratio, and what does it buy
+//! in performance?" — is answered by comparing this engine against both
+//! neighbours.
+//!
+//! Stripe selection uses the hash's low bits, which are also the bucket's
+//! low bits, so `stripes ≤ buckets` keeps bucket↔stripe mapping stable
+//! across expansions (the same trick Memcached's item locks rely on).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::cache::{
+    deadline_from_exptime, hash_key, is_expired, Cache, CacheConfig, GetResult, StoreOutcome,
+    MAX_KEY_LEN,
+};
+use crate::metrics::EngineMetrics;
+
+/// Per-entry overhead charged to the budget (same constant as the
+/// baseline so memory comparisons are apples-to-apples).
+const ENTRY_OVERHEAD: usize = 64;
+
+struct CEntry {
+    hash: u64,
+    key: Box<[u8]>,
+    value: Vec<u8>,
+    flags: u32,
+    deadline: u32,
+    cas: u64,
+}
+
+impl CEntry {
+    fn footprint(&self) -> usize {
+        self.key.len() + self.value.len() + ENTRY_OVERHEAD
+    }
+}
+
+struct TableState {
+    buckets: Vec<Vec<Box<CEntry>>>,
+    /// One CLOCK value per bucket (the embedded eviction state).
+    clocks: Vec<AtomicU8>,
+    mask: usize,
+}
+
+/// The blocking-table + CLOCK-eviction engine.
+pub struct MemClockCache {
+    stripes: Box<[Mutex<()>]>,
+    state: UnsafeCell<TableState>,
+    hand: AtomicUsize,
+    items: AtomicUsize,
+    bytes: AtomicUsize,
+    cas_counter: AtomicU64,
+    metrics: EngineMetrics,
+    config: CacheConfig,
+}
+
+unsafe impl Send for MemClockCache {}
+unsafe impl Sync for MemClockCache {}
+
+impl MemClockCache {
+    pub fn new(config: CacheConfig) -> Self {
+        let buckets = config.initial_buckets.next_power_of_two();
+        let nstripes = config.lock_stripes.next_power_of_two().min(buckets);
+        MemClockCache {
+            stripes: (0..nstripes).map(|_| Mutex::new(())).collect::<Vec<_>>().into_boxed_slice(),
+            state: UnsafeCell::new(TableState {
+                buckets: (0..buckets).map(|_| Vec::new()).collect(),
+                clocks: (0..buckets).map(|_| AtomicU8::new(0)).collect(),
+                mask: buckets - 1,
+            }),
+            hand: AtomicUsize::new(0),
+            items: AtomicUsize::new(0),
+            bytes: AtomicUsize::new(0),
+            cas_counter: AtomicU64::new(0),
+            metrics: EngineMetrics::default(),
+            config,
+        }
+    }
+
+    #[inline]
+    fn stripe_of(&self, hash: u64) -> &Mutex<()> {
+        &self.stripes[(hash as usize) & (self.stripes.len() - 1)]
+    }
+
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn state(&self) -> &mut TableState {
+        &mut *self.state.get()
+    }
+
+    /// Find under the caller-held stripe.
+    unsafe fn find(&self, hash: u64, key: &[u8]) -> Option<(usize, usize)> {
+        let st = self.state();
+        let idx = (hash as usize) & st.mask;
+        st.buckets[idx]
+            .iter()
+            .position(|e| e.hash == hash && *e.key == *key)
+            .map(|pos| (idx, pos))
+    }
+
+    /// Bump the bucket CLOCK to max (atomic; no lock beyond the stripe the
+    /// caller already holds — and it would be safe lock-free too).
+    #[inline]
+    unsafe fn touch_clock(&self, idx: usize) {
+        let st = self.state();
+        let max = self.config.clock_max;
+        let c = &st.clocks[idx];
+        if c.load(Ordering::Relaxed) != max {
+            c.store(max, Ordering::Relaxed);
+        }
+    }
+
+    unsafe fn remove_at(&self, idx: usize, pos: usize) -> Box<CEntry> {
+        let st = self.state();
+        let e = st.buckets[idx].swap_remove(pos);
+        self.bytes.fetch_sub(e.footprint(), Ordering::Relaxed);
+        self.items.fetch_sub(1, Ordering::Relaxed);
+        e
+    }
+
+    /// CLOCK sweep until memory is under the limit: decrement warm
+    /// buckets, empty cold ones (taking each bucket's stripe briefly).
+    fn evict_to_limit(&self) {
+        let mut scanned = 0usize;
+        while self.bytes.load(Ordering::Relaxed) > self.config.mem_limit {
+            let raw = self.hand.fetch_add(1, Ordering::Relaxed);
+            let _s = self.stripes[raw & (self.stripes.len() - 1)].lock().unwrap();
+            let st = unsafe { self.state() };
+            let idx = raw & st.mask;
+            scanned += 1;
+            if scanned > 4 * (st.mask + 1) {
+                break; // safety valve
+            }
+            let c = st.clocks[idx].load(Ordering::Relaxed);
+            if c > 0 {
+                st.clocks[idx].store(c - 1, Ordering::Relaxed);
+                continue;
+            }
+            let n = st.buckets[idx].len();
+            for _ in 0..n {
+                unsafe {
+                    let _ = self.remove_at(idx, 0);
+                }
+                self.metrics.evictions.inc();
+            }
+        }
+    }
+
+    fn maybe_expand(&self) {
+        let need = |items: usize, buckets: usize| {
+            (items as f64) > self.config.load_factor * buckets as f64
+        };
+        {
+            let _s0 = self.stripes[0].lock().unwrap();
+            let st = unsafe { self.state() };
+            if !need(self.items.load(Ordering::Relaxed), st.mask + 1) {
+                return;
+            }
+        }
+        let guards: Vec<MutexGuard<()>> =
+            self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        let st = unsafe { self.state() };
+        if !need(self.items.load(Ordering::Relaxed), st.mask + 1) {
+            return;
+        }
+        let new_size = (st.mask + 1) * 2;
+        let mut new_buckets: Vec<Vec<Box<CEntry>>> = (0..new_size).map(|_| Vec::new()).collect();
+        for bucket in st.buckets.drain(..) {
+            for e in bucket {
+                let idx = (e.hash as usize) & (new_size - 1);
+                new_buckets[idx].push(e);
+            }
+        }
+        st.buckets = new_buckets;
+        st.clocks = (0..new_size).map(|_| AtomicU8::new(1)).collect();
+        st.mask = new_size - 1;
+        self.metrics.expansions.inc();
+        drop(guards);
+    }
+
+    fn store_inner(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32, mode: Mode) -> StoreOutcome {
+        if key.len() > MAX_KEY_LEN || key.is_empty() {
+            return StoreOutcome::NotStored;
+        }
+        self.metrics.sets.inc();
+        let hash = hash_key(key);
+        let deadline = deadline_from_exptime(exptime);
+        let cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
+        let outcome = {
+            let _s = self.stripe_of(hash).lock().unwrap();
+            unsafe {
+                match self.find(hash, key) {
+                    Some((idx, pos)) => {
+                        let st = self.state();
+                        if is_expired(st.buckets[idx][pos].deadline) {
+                            let _ = self.remove_at(idx, pos);
+                            self.metrics.expired.inc();
+                            match mode {
+                                Mode::Replace | Mode::Cas(_) => StoreOutcome::NotFound,
+                                _ => self.insert_new(hash, key, value, flags, deadline, cas),
+                            }
+                        } else {
+                            let e = &mut st.buckets[idx][pos];
+                            match mode {
+                                Mode::Add => StoreOutcome::NotStored,
+                                Mode::Cas(tok) if e.cas != tok => StoreOutcome::Exists,
+                                _ => {
+                                    let old = e.value.len();
+                                    e.value.clear();
+                                    e.value.extend_from_slice(value);
+                                    e.flags = flags;
+                                    e.deadline = deadline;
+                                    e.cas = cas;
+                                    if value.len() >= old {
+                                        self.bytes.fetch_add(value.len() - old, Ordering::Relaxed);
+                                    } else {
+                                        self.bytes.fetch_sub(old - value.len(), Ordering::Relaxed);
+                                    }
+                                    self.touch_clock(idx);
+                                    StoreOutcome::Stored
+                                }
+                            }
+                        }
+                    }
+                    None => match mode {
+                        Mode::Replace | Mode::Cas(_) => StoreOutcome::NotFound,
+                        _ => self.insert_new(hash, key, value, flags, deadline, cas),
+                    },
+                }
+            }
+        };
+        if outcome == StoreOutcome::Stored {
+            self.evict_to_limit();
+            self.maybe_expand();
+        }
+        outcome
+    }
+
+    unsafe fn insert_new(
+        &self,
+        hash: u64,
+        key: &[u8],
+        value: &[u8],
+        flags: u32,
+        deadline: u32,
+        cas: u64,
+    ) -> StoreOutcome {
+        let st = self.state();
+        let idx = (hash as usize) & st.mask;
+        let e = Box::new(CEntry {
+            hash,
+            key: key.to_vec().into_boxed_slice(),
+            value: value.to_vec(),
+            flags,
+            deadline,
+            cas,
+        });
+        self.bytes.fetch_add(e.footprint(), Ordering::Relaxed);
+        self.items.fetch_add(1, Ordering::Relaxed);
+        st.buckets[idx].push(e);
+        // Fresh insert: mildly warm (CLOCK 1 when cold), matching FLeeC.
+        let _ = st.clocks[idx].compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed);
+        StoreOutcome::Stored
+    }
+
+    fn rmw_inner(&self, key: &[u8], f: impl FnOnce(&mut CEntry) -> bool) -> Option<()> {
+        let hash = hash_key(key);
+        let _s = self.stripe_of(hash).lock().unwrap();
+        unsafe {
+            let (idx, pos) = self.find(hash, key)?;
+            let st = self.state();
+            if is_expired(st.buckets[idx][pos].deadline) {
+                let _ = self.remove_at(idx, pos);
+                self.metrics.expired.inc();
+                return None;
+            }
+            let e = &mut st.buckets[idx][pos];
+            let before = e.footprint();
+            if !f(e) {
+                return None;
+            }
+            e.cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
+            let after = e.footprint();
+            if after >= before {
+                self.bytes.fetch_add(after - before, Ordering::Relaxed);
+            } else {
+                self.bytes.fetch_sub(before - after, Ordering::Relaxed);
+            }
+            self.touch_clock(idx);
+        }
+        Some(())
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Set,
+    Add,
+    Replace,
+    Cas(u64),
+}
+
+impl Cache for MemClockCache {
+    fn engine_name(&self) -> &'static str {
+        "memclock"
+    }
+
+    fn get(&self, key: &[u8]) -> Option<GetResult> {
+        self.metrics.gets.inc();
+        let hash = hash_key(key);
+        let result = {
+            let _s = self.stripe_of(hash).lock().unwrap();
+            unsafe {
+                match self.find(hash, key) {
+                    Some((idx, pos)) => {
+                        let st = self.state();
+                        if is_expired(st.buckets[idx][pos].deadline) {
+                            let _ = self.remove_at(idx, pos);
+                            self.metrics.expired.inc();
+                            None
+                        } else {
+                            let e = &st.buckets[idx][pos];
+                            let r = GetResult {
+                                data: e.value.clone(),
+                                flags: e.flags,
+                                cas: e.cas,
+                            };
+                            // No LRU lock: recency is one atomic store.
+                            self.touch_clock(idx);
+                            Some(r)
+                        }
+                    }
+                    None => None,
+                }
+            }
+        };
+        if result.is_some() {
+            self.metrics.hits.inc();
+        } else {
+            self.metrics.misses.inc();
+        }
+        result
+    }
+
+    fn set(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
+        self.store_inner(key, value, flags, exptime, Mode::Set)
+    }
+
+    fn add(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
+        self.store_inner(key, value, flags, exptime, Mode::Add)
+    }
+
+    fn replace(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
+        self.store_inner(key, value, flags, exptime, Mode::Replace)
+    }
+
+    fn cas(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32, cas: u64) -> StoreOutcome {
+        self.store_inner(key, value, flags, exptime, Mode::Cas(cas))
+    }
+
+    fn append(&self, key: &[u8], suffix: &[u8]) -> StoreOutcome {
+        match self.rmw_inner(key, |e| {
+            e.value.extend_from_slice(suffix);
+            true
+        }) {
+            Some(()) => StoreOutcome::Stored,
+            None => StoreOutcome::NotStored,
+        }
+    }
+
+    fn prepend(&self, key: &[u8], prefix: &[u8]) -> StoreOutcome {
+        match self.rmw_inner(key, |e| {
+            let mut v = Vec::with_capacity(prefix.len() + e.value.len());
+            v.extend_from_slice(prefix);
+            v.extend_from_slice(&e.value);
+            e.value = v;
+            true
+        }) {
+            Some(()) => StoreOutcome::Stored,
+            None => StoreOutcome::NotStored,
+        }
+    }
+
+    fn delete(&self, key: &[u8]) -> bool {
+        self.metrics.deletes.inc();
+        let hash = hash_key(key);
+        let _s = self.stripe_of(hash).lock().unwrap();
+        unsafe {
+            match self.find(hash, key) {
+                Some((idx, pos)) => {
+                    let _ = self.remove_at(idx, pos);
+                    true
+                }
+                None => false,
+            }
+        }
+    }
+
+    fn incr(&self, key: &[u8], delta: u64) -> Option<u64> {
+        let mut out = None;
+        self.rmw_inner(key, |e| {
+            if let Ok(n) = std::str::from_utf8(&e.value).unwrap_or("").trim().parse::<u64>() {
+                let v = n.wrapping_add(delta);
+                e.value = v.to_string().into_bytes();
+                out = Some(v);
+                true
+            } else {
+                false
+            }
+        })?;
+        out
+    }
+
+    fn decr(&self, key: &[u8], delta: u64) -> Option<u64> {
+        let mut out = None;
+        self.rmw_inner(key, |e| {
+            if let Ok(n) = std::str::from_utf8(&e.value).unwrap_or("").trim().parse::<u64>() {
+                let v = n.saturating_sub(delta);
+                e.value = v.to_string().into_bytes();
+                out = Some(v);
+                true
+            } else {
+                false
+            }
+        })?;
+        out
+    }
+
+    fn touch(&self, key: &[u8], exptime: u32) -> bool {
+        let deadline = deadline_from_exptime(exptime);
+        self.rmw_inner(key, |e| {
+            e.deadline = deadline;
+            true
+        })
+        .is_some()
+    }
+
+    fn flush_all(&self) {
+        let _guards: Vec<MutexGuard<()>> =
+            self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        let st = unsafe { self.state() };
+        for bucket in st.buckets.iter_mut() {
+            bucket.clear();
+        }
+        for c in st.clocks.iter() {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.items.store(0, Ordering::Relaxed);
+        self.bytes.store(0, Ordering::Relaxed);
+    }
+
+    fn item_count(&self) -> usize {
+        self.items.load(Ordering::Relaxed)
+    }
+
+    fn bucket_count(&self) -> usize {
+        let _s = self.stripes[0].lock().unwrap();
+        unsafe { self.state().mask + 1 }
+    }
+
+    fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+
+    fn mem_used(&self) -> usize {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn clock_snapshot(&self) -> Option<Vec<u8>> {
+        let _s = self.stripes[0].lock().unwrap();
+        let st = unsafe { self.state() };
+        Some(st.clocks.iter().map(|c| c.load(Ordering::Relaxed)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn small() -> MemClockCache {
+        MemClockCache::new(CacheConfig::small())
+    }
+
+    #[test]
+    fn roundtrip_and_semantics() {
+        let c = small();
+        assert_eq!(c.set(b"k", b"v", 3, 0), StoreOutcome::Stored);
+        assert_eq!(c.get(b"k").unwrap().data, b"v");
+        assert_eq!(c.add(b"k", b"x", 0, 0), StoreOutcome::NotStored);
+        assert!(c.delete(b"k"));
+        assert_eq!(c.replace(b"k", b"z", 0, 0), StoreOutcome::NotFound);
+        assert_eq!(c.incr(b"k", 1), None);
+    }
+
+    #[test]
+    fn clock_eviction_prefers_cold_buckets() {
+        let c = MemClockCache::new(CacheConfig {
+            mem_limit: 20 * (ENTRY_OVERHEAD + 6 + 512),
+            initial_buckets: 256, // plenty of buckets → per-key CLOCK-ish
+            ..CacheConfig::small()
+        });
+        let v = vec![0u8; 512];
+        for i in 0..20u32 {
+            c.set(format!("key{i:02}").as_bytes(), &v, 0, 0);
+        }
+        // Heat key00 repeatedly.
+        for _ in 0..5 {
+            assert!(c.get(b"key00").is_some());
+        }
+        // Overflow: several cold keys must go before the hot one.
+        for i in 20..30u32 {
+            c.set(format!("key{i:02}").as_bytes(), &v, 0, 0);
+        }
+        assert!(
+            c.get(b"key00").is_some(),
+            "hot key evicted despite max CLOCK"
+        );
+        assert!(c.metrics().snapshot().evictions > 0);
+    }
+
+    #[test]
+    fn expansion_preserves_items_and_reseeds_clocks() {
+        let c = MemClockCache::new(CacheConfig {
+            initial_buckets: 8,
+            ..CacheConfig::small()
+        });
+        for i in 0..100u32 {
+            c.set(format!("e{i}").as_bytes(), &i.to_le_bytes(), 0, 0);
+        }
+        assert!(c.bucket_count() > 8);
+        for i in 0..100u32 {
+            assert!(c.get(format!("e{i}").as_bytes()).is_some());
+        }
+        let clocks = c.clock_snapshot().unwrap();
+        assert_eq!(clocks.len(), c.bucket_count());
+    }
+
+    #[test]
+    fn concurrent_storm_consistency() {
+        use crate::workload::{check_value, encode_key, fill_value, KEY_LEN};
+        let c = Arc::new(MemClockCache::new(CacheConfig {
+            mem_limit: 4 << 20,
+            initial_buckets: 32,
+            ..CacheConfig::small()
+        }));
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    let mut rng = crate::sync::Xoshiro256::seeded(t);
+                    let mut key = [0u8; KEY_LEN];
+                    let mut val = vec![0u8; 128];
+                    for _ in 0..5_000 {
+                        let id = rng.next_below(300);
+                        let k = encode_key(&mut key, id);
+                        if rng.chance(0.7) {
+                            if let Some(r) = c.get(k) {
+                                assert!(check_value(id, &r.data));
+                            }
+                        } else {
+                            let len = 16 + (id as usize % 100);
+                            fill_value(id, &mut val[..len]);
+                            c.set(k, &val[..len], 0, 0);
+                        }
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,238 @@
+//! The engine-neutral cache interface and shared item semantics.
+//!
+//! All three engines — [`memcached`] (blocking baseline), [`memclock`]
+//! (blocking table + CLOCK eviction, the paper's intermediate step) and
+//! [`fleec`] (the paper's lock-free system) — implement [`Cache`], so the
+//! protocol server, the workload driver and every bench are generic over
+//! the engine and the paper's three-way comparison is an `--engine` flag.
+
+pub mod fleec;
+pub mod memcached;
+pub mod memclock;
+
+use std::sync::Arc;
+
+use crate::metrics::EngineMetrics;
+
+/// Hard cap on key length (Memcached's limit).
+pub const MAX_KEY_LEN: usize = 250;
+
+/// Result of a read hit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GetResult {
+    pub data: Vec<u8>,
+    pub flags: u32,
+    pub cas: u64,
+}
+
+/// Outcome of a storage command, mirroring the protocol's replies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreOutcome {
+    /// Stored successfully (`STORED`).
+    Stored,
+    /// Precondition failed — e.g. `add` on an existing key (`NOT_STORED`).
+    NotStored,
+    /// `cas` token mismatch (`EXISTS`).
+    Exists,
+    /// `cas`/`replace`/`append` on a missing key (`NOT_FOUND`).
+    NotFound,
+    /// Item exceeds the largest slab chunk (`SERVER_ERROR`).
+    TooLarge,
+    /// Eviction could not free memory fast enough (`SERVER_ERROR`).
+    OutOfMemory,
+}
+
+/// Parameters every engine is constructed from.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Value-memory budget in bytes (slab `-m`).
+    pub mem_limit: usize,
+    /// Initial hash-table bucket count (rounded up to a power of two).
+    pub initial_buckets: usize,
+    /// Expansion threshold: grow when `items > load_factor × buckets`
+    /// (the paper fixes 1.5).
+    pub load_factor: f64,
+    /// Maximum CLOCK value (the paper: multi-bit, distinguishes mildly
+    /// from highly popular buckets). 1 = classic second-chance CLOCK.
+    pub clock_max: u8,
+    /// Lock stripes for the blocking engines.
+    pub lock_stripes: usize,
+    /// Items evicted per eviction pass before re-trying an allocation.
+    pub evict_batch: u32,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            mem_limit: 64 << 20,
+            initial_buckets: 1024,
+            load_factor: 1.5,
+            clock_max: 3,
+            lock_stripes: 16,
+            evict_batch: 8,
+        }
+    }
+}
+
+impl CacheConfig {
+    /// Small-footprint config used across tests.
+    pub fn small() -> Self {
+        CacheConfig {
+            mem_limit: 4 << 20,
+            initial_buckets: 64,
+            ..Self::default()
+        }
+    }
+}
+
+/// The engine-neutral cache interface (Memcached text-protocol semantics).
+pub trait Cache: Send + Sync {
+    /// Engine identifier used by the CLI / benches.
+    fn engine_name(&self) -> &'static str;
+
+    /// Look up `key`; bumps recency on hit.
+    fn get(&self, key: &[u8]) -> Option<GetResult>;
+
+    /// Unconditional store.
+    fn set(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome;
+
+    /// Store only if absent.
+    fn add(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome;
+
+    /// Store only if present.
+    fn replace(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome;
+
+    /// Append bytes to an existing value.
+    fn append(&self, key: &[u8], suffix: &[u8]) -> StoreOutcome;
+
+    /// Prepend bytes to an existing value.
+    fn prepend(&self, key: &[u8], prefix: &[u8]) -> StoreOutcome;
+
+    /// Compare-and-store against a `cas` token from [`Cache::get`].
+    fn cas(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32, cas: u64) -> StoreOutcome;
+
+    /// Remove `key`; whether it was present.
+    fn delete(&self, key: &[u8]) -> bool;
+
+    /// Increment a decimal value; `None` when missing or non-numeric.
+    fn incr(&self, key: &[u8], delta: u64) -> Option<u64>;
+
+    /// Decrement (saturating at 0 per the protocol).
+    fn decr(&self, key: &[u8], delta: u64) -> Option<u64>;
+
+    /// Update expiry only.
+    fn touch(&self, key: &[u8], exptime: u32) -> bool;
+
+    /// Drop everything.
+    fn flush_all(&self);
+
+    /// Live item count (approximate under concurrency).
+    fn item_count(&self) -> usize;
+
+    /// Current bucket count (for expansion tests / stats).
+    fn bucket_count(&self) -> usize;
+
+    /// Request-path metrics.
+    fn metrics(&self) -> &EngineMetrics;
+
+    /// Value-memory in use, as accounted by the engine's allocator.
+    fn mem_used(&self) -> usize;
+
+    /// Background maintenance hook driven by the coordinator (expansion
+    /// tail work, reclamation nudges). Default: nothing.
+    fn maintenance(&self) {}
+
+    /// Snapshot of the per-bucket CLOCK values, when the engine has them
+    /// (planner input). `None` for the strict-LRU baseline.
+    fn clock_snapshot(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Apply planner-chosen eviction parameters (CLOCK engines only).
+    fn set_evict_params(&self, _decay: u8, _batch: u32) {}
+}
+
+/// Construct an engine by name (CLI / benches).
+pub fn build_engine(name: &str, config: CacheConfig) -> crate::Result<Arc<dyn Cache>> {
+    match name {
+        "fleec" => Ok(Arc::new(fleec::FleecCache::new(config))),
+        "memcached" => Ok(Arc::new(memcached::MemcachedCache::new(config))),
+        "memclock" => Ok(Arc::new(memclock::MemClockCache::new(config))),
+        other => anyhow::bail!("unknown engine '{other}' (expected fleec|memcached|memclock)"),
+    }
+}
+
+/// All engine names, baseline-first (bench iteration order).
+pub const ENGINES: [&str; 3] = ["memcached", "memclock", "fleec"];
+
+/// FNV-1a 64-bit — the hash every engine uses so key placement is
+/// identical across the three systems (fair hit-ratio comparisons).
+#[inline]
+pub fn hash_key(key: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in key {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    // Final avalanche so power-of-two masking uses high entropy.
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^ (h >> 33)
+}
+
+/// Seconds since the cache process started (item expiry clock).
+pub fn uptime_secs() -> u32 {
+    use once_cell::sync::Lazy;
+    static START: Lazy<std::time::Instant> = Lazy::new(std::time::Instant::now);
+    START.elapsed().as_secs() as u32
+}
+
+/// Resolve a protocol `exptime` to an absolute uptime deadline.
+/// 0 = never; ≤ 60×60×24×30 = relative seconds; larger = unix time (we
+/// treat it as relative to start for determinism in benches).
+pub fn deadline_from_exptime(exptime: u32) -> u32 {
+    const THIRTY_DAYS: u32 = 60 * 60 * 24 * 30;
+    match exptime {
+        0 => 0,
+        t if t <= THIRTY_DAYS => uptime_secs().saturating_add(t).max(1),
+        t => t.max(1),
+    }
+}
+
+/// Whether an absolute deadline has passed.
+#[inline]
+pub fn is_expired(deadline: u32) -> bool {
+    deadline != 0 && uptime_secs() >= deadline
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_is_stable_and_spreads() {
+        assert_eq!(hash_key(b"key1"), hash_key(b"key1"));
+        assert_ne!(hash_key(b"key1"), hash_key(b"key2"));
+        // Low bits must differ for sequential keys (power-of-two masking).
+        let mut low = std::collections::HashSet::new();
+        for i in 0..256u32 {
+            low.insert(hash_key(format!("k{i:012}").as_bytes()) & 0xff);
+        }
+        // 256 balls into 256 bins leave ≈ 256·(1−e⁻¹) ≈ 162 distinct.
+        assert!(low.len() > 140, "low-bit entropy too poor: {}", low.len());
+    }
+
+    #[test]
+    fn exptime_resolution_rules() {
+        assert_eq!(deadline_from_exptime(0), 0);
+        let d = deadline_from_exptime(10);
+        assert!(d >= 10 && d >= uptime_secs());
+        assert!(!is_expired(0), "0 never expires");
+        assert!(is_expired(1).eq(&(uptime_secs() >= 1)));
+    }
+
+    #[test]
+    fn build_engine_rejects_unknown() {
+        assert!(build_engine("nope", CacheConfig::small()).is_err());
+    }
+}

@@ -1,0 +1,299 @@
+//! Command-line interface (hand-rolled; the offline crate set has no
+//! clap). Subcommands:
+//!
+//! ```text
+//! fleec serve   --engine fleec --port 11211 --mem-mb 64 [--no-planner]
+//! fleec bench   --engine all --alpha 0.99 --threads 8 --ops 200000 ...
+//! fleec hit-ratio --alpha 0.99 --catalog 100000 --mem-mb 4
+//! fleec planner-demo
+//! fleec version
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cache::{build_engine, CacheConfig, ENGINES};
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::runtime::{artifacts_dir, HitRatioModule, PlannerModule, Runtime};
+use crate::server::{Server, ServerConfig};
+use crate::workload::{
+    run_driver, DriverOptions, ValueSize, WorkloadSpec,
+    driver::StopRule,
+};
+use crate::Result;
+
+/// Parsed `--key value` options plus positional arguments.
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Boolean flags (never consume a value).
+const BOOL_FLAGS: &[&str] = &["validate", "no-planner", "nodelay", "quiet"];
+
+/// Parse raw argv (after the subcommand) into [`Args`].
+pub fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut options = HashMap::new();
+    let mut flags = Vec::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if !BOOL_FLAGS.contains(&name) && i + 1 < argv.len() && !argv[i + 1].starts_with("--")
+            {
+                options.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(name.to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args {
+        positional,
+        options,
+        flags,
+    }
+}
+
+impl Args {
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.options
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.options.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Build a [`CacheConfig`] from common options.
+pub fn cache_config(args: &Args) -> CacheConfig {
+    CacheConfig {
+        mem_limit: args.get_or("mem-mb", 64usize) << 20,
+        initial_buckets: args.get_or("buckets", 1024usize),
+        load_factor: args.get_or("load-factor", 1.5f64),
+        clock_max: args.get_or("clock-max", 3u8),
+        lock_stripes: args.get_or("stripes", 16usize),
+        evict_batch: args.get_or("evict-batch", 8u32),
+    }
+}
+
+/// Top-level dispatch. Returns the process exit code.
+pub fn run(argv: Vec<String>) -> Result<i32> {
+    let Some(sub) = argv.first().map(|s| s.as_str()) else {
+        print_usage();
+        return Ok(2);
+    };
+    let args = parse_args(&argv[1..]);
+    match sub {
+        "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
+        "hit-ratio" => cmd_hit_ratio(&args),
+        "planner-demo" => cmd_planner_demo(),
+        "version" => {
+            println!("fleec 0.1.0 — FLeeC reproduction (CS.DC 2024)");
+            Ok(0)
+        }
+        _ => {
+            print_usage();
+            Ok(2)
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "fleec — a fast lock-free application cache (paper reproduction)\n\
+         \n\
+         USAGE: fleec <subcommand> [options]\n\
+         \n\
+         serve         --engine fleec|memcached|memclock --port 11211 --mem-mb 64\n\
+                       [--buckets N] [--clock-max K] [--no-planner]\n\
+         bench         --engine all|<name> --alpha 0.99 --threads 8 --ops 200000\n\
+                       [--catalog N] [--value-bytes N] [--read-ratio R] [--mem-mb N]\n\
+         hit-ratio     --alpha 0.99 --catalog 100000 --mem-mb 4 [--trace-len N]\n\
+         planner-demo  (load artifacts, run the planner once, print the decision)\n\
+         version"
+    );
+}
+
+fn cmd_serve(args: &Args) -> Result<i32> {
+    let engine_name = args.get_str("engine", "fleec");
+    let port: u16 = args.get_or("port", 11211u16);
+    let config = cache_config(args);
+    let cache = build_engine(engine_name, config)?;
+
+    // Planner is best-effort: a serving cache must not require artifacts.
+    let planner_dir = if args.has_flag("no-planner") {
+        None
+    } else {
+        Some(artifacts_dir())
+    };
+    let _coordinator = Coordinator::start(
+        Arc::clone(&cache),
+        planner_dir,
+        CoordinatorConfig::default(),
+    );
+
+    let server = Server::start(
+        ServerConfig {
+            addr: format!("127.0.0.1:{port}").parse()?,
+            nodelay: true,
+        },
+        Arc::clone(&cache),
+    )?;
+    eprintln!(
+        "fleec serving engine={} on {} (mem={} MiB)",
+        engine_name,
+        server.addr(),
+        cache.mem_used() >> 20
+    );
+    // Serve until killed.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_bench(args: &Args) -> Result<i32> {
+    let spec = WorkloadSpec {
+        catalog: args.get_or("catalog", 100_000u64),
+        alpha: args.get_or("alpha", 0.99f64),
+        read_ratio: args.get_or("read-ratio", 0.99f64),
+        value_size: ValueSize::Fixed(args.get_or("value-bytes", 64usize)),
+        seed: args.get_or("seed", 0xF1EE_C0DEu64),
+    };
+    let opts = DriverOptions {
+        threads: args.get_or("threads", 8usize),
+        stop: StopRule::OpsPerThread(args.get_or("ops", 200_000u64)),
+        prefill: true,
+        sample_every: args.get_or("sample-every", 4u64),
+        validate: args.has_flag("validate"),
+    };
+    let engine_sel = args.get_str("engine", "all");
+    let engines: Vec<&str> = if engine_sel == "all" {
+        ENGINES.to_vec()
+    } else {
+        vec![engine_sel]
+    };
+    println!(
+        "# workload: alpha={} reads={} catalog={} value={:?} threads={} ops/thread={:?}",
+        spec.alpha, spec.read_ratio, spec.catalog, spec.value_size, opts.threads, opts.stop
+    );
+    let mut base_tput = None;
+    for name in engines {
+        let cache = build_engine(name, cache_config(args))?;
+        let report = run_driver(&cache, &spec, &opts);
+        let speedup = base_tput
+            .map(|b: f64| report.throughput() / b)
+            .unwrap_or(1.0);
+        if base_tput.is_none() {
+            base_tput = Some(report.throughput());
+        }
+        println!("{}  speedup={speedup:.2}x", report.row());
+        if report.validation_failures > 0 {
+            eprintln!("!! {} validation failures", report.validation_failures);
+            return Ok(1);
+        }
+    }
+    Ok(0)
+}
+
+fn cmd_hit_ratio(args: &Args) -> Result<i32> {
+    use crate::workload::Trace;
+    let spec = WorkloadSpec {
+        catalog: args.get_or("catalog", 100_000u64),
+        alpha: args.get_or("alpha", 0.99f64),
+        read_ratio: 0.99,
+        value_size: ValueSize::Fixed(args.get_or("value-bytes", 64usize)),
+        seed: args.get_or("seed", 7u64),
+    };
+    let trace_len = args.get_or("trace-len", 400_000usize);
+    let trace = Trace::generate(&spec, trace_len);
+    println!("# hit-ratio: alpha={} catalog={} mem-mb={}", spec.alpha, spec.catalog, args.get_or("mem-mb", 4usize));
+    for name in ENGINES {
+        let cache = build_engine(name, cache_config(args))?;
+        let report = crate::workload::driver::replay_trace(cache.as_ref(), &trace);
+        println!(
+            "{name:>10}: hit_ratio={:.4} (hits={} gets={})",
+            report.0, report.1, report.2
+        );
+    }
+    // Model column when artifacts exist.
+    if let Ok(rt) = Runtime::new() {
+        if let Ok(model) = HitRatioModule::load(&rt, &artifacts_dir()) {
+            let items_fit = (args.get_or("mem-mb", 4usize) << 20) / (64 + 88);
+            if let Ok(est) = model.run(spec.alpha as f32, items_fit as f32) {
+                println!(
+                    "     model: lru={:.4} fifo/clock={:.4} (capacity≈{items_fit} items)",
+                    est.lru, est.fifo
+                );
+            }
+        }
+    }
+    Ok(0)
+}
+
+fn cmd_planner_demo() -> Result<i32> {
+    let rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+    let planner = PlannerModule::load(&rt, &artifacts_dir())?;
+    // Simulated warm table, moderate pressure.
+    let mut clocks = [0i32; crate::runtime::PLANNER_SNAPSHOT];
+    for (i, c) in clocks.iter_mut().enumerate() {
+        *c = (i % 4) as i32;
+    }
+    let decision = planner.run(&clocks, 0.4)?;
+    println!("planner decision: {decision:?}");
+    let model = HitRatioModule::load(&rt, &artifacts_dir())?;
+    for alpha in [0.5f32, 0.9, 0.99, 1.2] {
+        let est = model.run(alpha, 10_000.0)?;
+        println!("hit-ratio model alpha={alpha}: lru={:.4} fifo={:.4}", est.lru, est.fifo);
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args_of(s: &[&str]) -> Args {
+        parse_args(&s.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = args_of(&["--engine", "fleec", "--validate", "pos1", "--ops", "5"]);
+        assert_eq!(a.get_str("engine", "x"), "fleec");
+        assert!(a.has_flag("validate"));
+        assert_eq!(a.get_or("ops", 0u64), 5);
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.get_or("missing", 9u32), 9);
+    }
+
+    #[test]
+    fn cache_config_from_args() {
+        let a = args_of(&["--mem-mb", "8", "--clock-max", "7"]);
+        let c = cache_config(&a);
+        assert_eq!(c.mem_limit, 8 << 20);
+        assert_eq!(c.clock_max, 7);
+        assert_eq!(c.load_factor, 1.5);
+    }
+
+    #[test]
+    fn unknown_subcommand_exits_2() {
+        assert_eq!(run(vec!["nope".into()]).unwrap(), 2);
+    }
+}

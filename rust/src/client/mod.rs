@@ -1,0 +1,262 @@
+//! Minimal blocking Memcached text-protocol client.
+//!
+//! Used by the end-to-end example, the network benches and the
+//! integration tests. Deliberately simple: one connection, synchronous
+//! request/response, plus a `pipeline_set`/`mget` fast path for batched
+//! load generation.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::Result;
+
+/// One client connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// A `VALUE` returned by [`Client::get`]/[`Client::gets`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClientValue {
+    pub key: Vec<u8>,
+    pub flags: u32,
+    pub data: Vec<u8>,
+    pub cas: Option<u64>,
+}
+
+impl Client {
+    /// Connect with a sane timeout.
+    pub fn connect(addr: SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        Ok(Client {
+            reader: BufReader::with_capacity(64 * 1024, stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        while !line.ends_with('\n') {
+            let mut more = String::new();
+            if self.reader.read_line(&mut more)? == 0 {
+                break;
+            }
+            line.push_str(&more);
+        }
+        Ok(line.trim_end().to_string())
+    }
+
+    /// `set`; returns true on `STORED`.
+    pub fn set(&mut self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> Result<bool> {
+        let mut msg = Vec::with_capacity(key.len() + value.len() + 48);
+        msg.extend_from_slice(b"set ");
+        msg.extend_from_slice(key);
+        msg.extend_from_slice(format!(" {} {} {}\r\n", flags, exptime, value.len()).as_bytes());
+        msg.extend_from_slice(value);
+        msg.extend_from_slice(b"\r\n");
+        self.writer.write_all(&msg)?;
+        Ok(self.read_line()? == "STORED")
+    }
+
+    /// Fire-and-forget `set ... noreply` (load generation).
+    pub fn set_noreply(&mut self, key: &[u8], value: &[u8]) -> Result<()> {
+        let mut msg = Vec::with_capacity(key.len() + value.len() + 48);
+        msg.extend_from_slice(b"set ");
+        msg.extend_from_slice(key);
+        msg.extend_from_slice(format!(" 0 0 {} noreply\r\n", value.len()).as_bytes());
+        msg.extend_from_slice(value);
+        msg.extend_from_slice(b"\r\n");
+        self.writer.write_all(&msg)?;
+        Ok(())
+    }
+
+    /// Single-key `get`.
+    pub fn get(&mut self, key: &[u8]) -> Result<Option<ClientValue>> {
+        self.writer.write_all(b"get ")?;
+        self.writer.write_all(key)?;
+        self.writer.write_all(b"\r\n")?;
+        let mut values = self.read_values()?;
+        Ok(values.pop())
+    }
+
+    /// Multi-key `get`.
+    pub fn mget(&mut self, keys: &[&[u8]]) -> Result<Vec<ClientValue>> {
+        let mut msg = Vec::with_capacity(keys.iter().map(|k| k.len() + 1).sum::<usize>() + 8);
+        msg.extend_from_slice(b"get");
+        for k in keys {
+            msg.push(b' ');
+            msg.extend_from_slice(k);
+        }
+        msg.extend_from_slice(b"\r\n");
+        self.writer.write_all(&msg)?;
+        self.read_values()
+    }
+
+    /// `gets` (with CAS token).
+    pub fn gets(&mut self, key: &[u8]) -> Result<Option<ClientValue>> {
+        self.writer.write_all(b"gets ")?;
+        self.writer.write_all(key)?;
+        self.writer.write_all(b"\r\n")?;
+        let mut values = self.read_values()?;
+        Ok(values.pop())
+    }
+
+    /// `cas`; returns the reply line.
+    pub fn cas(&mut self, key: &[u8], value: &[u8], token: u64) -> Result<String> {
+        let mut msg = Vec::new();
+        msg.extend_from_slice(b"cas ");
+        msg.extend_from_slice(key);
+        msg.extend_from_slice(format!(" 0 0 {} {}\r\n", value.len(), token).as_bytes());
+        msg.extend_from_slice(value);
+        msg.extend_from_slice(b"\r\n");
+        self.writer.write_all(&msg)?;
+        self.read_line()
+    }
+
+    /// `delete`; true on `DELETED`.
+    pub fn delete(&mut self, key: &[u8]) -> Result<bool> {
+        self.writer.write_all(b"delete ")?;
+        self.writer.write_all(key)?;
+        self.writer.write_all(b"\r\n")?;
+        Ok(self.read_line()? == "DELETED")
+    }
+
+    /// `incr`; `None` on `NOT_FOUND`/error.
+    pub fn incr(&mut self, key: &[u8], delta: u64) -> Result<Option<u64>> {
+        self.writer.write_all(b"incr ")?;
+        self.writer.write_all(key)?;
+        self.writer.write_all(format!(" {}\r\n", delta).as_bytes())?;
+        Ok(self.read_line()?.parse().ok())
+    }
+
+    /// `stats` as (name, value) pairs.
+    pub fn stats(&mut self) -> Result<Vec<(String, String)>> {
+        self.writer.write_all(b"stats\r\n")?;
+        let mut out = Vec::new();
+        loop {
+            let line = self.read_line()?;
+            if line == "END" || line.is_empty() {
+                break;
+            }
+            if let Some(rest) = line.strip_prefix("STAT ") {
+                if let Some((k, v)) = rest.split_once(' ') {
+                    out.push((k.to_string(), v.to_string()));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `flush_all`.
+    pub fn flush_all(&mut self) -> Result<()> {
+        self.writer.write_all(b"flush_all\r\n")?;
+        let _ = self.read_line()?;
+        Ok(())
+    }
+
+    /// `version` string.
+    pub fn version(&mut self) -> Result<String> {
+        self.writer.write_all(b"version\r\n")?;
+        Ok(self.read_line()?)
+    }
+
+    /// Parse VALUE… END.
+    fn read_values(&mut self) -> Result<Vec<ClientValue>> {
+        let mut out = Vec::new();
+        loop {
+            let line = self.read_line()?;
+            if line == "END" {
+                return Ok(out);
+            }
+            let Some(rest) = line.strip_prefix("VALUE ") else {
+                anyhow::bail!("unexpected reply line: {line:?}");
+            };
+            let parts: Vec<&str> = rest.split(' ').collect();
+            if parts.len() < 3 {
+                anyhow::bail!("bad VALUE header: {line:?}");
+            }
+            let key = parts[0].as_bytes().to_vec();
+            let flags: u32 = parts[1].parse()?;
+            let len: usize = parts[2].parse()?;
+            let cas: Option<u64> = parts.get(3).and_then(|s| s.parse().ok());
+            let mut data = vec![0u8; len + 2];
+            self.reader.read_exact(&mut data)?;
+            data.truncate(len);
+            out.push(ClientValue { key, flags, data, cas });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{build_engine, CacheConfig};
+    use crate::server::{Server, ServerConfig};
+
+    fn server() -> (Server, SocketAddr) {
+        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+        let s = Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".parse().unwrap(),
+                nodelay: true,
+            },
+            cache,
+        )
+        .unwrap();
+        let addr = s.addr();
+        (s, addr)
+    }
+
+    #[test]
+    fn client_server_full_session() {
+        let (_s, addr) = server();
+        let mut c = Client::connect(addr).unwrap();
+        assert!(c.set(b"alpha", b"one", 3, 0).unwrap());
+        let v = c.get(b"alpha").unwrap().unwrap();
+        assert_eq!((v.data.as_slice(), v.flags), (b"one" as &[u8], 3));
+        assert!(c.get(b"beta").unwrap().is_none());
+
+        let with_cas = c.gets(b"alpha").unwrap().unwrap();
+        let tok = with_cas.cas.unwrap();
+        assert_eq!(c.cas(b"alpha", b"two", tok).unwrap(), "STORED");
+        assert_eq!(c.cas(b"alpha", b"three", tok).unwrap(), "EXISTS");
+
+        assert!(c.set(b"n", b"41", 0, 0).unwrap());
+        assert_eq!(c.incr(b"n", 1).unwrap(), Some(42));
+
+        assert!(c.delete(b"alpha").unwrap());
+        assert!(!c.delete(b"alpha").unwrap());
+
+        let stats = c.stats().unwrap();
+        assert!(stats.iter().any(|(k, v)| k == "engine" && v == "fleec"));
+        assert!(c.version().unwrap().starts_with("VERSION"));
+    }
+
+    #[test]
+    fn mget_returns_only_hits() {
+        let (_s, addr) = server();
+        let mut c = Client::connect(addr).unwrap();
+        c.set(b"a", b"1", 0, 0).unwrap();
+        c.set(b"c", b"3", 0, 0).unwrap();
+        let got = c.mget(&[b"a", b"b", b"c"]).unwrap();
+        let keys: Vec<&[u8]> = got.iter().map(|v| v.key.as_slice()).collect();
+        assert_eq!(keys, vec![b"a" as &[u8], b"c"]);
+    }
+
+    #[test]
+    fn noreply_pipeline_then_read() {
+        let (_s, addr) = server();
+        let mut c = Client::connect(addr).unwrap();
+        for i in 0..100u32 {
+            c.set_noreply(format!("k{i}").as_bytes(), b"v").unwrap();
+        }
+        // A replied command afterwards flushes/orders everything.
+        assert!(c.set(b"fin", b"done", 0, 0).unwrap());
+        assert_eq!(c.get(b"k99").unwrap().unwrap().data, b"v");
+    }
+}

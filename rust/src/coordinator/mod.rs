@@ -1,0 +1,274 @@
+//! The coordinator: FLeeC's background governor.
+//!
+//! A single maintenance thread that periodically, **off the request
+//! path**:
+//!
+//! 1. drives engine maintenance (finishing non-blocking expansion tails,
+//!    nudging reclamation),
+//! 2. snapshots the CLOCK array, resamples it to the planner's fixed
+//!    shape, and runs the AOT-compiled eviction planner (L2 JAX + L1
+//!    Pallas via PJRT), feeding the chosen (decay, batch) back into the
+//!    engine,
+//! 3. publishes a [`CoordinatorStatus`] snapshot for `stats`/benches.
+//!
+//! The planner is optional: without artifacts the coordinator still runs
+//! maintenance with the engine's built-in defaults, so `cargo test` does
+//! not depend on `make artifacts`.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cache::Cache;
+use crate::runtime::{resample_clocks, PlannerDecision, PlannerModule, Runtime};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Maintenance period.
+    pub interval: Duration,
+    /// Pressure EWMA smoothing (0..1; higher = more reactive).
+    pub pressure_alpha: f64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            interval: Duration::from_millis(50),
+            pressure_alpha: 0.3,
+        }
+    }
+}
+
+/// Published status of the last maintenance round.
+#[derive(Debug, Clone, Default)]
+pub struct CoordinatorStatus {
+    pub rounds: u64,
+    pub planner_runs: u64,
+    pub last_decision: Option<PlannerDecision>,
+    pub smoothed_pressure: f64,
+}
+
+/// Handle to the running coordinator thread.
+pub struct Coordinator {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    status: Arc<Mutex<CoordinatorStatus>>,
+    rounds: Arc<AtomicU64>,
+}
+
+impl Coordinator {
+    /// Start maintaining `cache`. When `planner_dir` is given, the thread
+    /// loads `planner.hlo.txt` from it on startup (PJRT executables are
+    /// not `Send`, so the artifact must be compiled on the thread that
+    /// runs it) and falls back to engine defaults if loading fails.
+    pub fn start(
+        cache: Arc<dyn Cache>,
+        planner_dir: Option<PathBuf>,
+        config: CoordinatorConfig,
+    ) -> Coordinator {
+        let stop = Arc::new(AtomicBool::new(false));
+        let status = Arc::new(Mutex::new(CoordinatorStatus::default()));
+        let rounds = Arc::new(AtomicU64::new(0));
+        let t_stop = Arc::clone(&stop);
+        let t_status = Arc::clone(&status);
+        let t_rounds = Arc::clone(&rounds);
+        let thread = std::thread::Builder::new()
+            .name("fleec-coordinator".into())
+            .spawn(move || {
+                // Load the planner on this thread (PJRT handles are !Send).
+                let planner: Option<(Runtime, PlannerModule)> = planner_dir.and_then(|dir| {
+                    match Runtime::new().and_then(|rt| {
+                        let m = PlannerModule::load(&rt, &dir)?;
+                        Ok((rt, m))
+                    }) {
+                        Ok(p) => Some(p),
+                        Err(e) => {
+                            eprintln!("coordinator: planner unavailable ({e}); using defaults");
+                            None
+                        }
+                    }
+                });
+                let mut smoothed_pressure = 0.0f64;
+                let mut last_oom = 0u64;
+                let mut last_sets = 0u64;
+                while !t_stop.load(Ordering::Acquire) {
+                    let round_start = Instant::now();
+                    // 1. Engine maintenance (expansion tail work etc.).
+                    cache.maintenance();
+
+                    // 2. Pressure estimate from OOM-stall deltas.
+                    let snap = cache.metrics().snapshot();
+                    let d_oom = snap.oom_stalls.saturating_sub(last_oom);
+                    let d_sets = snap.sets.saturating_sub(last_sets).max(1);
+                    last_oom = snap.oom_stalls;
+                    last_sets = snap.sets;
+                    let inst_pressure = (d_oom as f64 / d_sets as f64).min(1.0);
+                    smoothed_pressure = config.pressure_alpha * inst_pressure
+                        + (1.0 - config.pressure_alpha) * smoothed_pressure;
+
+                    // 3. Planner (when artifacts are loaded).
+                    let mut decision = None;
+                    if let (Some((_rt, planner)), Some(clocks)) =
+                        (&planner, cache.clock_snapshot())
+                    {
+                        let sampled = resample_clocks(&clocks);
+                        if let Ok(d) = planner.run(&sampled, smoothed_pressure as f32) {
+                            cache.set_evict_params(d.decay, d.batch);
+                            decision = Some(d);
+                        }
+                    }
+
+                    // 4. Publish.
+                    {
+                        let mut st = t_status.lock().unwrap();
+                        st.rounds += 1;
+                        if decision.is_some() {
+                            st.planner_runs += 1;
+                            st.last_decision = decision;
+                        }
+                        st.smoothed_pressure = smoothed_pressure;
+                    }
+                    t_rounds.fetch_add(1, Ordering::Release);
+
+                    let elapsed = round_start.elapsed();
+                    if elapsed < config.interval {
+                        std::thread::sleep(config.interval - elapsed);
+                    }
+                }
+            })
+            .expect("spawn coordinator");
+        Coordinator {
+            stop,
+            thread: Some(thread),
+            status,
+            rounds,
+        }
+    }
+
+    /// Rounds completed so far (tests can wait on progress).
+    pub fn rounds(&self) -> u64 {
+        self.rounds.load(Ordering::Acquire)
+    }
+
+    /// Last published status.
+    pub fn status(&self) -> CoordinatorStatus {
+        self.status.lock().unwrap().clone()
+    }
+
+    /// Stop and join.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Pure-Rust fallback of the planner's decision logic — used when no
+/// artifact is available and unit-tested against the JAX version through
+/// `rust/tests/runtime_artifacts.rs` (both must agree on the contract).
+pub fn fallback_decision(clocks: &[u8], pressure: f32, clock_max: u8) -> PlannerDecision {
+    let mut histogram = [0u32; crate::runtime::PLANNER_BINS];
+    for &c in clocks {
+        histogram[(c as usize).min(histogram.len() - 1)] += 1;
+    }
+    let total = clocks.len().max(1) as f32;
+    let evictable_frac = histogram[0] as f32 / total;
+    // Warm table + real pressure → drain CLOCK faster (multi-bit values
+    // take clock_max sweeps to expire otherwise); calm table → gentle.
+    let decay = if pressure > 0.5 && evictable_frac < 0.1 {
+        clock_max.max(2) / 2 + 1
+    } else {
+        1
+    };
+    let batch = (8.0 + 56.0 * pressure) as u32;
+    PlannerDecision {
+        decay,
+        batch,
+        evictable_frac,
+        histogram,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{build_engine, CacheConfig};
+
+    #[test]
+    fn coordinator_runs_maintenance_rounds() {
+        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+        let mut coord = Coordinator::start(
+            Arc::clone(&cache),
+            None,
+            CoordinatorConfig {
+                interval: Duration::from_millis(5),
+                ..Default::default()
+            },
+        );
+        cache.set(b"k", b"v", 0, 0);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while coord.rounds() < 3 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(coord.rounds() >= 3, "coordinator made no progress");
+        coord.shutdown();
+        let st = coord.status();
+        assert!(st.rounds >= 3);
+        assert_eq!(st.planner_runs, 0, "no planner was supplied");
+    }
+
+    #[test]
+    fn coordinator_completes_expansion_in_background() {
+        let cache = build_engine("fleec", CacheConfig {
+            initial_buckets: 8,
+            ..CacheConfig::small()
+        })
+        .unwrap();
+        let mut coord = Coordinator::start(
+            Arc::clone(&cache),
+            None,
+            CoordinatorConfig {
+                interval: Duration::from_millis(2),
+                ..Default::default()
+            },
+        );
+        for i in 0..500u32 {
+            cache.set(format!("k{i}").as_bytes(), b"v", 0, 0);
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while cache.bucket_count() <= 8 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(cache.bucket_count() > 8, "expansion never completed");
+        for i in 0..500u32 {
+            assert!(cache.get(format!("k{i}").as_bytes()).is_some(), "k{i} lost");
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn fallback_decision_reacts_to_pressure() {
+        // Cold table, no pressure: gentle decay, small batch.
+        let cold = vec![0u8; 1000];
+        let d = fallback_decision(&cold, 0.0, 3);
+        assert_eq!(d.decay, 1);
+        assert!(d.batch <= 16);
+        assert!((d.evictable_frac - 1.0).abs() < 1e-6);
+        // Hot table, high pressure: aggressive decay, large batch.
+        let hot = vec![3u8; 1000];
+        let d = fallback_decision(&hot, 1.0, 3);
+        assert!(d.decay >= 2);
+        assert!(d.batch >= 32);
+        assert!(d.evictable_frac < 1e-6);
+        assert_eq!(d.histogram[3], 1000);
+    }
+}

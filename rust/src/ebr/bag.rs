@@ -1,0 +1,122 @@
+//! Limbo bags: per-thread vectors of retired allocations stamped with the
+//! epoch they were retired in.
+
+/// A retired allocation plus the function that reclaims it.
+///
+/// `reclaim(ptr, ctx)` gives retirers one word of context — the slab uses
+/// it to smuggle a `*const Slab` so retired items can be returned to their
+/// size class without a global registry.
+pub struct Retired {
+    ptr: *mut u8,
+    ctx: usize,
+    bytes: usize,
+    reclaim_fn: unsafe fn(*mut u8, usize),
+}
+
+// SAFETY: Retired items are only handled by their owner thread or, after
+// orphaning, under the collector's orphan mutex.
+unsafe impl Send for Retired {}
+
+impl Retired {
+    /// Package a retirement. See [`crate::ebr::Guard::defer`] for the contract.
+    pub fn new(ptr: *mut u8, ctx: usize, bytes: usize, reclaim_fn: unsafe fn(*mut u8, usize)) -> Self {
+        Retired {
+            ptr,
+            ctx,
+            bytes,
+            reclaim_fn,
+        }
+    }
+
+    /// Accounting hint supplied at retirement.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Run the reclaimer. Caller must guarantee the grace period elapsed.
+    pub unsafe fn reclaim(self) {
+        (self.reclaim_fn)(self.ptr, self.ctx);
+    }
+}
+
+/// Items retired during one epoch by one thread.
+pub struct Bag {
+    pub epoch: u64,
+    items: Vec<Retired>,
+}
+
+impl Bag {
+    pub fn new(epoch: u64) -> Self {
+        Bag {
+            epoch,
+            items: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, item: Retired) {
+        self.items.push(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Reclaim everything in the bag; returns (count, bytes).
+    pub fn drain(&mut self) -> (usize, usize) {
+        let n = self.items.len();
+        let mut bytes = 0;
+        for item in self.items.drain(..) {
+            bytes += item.bytes();
+            unsafe { item.reclaim() };
+        }
+        (n, bytes)
+    }
+
+    /// Hand all items out without reclaiming (thread-exit orphaning).
+    pub fn take_all(&mut self) -> Vec<Retired> {
+        std::mem::take(&mut self.items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static FREED: AtomicUsize = AtomicUsize::new(0);
+
+    unsafe fn fake_reclaim(_p: *mut u8, ctx: usize) {
+        FREED.fetch_add(ctx, Ordering::SeqCst);
+    }
+
+    #[test]
+    fn drain_runs_reclaimers_and_counts_bytes() {
+        FREED.store(0, Ordering::SeqCst);
+        let mut bag = Bag::new(7);
+        bag.push(Retired::new(std::ptr::null_mut(), 2, 100, fake_reclaim));
+        bag.push(Retired::new(std::ptr::null_mut(), 3, 50, fake_reclaim));
+        assert_eq!(bag.len(), 2);
+        let (n, bytes) = bag.drain();
+        assert_eq!((n, bytes), (2, 150));
+        assert_eq!(FREED.load(Ordering::SeqCst), 5);
+        assert!(bag.is_empty());
+    }
+
+    #[test]
+    fn take_all_moves_without_reclaiming() {
+        FREED.store(0, Ordering::SeqCst);
+        let mut bag = Bag::new(1);
+        bag.push(Retired::new(std::ptr::null_mut(), 1, 10, fake_reclaim));
+        let items = bag.take_all();
+        assert_eq!(items.len(), 1);
+        assert_eq!(FREED.load(Ordering::SeqCst), 0);
+        for i in items {
+            unsafe { i.reclaim() };
+        }
+        assert_eq!(FREED.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,51 @@
+//! # FLeeC — a Fast Lock-Free Application Cache
+//!
+//! Full reproduction of *"FLeeC: a Fast Lock-Free Application Cache"*
+//! (Costa, Preguiça, Lourenço — CS.DC 2024): a Memcached-compatible
+//! application cache whose main data structures are lock-free.
+//!
+//! The paper replaces Memcached's three blocking structures (locked hash
+//! table, strict-LRU doubly-linked list, slab allocator) with a single
+//! lock-free hash table that *embeds* a CLOCK-based eviction policy:
+//!
+//! * buckets are Harris lock-free linked lists ([`lockfree`]),
+//! * every bucket carries a multi-bit CLOCK value swept by a lock-free
+//!   clock hand ([`cache::fleec`]),
+//! * memory is reclaimed with a DEBRA-derived epoch scheme that only
+//!   advances under memory pressure ([`ebr`]),
+//! * the hash table expands without stopping the world (forwarding
+//!   marks + cooperative helping).
+//!
+//! Three engines implement the common [`cache::Cache`] trait so the
+//! paper's comparison is reproducible in-process:
+//!
+//! | engine | hash table | eviction | expansion |
+//! |---|---|---|---|
+//! | [`cache::memcached`] | striped locks | strict LRU (one lock) | stop-the-world |
+//! | [`cache::memclock`]  | striped locks | per-bucket CLOCK | stop-the-world |
+//! | [`cache::fleec`]     | lock-free (Harris) | embedded lock-free CLOCK | non-blocking |
+//!
+//! The serving plane ([`proto`], [`server`], [`client`]) makes FLeeC a
+//! plug-in Memcached replacement; [`workload`] and the `benches/`
+//! directory regenerate every figure in the paper's evaluation; the
+//! [`runtime`] + [`coordinator`] pair loads AOT-compiled JAX/Pallas
+//! maintenance kernels (eviction planner, analytic hit-ratio model) via
+//! PJRT and runs them off the request path.
+
+pub mod cache;
+pub mod cli;
+pub mod client;
+pub mod coordinator;
+pub mod ebr;
+pub mod lockfree;
+pub mod metrics;
+pub mod proto;
+pub mod runtime;
+pub mod server;
+pub mod slab;
+pub mod sync;
+pub mod testutil;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

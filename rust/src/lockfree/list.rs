@@ -1,0 +1,408 @@
+//! Harris' pragmatic non-blocking linked list.
+//!
+//! Sorted singly-linked list supporting lock-free `insert` / `remove` /
+//! `get`. Deletion is two-phase: a node is *logically* deleted by setting
+//! the mark bit of its `next` word (the CAS that linearizes removal), and
+//! *physically* unlinked by any later traversal that finds the mark. The
+//! unlinking CAS winner retires the node through [`crate::ebr`], so memory
+//! is reclaimed only after a grace period.
+//!
+//! The list is ordered by `K: Ord`; duplicate keys are rejected on insert,
+//! which is exactly the discipline the hash-table buckets need.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::ebr::{Collector, Guard};
+use crate::sync::tagged::{tag_of, untagged, with_tag};
+use crate::sync::Backoff;
+
+/// List node. `next` packs the successor pointer with the deletion mark
+/// in bit 0.
+struct Node<K, V> {
+    key: K,
+    value: V,
+    next: AtomicUsize,
+}
+
+/// A lock-free sorted linked list (Harris 2001).
+pub struct HarrisList<K, V> {
+    head: AtomicUsize,
+    collector: Arc<Collector>,
+    /// Approximate length, maintained with relaxed counters.
+    len: AtomicUsize,
+    _marker: std::marker::PhantomData<Box<Node<K, V>>>,
+}
+
+// SAFETY: nodes are shared across threads; K/V must therefore be Send+Sync.
+unsafe impl<K: Send + Sync, V: Send + Sync> Send for HarrisList<K, V> {}
+unsafe impl<K: Send + Sync, V: Send + Sync> Sync for HarrisList<K, V> {}
+
+/// Result of an internal `search`: the predecessor link to CAS and the
+/// packed word of the current node (0 when past the end).
+struct Position {
+    pred: *const AtomicUsize,
+    curr: usize,
+}
+
+impl<K: Ord, V> HarrisList<K, V> {
+    /// Empty list reclaiming through `collector`.
+    pub fn new(collector: Arc<Collector>) -> Self {
+        HarrisList {
+            head: AtomicUsize::new(0),
+            collector,
+            len: AtomicUsize::new(0),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// The collector this list retires into.
+    pub fn collector(&self) -> &Arc<Collector> {
+        &self.collector
+    }
+
+    /// Approximate number of live nodes.
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    /// Whether the list is (approximately) empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Harris `search`: returns the first position whose key is ≥ `key`,
+    /// physically unlinking every marked node it passes.
+    fn search(&self, key: &K, guard: &Guard) -> Position {
+        'retry: loop {
+            let mut pred: *const AtomicUsize = &self.head;
+            // SAFETY: pred always points into a live node (or the head)
+            // protected by the guard.
+            let mut curr = unsafe { (*pred).load(Ordering::Acquire) };
+            debug_assert_eq!(tag_of(curr), 0, "head/pred link is never marked");
+            loop {
+                if untagged(curr) == 0 {
+                    return Position { pred, curr: 0 };
+                }
+                let node = unsafe { &*(untagged(curr) as *const Node<K, V>) };
+                let next = node.next.load(Ordering::Acquire);
+                if tag_of(next) == 1 {
+                    // Logically deleted: attempt the physical unlink.
+                    let clean_next = untagged(next);
+                    match unsafe {
+                        (*pred).compare_exchange(
+                            curr,
+                            clean_next,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                    } {
+                        Ok(_) => {
+                            // We unlinked it; we retire it.
+                            unsafe {
+                                guard.defer_drop_box(untagged(curr) as *mut Node<K, V>);
+                            }
+                            curr = clean_next;
+                            continue;
+                        }
+                        Err(_) => continue 'retry,
+                    }
+                }
+                if node.key >= *key {
+                    return Position { pred, curr };
+                }
+                pred = &node.next;
+                curr = next;
+            }
+        }
+    }
+
+    /// Insert `key → value`; returns `false` (dropping nothing — the value
+    /// is returned in `Err`) if the key is already present.
+    pub fn insert(&self, key: K, value: V) -> Result<(), (K, V)> {
+        let guard = self.collector.pin();
+        let mut node = Box::new(Node {
+            key,
+            value,
+            next: AtomicUsize::new(0),
+        });
+        let mut backoff = Backoff::new();
+        loop {
+            let pos = self.search(&node.key, &guard);
+            if pos.curr != 0 {
+                let curr = unsafe { &*(untagged(pos.curr) as *const Node<K, V>) };
+                if curr.key == node.key {
+                    return Err((node.key, node.value));
+                }
+            }
+            node.next.store(pos.curr, Ordering::Relaxed);
+            let node_ptr = Box::into_raw(node);
+            match unsafe {
+                (*pos.pred).compare_exchange(
+                    pos.curr,
+                    node_ptr as usize,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+            } {
+                Ok(_) => {
+                    self.len.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(_) => {
+                    // Reclaim the box and retry.
+                    node = unsafe { Box::from_raw(node_ptr) };
+                    backoff.spin();
+                }
+            }
+        }
+    }
+
+    /// Remove `key`; returns whether it was present. Linearizes at the
+    /// mark CAS.
+    pub fn remove(&self, key: &K) -> bool {
+        let guard = self.collector.pin();
+        let mut backoff = Backoff::new();
+        loop {
+            let pos = self.search(key, &guard);
+            if pos.curr == 0 {
+                return false;
+            }
+            let node = unsafe { &*(untagged(pos.curr) as *const Node<K, V>) };
+            if node.key != *key {
+                return false;
+            }
+            let next = node.next.load(Ordering::Acquire);
+            if tag_of(next) == 1 {
+                // Someone else is deleting it right now; help via search.
+                backoff.spin();
+                continue;
+            }
+            // Logical deletion.
+            if node
+                .next
+                .compare_exchange(next, with_tag(untagged(next), 1), Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                backoff.spin();
+                continue;
+            }
+            self.len.fetch_sub(1, Ordering::Relaxed);
+            // Physical unlink (best effort; search will finish otherwise).
+            if unsafe {
+                (*pos.pred).compare_exchange(
+                    pos.curr,
+                    untagged(next),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+            }
+            .is_ok()
+            {
+                unsafe {
+                    guard.defer_drop_box(untagged(pos.curr) as *mut Node<K, V>);
+                }
+            } else {
+                // Leave it for the next traversal to unlink + retire.
+                let _ = self.search(key, &guard);
+            }
+            return true;
+        }
+    }
+
+    /// Apply `f` to the value of `key` under the guard; `None` on miss.
+    pub fn get<R>(&self, key: &K, f: impl FnOnce(&V) -> R) -> Option<R> {
+        let guard = self.collector.pin();
+        let pos = self.search(key, &guard);
+        if pos.curr == 0 {
+            return None;
+        }
+        let node = unsafe { &*(untagged(pos.curr) as *const Node<K, V>) };
+        if node.key == *key {
+            Some(f(&node.value))
+        } else {
+            None
+        }
+    }
+
+    /// Whether `key` is present.
+    pub fn contains(&self, key: &K) -> bool {
+        self.get(key, |_| ()).is_some()
+    }
+
+    /// Snapshot of live keys (tests / debugging; not linearizable).
+    pub fn keys(&self) -> Vec<K>
+    where
+        K: Clone,
+    {
+        let _guard = self.collector.pin();
+        let mut out = Vec::new();
+        let mut curr = self.head.load(Ordering::Acquire);
+        while untagged(curr) != 0 {
+            let node = unsafe { &*(untagged(curr) as *const Node<K, V>) };
+            let next = node.next.load(Ordering::Acquire);
+            if tag_of(next) == 0 {
+                out.push(node.key.clone());
+            }
+            curr = next;
+        }
+        out
+    }
+}
+
+impl<K, V> Drop for HarrisList<K, V> {
+    fn drop(&mut self) {
+        // Exclusive access: free the remaining chain directly.
+        let mut curr = untagged(*self.head.get_mut());
+        while curr != 0 {
+            let node = unsafe { Box::from_raw(curr as *mut Node<K, V>) };
+            curr = untagged(node.next.load(Ordering::Relaxed));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize as Counter;
+
+    fn list() -> HarrisList<u64, u64> {
+        HarrisList::new(Arc::new(Collector::default()))
+    }
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let l = list();
+        assert!(l.insert(3, 30).is_ok());
+        assert!(l.insert(1, 10).is_ok());
+        assert!(l.insert(2, 20).is_ok());
+        assert_eq!(l.insert(2, 99).unwrap_err(), (2, 99));
+        assert_eq!(l.get(&1, |v| *v), Some(10));
+        assert_eq!(l.get(&2, |v| *v), Some(20));
+        assert_eq!(l.get(&3, |v| *v), Some(30));
+        assert_eq!(l.keys(), vec![1, 2, 3], "list must stay sorted");
+        assert!(l.remove(&2));
+        assert!(!l.remove(&2));
+        assert_eq!(l.get(&2, |v| *v), None);
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn remove_missing_is_noop() {
+        let l = list();
+        assert!(!l.remove(&42));
+        assert!(l.insert(42, 1).is_ok());
+        assert!(l.remove(&42));
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn concurrent_disjoint_inserts_all_land() {
+        let l = Arc::new(list());
+        let threads = 8;
+        let per = 200;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let l = Arc::clone(&l);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        l.insert(t * per + i, i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(l.len(), (threads * per) as usize);
+        let keys = l.keys();
+        assert_eq!(keys.len(), (threads * per) as usize);
+        assert!(keys.windows(2).all(|w| w[0] < w[1]), "sorted, no dups");
+    }
+
+    #[test]
+    fn concurrent_same_key_insert_exactly_one_wins() {
+        for _round in 0..20 {
+            let l = Arc::new(list());
+            let wins = Arc::new(Counter::new(0));
+            let handles: Vec<_> = (0..4)
+                .map(|t| {
+                    let l = Arc::clone(&l);
+                    let wins = Arc::clone(&wins);
+                    std::thread::spawn(move || {
+                        if l.insert(7, t).is_ok() {
+                            wins.fetch_add(1, Ordering::SeqCst);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(wins.load(Ordering::SeqCst), 1);
+            assert_eq!(l.len(), 1);
+        }
+    }
+
+    #[test]
+    fn concurrent_remove_exactly_one_wins() {
+        for _round in 0..20 {
+            let l = Arc::new(list());
+            l.insert(5, 50).unwrap();
+            let wins = Arc::new(Counter::new(0));
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let l = Arc::clone(&l);
+                    let wins = Arc::clone(&wins);
+                    std::thread::spawn(move || {
+                        if l.remove(&5) {
+                            wins.fetch_add(1, Ordering::SeqCst);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(wins.load(Ordering::SeqCst), 1);
+            assert!(l.is_empty());
+        }
+    }
+
+    #[test]
+    fn mixed_storm_keeps_list_consistent() {
+        let collector = Arc::new(Collector::default());
+        let l = Arc::new(HarrisList::<u64, u64>::new(Arc::clone(&collector)));
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let l = Arc::clone(&l);
+                std::thread::spawn(move || {
+                    let mut rng = crate::sync::Xoshiro256::seeded(t);
+                    for _ in 0..2_000 {
+                        let k = rng.next_below(64);
+                        match rng.next_below(3) {
+                            0 => {
+                                let _ = l.insert(k, t);
+                            }
+                            1 => {
+                                let _ = l.remove(&k);
+                            }
+                            _ => {
+                                let _ = l.get(&k, |v| *v);
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let keys = l.keys();
+        assert!(
+            keys.windows(2).all(|w| w[0] < w[1]),
+            "sorted and duplicate-free after the storm"
+        );
+        collector.force_reclaim(4);
+    }
+}

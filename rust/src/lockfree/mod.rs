@@ -1,0 +1,16 @@
+//! Lock-free building blocks.
+//!
+//! * [`list`] — Harris' pragmatic non-blocking linked list (reference \[3\]
+//!   in the paper): the algorithm FLeeC's hash-table buckets are built on.
+//!   The standalone generic version here backs the component micro-bench
+//!   (experiment E4, locked vs lock-free list) and the property tests; the
+//!   FLeeC table embeds a specialized intrusive variant with value-state
+//!   words (see [`crate::cache::fleec`]).
+//! * [`stack`] — Treiber stack with version-tagged heads (ABA-safe),
+//!   used for the slab allocator's per-class free lists.
+
+pub mod list;
+pub mod stack;
+
+pub use list::HarrisList;
+pub use stack::TaggedStack;

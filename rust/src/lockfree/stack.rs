@@ -1,0 +1,235 @@
+//! Treiber stack over raw blocks with a version-tagged head (ABA-safe).
+//!
+//! Used for the slab allocator's per-class free lists: the stack's nodes
+//! *are* the free blocks (the successor pointer is written into the first
+//! word of each block), so pushing/popping allocates nothing.
+//!
+//! The head packs a 48-bit pointer with a 16-bit version counter; every
+//! successful pop increments the version so a concurrent pop that read a
+//! stale head/next pair cannot CAS successfully (the classic ABA defence
+//! for free-list stacks, where blocks get reused immediately).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sync::Backoff;
+
+const PTR_BITS: u32 = 48;
+const PTR_MASK: u64 = (1 << PTR_BITS) - 1;
+
+#[inline]
+fn pack(ptr: u64, ver: u64) -> u64 {
+    debug_assert_eq!(ptr & !PTR_MASK, 0, "pointer exceeds 48 bits");
+    (ver << PTR_BITS) | ptr
+}
+
+#[inline]
+fn unpack(word: u64) -> (u64, u64) {
+    (word & PTR_MASK, word >> PTR_BITS)
+}
+
+/// Intrusive lock-free stack of raw blocks (each ≥ 8 bytes, 8-aligned).
+#[derive(Default)]
+pub struct TaggedStack {
+    head: AtomicU64,
+}
+
+impl TaggedStack {
+    /// Empty stack.
+    pub fn new() -> Self {
+        TaggedStack {
+            head: AtomicU64::new(0),
+        }
+    }
+
+    /// Push a free block.
+    ///
+    /// # Safety
+    /// `block` must be valid for writes of 8 bytes, 8-aligned, below
+    /// 2^48, and owned by the caller (not reachable elsewhere).
+    pub unsafe fn push(&self, block: *mut u8) {
+        let mut backoff = Backoff::new();
+        let block_word = block as u64;
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            let (top, ver) = unpack(head);
+            // Link the current top into the block's first word.
+            (block as *mut u64).write(top);
+            if self
+                .head
+                .compare_exchange_weak(
+                    head,
+                    pack(block_word, ver.wrapping_add(1)),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                return;
+            }
+            backoff.spin();
+        }
+    }
+
+    /// Pop a free block, or `None` if empty.
+    ///
+    /// # Safety
+    /// All blocks in the stack must remain readable while the stack is in
+    /// use (slab pages are never unmapped, so this holds by construction).
+    pub unsafe fn pop(&self) -> Option<*mut u8> {
+        let mut backoff = Backoff::new();
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            let (top, ver) = unpack(head);
+            if top == 0 {
+                return None;
+            }
+            // Reading `next` from a block that another thread may have
+            // popped and reused is tolerated: the version tag makes our
+            // subsequent CAS fail, and slab pages are never unmapped so
+            // the read itself stays in-bounds. Volatile keeps the compiler
+            // from caching it across the CAS.
+            let next = (top as *const u64).read_volatile();
+            if self
+                .head
+                .compare_exchange_weak(
+                    head,
+                    pack(next, ver.wrapping_add(1)),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                return Some(top as *mut u8);
+            }
+            backoff.spin();
+        }
+    }
+
+    /// Whether the stack currently looks empty (racy; stats only).
+    pub fn is_empty(&self) -> bool {
+        unpack(self.head.load(Ordering::Acquire)).0 == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    /// Arena of fake blocks so tests control lifetimes.
+    fn arena(n: usize) -> Vec<Box<[u8; 64]>> {
+        (0..n).map(|_| Box::new([0u8; 64])).collect()
+    }
+
+    #[test]
+    fn lifo_order_single_thread() {
+        let mut blocks = arena(3);
+        let s = TaggedStack::new();
+        let ptrs: Vec<*mut u8> = blocks.iter_mut().map(|b| b.as_mut_ptr()).collect();
+        unsafe {
+            for &p in &ptrs {
+                s.push(p);
+            }
+            assert_eq!(s.pop(), Some(ptrs[2]));
+            assert_eq!(s.pop(), Some(ptrs[1]));
+            assert_eq!(s.pop(), Some(ptrs[0]));
+            assert_eq!(s.pop(), None);
+        }
+    }
+
+    #[test]
+    fn empty_pop_is_none() {
+        let s = TaggedStack::new();
+        assert!(s.is_empty());
+        assert_eq!(unsafe { s.pop() }, None);
+    }
+
+    #[test]
+    fn concurrent_push_pop_conserves_blocks() {
+        // N producers push unique blocks, N consumers pop; total popped set
+        // must equal the pushed set (no loss, no duplication).
+        let mut blocks = arena(4 * 256);
+        let ptrs: Vec<usize> = blocks.iter_mut().map(|b| b.as_mut_ptr() as usize).collect();
+        let s = Arc::new(TaggedStack::new());
+
+        let mut handles = Vec::new();
+        for chunk in ptrs.chunks(256) {
+            let s = Arc::clone(&s);
+            let chunk = chunk.to_vec();
+            handles.push(std::thread::spawn(move || {
+                for p in chunk {
+                    unsafe { s.push(p as *mut u8) };
+                }
+            }));
+        }
+        let popped: Vec<std::thread::JoinHandle<Vec<usize>>> = (0..4)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    let mut misses = 0;
+                    while misses < 10_000 && got.len() < 4 * 256 {
+                        match unsafe { s.pop() } {
+                            Some(p) => got.push(p as usize),
+                            None => misses += 1,
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all: Vec<usize> = Vec::new();
+        for h in popped {
+            all.extend(h.join().unwrap());
+        }
+        // Drain stragglers.
+        while let Some(p) = unsafe { s.pop() } {
+            all.push(p as usize);
+        }
+        assert_eq!(all.len(), ptrs.len(), "every block popped exactly once");
+        let set: HashSet<usize> = all.iter().copied().collect();
+        assert_eq!(set.len(), ptrs.len(), "no duplicates");
+        assert_eq!(set, ptrs.iter().copied().collect::<HashSet<_>>());
+    }
+
+    #[test]
+    fn reuse_after_pop_does_not_corrupt() {
+        // Push/pop the same two blocks repeatedly from several threads —
+        // the version tag must prevent ABA corruption (losing a block or
+        // double-popping).
+        let mut blocks = arena(2);
+        let p0 = blocks[0].as_mut_ptr() as usize;
+        let p1 = blocks[1].as_mut_ptr() as usize;
+        let s = Arc::new(TaggedStack::new());
+        unsafe {
+            s.push(p0 as *mut u8);
+            s.push(p1 as *mut u8);
+        }
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for _ in 0..5_000 {
+                        if let Some(p) = unsafe { s.pop() } {
+                            std::hint::spin_loop();
+                            unsafe { s.push(p) };
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let a = unsafe { s.pop() }.map(|p| p as usize);
+        let b = unsafe { s.pop() }.map(|p| p as usize);
+        let c = unsafe { s.pop() };
+        assert_eq!(c, None, "exactly two blocks must remain");
+        let got: HashSet<usize> = [a.unwrap(), b.unwrap()].into_iter().collect();
+        assert_eq!(got, [p0, p1].into_iter().collect());
+    }
+}

@@ -1,0 +1,13 @@
+//! `fleec` binary: serve / bench / hit-ratio / planner-demo.
+//! See [`fleec::cli`] for the full option reference.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match fleec::cli::run(argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

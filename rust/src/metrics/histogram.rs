@@ -1,0 +1,249 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, fixed footprint).
+//!
+//! Values (nanoseconds) are bucketed by octave with 8 sub-buckets per
+//! octave — ≤ 12.5 % relative error, 512 buckets ≈ 4 KiB, one relaxed
+//! `fetch_add` per record. Percentile queries interpolate inside the
+//! winning bucket.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-buckets per power of two.
+const SUB_BITS: u32 = 3;
+const SUB: usize = 1 << SUB_BITS;
+/// Octaves covered: 2^0 .. 2^63 ns (584 years; plenty).
+const OCTAVES: usize = 64;
+const BUCKETS: usize = OCTAVES * SUB;
+
+/// Concurrent fixed-size latency histogram.
+pub struct LatencyHistogram {
+    buckets: Box<[AtomicU64; BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // Box<[AtomicU64; N]> without a large stack temporary.
+        let v: Vec<AtomicU64> = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        let boxed: Box<[AtomicU64; BUCKETS]> = v.into_boxed_slice().try_into().map_err(|_| ()).unwrap();
+        LatencyHistogram {
+            buckets: boxed,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn index(nanos: u64) -> usize {
+        let v = nanos.max(1);
+        let exp = 63 - v.leading_zeros(); // floor(log2 v)
+        let sub = if exp >= SUB_BITS {
+            ((v >> (exp - SUB_BITS)) as usize) & (SUB - 1)
+        } else {
+            // Tiny values: place by low bits.
+            (v as usize) & (SUB - 1)
+        };
+        (exp as usize) * SUB + sub
+    }
+
+    /// Representative (geometric-ish midpoint) value of bucket `i`.
+    fn bucket_value(i: usize) -> u64 {
+        let exp = (i / SUB) as u32;
+        let sub = (i % SUB) as u64;
+        if exp >= SUB_BITS {
+            let base = 1u64 << exp;
+            let step = 1u64 << (exp - SUB_BITS);
+            base + sub * step + step / 2
+        } else {
+            1u64 << exp
+        }
+    }
+
+    /// Record one sample (nanoseconds).
+    #[inline]
+    pub fn record(&self, nanos: u64) {
+        self.buckets[Self::index(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(nanos, Ordering::Relaxed);
+        self.max.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    /// Record a `Duration`.
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Total samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean sample in nanoseconds (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Largest recorded sample.
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate `p`-quantile (0 < p ≤ 1) in nanoseconds.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for i in 0..BUCKETS {
+            let c = self.buckets[i].load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(i).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Reset all state (between bench phases).
+    pub fn reset(&self) {
+        for b in self.buckets.iter() {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+
+    /// Standard percentile summary (p50, p90, p95, p99, p999, max) in ns.
+    pub fn summary(&self) -> HistogramSummary {
+        HistogramSummary {
+            count: self.count(),
+            mean_ns: self.mean(),
+            p50_ns: self.percentile(0.50),
+            p90_ns: self.percentile(0.90),
+            p95_ns: self.percentile(0.95),
+            p99_ns: self.percentile(0.99),
+            p999_ns: self.percentile(0.999),
+            max_ns: self.max(),
+        }
+    }
+}
+
+/// Plain summary emitted by benches and `stats`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HistogramSummary {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p90_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub p999_ns: u64,
+    pub max_ns: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_zeroed() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_of_uniform_ramp_are_close() {
+        let h = LatencyHistogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v * 100); // 100ns .. 1ms
+        }
+        let p50 = h.percentile(0.5) as f64;
+        assert!(
+            (p50 / 500_000.0 - 1.0).abs() < 0.15,
+            "p50 {p50} not within 15% of 500µs"
+        );
+        let p99 = h.percentile(0.99) as f64;
+        assert!(
+            (p99 / 990_000.0 - 1.0).abs() < 0.15,
+            "p99 {p99} not within 15% of 990µs"
+        );
+        assert_eq!(h.max(), 1_000_000);
+        assert!((h.mean() / 500_050.0 - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn single_sample_dominates_all_percentiles() {
+        let h = LatencyHistogram::new();
+        h.record(12_345);
+        for p in [0.01, 0.5, 0.99, 1.0] {
+            let got = h.percentile(p) as f64;
+            assert!(
+                (got / 12_345.0 - 1.0).abs() < 0.13,
+                "p{p} = {got} too far from the only sample"
+            );
+        }
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let h = LatencyHistogram::new();
+        h.record(500);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.percentile(0.5), 0);
+    }
+
+    #[test]
+    fn concurrent_recording_counts_all_samples() {
+        use std::sync::Arc;
+        let h = Arc::new(LatencyHistogram::new());
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..25_000u64 {
+                        h.record(100 + (t * 25_000 + i) % 1000);
+                    }
+                })
+            })
+            .collect();
+        for hdl in handles {
+            hdl.join().unwrap();
+        }
+        assert_eq!(h.count(), 100_000);
+    }
+
+    #[test]
+    fn index_is_monotonic_in_value() {
+        let mut last = 0;
+        for shift in 0..40 {
+            let v = 1u64 << shift;
+            let idx = LatencyHistogram::index(v);
+            assert!(idx >= last, "index must not decrease");
+            last = idx;
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Cache metrics: sharded counters and a log-bucketed latency histogram.
+//!
+//! Everything on the request path must be wait-free and contention-light:
+//! counters are striped across cache lines ([`ShardedCounter`]) and the
+//! histogram uses one relaxed `fetch_add` per sample. Snapshots fold the
+//! shards — slightly stale, which is fine for `stats` output and benches.
+
+mod histogram;
+
+pub use histogram::{HistogramSummary, LatencyHistogram};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crossbeam_utils::CachePadded;
+
+/// Number of stripes; a small power of two keyed by thread id.
+const SHARDS: usize = 16;
+
+thread_local! {
+    /// Per-thread stripe index, derived once from the thread's address.
+    static SHARD: usize = {
+        let x = &0u8 as *const u8 as usize;
+        // SplitMix-style mix so stack-allocated cookies spread.
+        let mut z = x as u64;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        (z as usize >> 8) & (SHARDS - 1)
+    };
+}
+
+/// A counter striped over [`SHARDS`] cache lines.
+#[derive(Default)]
+pub struct ShardedCounter {
+    shards: [CachePadded<AtomicU64>; SHARDS],
+}
+
+impl ShardedCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` on this thread's stripe (relaxed; stats-grade).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        SHARD.with(|&s| {
+            self.shards[s].fetch_add(n, Ordering::Relaxed);
+        });
+    }
+
+    /// Increment by one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Fold all stripes.
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// All request-path counters an engine maintains.
+#[derive(Default)]
+pub struct EngineMetrics {
+    pub gets: ShardedCounter,
+    pub hits: ShardedCounter,
+    pub misses: ShardedCounter,
+    pub sets: ShardedCounter,
+    pub deletes: ShardedCounter,
+    pub evictions: ShardedCounter,
+    pub expired: ShardedCounter,
+    pub expansions: ShardedCounter,
+    pub oom_stalls: ShardedCounter,
+}
+
+/// Plain snapshot of [`EngineMetrics`] (serialized into `stats`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub gets: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub sets: u64,
+    pub deletes: u64,
+    pub evictions: u64,
+    pub expired: u64,
+    pub expansions: u64,
+    pub oom_stalls: u64,
+}
+
+impl EngineMetrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            gets: self.gets.get(),
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            sets: self.sets.get(),
+            deletes: self.deletes.get(),
+            evictions: self.evictions.get(),
+            expired: self.expired.get(),
+            expansions: self.expansions.get(),
+            oom_stalls: self.oom_stalls.get(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Hit ratio over gets; 0 when no gets happened.
+    pub fn hit_ratio(&self) -> f64 {
+        if self.gets == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.gets as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn sharded_counter_sums_across_threads() {
+        let c = Arc::new(ShardedCounter::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn snapshot_and_hit_ratio() {
+        let m = EngineMetrics::default();
+        for _ in 0..3 {
+            m.gets.inc();
+        }
+        m.hits.add(2);
+        m.misses.inc();
+        let s = m.snapshot();
+        assert_eq!(s.gets, 3);
+        assert!((s.hit_ratio() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(MetricsSnapshot::default().hit_ratio(), 0.0);
+    }
+}

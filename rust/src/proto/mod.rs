@@ -1,0 +1,451 @@
+//! Memcached **text protocol**: streaming parser and response writer.
+//!
+//! FLeeC is a plug-in Memcached replacement, so the wire format is
+//! Memcached's verbatim: `get`/`gets`, the six storage commands, `cas`,
+//! `delete`, `incr`/`decr`, `touch`, `stats`, `flush_all`, `version`,
+//! `quit`, with `noreply` support. The parser is incremental: feed it a
+//! byte buffer, get back `(command, bytes_consumed)` or "need more".
+//!
+//! Parsing borrows from the input buffer (no per-command allocation on
+//! the hot path beyond the multi-key vector); the server copies only what
+//! the engine needs.
+
+use std::fmt::Write as _;
+
+use crate::cache::StoreOutcome;
+use crate::metrics::MetricsSnapshot;
+
+/// Storage-command flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreKind {
+    Set,
+    Add,
+    Replace,
+    Append,
+    Prepend,
+    Cas,
+}
+
+/// One parsed client command, borrowing key/data from the input buffer.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Command<'a> {
+    /// `get`/`gets` with one or more keys; `with_cas` distinguishes `gets`.
+    Get { keys: Vec<&'a [u8]>, with_cas: bool },
+    Store {
+        kind: StoreKind,
+        key: &'a [u8],
+        flags: u32,
+        exptime: u32,
+        data: &'a [u8],
+        cas: u64,
+        noreply: bool,
+    },
+    Delete { key: &'a [u8], noreply: bool },
+    Incr { key: &'a [u8], delta: u64, noreply: bool },
+    Decr { key: &'a [u8], delta: u64, noreply: bool },
+    Touch { key: &'a [u8], exptime: u32, noreply: bool },
+    Stats,
+    FlushAll { noreply: bool },
+    Version,
+    Verbosity { noreply: bool },
+    Quit,
+}
+
+/// Parser outcome.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Parsed<'a> {
+    /// A full command and the number of bytes it consumed.
+    Done(Command<'a>, usize),
+    /// Not enough bytes buffered yet.
+    Incomplete,
+    /// Malformed input: reply `CLIENT_ERROR` and consume the given bytes.
+    Error(&'static str, usize),
+}
+
+/// Find `\r\n` in `buf`, returning the index of `\r`.
+#[inline]
+fn find_crlf(buf: &[u8]) -> Option<usize> {
+    let mut start = 0;
+    while let Some(i) = buf[start..].iter().position(|&b| b == b'\r') {
+        let at = start + i;
+        if at + 1 < buf.len() {
+            if buf[at + 1] == b'\n' {
+                return Some(at);
+            }
+            start = at + 1;
+        } else {
+            return None;
+        }
+    }
+    None
+}
+
+fn parse_u32(tok: &[u8]) -> Option<u32> {
+    std::str::from_utf8(tok).ok()?.parse().ok()
+}
+
+fn parse_u64(tok: &[u8]) -> Option<u64> {
+    std::str::from_utf8(tok).ok()?.parse().ok()
+}
+
+/// Parse one command from the head of `buf`.
+pub fn parse(buf: &[u8]) -> Parsed<'_> {
+    let Some(line_end) = find_crlf(buf) else {
+        // Guard against unbounded garbage without a newline.
+        if buf.len() > 64 * 1024 {
+            return Parsed::Error("line too long", buf.len());
+        }
+        return Parsed::Incomplete;
+    };
+    let line = &buf[..line_end];
+    let consumed_line = line_end + 2;
+    let mut tokens = line.split(|&b| b == b' ').filter(|t| !t.is_empty());
+    let Some(cmd) = tokens.next() else {
+        return Parsed::Error("empty command", consumed_line);
+    };
+    match cmd {
+        b"get" | b"gets" => {
+            let keys: Vec<&[u8]> = tokens.collect();
+            if keys.is_empty() {
+                return Parsed::Error("get requires a key", consumed_line);
+            }
+            Parsed::Done(
+                Command::Get {
+                    keys,
+                    with_cas: cmd == b"gets",
+                },
+                consumed_line,
+            )
+        }
+        b"set" | b"add" | b"replace" | b"append" | b"prepend" | b"cas" => {
+            let kind = match cmd {
+                b"set" => StoreKind::Set,
+                b"add" => StoreKind::Add,
+                b"replace" => StoreKind::Replace,
+                b"append" => StoreKind::Append,
+                b"prepend" => StoreKind::Prepend,
+                _ => StoreKind::Cas,
+            };
+            let (Some(key), Some(flags), Some(exptime), Some(bytes)) =
+                (tokens.next(), tokens.next(), tokens.next(), tokens.next())
+            else {
+                return Parsed::Error("bad storage command", consumed_line);
+            };
+            let (Some(flags), Some(exptime), Some(nbytes)) =
+                (parse_u32(flags), parse_u32(exptime), parse_u64(bytes))
+            else {
+                return Parsed::Error("bad numeric field", consumed_line);
+            };
+            let mut cas = 0;
+            if kind == StoreKind::Cas {
+                let Some(tok) = tokens.next().and_then(parse_u64) else {
+                    return Parsed::Error("cas requires a token", consumed_line);
+                };
+                cas = tok;
+            }
+            let noreply = tokens.next() == Some(b"noreply" as &[u8]);
+            let nbytes = nbytes as usize;
+            let total = consumed_line + nbytes + 2;
+            if buf.len() < total {
+                return Parsed::Incomplete;
+            }
+            let data = &buf[consumed_line..consumed_line + nbytes];
+            if &buf[consumed_line + nbytes..total] != b"\r\n" {
+                return Parsed::Error("bad data chunk", total);
+            }
+            Parsed::Done(
+                Command::Store {
+                    kind,
+                    key,
+                    flags,
+                    exptime,
+                    data,
+                    cas,
+                    noreply,
+                },
+                total,
+            )
+        }
+        b"delete" => {
+            let Some(key) = tokens.next() else {
+                return Parsed::Error("delete requires a key", consumed_line);
+            };
+            let noreply = tokens.next() == Some(b"noreply" as &[u8]);
+            Parsed::Done(Command::Delete { key, noreply }, consumed_line)
+        }
+        b"incr" | b"decr" => {
+            let (Some(key), Some(delta)) = (tokens.next(), tokens.next()) else {
+                return Parsed::Error("incr/decr require key and value", consumed_line);
+            };
+            let Some(delta) = parse_u64(delta) else {
+                return Parsed::Error("invalid numeric delta argument", consumed_line);
+            };
+            let noreply = tokens.next() == Some(b"noreply" as &[u8]);
+            let c = if cmd == b"incr" {
+                Command::Incr { key, delta, noreply }
+            } else {
+                Command::Decr { key, delta, noreply }
+            };
+            Parsed::Done(c, consumed_line)
+        }
+        b"touch" => {
+            let (Some(key), Some(exptime)) = (tokens.next(), tokens.next()) else {
+                return Parsed::Error("touch requires key and exptime", consumed_line);
+            };
+            let Some(exptime) = parse_u32(exptime) else {
+                return Parsed::Error("bad exptime", consumed_line);
+            };
+            let noreply = tokens.next() == Some(b"noreply" as &[u8]);
+            Parsed::Done(Command::Touch { key, exptime, noreply }, consumed_line)
+        }
+        b"stats" => Parsed::Done(Command::Stats, consumed_line),
+        b"flush_all" => {
+            let noreply = tokens.any(|t| t == b"noreply");
+            Parsed::Done(Command::FlushAll { noreply }, consumed_line)
+        }
+        b"version" => Parsed::Done(Command::Version, consumed_line),
+        b"verbosity" => {
+            let noreply = tokens.any(|t| t == b"noreply");
+            Parsed::Done(Command::Verbosity { noreply }, consumed_line)
+        }
+        b"quit" => Parsed::Done(Command::Quit, consumed_line),
+        _ => Parsed::Error("unknown command", consumed_line),
+    }
+}
+
+/// Append a `VALUE` reply for one hit.
+pub fn write_value(out: &mut Vec<u8>, key: &[u8], flags: u32, data: &[u8], cas: Option<u64>) {
+    out.extend_from_slice(b"VALUE ");
+    out.extend_from_slice(key);
+    let mut header = String::with_capacity(24);
+    let _ = write!(header, " {} {}", flags, data.len());
+    if let Some(cas) = cas {
+        let _ = write!(header, " {}", cas);
+    }
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(data);
+    out.extend_from_slice(b"\r\n");
+}
+
+/// Append `END\r\n` (terminates a get).
+pub fn write_end(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"END\r\n");
+}
+
+/// Map a [`StoreOutcome`] to its wire reply.
+pub fn store_reply(outcome: StoreOutcome) -> &'static [u8] {
+    match outcome {
+        StoreOutcome::Stored => b"STORED\r\n",
+        StoreOutcome::NotStored => b"NOT_STORED\r\n",
+        StoreOutcome::Exists => b"EXISTS\r\n",
+        StoreOutcome::NotFound => b"NOT_FOUND\r\n",
+        StoreOutcome::TooLarge => b"SERVER_ERROR object too large for cache\r\n",
+        StoreOutcome::OutOfMemory => b"SERVER_ERROR out of memory storing object\r\n",
+    }
+}
+
+/// Render `stats` output (Memcached stat names where they exist).
+pub fn write_stats(
+    out: &mut Vec<u8>,
+    engine: &str,
+    snapshot: &MetricsSnapshot,
+    items: usize,
+    buckets: usize,
+    mem_used: usize,
+    mem_limit: usize,
+) {
+    let mut s = String::with_capacity(512);
+    let _ = write!(
+        s,
+        "STAT engine {engine}\r\n\
+         STAT curr_items {items}\r\n\
+         STAT hash_buckets {buckets}\r\n\
+         STAT bytes {mem_used}\r\n\
+         STAT limit_maxbytes {mem_limit}\r\n\
+         STAT cmd_get {}\r\n\
+         STAT get_hits {}\r\n\
+         STAT get_misses {}\r\n\
+         STAT cmd_set {}\r\n\
+         STAT delete_hits {}\r\n\
+         STAT evictions {}\r\n\
+         STAT expired_unfetched {}\r\n\
+         STAT hash_expansions {}\r\n\
+         STAT oom_stalls {}\r\n\
+         END\r\n",
+        snapshot.gets,
+        snapshot.hits,
+        snapshot.misses,
+        snapshot.sets,
+        snapshot.deletes,
+        snapshot.evictions,
+        snapshot.expired,
+        snapshot.expansions,
+        snapshot.oom_stalls,
+    );
+    out.extend_from_slice(s.as_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_get_and_gets() {
+        match parse(b"get foo bar\r\n") {
+            Parsed::Done(Command::Get { keys, with_cas }, n) => {
+                assert_eq!(keys, vec![b"foo" as &[u8], b"bar"]);
+                assert!(!with_cas);
+                assert_eq!(n, 13);
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(b"gets foo\r\n") {
+            Parsed::Done(Command::Get { with_cas, .. }, _) => assert!(with_cas),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_set_with_payload() {
+        let buf = b"set key1 7 60 5\r\nhello\r\nget x\r\n";
+        match parse(buf) {
+            Parsed::Done(
+                Command::Store {
+                    kind,
+                    key,
+                    flags,
+                    exptime,
+                    data,
+                    noreply,
+                    ..
+                },
+                n,
+            ) => {
+                assert_eq!(kind, StoreKind::Set);
+                assert_eq!(key, b"key1");
+                assert_eq!((flags, exptime), (7, 60));
+                assert_eq!(data, b"hello");
+                assert!(!noreply);
+                assert_eq!(&buf[n..], b"get x\r\n", "consumed exactly one command");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn set_payload_split_across_reads_is_incomplete() {
+        assert_eq!(parse(b"set k 0 0 5\r\nhel"), Parsed::Incomplete);
+        assert_eq!(parse(b"set k 0 0 5\r\nhello\r"), Parsed::Incomplete);
+        assert!(matches!(parse(b"set k 0 0 5\r\nhello\r\n"), Parsed::Done(..)));
+    }
+
+    #[test]
+    fn parses_cas_token_and_noreply() {
+        match parse(b"cas k 0 0 2 99 noreply\r\nhi\r\n") {
+            Parsed::Done(Command::Store { kind, cas, noreply, .. }, _) => {
+                assert_eq!(kind, StoreKind::Cas);
+                assert_eq!(cas, 99);
+                assert!(noreply);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_management_commands() {
+        assert!(matches!(parse(b"stats\r\n"), Parsed::Done(Command::Stats, 7)));
+        assert!(matches!(
+            parse(b"flush_all\r\n"),
+            Parsed::Done(Command::FlushAll { noreply: false }, _)
+        ));
+        assert!(matches!(parse(b"version\r\n"), Parsed::Done(Command::Version, _)));
+        assert!(matches!(parse(b"quit\r\n"), Parsed::Done(Command::Quit, _)));
+        assert!(matches!(
+            parse(b"delete k noreply\r\n"),
+            Parsed::Done(Command::Delete { noreply: true, .. }, _)
+        ));
+        assert!(matches!(
+            parse(b"incr k 5\r\n"),
+            Parsed::Done(Command::Incr { delta: 5, .. }, _)
+        ));
+        assert!(matches!(
+            parse(b"touch k 30\r\n"),
+            Parsed::Done(Command::Touch { exptime: 30, .. }, _)
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(matches!(parse(b"bogus cmd\r\n"), Parsed::Error(..)));
+        assert!(matches!(parse(b"get\r\n"), Parsed::Error(..)));
+        assert!(matches!(parse(b"set k x 0 5\r\n"), Parsed::Error(..)));
+        assert!(matches!(parse(b"incr k notanum\r\n"), Parsed::Error(..)));
+        // Bad terminator after payload.
+        assert!(matches!(parse(b"set k 0 0 2\r\nhixx"), Parsed::Error(..)));
+    }
+
+    #[test]
+    fn incomplete_line_waits_for_more() {
+        assert_eq!(parse(b"get fo"), Parsed::Incomplete);
+        assert_eq!(parse(b""), Parsed::Incomplete);
+    }
+
+    #[test]
+    fn value_writer_formats_like_memcached() {
+        let mut out = Vec::new();
+        write_value(&mut out, b"k", 7, b"abc", None);
+        write_end(&mut out);
+        assert_eq!(out, b"VALUE k 7 3\r\nabc\r\nEND\r\n");
+        out.clear();
+        write_value(&mut out, b"k", 0, b"", Some(42));
+        assert_eq!(out, b"VALUE k 0 0 42\r\n\r\n");
+    }
+
+    #[test]
+    fn parse_serialize_roundtrip_property() {
+        // parse(render(store)) == store for random field values.
+        crate::testutil::run_prop("proto-roundtrip", 0xBEEF, |rng| {
+            let key: Vec<u8> = (0..(1 + rng.next_below(32)))
+                .map(|_| b'a' + (rng.next_below(26) as u8))
+                .collect();
+            let data: Vec<u8> = (0..rng.next_below(64))
+                .map(|_| rng.next_u64() as u8)
+                .collect();
+            let flags = rng.next_u64() as u32;
+            let exptime = (rng.next_u64() % 1000) as u32;
+            let mut wire = Vec::new();
+            wire.extend_from_slice(
+                format!(
+                    "set {} {} {} {}\r\n",
+                    String::from_utf8_lossy(&key),
+                    flags,
+                    exptime,
+                    data.len()
+                )
+                .as_bytes(),
+            );
+            wire.extend_from_slice(&data);
+            wire.extend_from_slice(b"\r\n");
+            match parse(&wire) {
+                Parsed::Done(
+                    Command::Store {
+                        key: k,
+                        flags: f,
+                        exptime: e,
+                        data: d,
+                        ..
+                    },
+                    n,
+                ) => {
+                    assert_eq!(k, key.as_slice());
+                    assert_eq!(f, flags);
+                    assert_eq!(e, exptime);
+                    assert_eq!(d, data.as_slice());
+                    assert_eq!(n, wire.len());
+                }
+                other => panic!("roundtrip failed: {other:?}"),
+            }
+        });
+    }
+}

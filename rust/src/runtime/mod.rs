@@ -1,0 +1,214 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once at build time,
+//! lowering the L2 JAX functions (which call the L1 Pallas kernels) to
+//! **HLO text** in `artifacts/`. This module loads that text with the
+//! `xla` crate (`HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile`) and exposes typed wrappers:
+//!
+//! * [`PlannerModule`] — the eviction planner: CLOCK snapshot + memory
+//!   pressure → (decay, sweep batch, eviction target, histogram).
+//! * [`HitRatioModule`] — the analytic hit-ratio model (Che approximation
+//!   for LRU, fixed-point for FIFO/CLOCK) used by the hit-ratio bench to
+//!   print model-vs-measured columns.
+//!
+//! Python never runs at serve time: the artifacts are self-contained and
+//! executed on the PJRT CPU client from the coordinator thread — off the
+//! request path by construction.
+
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+/// Fixed CLOCK-snapshot length the planner artifact was lowered for;
+/// [`resample_clocks`] maps any live table size onto it.
+pub const PLANNER_SNAPSHOT: usize = 4096;
+
+/// Number of histogram bins the planner reports (CLOCK values 0..=7).
+pub const PLANNER_BINS: usize = 8;
+
+/// Shared PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn new() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    /// Backend platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-UTF8 artifact path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}
+
+/// Default artifacts directory (`$FLEEC_ARTIFACTS` overrides).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("FLEEC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Planner decision decoded from the artifact's outputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannerDecision {
+    /// CLOCK decrement per sweep step (≥1; 2 under high pressure with a
+    /// warm table — the multi-bit CLOCK drains faster).
+    pub decay: u8,
+    /// Items to evict per allocation-pressure round.
+    pub batch: u32,
+    /// Fraction of buckets currently evictable (CLOCK == 0).
+    pub evictable_frac: f32,
+    /// Histogram of CLOCK values over the snapshot.
+    pub histogram: [u32; PLANNER_BINS],
+}
+
+/// The compiled eviction planner.
+pub struct PlannerModule {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PlannerModule {
+    /// Load `planner.hlo.txt` from `dir`.
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<PlannerModule> {
+        Ok(PlannerModule {
+            exe: rt.load(&dir.join("planner.hlo.txt"))?,
+        })
+    }
+
+    /// Run the planner on a fixed-size snapshot.
+    /// `pressure` ∈ [0,1]: fraction of recent allocations that stalled.
+    pub fn run(&self, clocks: &[i32; PLANNER_SNAPSHOT], pressure: f32) -> Result<PlannerDecision> {
+        let clocks_lit = xla::Literal::vec1(&clocks[..]);
+        let pressure_lit = xla::Literal::scalar(pressure);
+        let result = self.exe.execute::<xla::Literal>(&[clocks_lit, pressure_lit])?[0][0]
+            .to_literal_sync()?;
+        let outputs = result.to_tuple()?;
+        anyhow::ensure!(outputs.len() == 4, "planner must emit 4 outputs");
+        let decay = outputs[0].to_vec::<i32>()?[0];
+        let batch = outputs[1].to_vec::<i32>()?[0];
+        let evictable = outputs[2].to_vec::<f32>()?[0];
+        let hist_raw = outputs[3].to_vec::<i32>()?;
+        let mut histogram = [0u32; PLANNER_BINS];
+        for (dst, src) in histogram.iter_mut().zip(hist_raw.iter()) {
+            *dst = (*src).max(0) as u32;
+        }
+        Ok(PlannerDecision {
+            decay: decay.clamp(1, 255) as u8,
+            batch: batch.clamp(1, 1 << 20) as u32,
+            evictable_frac: evictable,
+            histogram,
+        })
+    }
+}
+
+/// The compiled analytic hit-ratio model.
+pub struct HitRatioModule {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Model output: expected hit ratios under each policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HitRatioEstimate {
+    /// Che's approximation for strict LRU.
+    pub lru: f32,
+    /// Fixed-point approximation for FIFO-like policies (CLOCK's lower
+    /// bound; CLOCK with use-bits lands between `fifo` and `lru`).
+    pub fifo: f32,
+}
+
+impl HitRatioModule {
+    /// Load `hit_ratio.hlo.txt` from `dir`. The artifact is lowered for a
+    /// fixed catalog size (see `python/compile/model.py`).
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<HitRatioModule> {
+        Ok(HitRatioModule {
+            exe: rt.load(&dir.join("hit_ratio.hlo.txt"))?,
+        })
+    }
+
+    /// Estimate hit ratios for zipf(`alpha`) over the lowered catalog with
+    /// a cache of `capacity_items`.
+    pub fn run(&self, alpha: f32, capacity_items: f32) -> Result<HitRatioEstimate> {
+        let a = xla::Literal::scalar(alpha);
+        let c = xla::Literal::scalar(capacity_items);
+        let result = self.exe.execute::<xla::Literal>(&[a, c])?[0][0].to_literal_sync()?;
+        let outputs = result.to_tuple()?;
+        anyhow::ensure!(outputs.len() == 2, "hit-ratio model must emit 2 outputs");
+        Ok(HitRatioEstimate {
+            lru: outputs[0].to_vec::<f32>()?[0],
+            fifo: outputs[1].to_vec::<f32>()?[0],
+        })
+    }
+}
+
+/// Resample a live CLOCK snapshot (any length) onto the planner's fixed
+/// input size by strided averaging (length ≥ snapshot) or tiling
+/// (length < snapshot).
+pub fn resample_clocks(live: &[u8]) -> [i32; PLANNER_SNAPSHOT] {
+    let mut out = [0i32; PLANNER_SNAPSHOT];
+    if live.is_empty() {
+        return out;
+    }
+    if live.len() >= PLANNER_SNAPSHOT {
+        // Strided pick: preserves the distribution the histogram needs.
+        let stride = live.len() as f64 / PLANNER_SNAPSHOT as f64;
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = live[(i as f64 * stride) as usize % live.len()] as i32;
+        }
+    } else {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = live[i % live.len()] as i32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resample_preserves_distribution_shape() {
+        // Half zeros, half threes.
+        let live: Vec<u8> = (0..10_000).map(|i| if i % 2 == 0 { 0 } else { 3 }).collect();
+        let sampled = resample_clocks(&live);
+        let zeros = sampled.iter().filter(|&&v| v == 0).count();
+        let threes = sampled.iter().filter(|&&v| v == 3).count();
+        assert_eq!(zeros + threes, PLANNER_SNAPSHOT);
+        let frac = zeros as f64 / PLANNER_SNAPSHOT as f64;
+        assert!((frac - 0.5).abs() < 0.05, "zero fraction {frac}");
+    }
+
+    #[test]
+    fn resample_small_input_tiles() {
+        let live = [2u8, 0, 1];
+        let sampled = resample_clocks(&live);
+        assert_eq!(sampled[0], 2);
+        assert_eq!(sampled[1], 0);
+        assert_eq!(sampled[2], 1);
+        assert_eq!(sampled[3], 2);
+    }
+
+    #[test]
+    fn resample_empty_is_zeroed() {
+        let sampled = resample_clocks(&[]);
+        assert!(sampled.iter().all(|&v| v == 0));
+    }
+
+    // Artifact-dependent tests live in rust/tests/runtime_artifacts.rs
+    // (they require `make artifacts` to have run).
+}

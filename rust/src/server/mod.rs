@@ -1,0 +1,395 @@
+//! TCP server: the Memcached-compatible serving front-end.
+//!
+//! Thread-per-connection over `std::net` — the same threading model as
+//! Memcached itself (one worker per connection via libevent there, native
+//! threads here; the offline crate set has no async runtime, and the
+//! paper's contention story lives in the *shared data structures*, which
+//! every connection thread hits concurrently).
+//!
+//! The server is engine-agnostic: any [`Cache`] implementation plugs in,
+//! so `fleec serve --engine memcached|memclock|fleec` serves identical
+//! wire behavior with different concurrency cores.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cache::Cache;
+use crate::proto::{self, Command, Parsed, StoreKind};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: SocketAddr,
+    /// Disable Nagle on accepted sockets (latency experiments need it).
+    pub nodelay: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:11211".parse().unwrap(),
+            nodelay: true,
+        }
+    }
+}
+
+/// A running server; dropping it (or calling [`Server::shutdown`]) stops
+/// the accept loop and joins every connection thread.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    active_conns: Arc<AtomicUsize>,
+}
+
+impl Server {
+    /// Bind and start serving `cache` in background threads.
+    pub fn start(config: ServerConfig, cache: Arc<dyn Cache>) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(config.addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let active_conns = Arc::new(AtomicUsize::new(0));
+        let accept_stop = Arc::clone(&stop);
+        let accept_active = Arc::clone(&active_conns);
+        let nodelay = config.nodelay;
+        let accept_thread = std::thread::Builder::new()
+            .name("fleec-accept".into())
+            .spawn(move || {
+                let mut conn_threads = Vec::new();
+                while !accept_stop.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let _ = stream.set_nodelay(nodelay);
+                            let _ = stream.set_nonblocking(false);
+                            let cache = Arc::clone(&cache);
+                            let stop = Arc::clone(&accept_stop);
+                            let active = Arc::clone(&accept_active);
+                            active.fetch_add(1, Ordering::AcqRel);
+                            conn_threads.push(
+                                std::thread::Builder::new()
+                                    .name("fleec-conn".into())
+                                    .spawn(move || {
+                                        let _ = handle_connection(stream, cache, stop);
+                                        active.fetch_sub(1, Ordering::AcqRel);
+                                    })
+                                    .expect("spawn connection thread"),
+                            );
+                            // Opportunistically reap finished threads.
+                            conn_threads.retain(|h| !h.is_finished());
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for h in conn_threads {
+                    let _ = h.join();
+                }
+            })?;
+        Ok(Server {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+            active_conns,
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Number of currently-open connections.
+    pub fn active_connections(&self) -> usize {
+        self.active_conns.load(Ordering::Acquire)
+    }
+
+    /// Stop accepting, close the loop, join threads.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Read-parse-dispatch loop for one connection.
+fn handle_connection(
+    mut stream: TcpStream,
+    cache: Arc<dyn Cache>,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut inbuf: Vec<u8> = Vec::with_capacity(16 * 1024);
+    let mut outbuf: Vec<u8> = Vec::with_capacity(16 * 1024);
+    let mut chunk = [0u8; 16 * 1024];
+    'conn: loop {
+        if stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        // Drain as many complete commands as the buffer holds.
+        let mut consumed_total = 0;
+        loop {
+            match proto::parse(&inbuf[consumed_total..]) {
+                Parsed::Done(cmd, n) => {
+                    consumed_total += n;
+                    let quit = dispatch(&cmd, cache.as_ref(), &mut outbuf);
+                    if quit {
+                        let _ = stream.write_all(&outbuf);
+                        return Ok(());
+                    }
+                }
+                Parsed::Error(msg, n) => {
+                    consumed_total += n;
+                    outbuf.extend_from_slice(b"CLIENT_ERROR ");
+                    outbuf.extend_from_slice(msg.as_bytes());
+                    outbuf.extend_from_slice(b"\r\n");
+                }
+                Parsed::Incomplete => break,
+            }
+        }
+        if consumed_total > 0 {
+            inbuf.drain(..consumed_total);
+        }
+        if !outbuf.is_empty() {
+            stream.write_all(&outbuf)?;
+            outbuf.clear();
+        }
+        // Refill.
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(()), // peer closed
+            Ok(n) => inbuf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue 'conn;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Execute one command against the engine; returns `true` on `quit`.
+fn dispatch(cmd: &Command<'_>, cache: &dyn Cache, out: &mut Vec<u8>) -> bool {
+    match cmd {
+        Command::Get { keys, with_cas } => {
+            for key in keys {
+                if let Some(r) = cache.get(key) {
+                    proto::write_value(out, key, r.flags, &r.data, with_cas.then_some(r.cas));
+                }
+            }
+            proto::write_end(out);
+        }
+        Command::Store {
+            kind,
+            key,
+            flags,
+            exptime,
+            data,
+            cas,
+            noreply,
+        } => {
+            let outcome = match kind {
+                StoreKind::Set => cache.set(key, data, *flags, *exptime),
+                StoreKind::Add => cache.add(key, data, *flags, *exptime),
+                StoreKind::Replace => cache.replace(key, data, *flags, *exptime),
+                StoreKind::Append => cache.append(key, data),
+                StoreKind::Prepend => cache.prepend(key, data),
+                StoreKind::Cas => cache.cas(key, data, *flags, *exptime, *cas),
+            };
+            if !noreply {
+                out.extend_from_slice(proto::store_reply(outcome));
+            }
+        }
+        Command::Delete { key, noreply } => {
+            let deleted = cache.delete(key);
+            if !noreply {
+                out.extend_from_slice(if deleted { b"DELETED\r\n" } else { b"NOT_FOUND\r\n" });
+            }
+        }
+        Command::Incr { key, delta, noreply } => {
+            let r = cache.incr(key, *delta);
+            if !noreply {
+                write_counter_reply(out, r);
+            }
+        }
+        Command::Decr { key, delta, noreply } => {
+            let r = cache.decr(key, *delta);
+            if !noreply {
+                write_counter_reply(out, r);
+            }
+        }
+        Command::Touch { key, exptime, noreply } => {
+            let ok = cache.touch(key, *exptime);
+            if !noreply {
+                out.extend_from_slice(if ok { b"TOUCHED\r\n" } else { b"NOT_FOUND\r\n" });
+            }
+        }
+        Command::Stats => {
+            let snap = cache.metrics().snapshot();
+            proto::write_stats(
+                out,
+                cache.engine_name(),
+                &snap,
+                cache.item_count(),
+                cache.bucket_count(),
+                cache.mem_used(),
+                0,
+            );
+        }
+        Command::FlushAll { noreply } => {
+            cache.flush_all();
+            if !noreply {
+                out.extend_from_slice(b"OK\r\n");
+            }
+        }
+        Command::Version => out.extend_from_slice(b"VERSION fleec-0.1.0\r\n"),
+        Command::Verbosity { noreply } => {
+            if !noreply {
+                out.extend_from_slice(b"OK\r\n");
+            }
+        }
+        Command::Quit => return true,
+    }
+    false
+}
+
+fn write_counter_reply(out: &mut Vec<u8>, r: Option<u64>) {
+    match r {
+        Some(v) => {
+            out.extend_from_slice(v.to_string().as_bytes());
+            out.extend_from_slice(b"\r\n");
+        }
+        None => out.extend_from_slice(b"NOT_FOUND\r\n"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{build_engine, CacheConfig};
+
+    fn start_test_server() -> (Server, SocketAddr) {
+        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+        let server = Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".parse().unwrap(),
+                nodelay: true,
+            },
+            cache,
+        )
+        .unwrap();
+        let addr = server.addr();
+        (server, addr)
+    }
+
+    fn roundtrip(stream: &mut TcpStream, send: &[u8], expect: &[u8]) {
+        stream.write_all(send).unwrap();
+        let mut got = vec![0u8; expect.len()];
+        stream.read_exact(&mut got).unwrap();
+        assert_eq!(
+            got,
+            expect,
+            "sent {:?}, expected {:?}, got {:?}",
+            String::from_utf8_lossy(send),
+            String::from_utf8_lossy(expect),
+            String::from_utf8_lossy(&got)
+        );
+    }
+
+    #[test]
+    fn wire_level_session() {
+        let (_server, addr) = start_test_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        roundtrip(&mut s, b"set foo 7 0 3\r\nbar\r\n", b"STORED\r\n");
+        roundtrip(&mut s, b"get foo\r\n", b"VALUE foo 7 3\r\nbar\r\nEND\r\n");
+        roundtrip(&mut s, b"get nope\r\n", b"END\r\n");
+        roundtrip(&mut s, b"add foo 0 0 1\r\nx\r\n", b"NOT_STORED\r\n");
+        roundtrip(&mut s, b"append foo 0 0 3\r\nbaz\r\n", b"STORED\r\n");
+        roundtrip(&mut s, b"get foo\r\n", b"VALUE foo 7 6\r\nbarbaz\r\nEND\r\n");
+        roundtrip(&mut s, b"delete foo\r\n", b"DELETED\r\n");
+        roundtrip(&mut s, b"delete foo\r\n", b"NOT_FOUND\r\n");
+        roundtrip(&mut s, b"set n 0 0 1\r\n5\r\n", b"STORED\r\n");
+        roundtrip(&mut s, b"incr n 10\r\n", b"15\r\n");
+        roundtrip(&mut s, b"decr n 20\r\n", b"0\r\n");
+        roundtrip(&mut s, b"version\r\n", b"VERSION fleec-0.1.0\r\n");
+        s.write_all(b"quit\r\n").unwrap();
+    }
+
+    #[test]
+    fn noreply_suppresses_responses() {
+        let (_server, addr) = start_test_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        // Two noreply sets then a get: the first bytes back must be VALUE.
+        s.write_all(b"set a 0 0 1 noreply\r\nx\r\nset b 0 0 1 noreply\r\ny\r\nget b\r\n")
+            .unwrap();
+        let mut buf = [0u8; 64];
+        let n = s.read(&mut buf).unwrap();
+        assert!(
+            buf[..n].starts_with(b"VALUE b 0 1\r\ny\r\nEND\r\n"),
+            "got {:?}",
+            String::from_utf8_lossy(&buf[..n])
+        );
+    }
+
+    #[test]
+    fn pipelined_commands_in_one_write() {
+        let (_server, addr) = start_test_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"set p 0 0 2\r\nhi\r\nget p\r\nstats\r\n").unwrap();
+        let mut acc = Vec::new();
+        let mut buf = [0u8; 4096];
+        while !acc.windows(5).any(|w| w == b"END\r\n")
+            || String::from_utf8_lossy(&acc).matches("END\r\n").count() < 2
+        {
+            let n = s.read(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            acc.extend_from_slice(&buf[..n]);
+        }
+        let text = String::from_utf8_lossy(&acc);
+        assert!(text.starts_with("STORED\r\nVALUE p 0 2\r\nhi\r\nEND\r\n"), "{text}");
+        assert!(text.contains("STAT engine fleec"), "{text}");
+    }
+
+    #[test]
+    fn malformed_command_gets_client_error() {
+        let (_server, addr) = start_test_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"frobnicate\r\nversion\r\n").unwrap();
+        let mut buf = [0u8; 256];
+        let mut acc = Vec::new();
+        while !acc.windows(2).any(|w| w == b"\r\n") || acc.len() < 20 {
+            let n = s.read(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            acc.extend_from_slice(&buf[..n]);
+        }
+        let text = String::from_utf8_lossy(&acc);
+        assert!(text.starts_with("CLIENT_ERROR"), "{text}");
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let (mut server, addr) = start_test_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        roundtrip(&mut s, b"set x 0 0 1\r\nv\r\n", b"STORED\r\n");
+        server.shutdown();
+        // Post-shutdown connects must fail or be reset quickly.
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}

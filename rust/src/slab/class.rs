@@ -1,0 +1,189 @@
+//! One slab size class: a lock-free free list plus a CAS bump region.
+//!
+//! The bump region is a single packed word `(addr48 << 16) | count16` so
+//! page installation and chunk claiming are both single CASes — two
+//! separate `bump`/`end` words could be read torn across an install and
+//! hand out memory past a page boundary.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::lockfree::TaggedStack;
+
+const COUNT_BITS: u32 = 16;
+const COUNT_MASK: usize = (1 << COUNT_BITS) - 1;
+
+#[inline]
+fn pack(addr: usize, count: usize) -> usize {
+    debug_assert!(addr < (1usize << 48), "address exceeds 48 bits");
+    debug_assert!(count <= COUNT_MASK, "chunk count exceeds 16 bits");
+    (addr << COUNT_BITS) | count
+}
+
+#[inline]
+fn unpack(word: usize) -> (usize, usize) {
+    (word >> COUNT_BITS, word & COUNT_MASK)
+}
+
+/// Statistics for one size class.
+#[derive(Debug, Clone, Copy)]
+pub struct SizeClassStats {
+    pub chunk_size: usize,
+    /// Chunks handed out and not yet freed.
+    pub live_chunks: usize,
+    /// Total chunks ever carved from pages.
+    pub total_chunks: usize,
+}
+
+/// A size class. `region` is the packed (next-chunk address, chunks left)
+/// of the most recently installed page; exhausted pages live on only
+/// through the free list.
+pub struct SizeClass {
+    chunk_size: usize,
+    free: TaggedStack,
+    region: AtomicUsize,
+    live: AtomicUsize,
+    total: AtomicUsize,
+}
+
+impl SizeClass {
+    pub fn new(chunk_size: usize) -> Self {
+        SizeClass {
+            chunk_size,
+            free: TaggedStack::new(),
+            region: AtomicUsize::new(0),
+            live: AtomicUsize::new(0),
+            total: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    /// Try to allocate from the free list, then the bump region. `None`
+    /// means the caller must install a new page (or report pressure).
+    pub fn try_alloc(&self) -> Option<*mut u8> {
+        // Free list first: reuse keeps the working set dense.
+        if let Some(ptr) = unsafe { self.free.pop() } {
+            self.live.fetch_add(1, Ordering::Relaxed);
+            return Some(ptr);
+        }
+        let mut word = self.region.load(Ordering::Acquire);
+        loop {
+            let (addr, count) = unpack(word);
+            if count == 0 {
+                return None;
+            }
+            match self.region.compare_exchange_weak(
+                word,
+                pack(addr + self.chunk_size, count - 1),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    self.live.fetch_add(1, Ordering::Relaxed);
+                    self.total.fetch_add(1, Ordering::Relaxed);
+                    return Some(addr as *mut u8);
+                }
+                Err(cur) => word = cur,
+            }
+        }
+    }
+
+    /// Install a fresh page as the bump region (single atomic publish).
+    /// The remainder of any previous region (< one chunk) is abandoned —
+    /// the same slack Memcached accepts. Callers serialize installs (the
+    /// slab's page mutex), so no region is ever overwritten while nonempty.
+    pub fn install_page(&self, page: *mut u8, page_size: usize) {
+        // Clamp to the packed width (loses at most one chunk of a
+        // pathological 16-byte/1-MiB configuration).
+        let count = (page_size / self.chunk_size).min(COUNT_MASK);
+        self.region
+            .store(pack(page as usize, count), Ordering::Release);
+    }
+
+    /// Return a chunk to the free list.
+    ///
+    /// # Safety
+    /// `ptr` must be an unreferenced chunk of this class.
+    pub unsafe fn free(&self, ptr: *mut u8) {
+        self.live.fetch_sub(1, Ordering::Relaxed);
+        self.free.push(ptr);
+    }
+
+    pub fn stats(&self) -> SizeClassStats {
+        SizeClassStats {
+            chunk_size: self.chunk_size,
+            live_chunks: self.live.load(Ordering::Relaxed),
+            total_chunks: self.total.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_allocates_sequential_chunks() {
+        let sc = SizeClass::new(64);
+        assert!(sc.try_alloc().is_none(), "no page installed yet");
+        let mut page = vec![0u8; 4096];
+        sc.install_page(page.as_mut_ptr(), 4096);
+        let a = sc.try_alloc().unwrap() as usize;
+        let b = sc.try_alloc().unwrap() as usize;
+        assert_eq!(b - a, 64);
+        let stats = sc.stats();
+        assert_eq!(stats.live_chunks, 2);
+        assert_eq!(stats.total_chunks, 2);
+    }
+
+    #[test]
+    fn page_exhaustion_is_reported() {
+        let sc = SizeClass::new(1024);
+        let mut page = vec![0u8; 2048];
+        sc.install_page(page.as_mut_ptr(), 2048);
+        assert!(sc.try_alloc().is_some());
+        assert!(sc.try_alloc().is_some());
+        assert!(sc.try_alloc().is_none());
+    }
+
+    #[test]
+    fn free_list_has_priority_over_bump() {
+        let sc = SizeClass::new(128);
+        let mut page = vec![0u8; 1024];
+        sc.install_page(page.as_mut_ptr(), 1024);
+        let a = sc.try_alloc().unwrap();
+        unsafe { sc.free(a) };
+        assert_eq!(sc.stats().live_chunks, 0);
+        let b = sc.try_alloc().unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn concurrent_bump_claims_are_disjoint() {
+        use std::collections::HashSet;
+        use std::sync::Arc;
+        let sc = Arc::new(SizeClass::new(64));
+        let mut page = vec![0u8; 64 * 1024];
+        sc.install_page(page.as_mut_ptr(), 64 * 1024);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let sc = Arc::clone(&sc);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(p) = sc.try_alloc() {
+                        got.push(p as usize);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        assert_eq!(all.len(), 1024);
+        assert_eq!(all.iter().collect::<HashSet<_>>().len(), 1024);
+    }
+}

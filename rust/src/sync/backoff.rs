@@ -1,0 +1,73 @@
+//! Bounded exponential backoff for CAS retry loops.
+//!
+//! On the single-core CI host a failed CAS means another thread holds the
+//! cache line *and* the core, so yielding early matters more than spinning;
+//! the backoff therefore escalates from `spin_loop` hints to
+//! `thread::yield_now` after a few rounds. The thresholds follow
+//! crossbeam's well-tested constants.
+
+use std::hint;
+use std::thread;
+
+const SPIN_LIMIT: u32 = 6;
+const YIELD_LIMIT: u32 = 10;
+
+/// Exponential backoff helper. Create one per retry loop.
+#[derive(Debug, Default)]
+pub struct Backoff {
+    step: u32,
+}
+
+impl Backoff {
+    /// A fresh backoff with zero accumulated delay.
+    #[inline]
+    pub fn new() -> Self {
+        Backoff { step: 0 }
+    }
+
+    /// Back off after a failed CAS: spin with increasing intensity, then
+    /// start yielding the core once contention looks persistent.
+    #[inline]
+    pub fn spin(&mut self) {
+        if self.step <= SPIN_LIMIT {
+            for _ in 0..(1u32 << self.step) {
+                hint::spin_loop();
+            }
+        } else {
+            thread::yield_now();
+        }
+        if self.step <= YIELD_LIMIT {
+            self.step += 1;
+        }
+    }
+
+    /// Whether the loop has been contended long enough that callers doing
+    /// optional work (e.g. helping expansion) should just do it.
+    #[inline]
+    pub fn is_completed(&self) -> bool {
+        self.step > YIELD_LIMIT
+    }
+
+    /// Reset after a successful step so unrelated retries start cheap.
+    #[inline]
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escalates_and_reports_completion() {
+        let mut b = Backoff::new();
+        assert!(!b.is_completed());
+        for _ in 0..=YIELD_LIMIT {
+            b.spin();
+        }
+        assert!(b.is_completed());
+        b.reset();
+        assert!(!b.is_completed());
+    }
+}

@@ -1,0 +1,17 @@
+//! Low-level concurrency utilities shared by every lock-free structure.
+//!
+//! Nothing here is FLeeC-specific: [`tagged`] packs mark/tag bits into
+//! pointer-sized atomic words (the representation both the Harris list and
+//! the FLeeC value-state word use), [`backoff`] is a bounded exponential
+//! spin backoff for CAS retry loops, and [`rng`] provides the small fast
+//! PRNGs (SplitMix64 / xoshiro256**) used by the workload generator, the
+//! property-test harness and randomized probe points — the offline crate
+//! set has no `rand`, so these are implemented here.
+
+pub mod backoff;
+pub mod rng;
+pub mod tagged;
+
+pub use backoff::Backoff;
+pub use rng::{SplitMix64, Xoshiro256};
+pub use tagged::{untagged, with_tag, tag_of, TAG_MASK};

@@ -1,0 +1,63 @@
+//! Tag-bit packing for pointer-sized atomic words.
+//!
+//! All nodes handled by the lock-free structures are allocated with at
+//! least 8-byte alignment, leaving the low 3 bits of every pointer free.
+//! The Harris list uses bit 0 as the *logical deletion* mark; the FLeeC
+//! hash table additionally uses bits 0–1 of its *value-state* word to
+//! distinguish `LIVE` / `TOMBSTONE` / `MOVED` states and bit 0 of a
+//! *bucket head* word as the `FROZEN` mark during non-blocking expansion.
+//!
+//! Keeping the helpers free-standing (rather than a wrapper type) lets the
+//! data-structure code spell out exactly which bit means what at each use
+//! site, which is where lock-free bugs hide.
+
+/// Mask covering the tag bits available in an aligned pointer.
+pub const TAG_MASK: usize = 0b111;
+
+/// Strip all tag bits, leaving the raw pointer value.
+#[inline(always)]
+pub fn untagged(word: usize) -> usize {
+    word & !TAG_MASK
+}
+
+/// Combine a raw pointer value with a tag (must fit in [`TAG_MASK`]).
+#[inline(always)]
+pub fn with_tag(ptr: usize, tag: usize) -> usize {
+    debug_assert_eq!(ptr & TAG_MASK, 0, "pointer not aligned for tagging");
+    debug_assert_eq!(tag & !TAG_MASK, 0, "tag does not fit in the low bits");
+    ptr | tag
+}
+
+/// Extract the tag bits of a packed word.
+#[inline(always)]
+pub fn tag_of(word: usize) -> usize {
+    word & TAG_MASK
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_tag_and_pointer() {
+        let fake_ptr = 0x7f00_dead_b000usize; // 8-aligned
+        for tag in 0..=TAG_MASK {
+            let w = with_tag(fake_ptr, tag);
+            assert_eq!(untagged(w), fake_ptr);
+            assert_eq!(tag_of(w), tag);
+        }
+    }
+
+    #[test]
+    fn untagged_of_null_is_null() {
+        assert_eq!(untagged(0), 0);
+        assert_eq!(tag_of(0), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn tagging_unaligned_pointer_panics_in_debug() {
+        let _ = with_tag(0x1001, 1);
+    }
+}

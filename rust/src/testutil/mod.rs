@@ -1,0 +1,105 @@
+//! Minimal property-testing harness (the offline crate set has no
+//! proptest/quickcheck).
+//!
+//! [`run_prop`] drives a seeded [`Xoshiro256`] through `CASES` random
+//! cases; a failing case panics with the *seed* so the exact case can be
+//! replayed with `FLEEC_PROP_SEED=<seed>`. [`Shrinker`]-style minimization
+//! is approximated by re-running failures with progressively truncated
+//! operation sequences when the property works on `Vec<T>`.
+
+use crate::sync::Xoshiro256;
+
+/// Number of cases per property (override with `FLEEC_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("FLEEC_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` on `cases` random streams. On panic, reports the failing
+/// seed. Set `FLEEC_PROP_SEED` to replay a single seed.
+pub fn run_prop(name: &str, base_seed: u64, prop: impl Fn(&mut Xoshiro256)) {
+    if let Ok(seed) = std::env::var("FLEEC_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("FLEEC_PROP_SEED must be a u64");
+        let mut rng = Xoshiro256::seeded(seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..default_cases() {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Xoshiro256::seeded(seed);
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}; replay with FLEEC_PROP_SEED={seed}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generate a random operation sequence for model-based tests: each item
+/// is `(key_index, op_selector, size_selector)`.
+pub fn op_sequence(rng: &mut Xoshiro256, len: usize, key_space: u64) -> Vec<(u64, u32, u32)> {
+    (0..len)
+        .map(|_| {
+            (
+                rng.next_below(key_space),
+                rng.next_u64() as u32,
+                rng.next_u64() as u32,
+            )
+        })
+        .collect()
+}
+
+/// Shrink a failing op-sequence: find the shortest prefix (by bisection)
+/// that still fails `check`, returning it for the panic message.
+pub fn shrink_prefix<T: Clone>(ops: &[T], check: impl Fn(&[T]) -> bool) -> Vec<T> {
+    // `check` returns true when the property HOLDS.
+    debug_assert!(!check(ops), "shrink called on a passing sequence");
+    let mut lo = 0usize; // longest known-passing prefix length
+    let mut hi = ops.len(); // shortest known-failing prefix length
+    while lo + 1 < hi {
+        let mid = lo + (hi - lo) / 2;
+        if check(&ops[..mid]) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    ops[..hi].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_prop_executes_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static RUNS: AtomicU64 = AtomicU64::new(0);
+        RUNS.store(0, Ordering::SeqCst);
+        run_prop("counter", 1, |_rng| {
+            RUNS.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(RUNS.load(Ordering::SeqCst), default_cases());
+    }
+
+    #[test]
+    fn op_sequence_is_deterministic_per_seed() {
+        let mut a = Xoshiro256::seeded(9);
+        let mut b = Xoshiro256::seeded(9);
+        assert_eq!(op_sequence(&mut a, 100, 10), op_sequence(&mut b, 100, 10));
+    }
+
+    #[test]
+    fn shrink_finds_minimal_failing_prefix() {
+        // Fails as soon as the prefix contains the value 7.
+        let ops: Vec<u64> = vec![1, 2, 3, 7, 4, 5];
+        let minimal = shrink_prefix(&ops, |prefix| !prefix.contains(&7));
+        assert_eq!(minimal, vec![1, 2, 3, 7]);
+    }
+}

@@ -1,0 +1,291 @@
+//! Closed-loop load driver: N worker threads issue operations from
+//! per-thread [`OpStream`]s against one engine and report throughput,
+//! hit-ratio and latency percentiles — the measurement core behind every
+//! figure-regenerating bench.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::cache::Cache;
+use crate::metrics::{HistogramSummary, LatencyHistogram};
+use crate::workload::{check_value, encode_key, fill_value, Op, OpStream, WorkloadSpec, KEY_LEN};
+
+/// When the run stops.
+#[derive(Debug, Clone, Copy)]
+pub enum StopRule {
+    /// Each thread performs exactly this many operations.
+    OpsPerThread(u64),
+    /// All threads run until the deadline.
+    Duration(Duration),
+}
+
+/// Driver configuration.
+#[derive(Debug, Clone)]
+pub struct DriverOptions {
+    pub threads: usize,
+    pub stop: StopRule,
+    /// Pre-insert the whole catalog before measuring (bounded by memory:
+    /// the engine evicts as needed, leaving it warm).
+    pub prefill: bool,
+    /// Measure latency on every k-th operation (1 = all).
+    pub sample_every: u64,
+    /// Verify the bytes of every sampled hit against the deterministic
+    /// per-key pattern (corruption canary for concurrency tests).
+    pub validate: bool,
+}
+
+impl Default for DriverOptions {
+    fn default() -> Self {
+        DriverOptions {
+            threads: 4,
+            stop: StopRule::OpsPerThread(100_000),
+            prefill: true,
+            sample_every: 4,
+            validate: false,
+        }
+    }
+}
+
+/// Aggregated result of one driver run.
+#[derive(Debug, Clone)]
+pub struct DriverReport {
+    pub engine: &'static str,
+    pub threads: usize,
+    pub elapsed: Duration,
+    pub total_ops: u64,
+    pub gets: u64,
+    pub hits: u64,
+    pub sets: u64,
+    pub store_failures: u64,
+    pub validation_failures: u64,
+    pub latency: HistogramSummary,
+    pub get_latency: HistogramSummary,
+    pub set_latency: HistogramSummary,
+}
+
+impl DriverReport {
+    /// Operations per second over the whole run.
+    pub fn throughput(&self) -> f64 {
+        self.total_ops as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// Hit ratio over the measured window.
+    pub fn hit_ratio(&self) -> f64 {
+        if self.gets == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.gets as f64
+        }
+    }
+
+    /// One-line summary used by benches.
+    pub fn row(&self) -> String {
+        format!(
+            "{:>10} thr={:2} ops={:>9} tput={:>10.0}/s hit={:.4} p50={:>7}ns p99={:>8}ns",
+            self.engine,
+            self.threads,
+            self.total_ops,
+            self.throughput(),
+            self.hit_ratio(),
+            self.latency.p50_ns,
+            self.latency.p99_ns
+        )
+    }
+}
+
+/// Pre-insert the catalog (ascending popularity ids last so the hottest
+/// keys are freshest when memory is tight).
+pub fn prefill(cache: &dyn Cache, spec: &WorkloadSpec) {
+    let mut key = [0u8; KEY_LEN];
+    let mut value = vec![0u8; 0];
+    // Insert cold→hot: ids descending, so the popular head survives any
+    // eviction that happens during the fill.
+    for id in (0..spec.catalog).rev() {
+        let len = spec.value_size.for_key(id);
+        if value.len() != len {
+            value.resize(len, 0);
+        }
+        fill_value(id, &mut value);
+        let k = encode_key(&mut key, id);
+        let _ = cache.set(k, &value, 0, 0);
+    }
+}
+
+/// Replay a frozen [`crate::workload::Trace`] single-threaded against an
+/// engine and return `(hit_ratio, hits, gets)`. Used by the hit-ratio
+/// experiment (E1), where every engine must see *identical* accesses.
+pub fn replay_trace(cache: &dyn Cache, trace: &crate::workload::Trace) -> (f64, u64, u64) {
+    let mut key = [0u8; KEY_LEN];
+    let mut value = vec![0u8; 4096];
+    let (mut hits, mut gets) = (0u64, 0u64);
+    for op in &trace.ops {
+        match *op {
+            Op::Get(id) => {
+                gets += 1;
+                let k = encode_key(&mut key, id);
+                if cache.get(k).is_some() {
+                    hits += 1;
+                } else {
+                    // Cache-miss protocol: the application fetches from the
+                    // backing store and re-caches — required for hit-ratio
+                    // experiments to reach steady state.
+                    let len = trace.spec.value_size.for_key(id);
+                    if value.len() < len {
+                        value.resize(len, 0);
+                    }
+                    fill_value(id, &mut value[..len]);
+                    let _ = cache.set(k, &value[..len], 0, 0);
+                }
+            }
+            Op::Set(id) => {
+                let len = trace.spec.value_size.for_key(id);
+                if value.len() < len {
+                    value.resize(len, 0);
+                }
+                fill_value(id, &mut value[..len]);
+                let k = encode_key(&mut key, id);
+                let _ = cache.set(k, &value[..len], 0, 0);
+            }
+        }
+    }
+    let ratio = if gets == 0 { 0.0 } else { hits as f64 / gets as f64 };
+    (ratio, hits, gets)
+}
+
+/// Run the workload; returns the aggregated report.
+pub fn run_driver(cache: &Arc<dyn Cache>, spec: &WorkloadSpec, opts: &DriverOptions) -> DriverReport {
+    if opts.prefill {
+        prefill(cache.as_ref(), spec);
+    }
+
+    let stop_flag = Arc::new(AtomicBool::new(false));
+    let total_ops = Arc::new(AtomicU64::new(0));
+    let gets = Arc::new(AtomicU64::new(0));
+    let hits = Arc::new(AtomicU64::new(0));
+    let sets = Arc::new(AtomicU64::new(0));
+    let store_failures = Arc::new(AtomicU64::new(0));
+    let validation_failures = Arc::new(AtomicU64::new(0));
+    let latency = Arc::new(LatencyHistogram::new());
+    let get_latency = Arc::new(LatencyHistogram::new());
+    let set_latency = Arc::new(LatencyHistogram::new());
+
+    let start = Instant::now();
+    let deadline = match opts.stop {
+        StopRule::Duration(d) => Some(start + d),
+        StopRule::OpsPerThread(_) => None,
+    };
+    let ops_budget = match opts.stop {
+        StopRule::OpsPerThread(n) => n,
+        StopRule::Duration(_) => u64::MAX,
+    };
+
+    let workers: Vec<_> = (0..opts.threads)
+        .map(|t| {
+            let cache = Arc::clone(cache);
+            let spec = spec.clone();
+            let opts = opts.clone();
+            let stop_flag = Arc::clone(&stop_flag);
+            let total_ops = Arc::clone(&total_ops);
+            let gets = Arc::clone(&gets);
+            let hits = Arc::clone(&hits);
+            let sets = Arc::clone(&sets);
+            let store_failures = Arc::clone(&store_failures);
+            let validation_failures = Arc::clone(&validation_failures);
+            let latency = Arc::clone(&latency);
+            let get_latency = Arc::clone(&get_latency);
+            let set_latency = Arc::clone(&set_latency);
+            std::thread::spawn(move || {
+                let mut stream = OpStream::new(&spec, t as u64 + 1);
+                let mut key = [0u8; KEY_LEN];
+                let mut value = vec![0u8; 4096];
+                let (mut l_ops, mut l_gets, mut l_hits, mut l_sets) = (0u64, 0u64, 0u64, 0u64);
+                let (mut l_sfail, mut l_vfail) = (0u64, 0u64);
+                let mut n = 0u64;
+                while n < ops_budget {
+                    // Deadline check amortized over 256 ops.
+                    if n % 256 == 0 && stop_flag.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    n += 1;
+                    let op = stream.next_op();
+                    let sampled = n % opts.sample_every == 0;
+                    let t0 = if sampled { Some(Instant::now()) } else { None };
+                    match op {
+                        Op::Get(id) => {
+                            let k = encode_key(&mut key, id);
+                            let res = cache.get(k);
+                            l_gets += 1;
+                            if let Some(r) = res {
+                                l_hits += 1;
+                                if opts.validate && sampled {
+                                    let expect_len = spec.value_size.for_key(id);
+                                    if r.data.len() != expect_len || !check_value(id, &r.data) {
+                                        l_vfail += 1;
+                                    }
+                                }
+                            }
+                            if let Some(t0) = t0 {
+                                let ns = t0.elapsed().as_nanos() as u64;
+                                latency.record(ns);
+                                get_latency.record(ns);
+                            }
+                        }
+                        Op::Set(id) => {
+                            let len = spec.value_size.for_key(id);
+                            if value.len() < len {
+                                value.resize(len, 0);
+                            }
+                            fill_value(id, &mut value[..len]);
+                            let k = encode_key(&mut key, id);
+                            let out = cache.set(k, &value[..len], 0, 0);
+                            l_sets += 1;
+                            if out != crate::cache::StoreOutcome::Stored {
+                                l_sfail += 1;
+                            }
+                            if let Some(t0) = t0 {
+                                let ns = t0.elapsed().as_nanos() as u64;
+                                latency.record(ns);
+                                set_latency.record(ns);
+                            }
+                        }
+                    }
+                    l_ops += 1;
+                }
+                total_ops.fetch_add(l_ops, Ordering::Relaxed);
+                gets.fetch_add(l_gets, Ordering::Relaxed);
+                hits.fetch_add(l_hits, Ordering::Relaxed);
+                sets.fetch_add(l_sets, Ordering::Relaxed);
+                store_failures.fetch_add(l_sfail, Ordering::Relaxed);
+                validation_failures.fetch_add(l_vfail, Ordering::Relaxed);
+            })
+        })
+        .collect();
+
+    if let Some(deadline) = deadline {
+        let now = Instant::now();
+        if deadline > now {
+            std::thread::sleep(deadline - now);
+        }
+        stop_flag.store(true, Ordering::Relaxed);
+    }
+    for w in workers {
+        w.join().expect("worker panicked");
+    }
+    let elapsed = start.elapsed();
+
+    DriverReport {
+        engine: cache.engine_name(),
+        threads: opts.threads,
+        elapsed,
+        total_ops: total_ops.load(Ordering::Relaxed),
+        gets: gets.load(Ordering::Relaxed),
+        hits: hits.load(Ordering::Relaxed),
+        sets: sets.load(Ordering::Relaxed),
+        store_failures: store_failures.load(Ordering::Relaxed),
+        validation_failures: validation_failures.load(Ordering::Relaxed),
+        latency: latency.summary(),
+        get_latency: get_latency.summary(),
+        set_latency: set_latency.summary(),
+    }
+}

@@ -1,0 +1,255 @@
+//! Workload generation — the paper's evaluation harness substrate.
+//!
+//! The evaluation varies three contention levers: access skew (zipfian
+//! α), item size, and read ratio (Fig. 1 uses 99 % reads with small
+//! items). [`WorkloadSpec`] captures one configuration; [`OpStream`]
+//! turns it into an infinite operation stream; [`driver`] runs closed-loop
+//! worker threads against any [`crate::cache::Cache`]; [`Trace`] freezes a
+//! finite sequence so hit-ratio comparisons feed *identical* accesses to
+//! every engine.
+
+pub mod driver;
+pub mod zipf;
+
+pub use driver::{run_driver, DriverOptions, DriverReport};
+pub use zipf::Zipf;
+
+use crate::sync::{SplitMix64, Xoshiro256};
+
+/// Value sizing policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ValueSize {
+    /// Every value is exactly this many bytes.
+    Fixed(usize),
+    /// Deterministic per key in `[min, max)` — repeatable across engines
+    /// and runs, so validation can recompute expected bytes.
+    PerKey { min: usize, max: usize },
+}
+
+impl ValueSize {
+    /// Size of the value for `key_id`.
+    pub fn for_key(&self, key_id: u64) -> usize {
+        match *self {
+            ValueSize::Fixed(n) => n,
+            ValueSize::PerKey { min, max } => {
+                debug_assert!(max > min);
+                let h = SplitMix64::new(key_id ^ 0x5151_5151).next_u64();
+                min + (h % (max - min) as u64) as usize
+            }
+        }
+    }
+}
+
+/// One workload configuration (one point in the paper's sweeps).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Number of distinct keys.
+    pub catalog: u64,
+    /// Zipfian skew (0 = uniform; Fig. 1 sweeps ~0.5 … 1.3).
+    pub alpha: f64,
+    /// Fraction of operations that are reads (Fig. 1: 0.99).
+    pub read_ratio: f64,
+    /// Value sizing.
+    pub value_size: ValueSize,
+    /// RNG seed; streams for different threads derive from it.
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            catalog: 100_000,
+            alpha: 0.99,
+            read_ratio: 0.99,
+            value_size: ValueSize::Fixed(64),
+            seed: 0xF1EE_C0DE,
+        }
+    }
+}
+
+/// Fixed-width key encoding: `k` + 15 decimal digits (16 bytes).
+pub const KEY_LEN: usize = 16;
+
+/// Write the canonical key for `id` into `buf`, returning the key slice.
+pub fn encode_key(buf: &mut [u8; KEY_LEN], id: u64) -> &[u8] {
+    buf[0] = b'k';
+    let mut v = id;
+    for i in (1..KEY_LEN).rev() {
+        buf[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+    }
+    &buf[..]
+}
+
+/// Parse a canonical key back to its id (tests / validation).
+pub fn decode_key(key: &[u8]) -> Option<u64> {
+    if key.len() != KEY_LEN || key[0] != b'k' {
+        return None;
+    }
+    let mut v = 0u64;
+    for &b in &key[1..] {
+        if !b.is_ascii_digit() {
+            return None;
+        }
+        v = v * 10 + (b - b'0') as u64;
+    }
+    Some(v)
+}
+
+/// Deterministic value bytes for `key_id` (validation can recompute them).
+pub fn fill_value(key_id: u64, out: &mut [u8]) {
+    let mut g = SplitMix64::new(key_id.wrapping_mul(0x9E37_79B9));
+    let mut i = 0;
+    while i < out.len() {
+        let w = g.next_u64().to_le_bytes();
+        let n = (out.len() - i).min(8);
+        out[i..i + n].copy_from_slice(&w[..n]);
+        i += n;
+    }
+}
+
+/// Verify `data` matches the deterministic pattern for `key_id`.
+pub fn check_value(key_id: u64, data: &[u8]) -> bool {
+    let mut expect = vec![0u8; data.len()];
+    fill_value(key_id, &mut expect);
+    expect == data
+}
+
+/// One generated operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Read the key with this id.
+    Get(u64),
+    /// Write the key with this id (size comes from the spec).
+    Set(u64),
+}
+
+/// Infinite operation stream for one worker thread.
+pub struct OpStream {
+    spec: WorkloadSpec,
+    rng: Xoshiro256,
+    zipf: Zipf,
+}
+
+impl OpStream {
+    /// Stream `stream_id` (one per thread) of the spec.
+    pub fn new(spec: &WorkloadSpec, stream_id: u64) -> Self {
+        OpStream {
+            rng: Xoshiro256::seeded(spec.seed ^ stream_id.wrapping_mul(0xA076_1D64_78BD_642F)),
+            zipf: Zipf::new(spec.catalog, spec.alpha),
+            spec: spec.clone(),
+        }
+    }
+
+    /// Next operation. Zipf ranks are 1-based; key ids are 0-based.
+    #[inline]
+    pub fn next_op(&mut self) -> Op {
+        let id = self.zipf.sample(&mut self.rng) - 1;
+        if self.rng.chance(self.spec.read_ratio) {
+            Op::Get(id)
+        } else {
+            Op::Set(id)
+        }
+    }
+
+    /// The spec this stream follows.
+    pub fn spec(&self) -> &WorkloadSpec {
+        &self.spec
+    }
+}
+
+/// A frozen operation sequence, identical for every engine — used by the
+/// hit-ratio experiment (E1) where fairness requires replaying the same
+/// accesses.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub ops: Vec<Op>,
+    pub spec: WorkloadSpec,
+}
+
+impl Trace {
+    /// Generate `len` operations from the spec's seed.
+    pub fn generate(spec: &WorkloadSpec, len: usize) -> Self {
+        let mut stream = OpStream::new(spec, 0);
+        Trace {
+            ops: (0..len).map(|_| stream.next_op()).collect(),
+            spec: spec.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_encoding_roundtrips() {
+        let mut buf = [0u8; KEY_LEN];
+        for id in [0u64, 1, 99, 123_456_789, u32::MAX as u64] {
+            let k = encode_key(&mut buf, id);
+            assert_eq!(k.len(), KEY_LEN);
+            assert_eq!(decode_key(k), Some(id));
+        }
+        assert_eq!(decode_key(b"xnothex"), None);
+        assert_eq!(decode_key(b"kaaaaaaaaaaaaaaa"), None);
+    }
+
+    #[test]
+    fn value_fill_is_deterministic_and_checkable() {
+        let mut a = vec![0u8; 100];
+        let mut b = vec![0u8; 100];
+        fill_value(7, &mut a);
+        fill_value(7, &mut b);
+        assert_eq!(a, b);
+        assert!(check_value(7, &a));
+        a[3] ^= 1;
+        assert!(!check_value(7, &a));
+        fill_value(8, &mut b);
+        assert!(!check_value(7, &b));
+    }
+
+    #[test]
+    fn per_key_sizes_are_stable_and_bounded() {
+        let vs = ValueSize::PerKey { min: 10, max: 50 };
+        for id in 0..1000 {
+            let s = vs.for_key(id);
+            assert!((10..50).contains(&s));
+            assert_eq!(s, vs.for_key(id));
+        }
+        assert_eq!(ValueSize::Fixed(64).for_key(3), 64);
+    }
+
+    #[test]
+    fn read_ratio_is_respected() {
+        let spec = WorkloadSpec {
+            read_ratio: 0.99,
+            ..Default::default()
+        };
+        let mut s = OpStream::new(&spec, 1);
+        let n = 50_000;
+        let reads = (0..n)
+            .filter(|_| matches!(s.next_op(), Op::Get(_)))
+            .count();
+        let ratio = reads as f64 / n as f64;
+        assert!((ratio - 0.99).abs() < 0.01, "read ratio {ratio}");
+    }
+
+    #[test]
+    fn streams_differ_per_thread_but_replay_per_seed() {
+        let spec = WorkloadSpec::default();
+        let seq = |sid: u64| -> Vec<Op> {
+            let mut s = OpStream::new(&spec, sid);
+            (0..64).map(|_| s.next_op()).collect()
+        };
+        assert_eq!(seq(1), seq(1));
+        assert_ne!(seq(1), seq(2));
+    }
+
+    #[test]
+    fn trace_is_reproducible() {
+        let spec = WorkloadSpec::default();
+        let a = Trace::generate(&spec, 1000);
+        let b = Trace::generate(&spec, 1000);
+        assert_eq!(a.ops, b.ops);
+    }
+}

@@ -1,0 +1,201 @@
+//! Zipfian sampling by rejection-inversion (Hörmann & Derflinger 1996),
+//! the same algorithm behind Apache Commons' `RejectionInversionZipfSampler`
+//! and `rand_distr::Zipf`. O(1) per sample with no per-rank tables, so
+//! catalogs of hundreds of millions of keys cost nothing to set up —
+//! exactly what the α-sweep benches need.
+//!
+//! Ranks are 1-based: rank 1 is the most popular key. `alpha = 0`
+//! degenerates to the uniform distribution.
+
+use crate::sync::Xoshiro256;
+
+/// Rejection-inversion zipfian sampler over `{1, …, n}` with exponent α.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    alpha: f64,
+    h_x1: f64,
+    h_n: f64,
+    s: f64,
+}
+
+/// `(exp(t) - 1) / t` with a series fallback near 0.
+#[inline]
+fn helper2(t: f64) -> f64 {
+    if t.abs() > 1e-8 {
+        t.exp_m1() / t
+    } else {
+        1.0 + t / 2.0 + t * t / 6.0
+    }
+}
+
+/// `ln(1 + t) / t` with a series fallback near 0.
+#[inline]
+fn helper1(t: f64) -> f64 {
+    if t.abs() > 1e-8 {
+        t.ln_1p() / t
+    } else {
+        1.0 - t / 2.0 + t * t / 3.0
+    }
+}
+
+impl Zipf {
+    /// Sampler for `n ≥ 1` elements with exponent `alpha ≥ 0`.
+    pub fn new(n: u64, alpha: f64) -> Self {
+        assert!(n >= 1, "catalog must be non-empty");
+        assert!(alpha >= 0.0 && alpha.is_finite(), "alpha must be ≥ 0");
+        let h_x1 = Self::h_integral_static(1.5, alpha) - 1.0;
+        let h_n = Self::h_integral_static(n as f64 + 0.5, alpha);
+        let s = 2.0
+            - Self::h_integral_inverse_static(
+                Self::h_integral_static(2.5, alpha) - Self::h_static(2.0, alpha),
+                alpha,
+            );
+        Zipf {
+            n,
+            alpha,
+            h_x1,
+            h_n,
+            s,
+        }
+    }
+
+    /// H(x) = ∫ x^{-α} dx, shifted form used by rejection-inversion.
+    fn h_integral_static(x: f64, alpha: f64) -> f64 {
+        let log_x = x.ln();
+        helper2((1.0 - alpha) * log_x) * log_x
+    }
+
+    /// h(x) = x^{-α}.
+    fn h_static(x: f64, alpha: f64) -> f64 {
+        (-alpha * x.ln()).exp()
+    }
+
+    /// H^{-1}(x).
+    fn h_integral_inverse_static(x: f64, alpha: f64) -> f64 {
+        let mut t = x * (1.0 - alpha);
+        if t < -1.0 {
+            t = -1.0; // numerical guard per the reference implementation
+        }
+        (helper1(t) * x).exp()
+    }
+
+    /// Draw one rank in `[1, n]`.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> u64 {
+        loop {
+            let u = self.h_n + rng.next_f64() * (self.h_x1 - self.h_n);
+            let x = Self::h_integral_inverse_static(u, self.alpha);
+            // Candidate rank, clamped into range.
+            let k64 = (x + 0.5) as u64;
+            let k = k64.clamp(1, self.n);
+            let kf = k as f64;
+            if kf - x <= self.s
+                || u >= Self::h_integral_static(kf + 0.5, self.alpha) - Self::h_static(kf, self.alpha)
+            {
+                return k;
+            }
+        }
+    }
+
+    /// Number of elements.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// The exponent.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Exact probability mass of each rank (O(n); analytics/tests only).
+    pub fn pmf(n: u64, alpha: f64) -> Vec<f64> {
+        let weights: Vec<f64> = (1..=n).map(|k| (k as f64).powf(-alpha)).collect();
+        let total: f64 = weights.iter().sum();
+        weights.into_iter().map(|w| w / total).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn histogram(n: u64, alpha: f64, samples: usize, seed: u64) -> Vec<u64> {
+        let z = Zipf::new(n, alpha);
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut h = vec![0u64; n as usize];
+        for _ in 0..samples {
+            let k = z.sample(&mut rng);
+            assert!((1..=n).contains(&k));
+            h[(k - 1) as usize] += 1;
+        }
+        h
+    }
+
+    #[test]
+    fn alpha_zero_is_uniform() {
+        let h = histogram(100, 0.0, 200_000, 1);
+        let expect = 200_000.0 / 100.0;
+        for (i, &c) in h.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.15, "rank {} count {} deviates {:.2}", i + 1, c, dev);
+        }
+    }
+
+    #[test]
+    fn empirical_frequencies_match_pmf() {
+        for &alpha in &[0.5, 0.99, 1.0, 1.3] {
+            let n = 1000;
+            let samples = 300_000;
+            let h = histogram(n, alpha, samples, 42);
+            let pmf = Zipf::pmf(n, alpha);
+            // Check the head (top-10 ranks hold most mass).
+            for k in 0..10 {
+                let emp = h[k] as f64 / samples as f64;
+                let dev = (emp - pmf[k]).abs() / pmf[k];
+                assert!(
+                    dev < 0.08,
+                    "alpha {alpha} rank {} empirical {emp:.5} vs pmf {:.5}",
+                    k + 1,
+                    pmf[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn higher_alpha_is_more_skewed() {
+        let top_share = |alpha: f64| -> f64 {
+            let h = histogram(10_000, alpha, 100_000, 7);
+            let top: u64 = h[..10].iter().sum();
+            top as f64 / 100_000.0
+        };
+        let s05 = top_share(0.5);
+        let s099 = top_share(0.99);
+        let s13 = top_share(1.3);
+        assert!(s05 < s099 && s099 < s13, "skew ordering: {s05} {s099} {s13}");
+        assert!(s13 > 0.5, "alpha=1.3 must concentrate >50% on top-10: {s13}");
+    }
+
+    #[test]
+    fn single_element_catalog() {
+        let z = Zipf::new(1, 0.99);
+        let mut rng = Xoshiro256::seeded(3);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn pmf_sums_to_one() {
+        for &alpha in &[0.0, 0.7, 1.0, 1.5] {
+            let total: f64 = Zipf::pmf(500, alpha).iter().sum();
+            assert!((total - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty_catalog() {
+        let _ = Zipf::new(0, 1.0);
+    }
+}

@@ -1,0 +1,296 @@
+//! Concurrency integration tests: the properties the paper's design must
+//! preserve under real multi-threaded interleavings (amplified here by
+//! oversubscription — this host has one core, so threads preempt each
+//! other constantly, which is exactly the adversarial schedule lock-free
+//! code must survive).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use fleec::cache::fleec::FleecCache;
+use fleec::cache::{build_engine, Cache, CacheConfig, StoreOutcome, ENGINES};
+use fleec::sync::Xoshiro256;
+use fleec::workload::{check_value, encode_key, fill_value, KEY_LEN};
+
+/// Mixed read/write/delete storm with value validation: any torn read,
+/// lost update to a *quiescent* key, or use-after-free (ASAN-free build:
+/// manifests as garbage values) fails the checksum.
+fn storm(engine: &str, threads: u64, ops: u64, keys: u64) {
+    let cache = build_engine(engine, CacheConfig {
+        mem_limit: 16 << 20,
+        initial_buckets: 32, // force expansion during the storm
+        ..CacheConfig::default()
+    })
+    .unwrap();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let cache = Arc::clone(&cache);
+            s.spawn(move || {
+                let mut rng = Xoshiro256::seeded(0x57A4 + t);
+                let mut key = [0u8; KEY_LEN];
+                let mut val = vec![0u8; 256];
+                for _ in 0..ops {
+                    let id = rng.next_below(keys);
+                    let k = encode_key(&mut key, id);
+                    match rng.next_below(10) {
+                        0..=5 => {
+                            if let Some(r) = cache.get(k) {
+                                assert!(
+                                    check_value(id, &r.data),
+                                    "{engine}: corrupted value for key id {id} (len {})",
+                                    r.data.len()
+                                );
+                            }
+                        }
+                        6..=8 => {
+                            let len = 32 + (id as usize * 7) % 200;
+                            fill_value(id, &mut val[..len]);
+                            assert_eq!(cache.set(k, &val[..len], 0, 0), StoreOutcome::Stored);
+                        }
+                        _ => {
+                            let _ = cache.delete(k);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    // Post-storm integrity sweep.
+    let mut key = [0u8; KEY_LEN];
+    for id in 0..keys {
+        let k = encode_key(&mut key, id);
+        if let Some(r) = cache.get(k) {
+            assert!(check_value(id, &r.data), "{engine}: post-storm corruption id {id}");
+        }
+    }
+}
+
+#[test]
+fn storm_fleec() {
+    storm("fleec", 8, 15_000, 400);
+}
+
+#[test]
+fn storm_memcached() {
+    storm("memcached", 8, 15_000, 400);
+}
+
+#[test]
+fn storm_memclock() {
+    storm("memclock", 8, 15_000, 400);
+}
+
+/// Writers + readers race across a forced expansion; every key written
+/// before the expansion must be readable afterwards (migration must not
+/// lose items), and the table must actually grow.
+#[test]
+fn fleec_expansion_under_concurrent_load() {
+    let cache = Arc::new(FleecCache::new(CacheConfig {
+        mem_limit: 32 << 20,
+        initial_buckets: 16,
+        ..CacheConfig::default()
+    }));
+    let n_base = 500u64;
+    // Phase 1: stable base set.
+    let mut key = [0u8; KEY_LEN];
+    let mut val = vec![0u8; 64];
+    for id in 0..n_base {
+        fill_value(id, &mut val);
+        assert_eq!(
+            cache.set(encode_key(&mut key, id), &val, 0, 0),
+            StoreOutcome::Stored
+        );
+    }
+    // Phase 2: concurrent insert flood (drives expansions) + readers of
+    // the base set + a maintenance helper.
+    let stop = Arc::new(AtomicBool::new(false));
+    let misses = Arc::new(AtomicU64::new(0));
+    let reads = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|s| {
+        for w in 0..3u64 {
+            let cache = Arc::clone(&cache);
+            s.spawn(move || {
+                let mut key = [0u8; KEY_LEN];
+                let mut val = vec![0u8; 64];
+                for i in 0..4_000u64 {
+                    let id = 10_000 + w * 100_000 + i;
+                    fill_value(id, &mut val);
+                    cache.set(encode_key(&mut key, id), &val, 0, 0);
+                }
+            });
+        }
+        for _ in 0..3 {
+            let cache = Arc::clone(&cache);
+            let stop = Arc::clone(&stop);
+            let misses = Arc::clone(&misses);
+            let reads = Arc::clone(&reads);
+            s.spawn(move || {
+                let mut rng = Xoshiro256::seeded(9);
+                let mut key = [0u8; KEY_LEN];
+                while !stop.load(Ordering::Relaxed) {
+                    let id = rng.next_below(n_base);
+                    reads.fetch_add(1, Ordering::Relaxed);
+                    match cache.get(encode_key(&mut key, id)) {
+                        Some(r) => assert!(check_value(id, &r.data)),
+                        None => {
+                            // Transient migration window (documented):
+                            // count it; it must be rare and transient.
+                            misses.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+        {
+            let cache = Arc::clone(&cache);
+            let stop = Arc::clone(&stop);
+            s.spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    cache.maintenance();
+                    std::thread::yield_now();
+                }
+            });
+        }
+        // Let writers finish, then stop readers.
+        std::thread::sleep(std::time::Duration::from_millis(800));
+        stop.store(true, Ordering::Relaxed);
+    });
+    // Expansion completed and nothing was lost.
+    for _ in 0..4 {
+        cache.maintenance();
+    }
+    assert!(cache.bucket_count() > 16, "no expansion happened");
+    let mut key = [0u8; KEY_LEN];
+    for id in 0..n_base {
+        let r = cache.get(encode_key(&mut key, id));
+        assert!(r.is_some(), "base key {id} lost across expansion");
+        assert!(check_value(id, &r.unwrap().data));
+    }
+    let total_reads = reads.load(Ordering::Relaxed).max(1);
+    let missed = misses.load(Ordering::Relaxed);
+    assert!(
+        (missed as f64) < 0.01 * total_reads as f64,
+        "transient miss rate too high: {missed}/{total_reads}"
+    );
+    cache.collector().force_reclaim(4);
+}
+
+/// Concurrent CAS: N threads contend on one counter key via the cas
+/// command; total applied increments must equal the number of successful
+/// CAS replies (no lost or duplicated updates).
+#[test]
+fn cas_is_atomic_under_contention() {
+    for engine in ENGINES {
+        let cache = build_engine(engine, CacheConfig::small()).unwrap();
+        cache.set(b"ctr", b"0", 0, 0);
+        let successes = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let cache = Arc::clone(&cache);
+                let successes = Arc::clone(&successes);
+                s.spawn(move || {
+                    for _ in 0..500 {
+                        loop {
+                            let cur = cache.get(b"ctr").unwrap();
+                            let n: u64 =
+                                std::str::from_utf8(&cur.data).unwrap().parse().unwrap();
+                            let next = (n + 1).to_string();
+                            match cache.cas(b"ctr", next.as_bytes(), 0, 0, cur.cas) {
+                                StoreOutcome::Stored => {
+                                    successes.fetch_add(1, Ordering::Relaxed);
+                                    break;
+                                }
+                                StoreOutcome::Exists => continue, // lost the race
+                                other => panic!("{engine}: unexpected {other:?}"),
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let final_val: u64 = std::str::from_utf8(&cache.get(b"ctr").unwrap().data)
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(
+            final_val,
+            successes.load(Ordering::Relaxed),
+            "{engine}: CAS lost or duplicated updates"
+        );
+        assert_eq!(final_val, 2_000, "{engine}: every increment must land");
+    }
+}
+
+/// Delete/set races on the same key must never resurrect stale values:
+/// after all threads finish, the key is either absent or holds one of
+/// the values written by the final-phase writers.
+#[test]
+fn fleec_delete_set_race_no_resurrection() {
+    let cache = Arc::new(FleecCache::new(CacheConfig::small()));
+    for round in 0..50u64 {
+        let key = format!("race-{round}");
+        let k = key.as_bytes();
+        cache.set(k, b"initial", 0, 0);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let cache = Arc::clone(&cache);
+                s.spawn(move || {
+                    let mut rng = Xoshiro256::seeded(round * 17 + t);
+                    for _ in 0..50 {
+                        if rng.chance(0.5) {
+                            cache.delete(k);
+                        } else {
+                            cache.set(k, format!("val-{t}").as_bytes(), 0, 0);
+                        }
+                    }
+                });
+            }
+        });
+        if let Some(r) = cache.get(k) {
+            let s = String::from_utf8_lossy(&r.data).to_string();
+            assert!(
+                s.starts_with("val-"),
+                "stale value resurrected in round {round}: {s:?}"
+            );
+        }
+    }
+}
+
+/// EBR soundness end-to-end: a full-pressure workload cycles the whole
+/// memory budget many times; pending reclamation must stay bounded and
+/// everything must drain at the end.
+#[test]
+fn fleec_reclamation_drains() {
+    let cache = Arc::new(FleecCache::new(CacheConfig {
+        mem_limit: 2 << 20,
+        ..CacheConfig::small()
+    }));
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let cache = Arc::clone(&cache);
+            s.spawn(move || {
+                let mut key = [0u8; KEY_LEN];
+                let value = vec![0xEE; 4096];
+                for i in 0..2_000u64 {
+                    cache.set(encode_key(&mut key, t * 1_000_000 + i), &value, 0, 0);
+                }
+            });
+        }
+    });
+    let collector = cache.collector().clone();
+    collector.force_reclaim(4);
+    let m = cache.metrics().snapshot();
+    assert!(m.evictions > 0);
+    assert!(
+        collector.pending_bytes() < (1 << 20),
+        "reclamation backlog {} B never drained",
+        collector.pending_bytes()
+    );
+    // 8k × 4 KiB = 32 MiB pushed through a 2 MiB cache: reclamation must
+    // have recycled items many times over.
+    assert!(
+        collector.reclaimed_items() > 4_000,
+        "only {} items reclaimed",
+        collector.reclaimed_items()
+    );
+}

@@ -1,0 +1,135 @@
+//! Edge cases every engine must handle identically: size boundaries,
+//! empty values, expiry semantics, key-limit enforcement, and the
+//! protocol's odd corners.
+
+use fleec::cache::{build_engine, CacheConfig, StoreOutcome, ENGINES, MAX_KEY_LEN};
+
+#[test]
+fn zero_length_values_roundtrip() {
+    for engine in ENGINES {
+        let cache = build_engine(engine, CacheConfig::small()).unwrap();
+        assert_eq!(cache.set(b"empty", b"", 5, 0), StoreOutcome::Stored, "{engine}");
+        let r = cache.get(b"empty").unwrap();
+        assert_eq!(r.data.len(), 0, "{engine}");
+        assert_eq!(r.flags, 5, "{engine}");
+        assert_eq!(cache.append(b"empty", b"x"), StoreOutcome::Stored, "{engine}");
+        assert_eq!(cache.get(b"empty").unwrap().data, b"x", "{engine}");
+    }
+}
+
+#[test]
+fn key_length_limit_enforced() {
+    for engine in ENGINES {
+        let cache = build_engine(engine, CacheConfig::small()).unwrap();
+        let max_key = vec![b'k'; MAX_KEY_LEN];
+        assert_eq!(cache.set(&max_key, b"v", 0, 0), StoreOutcome::Stored, "{engine}");
+        assert!(cache.get(&max_key).is_some(), "{engine}");
+        let too_long = vec![b'k'; MAX_KEY_LEN + 1];
+        assert_eq!(
+            cache.set(&too_long, b"v", 0, 0),
+            StoreOutcome::NotStored,
+            "{engine}: oversized key accepted"
+        );
+        assert_eq!(cache.set(b"", b"v", 0, 0), StoreOutcome::NotStored, "{engine}: empty key");
+    }
+}
+
+#[test]
+fn oversized_value_rejected_not_fatal() {
+    // fleec's slab has a hard max chunk; the blocking engines accept any
+    // size (Vec-backed) — both must keep serving afterwards.
+    let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+    let huge = vec![0u8; 8 << 20]; // 8 MiB > max slab chunk (1 MiB)
+    assert_eq!(cache.set(b"huge", &huge, 0, 0), StoreOutcome::TooLarge);
+    assert!(cache.get(b"huge").is_none());
+    assert_eq!(cache.set(b"ok", b"v", 0, 0), StoreOutcome::Stored);
+}
+
+#[test]
+fn expiry_relative_seconds() {
+    for engine in ENGINES {
+        let cache = build_engine(engine, CacheConfig::small()).unwrap();
+        assert_eq!(cache.set(b"short", b"v", 0, 1), StoreOutcome::Stored);
+        assert_eq!(cache.set(b"long", b"v", 0, 3600), StoreOutcome::Stored);
+        assert!(cache.get(b"short").is_some(), "{engine}: not expired yet");
+        std::thread::sleep(std::time::Duration::from_millis(2100));
+        assert!(
+            cache.get(b"short").is_none(),
+            "{engine}: 1s TTL survived 2.1s"
+        );
+        assert!(cache.get(b"long").is_some(), "{engine}: 1h TTL expired early");
+        // Lazy expiry decrements the count on observation.
+        assert_eq!(cache.item_count(), 1, "{engine}");
+        // add() must succeed on an expired key.
+        assert_eq!(cache.add(b"short", b"v2", 0, 0), StoreOutcome::Stored, "{engine}");
+    }
+}
+
+#[test]
+fn touch_extends_and_shortens_ttl() {
+    for engine in ENGINES {
+        let cache = build_engine(engine, CacheConfig::small()).unwrap();
+        cache.set(b"k", b"v", 0, 3600);
+        assert!(cache.touch(b"k", 1), "{engine}");
+        std::thread::sleep(std::time::Duration::from_millis(2100));
+        assert!(cache.get(b"k").is_none(), "{engine}: touched-down TTL survived");
+        assert!(!cache.touch(b"k", 10), "{engine}: touch on expired key");
+    }
+}
+
+#[test]
+fn flags_are_opaque_32bit() {
+    for engine in ENGINES {
+        let cache = build_engine(engine, CacheConfig::small()).unwrap();
+        for flags in [0u32, 1, 0xDEAD_BEEF, u32::MAX] {
+            cache.set(b"f", b"v", flags, 0);
+            assert_eq!(cache.get(b"f").unwrap().flags, flags, "{engine}");
+        }
+    }
+}
+
+#[test]
+fn binary_safe_keys_and_values() {
+    // Keys with arbitrary non-space bytes and values with \r\n inside
+    // must survive the engine layer (the protocol layer length-prefixes
+    // values, so embedded CRLF is legal there too).
+    for engine in ENGINES {
+        let cache = build_engine(engine, CacheConfig::small()).unwrap();
+        let key = [0x01u8, 0xFF, 0x7F, 0x80, b'k'];
+        let val = b"line1\r\nline2\0binary\xFF".to_vec();
+        assert_eq!(cache.set(&key, &val, 0, 0), StoreOutcome::Stored, "{engine}");
+        assert_eq!(cache.get(&key).unwrap().data, val, "{engine}");
+    }
+}
+
+#[test]
+fn fleec_many_small_items_expand_repeatedly() {
+    // Multiple chained expansions: 64 → 128 → … with live verification.
+    let cache = build_engine("fleec", CacheConfig {
+        mem_limit: 64 << 20,
+        initial_buckets: 64,
+        ..CacheConfig::default()
+    })
+    .unwrap();
+    for i in 0..20_000u32 {
+        assert_eq!(
+            cache.set(format!("m{i}").as_bytes(), &i.to_le_bytes(), 0, 0),
+            StoreOutcome::Stored
+        );
+    }
+    for _ in 0..10 {
+        cache.maintenance();
+    }
+    assert!(
+        cache.bucket_count() >= 8192,
+        "expected ≥7 doublings, got {} buckets",
+        cache.bucket_count()
+    );
+    for i in (0..20_000u32).step_by(613) {
+        assert_eq!(
+            cache.get(format!("m{i}").as_bytes()).unwrap().data,
+            i.to_le_bytes().to_vec()
+        );
+    }
+    assert!(cache.metrics().snapshot().expansions >= 7);
+}

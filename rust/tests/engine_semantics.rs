@@ -1,0 +1,188 @@
+//! Cross-engine semantic equivalence: all three engines must implement
+//! identical Memcached semantics (the paper's "plug-in replacement"
+//! requirement). A model-based property test drives random operation
+//! sequences against each engine and a reference `HashMap` model
+//! simultaneously; any divergence is a bug in that engine.
+
+use std::collections::HashMap;
+
+use fleec::cache::{build_engine, Cache, CacheConfig, StoreOutcome, ENGINES};
+use fleec::sync::Xoshiro256;
+use fleec::testutil::run_prop;
+
+/// Reference model of a (non-evicting) memcached namespace.
+#[derive(Default)]
+struct Model {
+    map: HashMap<Vec<u8>, (Vec<u8>, u32)>, // key -> (value, flags)
+}
+
+fn key_of(rng: &mut Xoshiro256, space: u64) -> Vec<u8> {
+    format!("key-{:04}", rng.next_below(space)).into_bytes()
+}
+
+fn value_of(rng: &mut Xoshiro256) -> Vec<u8> {
+    let len = rng.next_below(48) as usize;
+    (0..len).map(|_| rng.next_u64() as u8).collect()
+}
+
+/// One random op applied to both engine and model; panics on divergence.
+fn step(cache: &dyn Cache, model: &mut Model, rng: &mut Xoshiro256) {
+    let key = key_of(rng, 32);
+    match rng.next_below(8) {
+        0 | 1 => {
+            // get
+            let got = cache.get(&key).map(|r| (r.data, r.flags));
+            let want = model.map.get(&key).cloned();
+            assert_eq!(got, want, "get({}) diverged", String::from_utf8_lossy(&key));
+        }
+        2 | 3 => {
+            let v = value_of(rng);
+            let flags = rng.next_u64() as u32;
+            assert_eq!(cache.set(&key, &v, flags, 0), StoreOutcome::Stored);
+            model.map.insert(key, (v, flags));
+        }
+        4 => {
+            let v = value_of(rng);
+            let got = cache.add(&key, &v, 1, 0);
+            if model.map.contains_key(&key) {
+                assert_eq!(got, StoreOutcome::NotStored);
+            } else {
+                assert_eq!(got, StoreOutcome::Stored);
+                model.map.insert(key, (v, 1));
+            }
+        }
+        5 => {
+            let v = value_of(rng);
+            let got = cache.replace(&key, &v, 2, 0);
+            if model.map.contains_key(&key) {
+                assert_eq!(got, StoreOutcome::Stored);
+                model.map.insert(key, (v, 2));
+            } else {
+                assert_eq!(got, StoreOutcome::NotFound);
+            }
+        }
+        6 => {
+            let got = cache.delete(&key);
+            let want = model.map.remove(&key).is_some();
+            assert_eq!(got, want, "delete({}) diverged", String::from_utf8_lossy(&key));
+        }
+        _ => {
+            // append
+            let suffix = value_of(rng);
+            let got = cache.append(&key, &suffix);
+            match model.map.get_mut(&key) {
+                Some((v, _)) => {
+                    assert_eq!(got, StoreOutcome::Stored);
+                    v.extend_from_slice(&suffix);
+                }
+                None => assert_eq!(got, StoreOutcome::NotStored),
+            }
+        }
+    }
+}
+
+#[test]
+fn engines_match_reference_model() {
+    for engine in ENGINES {
+        run_prop(&format!("model-{engine}"), 0xE1 + engine.len() as u64, |rng| {
+            // Plenty of memory: the model doesn't simulate eviction.
+            let cache = build_engine(engine, CacheConfig {
+                mem_limit: 64 << 20,
+                initial_buckets: 16, // force expansions mid-sequence
+                ..CacheConfig::default()
+            })
+            .unwrap();
+            let mut model = Model::default();
+            for _ in 0..400 {
+                step(cache.as_ref(), &mut model, rng);
+            }
+            // Final sweep: every model key must be present and equal.
+            for (k, (v, flags)) in &model.map {
+                let got = cache.get(k).unwrap_or_else(|| {
+                    panic!("{engine}: key {} lost", String::from_utf8_lossy(k))
+                });
+                assert_eq!((&got.data, got.flags), (v, *flags));
+            }
+            assert_eq!(cache.item_count(), model.map.len(), "{engine} item_count");
+        });
+    }
+}
+
+#[test]
+fn incr_decr_cross_engine_agreement() {
+    for engine in ENGINES {
+        let cache = build_engine(engine, CacheConfig::small()).unwrap();
+        assert_eq!(cache.incr(b"n", 1), None, "{engine}: incr on missing");
+        cache.set(b"n", b"7", 0, 0);
+        assert_eq!(cache.incr(b"n", 3), Some(10), "{engine}");
+        assert_eq!(cache.decr(b"n", 4), Some(6), "{engine}");
+        assert_eq!(cache.decr(b"n", 100), Some(0), "{engine}: saturation");
+        assert_eq!(cache.get(b"n").unwrap().data, b"0", "{engine}");
+        cache.set(b"txt", b"abc", 0, 0);
+        assert_eq!(cache.incr(b"txt", 1), None, "{engine}: non-numeric");
+    }
+}
+
+#[test]
+fn cas_semantics_cross_engine() {
+    for engine in ENGINES {
+        let cache = build_engine(engine, CacheConfig::small()).unwrap();
+        assert_eq!(
+            cache.cas(b"k", b"v", 0, 0, 1),
+            StoreOutcome::NotFound,
+            "{engine}"
+        );
+        cache.set(b"k", b"v1", 0, 0);
+        let t1 = cache.get(b"k").unwrap().cas;
+        assert_eq!(cache.cas(b"k", b"v2", 0, 0, t1), StoreOutcome::Stored, "{engine}");
+        assert_eq!(cache.cas(b"k", b"v3", 0, 0, t1), StoreOutcome::Exists, "{engine}");
+        let t2 = cache.get(b"k").unwrap().cas;
+        assert_ne!(t1, t2, "{engine}: cas token must change on store");
+        assert_eq!(cache.get(b"k").unwrap().data, b"v2", "{engine}");
+    }
+}
+
+#[test]
+fn eviction_under_tight_memory_keeps_serving() {
+    for engine in ENGINES {
+        let cache = build_engine(engine, CacheConfig {
+            mem_limit: 1 << 20,
+            ..CacheConfig::small()
+        })
+        .unwrap();
+        let value = vec![0xCD; 2048];
+        for i in 0..3_000u32 {
+            let key = format!("{engine}-ev-{i}");
+            assert_eq!(
+                cache.set(key.as_bytes(), &value, 0, 0),
+                StoreOutcome::Stored,
+                "{engine}: set #{i} failed under memory pressure"
+            );
+        }
+        assert!(
+            cache.metrics().snapshot().evictions > 0,
+            "{engine}: no evictions despite 6 MiB through a 1 MiB cache"
+        );
+        assert!(
+            cache.mem_used() <= 2 << 20,
+            "{engine}: memory use {} far above limit",
+            cache.mem_used()
+        );
+    }
+}
+
+#[test]
+fn flush_all_cross_engine() {
+    for engine in ENGINES {
+        let cache = build_engine(engine, CacheConfig::small()).unwrap();
+        for i in 0..64u32 {
+            cache.set(format!("f{i}").as_bytes(), b"v", 0, 0);
+        }
+        cache.flush_all();
+        assert_eq!(cache.item_count(), 0, "{engine}");
+        assert!(cache.get(b"f1").is_none(), "{engine}");
+        // Cache still serves after a flush.
+        assert_eq!(cache.set(b"new", b"v", 0, 0), StoreOutcome::Stored, "{engine}");
+        assert!(cache.get(b"new").is_some(), "{engine}");
+    }
+}

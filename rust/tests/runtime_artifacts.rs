@@ -1,0 +1,79 @@
+//! Runtime + artifact integration: load the AOT-compiled planner and
+//! hit-ratio model through PJRT and check their outputs against the
+//! Rust-side contracts. Skipped (with a note) when `make artifacts`
+//! hasn't run — CI order is `make artifacts` → `cargo test`.
+
+use fleec::coordinator::fallback_decision;
+use fleec::runtime::{
+    artifacts_dir, resample_clocks, HitRatioModule, PlannerModule, Runtime, PLANNER_SNAPSHOT,
+};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_dir().join("planner.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new().expect("PJRT CPU client"))
+}
+
+#[test]
+fn planner_artifact_matches_rust_fallback_contract() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let planner = PlannerModule::load(&rt, &artifacts_dir()).expect("load planner");
+    let cases: Vec<(Vec<u8>, f32)> = vec![
+        (vec![0u8; PLANNER_SNAPSHOT], 0.0),
+        (vec![3u8; PLANNER_SNAPSHOT], 1.0),
+        (vec![3u8; PLANNER_SNAPSHOT], 0.2),
+        (
+            (0..PLANNER_SNAPSHOT).map(|i| (i % 4) as u8).collect(),
+            0.9,
+        ),
+        (
+            (0..PLANNER_SNAPSHOT).map(|i| ((i * 7) % 5) as u8).collect(),
+            0.6,
+        ),
+    ];
+    for (clocks, pressure) in cases {
+        let sampled = resample_clocks(&clocks);
+        let got = planner.run(&sampled, pressure).expect("planner run");
+        let want = fallback_decision(&clocks, pressure, 3);
+        assert_eq!(got.decay, want.decay, "decay @ pressure {pressure}");
+        assert_eq!(got.batch, want.batch, "batch @ pressure {pressure}");
+        assert!(
+            (got.evictable_frac - want.evictable_frac).abs() < 1e-4,
+            "evictable {} vs {}",
+            got.evictable_frac,
+            want.evictable_frac
+        );
+        assert_eq!(got.histogram, want.histogram, "histogram");
+    }
+}
+
+#[test]
+fn hit_ratio_artifact_sane_and_monotone() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let model = HitRatioModule::load(&rt, &artifacts_dir()).expect("load model");
+    let mut last_lru = 0.0f32;
+    for cap in [100.0f32, 1_000.0, 10_000.0, 50_000.0] {
+        let est = model.run(0.99, cap).expect("run");
+        assert!(est.lru >= 0.0 && est.lru <= 1.0);
+        assert!(est.fifo >= 0.0 && est.fifo <= 1.0);
+        assert!(est.fifo <= est.lru + 1e-4, "FIFO must not beat LRU");
+        assert!(est.lru >= last_lru - 1e-5, "LRU hit must grow with capacity");
+        last_lru = est.lru;
+    }
+    // Skew monotonicity at fixed capacity.
+    let low = model.run(0.5, 1_000.0).unwrap();
+    let high = model.run(1.2, 1_000.0).unwrap();
+    assert!(high.lru > low.lru, "more skew → higher hit ratio");
+}
+
+#[test]
+fn planner_is_deterministic() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let planner = PlannerModule::load(&rt, &artifacts_dir()).expect("load");
+    let clocks = resample_clocks(&(0..8192).map(|i| (i % 3) as u8).collect::<Vec<_>>());
+    let a = planner.run(&clocks, 0.5).unwrap();
+    let b = planner.run(&clocks, 0.5).unwrap();
+    assert_eq!(a, b);
+}
