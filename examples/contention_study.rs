@@ -39,6 +39,7 @@ fn main() -> fleec::Result<()> {
             prefill: true,
             sample_every: 8,
             validate: false,
+            batch: 1,
         };
         let mut tputs = Vec::new();
         for engine in ENGINES {

@@ -84,6 +84,7 @@ fn ablation_evict_batch() {
             prefill: false,
             sample_every: 32,
             validate: false,
+            batch: 1,
         };
         let report = run_driver(&cache, &spec, &opts);
         let m = cache.metrics().snapshot();
@@ -144,6 +145,7 @@ fn ablation_lock_stripes() {
         prefill: true,
         sample_every: 16,
         validate: false,
+        batch: 1,
     };
     // FLeeC reference point.
     let fleec = build_engine(

@@ -1,0 +1,119 @@
+//! Batch-depth sweep — the experiment behind the batched command API.
+//!
+//! ```bash
+//! cargo bench --bench batch_pipeline
+//! ```
+//!
+//! Sections:
+//!   in-process — the workload driver issuing depth-1/4/16/64 batches
+//!                through `Cache::execute_batch`, all three engines. The
+//!                blocking engines run the default per-op delegation (a
+//!                batch costs what its ops cost); fleec's override pins
+//!                one EBR guard per batch, so its ops/s should be
+//!                non-decreasing as depth grows.
+//!   wire       — a single pipelined connection against the served fleec
+//!                engine (`Client::pipeline`), measuring the end-to-end
+//!                win of one `execute_batch` call per socket read.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fleec::cache::{build_engine, CacheConfig, ENGINES};
+use fleec::client::{Client, PipelineReply};
+use fleec::server::{Server, ServerConfig};
+use fleec::workload::{driver::StopRule, run_driver, DriverOptions, ValueSize, WorkloadSpec};
+
+const DEPTHS: [usize; 4] = [1, 4, 16, 64];
+
+fn main() {
+    let spec = WorkloadSpec {
+        catalog: 50_000,
+        alpha: 0.99,
+        read_ratio: 0.95,
+        value_size: ValueSize::Fixed(64),
+        seed: 0xBA7C_4ED0,
+    };
+
+    println!("== in-process: batch depth vs throughput (threads=4) ==============");
+    println!("{:>10} {:>6} {:>12} {:>8}", "engine", "batch", "ops/s", "hit");
+    for engine in ENGINES {
+        let mut prev = 0.0f64;
+        for &depth in &DEPTHS {
+            let cache = build_engine(
+                engine,
+                CacheConfig {
+                    mem_limit: 64 << 20,
+                    ..CacheConfig::default()
+                },
+            )
+            .unwrap();
+            let opts = DriverOptions {
+                threads: 4,
+                stop: StopRule::OpsPerThread(150_000),
+                prefill: true,
+                sample_every: 16,
+                validate: false,
+                batch: depth,
+            };
+            let report = run_driver(&cache, &spec, &opts);
+            let tput = report.throughput();
+            // Flag regressions >5% against the previous depth: fleec's
+            // batched fast path should keep this column non-decreasing.
+            let trend = if prev > 0.0 && tput < prev * 0.95 { "  <- dip" } else { "" };
+            println!(
+                "{:>10} {:>6} {:>12.0} {:>8.4}{trend}",
+                engine,
+                depth,
+                tput,
+                report.hit_ratio()
+            );
+            prev = tput;
+        }
+        println!();
+    }
+
+    println!("== wire: fleec, one connection, pipelined mixed get/set ===========");
+    let cache = build_engine("fleec", CacheConfig::default()).unwrap();
+    let server = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            nodelay: true,
+        },
+        Arc::clone(&cache),
+    )
+    .unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let catalog = 1024usize;
+    for i in 0..catalog {
+        client
+            .set(format!("net-{i}").as_bytes(), b"0123456789abcdef", 0, 0)
+            .unwrap();
+    }
+    for &depth in &DEPTHS {
+        let rounds = 20_000 / depth;
+        let mut hits = 0usize;
+        let t0 = Instant::now();
+        for r in 0..rounds {
+            let mut p = client.pipeline();
+            for j in 0..depth {
+                let id = (r * depth + j) % catalog;
+                if (r * depth + j) % 20 == 19 {
+                    p.set(format!("net-{id}").as_bytes(), b"fedcba9876543210", 0, 0);
+                } else {
+                    p.get(format!("net-{id}").as_bytes());
+                }
+            }
+            for reply in p.run().unwrap() {
+                if matches!(&reply, PipelineReply::Values(v) if !v.is_empty()) {
+                    hits += 1;
+                }
+            }
+        }
+        let ops = rounds * depth;
+        let tput = ops as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "depth {:>3}: {:>10.0} ops/s   ({ops} ops, {hits} get hits)",
+            depth, tput
+        );
+    }
+}

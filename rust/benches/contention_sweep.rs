@@ -41,6 +41,7 @@ fn main() {
                 prefill: true,
                 sample_every: 16,
                 validate: false,
+                batch: 1,
             };
             let mut tput = Vec::new();
             for engine in ENGINES {

@@ -43,6 +43,7 @@ fn main() {
             prefill: true,
             sample_every: 1, // every op: tails need samples
             validate: false,
+            batch: 1,
         };
         let mut p99s = Vec::new();
         for engine in ENGINES {

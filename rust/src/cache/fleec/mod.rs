@@ -22,8 +22,8 @@ use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, 
 use std::sync::Arc;
 
 use crate::cache::{
-    deadline_from_exptime, hash_key, is_expired, Cache, CacheConfig, GetResult, StoreOutcome,
-    MAX_KEY_LEN,
+    deadline_from_exptime, hash_key, is_expired, Cache, CacheConfig, GetResult, Op, OpResult,
+    StoreOutcome, MAX_KEY_LEN,
 };
 use crate::ebr::{Collector, Guard};
 use crate::metrics::EngineMetrics;
@@ -34,6 +34,10 @@ use table::{migrate_bucket, search, Find, Table};
 
 /// Allocation-retry rounds before a store reports `OutOfMemory`.
 const OOM_ROUNDS: usize = 8;
+
+/// Pre-allocation slot for one batch op: `None` for non-storage ops,
+/// otherwise the ready item or the terminal staging failure.
+type StagedItem = Option<Result<*mut Item, StoreOutcome>>;
 
 /// The FLeeC cache engine.
 pub struct FleecCache {
@@ -358,16 +362,36 @@ impl FleecCache {
         }
         self.metrics.sets.inc();
         let deadline = deadline_from_exptime(exptime);
-        let cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
-        let item = match self.alloc_item_pressured(value, flags, deadline, cas) {
+        let item = match self.alloc_item_pressured(value, flags, deadline, 0) {
             Ok(i) => i,
             Err(e) => return e,
         };
         let hash = hash_key(key);
         let guard = self.collector.pin();
+        self.store_prealloc(key, hash, item, mode, &guard)
+    }
+
+    /// Install a pre-allocated `item` under `key` (metrics-free; the
+    /// caller has already counted the set and may hold a batch-wide
+    /// guard). Owns `item`: frees it on any non-`Stored` outcome.
+    ///
+    /// The CAS token is stamped here — at *install* time, not allocation
+    /// time — so a batch that pre-allocates its items up front still
+    /// hands out tokens in execution order, and batched runs produce the
+    /// exact token sequence a sequential run would.
+    fn store_prealloc(
+        &self,
+        key: &[u8],
+        hash: u64,
+        item: *mut Item,
+        mode: StoreMode,
+        guard: &Guard,
+    ) -> StoreOutcome {
+        let cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
+        unsafe { (*item).cas = cas };
         let mut shell: *mut Node = std::ptr::null_mut();
         let outcome = loop {
-            let (t, find) = self.locate_for_write(hash, key, &guard);
+            let (t, find) = self.locate_for_write(hash, key, guard);
             match find {
                 Find::Found(n) => {
                     let node = unsafe { &*n };
@@ -376,7 +400,7 @@ impl FleecCache {
                         ItemState::Live(old) => {
                             // Preconditions against the live value.
                             let expired = is_expired(unsafe { (*old).deadline });
-                            if expired && self.expire_node(node, w, old, &guard) {
+                            if expired && self.expire_node(node, w, old, guard) {
                                 continue; // now absent; loop decides
                             }
                             match mode {
@@ -391,7 +415,7 @@ impl FleecCache {
                                 .compare_exchange(w, live_word(item), Ordering::AcqRel, Ordering::Acquire)
                                 .is_ok()
                             {
-                                Item::retire(&guard, &self.slab, old);
+                                Item::retire(guard, &self.slab, old);
                                 self.touch_clock(t, hash);
                                 break StoreOutcome::Stored;
                             }
@@ -435,7 +459,7 @@ impl FleecCache {
                         shell = std::ptr::null_mut(); // published
                         self.items.fetch_add(1, Ordering::Relaxed);
                         self.seed_clock(t, hash);
-                        self.maybe_expand(&guard);
+                        self.maybe_expand(guard);
                         break StoreOutcome::Stored;
                     }
                 }
@@ -450,6 +474,104 @@ impl FleecCache {
             unsafe { self.slab.free(item as *mut u8, (*item).class) };
         }
         outcome
+    }
+
+    /// Resolve one staged storage op from [`Cache::execute_batch`]'s
+    /// pre-allocation phase: install the item, or surface the staging
+    /// failure (invalid key, too large, out of memory).
+    fn finish_staged(
+        &self,
+        key: &[u8],
+        hash: u64,
+        staged: StagedItem,
+        mode: StoreMode,
+        guard: &Guard,
+    ) -> StoreOutcome {
+        match staged.expect("storage op was not staged in phase A") {
+            Ok(item) => self.store_prealloc(key, hash, item, mode, guard),
+            Err(e) => e,
+        }
+    }
+
+    /// Guard-passing lookup core (metrics-free): the body of [`Cache::get`]
+    /// minus pinning and counting, shared by the single-key path and the
+    /// batched fast path.
+    fn get_in(&self, key: &[u8], hash: u64, guard: &Guard) -> Option<GetResult> {
+        let mut t = self.root(guard);
+        loop {
+            match search(t, hash, key, false, guard) {
+                Find::Found(n) => {
+                    let node = unsafe { &*n };
+                    let w = node.item.load(Ordering::Acquire);
+                    match decode_item(w) {
+                        ItemState::Live(item) => {
+                            let hdr = unsafe { &*item };
+                            if is_expired(hdr.deadline) {
+                                self.expire_node(node, w, item, guard);
+                                return None;
+                            }
+                            let data = unsafe { Item::data(item) }.to_vec();
+                            let result = GetResult {
+                                flags: hdr.flags,
+                                cas: hdr.cas,
+                                data,
+                            };
+                            self.touch_clock(t, hash);
+                            return Some(result);
+                        }
+                        ItemState::Tomb => return None,
+                        ItemState::Moved => {
+                            let next = t.next.load(Ordering::Acquire);
+                            if next.is_null() {
+                                return None;
+                            }
+                            t = unsafe { &*next };
+                        }
+                    }
+                }
+                Find::Forwarded => {
+                    let next = t.next.load(Ordering::Acquire);
+                    if next.is_null() {
+                        return None;
+                    }
+                    t = unsafe { &*next };
+                }
+                Find::Absent { .. } | Find::Frozen => return None,
+            }
+        }
+    }
+
+    /// Guard-passing delete core (metrics-free); see [`Cache::delete`].
+    fn delete_in(&self, key: &[u8], hash: u64, guard: &Guard) -> bool {
+        loop {
+            let (_, find) = self.locate_for_write(hash, key, guard);
+            match find {
+                Find::Found(n) => {
+                    let node = unsafe { &*n };
+                    let w = node.item.load(Ordering::Acquire);
+                    match decode_item(w) {
+                        ItemState::Live(item) => {
+                            if node
+                                .item
+                                .compare_exchange(w, TOMB_WORD, Ordering::AcqRel, Ordering::Acquire)
+                                .is_ok()
+                            {
+                                Item::retire(guard, &self.slab, item);
+                                self.items.fetch_sub(1, Ordering::Relaxed);
+                                Self::try_mark(node);
+                                // Nudge physical cleanup.
+                                let _ = search(self.root(guard), hash, key, false, guard);
+                                return true;
+                            }
+                        }
+                        ItemState::Tomb => return false,
+                        ItemState::Moved => continue,
+                    }
+                }
+                Find::Absent { .. } => return false,
+                _ => unreachable!(),
+            }
+        }
     }
 
     /// Read-modify-write with the CAS-token race detector:
@@ -564,62 +686,178 @@ impl Cache for FleecCache {
         "fleec"
     }
 
+    /// The batched fast path: the whole batch crosses the engine once.
+    ///
+    /// * **One EBR guard** is pinned for the entire batch (the default
+    ///   impl pins once per op); ops that pin internally nest re-entrantly
+    ///   at zero cost.
+    /// * Keys are **pre-hashed** up front and the bucket heads touched in
+    ///   ascending bucket order, so execution finds the hot cache lines
+    ///   resident.
+    /// * Items for plain storage ops are **pre-allocated before pinning**
+    ///   — allocation is the one step that may need to force reclamation,
+    ///   which wants quiescence. (Under memory pressure this phase may
+    ///   pin internally to evict; the one-guard property holds on the
+    ///   uncontended fast path.)
+    /// * Metrics are **batched**: one sharded-counter add per counter per
+    ///   batch instead of one per op.
+    ///
+    /// Execution order is strictly the batch order — results and final
+    /// state are identical to running the ops sequentially, including
+    /// the `cas`-token sequence (tokens are stamped at install time) —
+    /// **absent memory pressure**. At the memory limit two deliberate
+    /// deviations exist: pre-allocation can trigger eviction before the
+    /// batch's reads run, and RMW ops allocating under the held guard
+    /// reclaim less effectively (their own pin caps epoch advancement
+    /// at one), so eviction victims and `OutOfMemory` outcomes may
+    /// differ from a sequential run.
+    fn execute_batch(&self, ops: &[Op<'_>]) -> Vec<OpResult> {
+        if ops.is_empty() {
+            return Vec::new();
+        }
+        // Phase A (unpinned): pre-hash, validate keys, pre-allocate
+        // storage items. `staged[i]` holds the ready item (or terminal
+        // outcome) for storage ops, `None` for everything else.
+        let hashes: Vec<u64> = ops.iter().map(|op| hash_key(op.key())).collect();
+        let mut staged: Vec<StagedItem> = Vec::with_capacity(ops.len());
+        let mut sets = 0u64;
+        for op in ops {
+            let stage = match *op {
+                Op::Set {
+                    key,
+                    value,
+                    flags,
+                    exptime,
+                }
+                | Op::Add {
+                    key,
+                    value,
+                    flags,
+                    exptime,
+                }
+                | Op::Replace {
+                    key,
+                    value,
+                    flags,
+                    exptime,
+                }
+                | Op::CasOp {
+                    key,
+                    value,
+                    flags,
+                    exptime,
+                    ..
+                } => {
+                    if key.len() > MAX_KEY_LEN || key.is_empty() {
+                        Some(Err(StoreOutcome::NotStored))
+                    } else {
+                        sets += 1;
+                        let deadline = deadline_from_exptime(exptime);
+                        // CAS token 0 here; store_prealloc stamps the real
+                        // one at install time to keep sequential ordering.
+                        Some(self.alloc_item_pressured(value, flags, deadline, 0))
+                    }
+                }
+                _ => None,
+            };
+            staged.push(stage);
+        }
+
+        // Phase B (pinned once): prefetch bucket heads, then execute in
+        // batch order under the single guard.
+        let (mut gets, mut hits, mut misses, mut deletes) = (0u64, 0u64, 0u64, 0u64);
+        let mut results = Vec::with_capacity(ops.len());
+        {
+            let guard = self.collector.pin();
+            // Touch every bucket head in ascending bucket order (grouped
+            // duplicates collapse into one line): a sequential sweep the
+            // prefetcher can follow, instead of the batch's random walk.
+            // Pointless for a singleton batch — execution follows
+            // immediately — so depth-1 callers skip the sort entirely.
+            if ops.len() > 1 {
+                let t = self.root(&guard);
+                let mut order: Vec<u32> = (0..ops.len() as u32).collect();
+                order.sort_unstable_by_key(|&i| t.index(hashes[i as usize]));
+                for &i in &order {
+                    let _ = t.buckets[t.index(hashes[i as usize])].load(Ordering::Relaxed);
+                }
+            }
+            for (i, op) in ops.iter().enumerate() {
+                let hash = hashes[i];
+                let r = match *op {
+                    Op::Get { key } => {
+                        gets += 1;
+                        let v = self.get_in(key, hash, &guard);
+                        if v.is_some() {
+                            hits += 1;
+                        } else {
+                            misses += 1;
+                        }
+                        OpResult::Value(v)
+                    }
+                    Op::Set { key, .. } => {
+                        OpResult::Store(self.finish_staged(key, hash, staged[i], StoreMode::Set, &guard))
+                    }
+                    Op::Add { key, .. } => {
+                        OpResult::Store(self.finish_staged(key, hash, staged[i], StoreMode::Add, &guard))
+                    }
+                    Op::Replace { key, .. } => OpResult::Store(self.finish_staged(
+                        key,
+                        hash,
+                        staged[i],
+                        StoreMode::Replace,
+                        &guard,
+                    )),
+                    Op::CasOp { key, cas, .. } => OpResult::Store(self.finish_staged(
+                        key,
+                        hash,
+                        staged[i],
+                        StoreMode::Cas(cas),
+                        &guard,
+                    )),
+                    Op::Delete { key } => {
+                        deletes += 1;
+                        OpResult::Deleted(self.delete_in(key, hash, &guard))
+                    }
+                    // RMW ops allocate mid-flight by design (their 3-phase
+                    // loop); they run under the outer guard via re-entrant
+                    // pins. Rare in batches; kept on the shared path.
+                    Op::Append { key, suffix } => OpResult::Store(self.append(key, suffix)),
+                    Op::Prepend { key, prefix } => OpResult::Store(self.prepend(key, prefix)),
+                    Op::Incr { key, delta } => OpResult::Counter(self.incr(key, delta)),
+                    Op::Decr { key, delta } => OpResult::Counter(self.decr(key, delta)),
+                    Op::Touch { key, exptime } => OpResult::Touched(self.touch(key, exptime)),
+                };
+                results.push(r);
+            }
+        }
+
+        // Phase C: one counter update each for the whole batch.
+        if gets > 0 {
+            self.metrics.gets.add(gets);
+            self.metrics.hits.add(hits);
+            self.metrics.misses.add(misses);
+        }
+        if sets > 0 {
+            self.metrics.sets.add(sets);
+        }
+        if deletes > 0 {
+            self.metrics.deletes.add(deletes);
+        }
+        results
+    }
+
     fn get(&self, key: &[u8]) -> Option<GetResult> {
         self.metrics.gets.inc();
         let hash = hash_key(key);
         let guard = self.collector.pin();
-        let mut t = self.root(&guard);
-        loop {
-            match search(t, hash, key, false, &guard) {
-                Find::Found(n) => {
-                    let node = unsafe { &*n };
-                    let w = node.item.load(Ordering::Acquire);
-                    match decode_item(w) {
-                        ItemState::Live(item) => {
-                            let hdr = unsafe { &*item };
-                            if is_expired(hdr.deadline) {
-                                self.expire_node(node, w, item, &guard);
-                                self.metrics.misses.inc();
-                                return None;
-                            }
-                            let data = unsafe { Item::data(item) }.to_vec();
-                            let result = GetResult {
-                                flags: hdr.flags,
-                                cas: hdr.cas,
-                                data,
-                            };
-                            self.touch_clock(t, hash);
-                            self.metrics.hits.inc();
-                            return Some(result);
-                        }
-                        ItemState::Tomb => {
-                            self.metrics.misses.inc();
-                            return None;
-                        }
-                        ItemState::Moved => {
-                            let next = t.next.load(Ordering::Acquire);
-                            if next.is_null() {
-                                self.metrics.misses.inc();
-                                return None;
-                            }
-                            t = unsafe { &*next };
-                        }
-                    }
-                }
-                Find::Forwarded => {
-                    let next = t.next.load(Ordering::Acquire);
-                    if next.is_null() {
-                        self.metrics.misses.inc();
-                        return None;
-                    }
-                    t = unsafe { &*next };
-                }
-                Find::Absent { .. } | Find::Frozen => {
-                    self.metrics.misses.inc();
-                    return None;
-                }
-            }
+        let r = self.get_in(key, hash, &guard);
+        if r.is_some() {
+            self.metrics.hits.inc();
+        } else {
+            self.metrics.misses.inc();
         }
+        r
     }
 
     fn set(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
@@ -670,35 +908,7 @@ impl Cache for FleecCache {
         self.metrics.deletes.inc();
         let hash = hash_key(key);
         let guard = self.collector.pin();
-        loop {
-            let (_, find) = self.locate_for_write(hash, key, &guard);
-            match find {
-                Find::Found(n) => {
-                    let node = unsafe { &*n };
-                    let w = node.item.load(Ordering::Acquire);
-                    match decode_item(w) {
-                        ItemState::Live(item) => {
-                            if node
-                                .item
-                                .compare_exchange(w, TOMB_WORD, Ordering::AcqRel, Ordering::Acquire)
-                                .is_ok()
-                            {
-                                Item::retire(&guard, &self.slab, item);
-                                self.items.fetch_sub(1, Ordering::Relaxed);
-                                Self::try_mark(node);
-                                // Nudge physical cleanup.
-                                let _ = search(self.root(&guard), hash, key, false, &guard);
-                                return true;
-                            }
-                        }
-                        ItemState::Tomb => return false,
-                        ItemState::Moved => continue,
-                    }
-                }
-                Find::Absent { .. } => return false,
-                _ => unreachable!(),
-            }
-        }
+        self.delete_in(key, hash, &guard)
     }
 
     fn incr(&self, key: &[u8], delta: u64) -> Option<u64> {
@@ -1064,6 +1274,50 @@ mod tests {
             }
         }
         c.collector().force_reclaim(4);
+    }
+
+    #[test]
+    fn batched_ops_execute_in_order_with_one_guard() {
+        let c = small();
+        let ops = [
+            Op::Set {
+                key: b"k",
+                value: b"v1",
+                flags: 0,
+                exptime: 0,
+            },
+            Op::Get { key: b"k" },
+            Op::Set {
+                key: b"k",
+                value: b"v2",
+                flags: 0,
+                exptime: 0,
+            },
+            Op::Get { key: b"k" },
+            Op::Delete { key: b"k" },
+            Op::Get { key: b"k" },
+        ];
+        let before = c.collector().top_level_pins();
+        let rs = c.execute_batch(&ops);
+        let after = c.collector().top_level_pins();
+        if cfg!(debug_assertions) {
+            assert_eq!(after - before, 1, "batch must pin exactly one guard");
+        }
+        assert_eq!(rs[0], OpResult::Store(StoreOutcome::Stored));
+        match &rs[1] {
+            OpResult::Value(Some(r)) => assert_eq!(r.data, b"v1"),
+            other => panic!("{other:?}"),
+        }
+        match &rs[3] {
+            OpResult::Value(Some(r)) => assert_eq!(r.data, b"v2"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(rs[4], OpResult::Deleted(true));
+        assert_eq!(rs[5], OpResult::Value(None));
+        // Batched metrics landed with per-batch adds, not per-op incs.
+        let m = c.metrics.snapshot();
+        assert_eq!((m.gets, m.hits, m.misses), (3, 2, 1));
+        assert_eq!((m.sets, m.deletes), (2, 1));
     }
 
     #[test]

@@ -9,6 +9,9 @@
 pub mod fleec;
 pub mod memcached;
 pub mod memclock;
+pub mod op;
+
+pub use op::{Op, OpResult};
 
 use std::sync::Arc;
 
@@ -86,9 +89,32 @@ impl CacheConfig {
 }
 
 /// The engine-neutral cache interface (Memcached text-protocol semantics).
+///
+/// The API is two-tier: the single-key methods below are the convenience
+/// tier, and [`Cache::execute_batch`] is the batched core the serving
+/// plane uses. The default `execute_batch` delegates to the single-key
+/// methods (one trait crossing per op), so engines only override it when
+/// they can amortize per-op synchronization — FLeeC pins one EBR guard
+/// per batch instead of one per op.
 pub trait Cache: Send + Sync {
     /// Engine identifier used by the CLI / benches.
     fn engine_name(&self) -> &'static str;
+
+    /// Execute a batch of typed commands, returning one result per op in
+    /// input order. Must be indistinguishable from running the ops
+    /// sequentially through the single-key methods (same results, state
+    /// and `cas`-token sequence); engines override it only to cut
+    /// per-operation synchronization cost.
+    ///
+    /// Caveat at the memory limit: a batching engine may pre-allocate a
+    /// batch's storage up front and hold synchronization state across
+    /// it, so *which* victims get evicted — and whether a store reports
+    /// `OutOfMemory` — can differ from a sequential run under pressure.
+    /// Per-op semantics (preconditions, cas gating, reply values for
+    /// the state actually observed) are honored regardless.
+    fn execute_batch(&self, ops: &[Op<'_>]) -> Vec<OpResult> {
+        op::execute_sequential(self, ops)
+    }
 
     /// Look up `key`; bumps recency on hit.
     fn get(&self, key: &[u8]) -> Option<GetResult>;

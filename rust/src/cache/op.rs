@@ -1,0 +1,220 @@
+//! Typed, owner-less command representation — the batched half of the
+//! two-tier cache API.
+//!
+//! [`Op`] is one cache command with **borrowed** keys/values (no
+//! allocation to build a batch; the server borrows straight from its read
+//! buffer, the driver from its per-thread scratch buffers). [`OpResult`]
+//! mirrors the protocol's reply space one-to-one, so a reply writer can
+//! render a result without consulting the op that produced it.
+//!
+//! [`crate::cache::Cache::execute_batch`] takes a slice of ops and returns
+//! one result per op, **in order**. The contract every engine must obey:
+//! a batch behaves exactly like issuing its ops sequentially through the
+//! single-key convenience methods — same results, same final state, same
+//! `cas`-token sequence. Batching is purely a *synchronization* optimization
+//! (the FLeeC engine pins one EBR guard for a whole batch instead of one
+//! per op), never a semantic one. `rust/tests/batch_semantics.rs` holds
+//! every engine to this equivalence. (Sole carve-out, documented on the
+//! trait: at the memory limit, eviction timing and `OutOfMemory`
+//! outcomes may differ from a sequential run.)
+
+use super::{Cache, GetResult, StoreOutcome};
+
+/// One cache command, borrowing key/value bytes from the caller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op<'a> {
+    /// Look up a key (`get`/`gets` — CAS tokens are always returned).
+    Get { key: &'a [u8] },
+    /// Unconditional store.
+    Set {
+        key: &'a [u8],
+        value: &'a [u8],
+        flags: u32,
+        exptime: u32,
+    },
+    /// Store only if absent.
+    Add {
+        key: &'a [u8],
+        value: &'a [u8],
+        flags: u32,
+        exptime: u32,
+    },
+    /// Store only if present.
+    Replace {
+        key: &'a [u8],
+        value: &'a [u8],
+        flags: u32,
+        exptime: u32,
+    },
+    /// Append bytes to an existing value.
+    Append { key: &'a [u8], suffix: &'a [u8] },
+    /// Prepend bytes to an existing value.
+    Prepend { key: &'a [u8], prefix: &'a [u8] },
+    /// Compare-and-store against a token from a previous read.
+    CasOp {
+        key: &'a [u8],
+        value: &'a [u8],
+        flags: u32,
+        exptime: u32,
+        cas: u64,
+    },
+    /// Remove a key.
+    Delete { key: &'a [u8] },
+    /// Increment a decimal value.
+    Incr { key: &'a [u8], delta: u64 },
+    /// Decrement a decimal value (saturating at 0).
+    Decr { key: &'a [u8], delta: u64 },
+    /// Update expiry only.
+    Touch { key: &'a [u8], exptime: u32 },
+}
+
+impl<'a> Op<'a> {
+    /// The key this op addresses.
+    #[inline]
+    pub fn key(&self) -> &'a [u8] {
+        match *self {
+            Op::Get { key }
+            | Op::Set { key, .. }
+            | Op::Add { key, .. }
+            | Op::Replace { key, .. }
+            | Op::Append { key, .. }
+            | Op::Prepend { key, .. }
+            | Op::CasOp { key, .. }
+            | Op::Delete { key }
+            | Op::Incr { key, .. }
+            | Op::Decr { key, .. }
+            | Op::Touch { key, .. } => key,
+        }
+    }
+
+    /// Whether the op leaves cache state untouched (modulo recency).
+    #[inline]
+    pub fn is_read(&self) -> bool {
+        matches!(self, Op::Get { .. })
+    }
+}
+
+/// Result of one executed [`Op`], index-aligned with the input batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OpResult {
+    /// `Get` outcome (`None` = miss).
+    Value(Option<GetResult>),
+    /// Outcome of any of the six storage commands.
+    Store(StoreOutcome),
+    /// `Delete` outcome: whether the key was present.
+    Deleted(bool),
+    /// `Incr`/`Decr` outcome (`None` = missing or non-numeric).
+    Counter(Option<u64>),
+    /// `Touch` outcome: whether the key was present.
+    Touched(bool),
+}
+
+/// Execute one op through the single-key convenience methods.
+pub fn execute_one<C: Cache + ?Sized>(cache: &C, op: &Op<'_>) -> OpResult {
+    match *op {
+        Op::Get { key } => OpResult::Value(cache.get(key)),
+        Op::Set {
+            key,
+            value,
+            flags,
+            exptime,
+        } => OpResult::Store(cache.set(key, value, flags, exptime)),
+        Op::Add {
+            key,
+            value,
+            flags,
+            exptime,
+        } => OpResult::Store(cache.add(key, value, flags, exptime)),
+        Op::Replace {
+            key,
+            value,
+            flags,
+            exptime,
+        } => OpResult::Store(cache.replace(key, value, flags, exptime)),
+        Op::Append { key, suffix } => OpResult::Store(cache.append(key, suffix)),
+        Op::Prepend { key, prefix } => OpResult::Store(cache.prepend(key, prefix)),
+        Op::CasOp {
+            key,
+            value,
+            flags,
+            exptime,
+            cas,
+        } => OpResult::Store(cache.cas(key, value, flags, exptime, cas)),
+        Op::Delete { key } => OpResult::Deleted(cache.delete(key)),
+        Op::Incr { key, delta } => OpResult::Counter(cache.incr(key, delta)),
+        Op::Decr { key, delta } => OpResult::Counter(cache.decr(key, delta)),
+        Op::Touch { key, exptime } => OpResult::Touched(cache.touch(key, exptime)),
+    }
+}
+
+/// Reference batch executor: one trait crossing per op. This is the
+/// default [`Cache::execute_batch`] body, and the semantic oracle the
+/// equivalence tests compare fast paths against.
+pub fn execute_sequential<C: Cache + ?Sized>(cache: &C, ops: &[Op<'_>]) -> Vec<OpResult> {
+    ops.iter().map(|op| execute_one(cache, op)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{build_engine, CacheConfig};
+
+    #[test]
+    fn op_key_extraction_covers_all_variants() {
+        let ops = [
+            Op::Get { key: b"k" },
+            Op::Set {
+                key: b"k",
+                value: b"v",
+                flags: 0,
+                exptime: 0,
+            },
+            Op::Append {
+                key: b"k",
+                suffix: b"s",
+            },
+            Op::Delete { key: b"k" },
+            Op::Incr { key: b"k", delta: 1 },
+            Op::Touch { key: b"k", exptime: 5 },
+        ];
+        for op in &ops {
+            assert_eq!(op.key(), b"k");
+        }
+        assert!(ops[0].is_read());
+        assert!(!ops[1].is_read());
+    }
+
+    #[test]
+    fn default_batch_matches_single_key_methods() {
+        for engine in crate::cache::ENGINES {
+            let cache = build_engine(engine, CacheConfig::small()).unwrap();
+            let ops = [
+                Op::Set {
+                    key: b"a",
+                    value: b"1",
+                    flags: 7,
+                    exptime: 0,
+                },
+                Op::Get { key: b"a" },
+                Op::Incr { key: b"a", delta: 41 },
+                Op::Get { key: b"missing" },
+                Op::Delete { key: b"a" },
+                Op::Delete { key: b"a" },
+            ];
+            let results = cache.execute_batch(&ops);
+            assert_eq!(results.len(), ops.len(), "{engine}");
+            assert_eq!(results[0], OpResult::Store(StoreOutcome::Stored), "{engine}");
+            match &results[1] {
+                OpResult::Value(Some(r)) => {
+                    assert_eq!(r.data, b"1", "{engine}");
+                    assert_eq!(r.flags, 7, "{engine}");
+                }
+                other => panic!("{engine}: {other:?}"),
+            }
+            assert_eq!(results[2], OpResult::Counter(Some(42)), "{engine}");
+            assert_eq!(results[3], OpResult::Value(None), "{engine}");
+            assert_eq!(results[4], OpResult::Deleted(true), "{engine}");
+            assert_eq!(results[5], OpResult::Deleted(false), "{engine}");
+        }
+    }
+}

@@ -124,6 +124,7 @@ fn print_usage() {
                        [--buckets N] [--clock-max K] [--no-planner]\n\
          bench         --engine all|<name> --alpha 0.99 --threads 8 --ops 200000\n\
                        [--catalog N] [--value-bytes N] [--read-ratio R] [--mem-mb N]\n\
+                       [--batch N]  (ops per engine crossing; >1 uses execute_batch)\n\
          hit-ratio     --alpha 0.99 --catalog 100000 --mem-mb 4 [--trace-len N]\n\
          planner-demo  (load artifacts, run the planner once, print the decision)\n\
          version"
@@ -181,6 +182,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
         prefill: true,
         sample_every: args.get_or("sample-every", 4u64),
         validate: args.has_flag("validate"),
+        batch: args.get_or("batch", 1usize),
     };
     let engine_sel = args.get_str("engine", "all");
     let engines: Vec<&str> = if engine_sel == "all" {
@@ -189,8 +191,9 @@ fn cmd_bench(args: &Args) -> Result<i32> {
         vec![engine_sel]
     };
     println!(
-        "# workload: alpha={} reads={} catalog={} value={:?} threads={} ops/thread={:?}",
-        spec.alpha, spec.read_ratio, spec.catalog, spec.value_size, opts.threads, opts.stop
+        "# workload: alpha={} reads={} catalog={} value={:?} threads={} ops/thread={:?} batch={}",
+        spec.alpha, spec.read_ratio, spec.catalog, spec.value_size, opts.threads, opts.stop,
+        opts.batch
     );
     let mut base_tput = None;
     for name in engines {

@@ -2,8 +2,10 @@
 //!
 //! Used by the end-to-end example, the network benches and the
 //! integration tests. Deliberately simple: one connection, synchronous
-//! request/response, plus a `pipeline_set`/`mget` fast path for batched
-//! load generation.
+//! request/response — plus [`Client::pipeline`], which queues N ops,
+//! ships them in one write and decodes N replies in order (the client
+//! half of the server's one-`execute_batch`-per-read fast path), and the
+//! `set_noreply`/`mget` helpers for load generation.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -38,17 +40,20 @@ impl Client {
         })
     }
 
+    /// Read one reply line (without the trailing CRLF). Byte-level
+    /// (`read_until`) rather than `BufRead::read_line`, which errors on
+    /// non-UTF-8 input — reply *headers* are ASCII, but decoding must
+    /// never be derailed by whatever bytes a desynced stream delivers.
     fn read_line(&mut self) -> Result<String> {
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        while !line.ends_with('\n') {
-            let mut more = String::new();
-            if self.reader.read_line(&mut more)? == 0 {
-                break;
-            }
-            line.push_str(&more);
+        let mut raw = Vec::new();
+        self.reader.read_until(b'\n', &mut raw)?;
+        if raw.is_empty() {
+            anyhow::bail!("connection closed mid-reply");
         }
-        Ok(line.trim_end().to_string())
+        while matches!(raw.last(), Some(b'\n' | b'\r')) {
+            raw.pop();
+        }
+        Ok(String::from_utf8_lossy(&raw).into_owned())
     }
 
     /// `set`; returns true on `STORED`.
@@ -165,7 +170,11 @@ impl Client {
         Ok(self.read_line()?)
     }
 
-    /// Parse VALUE… END.
+    /// Parse VALUE… END. Length-aware: the `<bytes>` count from the
+    /// VALUE header decides exactly how much data to consume, so values
+    /// containing `\r\n` (or any other binary bytes) decode correctly;
+    /// the trailing CRLF is then verified, catching desynced streams
+    /// immediately instead of corrupting every later reply.
     fn read_values(&mut self) -> Result<Vec<ClientValue>> {
         let mut out = Vec::new();
         loop {
@@ -186,9 +195,207 @@ impl Client {
             let cas: Option<u64> = parts.get(3).and_then(|s| s.parse().ok());
             let mut data = vec![0u8; len + 2];
             self.reader.read_exact(&mut data)?;
+            anyhow::ensure!(
+                &data[len..] == b"\r\n",
+                "VALUE data for {:?} not CRLF-terminated (stream desync)",
+                String::from_utf8_lossy(&key)
+            );
             data.truncate(len);
             out.push(ClientValue { key, flags, data, cas });
         }
+    }
+
+    /// Start a pipeline: queue any number of ops, send them in **one**
+    /// write, and decode all replies in order with [`Pipeline::run`].
+    pub fn pipeline(&mut self) -> Pipeline<'_> {
+        Pipeline {
+            client: self,
+            buf: Vec::with_capacity(4 * 1024),
+            expect: Vec::new(),
+        }
+    }
+}
+
+/// Reply expectation for one queued pipeline op.
+enum Expect {
+    Store,
+    Values,
+    Delete,
+    Counter,
+    Touch,
+}
+
+/// One decoded pipeline reply, index-aligned with the queued ops.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PipelineReply {
+    /// Reply line of a storage command (`STORED`, `NOT_STORED`, …).
+    Store(String),
+    /// Hits of a `get`/`gets`/`mget` (misses are simply absent).
+    Values(Vec<ClientValue>),
+    /// `delete` outcome.
+    Deleted(bool),
+    /// `incr`/`decr` outcome.
+    Counter(Option<u64>),
+    /// `touch` outcome.
+    Touched(bool),
+}
+
+/// Builder that queues N ops, ships them in a single `write`, and decodes
+/// the N replies in order — the client half of the server's one
+/// `execute_batch` per read. Ops queue wire bytes only; nothing reaches
+/// the socket until [`Pipeline::run`].
+pub struct Pipeline<'c> {
+    client: &'c mut Client,
+    buf: Vec<u8>,
+    expect: Vec<Expect>,
+}
+
+impl Pipeline<'_> {
+    /// Queue a single-key `get`.
+    pub fn get(&mut self, key: &[u8]) -> &mut Self {
+        self.mget(&[key])
+    }
+
+    /// Queue a multi-key `get`.
+    pub fn mget(&mut self, keys: &[&[u8]]) -> &mut Self {
+        self.buf.extend_from_slice(b"get");
+        for k in keys {
+            self.buf.push(b' ');
+            self.buf.extend_from_slice(k);
+        }
+        self.buf.extend_from_slice(b"\r\n");
+        self.expect.push(Expect::Values);
+        self
+    }
+
+    /// Queue a `gets` (reply carries the CAS token).
+    pub fn gets(&mut self, key: &[u8]) -> &mut Self {
+        self.buf.extend_from_slice(b"gets ");
+        self.buf.extend_from_slice(key);
+        self.buf.extend_from_slice(b"\r\n");
+        self.expect.push(Expect::Values);
+        self
+    }
+
+    fn storage(&mut self, verb: &str, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> &mut Self {
+        self.buf.extend_from_slice(verb.as_bytes());
+        self.buf.push(b' ');
+        self.buf.extend_from_slice(key);
+        self.buf
+            .extend_from_slice(format!(" {} {} {}\r\n", flags, exptime, value.len()).as_bytes());
+        self.buf.extend_from_slice(value);
+        self.buf.extend_from_slice(b"\r\n");
+        self.expect.push(Expect::Store);
+        self
+    }
+
+    /// Queue a `set`.
+    pub fn set(&mut self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> &mut Self {
+        self.storage("set", key, value, flags, exptime)
+    }
+
+    /// Queue an `add`.
+    pub fn add(&mut self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> &mut Self {
+        self.storage("add", key, value, flags, exptime)
+    }
+
+    /// Queue a `replace`.
+    pub fn replace(&mut self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> &mut Self {
+        self.storage("replace", key, value, flags, exptime)
+    }
+
+    /// Queue an `append`.
+    pub fn append(&mut self, key: &[u8], suffix: &[u8]) -> &mut Self {
+        self.storage("append", key, suffix, 0, 0)
+    }
+
+    /// Queue a `prepend`.
+    pub fn prepend(&mut self, key: &[u8], prefix: &[u8]) -> &mut Self {
+        self.storage("prepend", key, prefix, 0, 0)
+    }
+
+    /// Queue a `cas` against `token`.
+    pub fn cas(&mut self, key: &[u8], value: &[u8], token: u64) -> &mut Self {
+        self.buf.extend_from_slice(b"cas ");
+        self.buf.extend_from_slice(key);
+        self.buf
+            .extend_from_slice(format!(" 0 0 {} {}\r\n", value.len(), token).as_bytes());
+        self.buf.extend_from_slice(value);
+        self.buf.extend_from_slice(b"\r\n");
+        self.expect.push(Expect::Store);
+        self
+    }
+
+    /// Queue a `delete`.
+    pub fn delete(&mut self, key: &[u8]) -> &mut Self {
+        self.buf.extend_from_slice(b"delete ");
+        self.buf.extend_from_slice(key);
+        self.buf.extend_from_slice(b"\r\n");
+        self.expect.push(Expect::Delete);
+        self
+    }
+
+    /// Queue an `incr`.
+    pub fn incr(&mut self, key: &[u8], delta: u64) -> &mut Self {
+        self.counter("incr", key, delta)
+    }
+
+    /// Queue a `decr`.
+    pub fn decr(&mut self, key: &[u8], delta: u64) -> &mut Self {
+        self.counter("decr", key, delta)
+    }
+
+    fn counter(&mut self, verb: &str, key: &[u8], delta: u64) -> &mut Self {
+        self.buf.extend_from_slice(verb.as_bytes());
+        self.buf.push(b' ');
+        self.buf.extend_from_slice(key);
+        self.buf.extend_from_slice(format!(" {}\r\n", delta).as_bytes());
+        self.expect.push(Expect::Counter);
+        self
+    }
+
+    /// Queue a `touch`.
+    pub fn touch(&mut self, key: &[u8], exptime: u32) -> &mut Self {
+        self.buf.extend_from_slice(b"touch ");
+        self.buf.extend_from_slice(key);
+        self.buf.extend_from_slice(format!(" {}\r\n", exptime).as_bytes());
+        self.expect.push(Expect::Touch);
+        self
+    }
+
+    /// Number of ops queued so far.
+    pub fn len(&self) -> usize {
+        self.expect.len()
+    }
+
+    /// Whether the pipeline is empty.
+    pub fn is_empty(&self) -> bool {
+        self.expect.is_empty()
+    }
+
+    /// Ship every queued op in one write and decode one reply per op, in
+    /// order. The pipeline resets and can be reused for the next batch.
+    ///
+    /// The queue is consumed *before* any I/O: after an error a retry
+    /// must not re-send (and re-execute) non-idempotent ops the server
+    /// may already have applied — the caller re-queues from scratch on a
+    /// fresh connection instead (a failed read leaves the reply stream
+    /// undecodable anyway).
+    pub fn run(&mut self) -> Result<Vec<PipelineReply>> {
+        let buf = std::mem::take(&mut self.buf);
+        let expect = std::mem::take(&mut self.expect);
+        self.client.writer.write_all(&buf)?;
+        let mut replies = Vec::with_capacity(expect.len());
+        for e in &expect {
+            replies.push(match e {
+                Expect::Store => PipelineReply::Store(self.client.read_line()?),
+                Expect::Values => PipelineReply::Values(self.client.read_values()?),
+                Expect::Delete => PipelineReply::Deleted(self.client.read_line()? == "DELETED"),
+                Expect::Counter => PipelineReply::Counter(self.client.read_line()?.parse().ok()),
+                Expect::Touch => PipelineReply::Touched(self.client.read_line()? == "TOUCHED"),
+            });
+        }
+        Ok(replies)
     }
 }
 
@@ -246,6 +453,80 @@ mod tests {
         let got = c.mget(&[b"a", b"b", b"c"]).unwrap();
         let keys: Vec<&[u8]> = got.iter().map(|v| v.key.as_slice()).collect();
         assert_eq!(keys, vec![b"a" as &[u8], b"c"]);
+    }
+
+    #[test]
+    fn binary_values_with_embedded_crlf_roundtrip() {
+        let (_s, addr) = server();
+        let mut c = Client::connect(addr).unwrap();
+        // Bytes chosen to break line-based decoding: an embedded CRLF, a
+        // fake END line, and invalid UTF-8.
+        let evil: Vec<u8> = b"a\r\nEND\r\n\xff\xfe\0rest".to_vec();
+        assert!(c.set(b"bin", &evil, 0, 0).unwrap());
+        let got = c.get(b"bin").unwrap().unwrap();
+        assert_eq!(got.data, evil);
+        // The stream is still in sync for the next command.
+        assert!(c.set(b"after", b"ok", 0, 0).unwrap());
+        assert_eq!(c.get(b"after").unwrap().unwrap().data, b"ok");
+    }
+
+    #[test]
+    fn pipeline_runs_mixed_ops_in_one_write() {
+        let (_s, addr) = server();
+        let mut c = Client::connect(addr).unwrap();
+        let mut p = c.pipeline();
+        p.set(b"pa", b"1", 0, 0)
+            .set(b"pn", b"41", 0, 0)
+            .get(b"pa")
+            .incr(b"pn", 1)
+            .mget(&[b"pa", b"missing", b"pn"])
+            .delete(b"pa")
+            .get(b"pa")
+            .touch(b"pn", 60);
+        assert_eq!(p.len(), 8);
+        let replies = p.run().unwrap();
+        assert_eq!(replies[0], PipelineReply::Store("STORED".into()));
+        assert_eq!(replies[1], PipelineReply::Store("STORED".into()));
+        match &replies[2] {
+            PipelineReply::Values(v) => assert_eq!(v[0].data, b"1"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(replies[3], PipelineReply::Counter(Some(42)));
+        match &replies[4] {
+            PipelineReply::Values(v) => {
+                let keys: Vec<&[u8]> = v.iter().map(|x| x.key.as_slice()).collect();
+                assert_eq!(keys, vec![b"pa" as &[u8], b"pn"]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(replies[5], PipelineReply::Deleted(true));
+        assert_eq!(replies[6], PipelineReply::Values(vec![]));
+        assert_eq!(replies[7], PipelineReply::Touched(true));
+        // Reusable after run().
+        assert!(p.is_empty());
+        p.gets(b"pn");
+        let replies = p.run().unwrap();
+        match &replies[0] {
+            PipelineReply::Values(v) => assert!(v[0].cas.is_some()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn pipeline_cas_flow() {
+        let (_s, addr) = server();
+        let mut c = Client::connect(addr).unwrap();
+        c.set(b"ck", b"v1", 0, 0).unwrap();
+        let tok = c.gets(b"ck").unwrap().unwrap().cas.unwrap();
+        let mut p = c.pipeline();
+        p.cas(b"ck", b"v2", tok).cas(b"ck", b"v3", tok).get(b"ck");
+        let replies = p.run().unwrap();
+        assert_eq!(replies[0], PipelineReply::Store("STORED".into()));
+        assert_eq!(replies[1], PipelineReply::Store("EXISTS".into()));
+        match &replies[2] {
+            PipelineReply::Values(v) => assert_eq!(v[0].data, b"v2"),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -25,12 +25,34 @@
 //! | [`cache::memclock`]  | striped locks | per-bucket CLOCK | stop-the-world |
 //! | [`cache::fleec`]     | lock-free (Harris) | embedded lock-free CLOCK | non-blocking |
 //!
+//! ## The two-tier cache API
+//!
+//! [`cache::Cache`] exposes two tiers. The single-key methods
+//! (`get`/`set`/…) are the convenience tier. Underneath sits the batched
+//! core: [`cache::Op`] is a typed, owner-less command (keys/values are
+//! borrowed slices) and [`cache::Cache::execute_batch`] runs a whole
+//! slice of them in one engine crossing, returning index-aligned
+//! [`cache::OpResult`]s. The default implementation delegates to the
+//! single-key tier, so engines are batch-capable by construction; FLeeC
+//! overrides it with a real fast path — **one EBR guard pinned per
+//! batch**, keys pre-hashed and bucket heads prefetched up front, storage
+//! items pre-allocated outside the guard, metrics folded into one update
+//! per counter. A batch is always semantically identical to running its
+//! ops sequentially (results, state, `cas`-token sequence) — enforced by
+//! `rust/tests/batch_semantics.rs`.
+//!
 //! The serving plane ([`proto`], [`server`], [`client`]) makes FLeeC a
-//! plug-in Memcached replacement; [`workload`] and the `benches/`
-//! directory regenerate every figure in the paper's evaluation; the
-//! [`runtime`] + [`coordinator`] pair loads AOT-compiled JAX/Pallas
-//! maintenance kernels (eviction planner, analytic hit-ratio model) via
-//! PJRT and runs them off the request path.
+//! plug-in Memcached replacement, and it is built around that batched
+//! core: the server drains every complete command from a socket read into
+//! one `execute_batch` call (`stats`/`flush_all` act as barriers), and
+//! [`client::Client::pipeline`] ships N commands in one write and decodes
+//! N replies. `benches/batch_pipeline.rs` sweeps batch depth 1/4/16/64
+//! across all three engines, in-process and over the wire. [`workload`]
+//! and the rest of `benches/` regenerate every figure in the paper's
+//! evaluation; the [`runtime`] + [`coordinator`] pair loads AOT-compiled
+//! JAX/Pallas maintenance kernels (eviction planner, analytic hit-ratio
+//! model) via PJRT (behind the `pjrt` feature) and runs them off the
+//! request path.
 
 pub mod cache;
 pub mod cli;

@@ -246,6 +246,7 @@ pub fn store_reply(outcome: StoreOutcome) -> &'static [u8] {
 }
 
 /// Render `stats` output (Memcached stat names where they exist).
+#[allow(clippy::too_many_arguments)]
 pub fn write_stats(
     out: &mut Vec<u8>,
     engine: &str,
@@ -254,11 +255,13 @@ pub fn write_stats(
     buckets: usize,
     mem_used: usize,
     mem_limit: usize,
+    curr_connections: usize,
 ) {
     let mut s = String::with_capacity(512);
     let _ = write!(
         s,
         "STAT engine {engine}\r\n\
+         STAT curr_connections {curr_connections}\r\n\
          STAT curr_items {items}\r\n\
          STAT hash_buckets {buckets}\r\n\
          STAT bytes {mem_used}\r\n\

@@ -28,10 +28,12 @@ pub const PLANNER_SNAPSHOT: usize = 4096;
 pub const PLANNER_BINS: usize = 8;
 
 /// Shared PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create the CPU PJRT client.
     pub fn new() -> Result<Runtime> {
@@ -53,6 +55,27 @@ impl Runtime {
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         Ok(self.client.compile(&comp)?)
+    }
+}
+
+/// API-compatible stub used when the crate is built without the `pjrt`
+/// feature (the default in offline builds): every load fails cleanly, so
+/// the coordinator and CLI fall back to the pure-Rust planner logic.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    _priv: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Always fails: no PJRT client is linked in.
+    pub fn new() -> Result<Runtime> {
+        anyhow::bail!("built without the `pjrt` feature; PJRT artifacts unavailable")
+    }
+
+    /// Backend platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".to_string()
     }
 }
 
@@ -78,10 +101,31 @@ pub struct PlannerDecision {
 }
 
 /// The compiled eviction planner.
+#[cfg(feature = "pjrt")]
 pub struct PlannerModule {
     exe: xla::PjRtLoadedExecutable,
 }
 
+/// Stub planner handle for builds without the `pjrt` feature.
+#[cfg(not(feature = "pjrt"))]
+pub struct PlannerModule {
+    _priv: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PlannerModule {
+    /// Always fails: artifacts cannot be executed without PJRT.
+    pub fn load(_rt: &Runtime, _dir: &Path) -> Result<PlannerModule> {
+        anyhow::bail!("built without the `pjrt` feature; planner artifact unavailable")
+    }
+
+    /// Unreachable in practice ([`PlannerModule::load`] never succeeds).
+    pub fn run(&self, _clocks: &[i32; PLANNER_SNAPSHOT], _pressure: f32) -> Result<PlannerDecision> {
+        anyhow::bail!("built without the `pjrt` feature")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl PlannerModule {
     /// Load `planner.hlo.txt` from `dir`.
     pub fn load(rt: &Runtime, dir: &Path) -> Result<PlannerModule> {
@@ -117,8 +161,28 @@ impl PlannerModule {
 }
 
 /// The compiled analytic hit-ratio model.
+#[cfg(feature = "pjrt")]
 pub struct HitRatioModule {
     exe: xla::PjRtLoadedExecutable,
+}
+
+/// Stub hit-ratio model handle for builds without the `pjrt` feature.
+#[cfg(not(feature = "pjrt"))]
+pub struct HitRatioModule {
+    _priv: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl HitRatioModule {
+    /// Always fails: artifacts cannot be executed without PJRT.
+    pub fn load(_rt: &Runtime, _dir: &Path) -> Result<HitRatioModule> {
+        anyhow::bail!("built without the `pjrt` feature; hit-ratio artifact unavailable")
+    }
+
+    /// Unreachable in practice ([`HitRatioModule::load`] never succeeds).
+    pub fn run(&self, _alpha: f32, _capacity_items: f32) -> Result<HitRatioEstimate> {
+        anyhow::bail!("built without the `pjrt` feature")
+    }
 }
 
 /// Model output: expected hit ratios under each policy.
@@ -131,6 +195,7 @@ pub struct HitRatioEstimate {
     pub fifo: f32,
 }
 
+#[cfg(feature = "pjrt")]
 impl HitRatioModule {
     /// Load `hit_ratio.hlo.txt` from `dir`. The artifact is lowered for a
     /// fixed catalog size (see `python/compile/model.py`).

@@ -1,0 +1,303 @@
+//! Batched request planning: lossless `proto::Command` → [`Op`]
+//! translation plus the reply plan that renders batch results back into
+//! wire bytes.
+//!
+//! The server drains every complete command out of a read buffer into one
+//! flat `Vec<Op>` (a multi-key `get` fans out into one `Op::Get` per key)
+//! and a parallel [`Action`] list that remembers how to reply — which ops
+//! belong to which command, `noreply` suppression, `gets` CAS rendering.
+//! The whole batch then crosses the engine in a single
+//! [`crate::cache::Cache::execute_batch`] call, and [`emit`] renders the
+//! results **byte-identically** to the old one-dispatch-per-command path.
+//!
+//! Two commands cannot ride in a batch: `stats` (reads the very counters
+//! the pending ops are about to bump) and `flush_all` (clobbers state the
+//! pending ops must see first). Those are *barriers* — the server
+//! executes the pending batch, handles them inline, and starts a new
+//! batch — so pipelines containing them still observe sequential
+//! semantics. `quit` is a barrier too (pending replies must flush before
+//! the connection closes).
+
+use crate::cache::{Op, OpResult};
+use crate::proto::{self, Command, StoreKind};
+
+/// Reply plan for one parsed command: where its ops landed in the batch
+/// and how to render their results.
+#[derive(Debug)]
+pub enum Action<'a> {
+    /// `get`/`gets`: `keys.len()` consecutive `Op::Get`s from `first`.
+    Values {
+        keys: Vec<&'a [u8]>,
+        with_cas: bool,
+        first: usize,
+    },
+    /// Any of the six storage commands: one op at `first`.
+    Store { first: usize, noreply: bool },
+    /// `delete`: one op at `first`.
+    Delete { first: usize, noreply: bool },
+    /// `incr`/`decr`: one op at `first`.
+    Counter { first: usize, noreply: bool },
+    /// `touch`: one op at `first`.
+    Touch { first: usize, noreply: bool },
+    /// `version`: constant reply, no engine op.
+    Version,
+    /// `verbosity`: constant `OK`, no engine op.
+    Ok { noreply: bool },
+    /// Parse failure: `CLIENT_ERROR <msg>`, no engine op.
+    ClientError(&'static str),
+}
+
+/// Whether `cmd` must not share a batch with the ops queued before it
+/// (see the module docs). The caller executes the pending batch first and
+/// then handles the command inline.
+pub fn is_barrier(cmd: &Command<'_>) -> bool {
+    matches!(
+        cmd,
+        Command::Stats | Command::FlushAll { .. } | Command::Quit
+    )
+}
+
+/// Append the data ops backing `cmd` to `ops` and its reply plan to
+/// `actions`. Lossless: every field of the parsed command survives into
+/// either the op or the action. Barrier commands (see [`is_barrier`]) are
+/// the caller's job and not accepted here.
+pub fn plan<'a>(cmd: Command<'a>, ops: &mut Vec<Op<'a>>, actions: &mut Vec<Action<'a>>) {
+    match cmd {
+        Command::Get { keys, with_cas } => {
+            let first = ops.len();
+            for &key in &keys {
+                ops.push(Op::Get { key });
+            }
+            actions.push(Action::Values {
+                keys,
+                with_cas,
+                first,
+            });
+        }
+        Command::Store {
+            kind,
+            key,
+            flags,
+            exptime,
+            data,
+            cas,
+            noreply,
+        } => {
+            let first = ops.len();
+            ops.push(match kind {
+                StoreKind::Set => Op::Set {
+                    key,
+                    value: data,
+                    flags,
+                    exptime,
+                },
+                StoreKind::Add => Op::Add {
+                    key,
+                    value: data,
+                    flags,
+                    exptime,
+                },
+                StoreKind::Replace => Op::Replace {
+                    key,
+                    value: data,
+                    flags,
+                    exptime,
+                },
+                StoreKind::Append => Op::Append { key, suffix: data },
+                StoreKind::Prepend => Op::Prepend { key, prefix: data },
+                StoreKind::Cas => Op::CasOp {
+                    key,
+                    value: data,
+                    flags,
+                    exptime,
+                    cas,
+                },
+            });
+            actions.push(Action::Store { first, noreply });
+        }
+        Command::Delete { key, noreply } => {
+            let first = ops.len();
+            ops.push(Op::Delete { key });
+            actions.push(Action::Delete { first, noreply });
+        }
+        Command::Incr { key, delta, noreply } => {
+            let first = ops.len();
+            ops.push(Op::Incr { key, delta });
+            actions.push(Action::Counter { first, noreply });
+        }
+        Command::Decr { key, delta, noreply } => {
+            let first = ops.len();
+            ops.push(Op::Decr { key, delta });
+            actions.push(Action::Counter { first, noreply });
+        }
+        Command::Touch { key, exptime, noreply } => {
+            let first = ops.len();
+            ops.push(Op::Touch { key, exptime });
+            actions.push(Action::Touch { first, noreply });
+        }
+        Command::Version => actions.push(Action::Version),
+        Command::Verbosity { noreply } => actions.push(Action::Ok { noreply }),
+        Command::Stats | Command::FlushAll { .. } | Command::Quit => {
+            unreachable!("barrier commands are handled by the caller")
+        }
+    }
+}
+
+/// Render replies for `actions` against the batch `results`, appending
+/// wire bytes to `out` in command order.
+pub fn emit(actions: &[Action<'_>], results: &[OpResult], out: &mut Vec<u8>) {
+    for action in actions {
+        match action {
+            Action::Values {
+                keys,
+                with_cas,
+                first,
+            } => {
+                for (i, key) in keys.iter().enumerate() {
+                    if let OpResult::Value(Some(r)) = &results[first + i] {
+                        proto::write_value(out, key, r.flags, &r.data, with_cas.then_some(r.cas));
+                    }
+                }
+                proto::write_end(out);
+            }
+            Action::Store { first, noreply } => {
+                if !noreply {
+                    match results[*first] {
+                        OpResult::Store(outcome) => {
+                            out.extend_from_slice(proto::store_reply(outcome))
+                        }
+                        _ => mismatch(out),
+                    }
+                }
+            }
+            Action::Delete { first, noreply } => {
+                if !noreply {
+                    match results[*first] {
+                        OpResult::Deleted(true) => out.extend_from_slice(b"DELETED\r\n"),
+                        OpResult::Deleted(false) => out.extend_from_slice(b"NOT_FOUND\r\n"),
+                        _ => mismatch(out),
+                    }
+                }
+            }
+            Action::Counter { first, noreply } => {
+                if !noreply {
+                    match results[*first] {
+                        OpResult::Counter(Some(v)) => {
+                            out.extend_from_slice(v.to_string().as_bytes());
+                            out.extend_from_slice(b"\r\n");
+                        }
+                        OpResult::Counter(None) => out.extend_from_slice(b"NOT_FOUND\r\n"),
+                        _ => mismatch(out),
+                    }
+                }
+            }
+            Action::Touch { first, noreply } => {
+                if !noreply {
+                    match results[*first] {
+                        OpResult::Touched(true) => out.extend_from_slice(b"TOUCHED\r\n"),
+                        OpResult::Touched(false) => out.extend_from_slice(b"NOT_FOUND\r\n"),
+                        _ => mismatch(out),
+                    }
+                }
+            }
+            Action::Version => out.extend_from_slice(b"VERSION fleec-0.1.0\r\n"),
+            Action::Ok { noreply } => {
+                if !noreply {
+                    out.extend_from_slice(b"OK\r\n");
+                }
+            }
+            Action::ClientError(msg) => {
+                out.extend_from_slice(b"CLIENT_ERROR ");
+                out.extend_from_slice(msg.as_bytes());
+                out.extend_from_slice(b"\r\n");
+            }
+        }
+    }
+}
+
+/// An engine returned a result variant that doesn't match the op — a
+/// `Cache::execute_batch` contract violation. Keep the wire stream framed
+/// rather than hanging the client.
+fn mismatch(out: &mut Vec<u8>) {
+    debug_assert!(false, "execute_batch result variant mismatch");
+    out.extend_from_slice(b"SERVER_ERROR batch result mismatch\r\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{build_engine, CacheConfig};
+    use crate::proto::Parsed;
+
+    /// Parse a full pipelined buffer, batch it, execute it, emit replies.
+    fn run_pipeline(wire: &[u8]) -> Vec<u8> {
+        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+        let mut ops = Vec::new();
+        let mut actions = Vec::new();
+        let mut consumed = 0;
+        while consumed < wire.len() {
+            match crate::proto::parse(&wire[consumed..]) {
+                Parsed::Done(cmd, n) => {
+                    consumed += n;
+                    assert!(!is_barrier(&cmd), "test pipeline must be barrier-free");
+                    plan(cmd, &mut ops, &mut actions);
+                }
+                Parsed::Error(msg, n) => {
+                    consumed += n;
+                    actions.push(Action::ClientError(msg));
+                }
+                Parsed::Incomplete => panic!("truncated test pipeline"),
+            }
+        }
+        let results = cache.execute_batch(&ops);
+        let mut out = Vec::new();
+        emit(&actions, &results, &mut out);
+        out
+    }
+
+    #[test]
+    fn pipeline_replies_match_per_command_bytes() {
+        let out = run_pipeline(
+            b"set a 7 0 3\r\nfoo\r\nget a\r\nadd a 0 0 1\r\nx\r\ndelete a\r\ndelete a\r\nget a\r\n",
+        );
+        assert_eq!(
+            out,
+            b"STORED\r\nVALUE a 7 3\r\nfoo\r\nEND\r\nNOT_STORED\r\nDELETED\r\nNOT_FOUND\r\nEND\r\n"
+                as &[u8],
+            "got {:?}",
+            String::from_utf8_lossy(&out)
+        );
+    }
+
+    #[test]
+    fn multikey_get_fans_out_and_reassembles() {
+        let out = run_pipeline(b"set a 0 0 1\r\n1\r\nset c 0 0 1\r\n3\r\nget a b c\r\n");
+        assert_eq!(
+            out,
+            b"STORED\r\nSTORED\r\nVALUE a 0 1\r\n1\r\nVALUE c 0 1\r\n3\r\nEND\r\n" as &[u8],
+            "got {:?}",
+            String::from_utf8_lossy(&out)
+        );
+    }
+
+    #[test]
+    fn noreply_and_errors_keep_stream_position() {
+        let out = run_pipeline(b"set a 0 0 1 noreply\r\nx\r\nfrobnicate\r\nincr a 1\r\nversion\r\n");
+        let text = String::from_utf8_lossy(&out);
+        assert!(text.starts_with("CLIENT_ERROR"), "{text}");
+        assert!(text.contains("NOT_FOUND"), "{text}"); // 'x' is not numeric
+        assert!(text.ends_with("VERSION fleec-0.1.0\r\n"), "{text}");
+    }
+
+    #[test]
+    fn barrier_classification() {
+        assert!(is_barrier(&Command::Stats));
+        assert!(is_barrier(&Command::FlushAll { noreply: false }));
+        assert!(is_barrier(&Command::Quit));
+        assert!(!is_barrier(&Command::Version));
+        assert!(!is_barrier(&Command::Get {
+            keys: vec![b"k" as &[u8]],
+            with_cas: false
+        }));
+    }
+}

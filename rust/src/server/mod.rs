@@ -10,14 +10,16 @@
 //! so `fleec serve --engine memcached|memclock|fleec` serves identical
 //! wire behavior with different concurrency cores.
 
+pub mod batch;
+
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::cache::Cache;
-use crate::proto::{self, Command, Parsed, StoreKind};
+use crate::cache::{Cache, Op};
+use crate::proto::{self, Command, Parsed};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -73,7 +75,12 @@ impl Server {
                                 std::thread::Builder::new()
                                     .name("fleec-conn".into())
                                     .spawn(move || {
-                                        let _ = handle_connection(stream, cache, stop);
+                                        let _ = handle_connection(
+                                            stream,
+                                            cache,
+                                            stop,
+                                            Arc::clone(&active),
+                                        );
                                         active.fetch_sub(1, Ordering::AcqRel);
                                     })
                                     .expect("spawn connection thread"),
@@ -124,11 +131,19 @@ impl Drop for Server {
     }
 }
 
-/// Read-parse-dispatch loop for one connection.
+/// Read-plan-execute loop for one connection.
+///
+/// Each wakeup drains **all** complete commands from the read buffer into
+/// one flat `Vec<Op>` + reply plan (see [`batch`]) and crosses the engine
+/// with a single [`Cache::execute_batch`] call — pipelined clients pay
+/// one engine crossing per read instead of one per command. `stats`,
+/// `flush_all` and `quit` are barriers: the pending batch executes first,
+/// then the barrier runs inline, preserving sequential semantics.
 fn handle_connection(
     mut stream: TcpStream,
     cache: Arc<dyn Cache>,
     stop: Arc<AtomicBool>,
+    active_conns: Arc<AtomicUsize>,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut inbuf: Vec<u8> = Vec::with_capacity(16 * 1024);
@@ -138,26 +153,57 @@ fn handle_connection(
         if stop.load(Ordering::Acquire) {
             return Ok(());
         }
-        // Drain as many complete commands as the buffer holds.
+        // Plan + execute everything currently buffered.
         let mut consumed_total = 0;
-        loop {
-            match proto::parse(&inbuf[consumed_total..]) {
-                Parsed::Done(cmd, n) => {
-                    consumed_total += n;
-                    let quit = dispatch(&cmd, cache.as_ref(), &mut outbuf);
-                    if quit {
-                        let _ = stream.write_all(&outbuf);
-                        return Ok(());
+        let mut quit = false;
+        {
+            let mut ops: Vec<Op<'_>> = Vec::new();
+            let mut actions: Vec<batch::Action<'_>> = Vec::new();
+            loop {
+                match proto::parse(&inbuf[consumed_total..]) {
+                    Parsed::Done(cmd, n) => {
+                        consumed_total += n;
+                        if batch::is_barrier(&cmd) {
+                            flush_batch(cache.as_ref(), &mut ops, &mut actions, &mut outbuf);
+                            match cmd {
+                                Command::Stats => {
+                                    let snap = cache.metrics().snapshot();
+                                    proto::write_stats(
+                                        &mut outbuf,
+                                        cache.engine_name(),
+                                        &snap,
+                                        cache.item_count(),
+                                        cache.bucket_count(),
+                                        cache.mem_used(),
+                                        0,
+                                        active_conns.load(Ordering::Acquire),
+                                    );
+                                }
+                                Command::FlushAll { noreply } => {
+                                    cache.flush_all();
+                                    if !noreply {
+                                        outbuf.extend_from_slice(b"OK\r\n");
+                                    }
+                                }
+                                Command::Quit => {
+                                    quit = true;
+                                    break;
+                                }
+                                _ => unreachable!("is_barrier covers exactly these"),
+                            }
+                        } else {
+                            batch::plan(cmd, &mut ops, &mut actions);
+                        }
                     }
+                    Parsed::Error(msg, n) => {
+                        consumed_total += n;
+                        actions.push(batch::Action::ClientError(msg));
+                    }
+                    Parsed::Incomplete => break,
                 }
-                Parsed::Error(msg, n) => {
-                    consumed_total += n;
-                    outbuf.extend_from_slice(b"CLIENT_ERROR ");
-                    outbuf.extend_from_slice(msg.as_bytes());
-                    outbuf.extend_from_slice(b"\r\n");
-                }
-                Parsed::Incomplete => break,
             }
+            // The whole read crosses the engine once (barrier-free case).
+            flush_batch(cache.as_ref(), &mut ops, &mut actions, &mut outbuf);
         }
         if consumed_total > 0 {
             inbuf.drain(..consumed_total);
@@ -165,6 +211,9 @@ fn handle_connection(
         if !outbuf.is_empty() {
             stream.write_all(&outbuf)?;
             outbuf.clear();
+        }
+        if quit {
+            return Ok(());
         }
         // Refill.
         match stream.read(&mut chunk) {
@@ -181,99 +230,20 @@ fn handle_connection(
     }
 }
 
-/// Execute one command against the engine; returns `true` on `quit`.
-fn dispatch(cmd: &Command<'_>, cache: &dyn Cache, out: &mut Vec<u8>) -> bool {
-    match cmd {
-        Command::Get { keys, with_cas } => {
-            for key in keys {
-                if let Some(r) = cache.get(key) {
-                    proto::write_value(out, key, r.flags, &r.data, with_cas.then_some(r.cas));
-                }
-            }
-            proto::write_end(out);
-        }
-        Command::Store {
-            kind,
-            key,
-            flags,
-            exptime,
-            data,
-            cas,
-            noreply,
-        } => {
-            let outcome = match kind {
-                StoreKind::Set => cache.set(key, data, *flags, *exptime),
-                StoreKind::Add => cache.add(key, data, *flags, *exptime),
-                StoreKind::Replace => cache.replace(key, data, *flags, *exptime),
-                StoreKind::Append => cache.append(key, data),
-                StoreKind::Prepend => cache.prepend(key, data),
-                StoreKind::Cas => cache.cas(key, data, *flags, *exptime, *cas),
-            };
-            if !noreply {
-                out.extend_from_slice(proto::store_reply(outcome));
-            }
-        }
-        Command::Delete { key, noreply } => {
-            let deleted = cache.delete(key);
-            if !noreply {
-                out.extend_from_slice(if deleted { b"DELETED\r\n" } else { b"NOT_FOUND\r\n" });
-            }
-        }
-        Command::Incr { key, delta, noreply } => {
-            let r = cache.incr(key, *delta);
-            if !noreply {
-                write_counter_reply(out, r);
-            }
-        }
-        Command::Decr { key, delta, noreply } => {
-            let r = cache.decr(key, *delta);
-            if !noreply {
-                write_counter_reply(out, r);
-            }
-        }
-        Command::Touch { key, exptime, noreply } => {
-            let ok = cache.touch(key, *exptime);
-            if !noreply {
-                out.extend_from_slice(if ok { b"TOUCHED\r\n" } else { b"NOT_FOUND\r\n" });
-            }
-        }
-        Command::Stats => {
-            let snap = cache.metrics().snapshot();
-            proto::write_stats(
-                out,
-                cache.engine_name(),
-                &snap,
-                cache.item_count(),
-                cache.bucket_count(),
-                cache.mem_used(),
-                0,
-            );
-        }
-        Command::FlushAll { noreply } => {
-            cache.flush_all();
-            if !noreply {
-                out.extend_from_slice(b"OK\r\n");
-            }
-        }
-        Command::Version => out.extend_from_slice(b"VERSION fleec-0.1.0\r\n"),
-        Command::Verbosity { noreply } => {
-            if !noreply {
-                out.extend_from_slice(b"OK\r\n");
-            }
-        }
-        Command::Quit => return true,
+/// Execute the pending batch and render its replies; clears both lists.
+fn flush_batch<'a>(
+    cache: &dyn Cache,
+    ops: &mut Vec<Op<'a>>,
+    actions: &mut Vec<batch::Action<'a>>,
+    out: &mut Vec<u8>,
+) {
+    if actions.is_empty() && ops.is_empty() {
+        return;
     }
-    false
-}
-
-fn write_counter_reply(out: &mut Vec<u8>, r: Option<u64>) {
-    match r {
-        Some(v) => {
-            out.extend_from_slice(v.to_string().as_bytes());
-            out.extend_from_slice(b"\r\n");
-        }
-        None => out.extend_from_slice(b"NOT_FOUND\r\n"),
-    }
+    let results = cache.execute_batch(ops);
+    batch::emit(actions, &results, out);
+    ops.clear();
+    actions.clear();
 }
 
 #[cfg(test)]
@@ -363,6 +333,42 @@ mod tests {
         let text = String::from_utf8_lossy(&acc);
         assert!(text.starts_with("STORED\r\nVALUE p 0 2\r\nhi\r\nEND\r\n"), "{text}");
         assert!(text.contains("STAT engine fleec"), "{text}");
+    }
+
+    #[test]
+    fn stats_barrier_sees_preceding_pipelined_ops() {
+        let (_server, addr) = start_test_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        // set + get + stats in ONE write: the stats barrier must execute
+        // after the batched ops so the counters include them.
+        s.write_all(b"set sb 0 0 1\r\nv\r\nget sb\r\nstats\r\n").unwrap();
+        let mut acc = Vec::new();
+        let mut buf = [0u8; 4096];
+        while String::from_utf8_lossy(&acc).matches("END\r\n").count() < 2 {
+            let n = s.read(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            acc.extend_from_slice(&buf[..n]);
+        }
+        let text = String::from_utf8_lossy(&acc);
+        assert!(text.starts_with("STORED\r\nVALUE sb 0 1\r\nv\r\nEND\r\n"), "{text}");
+        assert!(text.contains("STAT cmd_get 1\r\n"), "{text}");
+        assert!(text.contains("STAT cmd_set 1\r\n"), "{text}");
+        assert!(text.contains("STAT curr_connections 1\r\n"), "{text}");
+    }
+
+    #[test]
+    fn flush_all_barrier_orders_with_batched_ops() {
+        let (_server, addr) = start_test_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        // The get before the flush must hit; the get after must miss —
+        // even though all five commands arrive in one read.
+        roundtrip(
+            &mut s,
+            b"set f 0 0 1\r\nx\r\nget f\r\nflush_all\r\nget f\r\n",
+            b"STORED\r\nVALUE f 0 1\r\nx\r\nEND\r\nOK\r\nEND\r\n",
+        );
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::cache::Cache;
+use crate::cache::{Cache, Op as CacheOp, OpResult};
 use crate::metrics::{HistogramSummary, LatencyHistogram};
 use crate::workload::{check_value, encode_key, fill_value, Op, OpStream, WorkloadSpec, KEY_LEN};
 
@@ -33,6 +33,13 @@ pub struct DriverOptions {
     /// Verify the bytes of every sampled hit against the deterministic
     /// per-key pattern (corruption canary for concurrency tests).
     pub validate: bool,
+    /// Ops issued per engine crossing. 1 = the single-key convenience
+    /// methods; >1 = pipelined batches through
+    /// [`crate::cache::Cache::execute_batch`] (the serving plane's shape:
+    /// one EBR pin / one dispatch per batch on engines that support it).
+    /// In batch mode latency is sampled per *batch* and recorded as the
+    /// amortized per-op time.
+    pub batch: usize,
 }
 
 impl Default for DriverOptions {
@@ -43,6 +50,7 @@ impl Default for DriverOptions {
             prefill: true,
             sample_every: 4,
             validate: false,
+            batch: 1,
         }
     }
 }
@@ -202,6 +210,92 @@ pub fn run_driver(cache: &Arc<dyn Cache>, spec: &WorkloadSpec, opts: &DriverOpti
                 let (mut l_ops, mut l_gets, mut l_hits, mut l_sets) = (0u64, 0u64, 0u64, 0u64);
                 let (mut l_sfail, mut l_vfail) = (0u64, 0u64);
                 let mut n = 0u64;
+                let batch = opts.batch.max(1);
+                if batch > 1 {
+                    // Batched mode: fill per-slot scratch buffers, build a
+                    // borrowed CacheOp batch, and cross the engine once.
+                    let mut keys = vec![[0u8; KEY_LEN]; batch];
+                    let mut values: Vec<Vec<u8>> = vec![Vec::new(); batch];
+                    let mut pending: Vec<Op> = Vec::with_capacity(batch);
+                    let mut batches = 0u64;
+                    while n < ops_budget {
+                        if stop_flag.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let take = (batch as u64).min(ops_budget - n) as usize;
+                        pending.clear();
+                        for i in 0..take {
+                            let op = stream.next_op();
+                            match op {
+                                Op::Get(id) => {
+                                    encode_key(&mut keys[i], id);
+                                }
+                                Op::Set(id) => {
+                                    encode_key(&mut keys[i], id);
+                                    let len = spec.value_size.for_key(id);
+                                    values[i].resize(len, 0);
+                                    fill_value(id, &mut values[i]);
+                                }
+                            }
+                            pending.push(op);
+                        }
+                        let batch_ops: Vec<CacheOp<'_>> = pending
+                            .iter()
+                            .enumerate()
+                            .map(|(i, op)| match *op {
+                                Op::Get(_) => CacheOp::Get { key: &keys[i] },
+                                Op::Set(_) => CacheOp::Set {
+                                    key: &keys[i],
+                                    value: &values[i],
+                                    flags: 0,
+                                    exptime: 0,
+                                },
+                            })
+                            .collect();
+                        batches += 1;
+                        let sampled = batches % opts.sample_every == 0;
+                        let t0 = if sampled { Some(Instant::now()) } else { None };
+                        let results = cache.execute_batch(&batch_ops);
+                        if let Some(t0) = t0 {
+                            // Amortized per-op cost of the whole crossing.
+                            let ns = t0.elapsed().as_nanos() as u64 / take.max(1) as u64;
+                            latency.record(ns);
+                        }
+                        for (op, r) in pending.iter().zip(&results) {
+                            match op {
+                                Op::Get(id) => {
+                                    l_gets += 1;
+                                    if let OpResult::Value(Some(v)) = r {
+                                        l_hits += 1;
+                                        if opts.validate && sampled {
+                                            let expect_len = spec.value_size.for_key(*id);
+                                            if v.data.len() != expect_len
+                                                || !check_value(*id, &v.data)
+                                            {
+                                                l_vfail += 1;
+                                            }
+                                        }
+                                    }
+                                }
+                                Op::Set(_) => {
+                                    l_sets += 1;
+                                    if *r != OpResult::Store(crate::cache::StoreOutcome::Stored) {
+                                        l_sfail += 1;
+                                    }
+                                }
+                            }
+                        }
+                        n += take as u64;
+                        l_ops += take as u64;
+                    }
+                    total_ops.fetch_add(l_ops, Ordering::Relaxed);
+                    gets.fetch_add(l_gets, Ordering::Relaxed);
+                    hits.fetch_add(l_hits, Ordering::Relaxed);
+                    sets.fetch_add(l_sets, Ordering::Relaxed);
+                    store_failures.fetch_add(l_sfail, Ordering::Relaxed);
+                    validation_failures.fetch_add(l_vfail, Ordering::Relaxed);
+                    return;
+                }
                 while n < ops_budget {
                     // Deadline check amortized over 256 ops.
                     if n % 256 == 0 && stop_flag.load(Ordering::Relaxed) {

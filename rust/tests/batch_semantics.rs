@@ -1,0 +1,260 @@
+//! Batch semantics: for every engine, `execute_batch(ops)` must be
+//! indistinguishable from issuing the same ops sequentially through the
+//! single-key convenience methods — same per-op results, same final
+//! state, and the same `cas`-token sequence. The blocking engines run the
+//! default delegating impl (trivially equivalent); FLeeC's overridden
+//! fast path (one EBR guard, pre-hash, pre-allocation) is the real
+//! subject under test.
+
+use fleec::cache::fleec::FleecCache;
+use fleec::cache::op::execute_sequential;
+use fleec::cache::{build_engine, Cache, CacheConfig, Op, OpResult, ENGINES};
+
+/// Phase 1: a mixed script exercising every op kind plus same-key
+/// read-after-write / write-after-write dependencies inside one batch.
+/// Ends with a `Get` so the caller can pick up the live `cas` token.
+fn mixed_script() -> Vec<Op<'static>> {
+    vec![
+        Op::Get { key: b"a" }, // miss on a cold cache
+        Op::Set {
+            key: b"a",
+            value: b"v1",
+            flags: 7,
+            exptime: 0,
+        },
+        Op::Get { key: b"a" },
+        Op::Add {
+            key: b"a",
+            value: b"nope",
+            flags: 0,
+            exptime: 0,
+        },
+        Op::Add {
+            key: b"b",
+            value: b"10",
+            flags: 0,
+            exptime: 0,
+        },
+        Op::Replace {
+            key: b"a",
+            value: b"v2",
+            flags: 1,
+            exptime: 0,
+        },
+        Op::Replace {
+            key: b"missing",
+            value: b"x",
+            flags: 0,
+            exptime: 0,
+        },
+        Op::Append {
+            key: b"a",
+            suffix: b"+s",
+        },
+        Op::Prepend {
+            key: b"a",
+            prefix: b"p+",
+        },
+        Op::Incr { key: b"b", delta: 5 },
+        Op::Decr { key: b"b", delta: 100 },
+        Op::Incr {
+            key: b"missing",
+            delta: 1,
+        },
+        Op::Delete { key: b"missing" },
+        Op::Touch { key: b"b", exptime: 300 },
+        Op::Get { key: b"b" },
+        Op::Get { key: b"a" },
+    ]
+}
+
+#[test]
+fn batch_equals_sequential_for_every_engine() {
+    for engine in ENGINES {
+        let batched = build_engine(engine, CacheConfig::small()).unwrap();
+        let sequential = build_engine(engine, CacheConfig::small()).unwrap();
+
+        let ops = mixed_script();
+        let rb = batched.execute_batch(&ops);
+        let rs = execute_sequential(sequential.as_ref(), &ops);
+        assert_eq!(rb, rs, "{engine}: phase-1 results diverge");
+
+        // The closing Get carries the live token; both instances must
+        // have produced the identical token sequence.
+        let tok = match rb.last() {
+            Some(OpResult::Value(Some(r))) => r.cas,
+            other => panic!("{engine}: expected a hit, got {other:?}"),
+        };
+
+        // Phase 2: cas win/lose against the real token, then deletes and
+        // ops on missing keys.
+        let phase2 = vec![
+            Op::CasOp {
+                key: b"a",
+                value: b"cas-win",
+                flags: 2,
+                exptime: 0,
+                cas: tok,
+            },
+            Op::CasOp {
+                key: b"a",
+                value: b"cas-lose",
+                flags: 0,
+                exptime: 0,
+                cas: tok,
+            },
+            Op::CasOp {
+                key: b"missing",
+                value: b"x",
+                flags: 0,
+                exptime: 0,
+                cas: tok,
+            },
+            Op::Get { key: b"a" },
+            Op::Delete { key: b"a" },
+            Op::Get { key: b"a" },
+            Op::Delete { key: b"a" },
+            Op::Touch {
+                key: b"missing",
+                exptime: 60,
+            },
+            Op::Incr { key: b"a", delta: 1 },
+        ];
+        let rb2 = batched.execute_batch(&phase2);
+        let rs2 = execute_sequential(sequential.as_ref(), &phase2);
+        assert_eq!(rb2, rs2, "{engine}: phase-2 results diverge");
+        assert_eq!(
+            rb2[0],
+            OpResult::Store(fleec::cache::StoreOutcome::Stored),
+            "{engine}: cas with live token must win"
+        );
+
+        // Final state must match exactly, cas tokens included.
+        assert_eq!(
+            batched.item_count(),
+            sequential.item_count(),
+            "{engine}: item counts diverge"
+        );
+        for key in [b"a" as &[u8], b"b", b"missing"] {
+            assert_eq!(
+                batched.get(key),
+                sequential.get(key),
+                "{engine}: state diverges for {:?}",
+                String::from_utf8_lossy(key)
+            );
+        }
+    }
+}
+
+#[test]
+fn randomized_batches_match_sequential() {
+    fleec::testutil::run_prop("batch-equivalence", 0xBA7C_5EED, |rng| {
+        let len = 1 + rng.next_below(48) as usize;
+        let keys: Vec<Vec<u8>> = (0..8).map(|i| format!("rk{i}").into_bytes()).collect();
+        let vals: Vec<Vec<u8>> = (0..len)
+            .map(|_| {
+                (0..1 + rng.next_below(24))
+                    .map(|_| rng.next_u64() as u8)
+                    .collect()
+            })
+            .collect();
+        let mut ops: Vec<Op<'_>> = Vec::with_capacity(len);
+        for val in &vals {
+            let key = keys[rng.next_below(keys.len() as u64) as usize].as_slice();
+            ops.push(match rng.next_below(12) {
+                0..=3 => Op::Get { key },
+                4..=5 => Op::Set {
+                    key,
+                    value: val,
+                    flags: rng.next_u64() as u32,
+                    exptime: 0,
+                },
+                6 => Op::Add {
+                    key,
+                    value: val,
+                    flags: 0,
+                    exptime: 0,
+                },
+                7 => Op::Replace {
+                    key,
+                    value: val,
+                    flags: 0,
+                    exptime: 0,
+                },
+                8 => Op::Append { key, suffix: val },
+                9 => Op::Delete { key },
+                10 => Op::Incr {
+                    key,
+                    delta: rng.next_below(1000),
+                },
+                _ => Op::Decr {
+                    key,
+                    delta: rng.next_below(1000),
+                },
+            });
+        }
+        for engine in ENGINES {
+            let batched = build_engine(engine, CacheConfig::small()).unwrap();
+            let sequential = build_engine(engine, CacheConfig::small()).unwrap();
+            assert_eq!(
+                batched.execute_batch(&ops),
+                execute_sequential(sequential.as_ref(), &ops),
+                "{engine}: randomized batch diverged"
+            );
+            for key in &keys {
+                assert_eq!(
+                    batched.get(key),
+                    sequential.get(key),
+                    "{engine}: final state diverged for {:?}",
+                    String::from_utf8_lossy(key)
+                );
+            }
+        }
+    });
+}
+
+/// The acceptance hook for the fast path's headline property: a batch of
+/// N ops pins exactly one top-level EBR guard, where the sequential path
+/// pins N. (The counter is a debug-build hook; release builds skip.)
+#[test]
+fn fleec_batch_pins_one_guard_where_sequential_pins_n() {
+    if !cfg!(debug_assertions) {
+        eprintln!("SKIP: pin counter is a debug_assertions hook");
+        return;
+    }
+    let cache = FleecCache::new(CacheConfig::small());
+    let keys: Vec<Vec<u8>> = (0..32).map(|i| format!("pin-{i}").into_bytes()).collect();
+    for key in &keys {
+        // Plenty of memory: no allocation pressure, so phase A never pins.
+        assert_eq!(
+            cache.set(key, b"warm", 0, 0),
+            fleec::cache::StoreOutcome::Stored
+        );
+    }
+    let mut ops: Vec<Op<'_>> = keys.iter().map(|k| Op::Get { key: k }).collect();
+    ops.push(Op::Set {
+        key: b"pin-0",
+        value: b"fresh",
+        flags: 0,
+        exptime: 0,
+    });
+    ops.push(Op::Delete { key: b"pin-1" });
+
+    let before = cache.collector().top_level_pins();
+    let rb = cache.execute_batch(&ops);
+    let mid = cache.collector().top_level_pins();
+    assert_eq!(mid - before, 1, "batched path must pin exactly one guard");
+
+    let rs = execute_sequential(&cache, &ops);
+    let after = cache.collector().top_level_pins();
+    assert_eq!(
+        after - mid,
+        ops.len() as u64,
+        "sequential path pins once per op"
+    );
+
+    // Same answers either way (modulo the state the first run changed:
+    // re-running on the mutated cache still yields variant-aligned, valid
+    // results for every op).
+    assert_eq!(rb.len(), rs.len());
+}
