@@ -11,6 +11,12 @@
 //!                batch costs what its ops cost); fleec's override pins
 //!                one EBR guard per batch, so its ops/s should be
 //!                non-decreasing as depth grows.
+//!   sharded    — the same driver over `Sharded<_>` routers, sweeping
+//!                shard count 1/2/4/8 × batch depth for every engine:
+//!                the batch → shard → sub-batch composition. Shards cut
+//!                contention (biggest for the blocking engines, whose
+//!                LRU/stripe locks stop being global), batching cuts
+//!                per-op synchronization, and the two should compound.
 //!   wire       — a single pipelined connection against the served fleec
 //!                engine (`Client::pipeline`), measuring the end-to-end
 //!                win of one `execute_batch` call per socket read.
@@ -18,7 +24,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use fleec::cache::{build_engine, CacheConfig, ENGINES};
+use fleec::cache::{build_engine, build_sharded, CacheConfig, ENGINES};
 use fleec::client::{Client, PipelineReply};
 use fleec::server::{Server, ServerConfig};
 use fleec::workload::{driver::StopRule, run_driver, DriverOptions, ValueSize, WorkloadSpec};
@@ -68,6 +74,46 @@ fn main() {
                 report.hit_ratio()
             );
             prev = tput;
+        }
+        println!();
+    }
+
+    println!("== sharded: shard count x batch depth (threads=8) =================");
+    println!(
+        "{:>12} {:>6} {:>6} {:>12} {:>8}",
+        "engine", "shards", "batch", "ops/s", "hit"
+    );
+    const SHARDS: [usize; 4] = [1, 2, 4, 8];
+    for engine in ENGINES {
+        for &shards in &SHARDS {
+            for &depth in &DEPTHS {
+                let cache = build_sharded(
+                    engine,
+                    shards,
+                    CacheConfig {
+                        mem_limit: 64 << 20,
+                        ..CacheConfig::default()
+                    },
+                )
+                .unwrap();
+                let opts = DriverOptions {
+                    threads: 8,
+                    stop: StopRule::OpsPerThread(100_000),
+                    prefill: true,
+                    sample_every: 16,
+                    validate: false,
+                    batch: depth,
+                };
+                let report = run_driver(&cache, &spec, &opts);
+                println!(
+                    "{:>12} {:>6} {:>6} {:>12.0} {:>8.4}",
+                    cache.engine_name(),
+                    shards,
+                    depth,
+                    report.throughput(),
+                    report.hit_ratio()
+                );
+            }
         }
         println!();
     }

@@ -981,6 +981,10 @@ impl Cache for FleecCache {
             .sum()
     }
 
+    fn mem_limit(&self) -> usize {
+        self.config.mem_limit
+    }
+
     fn maintenance(&self) {
         let guard = self.collector.pin();
         let root = self.root(&guard);

@@ -566,6 +566,10 @@ impl Cache for MemcachedCache {
     fn mem_used(&self) -> usize {
         self.bytes.load(Ordering::Relaxed)
     }
+
+    fn mem_limit(&self) -> usize {
+        self.config.mem_limit
+    }
 }
 
 impl Drop for MemcachedCache {

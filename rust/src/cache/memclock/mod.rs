@@ -474,6 +474,10 @@ impl Cache for MemClockCache {
         self.bytes.load(Ordering::Relaxed)
     }
 
+    fn mem_limit(&self) -> usize {
+        self.config.mem_limit
+    }
+
     fn clock_snapshot(&self) -> Option<Vec<u8>> {
         let _s = self.stripes[0].lock().unwrap();
         let st = unsafe { self.state() };

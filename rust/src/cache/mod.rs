@@ -5,17 +5,21 @@
 //! [`fleec`] (the paper's lock-free system) — implement [`Cache`], so the
 //! protocol server, the workload driver and every bench are generic over
 //! the engine and the paper's three-way comparison is an `--engine` flag.
+//! [`sharded::Sharded`] wraps any of them in an N-way key-hash router
+//! that is itself a [`Cache`], so every consumer scales by shard count
+//! without knowing it.
 
 pub mod fleec;
 pub mod memcached;
 pub mod memclock;
 pub mod op;
+pub mod sharded;
 
 pub use op::{Op, OpResult};
 
 use std::sync::Arc;
 
-use crate::metrics::EngineMetrics;
+use crate::metrics::{EngineMetrics, MetricsSnapshot};
 
 /// Hard cap on key length (Memcached's limit).
 pub const MAX_KEY_LEN: usize = 250;
@@ -85,6 +89,31 @@ impl CacheConfig {
             initial_buckets: 64,
             ..Self::default()
         }
+    }
+}
+
+/// One coherent `stats`-grade view of a cache: request counters plus the
+/// capacity figures the text protocol reports. Exists so aggregating
+/// engines ([`sharded::Sharded`]) can hand the serving plane a *merged*
+/// view — [`StatsSnapshot::absorb`] sums every field, and per-shard
+/// `mem_limit`s add back up to the configured total.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub metrics: MetricsSnapshot,
+    pub items: usize,
+    pub buckets: usize,
+    pub mem_used: usize,
+    pub mem_limit: usize,
+}
+
+impl StatsSnapshot {
+    /// Fold another snapshot into this one (all fields sum).
+    pub fn absorb(&mut self, other: &StatsSnapshot) {
+        self.metrics.absorb(&other.metrics);
+        self.items += other.items;
+        self.buckets += other.buckets;
+        self.mem_used += other.mem_used;
+        self.mem_limit += other.mem_limit;
     }
 }
 
@@ -158,11 +187,31 @@ pub trait Cache: Send + Sync {
     /// Current bucket count (for expansion tests / stats).
     fn bucket_count(&self) -> usize;
 
-    /// Request-path metrics.
+    /// Request-path metrics — the engine's own live counters. Routers
+    /// ([`sharded::Sharded`]) keep per-shard counters and return an
+    /// always-zero local instance here; read counters through
+    /// [`Cache::stats`] (which merges) unless you know the cache is a
+    /// bare engine.
     fn metrics(&self) -> &EngineMetrics;
 
     /// Value-memory in use, as accounted by the engine's allocator.
     fn mem_used(&self) -> usize;
+
+    /// The configured value-memory budget (`stats` reports it as
+    /// `limit_maxbytes`). Aggregating engines sum their shards'.
+    fn mem_limit(&self) -> usize;
+
+    /// One coherent `stats` view. The default assembles the single
+    /// engine's own figures; routers override it to merge shards.
+    fn stats(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            metrics: self.metrics().snapshot(),
+            items: self.item_count(),
+            buckets: self.bucket_count(),
+            mem_used: self.mem_used(),
+            mem_limit: self.mem_limit(),
+        }
+    }
 
     /// Background maintenance hook driven by the coordinator (expansion
     /// tail work, reclamation nudges). Default: nothing.
@@ -184,6 +233,33 @@ pub fn build_engine(name: &str, config: CacheConfig) -> crate::Result<Arc<dyn Ca
         "fleec" => Ok(Arc::new(fleec::FleecCache::new(config))),
         "memcached" => Ok(Arc::new(memcached::MemcachedCache::new(config))),
         "memclock" => Ok(Arc::new(memclock::MemClockCache::new(config))),
+        other => anyhow::bail!("unknown engine '{other}' (expected fleec|memcached|memclock)"),
+    }
+}
+
+/// Construct an engine behind an N-shard key-hash router
+/// ([`sharded::Sharded`]). `shards <= 1` returns the bare engine (no
+/// router layer on the depth-1 path); larger counts round up to a power
+/// of two. The configured `mem_limit`/`initial_buckets` are divided
+/// across shards so aggregate capacity matches the unsharded build.
+pub fn build_sharded(
+    name: &str,
+    shards: usize,
+    config: CacheConfig,
+) -> crate::Result<Arc<dyn Cache>> {
+    if shards <= 1 {
+        return build_engine(name, config);
+    }
+    match name {
+        "fleec" => Ok(Arc::new(sharded::Sharded::from_fn(shards, config, |_, c| {
+            fleec::FleecCache::new(c)
+        }))),
+        "memcached" => Ok(Arc::new(sharded::Sharded::from_fn(shards, config, |_, c| {
+            memcached::MemcachedCache::new(c)
+        }))),
+        "memclock" => Ok(Arc::new(sharded::Sharded::from_fn(shards, config, |_, c| {
+            memclock::MemClockCache::new(c)
+        }))),
         other => anyhow::bail!("unknown engine '{other}' (expected fleec|memcached|memclock)"),
     }
 }

@@ -1,0 +1,397 @@
+//! `Sharded<C>` — the engine router: N independent engine instances
+//! behind one [`Cache`] face, routed by key hash.
+//!
+//! The ROADMAP's scaling lever past batching is one engine instance per
+//! core-complex: each shard owns a private hash table, slab and (for
+//! FLeeC) EBR collector, so cross-core contention drops by roughly the
+//! shard count and the PR-1 batch path *compounds* — a socket read's
+//! batch splits into per-shard **sub-batches** (batch → shard →
+//! sub-batch), each of which still pays one EBR pin / one engine
+//! crossing on engines that batch.
+//!
+//! Routing uses the **high 32 bits** of the shared [`hash_key`] value.
+//! Every engine derives its bucket index (and the blocking engines their
+//! lock stripe) from the *low* bits, so routing on the high bits keeps
+//! each shard's table fully populated instead of pinning it to a
+//! 1-in-N bucket subset.
+//!
+//! Semantics: ops on different keys commute (every result and state
+//! transition in the [`Cache`] contract is per-key), and all ops for one
+//! key land on one shard in their original relative order, so a routed
+//! batch is indistinguishable from a sequential run — with one caveat:
+//! `cas` tokens are allocated per shard, so token *values* differ from an
+//! unsharded run (they remain unique per key, which is all the protocol
+//! promises). `rust/tests/shard_semantics.rs` holds the router to this.
+//!
+//! Aggregate views merge: [`Cache::stats`] sums counters and memory
+//! across shards (the configured `mem_limit` is divided across shards at
+//! construction, so the merged `limit_maxbytes` equals the configured
+//! total), `flush_all`/`maintenance` fan out, and `clock_snapshot`
+//! concatenates the shards' CLOCK arrays in shard order.
+
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use crate::cache::{
+    hash_key, Cache, CacheConfig, GetResult, Op, OpResult, StatsSnapshot, StoreOutcome,
+};
+use crate::metrics::EngineMetrics;
+
+/// An N-shard router over any [`Cache`] engine.
+pub struct Sharded<C: Cache> {
+    shards: Box<[C]>,
+    /// `shards.len() - 1`; the length is always a power of two.
+    mask: usize,
+    /// Interned `"<engine>/<n>"` display name.
+    name: &'static str,
+    /// Router-local metrics, permanently zero: per-op counters live in
+    /// the shards and are merged by [`Cache::stats`]. Only here so
+    /// `metrics()` has something to hand out.
+    router_metrics: EngineMetrics,
+}
+
+impl<C: Cache> Sharded<C> {
+    /// Build `shards` engines (rounded up to a power of two) with
+    /// `build(shard_index, per_shard_config)`. The configured `mem_limit`
+    /// is divided across shards (remainder to shard 0) so the merged
+    /// accounting still sums to the configured total; `initial_buckets`
+    /// and `lock_stripes` are divided too, keeping total table size and
+    /// total lock count — and therefore expansion behavior and the
+    /// blocking engines' contention baseline — comparable to an
+    /// unsharded engine (otherwise a shards-vs-flat bench would conflate
+    /// the router's win with a plain stripe-count increase).
+    pub fn from_fn(
+        shards: usize,
+        config: CacheConfig,
+        mut build: impl FnMut(usize, CacheConfig) -> C,
+    ) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        let built: Vec<C> = (0..n)
+            .map(|i| {
+                let mut shard_config = config.clone();
+                shard_config.mem_limit = config.mem_limit / n
+                    + if i == 0 { config.mem_limit % n } else { 0 };
+                shard_config.initial_buckets = (config.initial_buckets / n).max(8);
+                shard_config.lock_stripes = (config.lock_stripes / n).max(1);
+                build(i, shard_config)
+            })
+            .collect();
+        let name = interned_name(built[0].engine_name(), n);
+        Sharded {
+            shards: built.into_boxed_slice(),
+            mask: n - 1,
+            name,
+            router_metrics: EngineMetrics::default(),
+        }
+    }
+
+    /// Number of shards (a power of two).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard index `key` routes to. High hash bits on purpose: the
+    /// engines consume the low bits for bucket/stripe selection.
+    #[inline]
+    pub fn shard_of(&self, key: &[u8]) -> usize {
+        ((hash_key(key) >> 32) as usize) & self.mask
+    }
+
+    /// Direct access to one shard (tests, diagnostics).
+    pub fn shard(&self, idx: usize) -> &C {
+        &self.shards[idx]
+    }
+
+    #[inline]
+    fn route(&self, key: &[u8]) -> &C {
+        &self.shards[self.shard_of(key)]
+    }
+}
+
+impl<C: Cache> Cache for Sharded<C> {
+    fn engine_name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Split the batch into per-shard sub-batches (preserving each key's
+    /// op order), execute one sub-batch per shard, and re-interleave the
+    /// results into original batch order. Each sub-batch crosses its
+    /// shard through that engine's own `execute_batch`, so FLeeC shards
+    /// still pin one EBR guard per sub-batch.
+    fn execute_batch(&self, ops: &[Op<'_>]) -> Vec<OpResult> {
+        if ops.is_empty() {
+            return Vec::new();
+        }
+        if self.shards.len() == 1 {
+            return self.shards[0].execute_batch(ops);
+        }
+        // Counting-sort partition into one flat buffer: allocation count
+        // is independent of the shard count (this sits on the
+        // per-socket-read hot path). A stable grouping — ops iterate in
+        // batch order and each shard's cursor only moves forward — so
+        // sub-batch op order == original relative order and per-key
+        // sequential semantics survive the split.
+        let n = self.shards.len();
+        let shard_ids: Vec<u32> = ops
+            .iter()
+            .map(|op| self.shard_of(op.key()) as u32)
+            .collect();
+        let mut starts = vec![0u32; n + 1];
+        for &s in &shard_ids {
+            starts[s as usize + 1] += 1;
+        }
+        for i in 0..n {
+            starts[i + 1] += starts[i];
+        }
+        let mut cursor: Vec<u32> = starts[..n].to_vec();
+        let mut flat_ops: Vec<Op<'_>> = vec![ops[0]; ops.len()];
+        let mut flat_idx: Vec<u32> = vec![0; ops.len()];
+        for (i, op) in ops.iter().enumerate() {
+            let s = shard_ids[i] as usize;
+            let pos = cursor[s] as usize;
+            cursor[s] += 1;
+            flat_ops[pos] = *op;
+            flat_idx[pos] = i as u32;
+        }
+        // Execute per-shard slices and re-interleave.
+        let mut results: Vec<Option<OpResult>> = vec![None; ops.len()];
+        for (s, shard) in self.shards.iter().enumerate() {
+            let (lo, hi) = (starts[s] as usize, starts[s + 1] as usize);
+            if lo == hi {
+                continue;
+            }
+            let rs = shard.execute_batch(&flat_ops[lo..hi]);
+            debug_assert_eq!(rs.len(), hi - lo, "shard broke the batch contract");
+            for (j, r) in rs.into_iter().enumerate() {
+                results[flat_idx[lo + j] as usize] = Some(r);
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("sharded batch left a result slot empty"))
+            .collect()
+    }
+
+    fn get(&self, key: &[u8]) -> Option<GetResult> {
+        self.route(key).get(key)
+    }
+
+    fn set(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
+        self.route(key).set(key, value, flags, exptime)
+    }
+
+    fn add(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
+        self.route(key).add(key, value, flags, exptime)
+    }
+
+    fn replace(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
+        self.route(key).replace(key, value, flags, exptime)
+    }
+
+    fn append(&self, key: &[u8], suffix: &[u8]) -> StoreOutcome {
+        self.route(key).append(key, suffix)
+    }
+
+    fn prepend(&self, key: &[u8], prefix: &[u8]) -> StoreOutcome {
+        self.route(key).prepend(key, prefix)
+    }
+
+    fn cas(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32, cas: u64) -> StoreOutcome {
+        self.route(key).cas(key, value, flags, exptime, cas)
+    }
+
+    fn delete(&self, key: &[u8]) -> bool {
+        self.route(key).delete(key)
+    }
+
+    fn incr(&self, key: &[u8], delta: u64) -> Option<u64> {
+        self.route(key).incr(key, delta)
+    }
+
+    fn decr(&self, key: &[u8], delta: u64) -> Option<u64> {
+        self.route(key).decr(key, delta)
+    }
+
+    fn touch(&self, key: &[u8], exptime: u32) -> bool {
+        self.route(key).touch(key, exptime)
+    }
+
+    fn flush_all(&self) {
+        for s in self.shards.iter() {
+            s.flush_all();
+        }
+    }
+
+    fn item_count(&self) -> usize {
+        self.shards.iter().map(|s| s.item_count()).sum()
+    }
+
+    fn bucket_count(&self) -> usize {
+        self.shards.iter().map(|s| s.bucket_count()).sum()
+    }
+
+    fn metrics(&self) -> &EngineMetrics {
+        // Always zero — per-shard metrics are merged by `stats()`.
+        &self.router_metrics
+    }
+
+    fn mem_used(&self) -> usize {
+        self.shards.iter().map(|s| s.mem_used()).sum()
+    }
+
+    fn mem_limit(&self) -> usize {
+        self.shards.iter().map(|s| s.mem_limit()).sum()
+    }
+
+    /// The merge path: one [`StatsSnapshot`] per shard, summed. This is
+    /// what makes `stats` over a sharded server truthful — counters,
+    /// items, memory and `limit_maxbytes` all add back up to the whole.
+    fn stats(&self) -> StatsSnapshot {
+        let mut acc = StatsSnapshot::default();
+        for s in self.shards.iter() {
+            acc.absorb(&s.stats());
+        }
+        acc
+    }
+
+    fn maintenance(&self) {
+        for s in self.shards.iter() {
+            s.maintenance();
+        }
+    }
+
+    fn clock_snapshot(&self) -> Option<Vec<u8>> {
+        let mut out = Vec::new();
+        for s in self.shards.iter() {
+            out.extend(s.clock_snapshot()?);
+        }
+        Some(out)
+    }
+
+    fn set_evict_params(&self, decay: u8, batch: u32) {
+        for s in self.shards.iter() {
+            s.set_evict_params(decay, batch);
+        }
+    }
+}
+
+/// Intern `"<engine>/<n>"` so `engine_name` can stay `&'static str`
+/// without leaking per instance (tests build thousands of routers).
+fn interned_name(inner: &str, n: usize) -> &'static str {
+    static NAMES: Lazy<Mutex<Vec<&'static str>>> = Lazy::new(|| Mutex::new(Vec::new()));
+    let want = format!("{inner}/{n}");
+    let mut names = NAMES.lock().unwrap();
+    if let Some(&existing) = names.iter().find(|&&s| s == want) {
+        return existing;
+    }
+    let leaked: &'static str = Box::leak(want.into_boxed_str());
+    names.push(leaked);
+    leaked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::fleec::FleecCache;
+
+    fn router(n: usize) -> Sharded<FleecCache> {
+        Sharded::from_fn(n, CacheConfig::small(), |_, cfg| FleecCache::new(cfg))
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_uses_every_shard() {
+        let r = router(8);
+        assert_eq!(r.shard_count(), 8);
+        let mut seen = [false; 8];
+        for i in 0..1024u32 {
+            let key = format!("route-{i}");
+            let a = r.shard_of(key.as_bytes());
+            let b = r.shard_of(key.as_bytes());
+            assert_eq!(a, b, "routing must be stable");
+            seen[a] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "1024 keys must touch all 8 shards");
+    }
+
+    #[test]
+    fn shard_count_rounds_up_to_power_of_two() {
+        assert_eq!(router(1).shard_count(), 1);
+        assert_eq!(router(3).shard_count(), 4);
+        assert_eq!(router(8).shard_count(), 8);
+        assert_eq!(Sharded::from_fn(0, CacheConfig::small(), |_, cfg| {
+            FleecCache::new(cfg)
+        })
+        .shard_count(), 1);
+    }
+
+    #[test]
+    fn mem_limit_survives_the_split() {
+        let config = CacheConfig {
+            mem_limit: (4 << 20) + 3, // indivisible on purpose
+            ..CacheConfig::small()
+        };
+        let r = Sharded::from_fn(4, config.clone(), |_, cfg| FleecCache::new(cfg));
+        assert_eq!(r.mem_limit(), config.mem_limit);
+        assert_eq!(r.stats().mem_limit, config.mem_limit);
+    }
+
+    #[test]
+    fn single_key_ops_route_and_aggregate() {
+        let r = router(4);
+        for i in 0..64u32 {
+            let key = format!("agg-{i}");
+            assert_eq!(r.set(key.as_bytes(), b"v", 0, 0), StoreOutcome::Stored);
+        }
+        assert_eq!(r.item_count(), 64);
+        for i in 0..64u32 {
+            let key = format!("agg-{i}");
+            assert_eq!(r.get(key.as_bytes()).unwrap().data, b"v");
+        }
+        let stats = r.stats();
+        assert_eq!(stats.items, 64);
+        assert_eq!(stats.metrics.sets, 64);
+        assert_eq!(stats.metrics.gets, 64);
+        assert_eq!(stats.metrics.hits, 64);
+        r.flush_all();
+        assert_eq!(r.item_count(), 0);
+    }
+
+    #[test]
+    fn engine_name_reflects_shape_and_is_interned() {
+        let a = router(4);
+        let b = router(4);
+        assert_eq!(a.engine_name(), "fleec/4");
+        assert!(std::ptr::eq(a.engine_name(), b.engine_name()));
+        assert_eq!(router(1).engine_name(), "fleec/1");
+    }
+
+    #[test]
+    fn batch_splits_and_reinterleaves_in_order() {
+        let r = router(4);
+        // Interleave writes and reads on keys that land on different
+        // shards; results must come back in original batch order.
+        let keys: Vec<String> = (0..16).map(|i| format!("b-{i}")).collect();
+        let mut ops = Vec::new();
+        for key in &keys {
+            ops.push(Op::Set {
+                key: key.as_bytes(),
+                value: key.as_bytes(),
+                flags: 0,
+                exptime: 0,
+            });
+        }
+        for key in &keys {
+            ops.push(Op::Get { key: key.as_bytes() });
+        }
+        let rs = r.execute_batch(&ops);
+        assert_eq!(rs.len(), ops.len());
+        for (i, key) in keys.iter().enumerate() {
+            assert_eq!(rs[i], OpResult::Store(StoreOutcome::Stored));
+            match &rs[keys.len() + i] {
+                OpResult::Value(Some(v)) => assert_eq!(v.data, key.as_bytes()),
+                other => panic!("slot {i}: {other:?}"),
+            }
+        }
+    }
+}

@@ -13,7 +13,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::cache::{build_engine, CacheConfig, ENGINES};
+use crate::cache::{build_sharded, CacheConfig, ENGINES};
 use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::runtime::{artifacts_dir, HitRatioModule, PlannerModule, Runtime};
 use crate::server::{Server, ServerConfig};
@@ -122,10 +122,15 @@ fn print_usage() {
          \n\
          serve         --engine fleec|memcached|memclock --port 11211 --mem-mb 64\n\
                        [--buckets N] [--clock-max K] [--no-planner]\n\
+                       [--shards N]  (engine instances behind the key-hash\n\
+                                      router; rounded up to a power of two,\n\
+                                      mem/buckets divided across shards)\n\
          bench         --engine all|<name> --alpha 0.99 --threads 8 --ops 200000\n\
                        [--catalog N] [--value-bytes N] [--read-ratio R] [--mem-mb N]\n\
                        [--batch N]  (ops per engine crossing; >1 uses execute_batch)\n\
+                       [--shards N] (shard count for every engine under test)\n\
          hit-ratio     --alpha 0.99 --catalog 100000 --mem-mb 4 [--trace-len N]\n\
+                       [--shards N] (splits mem/buckets per shard — changes eviction)\n\
          planner-demo  (load artifacts, run the planner once, print the decision)\n\
          version"
     );
@@ -134,8 +139,9 @@ fn print_usage() {
 fn cmd_serve(args: &Args) -> Result<i32> {
     let engine_name = args.get_str("engine", "fleec");
     let port: u16 = args.get_or("port", 11211u16);
+    let shards: usize = args.get_or("shards", 1usize).max(1).next_power_of_two();
     let config = cache_config(args);
-    let cache = build_engine(engine_name, config)?;
+    let cache = build_sharded(engine_name, shards, config)?;
 
     // Planner is best-effort: a serving cache must not require artifacts.
     let planner_dir = if args.has_flag("no-planner") {
@@ -157,10 +163,10 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         Arc::clone(&cache),
     )?;
     eprintln!(
-        "fleec serving engine={} on {} (mem={} MiB)",
-        engine_name,
+        "fleec serving engine={} on {} (mem limit {} MiB)",
+        cache.engine_name(),
         server.addr(),
-        cache.mem_used() >> 20
+        cache.mem_limit() >> 20
     );
     // Serve until killed.
     loop {
@@ -185,19 +191,22 @@ fn cmd_bench(args: &Args) -> Result<i32> {
         batch: args.get_or("batch", 1usize),
     };
     let engine_sel = args.get_str("engine", "all");
+    // Round the way the router does, so the printed topology is the one
+    // that actually runs.
+    let shards: usize = args.get_or("shards", 1usize).max(1).next_power_of_two();
     let engines: Vec<&str> = if engine_sel == "all" {
         ENGINES.to_vec()
     } else {
         vec![engine_sel]
     };
     println!(
-        "# workload: alpha={} reads={} catalog={} value={:?} threads={} ops/thread={:?} batch={}",
+        "# workload: alpha={} reads={} catalog={} value={:?} threads={} ops/thread={:?} batch={} shards={}",
         spec.alpha, spec.read_ratio, spec.catalog, spec.value_size, opts.threads, opts.stop,
-        opts.batch
+        opts.batch, shards
     );
     let mut base_tput = None;
     for name in engines {
-        let cache = build_engine(name, cache_config(args))?;
+        let cache = build_sharded(name, shards, cache_config(args))?;
         let report = run_driver(&cache, &spec, &opts);
         let speedup = base_tput
             .map(|b: f64| report.throughput() / b)
@@ -225,9 +234,16 @@ fn cmd_hit_ratio(args: &Args) -> Result<i32> {
     };
     let trace_len = args.get_or("trace-len", 400_000usize);
     let trace = Trace::generate(&spec, trace_len);
-    println!("# hit-ratio: alpha={} catalog={} mem-mb={}", spec.alpha, spec.catalog, args.get_or("mem-mb", 4usize));
+    let shards: usize = args.get_or("shards", 1usize).max(1).next_power_of_two();
+    println!(
+        "# hit-ratio: alpha={} catalog={} mem-mb={} shards={}",
+        spec.alpha,
+        spec.catalog,
+        args.get_or("mem-mb", 4usize),
+        shards
+    );
     for name in ENGINES {
-        let cache = build_engine(name, cache_config(args))?;
+        let cache = build_sharded(name, shards, cache_config(args))?;
         let report = crate::workload::driver::replay_trace(cache.as_ref(), &trace);
         println!(
             "{name:>10}: hit_ratio={:.4} (hits={} gets={})",

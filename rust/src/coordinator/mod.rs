@@ -98,8 +98,11 @@ impl Coordinator {
                     // 1. Engine maintenance (expansion tail work etc.).
                     cache.maintenance();
 
-                    // 2. Pressure estimate from OOM-stall deltas.
-                    let snap = cache.metrics().snapshot();
+                    // 2. Pressure estimate from OOM-stall deltas. Goes
+                    // through the merged `stats` view so a sharded cache
+                    // reports shard-summed counters here, not the
+                    // router's (always-zero) local metrics.
+                    let snap = cache.stats().metrics;
                     let d_oom = snap.oom_stalls.saturating_sub(last_oom);
                     let d_sets = snap.sets.saturating_sub(last_sets).max(1);
                     last_oom = snap.oom_stalls;

@@ -41,13 +41,31 @@
 //! ops sequentially (results, state, `cas`-token sequence) — enforced by
 //! `rust/tests/batch_semantics.rs`.
 //!
+//! ## The shard router
+//!
+//! Above the engines sits [`cache::sharded::Sharded`]: N independent
+//! engine instances behind one `Cache` face, routed by the high bits of
+//! the shared key hash (the engines consume the low bits for buckets and
+//! lock stripes). A batch splits into per-shard **sub-batches** and the
+//! results re-interleave into original order, so the batching win
+//! compounds with the contention win (batch → shard → sub-batch); the
+//! merged [`cache::Cache::stats`] view sums counters and memory across
+//! shards, keeping `limit_maxbytes` truthful. Everything downstream —
+//! server, driver, benches — is already generic over `Cache`, so
+//! sharding is one `--shards N` flag. `rust/tests/shard_semantics.rs`
+//! pins router equivalence; `rust/tests/concurrent_stress.rs` holds the
+//! composition to per-key linearizability-style checks. The router seam
+//! is also where the future async front-end will sit: one event loop per
+//! shard group, feeding sub-batches.
+//!
 //! The serving plane ([`proto`], [`server`], [`client`]) makes FLeeC a
 //! plug-in Memcached replacement, and it is built around that batched
 //! core: the server drains every complete command from a socket read into
 //! one `execute_batch` call (`stats`/`flush_all` act as barriers), and
 //! [`client::Client::pipeline`] ships N commands in one write and decodes
 //! N replies. `benches/batch_pipeline.rs` sweeps batch depth 1/4/16/64
-//! across all three engines, in-process and over the wire. [`workload`]
+//! and shard count 1/2/4/8 across all three engines, in-process and over
+//! the wire. [`workload`]
 //! and the rest of `benches/` regenerate every figure in the paper's
 //! evaluation; the [`runtime`] + [`coordinator`] pair loads AOT-compiled
 //! JAX/Pallas maintenance kernels (eviction planner, analytic hit-ratio

@@ -103,6 +103,20 @@ impl EngineMetrics {
 }
 
 impl MetricsSnapshot {
+    /// Fold another snapshot into this one (every counter sums) — the
+    /// merge step behind sharded-engine `stats`.
+    pub fn absorb(&mut self, other: &MetricsSnapshot) {
+        self.gets += other.gets;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.sets += other.sets;
+        self.deletes += other.deletes;
+        self.evictions += other.evictions;
+        self.expired += other.expired;
+        self.expansions += other.expansions;
+        self.oom_stalls += other.oom_stalls;
+    }
+
     /// Hit ratio over gets; 0 when no gets happened.
     pub fn hit_ratio(&self) -> f64 {
         if self.gets == 0 {

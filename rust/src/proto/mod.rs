@@ -12,8 +12,7 @@
 
 use std::fmt::Write as _;
 
-use crate::cache::StoreOutcome;
-use crate::metrics::MetricsSnapshot;
+use crate::cache::{StatsSnapshot, StoreOutcome};
 
 /// Storage-command flavor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -245,27 +244,25 @@ pub fn store_reply(outcome: StoreOutcome) -> &'static [u8] {
     }
 }
 
-/// Render `stats` output (Memcached stat names where they exist).
-#[allow(clippy::too_many_arguments)]
+/// Render `stats` output (Memcached stat names where they exist) from
+/// one coherent [`StatsSnapshot`] — single-engine or shard-merged, the
+/// wire format cannot tell the difference.
 pub fn write_stats(
     out: &mut Vec<u8>,
     engine: &str,
-    snapshot: &MetricsSnapshot,
-    items: usize,
-    buckets: usize,
-    mem_used: usize,
-    mem_limit: usize,
+    stats: &StatsSnapshot,
     curr_connections: usize,
 ) {
+    let m = &stats.metrics;
     let mut s = String::with_capacity(512);
     let _ = write!(
         s,
         "STAT engine {engine}\r\n\
          STAT curr_connections {curr_connections}\r\n\
-         STAT curr_items {items}\r\n\
-         STAT hash_buckets {buckets}\r\n\
-         STAT bytes {mem_used}\r\n\
-         STAT limit_maxbytes {mem_limit}\r\n\
+         STAT curr_items {}\r\n\
+         STAT hash_buckets {}\r\n\
+         STAT bytes {}\r\n\
+         STAT limit_maxbytes {}\r\n\
          STAT cmd_get {}\r\n\
          STAT get_hits {}\r\n\
          STAT get_misses {}\r\n\
@@ -276,15 +273,19 @@ pub fn write_stats(
          STAT hash_expansions {}\r\n\
          STAT oom_stalls {}\r\n\
          END\r\n",
-        snapshot.gets,
-        snapshot.hits,
-        snapshot.misses,
-        snapshot.sets,
-        snapshot.deletes,
-        snapshot.evictions,
-        snapshot.expired,
-        snapshot.expansions,
-        snapshot.oom_stalls,
+        stats.items,
+        stats.buckets,
+        stats.mem_used,
+        stats.mem_limit,
+        m.gets,
+        m.hits,
+        m.misses,
+        m.sets,
+        m.deletes,
+        m.evictions,
+        m.expired,
+        m.expansions,
+        m.oom_stalls,
     );
     out.extend_from_slice(s.as_bytes());
 }

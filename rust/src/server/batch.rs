@@ -18,7 +18,7 @@
 //! semantics. `quit` is a barrier too (pending replies must flush before
 //! the connection closes).
 
-use crate::cache::{Op, OpResult};
+use crate::cache::{Cache, Op, OpResult};
 use crate::proto::{self, Command, StoreKind};
 
 /// Reply plan for one parsed command: where its ops landed in the batch
@@ -45,6 +45,16 @@ pub enum Action<'a> {
     Ok { noreply: bool },
     /// Parse failure: `CLIENT_ERROR <msg>`, no engine op.
     ClientError(&'static str),
+}
+
+/// Render the `stats` barrier's reply. Goes through [`Cache::stats`], the
+/// one coherent snapshot an engine can assemble however it likes — a
+/// sharded router merges all its shards here (counters and `curr_items`
+/// sum, per-shard `mem_limit`s add back up to the configured total), so
+/// `limit_maxbytes` over a sharded server stays truthful.
+pub fn write_stats_reply(cache: &dyn Cache, curr_connections: usize, out: &mut Vec<u8>) {
+    let stats = cache.stats();
+    proto::write_stats(out, cache.engine_name(), &stats, curr_connections);
 }
 
 /// Whether `cmd` must not share a batch with the ops queued before it

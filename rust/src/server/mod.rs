@@ -167,16 +167,10 @@ fn handle_connection(
                             flush_batch(cache.as_ref(), &mut ops, &mut actions, &mut outbuf);
                             match cmd {
                                 Command::Stats => {
-                                    let snap = cache.metrics().snapshot();
-                                    proto::write_stats(
-                                        &mut outbuf,
-                                        cache.engine_name(),
-                                        &snap,
-                                        cache.item_count(),
-                                        cache.bucket_count(),
-                                        cache.mem_used(),
-                                        0,
+                                    batch::write_stats_reply(
+                                        cache.as_ref(),
                                         active_conns.load(Ordering::Acquire),
+                                        &mut outbuf,
                                     );
                                 }
                                 Command::FlushAll { noreply } => {

@@ -1,0 +1,324 @@
+//! Per-key linearizability-style stress checks over the lock-free engine
+//! and its sharded composition.
+//!
+//! Cederman et al. ("Lock-free Concurrent Data Structures") argue that
+//! lock-free compositions need systematic concurrent validation, not
+//! just sequential unit tests — these are the cheap-but-sharp variants:
+//!
+//! * **monotonic incr** — N threads hammer `incr` on one counter; every
+//!   returned value must be unique and the final value must equal the
+//!   op count (no lost updates, no double-applied RMW).
+//! * **cas-once-wins** — all threads read the same token behind a
+//!   barrier, then race `cas`; exactly one `Stored` per round.
+//! * **get-after-set visibility** — one writer publishes increasing
+//!   versions of a key; every reader's observed version sequence must be
+//!   non-decreasing (a reader never travels back in time on one key).
+//!
+//! Thread and iteration counts come from `FLEEC_STRESS_THREADS` /
+//! `FLEEC_STRESS_OPS` so CI can pin them low while a workstation run can
+//! turn them up. Each check runs over bare `FleecCache` and over
+//! `Sharded<FleecCache>` (4 shards) — the router must not weaken any
+//! per-key guarantee.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+use fleec::cache::fleec::FleecCache;
+use fleec::cache::sharded::Sharded;
+use fleec::cache::{Cache, CacheConfig, StoreOutcome};
+
+/// Sets the flag on drop — including on panic. Writer threads hold one
+/// so a failed assertion ends the reader spin-loops (test fails) instead
+/// of leaving them spinning forever (test hangs).
+struct DoneOnDrop<'a>(&'a AtomicBool);
+
+impl Drop for DoneOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.store(true, Ordering::Release);
+    }
+}
+
+fn env_or(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn threads() -> usize {
+    env_or("FLEEC_STRESS_THREADS", 4) as usize
+}
+
+fn ops_per_thread() -> u64 {
+    env_or("FLEEC_STRESS_OPS", 2_000)
+}
+
+/// Large table + ample memory: these checks target the request paths,
+/// not expansion or eviction races (those have their own suites).
+fn quiet_config() -> CacheConfig {
+    CacheConfig {
+        mem_limit: 32 << 20,
+        initial_buckets: 2048,
+        ..CacheConfig::default()
+    }
+}
+
+/// The engines under test: the paper's lock-free core, bare and routed.
+fn engines_under_test() -> Vec<Arc<dyn Cache>> {
+    vec![
+        Arc::new(FleecCache::new(quiet_config())),
+        Arc::new(Sharded::from_fn(4, quiet_config(), |_, c| {
+            FleecCache::new(c)
+        })),
+    ]
+}
+
+#[test]
+fn concurrent_incr_loses_no_updates_and_returns_unique_values() {
+    let n_threads = threads();
+    let per_thread = ops_per_thread();
+    for cache in engines_under_test() {
+        let name = cache.engine_name();
+        assert_eq!(cache.set(b"ctr", b"0", 0, 0), StoreOutcome::Stored);
+        let observed = Mutex::new(Vec::<u64>::new());
+        std::thread::scope(|s| {
+            for _ in 0..n_threads {
+                let cache = Arc::clone(&cache);
+                let observed = &observed;
+                s.spawn(move || {
+                    let mut local = Vec::with_capacity(per_thread as usize);
+                    for _ in 0..per_thread {
+                        let v = cache
+                            .incr(b"ctr", 1)
+                            .expect("counter key vanished mid-run");
+                        local.push(v);
+                    }
+                    // Per-thread monotonicity: this thread's own
+                    // increments must observe strictly increasing values.
+                    for w in local.windows(2) {
+                        assert!(w[0] < w[1], "{name}: incr went backwards: {w:?}");
+                    }
+                    observed.lock().unwrap().extend(local);
+                });
+            }
+        });
+        let total = n_threads as u64 * per_thread;
+        let final_value: u64 = String::from_utf8(cache.get(b"ctr").unwrap().data)
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(final_value, total, "{name}: lost updates");
+        let all = observed.into_inner().unwrap();
+        let unique: HashSet<u64> = all.iter().copied().collect();
+        assert_eq!(
+            unique.len(),
+            all.len(),
+            "{name}: two increments returned the same value"
+        );
+        assert_eq!(*all.iter().max().unwrap(), total, "{name}: max return");
+    }
+}
+
+#[test]
+fn cas_exactly_one_winner_per_round() {
+    let n_threads = threads();
+    let rounds = (ops_per_thread() / 40).clamp(10, 200);
+    for cache in engines_under_test() {
+        let name = cache.engine_name();
+        for round in 0..rounds {
+            assert_eq!(
+                cache.set(b"cas-key", round.to_string().as_bytes(), 0, 0),
+                StoreOutcome::Stored
+            );
+            // Everyone must read the SAME token before anyone writes,
+            // hence the two barriers around the read phase.
+            let read_barrier = Barrier::new(n_threads);
+            let write_barrier = Barrier::new(n_threads);
+            let wins = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for t in 0..n_threads {
+                    let cache = Arc::clone(&cache);
+                    let read_barrier = &read_barrier;
+                    let write_barrier = &write_barrier;
+                    let wins = &wins;
+                    s.spawn(move || {
+                        read_barrier.wait();
+                        let token = cache.get(b"cas-key").unwrap().cas;
+                        write_barrier.wait();
+                        let payload = format!("winner-{t}");
+                        match cache.cas(b"cas-key", payload.as_bytes(), 0, 0, token) {
+                            StoreOutcome::Stored => {
+                                wins.fetch_add(1, Ordering::Relaxed);
+                            }
+                            StoreOutcome::Exists => {}
+                            other => panic!("{name}: unexpected cas outcome {other:?}"),
+                        }
+                    });
+                }
+            });
+            assert_eq!(
+                wins.load(Ordering::Relaxed),
+                1,
+                "{name}: round {round} must have exactly one cas winner"
+            );
+            // The surviving value must be one of the contenders'.
+            let data = cache.get(b"cas-key").unwrap().data;
+            assert!(
+                data.starts_with(b"winner-"),
+                "{name}: cas round left a foreign value {:?}",
+                String::from_utf8_lossy(&data)
+            );
+        }
+    }
+}
+
+#[test]
+fn readers_never_observe_versions_going_backwards() {
+    let n_readers = threads().max(2) - 1;
+    let writes = ops_per_thread();
+    for cache in engines_under_test() {
+        let name = cache.engine_name();
+        // Several keys so the sharded instance exercises >1 shard.
+        let keys: Vec<Vec<u8>> = (0..4).map(|i| format!("vis-{i}").into_bytes()).collect();
+        for key in &keys {
+            assert_eq!(cache.set(key, b"0", 0, 0), StoreOutcome::Stored);
+        }
+        let done = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            {
+                let cache = Arc::clone(&cache);
+                let keys = keys.clone();
+                let done = &done;
+                s.spawn(move || {
+                    let _done = DoneOnDrop(done);
+                    for v in 1..=writes {
+                        let bytes = v.to_string().into_bytes();
+                        for key in &keys {
+                            assert_eq!(
+                                cache.set(key, &bytes, 0, 0),
+                                StoreOutcome::Stored,
+                                "writer must always store"
+                            );
+                        }
+                    }
+                });
+            }
+            for _ in 0..n_readers {
+                let cache = Arc::clone(&cache);
+                let keys = keys.clone();
+                let done = &done;
+                s.spawn(move || {
+                    let mut last = vec![0u64; keys.len()];
+                    loop {
+                        let finished = done.load(Ordering::Acquire);
+                        for (i, key) in keys.iter().enumerate() {
+                            let seen: u64 = String::from_utf8(cache.get(key).unwrap().data)
+                                .unwrap()
+                                .parse()
+                                .unwrap();
+                            assert!(
+                                seen >= last[i],
+                                "{name}: key {i} went backwards ({} after {})",
+                                seen,
+                                last[i]
+                            );
+                            last[i] = seen;
+                        }
+                        if finished {
+                            break;
+                        }
+                    }
+                    // The writer finished before our last pass: the final
+                    // version must be visible now.
+                    for (i, key) in keys.iter().enumerate() {
+                        let seen: u64 = String::from_utf8(cache.get(key).unwrap().data)
+                            .unwrap()
+                            .parse()
+                            .unwrap();
+                        assert_eq!(seen, writes, "{name}: key {i} missed the final write");
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[test]
+fn batched_sub_batches_preserve_per_key_order_under_concurrency() {
+    // Writers publish increasing versions through execute_batch (one
+    // batch spans all keys, so the router splits every batch); readers
+    // batch-read all keys and demand per-key monotonicity. This is the
+    // batch → shard → sub-batch path under real concurrency.
+    use fleec::cache::{Op, OpResult};
+    let writes = ops_per_thread();
+    let n_readers = threads().max(2) - 1;
+    let cache = Arc::new(Sharded::from_fn(4, quiet_config(), |_, c| {
+        FleecCache::new(c)
+    }));
+    let keys: Vec<Vec<u8>> = (0..8).map(|i| format!("bord-{i}").into_bytes()).collect();
+    for key in &keys {
+        assert_eq!(cache.set(key, b"0", 0, 0), StoreOutcome::Stored);
+    }
+    let done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        {
+            let cache = Arc::clone(&cache);
+            let keys = keys.clone();
+            let done = &done;
+            s.spawn(move || {
+                let _done = DoneOnDrop(done);
+                for v in 1..=writes {
+                    let bytes = v.to_string().into_bytes();
+                    let ops: Vec<Op<'_>> = keys
+                        .iter()
+                        .map(|key| Op::Set {
+                            key: key.as_slice(),
+                            value: bytes.as_slice(),
+                            flags: 0,
+                            exptime: 0,
+                        })
+                        .collect();
+                    for r in cache.execute_batch(&ops) {
+                        assert_eq!(r, OpResult::Store(StoreOutcome::Stored));
+                    }
+                }
+            });
+        }
+        for _ in 0..n_readers {
+            let cache = Arc::clone(&cache);
+            let keys = keys.clone();
+            let done = &done;
+            s.spawn(move || {
+                let mut last = vec![0u64; keys.len()];
+                loop {
+                    let finished = done.load(Ordering::Acquire);
+                    let ops: Vec<Op<'_>> = keys
+                        .iter()
+                        .map(|key| Op::Get { key: key.as_slice() })
+                        .collect();
+                    for (i, r) in cache.execute_batch(&ops).into_iter().enumerate() {
+                        match r {
+                            OpResult::Value(Some(g)) => {
+                                let seen: u64 =
+                                    String::from_utf8(g.data).unwrap().parse().unwrap();
+                                assert!(
+                                    seen >= last[i],
+                                    "sub-batch reordered key {i}: {} after {}",
+                                    seen,
+                                    last[i]
+                                );
+                                last[i] = seen;
+                            }
+                            other => panic!("key {i}: unexpected {other:?}"),
+                        }
+                    }
+                    if finished {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(cache.item_count(), keys.len());
+}

@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use fleec::cache::{build_engine, CacheConfig, ENGINES};
+use fleec::cache::{build_engine, build_sharded, CacheConfig, ENGINES};
 use fleec::client::Client;
 use fleec::coordinator::{Coordinator, CoordinatorConfig};
 use fleec::server::{Server, ServerConfig};
@@ -87,6 +87,111 @@ fn stats_reflect_traffic() {
     assert_eq!(get("get_hits"), 50);
     assert_eq!(get("get_misses"), 1);
     assert_eq!(cache.item_count(), 50);
+}
+
+#[test]
+fn limit_maxbytes_roundtrips_through_the_text_protocol() {
+    // The configured memory budget must surface as `limit_maxbytes` —
+    // for a bare engine verbatim, and for a sharded engine as the sum of
+    // the per-shard splits (i.e. the configured total again).
+    let mem_limit = 16 << 20;
+    for shards in [1usize, 4] {
+        for engine in ENGINES {
+            let cache = build_sharded(
+                engine,
+                shards,
+                CacheConfig {
+                    mem_limit,
+                    ..CacheConfig::small()
+                },
+            )
+            .unwrap();
+            let server = Server::start(
+                ServerConfig {
+                    addr: "127.0.0.1:0".parse().unwrap(),
+                    nodelay: true,
+                },
+                Arc::clone(&cache),
+            )
+            .unwrap();
+            let mut c = Client::connect(server.addr()).unwrap();
+            let stats = c.stats().unwrap();
+            let reported: usize = stats
+                .iter()
+                .find(|(k, _)| k == "limit_maxbytes")
+                .map(|(_, v)| v.parse().unwrap())
+                .expect("limit_maxbytes missing from stats");
+            assert_eq!(
+                reported, mem_limit,
+                "{engine}/{shards}: limit_maxbytes must round-trip"
+            );
+            let reported_engine = stats
+                .iter()
+                .find(|(k, _)| k == "engine")
+                .map(|(_, v)| v.clone())
+                .unwrap();
+            assert_eq!(reported_engine, cache.engine_name());
+        }
+    }
+}
+
+#[test]
+fn sharded_server_is_wire_compatible_and_merges_stats() {
+    let cache = build_sharded(
+        "fleec",
+        4,
+        CacheConfig {
+            mem_limit: 16 << 20,
+            ..CacheConfig::small()
+        },
+    )
+    .unwrap();
+    let server = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            nodelay: true,
+        },
+        Arc::clone(&cache),
+    )
+    .unwrap();
+    let addr = server.addr();
+    // Concurrent clients spraying keys across all four shards.
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            s.spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let mut rng = Xoshiro256::seeded(t + 100);
+                let mut key = [0u8; KEY_LEN];
+                let mut val = vec![0u8; 128];
+                for _ in 0..300 {
+                    let id = rng.next_below(256);
+                    let k = encode_key(&mut key, id);
+                    if rng.chance(0.5) {
+                        if let Some(v) = c.get(k).unwrap() {
+                            assert!(check_value(id, &v.data), "sharded wire corruption");
+                        }
+                    } else {
+                        let len = 16 + (id as usize % 100);
+                        fill_value(id, &mut val[..len]);
+                        assert!(c.set(k, &val[..len], 0, 0).unwrap());
+                    }
+                }
+            });
+        }
+    });
+    // Merged stats must reflect the union of all shards' traffic.
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.stats().unwrap();
+    let get = |name: &str| -> u64 {
+        stats
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.parse().unwrap())
+            .unwrap_or_else(|| panic!("stat {name} missing"))
+    };
+    assert_eq!(get("cmd_get") + get("cmd_set"), 4 * 300, "merged op counters");
+    assert_eq!(get("curr_items") as usize, cache.item_count());
+    assert!(get("curr_items") > 0);
 }
 
 #[test]

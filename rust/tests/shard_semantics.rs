@@ -1,0 +1,378 @@
+//! Router conformance: `Sharded<C>` must be observationally equivalent
+//! to the engine it wraps, for every engine and shard count.
+//!
+//! Two levels of strictness:
+//!
+//! * **Exact** — two identically-built `Sharded` instances with the same
+//!   shard count, one executing randomized batches through the router's
+//!   `execute_batch` (split → per-shard sub-batch → re-interleave), the
+//!   other running the same chunks op-by-op through the sequential
+//!   oracle. Results must match *exactly*, `cas` tokens included: within
+//!   one topology, per-shard token sequences are deterministic.
+//! * **Token-normalized** — `Sharded` (N = 1, 2, 8) against the bare
+//!   unsharded engine. `cas` tokens are allocated per shard, so the
+//!   *values* differ across topologies; everything else (data, flags,
+//!   outcomes, counter values, presence, merged counters) must agree.
+//!   `cas` ops are generated *symbolically* (use-the-live-token /
+//!   use-a-stale-token) and resolved per instance at each chunk
+//!   boundary, so cas win/lose behavior is compared without comparing
+//!   raw token numbers.
+
+use std::sync::Arc;
+
+use fleec::cache::fleec::FleecCache;
+use fleec::cache::memcached::MemcachedCache;
+use fleec::cache::memclock::MemClockCache;
+use fleec::cache::op::execute_one;
+use fleec::cache::sharded::Sharded;
+use fleec::cache::{Cache, CacheConfig, Op, OpResult, StoreOutcome, ENGINES};
+use fleec::sync::Xoshiro256;
+
+/// Small-footprint config with memory to spare: equivalence runs must
+/// never hit eviction (the documented batch-contract carve-out).
+fn config() -> CacheConfig {
+    CacheConfig {
+        mem_limit: 16 << 20,
+        ..CacheConfig::small()
+    }
+}
+
+/// Build the bare engine by name.
+fn build_flat(engine: &str) -> Arc<dyn Cache> {
+    fleec::cache::build_engine(engine, config()).unwrap()
+}
+
+/// Build an N-shard router over the named engine. Goes through
+/// `Sharded::from_fn` directly (not `build_sharded`) so N = 1 really
+/// exercises the router layer rather than the bare-engine shortcut.
+fn build_router(engine: &str, n: usize) -> Arc<dyn Cache> {
+    match engine {
+        "fleec" => Arc::new(Sharded::from_fn(n, config(), |_, c| FleecCache::new(c))),
+        "memcached" => Arc::new(Sharded::from_fn(n, config(), |_, c| MemcachedCache::new(c))),
+        "memclock" => Arc::new(Sharded::from_fn(n, config(), |_, c| MemClockCache::new(c))),
+        other => panic!("unknown engine {other}"),
+    }
+}
+
+/// One symbolic command over a fixed key space. `cas` ops carry no token
+/// — [`resolve`] reads one from the instance the script will run on, so
+/// every topology sees a cas that is live (or stale) *for it*.
+#[derive(Debug, Clone, Copy)]
+enum AbsOp {
+    Get(usize),
+    Set(usize, u8),
+    Add(usize, u8),
+    Replace(usize, u8),
+    Append(usize, u8),
+    Prepend(usize, u8),
+    CasLive(usize, u8),
+    CasStale(usize, u8),
+    Delete(usize),
+    Incr(usize, u64),
+    Decr(usize, u64),
+    Touch(usize, u32),
+}
+
+fn gen_ops(rng: &mut Xoshiro256, len: usize, key_space: usize) -> Vec<AbsOp> {
+    (0..len)
+        .map(|_| {
+            let k = rng.next_below(key_space as u64) as usize;
+            let v = rng.next_u64() as u8;
+            match rng.next_below(14) {
+                0..=3 => AbsOp::Get(k),
+                4..=5 => AbsOp::Set(k, v),
+                6 => AbsOp::Add(k, v),
+                7 => AbsOp::Replace(k, v),
+                8 => AbsOp::Append(k, v),
+                9 => AbsOp::Prepend(k, v),
+                10 => AbsOp::CasLive(k, v),
+                11 => AbsOp::CasStale(k, v),
+                12 => AbsOp::Delete(k),
+                _ => match rng.next_below(3) {
+                    0 => AbsOp::Incr(k, rng.next_below(100)),
+                    1 => AbsOp::Decr(k, rng.next_below(100)),
+                    _ => AbsOp::Touch(k, 1000),
+                },
+            }
+        })
+        .collect()
+}
+
+/// Value pool: small deterministic payloads, some numeric so
+/// `incr`/`decr` exercise both their success and abort paths.
+fn value_bytes(selector: u8) -> Vec<u8> {
+    if selector % 3 == 0 {
+        format!("{}", u64::from(selector) * 7).into_bytes()
+    } else {
+        format!("payload-{selector}").into_bytes()
+    }
+}
+
+/// A symbolic op resolved against one instance's state: owns its value
+/// bytes and carries a concrete cas token, so borrowed [`Op`]s can be
+/// built from it without lifetime gymnastics.
+enum ConcreteOp {
+    Get(usize),
+    Set(usize, Vec<u8>, u32),
+    Add(usize, Vec<u8>),
+    Replace(usize, Vec<u8>),
+    Append(usize, Vec<u8>),
+    Prepend(usize, Vec<u8>),
+    Cas(usize, Vec<u8>, u64),
+    Delete(usize),
+    Incr(usize, u64),
+    Decr(usize, u64),
+    Touch(usize, u32),
+}
+
+/// Resolve a symbolic op against `cache`'s current state. The lookups
+/// this performs for cas tokens are themselves part of the script's
+/// behavior, so callers must resolve at the same points on every
+/// instance being compared.
+fn resolve(cache: &dyn Cache, op: AbsOp, keys: &[Vec<u8>]) -> ConcreteOp {
+    match op {
+        AbsOp::Get(k) => ConcreteOp::Get(k),
+        AbsOp::Set(k, v) => ConcreteOp::Set(k, value_bytes(v), u32::from(v)),
+        AbsOp::Add(k, v) => ConcreteOp::Add(k, value_bytes(v)),
+        AbsOp::Replace(k, v) => ConcreteOp::Replace(k, value_bytes(v)),
+        AbsOp::Append(k, v) => ConcreteOp::Append(k, value_bytes(v)),
+        AbsOp::Prepend(k, v) => ConcreteOp::Prepend(k, value_bytes(v)),
+        AbsOp::CasLive(k, v) => ConcreteOp::Cas(
+            k,
+            value_bytes(v),
+            cache.get(&keys[k]).map(|r| r.cas).unwrap_or(0),
+        ),
+        AbsOp::CasStale(k, v) => ConcreteOp::Cas(
+            k,
+            value_bytes(v),
+            // Far past any token either topology can reach in one case.
+            cache.get(&keys[k]).map(|r| r.cas).unwrap_or(0) + 100_000,
+        ),
+        AbsOp::Delete(k) => ConcreteOp::Delete(k),
+        AbsOp::Incr(k, d) => ConcreteOp::Incr(k, d),
+        AbsOp::Decr(k, d) => ConcreteOp::Decr(k, d),
+        AbsOp::Touch(k, e) => ConcreteOp::Touch(k, e),
+    }
+}
+
+fn key_at<'a>(keys: &'a [Vec<u8>], k: usize) -> &'a [u8] {
+    keys[k].as_slice()
+}
+
+fn as_op<'a>(c: &'a ConcreteOp, keys: &'a [Vec<u8>]) -> Op<'a> {
+    match c {
+        ConcreteOp::Get(k) => Op::Get { key: key_at(keys, *k) },
+        ConcreteOp::Set(k, v, flags) => Op::Set {
+            key: key_at(keys, *k),
+            value: v.as_slice(),
+            flags: *flags,
+            exptime: 0,
+        },
+        ConcreteOp::Add(k, v) => Op::Add {
+            key: key_at(keys, *k),
+            value: v.as_slice(),
+            flags: 0,
+            exptime: 0,
+        },
+        ConcreteOp::Replace(k, v) => Op::Replace {
+            key: key_at(keys, *k),
+            value: v.as_slice(),
+            flags: 0,
+            exptime: 0,
+        },
+        ConcreteOp::Append(k, v) => Op::Append {
+            key: key_at(keys, *k),
+            suffix: v.as_slice(),
+        },
+        ConcreteOp::Prepend(k, v) => Op::Prepend {
+            key: key_at(keys, *k),
+            prefix: v.as_slice(),
+        },
+        ConcreteOp::Cas(k, v, cas) => Op::CasOp {
+            key: key_at(keys, *k),
+            value: v.as_slice(),
+            flags: 0,
+            exptime: 0,
+            cas: *cas,
+        },
+        ConcreteOp::Delete(k) => Op::Delete { key: key_at(keys, *k) },
+        ConcreteOp::Incr(k, d) => Op::Incr {
+            key: key_at(keys, *k),
+            delta: *d,
+        },
+        ConcreteOp::Decr(k, d) => Op::Decr {
+            key: key_at(keys, *k),
+            delta: *d,
+        },
+        ConcreteOp::Touch(k, e) => Op::Touch {
+            key: key_at(keys, *k),
+            exptime: *e,
+        },
+    }
+}
+
+/// An [`OpResult`] with the `cas` token erased — what two different
+/// shard topologies can be held to.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum NormResult {
+    Value(Option<(Vec<u8>, u32)>),
+    Store(StoreOutcome),
+    Deleted(bool),
+    Counter(Option<u64>),
+    Touched(bool),
+}
+
+fn norm(r: &OpResult) -> NormResult {
+    match r {
+        OpResult::Value(v) => NormResult::Value(v.as_ref().map(|g| (g.data.clone(), g.flags))),
+        OpResult::Store(o) => NormResult::Store(*o),
+        OpResult::Deleted(b) => NormResult::Deleted(*b),
+        OpResult::Counter(c) => NormResult::Counter(*c),
+        OpResult::Touched(b) => NormResult::Touched(*b),
+    }
+}
+
+/// Run `script` against `cache` in chunks, resolving each chunk's
+/// symbolic ops at its start. `batched = true` crosses the engine once
+/// per chunk via `execute_batch`; `false` runs the same resolved chunk
+/// op-by-op — identical resolution points, so the two modes are exactly
+/// comparable on identically-built instances.
+fn run_script(
+    cache: &dyn Cache,
+    script: &[AbsOp],
+    keys: &[Vec<u8>],
+    chunks: &[usize],
+    batched: bool,
+) -> Vec<OpResult> {
+    let mut results = Vec::with_capacity(script.len());
+    let mut at = 0usize;
+    let mut chunk_idx = 0usize;
+    while at < script.len() {
+        let take = chunks[chunk_idx % chunks.len()].min(script.len() - at);
+        chunk_idx += 1;
+        let concrete: Vec<ConcreteOp> = script[at..at + take]
+            .iter()
+            .map(|&a| resolve(cache, a, keys))
+            .collect();
+        let ops: Vec<Op<'_>> = concrete.iter().map(|c| as_op(c, keys)).collect();
+        if batched {
+            results.extend(cache.execute_batch(&ops));
+        } else {
+            results.extend(ops.iter().map(|op| execute_one(cache, op)));
+        }
+        at += take;
+    }
+    results
+}
+
+fn key_space() -> Vec<Vec<u8>> {
+    (0..12).map(|i| format!("shard-key-{i}").into_bytes()).collect()
+}
+
+#[test]
+fn sharded_batches_match_unsharded_for_every_engine_and_shard_count() {
+    fleec::testutil::run_prop("sharded-vs-flat", 0x5AAD_ED01, |rng| {
+        let keys = key_space();
+        let script = gen_ops(rng, 1 + rng.next_below(56) as usize, keys.len());
+        let chunk_sizes = [1 + rng.next_below(9) as usize, 1 + rng.next_below(9) as usize];
+        for engine in ENGINES {
+            let flat = build_flat(engine);
+            let flat_results = run_script(flat.as_ref(), &script, &keys, &chunk_sizes, true);
+            for n in [1usize, 2, 8] {
+                let routed = build_router(engine, n);
+                let routed_results =
+                    run_script(routed.as_ref(), &script, &keys, &chunk_sizes, true);
+                assert_eq!(
+                    routed_results.len(),
+                    flat_results.len(),
+                    "{engine}/{n}: result count"
+                );
+                for (i, (a, b)) in routed_results.iter().zip(&flat_results).enumerate() {
+                    assert_eq!(
+                        norm(a),
+                        norm(b),
+                        "{engine}/{n}: op {i} ({:?}) diverged",
+                        script[i]
+                    );
+                }
+                // Final state, token-normalized.
+                assert_eq!(routed.item_count(), flat.item_count(), "{engine}/{n}: items");
+                for key in &keys {
+                    let (a, b) = (routed.get(key), flat.get(key));
+                    assert_eq!(
+                        a.as_ref().map(|g| (&g.data, g.flags)),
+                        b.as_ref().map(|g| (&g.data, g.flags)),
+                        "{engine}/{n}: state diverged for {:?}",
+                        String::from_utf8_lossy(key)
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn router_batch_equals_router_sequential_exactly() {
+    // Same topology on both sides → per-shard cas-token sequences must be
+    // identical, so this comparison is exact (no normalization).
+    fleec::testutil::run_prop("router-batch-vs-seq", 0x5AAD_ED02, |rng| {
+        let keys = key_space();
+        let script = gen_ops(rng, 1 + rng.next_below(48) as usize, keys.len());
+        let chunk_sizes = [1 + rng.next_below(12) as usize];
+        for engine in ENGINES {
+            for n in [2usize, 8] {
+                let batched = build_router(engine, n);
+                let sequential = build_router(engine, n);
+                let rb = run_script(batched.as_ref(), &script, &keys, &chunk_sizes, true);
+                let rs = run_script(sequential.as_ref(), &script, &keys, &chunk_sizes, false);
+                assert_eq!(rb, rs, "{engine}/{n}: batched router diverged from sequential");
+                for key in &keys {
+                    assert_eq!(
+                        batched.get(key),
+                        sequential.get(key),
+                        "{engine}/{n}: final state diverged for {:?}",
+                        String::from_utf8_lossy(key)
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn merged_request_metrics_match_unsharded() {
+    // A fixed deterministic script (no cas ops: their resolution issues
+    // bookkeeping gets — symmetric, but simpler to reason about without —
+    // and no expansion assertions: shard tables expand on their own
+    // schedules). Request counters must add back up across shards.
+    let keys = key_space();
+    let mut rng = Xoshiro256::seeded(0x5AAD_ED03);
+    let script: Vec<AbsOp> = (0..200)
+        .map(|_| {
+            let k = rng.next_below(keys.len() as u64) as usize;
+            match rng.next_below(10) {
+                0..=5 => AbsOp::Get(k),
+                6..=7 => AbsOp::Set(k, rng.next_u64() as u8),
+                8 => AbsOp::Delete(k),
+                _ => AbsOp::Incr(k, 1),
+            }
+        })
+        .collect();
+    for engine in ENGINES {
+        let flat = build_flat(engine);
+        let routed = build_router(engine, 4);
+        run_script(flat.as_ref(), &script, &keys, &[7], true);
+        run_script(routed.as_ref(), &script, &keys, &[7], true);
+        let (f, r) = (flat.stats(), routed.stats());
+        assert_eq!(r.metrics.gets, f.metrics.gets, "{engine}: gets");
+        assert_eq!(r.metrics.hits, f.metrics.hits, "{engine}: hits");
+        assert_eq!(r.metrics.misses, f.metrics.misses, "{engine}: misses");
+        assert_eq!(r.metrics.sets, f.metrics.sets, "{engine}: sets");
+        assert_eq!(r.metrics.deletes, f.metrics.deletes, "{engine}: deletes");
+        assert_eq!(r.items, f.items, "{engine}: items");
+        assert_eq!(
+            r.mem_limit, f.mem_limit,
+            "{engine}: limit_maxbytes must survive sharding"
+        );
+    }
+}
