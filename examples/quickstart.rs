@@ -63,7 +63,7 @@ fn main() -> fleec::Result<()> {
         "hot key survived 5k evicting inserts"
     );
 
-    let m = cache.metrics().snapshot();
+    let m = cache.stats().metrics;
     println!(
         "items={} buckets={} mem={}B evictions={} expansions={} hit_ratio={:.3}",
         cache.item_count(),

@@ -45,7 +45,7 @@ fn main() -> fleec::Result<()> {
     let server = Server::start(
         ServerConfig {
             addr: "127.0.0.1:0".parse().unwrap(),
-            nodelay: true,
+            ..ServerConfig::default()
         },
         Arc::clone(&cache),
     )?;

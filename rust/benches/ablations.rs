@@ -87,7 +87,7 @@ fn ablation_evict_batch() {
             batch: 1,
         };
         let report = run_driver(&cache, &spec, &opts);
-        let m = cache.metrics().snapshot();
+        let m = cache.stats().metrics;
         println!(
             "{:>10} | {:>12.0} {:>12}",
             batch,

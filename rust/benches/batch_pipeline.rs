@@ -1,4 +1,5 @@
-//! Batch-depth sweep — the experiment behind the batched command API.
+//! Batch-depth × shard × connection sweep — the experiments behind the
+//! batched command API, the shard router, and the reactor front-end.
 //!
 //! ```bash
 //! cargo bench --bench batch_pipeline
@@ -13,25 +14,80 @@
 //!                non-decreasing as depth grows.
 //!   sharded    — the same driver over `Sharded<_>` routers, sweeping
 //!                shard count 1/2/4/8 × batch depth for every engine:
-//!                the batch → shard → sub-batch composition. Shards cut
-//!                contention (biggest for the blocking engines, whose
-//!                LRU/stripe locks stop being global), batching cuts
-//!                per-op synchronization, and the two should compound.
-//!   wire       — a single pipelined connection against the served fleec
+//!                the batch → shard → sub-batch composition.
+//!   wire-depth — a single pipelined connection against the served fleec
 //!                engine (`Client::pipeline`), measuring the end-to-end
 //!                win of one `execute_batch` call per socket read.
+//!   wire-conns — the connection-scaling sweep: 1/64/512 simultaneous
+//!                pipelined connections (`workload::driver::run_wire`)
+//!                against **both** front-end models (`thread` vs
+//!                `reactor`), the experiment the reactor exists for.
+//!
+//! Every row is also appended to `BENCH_batch_pipeline.json` (flat array
+//! of records) so the perf trajectory is machine-readable across PRs.
 
+use std::io::Write as _;
 use std::sync::Arc;
 use std::time::Instant;
 
 use fleec::cache::{build_engine, build_sharded, CacheConfig, ENGINES};
 use fleec::client::{Client, PipelineReply};
-use fleec::server::{Server, ServerConfig};
-use fleec::workload::{driver::StopRule, run_driver, DriverOptions, ValueSize, WorkloadSpec};
+use fleec::server::{Server, ServerConfig, ServerModel};
+use fleec::workload::{
+    driver::StopRule, run_driver, run_wire, DriverOptions, ValueSize, WireOptions, WorkloadSpec,
+};
 
 const DEPTHS: [usize; 4] = [1, 4, 16, 64];
+const JSON_PATH: &str = "BENCH_batch_pipeline.json";
+
+/// One sweep point, serialized into `BENCH_batch_pipeline.json`.
+struct Rec {
+    section: &'static str,
+    engine: String,
+    model: &'static str,
+    shards: usize,
+    depth: usize,
+    conns: usize,
+    ops_per_s: f64,
+    hit_ratio: f64,
+}
+
+impl Rec {
+    fn json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"section\":\"{}\",\"engine\":\"{}\",\"model\":\"{}\",",
+                "\"shards\":{},\"depth\":{},\"conns\":{},",
+                "\"ops_per_s\":{:.1},\"hit_ratio\":{:.4}}}"
+            ),
+            self.section,
+            self.engine,
+            self.model,
+            self.shards,
+            self.depth,
+            self.conns,
+            self.ops_per_s,
+            self.hit_ratio
+        )
+    }
+}
+
+fn write_json(records: &[Rec]) {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str("  ");
+        out.push_str(&r.json());
+        out.push_str(if i + 1 == records.len() { "\n" } else { ",\n" });
+    }
+    out.push_str("]\n");
+    match std::fs::File::create(JSON_PATH).and_then(|mut f| f.write_all(out.as_bytes())) {
+        Ok(()) => println!("\nwrote {} records to {JSON_PATH}", records.len()),
+        Err(e) => eprintln!("\n!! could not write {JSON_PATH}: {e}"),
+    }
+}
 
 fn main() {
+    let mut records: Vec<Rec> = Vec::new();
     let spec = WorkloadSpec {
         catalog: 50_000,
         alpha: 0.99,
@@ -73,6 +129,16 @@ fn main() {
                 tput,
                 report.hit_ratio()
             );
+            records.push(Rec {
+                section: "in_process",
+                engine: engine.to_string(),
+                model: "",
+                shards: 1,
+                depth,
+                conns: 0,
+                ops_per_s: tput,
+                hit_ratio: report.hit_ratio(),
+            });
             prev = tput;
         }
         println!();
@@ -113,17 +179,27 @@ fn main() {
                     report.throughput(),
                     report.hit_ratio()
                 );
+                records.push(Rec {
+                    section: "sharded",
+                    engine: engine.to_string(),
+                    model: "",
+                    shards,
+                    depth,
+                    conns: 0,
+                    ops_per_s: report.throughput(),
+                    hit_ratio: report.hit_ratio(),
+                });
             }
         }
         println!();
     }
 
-    println!("== wire: fleec, one connection, pipelined mixed get/set ===========");
+    println!("== wire-depth: fleec, one connection, pipelined mixed get/set =====");
     let cache = build_engine("fleec", CacheConfig::default()).unwrap();
     let server = Server::start(
         ServerConfig {
             addr: "127.0.0.1:0".parse().unwrap(),
-            nodelay: true,
+            ..ServerConfig::default()
         },
         Arc::clone(&cache),
     )
@@ -161,5 +237,88 @@ fn main() {
             "depth {:>3}: {:>10.0} ops/s   ({ops} ops, {hits} get hits)",
             depth, tput
         );
+        records.push(Rec {
+            section: "wire_depth",
+            engine: "fleec".to_string(),
+            model: "thread",
+            shards: 1,
+            depth,
+            conns: 1,
+            ops_per_s: tput,
+            hit_ratio: 0.0,
+        });
     }
+    drop(client);
+    drop(server);
+
+    println!();
+    println!("== wire-conns: connection scaling x front-end model (fleec) =======");
+    println!("{:>8} {:>8} {:>12} {:>8}", "model", "conns", "ops/s", "hit");
+    let wire_spec = WorkloadSpec {
+        catalog: 16_384,
+        alpha: 0.99,
+        read_ratio: 0.95,
+        value_size: ValueSize::Fixed(64),
+        seed: 0xBA7C_4ED0,
+    };
+    const CONNS: [usize; 3] = [1, 64, 512];
+    let mut models: Vec<(&str, ServerModel)> = vec![("thread", ServerModel::Thread)];
+    if cfg!(unix) {
+        models.push(("reactor", ServerModel::Reactor { io_threads: 0 }));
+    }
+    const DEPTH: usize = 16;
+    const TOTAL_OPS: u64 = 131_072;
+    for &(model_name, model) in &models {
+        for &conns in &CONNS {
+            let cache = build_engine(
+                "fleec",
+                CacheConfig {
+                    mem_limit: 64 << 20,
+                    ..CacheConfig::default()
+                },
+            )
+            .unwrap();
+            let server = Server::start(
+                ServerConfig {
+                    addr: "127.0.0.1:0".parse().unwrap(),
+                    model,
+                    ..ServerConfig::default()
+                },
+                Arc::clone(&cache),
+            )
+            .unwrap();
+            let opts = WireOptions {
+                conns,
+                depth: DEPTH,
+                ops_per_conn: (TOTAL_OPS / conns as u64).max(DEPTH as u64),
+                workers: 0,
+                prefill: true,
+            };
+            match run_wire(server.addr(), &wire_spec, &opts) {
+                Ok(report) => {
+                    println!(
+                        "{:>8} {:>8} {:>12.0} {:>8.4}",
+                        model_name,
+                        conns,
+                        report.throughput(),
+                        report.hit_ratio()
+                    );
+                    records.push(Rec {
+                        section: "wire_conns",
+                        engine: "fleec".to_string(),
+                        model: model_name,
+                        shards: 1,
+                        depth: DEPTH,
+                        conns,
+                        ops_per_s: report.throughput(),
+                        hit_ratio: report.hit_ratio(),
+                    });
+                }
+                Err(e) => eprintln!("{model_name}/{conns}: wire run failed: {e:#}"),
+            }
+        }
+        println!();
+    }
+
+    write_json(&records);
 }

@@ -172,7 +172,7 @@ fn main() {
                 cache.set(format!("evict-{i}").as_bytes(), &value, 0, 0);
             }
         });
-        let m = cache.metrics().snapshot();
+        let m = cache.stats().metrics;
         println!("  (evictions={} oom_stalls={})", m.evictions, m.oom_stalls);
     }
 

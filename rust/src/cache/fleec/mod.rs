@@ -23,7 +23,7 @@ use std::sync::Arc;
 
 use crate::cache::{
     deadline_from_exptime, hash_key, is_expired, Cache, CacheConfig, GetResult, Op, OpResult,
-    StoreOutcome, MAX_KEY_LEN,
+    StatsSnapshot, StoreOutcome, MAX_KEY_LEN,
 };
 use crate::ebr::{Collector, Guard};
 use crate::metrics::EngineMetrics;
@@ -80,6 +80,13 @@ impl FleecCache {
     /// The EBR collector (shared with the coordinator).
     pub fn collector(&self) -> &Arc<Collector> {
         &self.collector
+    }
+
+    /// The engine's live request-path counters. Inherent on purpose:
+    /// generic consumers read counters through the merging
+    /// [`Cache::stats`] path only.
+    pub fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
     }
 
     /// The slab allocator (stats).
@@ -969,8 +976,14 @@ impl Cache for FleecCache {
         self.root(&guard).len()
     }
 
-    fn metrics(&self) -> &EngineMetrics {
-        &self.metrics
+    fn stats(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            metrics: self.metrics.snapshot(),
+            items: self.item_count(),
+            buckets: self.bucket_count(),
+            mem_used: self.mem_used(),
+            mem_limit: self.mem_limit(),
+        }
     }
 
     fn mem_used(&self) -> usize {

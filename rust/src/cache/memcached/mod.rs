@@ -26,8 +26,8 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
 use crate::cache::{
-    deadline_from_exptime, hash_key, is_expired, Cache, CacheConfig, GetResult, StoreOutcome,
-    MAX_KEY_LEN,
+    deadline_from_exptime, hash_key, is_expired, Cache, CacheConfig, GetResult, StatsSnapshot,
+    StoreOutcome, MAX_KEY_LEN,
 };
 use crate::metrics::EngineMetrics;
 
@@ -390,6 +390,15 @@ enum Mode {
     Cas(u64),
 }
 
+impl MemcachedCache {
+    /// The engine's live request-path counters. Inherent on purpose:
+    /// generic consumers read counters through the merging
+    /// [`Cache::stats`] path only.
+    pub fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+}
+
 impl Cache for MemcachedCache {
     fn engine_name(&self) -> &'static str {
         "memcached"
@@ -559,8 +568,14 @@ impl Cache for MemcachedCache {
         unsafe { self.state().mask + 1 }
     }
 
-    fn metrics(&self) -> &EngineMetrics {
-        &self.metrics
+    fn stats(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            metrics: self.metrics.snapshot(),
+            items: self.item_count(),
+            buckets: self.bucket_count(),
+            mem_used: self.mem_used(),
+            mem_limit: self.mem_limit(),
+        }
     }
 
     fn mem_used(&self) -> usize {

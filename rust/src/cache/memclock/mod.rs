@@ -20,8 +20,8 @@ use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
 use crate::cache::{
-    deadline_from_exptime, hash_key, is_expired, Cache, CacheConfig, GetResult, StoreOutcome,
-    MAX_KEY_LEN,
+    deadline_from_exptime, hash_key, is_expired, Cache, CacheConfig, GetResult, StatsSnapshot,
+    StoreOutcome, MAX_KEY_LEN,
 };
 use crate::metrics::EngineMetrics;
 
@@ -308,6 +308,15 @@ enum Mode {
     Cas(u64),
 }
 
+impl MemClockCache {
+    /// The engine's live request-path counters. Inherent on purpose:
+    /// generic consumers read counters through the merging
+    /// [`Cache::stats`] path only.
+    pub fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+}
+
 impl Cache for MemClockCache {
     fn engine_name(&self) -> &'static str {
         "memclock"
@@ -466,8 +475,14 @@ impl Cache for MemClockCache {
         unsafe { self.state().mask + 1 }
     }
 
-    fn metrics(&self) -> &EngineMetrics {
-        &self.metrics
+    fn stats(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            metrics: self.metrics.snapshot(),
+            items: self.item_count(),
+            buckets: self.bucket_count(),
+            mem_used: self.mem_used(),
+            mem_limit: self.mem_limit(),
+        }
     }
 
     fn mem_used(&self) -> usize {

@@ -19,7 +19,7 @@ pub use op::{Op, OpResult};
 
 use std::sync::Arc;
 
-use crate::metrics::{EngineMetrics, MetricsSnapshot};
+use crate::metrics::MetricsSnapshot;
 
 /// Hard cap on key length (Memcached's limit).
 pub const MAX_KEY_LEN: usize = 250;
@@ -187,13 +187,6 @@ pub trait Cache: Send + Sync {
     /// Current bucket count (for expansion tests / stats).
     fn bucket_count(&self) -> usize;
 
-    /// Request-path metrics — the engine's own live counters. Routers
-    /// ([`sharded::Sharded`]) keep per-shard counters and return an
-    /// always-zero local instance here; read counters through
-    /// [`Cache::stats`] (which merges) unless you know the cache is a
-    /// bare engine.
-    fn metrics(&self) -> &EngineMetrics;
-
     /// Value-memory in use, as accounted by the engine's allocator.
     fn mem_used(&self) -> usize;
 
@@ -201,17 +194,14 @@ pub trait Cache: Send + Sync {
     /// `limit_maxbytes`). Aggregating engines sum their shards'.
     fn mem_limit(&self) -> usize;
 
-    /// One coherent `stats` view. The default assembles the single
-    /// engine's own figures; routers override it to merge shards.
-    fn stats(&self) -> StatsSnapshot {
-        StatsSnapshot {
-            metrics: self.metrics().snapshot(),
-            items: self.item_count(),
-            buckets: self.bucket_count(),
-            mem_used: self.mem_used(),
-            mem_limit: self.mem_limit(),
-        }
-    }
+    /// One coherent `stats` view — the **only** counter read path the
+    /// trait exposes. Bare engines assemble their own figures (each keeps
+    /// a live `EngineMetrics` as an inherent detail); aggregating caches
+    /// like [`sharded::Sharded`] merge their children's snapshots, so a
+    /// generic consumer can never land on a counter view that an
+    /// aggregator silently leaves at zero. (The trait used to also expose
+    /// the live `metrics()` handle, which had exactly that trap.)
+    fn stats(&self) -> StatsSnapshot;
 
     /// Background maintenance hook driven by the coordinator (expansion
     /// tail work, reclamation nudges). Default: nothing.

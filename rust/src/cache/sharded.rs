@@ -36,7 +36,6 @@ use once_cell::sync::Lazy;
 use crate::cache::{
     hash_key, Cache, CacheConfig, GetResult, Op, OpResult, StatsSnapshot, StoreOutcome,
 };
-use crate::metrics::EngineMetrics;
 
 /// An N-shard router over any [`Cache`] engine.
 pub struct Sharded<C: Cache> {
@@ -45,10 +44,6 @@ pub struct Sharded<C: Cache> {
     mask: usize,
     /// Interned `"<engine>/<n>"` display name.
     name: &'static str,
-    /// Router-local metrics, permanently zero: per-op counters live in
-    /// the shards and are merged by [`Cache::stats`]. Only here so
-    /// `metrics()` has something to hand out.
-    router_metrics: EngineMetrics,
 }
 
 impl<C: Cache> Sharded<C> {
@@ -82,7 +77,6 @@ impl<C: Cache> Sharded<C> {
             shards: built.into_boxed_slice(),
             mask: n - 1,
             name,
-            router_metrics: EngineMetrics::default(),
         }
     }
 
@@ -229,11 +223,6 @@ impl<C: Cache> Cache for Sharded<C> {
 
     fn bucket_count(&self) -> usize {
         self.shards.iter().map(|s| s.bucket_count()).sum()
-    }
-
-    fn metrics(&self) -> &EngineMetrics {
-        // Always zero — per-shard metrics are merged by `stats()`.
-        &self.router_metrics
     }
 
     fn mem_used(&self) -> usize {

@@ -3,7 +3,9 @@
 //!
 //! ```text
 //! fleec serve   --engine fleec --port 11211 --mem-mb 64 [--no-planner]
+//!               [--model reactor|thread] [--io-threads N]
 //! fleec bench   --engine all --alpha 0.99 --threads 8 --ops 200000 ...
+//!               [--conns N] (over-the-wire connection-scaling mode)
 //! fleec hit-ratio --alpha 0.99 --catalog 100000 --mem-mb 4
 //! fleec planner-demo
 //! fleec version
@@ -16,9 +18,9 @@ use std::time::Duration;
 use crate::cache::{build_sharded, CacheConfig, ENGINES};
 use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::runtime::{artifacts_dir, HitRatioModule, PlannerModule, Runtime};
-use crate::server::{Server, ServerConfig};
+use crate::server::{Server, ServerConfig, ServerModel};
 use crate::workload::{
-    run_driver, DriverOptions, ValueSize, WorkloadSpec,
+    run_driver, run_wire, DriverOptions, ValueSize, WireOptions, WorkloadSpec,
     driver::StopRule,
 };
 use crate::Result;
@@ -79,6 +81,32 @@ impl Args {
     }
 }
 
+/// The default front-end model: the event-driven reactor wherever the
+/// poller exists, the portable thread-per-connection model elsewhere.
+pub fn default_model() -> &'static str {
+    if cfg!(unix) {
+        "reactor"
+    } else {
+        "thread"
+    }
+}
+
+/// Resolve `--model`/`--io-threads` into a [`ServerModel`].
+pub fn server_model(args: &Args) -> Result<ServerModel> {
+    let io_threads: usize = args.get_or("io-threads", 0usize);
+    match args.get_str("model", default_model()) {
+        "thread" => Ok(ServerModel::Thread),
+        "reactor" => {
+            if cfg!(unix) {
+                Ok(ServerModel::Reactor { io_threads })
+            } else {
+                anyhow::bail!("--model reactor requires a Unix poller; use --model thread")
+            }
+        }
+        other => anyhow::bail!("unknown --model '{other}' (expected reactor|thread)"),
+    }
+}
+
 /// Build a [`CacheConfig`] from common options.
 pub fn cache_config(args: &Args) -> CacheConfig {
     CacheConfig {
@@ -125,10 +153,23 @@ fn print_usage() {
                        [--shards N]  (engine instances behind the key-hash\n\
                                       router; rounded up to a power of two,\n\
                                       mem/buckets divided across shards)\n\
+                       [--model reactor|thread]\n\
+                                     (front-end: 'reactor' = event-driven — N\n\
+                                      event-loop threads multiplex non-blocking\n\
+                                      connections over epoll/poll, the default\n\
+                                      on Unix; 'thread' = one blocking thread\n\
+                                      per connection, the portable fallback)\n\
+                       [--io-threads N]\n\
+                                     (reactor threads; 0 = one per core)\n\
          bench         --engine all|<name> --alpha 0.99 --threads 8 --ops 200000\n\
                        [--catalog N] [--value-bytes N] [--read-ratio R] [--mem-mb N]\n\
                        [--batch N]  (ops per engine crossing; >1 uses execute_batch)\n\
                        [--shards N] (shard count for every engine under test)\n\
+                       [--conns N]  (over-the-wire mode: serve in-process and\n\
+                                     drive N TCP connections with pipelined\n\
+                                     ops — --batch is the pipeline depth,\n\
+                                     --ops the per-connection op count;\n\
+                                     --model/--io-threads pick the front-end)\n\
          hit-ratio     --alpha 0.99 --catalog 100000 --mem-mb 4 [--trace-len N]\n\
                        [--shards N] (splits mem/buckets per shard — changes eviction)\n\
          planner-demo  (load artifacts, run the planner once, print the decision)\n\
@@ -155,15 +196,24 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         CoordinatorConfig::default(),
     );
 
+    let model = server_model(args)?;
     let server = Server::start(
         ServerConfig {
             addr: format!("127.0.0.1:{port}").parse()?,
-            nodelay: true,
+            model,
+            ..ServerConfig::default()
         },
         Arc::clone(&cache),
     )?;
+    let model_desc = match model {
+        ServerModel::Thread => "thread-per-connection".to_string(),
+        ServerModel::Reactor { io_threads } => format!(
+            "reactor x{} io-threads",
+            crate::server::resolve_io_threads(io_threads)
+        ),
+    };
     eprintln!(
-        "fleec serving engine={} on {} (mem limit {} MiB)",
+        "fleec serving engine={} on {} (mem limit {} MiB, {model_desc})",
         cache.engine_name(),
         server.addr(),
         cache.mem_limit() >> 20
@@ -175,6 +225,9 @@ fn cmd_serve(args: &Args) -> Result<i32> {
 }
 
 fn cmd_bench(args: &Args) -> Result<i32> {
+    if args.get_or("conns", 0usize) > 0 {
+        return cmd_bench_wire(args);
+    }
     let spec = WorkloadSpec {
         catalog: args.get_or("catalog", 100_000u64),
         alpha: args.get_or("alpha", 0.99f64),
@@ -219,6 +272,52 @@ fn cmd_bench(args: &Args) -> Result<i32> {
             eprintln!("!! {} validation failures", report.validation_failures);
             return Ok(1);
         }
+    }
+    Ok(0)
+}
+
+/// `fleec bench --conns N`: serve the engine in-process (with the chosen
+/// `--model` front-end) and drive it over loopback with N simultaneous
+/// pipelined connections — the connection-scaling experiment.
+fn cmd_bench_wire(args: &Args) -> Result<i32> {
+    let spec = WorkloadSpec {
+        catalog: args.get_or("catalog", 16_384u64),
+        alpha: args.get_or("alpha", 0.99f64),
+        read_ratio: args.get_or("read-ratio", 0.95f64),
+        value_size: ValueSize::Fixed(args.get_or("value-bytes", 64usize)),
+        seed: args.get_or("seed", 0xF1EE_C0DEu64),
+    };
+    let opts = WireOptions {
+        conns: args.get_or("conns", 64usize),
+        depth: args.get_or("batch", 16usize),
+        ops_per_conn: args.get_or("ops", 10_000u64),
+        workers: args.get_or("workers", 0usize),
+        prefill: true,
+    };
+    let model = server_model(args)?;
+    let shards: usize = args.get_or("shards", 1usize).max(1).next_power_of_two();
+    let engine_sel = args.get_str("engine", "fleec");
+    let engines: Vec<&str> = if engine_sel == "all" {
+        ENGINES.to_vec()
+    } else {
+        vec![engine_sel]
+    };
+    println!(
+        "# wire workload: conns={} depth={} ops/conn={} model={:?} shards={} alpha={} reads={}",
+        opts.conns, opts.depth, opts.ops_per_conn, model, shards, spec.alpha, spec.read_ratio
+    );
+    for name in engines {
+        let cache = build_sharded(name, shards, cache_config(args))?;
+        let server = Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".parse()?,
+                model,
+                ..ServerConfig::default()
+            },
+            Arc::clone(&cache),
+        )?;
+        let report = run_wire(server.addr(), &spec, &opts)?;
+        println!("{:>10}  {}", cache.engine_name(), report.row());
     }
     Ok(0)
 }

@@ -214,6 +214,42 @@ impl Client {
             expect: Vec::new(),
         }
     }
+
+    /// Ship a detached pipeline's bytes (write phase of split-phase
+    /// pipelining; see [`Pipeline::prepare`]). Replies are **not** read —
+    /// pass the same [`PreparedPipeline`] to [`Client::recv_prepared`]
+    /// once the caller is ready to block on this connection.
+    pub fn send_prepared(&mut self, prepared: &PreparedPipeline) -> Result<()> {
+        self.writer.write_all(&prepared.buf)?;
+        Ok(())
+    }
+
+    /// Decode the replies of a pipeline previously shipped with
+    /// [`Client::send_prepared`], in op order.
+    pub fn recv_prepared(&mut self, prepared: PreparedPipeline) -> Result<Vec<PipelineReply>> {
+        let mut replies = Vec::with_capacity(prepared.expect.len());
+        for e in &prepared.expect {
+            replies.push(match e {
+                Expect::Store => PipelineReply::Store(self.read_line()?),
+                Expect::Values => PipelineReply::Values(self.read_values()?),
+                Expect::Delete => PipelineReply::Deleted(self.read_line()? == "DELETED"),
+                Expect::Counter => PipelineReply::Counter(self.read_line()?.parse().ok()),
+                Expect::Touch => PipelineReply::Touched(self.read_line()? == "TOUCHED"),
+            });
+        }
+        Ok(replies)
+    }
+}
+
+/// A pipeline detached from its connection: the queued wire bytes plus
+/// the reply expectations. Lets a load generator multiplex many
+/// connections from one thread — write *all* connections' pipelines
+/// first ([`Client::send_prepared`]), then collect replies
+/// ([`Client::recv_prepared`]) — so every connection has a request in
+/// flight simultaneously (`workload::driver::run_wire`).
+pub struct PreparedPipeline {
+    buf: Vec<u8>,
+    expect: Vec<Expect>,
 }
 
 /// Reply expectation for one queued pipeline op.
@@ -373,6 +409,15 @@ impl Pipeline<'_> {
         self.expect.is_empty()
     }
 
+    /// Detach the queued ops as a [`PreparedPipeline`], releasing the
+    /// borrow on the client. The pipeline resets and can be reused.
+    pub fn prepare(&mut self) -> PreparedPipeline {
+        PreparedPipeline {
+            buf: std::mem::take(&mut self.buf),
+            expect: std::mem::take(&mut self.expect),
+        }
+    }
+
     /// Ship every queued op in one write and decode one reply per op, in
     /// order. The pipeline resets and can be reused for the next batch.
     ///
@@ -382,20 +427,9 @@ impl Pipeline<'_> {
     /// fresh connection instead (a failed read leaves the reply stream
     /// undecodable anyway).
     pub fn run(&mut self) -> Result<Vec<PipelineReply>> {
-        let buf = std::mem::take(&mut self.buf);
-        let expect = std::mem::take(&mut self.expect);
-        self.client.writer.write_all(&buf)?;
-        let mut replies = Vec::with_capacity(expect.len());
-        for e in &expect {
-            replies.push(match e {
-                Expect::Store => PipelineReply::Store(self.client.read_line()?),
-                Expect::Values => PipelineReply::Values(self.client.read_values()?),
-                Expect::Delete => PipelineReply::Deleted(self.client.read_line()? == "DELETED"),
-                Expect::Counter => PipelineReply::Counter(self.client.read_line()?.parse().ok()),
-                Expect::Touch => PipelineReply::Touched(self.client.read_line()? == "TOUCHED"),
-            });
-        }
-        Ok(replies)
+        let prepared = self.prepare();
+        self.client.send_prepared(&prepared)?;
+        self.client.recv_prepared(prepared)
     }
 }
 
@@ -410,7 +444,7 @@ mod tests {
         let s = Server::start(
             ServerConfig {
                 addr: "127.0.0.1:0".parse().unwrap(),
-                nodelay: true,
+                ..ServerConfig::default()
             },
             cache,
         )

@@ -58,14 +58,36 @@
 //! is also where the future async front-end will sit: one event loop per
 //! shard group, feeding sub-batches.
 //!
+//! ## The serving plane: reactor front-end
+//!
 //! The serving plane ([`proto`], [`server`], [`client`]) makes FLeeC a
-//! plug-in Memcached replacement, and it is built around that batched
-//! core: the server drains every complete command from a socket read into
-//! one `execute_batch` call (`stats`/`flush_all` act as barriers), and
+//! plug-in Memcached replacement, built around that batched core: the
+//! protocol pump (`server::batch::drain`) turns every complete command in
+//! a connection's read buffer into rounds of one `execute_batch` crossing
+//! each (`stats`/`flush_all` act as barriers), reusing per-connection
+//! op/action arenas so planning allocates nothing per read (the one
+//! remaining hot-path allocation is `proto::parse`'s multi-key get list).
+//! Two front-ends run that pump ([`server::ServerModel`]):
+//!
+//! * **`reactor`** (default on Unix): N event-loop threads, each owning
+//!   an OS readiness poller (`epoll`/`poll` via a direct `extern "C"`
+//!   shim — the offline crate set has no async runtime) and a set of
+//!   non-blocking connections with per-connection state machines —
+//!   partial writes re-arm WRITE interest, and a connection whose peer
+//!   stops reading is capped at `max_outbuf` buffered reply bytes (it
+//!   stops reading/executing until the peer drains, so a slow reader
+//!   can neither stall other connections nor grow server memory). This
+//!   is what lets the front-end hold thousands of sockets against the
+//!   lock-free core's "any number of concurrent readers and writers".
+//! * **`thread`**: one blocking native thread per connection — the
+//!   portable fallback and the differential-testing oracle
+//!   (`rust/tests/reactor_e2e.rs` holds the two byte-identical).
+//!
 //! [`client::Client::pipeline`] ships N commands in one write and decodes
-//! N replies. `benches/batch_pipeline.rs` sweeps batch depth 1/4/16/64
-//! and shard count 1/2/4/8 across all three engines, in-process and over
-//! the wire. [`workload`]
+//! N replies (split-phase variants multiplex many connections from one
+//! load-generator thread). `benches/batch_pipeline.rs` sweeps batch depth
+//! 1/4/16/64, shard count 1/2/4/8 and connection count 1/64/512 × both
+//! front-end models, emitting `BENCH_batch_pipeline.json`. [`workload`]
 //! and the rest of `benches/` regenerate every figure in the paper's
 //! evaluation; the [`runtime`] + [`coordinator`] pair loads AOT-compiled
 //! JAX/Pallas maintenance kernels (eviction planner, analytic hit-ratio

@@ -87,6 +87,16 @@ fn parse_u64(tok: &[u8]) -> Option<u64> {
     std::str::from_utf8(tok).ok()?.parse().ok()
 }
 
+/// Hard cap on a storage command's *declared* payload size. Framing
+/// guard, not a cache policy: the parser must buffer `<bytes>` of data
+/// before the command completes, so an absurd declared size would let
+/// one client grow the connection's read buffer without bound (and a
+/// near-`u64::MAX` size would overflow the total-length arithmetic).
+/// Values past the engines' slab limits already fail with
+/// `SERVER_ERROR object too large` *after* framing; this cap only
+/// rejects sizes no engine configuration could ever store.
+pub const MAX_DATA_LEN: u64 = 16 << 20;
+
 /// Parse one command from the head of `buf`.
 pub fn parse(buf: &[u8]) -> Parsed<'_> {
     let Some(line_end) = find_crlf(buf) else {
@@ -143,6 +153,13 @@ pub fn parse(buf: &[u8]) -> Parsed<'_> {
                 cas = tok;
             }
             let noreply = tokens.next() == Some(b"noreply" as &[u8]);
+            if nbytes > MAX_DATA_LEN {
+                // The data block is never buffered, so only the command
+                // line is consumed; the client is desynced past repair
+                // (its payload bytes will parse as garbage commands, each
+                // answered CLIENT_ERROR) but server memory stays bounded.
+                return Parsed::Error("object data too large", consumed_line);
+            }
             let nbytes = nbytes as usize;
             let total = consumed_line + nbytes + 2;
             if buf.len() < total {
@@ -387,6 +404,20 @@ mod tests {
         assert!(matches!(parse(b"incr k notanum\r\n"), Parsed::Error(..)));
         // Bad terminator after payload.
         assert!(matches!(parse(b"set k 0 0 2\r\nhixx"), Parsed::Error(..)));
+    }
+
+    #[test]
+    fn absurd_declared_sizes_are_rejected_not_buffered() {
+        // A just-over-cap size must error immediately (never Incomplete —
+        // that would buffer toward the declared size)...
+        let over = format!("set k 0 0 {}\r\n", MAX_DATA_LEN + 1);
+        assert!(matches!(parse(over.as_bytes()), Parsed::Error(..)));
+        // ...including u64::MAX, which must not overflow length math.
+        let max = format!("set k 0 0 {}\r\nX", u64::MAX);
+        assert!(matches!(parse(max.as_bytes()), Parsed::Error(..)));
+        // At the cap the command frames normally (Incomplete until fed).
+        let at = format!("set k 0 0 {}\r\n", MAX_DATA_LEN);
+        assert_eq!(parse(at.as_bytes()), Parsed::Incomplete);
     }
 
     #[test]

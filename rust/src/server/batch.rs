@@ -1,35 +1,73 @@
 //! Batched request planning: lossless `proto::Command` → [`Op`]
-//! translation plus the reply plan that renders batch results back into
-//! wire bytes.
+//! translation, the reply plan that renders batch results back into wire
+//! bytes, and [`drain`] — the protocol pump both server front-ends
+//! (thread-per-connection and the reactor) run per connection.
 //!
-//! The server drains every complete command out of a read buffer into one
-//! flat `Vec<Op>` (a multi-key `get` fans out into one `Op::Get` per key)
-//! and a parallel [`Action`] list that remembers how to reply — which ops
+//! The pump drains complete commands out of a read buffer into one flat
+//! `Vec<Op>` (a multi-key `get` fans out into one `Op::Get` per key) and
+//! a parallel [`Action`] list that remembers how to reply — which ops
 //! belong to which command, `noreply` suppression, `gets` CAS rendering.
-//! The whole batch then crosses the engine in a single
+//! Each round then crosses the engine in a single
 //! [`crate::cache::Cache::execute_batch`] call, and [`emit`] renders the
 //! results **byte-identically** to the old one-dispatch-per-command path.
 //!
+//! [`Action`] carries no borrowed data: value-reply keys are recovered
+//! from the op list itself (`ops[first + i].key()`), so the action arena
+//! recycles trivially and — together with [`BatchArena`]'s lifetime
+//! laundering of the op vector — the plan side of a read allocates
+//! nothing once a connection's arenas are warm (the ROADMAP "server hot
+//! path" item; the old code rebuilt both vectors per read). The one
+//! remaining per-command allocation on the read path is the key list a
+//! `get`/`gets` collects inside [`proto::parse`].
+//!
 //! Two commands cannot ride in a batch: `stats` (reads the very counters
 //! the pending ops are about to bump) and `flush_all` (clobbers state the
-//! pending ops must see first). Those are *barriers* — the server
-//! executes the pending batch, handles them inline, and starts a new
-//! batch — so pipelines containing them still observe sequential
-//! semantics. `quit` is a barrier too (pending replies must flush before
-//! the connection closes).
+//! pending ops must see first). Those are *barriers* — [`drain`] executes
+//! the pending batch, handles them inline, and starts a new batch — so
+//! pipelines containing them still observe sequential semantics. `quit`
+//! is a barrier too (pending replies must flush before the connection
+//! closes).
+//!
+//! Rounds are bounded: at most [`ROUND_OPS`] ops execute per engine
+//! crossing, and [`drain`] stops consuming input once the output buffer
+//! reaches the caller's budget. The bound is what makes a slow reader
+//! harmless — un-executed commands stay as *bytes* in the read buffer
+//! (or the kernel socket buffer) instead of materializing as reply
+//! values, so a connection's reply memory is capped at
+//! `budget + one round × max_item_size` no matter how many requests it
+//! has pipelined (a round is < [`ROUND_OPS`] + [`MAX_GET_KEYS`] ops: the
+//! cap is checked between commands, and no single command may fan out
+//! into more than [`MAX_GET_KEYS`] ops).
 
 use crate::cache::{Cache, Op, OpResult};
-use crate::proto::{self, Command, StoreKind};
+use crate::proto::{self, Command, Parsed, StoreKind};
+
+/// Maximum ops executed per engine crossing. Splitting an over-long
+/// pipeline into rounds is semantically free (a batch is defined to equal
+/// its sequential execution) and keeps the reply-buffer overshoot past
+/// the drain budget bounded by one round.
+pub const ROUND_OPS: usize = 64;
+
+/// Maximum keys a single `get`/`gets` may carry. A multi-key get is one
+/// command — its `VALUE…END` reply is atomic — so it cannot be split
+/// across rounds; without a cap, one ~64 KiB command line of repeated
+/// keys could materialize tens of thousands of values in a single round
+/// and void the drain-budget memory bound. Over-limit gets answer
+/// `CLIENT_ERROR` (a server-chosen limit, like Memcached's own line
+/// cap), identically in both front-end models.
+pub const MAX_GET_KEYS: usize = ROUND_OPS;
 
 /// Reply plan for one parsed command: where its ops landed in the batch
-/// and how to render their results.
-#[derive(Debug)]
-pub enum Action<'a> {
-    /// `get`/`gets`: `keys.len()` consecutive `Op::Get`s from `first`.
+/// and how to render their results. Deliberately borrow-free (see module
+/// docs) so the plan vector survives across reads inside [`BatchArena`].
+#[derive(Debug, Clone, Copy)]
+pub enum Action {
+    /// `get`/`gets`: `count` consecutive `Op::Get`s starting at `first`
+    /// (reply keys are read back out of the ops themselves).
     Values {
-        keys: Vec<&'a [u8]>,
-        with_cas: bool,
         first: usize,
+        count: usize,
+        with_cas: bool,
     },
     /// Any of the six storage commands: one op at `first`.
     Store { first: usize, noreply: bool },
@@ -47,6 +85,52 @@ pub enum Action<'a> {
     ClientError(&'static str),
 }
 
+/// Per-connection reusable batch state: the op and action vectors live
+/// here between reads so their allocations (and growth) are paid once per
+/// connection, not once per wakeup.
+///
+/// `Op<'a>` borrows from the read buffer, so the op vector cannot be
+/// *stored* at that lifetime; it is parked empty at `'static` and
+/// re-borrowed per round via [`recycle_ops`].
+#[derive(Default)]
+pub struct BatchArena {
+    ops: Vec<Op<'static>>,
+    actions: Vec<Action>,
+}
+
+impl BatchArena {
+    /// Borrow both arenas for one drain call (empty, capacity retained).
+    fn take<'a>(&mut self) -> (Vec<Op<'a>>, Vec<Action>) {
+        (
+            recycle_ops(std::mem::take(&mut self.ops)),
+            std::mem::take(&mut self.actions),
+        )
+    }
+
+    /// Return the arenas; contents are cleared, capacity kept.
+    fn put(&mut self, ops: Vec<Op<'_>>, mut actions: Vec<Action>) {
+        self.ops = recycle_ops(ops);
+        actions.clear();
+        self.actions = actions;
+    }
+}
+
+/// Re-lifetime an **emptied** op vector, keeping its allocation.
+///
+/// SAFETY: the vector is cleared first, so no `Op<'from>` value is ever
+/// read at `'to`. `Op<'from>` and `Op<'to>` are the same type constructor
+/// instantiated at different lifetimes — lifetimes do not affect layout,
+/// so size, alignment and allocator contract are identical and rebuilding
+/// the `Vec` around the same buffer is sound. (This is the standard
+/// "recycle an empty Vec across lifetimes" pattern.)
+fn recycle_ops<'from, 'to>(mut v: Vec<Op<'from>>) -> Vec<Op<'to>> {
+    v.clear();
+    let cap = v.capacity();
+    let ptr = v.as_mut_ptr();
+    std::mem::forget(v);
+    unsafe { Vec::from_raw_parts(ptr as *mut Op<'to>, 0, cap) }
+}
+
 /// Render the `stats` barrier's reply. Goes through [`Cache::stats`], the
 /// one coherent snapshot an engine can assemble however it likes — a
 /// sharded router merges all its shards here (counters and `curr_items`
@@ -58,7 +142,7 @@ pub fn write_stats_reply(cache: &dyn Cache, curr_connections: usize, out: &mut V
 }
 
 /// Whether `cmd` must not share a batch with the ops queued before it
-/// (see the module docs). The caller executes the pending batch first and
+/// (see the module docs). [`drain`] executes the pending batch first and
 /// then handles the command inline.
 pub fn is_barrier(cmd: &Command<'_>) -> bool {
     matches!(
@@ -71,17 +155,22 @@ pub fn is_barrier(cmd: &Command<'_>) -> bool {
 /// `actions`. Lossless: every field of the parsed command survives into
 /// either the op or the action. Barrier commands (see [`is_barrier`]) are
 /// the caller's job and not accepted here.
-pub fn plan<'a>(cmd: Command<'a>, ops: &mut Vec<Op<'a>>, actions: &mut Vec<Action<'a>>) {
+pub fn plan<'a>(cmd: Command<'a>, ops: &mut Vec<Op<'a>>, actions: &mut Vec<Action>) {
     match cmd {
         Command::Get { keys, with_cas } => {
+            if keys.len() > MAX_GET_KEYS {
+                actions.push(Action::ClientError("too many keys in get"));
+                return;
+            }
             let first = ops.len();
+            let count = keys.len();
             for &key in &keys {
                 ops.push(Op::Get { key });
             }
             actions.push(Action::Values {
-                keys,
-                with_cas,
                 first,
+                count,
+                with_cas,
             });
         }
         Command::Store {
@@ -154,25 +243,32 @@ pub fn plan<'a>(cmd: Command<'a>, ops: &mut Vec<Op<'a>>, actions: &mut Vec<Actio
 }
 
 /// Render replies for `actions` against the batch `results`, appending
-/// wire bytes to `out` in command order.
-pub fn emit(actions: &[Action<'_>], results: &[OpResult], out: &mut Vec<u8>) {
+/// wire bytes to `out` in command order. `ops` is the batch the actions
+/// index into (value replies read their keys from it).
+pub fn emit(ops: &[Op<'_>], actions: &[Action], results: &[OpResult], out: &mut Vec<u8>) {
     for action in actions {
-        match action {
+        match *action {
             Action::Values {
-                keys,
-                with_cas,
                 first,
+                count,
+                with_cas,
             } => {
-                for (i, key) in keys.iter().enumerate() {
+                for i in 0..count {
                     if let OpResult::Value(Some(r)) = &results[first + i] {
-                        proto::write_value(out, key, r.flags, &r.data, with_cas.then_some(r.cas));
+                        proto::write_value(
+                            out,
+                            ops[first + i].key(),
+                            r.flags,
+                            &r.data,
+                            with_cas.then_some(r.cas),
+                        );
                     }
                 }
                 proto::write_end(out);
             }
             Action::Store { first, noreply } => {
                 if !noreply {
-                    match results[*first] {
+                    match results[first] {
                         OpResult::Store(outcome) => {
                             out.extend_from_slice(proto::store_reply(outcome))
                         }
@@ -182,7 +278,7 @@ pub fn emit(actions: &[Action<'_>], results: &[OpResult], out: &mut Vec<u8>) {
             }
             Action::Delete { first, noreply } => {
                 if !noreply {
-                    match results[*first] {
+                    match results[first] {
                         OpResult::Deleted(true) => out.extend_from_slice(b"DELETED\r\n"),
                         OpResult::Deleted(false) => out.extend_from_slice(b"NOT_FOUND\r\n"),
                         _ => mismatch(out),
@@ -191,7 +287,7 @@ pub fn emit(actions: &[Action<'_>], results: &[OpResult], out: &mut Vec<u8>) {
             }
             Action::Counter { first, noreply } => {
                 if !noreply {
-                    match results[*first] {
+                    match results[first] {
                         OpResult::Counter(Some(v)) => {
                             out.extend_from_slice(v.to_string().as_bytes());
                             out.extend_from_slice(b"\r\n");
@@ -203,7 +299,7 @@ pub fn emit(actions: &[Action<'_>], results: &[OpResult], out: &mut Vec<u8>) {
             }
             Action::Touch { first, noreply } => {
                 if !noreply {
-                    match results[*first] {
+                    match results[first] {
                         OpResult::Touched(true) => out.extend_from_slice(b"TOUCHED\r\n"),
                         OpResult::Touched(false) => out.extend_from_slice(b"NOT_FOUND\r\n"),
                         _ => mismatch(out),
@@ -233,35 +329,137 @@ fn mismatch(out: &mut Vec<u8>) {
     out.extend_from_slice(b"SERVER_ERROR batch result mismatch\r\n");
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::cache::{build_engine, CacheConfig};
-    use crate::proto::Parsed;
+/// Why [`drain`] stopped consuming input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainStop {
+    /// The next command is incomplete — feed more bytes, then call again.
+    NeedMoreInput,
+    /// `out` reached the budget — flush it downstream, then call again
+    /// with the *unconsumed* remainder of the input.
+    Budget,
+    /// A `quit` was executed (pending replies are already in `out`); the
+    /// connection should flush and close. Input past the `quit` is
+    /// intentionally not consumed.
+    Quit,
+}
 
-    /// Parse a full pipelined buffer, batch it, execute it, emit replies.
-    fn run_pipeline(wire: &[u8]) -> Vec<u8> {
-        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
-        let mut ops = Vec::new();
-        let mut actions = Vec::new();
-        let mut consumed = 0;
-        while consumed < wire.len() {
-            match crate::proto::parse(&wire[consumed..]) {
+/// Result of one [`drain`] call.
+#[derive(Debug, Clone, Copy)]
+pub struct Drained {
+    /// Bytes of `input` consumed; the caller advances its buffer by this.
+    pub consumed: usize,
+    pub stop: DrainStop,
+}
+
+/// The protocol pump: parse, plan, execute and reply for every complete
+/// command at the head of `input`, appending wire bytes to `out`.
+///
+/// Executes in rounds of at most [`ROUND_OPS`] ops (one
+/// [`Cache::execute_batch`] crossing each) and re-checks `out.len()`
+/// against `out_budget` between rounds, so the reply bytes buffered for a
+/// connection that isn't draining stay bounded (see module docs).
+/// Barriers (`stats`, `flush_all`, `quit`) end a round early and run
+/// inline. Both server front-ends call this in a loop: the thread model
+/// with a blocking flush between calls, the reactor from its readiness
+/// state machine.
+pub fn drain(
+    cache: &dyn Cache,
+    curr_connections: usize,
+    input: &[u8],
+    out: &mut Vec<u8>,
+    arena: &mut BatchArena,
+    out_budget: usize,
+) -> Drained {
+    let mut consumed = 0;
+    let (mut ops, mut actions) = arena.take();
+    let stop = 'drain: loop {
+        if out.len() >= out_budget {
+            break DrainStop::Budget;
+        }
+        // One round: plan up to ROUND_OPS ops, or up to a barrier.
+        loop {
+            match proto::parse(&input[consumed..]) {
                 Parsed::Done(cmd, n) => {
                     consumed += n;
-                    assert!(!is_barrier(&cmd), "test pipeline must be barrier-free");
+                    if is_barrier(&cmd) {
+                        flush_batch(cache, &mut ops, &mut actions, out);
+                        match cmd {
+                            Command::Stats => write_stats_reply(cache, curr_connections, out),
+                            Command::FlushAll { noreply } => {
+                                cache.flush_all();
+                                if !noreply {
+                                    out.extend_from_slice(b"OK\r\n");
+                                }
+                            }
+                            Command::Quit => break 'drain DrainStop::Quit,
+                            _ => unreachable!("is_barrier covers exactly these"),
+                        }
+                        break; // barrier ends the round; re-check budget
+                    }
                     plan(cmd, &mut ops, &mut actions);
+                    if ops.len() >= ROUND_OPS {
+                        break; // round full; execute and re-check budget
+                    }
                 }
                 Parsed::Error(msg, n) => {
                     consumed += n;
                     actions.push(Action::ClientError(msg));
+                    if actions.len() >= ROUND_OPS {
+                        break;
+                    }
                 }
-                Parsed::Incomplete => panic!("truncated test pipeline"),
+                Parsed::Incomplete => {
+                    flush_batch(cache, &mut ops, &mut actions, out);
+                    break 'drain DrainStop::NeedMoreInput;
+                }
             }
         }
-        let results = cache.execute_batch(&ops);
+        flush_batch(cache, &mut ops, &mut actions, out);
+    };
+    arena.put(ops, actions);
+    Drained { consumed, stop }
+}
+
+/// Execute the pending batch and render its replies; clears both lists.
+fn flush_batch(cache: &dyn Cache, ops: &mut Vec<Op<'_>>, actions: &mut Vec<Action>, out: &mut Vec<u8>) {
+    if actions.is_empty() && ops.is_empty() {
+        return;
+    }
+    let results = cache.execute_batch(ops);
+    emit(ops, actions, &results, out);
+    ops.clear();
+    actions.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{build_engine, CacheConfig};
+
+    /// Pump a full pipelined buffer through [`drain`] (budget-unbounded)
+    /// and return the reply bytes.
+    fn run_pipeline(wire: &[u8]) -> Vec<u8> {
+        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+        let mut arena = BatchArena::default();
         let mut out = Vec::new();
-        emit(&actions, &results, &mut out);
+        let mut consumed = 0;
+        loop {
+            let d = drain(
+                cache.as_ref(),
+                1,
+                &wire[consumed..],
+                &mut out,
+                &mut arena,
+                usize::MAX,
+            );
+            consumed += d.consumed;
+            match d.stop {
+                DrainStop::NeedMoreInput => break,
+                DrainStop::Quit => break,
+                DrainStop::Budget => unreachable!("budget is unbounded"),
+            }
+        }
+        assert_eq!(consumed, wire.len(), "pipeline fully consumed");
         out
     }
 
@@ -297,6 +495,134 @@ mod tests {
         assert!(text.starts_with("CLIENT_ERROR"), "{text}");
         assert!(text.contains("NOT_FOUND"), "{text}"); // 'x' is not numeric
         assert!(text.ends_with("VERSION fleec-0.1.0\r\n"), "{text}");
+    }
+
+    #[test]
+    fn barriers_execute_inline_and_in_order() {
+        let out = run_pipeline(b"set f 0 0 1\r\nx\r\nget f\r\nflush_all\r\nget f\r\n");
+        assert_eq!(
+            out,
+            b"STORED\r\nVALUE f 0 1\r\nx\r\nEND\r\nOK\r\nEND\r\n" as &[u8],
+            "got {:?}",
+            String::from_utf8_lossy(&out)
+        );
+    }
+
+    #[test]
+    fn quit_stops_consuming_and_reports() {
+        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+        let mut arena = BatchArena::default();
+        let mut out = Vec::new();
+        let wire = b"version\r\nquit\r\nget never-parsed\r\n";
+        let d = drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX);
+        assert_eq!(d.stop, DrainStop::Quit);
+        assert_eq!(out, b"VERSION fleec-0.1.0\r\n");
+        // Everything through the quit line is consumed; the rest is not.
+        assert_eq!(&wire[d.consumed..], b"get never-parsed\r\n");
+    }
+
+    #[test]
+    fn budget_pauses_between_rounds_without_losing_replies() {
+        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+        let mut arena = BatchArena::default();
+        // 1 KiB values; a tiny budget must stop the pump long before the
+        // whole pipeline executes.
+        let val = vec![b'v'; 1024];
+        let mut wire = Vec::new();
+        let n_cmds = 4 * ROUND_OPS;
+        for i in 0..n_cmds {
+            wire.extend_from_slice(format!("set bp{i} 0 0 {}\r\n", val.len()).as_bytes());
+            wire.extend_from_slice(&val);
+            wire.extend_from_slice(b"\r\n");
+        }
+        for i in 0..n_cmds {
+            wire.extend_from_slice(format!("get bp{i}\r\n").as_bytes());
+        }
+        let budget = 4 * 1024;
+        let mut out = Vec::new();
+        let mut consumed = 0;
+        let mut calls = 0;
+        let mut replies = Vec::new();
+        loop {
+            let d = drain(
+                cache.as_ref(),
+                0,
+                &wire[consumed..],
+                &mut out,
+                &mut arena,
+                budget,
+            );
+            consumed += d.consumed;
+            calls += 1;
+            // Overshoot past the budget is bounded by one round's replies.
+            assert!(
+                out.len() <= budget + ROUND_OPS * (val.len() + 64),
+                "out grew to {} against budget {budget}",
+                out.len()
+            );
+            replies.extend_from_slice(&out);
+            out.clear(); // the "socket" drained
+            match d.stop {
+                DrainStop::Budget => continue,
+                DrainStop::NeedMoreInput => break,
+                DrainStop::Quit => unreachable!(),
+            }
+        }
+        assert_eq!(consumed, wire.len());
+        assert!(calls > 2, "budget never paused the pump ({calls} calls)");
+        let text = String::from_utf8_lossy(&replies);
+        assert_eq!(text.matches("STORED\r\n").count(), n_cmds);
+        assert_eq!(text.matches("VALUE ").count(), n_cmds);
+    }
+
+    #[test]
+    fn arena_allocates_only_on_first_use() {
+        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+        let mut arena = BatchArena::default();
+        let wire = b"set k 0 0 1\r\nv\r\nget k\r\n";
+        let mut out = Vec::new();
+        drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX);
+        let (cap_ops, cap_actions) = (arena.ops.capacity(), arena.actions.capacity());
+        assert!(cap_ops >= 2 && cap_actions >= 2, "arena warmed");
+        // A same-shape drain must not grow (or shrink) either arena.
+        for _ in 0..8 {
+            out.clear();
+            drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX);
+            assert_eq!(arena.ops.capacity(), cap_ops);
+            assert_eq!(arena.actions.capacity(), cap_actions);
+        }
+        assert_eq!(
+            out,
+            b"STORED\r\nVALUE k 0 1\r\nv\r\nEND\r\n" as &[u8],
+            "recycled arenas must not corrupt replies"
+        );
+    }
+
+    #[test]
+    fn oversized_multiget_is_rejected_and_keeps_stream_position() {
+        let mut wire = b"set mk 0 0 1\r\nv\r\n".to_vec();
+        // Exactly at the limit: served normally.
+        wire.extend_from_slice(b"get");
+        for _ in 0..MAX_GET_KEYS {
+            wire.extend_from_slice(b" mk");
+        }
+        wire.extend_from_slice(b"\r\n");
+        // One past the limit: CLIENT_ERROR, but later commands still run.
+        wire.extend_from_slice(b"get");
+        for _ in 0..=MAX_GET_KEYS {
+            wire.extend_from_slice(b" mk");
+        }
+        wire.extend_from_slice(b"\r\nget mk\r\n");
+        let out = run_pipeline(&wire);
+        let text = String::from_utf8_lossy(&out);
+        assert!(text.starts_with("STORED\r\nVALUE mk 0 1\r\nv\r\n"), "{text}");
+        assert_eq!(
+            text.matches("VALUE mk 0 1\r\n").count(),
+            MAX_GET_KEYS + 1,
+            "at-limit get serves every key, over-limit get serves none: {text}"
+        );
+        assert!(text.contains("CLIENT_ERROR too many keys in get\r\n"), "{text}");
+        assert!(text.ends_with("VALUE mk 0 1\r\nv\r\nEND\r\n"), "{text}");
     }
 
     #[test]

@@ -1,25 +1,47 @@
 //! TCP server: the Memcached-compatible serving front-end.
 //!
-//! Thread-per-connection over `std::net` — the same threading model as
-//! Memcached itself (one worker per connection via libevent there, native
-//! threads here; the offline crate set has no async runtime, and the
-//! paper's contention story lives in the *shared data structures*, which
-//! every connection thread hits concurrently).
+//! Two front-end models serve the same wire protocol through the same
+//! protocol pump ([`batch::drain`] — parse → plan → one
+//! [`Cache::execute_batch`] crossing per round → reply bytes):
+//!
+//! * [`ServerModel::Reactor`] (default on Unix for `fleec serve`):
+//!   N event-loop threads ([`reactor`]), each multiplexing non-blocking
+//!   connections over an OS readiness poller ([`poller`]) with
+//!   per-connection state machines, partial-write handling and bounded
+//!   reply buffering. This is the front-end that scales connection count
+//!   to what the lock-free core can absorb.
+//! * [`ServerModel::Thread`]: one native thread per connection over
+//!   blocking `std::net` — the portable fallback, and the simple oracle
+//!   the reactor is differentially tested against
+//!   (`rust/tests/reactor_e2e.rs`).
 //!
 //! The server is engine-agnostic: any [`Cache`] implementation plugs in,
 //! so `fleec serve --engine memcached|memclock|fleec` serves identical
 //! wire behavior with different concurrency cores.
 
 pub mod batch;
+#[cfg(unix)]
+pub mod poller;
+#[cfg(unix)]
+mod reactor;
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::cache::{Cache, Op};
-use crate::proto::{self, Command, Parsed};
+use crate::cache::Cache;
+
+/// Which connection-handling front-end a server runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServerModel {
+    /// One blocking native thread per connection.
+    Thread,
+    /// Event-driven reactor threads (Unix only). `io_threads == 0` means
+    /// one reactor per available core.
+    Reactor { io_threads: usize },
+}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -27,6 +49,13 @@ pub struct ServerConfig {
     pub addr: SocketAddr,
     /// Disable Nagle on accepted sockets (latency experiments need it).
     pub nodelay: bool,
+    /// Front-end model.
+    pub model: ServerModel,
+    /// Per-connection pending-reply cap: past this many buffered reply
+    /// bytes a connection stops reading (and executing) until its peer
+    /// drains. Bounds server memory against slow/non-reading clients;
+    /// see [`batch::drain`] for the precise bound.
+    pub max_outbuf: usize,
 }
 
 impl Default for ServerConfig {
@@ -34,17 +63,31 @@ impl Default for ServerConfig {
         ServerConfig {
             addr: "127.0.0.1:11211".parse().unwrap(),
             nodelay: true,
+            model: ServerModel::Thread,
+            max_outbuf: 256 * 1024,
         }
     }
 }
 
+/// Resolve `io_threads == 0` to the machine's available parallelism.
+pub fn resolve_io_threads(io_threads: usize) -> usize {
+    if io_threads > 0 {
+        io_threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    }
+}
+
 /// A running server; dropping it (or calling [`Server::shutdown`]) stops
-/// the accept loop and joins every connection thread.
+/// the accept/reactor loops and joins every server thread.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
-    active_conns: Arc<AtomicUsize>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    curr_conns: Arc<AtomicUsize>,
+    buffered_out: Arc<AtomicUsize>,
 }
 
 impl Server {
@@ -54,55 +97,26 @@ impl Server {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let active_conns = Arc::new(AtomicUsize::new(0));
-        let accept_stop = Arc::clone(&stop);
-        let accept_active = Arc::clone(&active_conns);
-        let nodelay = config.nodelay;
-        let accept_thread = std::thread::Builder::new()
-            .name("fleec-accept".into())
-            .spawn(move || {
-                let mut conn_threads = Vec::new();
-                while !accept_stop.load(Ordering::Acquire) {
-                    match listener.accept() {
-                        Ok((stream, _peer)) => {
-                            let _ = stream.set_nodelay(nodelay);
-                            let _ = stream.set_nonblocking(false);
-                            let cache = Arc::clone(&cache);
-                            let stop = Arc::clone(&accept_stop);
-                            let active = Arc::clone(&accept_active);
-                            active.fetch_add(1, Ordering::AcqRel);
-                            conn_threads.push(
-                                std::thread::Builder::new()
-                                    .name("fleec-conn".into())
-                                    .spawn(move || {
-                                        let _ = handle_connection(
-                                            stream,
-                                            cache,
-                                            stop,
-                                            Arc::clone(&active),
-                                        );
-                                        active.fetch_sub(1, Ordering::AcqRel);
-                                    })
-                                    .expect("spawn connection thread"),
-                            );
-                            // Opportunistically reap finished threads.
-                            conn_threads.retain(|h| !h.is_finished());
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
-                }
-                for h in conn_threads {
-                    let _ = h.join();
-                }
-            })?;
+        let curr_conns = Arc::new(AtomicUsize::new(0));
+        let buffered_out = Arc::new(AtomicUsize::new(0));
+        let threads = match config.model {
+            ServerModel::Thread => vec![spawn_thread_model(
+                listener,
+                cache,
+                &config,
+                &stop,
+                &curr_conns,
+            )?],
+            ServerModel::Reactor { io_threads } => {
+                spawn_reactors(listener, cache, &config, io_threads, &stop, &curr_conns, &buffered_out)?
+            }
+        };
         Ok(Server {
             addr,
             stop,
-            accept_thread: Some(accept_thread),
-            active_conns,
+            threads,
+            curr_conns,
+            buffered_out,
         })
     }
 
@@ -113,13 +127,21 @@ impl Server {
 
     /// Number of currently-open connections.
     pub fn active_connections(&self) -> usize {
-        self.active_conns.load(Ordering::Acquire)
+        self.curr_conns.load(Ordering::Acquire)
     }
 
-    /// Stop accepting, close the loop, join threads.
+    /// Total reply bytes buffered in userspace across all connections
+    /// (reactor model; always 0 under the thread model, which writes
+    /// synchronously). The backpressure tests hold this bounded against
+    /// non-reading peers.
+    pub fn buffered_out_bytes(&self) -> usize {
+        self.buffered_out.load(Ordering::Acquire)
+    }
+
+    /// Stop accepting, close the loops, join threads.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Release);
-        if let Some(h) = self.accept_thread.take() {
+        for h in self.threads.drain(..) {
             let _ = h.join();
         }
     }
@@ -131,83 +153,221 @@ impl Drop for Server {
     }
 }
 
-/// Read-plan-execute loop for one connection.
-///
-/// Each wakeup drains **all** complete commands from the read buffer into
-/// one flat `Vec<Op>` + reply plan (see [`batch`]) and crosses the engine
-/// with a single [`Cache::execute_batch`] call — pipelined clients pay
-/// one engine crossing per read instead of one per command. `stats`,
-/// `flush_all` and `quit` are barriers: the pending batch executes first,
-/// then the barrier runs inline, preserving sequential semantics.
+/// Spawn the reactor fleet: each thread gets a clone of the (shared,
+/// non-blocking) listener and accepts into its own poller.
+#[cfg(unix)]
+fn spawn_reactors(
+    listener: TcpListener,
+    cache: Arc<dyn Cache>,
+    config: &ServerConfig,
+    io_threads: usize,
+    stop: &Arc<AtomicBool>,
+    curr_conns: &Arc<AtomicUsize>,
+    buffered_out: &Arc<AtomicUsize>,
+) -> std::io::Result<Vec<std::thread::JoinHandle<()>>> {
+    let n = resolve_io_threads(io_threads);
+    let mut threads = Vec::with_capacity(n);
+    for i in 0..n {
+        // Each reactor owns a dup of the listening fd; dropping the
+        // original below leaves the clones listening.
+        let own = listener.try_clone()?;
+        let shared = reactor::ReactorShared {
+            cache: Arc::clone(&cache),
+            stop: Arc::clone(stop),
+            curr_conns: Arc::clone(curr_conns),
+            buffered_out: Arc::clone(buffered_out),
+            max_outbuf: config.max_outbuf,
+            nodelay: config.nodelay,
+        };
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("fleec-reactor-{i}"))
+                .spawn(move || {
+                    let _ = reactor::run_reactor(own, shared);
+                })?,
+        );
+    }
+    Ok(threads)
+}
+
+/// Reactor model on a platform without a poller backend.
+#[cfg(not(unix))]
+fn spawn_reactors(
+    _listener: TcpListener,
+    _cache: Arc<dyn Cache>,
+    _config: &ServerConfig,
+    _io_threads: usize,
+    _stop: &Arc<AtomicBool>,
+    _curr_conns: &Arc<AtomicUsize>,
+    _buffered_out: &Arc<AtomicUsize>,
+) -> std::io::Result<Vec<std::thread::JoinHandle<()>>> {
+    Err(std::io::Error::new(
+        std::io::ErrorKind::Unsupported,
+        "the reactor model requires a Unix readiness poller; use --model thread",
+    ))
+}
+
+/// Idle-wait helper for the thread-model accept loop: a poller wait on
+/// the listener fd where available (wakes the instant a connection
+/// arrives), a short sleep elsewhere.
+struct AcceptWaiter {
+    #[cfg(unix)]
+    poller: Option<(poller::Poller, Vec<poller::Event>)>,
+}
+
+impl AcceptWaiter {
+    #[allow(unused_variables)]
+    fn new(listener: &TcpListener) -> AcceptWaiter {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let poller = poller::Poller::new().ok().and_then(|mut p| {
+                p.register(listener.as_raw_fd(), 0, poller::Interest::READ)
+                    .ok()?;
+                Some((p, Vec::new()))
+            });
+            AcceptWaiter { poller }
+        }
+        #[cfg(not(unix))]
+        {
+            AcceptWaiter {}
+        }
+    }
+
+    /// Block until the listener is likely ready, or the reap interval
+    /// elapses — the accept loop reaps finished connection threads on
+    /// every return, so joins happen on a timer even with no new
+    /// accepts.
+    fn wait(&mut self) {
+        const REAP_INTERVAL: Duration = Duration::from_millis(100);
+        #[cfg(unix)]
+        if let Some((p, events)) = self.poller.as_mut() {
+            let _ = p.wait(events, Some(REAP_INTERVAL));
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Spawn the thread-per-connection accept loop.
+fn spawn_thread_model(
+    listener: TcpListener,
+    cache: Arc<dyn Cache>,
+    config: &ServerConfig,
+    stop: &Arc<AtomicBool>,
+    curr_conns: &Arc<AtomicUsize>,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    let accept_stop = Arc::clone(stop);
+    let accept_conns = Arc::clone(curr_conns);
+    let nodelay = config.nodelay;
+    let max_outbuf = config.max_outbuf;
+    std::thread::Builder::new()
+        .name("fleec-accept".into())
+        .spawn(move || {
+            let mut waiter = AcceptWaiter::new(&listener);
+            let mut conn_threads = Vec::new();
+            while !accept_stop.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let _ = stream.set_nodelay(nodelay);
+                        let _ = stream.set_nonblocking(false);
+                        let cache = Arc::clone(&cache);
+                        let stop = Arc::clone(&accept_stop);
+                        let active = Arc::clone(&accept_conns);
+                        active.fetch_add(1, Ordering::AcqRel);
+                        let spawned = std::thread::Builder::new()
+                            .name("fleec-conn".into())
+                            .spawn(move || {
+                                let _ = handle_connection(
+                                    stream,
+                                    cache,
+                                    stop,
+                                    Arc::clone(&active),
+                                    max_outbuf,
+                                );
+                                active.fetch_sub(1, Ordering::AcqRel);
+                            });
+                        match spawned {
+                            Ok(h) => conn_threads.push(h),
+                            // Thread exhaustion (EAGAIN) is the same
+                            // resource-pressure class as EMFILE: drop
+                            // this connection (the closure — and with it
+                            // the stream — is gone), back off, keep
+                            // serving. This is exactly the load point the
+                            // reactor model exists for.
+                            Err(_) => {
+                                accept_conns.fetch_sub(1, Ordering::AcqRel);
+                                std::thread::sleep(Duration::from_millis(50));
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        waiter.wait();
+                    }
+                    // Transient accept failures (EMFILE, aborted
+                    // handshakes) must not kill the server — same policy
+                    // as the reactor's accept path. A *sleep*, not a
+                    // poller wait: the failed connection is still in the
+                    // backlog keeping the listener readable, so a poll
+                    // would return instantly and the loop would spin hot.
+                    Err(_) => std::thread::sleep(Duration::from_millis(50)),
+                }
+                // Reap on every pass — new accepts *and* waiter timeouts
+                // — so finished threads join promptly on idle servers.
+                conn_threads.retain(|h| !h.is_finished());
+            }
+            for h in conn_threads {
+                let _ = h.join();
+            }
+        })
+}
+
+/// Blocking read-pump-write loop for one thread-model connection. The
+/// protocol work all lives in [`batch::drain`]; this wrapper just moves
+/// bytes and honors the stop flag via a read timeout.
 fn handle_connection(
     mut stream: TcpStream,
     cache: Arc<dyn Cache>,
     stop: Arc<AtomicBool>,
-    active_conns: Arc<AtomicUsize>,
+    curr_conns: Arc<AtomicUsize>,
+    max_outbuf: usize,
 ) -> std::io::Result<()> {
+    use std::io::Write;
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut inbuf: Vec<u8> = Vec::with_capacity(16 * 1024);
     let mut outbuf: Vec<u8> = Vec::with_capacity(16 * 1024);
+    let mut arena = batch::BatchArena::default();
     let mut chunk = [0u8; 16 * 1024];
+    let mut pos = 0usize;
     'conn: loop {
         if stop.load(Ordering::Acquire) {
             return Ok(());
         }
-        // Plan + execute everything currently buffered.
-        let mut consumed_total = 0;
-        let mut quit = false;
-        {
-            let mut ops: Vec<Op<'_>> = Vec::new();
-            let mut actions: Vec<batch::Action<'_>> = Vec::new();
-            loop {
-                match proto::parse(&inbuf[consumed_total..]) {
-                    Parsed::Done(cmd, n) => {
-                        consumed_total += n;
-                        if batch::is_barrier(&cmd) {
-                            flush_batch(cache.as_ref(), &mut ops, &mut actions, &mut outbuf);
-                            match cmd {
-                                Command::Stats => {
-                                    batch::write_stats_reply(
-                                        cache.as_ref(),
-                                        active_conns.load(Ordering::Acquire),
-                                        &mut outbuf,
-                                    );
-                                }
-                                Command::FlushAll { noreply } => {
-                                    cache.flush_all();
-                                    if !noreply {
-                                        outbuf.extend_from_slice(b"OK\r\n");
-                                    }
-                                }
-                                Command::Quit => {
-                                    quit = true;
-                                    break;
-                                }
-                                _ => unreachable!("is_barrier covers exactly these"),
-                            }
-                        } else {
-                            batch::plan(cmd, &mut ops, &mut actions);
-                        }
-                    }
-                    Parsed::Error(msg, n) => {
-                        consumed_total += n;
-                        actions.push(batch::Action::ClientError(msg));
-                    }
-                    Parsed::Incomplete => break,
-                }
+        // Pump everything buffered; blocking writes between budget stops
+        // mean the outbuf never accumulates past one drain call.
+        loop {
+            let d = batch::drain(
+                cache.as_ref(),
+                curr_conns.load(Ordering::Acquire),
+                &inbuf[pos..],
+                &mut outbuf,
+                &mut arena,
+                max_outbuf,
+            );
+            pos += d.consumed;
+            if !outbuf.is_empty() {
+                stream.write_all(&outbuf)?;
+                outbuf.clear();
             }
-            // The whole read crosses the engine once (barrier-free case).
-            flush_batch(cache.as_ref(), &mut ops, &mut actions, &mut outbuf);
+            match d.stop {
+                batch::DrainStop::Quit => return Ok(()),
+                batch::DrainStop::NeedMoreInput => break,
+                batch::DrainStop::Budget => continue,
+            }
         }
-        if consumed_total > 0 {
-            inbuf.drain(..consumed_total);
-        }
-        if !outbuf.is_empty() {
-            stream.write_all(&outbuf)?;
-            outbuf.clear();
-        }
-        if quit {
-            return Ok(());
+        if pos > 0 {
+            inbuf.drain(..pos);
+            pos = 0;
         }
         // Refill.
         match stream.read(&mut chunk) {
@@ -224,39 +384,29 @@ fn handle_connection(
     }
 }
 
-/// Execute the pending batch and render its replies; clears both lists.
-fn flush_batch<'a>(
-    cache: &dyn Cache,
-    ops: &mut Vec<Op<'a>>,
-    actions: &mut Vec<batch::Action<'a>>,
-    out: &mut Vec<u8>,
-) {
-    if actions.is_empty() && ops.is_empty() {
-        return;
-    }
-    let results = cache.execute_batch(ops);
-    batch::emit(actions, &results, out);
-    ops.clear();
-    actions.clear();
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cache::{build_engine, CacheConfig};
+    use std::io::Write;
 
-    fn start_test_server() -> (Server, SocketAddr) {
+    fn start_test_server_on(model: ServerModel) -> (Server, SocketAddr) {
         let cache = build_engine("fleec", CacheConfig::small()).unwrap();
         let server = Server::start(
             ServerConfig {
                 addr: "127.0.0.1:0".parse().unwrap(),
-                nodelay: true,
+                model,
+                ..ServerConfig::default()
             },
             cache,
         )
         .unwrap();
         let addr = server.addr();
         (server, addr)
+    }
+
+    fn start_test_server() -> (Server, SocketAddr) {
+        start_test_server_on(ServerModel::Thread)
     }
 
     fn roundtrip(stream: &mut TcpStream, send: &[u8], expect: &[u8]) {
@@ -290,6 +440,22 @@ mod tests {
         roundtrip(&mut s, b"decr n 20\r\n", b"0\r\n");
         roundtrip(&mut s, b"version\r\n", b"VERSION fleec-0.1.0\r\n");
         s.write_all(b"quit\r\n").unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn wire_level_session_reactor() {
+        let (_server, addr) = start_test_server_on(ServerModel::Reactor { io_threads: 2 });
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        roundtrip(&mut s, b"set foo 7 0 3\r\nbar\r\n", b"STORED\r\n");
+        roundtrip(&mut s, b"get foo\r\n", b"VALUE foo 7 3\r\nbar\r\nEND\r\n");
+        roundtrip(&mut s, b"incr missing 1\r\n", b"NOT_FOUND\r\n");
+        roundtrip(&mut s, b"version\r\n", b"VERSION fleec-0.1.0\r\n");
+        s.write_all(b"quit\r\n").unwrap();
+        // quit closes the connection from the server side.
+        let mut buf = [0u8; 8];
+        assert_eq!(s.read(&mut buf).unwrap_or(0), 0, "server must close after quit");
     }
 
     #[test]
@@ -391,5 +557,16 @@ mod tests {
         server.shutdown();
         // Post-shutdown connects must fail or be reset quickly.
         std::thread::sleep(Duration::from_millis(50));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn reactor_shutdown_joins_cleanly() {
+        let (mut server, addr) = start_test_server_on(ServerModel::Reactor { io_threads: 2 });
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        roundtrip(&mut s, b"set x 0 0 1\r\nv\r\n", b"STORED\r\n");
+        assert_eq!(server.active_connections(), 1);
+        server.shutdown();
     }
 }

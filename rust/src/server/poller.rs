@@ -1,0 +1,310 @@
+//! OS readiness poller — a thin `cfg(unix)` wrapper over `epoll` (Linux)
+//! or `poll` (other Unixes), declared through a direct `extern "C"` shim.
+//!
+//! The offline crate set has no `mio`/`tokio`, and the reactor needs only
+//! the smallest possible surface: register a file descriptor with a
+//! `usize` token and a read/write [`Interest`], block until something is
+//! ready, get back `(token, readable, writable)` [`Event`]s. Both
+//! backends are **level-triggered**: a fd that stays readable/writable
+//! keeps reporting, so the reactor never has to drain a socket to
+//! exhaustion in one wakeup to stay correct — interest re-arming is a
+//! pure optimization, not a correctness requirement.
+//!
+//! Error/hangup conditions (`EPOLLERR`/`EPOLLHUP`/`POLLERR`/`POLLHUP`)
+//! are folded into *both* readability and writability: the connection
+//! state machine discovers the actual failure from the `read`/`write`
+//! syscall (`0`/`EPIPE`/`ECONNRESET`) and tears the connection down,
+//! which keeps the poller free of any connection-lifecycle knowledge.
+
+use std::time::Duration;
+
+/// Which readiness classes a registration wants to be woken for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Interest {
+    /// Read-only interest (the initial state of every connection).
+    pub const READ: Interest = Interest {
+        read: true,
+        write: false,
+    };
+}
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// The token the fd was registered with.
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Clamp an optional timeout to the `int` milliseconds the syscalls take
+/// (`None` = block forever = `-1`).
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => d.as_millis().min(i32::MAX as u128) as i32,
+    }
+}
+
+pub use sys::Poller;
+
+/// Linux backend: one `epoll` instance per poller. O(ready) wakeups and
+/// kernel-side interest storage — the production path for the reactor.
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::io;
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    use super::{Event, Interest};
+
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    /// `struct epoll_event`. The kernel packs it on x86 so the 64-bit
+    /// `data` field sits at offset 4.
+    #[repr(C)]
+    #[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = 0;
+        if interest.read {
+            m |= EPOLLIN | EPOLLRDHUP;
+        }
+        if interest.write {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    pub struct Poller {
+        epfd: c_int,
+        /// Kernel-filled scratch; capacity caps events per wakeup, not
+        /// registrations (level triggering re-reports the overflow).
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller {
+                epfd,
+                buf: vec![EpollEvent { events: 0, data: 0 }; 1024],
+            })
+        }
+
+        fn ctl(&self, op: c_int, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: mask(interest),
+                data: token as u64,
+            };
+            let evp = if op == EPOLL_CTL_DEL {
+                std::ptr::null_mut()
+            } else {
+                &mut ev as *mut EpollEvent
+            };
+            if unsafe { epoll_ctl(self.epfd, op, fd, evp) } < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, Interest::READ)
+        }
+
+        /// Block until readiness or timeout; fills `out` (cleared first).
+        /// A signal interruption reports as zero events, not an error.
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let n = unsafe {
+                epoll_wait(
+                    self.epfd,
+                    self.buf.as_mut_ptr(),
+                    self.buf.len() as c_int,
+                    super::timeout_ms(timeout),
+                )
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for i in 0..n as usize {
+                let raw = self.buf[i];
+                let events = raw.events;
+                out.push(Event {
+                    token: raw.data as usize,
+                    readable: events & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0,
+                    writable: events & (EPOLLOUT | EPOLLHUP | EPOLLERR) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+/// Portable Unix backend: `poll(2)` over a userspace registration table.
+/// O(registrations) per wakeup — fine for the per-reactor connection
+/// counts this front-end targets on non-Linux hosts.
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    use std::io;
+    use std::os::raw::{c_int, c_short, c_uint};
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    use super::{Event, Interest};
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+    const POLLNVAL: c_short = 0x020;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_uint, timeout: c_int) -> c_int;
+    }
+
+    pub struct Poller {
+        entries: Vec<(RawFd, usize, Interest)>,
+        fds: Vec<PollFd>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller {
+                entries: Vec::new(),
+                fds: Vec::new(),
+            })
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            self.entries.push((fd, token, interest));
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+            for e in self.entries.iter_mut() {
+                if e.0 == fd {
+                    *e = (fd, token, interest);
+                    return Ok(());
+                }
+            }
+            Err(io::Error::new(
+                io::ErrorKind::NotFound,
+                "modify of unregistered fd",
+            ))
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.entries.retain(|e| e.0 != fd);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            self.fds.clear();
+            for &(fd, _, interest) in &self.entries {
+                let mut events = 0;
+                if interest.read {
+                    events |= POLLIN;
+                }
+                if interest.write {
+                    events |= POLLOUT;
+                }
+                self.fds.push(PollFd {
+                    fd,
+                    events,
+                    revents: 0,
+                });
+            }
+            let n = unsafe {
+                poll(
+                    self.fds.as_mut_ptr(),
+                    self.fds.len() as c_uint,
+                    super::timeout_ms(timeout),
+                )
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (i, pfd) in self.fds.iter().enumerate() {
+                let r = pfd.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    token: self.entries[i].1,
+                    readable: r & (POLLIN | POLLHUP | POLLERR | POLLNVAL) != 0,
+                    writable: r & (POLLOUT | POLLHUP | POLLERR | POLLNVAL) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,370 @@
+//! Event-driven server front-end: N reactor threads multiplexing
+//! non-blocking connections over a [`Poller`].
+//!
+//! The thread-per-connection model spends one native thread (stack,
+//! scheduler slot, context switches) per socket, which caps connection
+//! counts long before the lock-free core saturates. A reactor thread
+//! instead owns an OS readiness poller and a set of connections, each a
+//! small state machine:
+//!
+//! ```text
+//! readable ─→ read into inbuf ─→ batch::drain (parse → plan → one
+//!   Cache::execute_batch crossing per round) ─→ outbuf ─→ write
+//!      ↑                                                    │ partial
+//!      └────── re-armed READ interest                WRITE interest ──→
+//!              (dropped while backpressured)         drained on writable
+//! ```
+//!
+//! **Backpressure.** A connection whose peer stops reading accumulates
+//! reply bytes in `outbuf`. Once the pending bytes cross the configured
+//! cap the connection stops *reading* (READ interest dropped) and stops
+//! *executing* ([`batch::drain`]'s budget), so further pipelined requests
+//! stay as bytes in kernel buffers instead of materializing as reply
+//! values. Other connections are unaffected — the reactor never blocks on
+//! any single socket. When the peer drains, writable readiness resumes
+//! the flush, then the pump, then reading.
+//!
+//! **Accept.** Every reactor registers the shared listener; whichever
+//! thread wakes first accepts (losers observe `WouldBlock`). This spreads
+//! connections across reactors without any cross-thread handoff, queues
+//! or wakeup pipes — connections never migrate between reactors, so all
+//! per-connection state stays thread-local.
+//!
+//! **Shutdown.** Reactors wake at least every [`WAIT`] to observe the
+//! server's stop flag; dropping a reactor closes its poller and all its
+//! connections.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::batch::{self, BatchArena, DrainStop};
+use super::poller::{Event, Interest, Poller};
+use crate::cache::Cache;
+
+/// Token reserved for the listener; connection tokens are slab indices.
+const LISTENER_TOKEN: usize = usize::MAX;
+
+/// Upper bound on one poller wait, so stop flags are observed promptly.
+const WAIT: Duration = Duration::from_millis(25);
+
+/// Drop the consumed prefix of a connection's read buffer once it grows
+/// past this (smaller prefixes wait for the buffer to empty — a memmove
+/// per read would defeat the arena work).
+const COMPACT_AT: usize = 8 * 1024;
+
+/// Per-reactor configuration (shared fields come in as `Arc`s).
+pub(super) struct ReactorShared {
+    pub cache: Arc<dyn Cache>,
+    pub stop: Arc<AtomicBool>,
+    /// Live connection count across all reactors (`stats` truthfulness).
+    pub curr_conns: Arc<AtomicUsize>,
+    /// Total un-flushed reply bytes across all connections — the
+    /// observable the backpressure tests (and future `stats` fields)
+    /// read.
+    pub buffered_out: Arc<AtomicUsize>,
+    /// Per-connection pending-reply cap before reading stops.
+    pub max_outbuf: usize,
+    pub nodelay: bool,
+}
+
+/// Run one reactor until the stop flag trips (or the poller itself
+/// fails — never for per-connection errors). All exits run the
+/// connection-count/gauge accounting.
+pub(super) fn run_reactor(listener: TcpListener, shared: ReactorShared) -> io::Result<()> {
+    let mut poller = Poller::new()?;
+    poller.register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)?;
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut events: Vec<Event> = Vec::new();
+    while !shared.stop.load(Ordering::Acquire) {
+        // A hard poller failure ends this reactor, but via `break` so the
+        // gauge/connection-count accounting below still runs.
+        if poller.wait(&mut events, Some(WAIT)).is_err() {
+            break;
+        }
+        for i in 0..events.len() {
+            let ev = events[i];
+            if ev.token == LISTENER_TOKEN {
+                accept_ready(&listener, &mut poller, &mut conns, &mut free, &shared);
+                continue;
+            }
+            let Some(slot) = conns.get_mut(ev.token) else {
+                continue;
+            };
+            let Some(conn) = slot.as_mut() else {
+                continue;
+            };
+            let before = conn.out_pending();
+            let keep = matches!(conn.on_ready(ev.readable, ev.writable, &shared), Ok(true));
+            let after = if keep { conn.out_pending() } else { 0 };
+            adjust_gauge(&shared.buffered_out, before, after);
+            // Re-arm only on change; level triggering makes a stale-but-
+            // wider interest harmless, but a *failed* re-arm would leave
+            // the connection unable to make progress — close it.
+            let keep = keep && conn.rearm(&mut poller).is_ok();
+            if !keep {
+                adjust_gauge(&shared.buffered_out, after, 0);
+                let conn = slot.take().expect("conn checked above");
+                let _ = poller.deregister(conn.stream.as_raw_fd());
+                free.push(ev.token);
+                shared.curr_conns.fetch_sub(1, Ordering::AcqRel);
+                // Dropping `conn` closes the socket.
+            }
+        }
+    }
+    // Account the connections this reactor takes down with it.
+    for conn in conns.iter().flatten() {
+        adjust_gauge(&shared.buffered_out, conn.out_pending(), 0);
+        shared.curr_conns.fetch_sub(1, Ordering::AcqRel);
+    }
+    Ok(())
+}
+
+/// Accept until `WouldBlock`; each new socket becomes a registered
+/// connection on *this* reactor.
+fn accept_ready(
+    listener: &TcpListener,
+    poller: &mut Poller,
+    conns: &mut Vec<Option<Conn>>,
+    free: &mut Vec<usize>,
+    shared: &ReactorShared,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(shared.nodelay);
+                if stream.set_nonblocking(true).is_err() {
+                    continue; // drop the socket; the peer sees a reset
+                }
+                let token = free.pop().unwrap_or_else(|| {
+                    conns.push(None);
+                    conns.len() - 1
+                });
+                let conn = Conn::new(stream, token, shared.max_outbuf);
+                if poller
+                    .register(conn.stream.as_raw_fd(), token, Interest::READ)
+                    .is_err()
+                {
+                    free.push(token);
+                    continue;
+                }
+                conns[token] = Some(conn);
+                shared.curr_conns.fetch_add(1, Ordering::AcqRel);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            // Transient accept failures (EMFILE, aborted handshake): the
+            // un-accepted connection stays in the backlog keeping the
+            // level-triggered listener readable, so returning straight to
+            // the poller would spin hot. Sleep a beat first — blocking
+            // this reactor briefly under fd exhaustion is the least-bad
+            // option (its own connections resume right after).
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(10));
+                return;
+            }
+        }
+    }
+}
+
+/// Move the shared pending-reply gauge by the delta one connection
+/// produced this wakeup.
+fn adjust_gauge(gauge: &AtomicUsize, before: usize, after: usize) {
+    if after > before {
+        gauge.fetch_add(after - before, Ordering::Relaxed);
+    } else if before > after {
+        gauge.fetch_sub(before - after, Ordering::Relaxed);
+    }
+}
+
+/// One non-blocking connection: buffers, batch arenas, and the flags the
+/// state machine steers by.
+struct Conn {
+    stream: TcpStream,
+    token: usize,
+    /// Raw request bytes; `pos..` is unconsumed.
+    inbuf: Vec<u8>,
+    pos: usize,
+    /// Rendered reply bytes; `out_pos..` is unwritten.
+    outbuf: Vec<u8>,
+    out_pos: usize,
+    /// Reusable op/action arenas — the depth-1 steady state performs no
+    /// allocation per read.
+    arena: BatchArena,
+    /// Interest currently registered with the poller.
+    interest: Interest,
+    max_outbuf: usize,
+    /// `quit` executed: flush remaining replies, then close.
+    closing: bool,
+    /// Peer closed its write half (read returned 0).
+    read_closed: bool,
+    /// The pump stopped for lack of a complete command (vs. budget).
+    need_input: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, token: usize, max_outbuf: usize) -> Conn {
+        Conn {
+            stream,
+            token,
+            inbuf: Vec::with_capacity(16 * 1024),
+            pos: 0,
+            outbuf: Vec::with_capacity(16 * 1024),
+            out_pos: 0,
+            arena: BatchArena::default(),
+            interest: Interest::READ,
+            max_outbuf,
+            closing: false,
+            read_closed: false,
+            need_input: true,
+        }
+    }
+
+    fn out_pending(&self) -> usize {
+        self.outbuf.len() - self.out_pos
+    }
+
+    fn backpressured(&self) -> bool {
+        self.out_pending() >= self.max_outbuf
+    }
+
+    /// Readiness entry point. `Ok(false)` means the connection is done
+    /// (close it); `Err` means it failed (close it).
+    fn on_ready(
+        &mut self,
+        readable: bool,
+        writable: bool,
+        shared: &ReactorShared,
+    ) -> io::Result<bool> {
+        if writable || self.out_pending() > 0 {
+            self.flush()?;
+        }
+        // Resume work an earlier budget stop left buffered (this is how a
+        // connection leaves backpressure: the writable event lands here).
+        self.pump(shared)?;
+        if readable {
+            self.fill(shared)?;
+        }
+        if self.out_pending() == 0 {
+            if self.closing {
+                return Ok(false);
+            }
+            // Peer EOF: once every complete buffered command has been
+            // answered, trailing bytes can only be an unfinished command.
+            if self.read_closed && (self.need_input || self.pos == self.inbuf.len()) {
+                return Ok(false);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Write `outbuf` to the socket until drained or `WouldBlock`.
+    fn flush(&mut self) -> io::Result<()> {
+        while self.out_pos < self.outbuf.len() {
+            match self.stream.write(&self.outbuf[self.out_pos..]) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.out_pos > 0 && self.out_pos == self.outbuf.len() {
+            self.outbuf.clear();
+            self.out_pos = 0;
+        } else if self.out_pos >= COMPACT_AT {
+            // Reclaim the written prefix even when the buffer never fully
+            // drains (a peer that reads steadily but slower than we
+            // produce would otherwise grow `outbuf` by everything ever
+            // sent); the memmove moves only the < max_outbuf pending
+            // tail.
+            self.outbuf.drain(..self.out_pos);
+            self.out_pos = 0;
+        }
+        Ok(())
+    }
+
+    /// Run [`batch::drain`] rounds over the buffered input until it needs
+    /// more bytes, the connection backpressures, or a `quit` lands.
+    fn pump(&mut self, shared: &ReactorShared) -> io::Result<()> {
+        while !self.closing && !self.need_input && !self.backpressured() {
+            let budget = self.out_pos.saturating_add(self.max_outbuf);
+            let d = batch::drain(
+                shared.cache.as_ref(),
+                shared.curr_conns.load(Ordering::Acquire),
+                &self.inbuf[self.pos..],
+                &mut self.outbuf,
+                &mut self.arena,
+                budget,
+            );
+            self.pos += d.consumed;
+            match d.stop {
+                DrainStop::Quit => self.closing = true,
+                DrainStop::NeedMoreInput => self.need_input = true,
+                DrainStop::Budget => {}
+            }
+            self.compact();
+            // Push replies out eagerly; if the socket absorbs them the
+            // budget check above un-backpressures and the loop continues.
+            self.flush()?;
+        }
+        if self.closing {
+            // Commands pipelined after `quit` are dead; drop their bytes.
+            self.inbuf.clear();
+            self.pos = 0;
+        }
+        Ok(())
+    }
+
+    /// Read until `WouldBlock`/EOF, pumping after every chunk so `inbuf`
+    /// holds at most one chunk plus an incomplete command tail.
+    fn fill(&mut self, shared: &ReactorShared) -> io::Result<()> {
+        let mut chunk = [0u8; 16 * 1024];
+        while !self.read_closed && !self.closing && !self.backpressured() {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => self.read_closed = true,
+                Ok(n) => {
+                    self.inbuf.extend_from_slice(&chunk[..n]);
+                    self.need_input = false;
+                    self.pump(shared)?;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    fn compact(&mut self) {
+        if self.pos == self.inbuf.len() {
+            self.inbuf.clear();
+            self.pos = 0;
+        } else if self.pos >= COMPACT_AT {
+            self.inbuf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Recompute and (when changed) re-register poller interest.
+    ///
+    /// Liveness invariant: an open connection always wants at least one
+    /// readiness class. READ is dropped only while closing, past EOF, or
+    /// backpressured; the first is closed once `outbuf` drains, and the
+    /// latter two imply pending output — hence WRITE interest.
+    fn rearm(&mut self, poller: &mut Poller) -> io::Result<()> {
+        let want = Interest {
+            read: !self.read_closed && !self.closing && !self.backpressured(),
+            write: self.out_pending() > 0,
+        };
+        if want != self.interest {
+            poller.modify(self.stream.as_raw_fd(), self.token, want)?;
+            self.interest = want;
+        }
+        Ok(())
+    }
+}

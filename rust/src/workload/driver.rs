@@ -3,11 +3,13 @@
 //! hit-ratio and latency percentiles — the measurement core behind every
 //! figure-regenerating bench.
 
+use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::cache::{Cache, Op as CacheOp, OpResult};
+use crate::client::{Client, PipelineReply, PreparedPipeline};
 use crate::metrics::{HistogramSummary, LatencyHistogram};
 use crate::workload::{check_value, encode_key, fill_value, Op, OpStream, WorkloadSpec, KEY_LEN};
 
@@ -405,4 +407,210 @@ pub fn run_driver(cache: &Arc<dyn Cache>, spec: &WorkloadSpec, opts: &DriverOpti
         get_latency: get_latency.summary(),
         set_latency: set_latency.summary(),
     }
+}
+
+/// Options for the over-the-wire **connection-scaling** driver
+/// ([`run_wire`]): `conns` open TCP connections multiplexed by a bounded
+/// worker pool, each connection issuing pipelined gets/sets. This is the
+/// load shape that exercises the server *front-end* (thread-per-connection
+/// vs. reactor) rather than the engine — `fleec bench --conns N` and the
+/// `benches/batch_pipeline.rs` conns sweep drive it.
+#[derive(Debug, Clone)]
+pub struct WireOptions {
+    /// Simultaneously-open client connections.
+    pub conns: usize,
+    /// Ops per pipeline (one write / one reply burst per round).
+    pub depth: usize,
+    /// Ops each connection issues over the whole run.
+    pub ops_per_conn: u64,
+    /// Worker threads multiplexing the connections (0 = `min(conns, 16)`).
+    /// Workers write **all** their connections' pipelines before
+    /// collecting replies, so every connection keeps a request in flight
+    /// regardless of the worker count.
+    pub workers: usize,
+    /// Pre-insert the catalog through one pipelined connection first.
+    pub prefill: bool,
+}
+
+impl Default for WireOptions {
+    fn default() -> Self {
+        WireOptions {
+            conns: 1,
+            depth: 16,
+            ops_per_conn: 10_000,
+            workers: 0,
+            prefill: true,
+        }
+    }
+}
+
+/// Aggregated result of one [`run_wire`] run.
+#[derive(Debug, Clone)]
+pub struct WireReport {
+    pub conns: usize,
+    pub total_ops: u64,
+    pub gets: u64,
+    pub hits: u64,
+    pub elapsed: Duration,
+}
+
+impl WireReport {
+    /// Operations per second over the whole run.
+    pub fn throughput(&self) -> f64 {
+        self.total_ops as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// Hit ratio over the measured window.
+    pub fn hit_ratio(&self) -> f64 {
+        if self.gets == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.gets as f64
+        }
+    }
+
+    /// One-line summary used by benches.
+    pub fn row(&self) -> String {
+        format!(
+            "conns={:>4} ops={:>9} tput={:>10.0}/s hit={:.4}",
+            self.conns,
+            self.total_ops,
+            self.throughput(),
+            self.hit_ratio()
+        )
+    }
+}
+
+/// Pre-insert the catalog over the wire (cold → hot, matching
+/// [`prefill`]) through one pipelined connection.
+fn wire_prefill(addr: SocketAddr, spec: &WorkloadSpec) -> crate::Result<()> {
+    const CHUNK: u64 = 128;
+    let mut c = Client::connect(addr)?;
+    let mut key = [0u8; KEY_LEN];
+    let mut val = vec![0u8; 4096];
+    let mut id = spec.catalog;
+    while id > 0 {
+        let take = CHUNK.min(id);
+        let mut p = c.pipeline();
+        for _ in 0..take {
+            id -= 1;
+            let len = spec.value_size.for_key(id);
+            if val.len() < len {
+                val.resize(len, 0);
+            }
+            fill_value(id, &mut val[..len]);
+            p.set(encode_key(&mut key, id), &val[..len], 0, 0);
+        }
+        p.run()?;
+    }
+    Ok(())
+}
+
+/// Run the connection-scaling workload against a served address; returns
+/// the aggregated report. Connections are distributed round-robin over
+/// the worker pool; each worker runs split-phase pipelining (send to all
+/// its connections, then receive from all) so the server juggles `conns`
+/// active sockets at once.
+pub fn run_wire(
+    addr: SocketAddr,
+    spec: &WorkloadSpec,
+    opts: &WireOptions,
+) -> crate::Result<WireReport> {
+    let conns = opts.conns.max(1);
+    let depth = opts.depth.max(1);
+    let workers = if opts.workers > 0 {
+        opts.workers.min(conns)
+    } else {
+        conns.min(16)
+    };
+    if opts.prefill {
+        wire_prefill(addr, spec)?;
+    }
+    let rounds = (opts.ops_per_conn + depth as u64 - 1) / depth as u64;
+    let t0 = Instant::now();
+    let mut totals = (0u64, 0u64, 0u64); // (ops, gets, hits)
+    let mut first_err: Option<anyhow::Error> = None;
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            handles.push(s.spawn(move || -> crate::Result<(u64, u64, u64)> {
+                let my: Vec<usize> = (w..conns).step_by(workers).collect();
+                let mut clients = Vec::with_capacity(my.len());
+                for _ in &my {
+                    clients.push(Client::connect(addr)?);
+                }
+                let mut streams: Vec<OpStream> = my
+                    .iter()
+                    .map(|&c| OpStream::new(spec, c as u64 + 1))
+                    .collect();
+                let mut pending: Vec<Option<PreparedPipeline>> =
+                    (0..clients.len()).map(|_| None).collect();
+                let mut key = [0u8; KEY_LEN];
+                let mut val = vec![0u8; 4096];
+                let (mut ops_n, mut gets, mut hits) = (0u64, 0u64, 0u64);
+                for _round in 0..rounds {
+                    for i in 0..clients.len() {
+                        let prep = {
+                            let mut p = clients[i].pipeline();
+                            for _ in 0..depth {
+                                match streams[i].next_op() {
+                                    Op::Get(id) => {
+                                        p.get(encode_key(&mut key, id));
+                                    }
+                                    Op::Set(id) => {
+                                        let len = spec.value_size.for_key(id);
+                                        if val.len() < len {
+                                            val.resize(len, 0);
+                                        }
+                                        fill_value(id, &mut val[..len]);
+                                        p.set(encode_key(&mut key, id), &val[..len], 0, 0);
+                                    }
+                                }
+                            }
+                            p.prepare()
+                        };
+                        clients[i].send_prepared(&prep)?;
+                        pending[i] = Some(prep);
+                    }
+                    for i in 0..clients.len() {
+                        let prep = pending[i].take().expect("pipeline sent above");
+                        for reply in clients[i].recv_prepared(prep)? {
+                            if let PipelineReply::Values(v) = reply {
+                                gets += 1;
+                                if !v.is_empty() {
+                                    hits += 1;
+                                }
+                            }
+                        }
+                        ops_n += depth as u64;
+                    }
+                }
+                Ok((ops_n, gets, hits))
+            }));
+        }
+        for h in handles {
+            match h.join().expect("wire worker panicked") {
+                Ok((o, g, hi)) => {
+                    totals.0 += o;
+                    totals.1 += g;
+                    totals.2 += hi;
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+    });
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    Ok(WireReport {
+        conns,
+        total_ops: totals.0,
+        gets: totals.1,
+        hits: totals.2,
+        elapsed: t0.elapsed(),
+    })
 }

@@ -11,7 +11,7 @@
 pub mod driver;
 pub mod zipf;
 
-pub use driver::{run_driver, DriverOptions, DriverReport};
+pub use driver::{run_driver, run_wire, DriverOptions, DriverReport, WireOptions, WireReport};
 pub use zipf::Zipf;
 
 use crate::sync::{SplitMix64, Xoshiro256};

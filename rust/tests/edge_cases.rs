@@ -131,5 +131,5 @@ fn fleec_many_small_items_expand_repeatedly() {
             i.to_le_bytes().to_vec()
         );
     }
-    assert!(cache.metrics().snapshot().expansions >= 7);
+    assert!(cache.stats().metrics.expansions >= 7);
 }

@@ -160,7 +160,7 @@ fn eviction_under_tight_memory_keeps_serving() {
             );
         }
         assert!(
-            cache.metrics().snapshot().evictions > 0,
+            cache.stats().metrics.evictions > 0,
             "{engine}: no evictions despite 6 MiB through a 1 MiB cache"
         );
         assert!(

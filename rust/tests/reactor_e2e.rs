@@ -1,0 +1,331 @@
+//! Reactor front-end end-to-end: connection scaling, slow-reader
+//! backpressure, and byte-level differential testing against the
+//! thread-per-connection oracle.
+//!
+//! Unix-only: the reactor requires the readiness poller.
+#![cfg(unix)]
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fleec::cache::{build_engine, CacheConfig};
+use fleec::client::Client;
+use fleec::server::{Server, ServerConfig, ServerModel};
+use fleec::sync::Xoshiro256;
+
+fn start_reactor(max_outbuf: usize, io_threads: usize) -> (Server, std::net::SocketAddr) {
+    let cache = build_engine("fleec", CacheConfig {
+        mem_limit: 64 << 20,
+        ..CacheConfig::small()
+    })
+    .unwrap();
+    let server = Server::start(
+        ServerConfig {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            model: ServerModel::Reactor { io_threads },
+            max_outbuf,
+            ..ServerConfig::default()
+        },
+        cache,
+    )
+    .unwrap();
+    let addr = server.addr();
+    (server, addr)
+}
+
+fn env_or(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// ≥256 simultaneous connections, two waves of pipelined sets/gets, every
+/// reply byte-exact and cross-talk-free (each connection's values are
+/// unique to it).
+#[test]
+fn reactor_sustains_hundreds_of_connections() {
+    let n = env_or("FLEEC_REACTOR_CONNS", 300).max(256);
+    let (server, addr) = start_reactor(256 * 1024, 0);
+
+    let mut socks: Vec<TcpStream> = (0..n)
+        .map(|i| {
+            let s = TcpStream::connect(addr)
+                .unwrap_or_else(|e| panic!("connect #{i} of {n} failed: {e}"));
+            s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            s
+        })
+        .collect();
+
+    let value = |i: usize, wave: usize| -> Vec<u8> {
+        let mut v = format!("conn-{i}-wave-{wave}-").into_bytes();
+        v.extend(std::iter::repeat(b'x').take(i % 40));
+        v
+    };
+
+    // Wave 1: write ALL requests first (so all connections have work
+    // pending at once), then collect replies.
+    for (i, s) in socks.iter_mut().enumerate() {
+        let v = value(i, 1);
+        let req = format!(
+            "set w1-{i} 7 0 {}\r\n{}\r\nget w1-{i}\r\n",
+            v.len(),
+            String::from_utf8(v).unwrap()
+        );
+        s.write_all(req.as_bytes()).unwrap();
+    }
+    for (i, s) in socks.iter_mut().enumerate() {
+        let v = value(i, 1);
+        let expect = format!(
+            "STORED\r\nVALUE w1-{i} 7 {}\r\n{}\r\nEND\r\n",
+            v.len(),
+            String::from_utf8(v).unwrap()
+        );
+        let mut got = vec![0u8; expect.len()];
+        s.read_exact(&mut got)
+            .unwrap_or_else(|e| panic!("conn {i}: reply read failed: {e}"));
+        assert_eq!(
+            got,
+            expect.as_bytes(),
+            "conn {i}: got {:?}",
+            String::from_utf8_lossy(&got)
+        );
+    }
+    assert_eq!(
+        server.active_connections(),
+        n,
+        "every connection must still be open between waves"
+    );
+
+    // Wave 2: deeper pipeline on the same (stateful) connections,
+    // including a multi-key get across both waves' keys.
+    for (i, s) in socks.iter_mut().enumerate() {
+        let v2 = value(i, 2);
+        let req = format!(
+            "set w2-{i} 0 0 {}\r\n{}\r\nget w1-{i} w2-{i}\r\ndelete w1-{i}\r\nget w1-{i}\r\n",
+            v2.len(),
+            String::from_utf8(v2).unwrap()
+        );
+        s.write_all(req.as_bytes()).unwrap();
+    }
+    for (i, s) in socks.iter_mut().enumerate() {
+        let v1 = value(i, 1);
+        let v2 = value(i, 2);
+        let expect = format!(
+            "STORED\r\nVALUE w1-{i} 7 {}\r\n{}\r\nVALUE w2-{i} 0 {}\r\n{}\r\nEND\r\nDELETED\r\nEND\r\n",
+            v1.len(),
+            String::from_utf8(v1).unwrap(),
+            v2.len(),
+            String::from_utf8(v2).unwrap()
+        );
+        let mut got = vec![0u8; expect.len()];
+        s.read_exact(&mut got)
+            .unwrap_or_else(|e| panic!("conn {i}: wave-2 reply read failed: {e}"));
+        assert_eq!(
+            got,
+            expect.as_bytes(),
+            "conn {i}: got {:?}",
+            String::from_utf8_lossy(&got)
+        );
+    }
+
+    // Close everything; the server must notice and account for it.
+    drop(socks);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.active_connections() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(server.active_connections(), 0, "connection reaping leaked");
+}
+
+/// A client that pipelines a huge volume of replies and never reads must
+/// neither stall other connections nor let the server's reply buffering
+/// grow with the request count: past `max_outbuf` the server stops
+/// reading (and executing) for that connection, so pending requests stay
+/// as bytes in kernel buffers.
+#[test]
+fn slow_reader_is_bounded_and_isolated() {
+    const MAX_OUTBUF: usize = 64 * 1024;
+    const VALUE_LEN: usize = 8 * 1024;
+    const N_GETS: usize = 3_000; // ~24.6 MiB of replies requested
+    let (server, addr) = start_reactor(MAX_OUTBUF, 2);
+
+    let mut setup = Client::connect(addr).unwrap();
+    let big = vec![0xABu8; VALUE_LEN];
+    assert!(setup.set(b"big", &big, 0, 0).unwrap());
+
+    // The slow reader: ~30 kB of requests soliciting ~24.6 MiB of
+    // replies, then silence.
+    let mut slow = TcpStream::connect(addr).unwrap();
+    let mut reqs = Vec::with_capacity(N_GETS * 10);
+    for _ in 0..N_GETS {
+        reqs.extend_from_slice(b"get big\r\n");
+    }
+    slow.write_all(&reqs).unwrap();
+
+    // The server's userspace reply buffering must stay bounded by
+    // max_outbuf + one execution round (+ slack), never approaching the
+    // ~24.6 MiB a buffer-everything server would hold.
+    let bound = 2 * 1024 * 1024;
+    let watch_until = Instant::now() + Duration::from_secs(2);
+    let mut peak = 0usize;
+    while Instant::now() < watch_until {
+        peak = peak.max(server.buffered_out_bytes());
+        assert!(
+            server.buffered_out_bytes() < bound,
+            "buffered replies reached {} (bound {bound})",
+            server.buffered_out_bytes()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Other connections keep full service while the slow reader is
+    // wedged (the 10 s client read timeout is the stall detector).
+    let t0 = Instant::now();
+    let mut other = Client::connect(addr).unwrap();
+    for i in 0..200u32 {
+        let key = format!("live-{i}");
+        assert!(other.set(key.as_bytes(), b"v", 0, 0).unwrap());
+        assert_eq!(other.get(key.as_bytes()).unwrap().unwrap().data, b"v");
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "healthy connection starved behind a slow reader"
+    );
+
+    // Closing the slow reader must release whatever was buffered for it.
+    drop(slow);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.buffered_out_bytes() >= MAX_OUTBUF && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(
+        server.buffered_out_bytes() < MAX_OUTBUF,
+        "reply buffer not reclaimed after slow reader vanished (peak was {peak})"
+    );
+}
+
+/// Differential test: a randomized command script, delivered in random
+/// chunk sizes (exercising incremental parsing), must produce **byte
+/// identical** reply streams from a thread-model server and a reactor
+/// server running identically-configured engines.
+#[test]
+fn differential_thread_vs_reactor_byte_equality() {
+    fn start_on(model: ServerModel) -> (Server, std::net::SocketAddr) {
+        let cache = build_engine("fleec", CacheConfig {
+            mem_limit: 16 << 20,
+            ..CacheConfig::small()
+        })
+        .unwrap();
+        let server = Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".parse().unwrap(),
+                model,
+                ..ServerConfig::default()
+            },
+            cache,
+        )
+        .unwrap();
+        let addr = server.addr();
+        (server, addr)
+    }
+
+    /// Build one random barrier-inclusive script. Deterministic per seed;
+    /// `cas`-token-bearing replies (`gets`) are fine because both servers
+    /// run fresh engines that see the same sequential op sequence.
+    fn script(seed: u64) -> Vec<u8> {
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut wire = Vec::new();
+        let key = |rng: &mut Xoshiro256| format!("dk{}", rng.next_below(32));
+        for _ in 0..400 {
+            match rng.next_below(100) {
+                0..=29 => {
+                    let k = key(&mut rng);
+                    let len = rng.next_below(64) as usize;
+                    let noreply = if rng.chance(0.2) { " noreply" } else { "" };
+                    wire.extend_from_slice(
+                        format!("set {k} {} 0 {len}{noreply}\r\n", rng.next_below(100)).as_bytes(),
+                    );
+                    for _ in 0..len {
+                        wire.push(b'a' + (rng.next_below(26) as u8));
+                    }
+                    wire.extend_from_slice(b"\r\n");
+                }
+                30..=34 => {
+                    let k = key(&mut rng);
+                    wire.extend_from_slice(format!("add {k} 0 0 3\r\nnew\r\n").as_bytes());
+                }
+                35..=39 => {
+                    let k = key(&mut rng);
+                    wire.extend_from_slice(format!("append {k} 0 0 2\r\n++\r\n").as_bytes());
+                }
+                40..=64 => {
+                    let k = key(&mut rng);
+                    wire.extend_from_slice(format!("get {k}\r\n").as_bytes());
+                }
+                65..=72 => {
+                    let (a, b) = (key(&mut rng), key(&mut rng));
+                    wire.extend_from_slice(format!("get {a} {b} missing-key\r\n").as_bytes());
+                }
+                73..=77 => {
+                    let k = key(&mut rng);
+                    wire.extend_from_slice(format!("gets {k}\r\n").as_bytes());
+                }
+                78..=84 => {
+                    let k = key(&mut rng);
+                    wire.extend_from_slice(format!("delete {k}\r\n").as_bytes());
+                }
+                85..=89 => {
+                    let k = key(&mut rng);
+                    wire.extend_from_slice(format!("incr {k} {}\r\n", rng.next_below(50)).as_bytes());
+                }
+                90..=92 => {
+                    let k = key(&mut rng);
+                    wire.extend_from_slice(format!("touch {k} 1000\r\n").as_bytes());
+                }
+                93..=94 => wire.extend_from_slice(b"version\r\n"),
+                95..=96 => wire.extend_from_slice(b"bogus command\r\n"),
+                97..=98 => wire.extend_from_slice(b"stats\r\n"),
+                _ => wire.extend_from_slice(b"flush_all\r\n"),
+            }
+        }
+        wire.extend_from_slice(b"version\r\nquit\r\n");
+        wire
+    }
+
+    /// Deliver `wire` in random-size chunks and return the complete reply
+    /// stream (the trailing `quit` makes the server close, so EOF
+    /// delimits it).
+    fn exchange(addr: std::net::SocketAddr, wire: &[u8], seed: u64) -> Vec<u8> {
+        let mut rng = Xoshiro256::seeded(seed ^ 0xC0FFEE);
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut sent = 0;
+        while sent < wire.len() {
+            let chunk = (1 + rng.next_below(700) as usize).min(wire.len() - sent);
+            s.write_all(&wire[sent..sent + chunk]).unwrap();
+            sent += chunk;
+        }
+        let mut out = Vec::new();
+        s.read_to_end(&mut out).expect("reply stream ends at EOF after quit");
+        out
+    }
+
+    for seed in [1u64, 7, 42, 1337, 0xF1EE] {
+        let wire = script(seed);
+        let (_ts, thread_addr) = start_on(ServerModel::Thread);
+        let (_rs, reactor_addr) = start_on(ServerModel::Reactor { io_threads: 2 });
+        let thread_replies = exchange(thread_addr, &wire, seed);
+        let reactor_replies = exchange(reactor_addr, &wire, seed.wrapping_mul(3));
+        assert_eq!(
+            thread_replies,
+            reactor_replies,
+            "seed {seed}: models diverged\nthread:  {:?}\nreactor: {:?}",
+            String::from_utf8_lossy(&thread_replies),
+            String::from_utf8_lossy(&reactor_replies)
+        );
+    }
+}

@@ -1,17 +1,32 @@
 //! Server integration: concurrent protocol clients against a live TCP
-//! server, per engine — the "plug-in Memcached replacement" claim at the
-//! wire level.
+//! server, per engine **and per front-end model** — the "plug-in
+//! Memcached replacement" claim at the wire level, held to byte-for-byte
+//! parity between the thread-per-connection oracle and the event-driven
+//! reactor (`--model thread` vs `--model reactor`).
 
 use std::sync::Arc;
 
 use fleec::cache::{build_engine, build_sharded, CacheConfig, ENGINES};
 use fleec::client::Client;
 use fleec::coordinator::{Coordinator, CoordinatorConfig};
-use fleec::server::{Server, ServerConfig};
+use fleec::server::{Server, ServerConfig, ServerModel};
 use fleec::sync::Xoshiro256;
 use fleec::workload::{check_value, encode_key, fill_value, KEY_LEN};
 
-fn start(engine: &str) -> (Server, std::net::SocketAddr, Arc<dyn fleec::cache::Cache>) {
+/// Every front-end model this platform can run — the scenario matrix
+/// executes once per entry.
+fn models() -> Vec<ServerModel> {
+    if cfg!(unix) {
+        vec![ServerModel::Thread, ServerModel::Reactor { io_threads: 2 }]
+    } else {
+        vec![ServerModel::Thread]
+    }
+}
+
+fn start_on(
+    engine: &str,
+    model: ServerModel,
+) -> (Server, std::net::SocketAddr, Arc<dyn fleec::cache::Cache>) {
     let cache = build_engine(engine, CacheConfig {
         mem_limit: 16 << 20,
         ..CacheConfig::small()
@@ -20,7 +35,8 @@ fn start(engine: &str) -> (Server, std::net::SocketAddr, Arc<dyn fleec::cache::C
     let server = Server::start(
         ServerConfig {
             addr: "127.0.0.1:0".parse().unwrap(),
-            nodelay: true,
+            model,
+            ..ServerConfig::default()
         },
         Arc::clone(&cache),
     )
@@ -31,24 +47,154 @@ fn start(engine: &str) -> (Server, std::net::SocketAddr, Arc<dyn fleec::cache::C
 
 #[test]
 fn concurrent_clients_all_engines() {
-    for engine in ENGINES {
-        let (_server, addr, _cache) = start(engine);
+    for model in models() {
+        for engine in ENGINES {
+            let (_server, addr, _cache) = start_on(engine, model);
+            std::thread::scope(|s| {
+                for t in 0..4u64 {
+                    s.spawn(move || {
+                        let mut c = Client::connect(addr).unwrap();
+                        let mut rng = Xoshiro256::seeded(t);
+                        let mut key = [0u8; KEY_LEN];
+                        let mut val = vec![0u8; 128];
+                        for _ in 0..300 {
+                            let id = rng.next_below(100);
+                            let k = encode_key(&mut key, id);
+                            if rng.chance(0.6) {
+                                if let Some(v) = c.get(k).unwrap() {
+                                    assert!(
+                                        check_value(id, &v.data),
+                                        "{engine}/{model:?}: wire-level corruption"
+                                    );
+                                }
+                            } else {
+                                let len = 16 + (id as usize % 100);
+                                fill_value(id, &mut val[..len]);
+                                assert!(c.set(k, &val[..len], 0, 0).unwrap());
+                            }
+                        }
+                    });
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn stats_reflect_traffic() {
+    for model in models() {
+        let (_server, addr, cache) = start_on("fleec", model);
+        let mut c = Client::connect(addr).unwrap();
+        for i in 0..50u32 {
+            c.set(format!("s{i}").as_bytes(), b"v", 0, 0).unwrap();
+        }
+        for i in 0..50u32 {
+            assert!(c.get(format!("s{i}").as_bytes()).unwrap().is_some());
+        }
+        assert!(c.get(b"missing").unwrap().is_none());
+        let stats = c.stats().unwrap();
+        let get = |name: &str| -> u64 {
+            stats
+                .iter()
+                .find(|(k, _)| k == name)
+                .map(|(_, v)| v.parse().unwrap())
+                .unwrap_or_else(|| panic!("{model:?}: stat {name} missing"))
+        };
+        assert_eq!(get("curr_items"), 50, "{model:?}");
+        assert_eq!(get("cmd_set"), 50, "{model:?}");
+        assert_eq!(get("cmd_get"), 51, "{model:?}");
+        assert_eq!(get("get_hits"), 50, "{model:?}");
+        assert_eq!(get("get_misses"), 1, "{model:?}");
+        assert_eq!(get("curr_connections"), 1, "{model:?}");
+        assert_eq!(cache.item_count(), 50, "{model:?}");
+    }
+}
+
+#[test]
+fn limit_maxbytes_roundtrips_through_the_text_protocol() {
+    // The configured memory budget must surface as `limit_maxbytes` —
+    // for a bare engine verbatim, and for a sharded engine as the sum of
+    // the per-shard splits (i.e. the configured total again).
+    let mem_limit = 16 << 20;
+    for model in models() {
+        for shards in [1usize, 4] {
+            for engine in ENGINES {
+                let cache = build_sharded(
+                    engine,
+                    shards,
+                    CacheConfig {
+                        mem_limit,
+                        ..CacheConfig::small()
+                    },
+                )
+                .unwrap();
+                let server = Server::start(
+                    ServerConfig {
+                        addr: "127.0.0.1:0".parse().unwrap(),
+                        model,
+                        ..ServerConfig::default()
+                    },
+                    Arc::clone(&cache),
+                )
+                .unwrap();
+                let mut c = Client::connect(server.addr()).unwrap();
+                let stats = c.stats().unwrap();
+                let reported: usize = stats
+                    .iter()
+                    .find(|(k, _)| k == "limit_maxbytes")
+                    .map(|(_, v)| v.parse().unwrap())
+                    .expect("limit_maxbytes missing from stats");
+                assert_eq!(
+                    reported, mem_limit,
+                    "{engine}/{shards}/{model:?}: limit_maxbytes must round-trip"
+                );
+                let reported_engine = stats
+                    .iter()
+                    .find(|(k, _)| k == "engine")
+                    .map(|(_, v)| v.clone())
+                    .unwrap();
+                assert_eq!(reported_engine, cache.engine_name());
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_server_is_wire_compatible_and_merges_stats() {
+    for model in models() {
+        let cache = build_sharded(
+            "fleec",
+            4,
+            CacheConfig {
+                mem_limit: 16 << 20,
+                ..CacheConfig::small()
+            },
+        )
+        .unwrap();
+        let server = Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".parse().unwrap(),
+                model,
+                ..ServerConfig::default()
+            },
+            Arc::clone(&cache),
+        )
+        .unwrap();
+        let addr = server.addr();
+        // Concurrent clients spraying keys across all four shards.
         std::thread::scope(|s| {
             for t in 0..4u64 {
                 s.spawn(move || {
                     let mut c = Client::connect(addr).unwrap();
-                    let mut rng = Xoshiro256::seeded(t);
+                    let mut rng = Xoshiro256::seeded(t + 100);
                     let mut key = [0u8; KEY_LEN];
                     let mut val = vec![0u8; 128];
                     for _ in 0..300 {
-                        let id = rng.next_below(100);
+                        let id = rng.next_below(256);
                         let k = encode_key(&mut key, id);
-                        if rng.chance(0.6) {
+                        if rng.chance(0.5) {
                             if let Some(v) = c.get(k).unwrap() {
-                                assert!(
-                                    check_value(id, &v.data),
-                                    "{engine}: wire-level corruption"
-                                );
+                                assert!(check_value(id, &v.data), "sharded wire corruption");
                             }
                         } else {
                             let len = 16 + (id as usize % 100);
@@ -59,204 +205,100 @@ fn concurrent_clients_all_engines() {
                 });
             }
         });
-    }
-}
-
-#[test]
-fn stats_reflect_traffic() {
-    let (_server, addr, cache) = start("fleec");
-    let mut c = Client::connect(addr).unwrap();
-    for i in 0..50u32 {
-        c.set(format!("s{i}").as_bytes(), b"v", 0, 0).unwrap();
-    }
-    for i in 0..50u32 {
-        assert!(c.get(format!("s{i}").as_bytes()).unwrap().is_some());
-    }
-    assert!(c.get(b"missing").unwrap().is_none());
-    let stats = c.stats().unwrap();
-    let get = |name: &str| -> u64 {
-        stats
-            .iter()
-            .find(|(k, _)| k == name)
-            .map(|(_, v)| v.parse().unwrap())
-            .unwrap_or_else(|| panic!("stat {name} missing"))
-    };
-    assert_eq!(get("curr_items"), 50);
-    assert_eq!(get("cmd_set"), 50);
-    assert_eq!(get("cmd_get"), 51);
-    assert_eq!(get("get_hits"), 50);
-    assert_eq!(get("get_misses"), 1);
-    assert_eq!(cache.item_count(), 50);
-}
-
-#[test]
-fn limit_maxbytes_roundtrips_through_the_text_protocol() {
-    // The configured memory budget must surface as `limit_maxbytes` —
-    // for a bare engine verbatim, and for a sharded engine as the sum of
-    // the per-shard splits (i.e. the configured total again).
-    let mem_limit = 16 << 20;
-    for shards in [1usize, 4] {
-        for engine in ENGINES {
-            let cache = build_sharded(
-                engine,
-                shards,
-                CacheConfig {
-                    mem_limit,
-                    ..CacheConfig::small()
-                },
-            )
-            .unwrap();
-            let server = Server::start(
-                ServerConfig {
-                    addr: "127.0.0.1:0".parse().unwrap(),
-                    nodelay: true,
-                },
-                Arc::clone(&cache),
-            )
-            .unwrap();
-            let mut c = Client::connect(server.addr()).unwrap();
-            let stats = c.stats().unwrap();
-            let reported: usize = stats
+        // Merged stats must reflect the union of all shards' traffic.
+        let mut c = Client::connect(addr).unwrap();
+        let stats = c.stats().unwrap();
+        let get = |name: &str| -> u64 {
+            stats
                 .iter()
-                .find(|(k, _)| k == "limit_maxbytes")
+                .find(|(k, _)| k == name)
                 .map(|(_, v)| v.parse().unwrap())
-                .expect("limit_maxbytes missing from stats");
-            assert_eq!(
-                reported, mem_limit,
-                "{engine}/{shards}: limit_maxbytes must round-trip"
-            );
-            let reported_engine = stats
-                .iter()
-                .find(|(k, _)| k == "engine")
-                .map(|(_, v)| v.clone())
-                .unwrap();
-            assert_eq!(reported_engine, cache.engine_name());
-        }
+                .unwrap_or_else(|| panic!("stat {name} missing"))
+        };
+        assert_eq!(
+            get("cmd_get") + get("cmd_set"),
+            4 * 300,
+            "{model:?}: merged op counters"
+        );
+        assert_eq!(get("curr_items") as usize, cache.item_count());
+        assert!(get("curr_items") > 0);
     }
-}
-
-#[test]
-fn sharded_server_is_wire_compatible_and_merges_stats() {
-    let cache = build_sharded(
-        "fleec",
-        4,
-        CacheConfig {
-            mem_limit: 16 << 20,
-            ..CacheConfig::small()
-        },
-    )
-    .unwrap();
-    let server = Server::start(
-        ServerConfig {
-            addr: "127.0.0.1:0".parse().unwrap(),
-            nodelay: true,
-        },
-        Arc::clone(&cache),
-    )
-    .unwrap();
-    let addr = server.addr();
-    // Concurrent clients spraying keys across all four shards.
-    std::thread::scope(|s| {
-        for t in 0..4u64 {
-            s.spawn(move || {
-                let mut c = Client::connect(addr).unwrap();
-                let mut rng = Xoshiro256::seeded(t + 100);
-                let mut key = [0u8; KEY_LEN];
-                let mut val = vec![0u8; 128];
-                for _ in 0..300 {
-                    let id = rng.next_below(256);
-                    let k = encode_key(&mut key, id);
-                    if rng.chance(0.5) {
-                        if let Some(v) = c.get(k).unwrap() {
-                            assert!(check_value(id, &v.data), "sharded wire corruption");
-                        }
-                    } else {
-                        let len = 16 + (id as usize % 100);
-                        fill_value(id, &mut val[..len]);
-                        assert!(c.set(k, &val[..len], 0, 0).unwrap());
-                    }
-                }
-            });
-        }
-    });
-    // Merged stats must reflect the union of all shards' traffic.
-    let mut c = Client::connect(addr).unwrap();
-    let stats = c.stats().unwrap();
-    let get = |name: &str| -> u64 {
-        stats
-            .iter()
-            .find(|(k, _)| k == name)
-            .map(|(_, v)| v.parse().unwrap())
-            .unwrap_or_else(|| panic!("stat {name} missing"))
-    };
-    assert_eq!(get("cmd_get") + get("cmd_set"), 4 * 300, "merged op counters");
-    assert_eq!(get("curr_items") as usize, cache.item_count());
-    assert!(get("curr_items") > 0);
 }
 
 #[test]
 fn coordinator_server_cache_compose() {
     // The full serving assembly (minus artifacts): engine + coordinator +
     // server, exercised over the wire while the coordinator runs.
-    let cache = build_engine("fleec", CacheConfig {
-        mem_limit: 8 << 20,
-        initial_buckets: 16,
-        ..CacheConfig::small()
-    })
-    .unwrap();
-    let mut coord = Coordinator::start(
-        Arc::clone(&cache),
-        None,
-        CoordinatorConfig {
-            interval: std::time::Duration::from_millis(5),
-            ..Default::default()
-        },
-    );
-    let server = Server::start(
-        ServerConfig {
-            addr: "127.0.0.1:0".parse().unwrap(),
-            nodelay: true,
-        },
-        Arc::clone(&cache),
-    )
-    .unwrap();
-    let mut c = Client::connect(server.addr()).unwrap();
-    let mut key = [0u8; KEY_LEN];
-    let mut val = vec![0u8; 64];
-    // Enough inserts to force expansion; coordinator finishes migration.
-    for id in 0..2_000u64 {
-        fill_value(id, &mut val);
-        c.set_noreply(encode_key(&mut key, id), &val).unwrap();
+    for model in models() {
+        let cache = build_engine("fleec", CacheConfig {
+            mem_limit: 8 << 20,
+            initial_buckets: 16,
+            ..CacheConfig::small()
+        })
+        .unwrap();
+        let mut coord = Coordinator::start(
+            Arc::clone(&cache),
+            None,
+            CoordinatorConfig {
+                interval: std::time::Duration::from_millis(5),
+                ..Default::default()
+            },
+        );
+        let server = Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".parse().unwrap(),
+                model,
+                ..ServerConfig::default()
+            },
+            Arc::clone(&cache),
+        )
+        .unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        let mut key = [0u8; KEY_LEN];
+        let mut val = vec![0u8; 64];
+        // Enough inserts to force expansion; coordinator finishes migration.
+        for id in 0..2_000u64 {
+            fill_value(id, &mut val);
+            c.set_noreply(encode_key(&mut key, id), &val).unwrap();
+        }
+        c.set(b"sync", b"1", 0, 0).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while cache.bucket_count() <= 16 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(
+            cache.bucket_count() > 16,
+            "{model:?}: coordinator never finished expansion"
+        );
+        // All keys intact over the wire after migration.
+        for id in (0..2_000u64).step_by(97) {
+            let v = c.get(encode_key(&mut key, id)).unwrap();
+            assert!(v.is_some(), "{model:?}: key {id} lost");
+            assert!(check_value(id, &v.unwrap().data));
+        }
+        coord.shutdown();
     }
-    c.set(b"sync", b"1", 0, 0).unwrap();
-    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
-    while cache.bucket_count() <= 16 && std::time::Instant::now() < deadline {
-        std::thread::sleep(std::time::Duration::from_millis(10));
-    }
-    assert!(cache.bucket_count() > 16, "coordinator never finished expansion");
-    // All keys intact over the wire after migration.
-    for id in (0..2_000u64).step_by(97) {
-        let v = c.get(encode_key(&mut key, id)).unwrap();
-        assert!(v.is_some(), "key {id} lost");
-        assert!(check_value(id, &v.unwrap().data));
-    }
-    coord.shutdown();
 }
 
 #[test]
 fn large_values_roundtrip_over_wire() {
-    let (_server, addr, _cache) = start("fleec");
-    let mut c = Client::connect(addr).unwrap();
-    for &len in &[0usize, 1, 100, 4096, 65536, 500_000] {
-        let mut val = vec![0u8; len];
-        fill_value(len as u64, &mut val);
-        let key = format!("big-{len}");
-        assert!(
-            c.set(key.as_bytes(), &val, 0, 0).unwrap(),
-            "set of {len} B value failed"
-        );
-        let got = c.get(key.as_bytes()).unwrap().unwrap();
-        assert_eq!(got.data.len(), len);
-        assert_eq!(got.data, val, "{len} B value corrupted over the wire");
+    // 500 kB replies are ~2× the default reply-buffer cap, so under the
+    // reactor this also exercises partial writes + WRITE-interest
+    // re-arming and the drain budget.
+    for model in models() {
+        let (_server, addr, _cache) = start_on("fleec", model);
+        let mut c = Client::connect(addr).unwrap();
+        for &len in &[0usize, 1, 100, 4096, 65536, 500_000] {
+            let mut val = vec![0u8; len];
+            fill_value(len as u64, &mut val);
+            let key = format!("big-{len}");
+            assert!(
+                c.set(key.as_bytes(), &val, 0, 0).unwrap(),
+                "{model:?}: set of {len} B value failed"
+            );
+            let got = c.get(key.as_bytes()).unwrap().unwrap();
+            assert_eq!(got.data.len(), len);
+            assert_eq!(got.data, val, "{model:?}: {len} B value corrupted over the wire");
+        }
     }
 }
