@@ -106,9 +106,9 @@ fn ablation_ebr_laziness() {
         "threshold", "ns/retire", "advance_tries", "peak_pending"
     );
     for threshold in [8usize, 64, 512, 4096] {
-        let c = Arc::new(Collector::new(EbrConfig {
+        let c = Collector::new(EbrConfig {
             retire_threshold: threshold,
-        }));
+        });
         let iters = 200_000u64;
         let t0 = std::time::Instant::now();
         let mut peak = 0usize;

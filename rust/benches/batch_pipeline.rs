@@ -22,9 +22,15 @@
 //!                pipelined connections (`workload::driver::run_wire`)
 //!                against **both** front-end models (`thread` vs
 //!                `reactor`), the experiment the reactor exists for.
+//!   alloc-path — the write-side memory-path sweep behind the per-thread
+//!                slab magazines and staged batched RMW: value size
+//!                64B/1KiB/8KiB × batch depth × a set-heavy and an
+//!                RMW-heavy mix, fleec only (the slab's one consumer),
+//!                4 threads. Emits `BENCH_alloc_path.json`.
 //!
 //! Every row is also appended to `BENCH_batch_pipeline.json` (flat array
-//! of records) so the perf trajectory is machine-readable across PRs.
+//! of records; the alloc-path sweep writes its own file) so the perf
+//! trajectory is machine-readable across PRs.
 
 use std::io::Write as _;
 use std::sync::Arc;
@@ -84,6 +90,144 @@ fn write_json(records: &[Rec]) {
         Ok(()) => println!("\nwrote {} records to {JSON_PATH}", records.len()),
         Err(e) => eprintln!("\n!! could not write {JSON_PATH}: {e}"),
     }
+}
+
+const ALLOC_JSON_PATH: &str = "BENCH_alloc_path.json";
+
+/// One alloc-path sweep point, serialized into `BENCH_alloc_path.json`.
+struct AllocRec {
+    mix: &'static str,
+    value_size: usize,
+    depth: usize,
+    ops_per_s: f64,
+}
+
+fn write_alloc_json(records: &[AllocRec]) {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"section\":\"alloc_path\",\"engine\":\"fleec\",\"mix\":\"{}\",\"value_size\":{},\"depth\":{},\"ops_per_s\":{:.1}}}{}\n",
+            r.mix,
+            r.value_size,
+            r.depth,
+            r.ops_per_s,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    match std::fs::File::create(ALLOC_JSON_PATH).and_then(|mut f| f.write_all(out.as_bytes())) {
+        Ok(()) => println!("wrote {} records to {ALLOC_JSON_PATH}", records.len()),
+        Err(e) => eprintln!("!! could not write {ALLOC_JSON_PATH}: {e}"),
+    }
+}
+
+/// The write-side memory-path sweep: per-thread batches through
+/// `execute_batch` with allocation-dominated mixes, so the magazine
+/// layer's privatized alloc/free and the staged RMW path are what the
+/// numbers move with. Appends write at most a handful of times per key
+/// between sets, so value growth stays bounded.
+fn alloc_path_sweep() {
+    const SIZES: [usize; 3] = [64, 1024, 8192];
+    const ALLOC_DEPTHS: [usize; 3] = [1, 16, 64];
+    const CATALOG: u64 = 4096;
+    const THREADS: u64 = 4;
+    const OPS_PER_THREAD: u64 = 25_000;
+    println!("== alloc-path: value size x depth x mix (fleec, threads=4) ========");
+    println!(
+        "{:>10} {:>7} {:>6} {:>12}",
+        "mix", "vsize", "batch", "ops/s"
+    );
+    let mut records: Vec<AllocRec> = Vec::new();
+    for mix in ["set_heavy", "rmw_heavy"] {
+        for &vsize in &SIZES {
+            for &depth in &ALLOC_DEPTHS {
+                let cache = build_engine(
+                    "fleec",
+                    CacheConfig {
+                        mem_limit: 256 << 20,
+                        ..CacheConfig::default()
+                    },
+                )
+                .unwrap();
+                let template = vec![0xA5u8; vsize];
+                // Prefill: every value key at its sweep size, plus a
+                // numeric-counter catalog for incr.
+                for id in 0..CATALOG {
+                    cache.set(format!("ap-{id}").as_bytes(), &template, 0, 0);
+                    cache.set(format!("ct-{id}").as_bytes(), b"0", 0, 0);
+                }
+                let t0 = Instant::now();
+                std::thread::scope(|s| {
+                    for t in 0..THREADS {
+                        let cache = &cache;
+                        let template = &template;
+                        s.spawn(move || {
+                            let mut rng = fleec::sync::Xoshiro256::seeded(0xA110C ^ t);
+                            let vkeys: Vec<Vec<u8>> = (0..CATALOG)
+                                .map(|id| format!("ap-{id}").into_bytes())
+                                .collect();
+                            let ckeys: Vec<Vec<u8>> = (0..CATALOG)
+                                .map(|id| format!("ct-{id}").into_bytes())
+                                .collect();
+                            let mut done = 0u64;
+                            while done < OPS_PER_THREAD {
+                                let mut ops: Vec<fleec::cache::Op<'_>> =
+                                    Vec::with_capacity(depth);
+                                for _ in 0..depth {
+                                    let vk = vkeys[rng.next_below(CATALOG) as usize].as_slice();
+                                    let ck = ckeys[rng.next_below(CATALOG) as usize].as_slice();
+                                    let roll = rng.next_below(100);
+                                    ops.push(if mix == "set_heavy" {
+                                        match roll {
+                                            0..=79 => fleec::cache::Op::Set {
+                                                key: vk,
+                                                value: template,
+                                                flags: 0,
+                                                exptime: 0,
+                                            },
+                                            _ => fleec::cache::Op::Get { key: vk },
+                                        }
+                                    } else {
+                                        match roll {
+                                            0..=19 => fleec::cache::Op::Set {
+                                                key: vk,
+                                                value: template,
+                                                flags: 0,
+                                                exptime: 0,
+                                            },
+                                            20..=44 => fleec::cache::Op::Append {
+                                                key: vk,
+                                                suffix: b"-app-suffix-16b-",
+                                            },
+                                            45..=69 => fleec::cache::Op::Incr { key: ck, delta: 1 },
+                                            70..=79 => fleec::cache::Op::Touch {
+                                                key: vk,
+                                                exptime: 3600,
+                                            },
+                                            _ => fleec::cache::Op::Get { key: vk },
+                                        }
+                                    });
+                                }
+                                let _ = cache.execute_batch(&ops);
+                                done += depth as u64;
+                            }
+                        });
+                    }
+                });
+                let total = THREADS * OPS_PER_THREAD;
+                let tput = total as f64 / t0.elapsed().as_secs_f64();
+                println!("{:>10} {:>7} {:>6} {:>12.0}", mix, vsize, depth, tput);
+                records.push(AllocRec {
+                    mix,
+                    value_size: vsize,
+                    depth,
+                    ops_per_s: tput,
+                });
+            }
+        }
+        println!();
+    }
+    write_alloc_json(&records);
 }
 
 fn main() {
@@ -321,4 +465,7 @@ fn main() {
     }
 
     write_json(&records);
+
+    println!();
+    alloc_path_sweep();
 }

@@ -48,7 +48,7 @@ fn main() {
     println!("== list: Harris lock-free vs Mutex<BTreeSet> =====================");
     for &threads in &[1usize, 4, 16] {
         let iters = 50_000u64;
-        let collector = Arc::new(Collector::default());
+        let collector = Collector::default();
         let harris: Arc<HarrisList<u64, u64>> = Arc::new(HarrisList::new(collector));
         bench_threads(
             &format!("harris list mixed ops ({threads} thr)"),
@@ -101,7 +101,7 @@ fn main() {
 
     println!("\n== ebr ============================================================");
     {
-        let c = Arc::new(Collector::default());
+        let c = Collector::default();
         let iters = 2_000_000u64;
         bench("ebr pin+unpin", iters, || {
             for _ in 0..iters {

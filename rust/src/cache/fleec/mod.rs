@@ -35,9 +35,65 @@ use table::{migrate_bucket, search, Find, Table};
 /// Allocation-retry rounds before a store reports `OutOfMemory`.
 const OOM_ROUNDS: usize = 8;
 
-/// Pre-allocation slot for one batch op: `None` for non-storage ops,
-/// otherwise the ready item or the terminal staging failure.
-type StagedItem = Option<Result<*mut Item, StoreOutcome>>;
+/// Phase-A staging state for one batch op, consumed in phase B.
+#[derive(Clone, Copy)]
+enum Stage {
+    /// Op stages nothing (get/delete).
+    Pass,
+    /// Plain storage op: the ready item or the terminal staging failure.
+    Store(Result<*mut Item, StoreOutcome>),
+    /// RMW op whose pre-read found no live value: terminal miss.
+    RmwMiss,
+    /// RMW op whose transform aborted (non-numeric incr/decr): terminal,
+    /// nothing was allocated and no token is consumed.
+    RmwAbort,
+    /// RMW op staged like a plain store: install `item` iff the key's
+    /// CAS token still equals `token`; `counter` is the incr/decr reply.
+    RmwReady {
+        token: u64,
+        item: *mut Item,
+        counter: Option<u64>,
+    },
+    /// RMW staging allocation failed (too large / out of memory).
+    RmwFail(StoreOutcome),
+    /// RMW op reading a key an earlier op in the same batch writes: it
+    /// must observe that op's effect, so it runs the classic in-guard
+    /// read-stage-install loop at its turn instead of speculating.
+    RmwDependent,
+}
+
+/// Phase-A0 snapshot of the value an independent RMW op will transform.
+enum RmwSnap {
+    /// Not an RMW op.
+    Pass,
+    /// See [`Stage::RmwDependent`].
+    Dependent,
+    /// No live value under the key.
+    Miss,
+    /// Live value: token + header fields + a copy of the bytes.
+    Live {
+        token: u64,
+        flags: u32,
+        deadline: u32,
+        data: Vec<u8>,
+    },
+}
+
+/// Is this op one of the read-modify-write commands?
+#[inline]
+fn is_rmw(op: &Op<'_>) -> bool {
+    matches!(
+        op,
+        Op::Append { .. } | Op::Prepend { .. } | Op::Incr { .. } | Op::Decr { .. } | Op::Touch { .. }
+    )
+}
+
+/// The numeric-value parse `incr`/`decr` apply (protocol semantics:
+/// UTF-8, surrounding whitespace tolerated).
+#[inline]
+fn parse_counter(data: &[u8]) -> Option<u64> {
+    std::str::from_utf8(data).ok()?.trim().parse().ok()
+}
 
 /// The FLeeC cache engine.
 pub struct FleecCache {
@@ -54,18 +110,23 @@ pub struct FleecCache {
     /// Planner-tunable eviction parameters.
     evict_decay: AtomicU8,
     evict_batch: AtomicU32,
+    /// Debug-build test hook: staged batch-RMW installs that lost their
+    /// token race and fell back to the in-guard loop. The batch tests
+    /// assert this stays 0 for independent single-threaded batches.
+    #[cfg(debug_assertions)]
+    rmw_speculation_misses: AtomicU64,
 }
 
 impl FleecCache {
     /// Build an engine from `config`.
     pub fn new(config: CacheConfig) -> Self {
         let buckets = config.initial_buckets.next_power_of_two();
-        let slab = Arc::new(Slab::new(SlabConfig {
+        let slab = Slab::new(SlabConfig {
             mem_limit: config.mem_limit,
             ..SlabConfig::default()
-        }));
+        });
         FleecCache {
-            collector: Arc::new(Collector::default()),
+            collector: Collector::default(),
             slab,
             table: AtomicPtr::new(Table::alloc(buckets)),
             items: AtomicUsize::new(0),
@@ -73,8 +134,29 @@ impl FleecCache {
             metrics: EngineMetrics::default(),
             evict_batch: AtomicU32::new(config.evict_batch),
             evict_decay: AtomicU8::new(1),
+            #[cfg(debug_assertions)]
+            rmw_speculation_misses: AtomicU64::new(0),
             config,
         }
+    }
+
+    /// Failed staged-RMW installs since creation (debug builds; always 0
+    /// in release). See the field doc.
+    pub fn rmw_speculation_misses(&self) -> u64 {
+        #[cfg(debug_assertions)]
+        {
+            self.rmw_speculation_misses.load(Ordering::Relaxed)
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            0
+        }
+    }
+
+    #[inline]
+    fn note_rmw_speculation_miss(&self) {
+        #[cfg(debug_assertions)]
+        self.rmw_speculation_misses.fetch_add(1, Ordering::Relaxed);
     }
 
     /// The EBR collector (shared with the coordinator).
@@ -238,6 +320,14 @@ impl FleecCache {
                 return Ok(item);
             }
             self.metrics.oom_stalls.inc();
+            // Publish this thread's magazine-parked chunks (all classes)
+            // to the shared free lists before acting on pressure: parked
+            // chunks are free memory, and other threads/classes should be
+            // able to reuse them before anything gets evicted. (Chunks
+            // parked in *other* threads' magazines stay private until
+            // those threads allocate, free, or exit — a bounded
+            // MAG_CAP×threads×chunk_size blind spot, noted in ROADMAP.)
+            self.slab.flush_local_magazines();
             // Paper order: reclaim limbo memory first (it is free memory
             // merely awaiting a grace period), evict only if that fails.
             self.collector.request_reclaim();
@@ -490,13 +580,203 @@ impl FleecCache {
         &self,
         key: &[u8],
         hash: u64,
-        staged: StagedItem,
+        stage: Stage,
         mode: StoreMode,
         guard: &Guard,
     ) -> StoreOutcome {
-        match staged.expect("storage op was not staged in phase A") {
-            Ok(item) => self.store_prealloc(key, hash, item, mode, guard),
-            Err(e) => e,
+        match stage {
+            Stage::Store(Ok(item)) => self.store_prealloc(key, hash, item, mode, guard),
+            Stage::Store(Err(e)) => e,
+            _ => unreachable!("storage op was not staged in phase A"),
+        }
+    }
+
+    /// Phase-A0 pre-read for an independent batched RMW op: the current
+    /// token + header + value bytes, or `Miss`. Mirrors the classic
+    /// [`FleecCache::rmw`] phase 1 (including lazy expiry).
+    fn rmw_snapshot(&self, key: &[u8], hash: u64, guard: &Guard) -> RmwSnap {
+        let mut t = self.root(guard);
+        loop {
+            match search(t, hash, key, false, guard) {
+                Find::Found(n) => {
+                    let node = unsafe { &*n };
+                    let w = node.item.load(Ordering::Acquire);
+                    match decode_item(w) {
+                        ItemState::Live(item) => {
+                            let hdr = unsafe { &*item };
+                            if is_expired(hdr.deadline) {
+                                self.expire_node(node, w, item, guard);
+                                return RmwSnap::Miss;
+                            }
+                            return RmwSnap::Live {
+                                token: hdr.cas,
+                                flags: hdr.flags,
+                                deadline: hdr.deadline,
+                                data: unsafe { Item::data(item) }.to_vec(),
+                            };
+                        }
+                        ItemState::Tomb => return RmwSnap::Miss,
+                        ItemState::Moved => {
+                            let next = t.next.load(Ordering::Acquire);
+                            if next.is_null() {
+                                return RmwSnap::Miss;
+                            }
+                            t = unsafe { &*next };
+                        }
+                    }
+                }
+                Find::Forwarded => {
+                    let next = t.next.load(Ordering::Acquire);
+                    if next.is_null() {
+                        return RmwSnap::Miss;
+                    }
+                    t = unsafe { &*next };
+                }
+                Find::Absent { .. } | Find::Frozen => return RmwSnap::Miss,
+            }
+        }
+    }
+
+    /// Phase-A staging for one RMW op: apply the transform to the
+    /// snapshot and pre-allocate the replacement item — **unpinned**, so
+    /// allocation pressure can advance epochs freely, exactly like plain
+    /// stores. Consumes the snapshot so append/touch reuse its buffer
+    /// instead of copying the value a second time.
+    fn stage_rmw(&self, op: &Op<'_>, snap: RmwSnap) -> Stage {
+        let (token, flags, deadline, mut data) = match snap {
+            RmwSnap::Dependent => return Stage::RmwDependent,
+            RmwSnap::Miss => return Stage::RmwMiss,
+            RmwSnap::Live {
+                token,
+                flags,
+                deadline,
+                data,
+            } => (token, flags, deadline, data),
+            RmwSnap::Pass => unreachable!("RMW op without a phase-A0 snapshot"),
+        };
+        let (value, new_flags, new_deadline, counter) = match *op {
+            Op::Append { suffix, .. } => {
+                data.extend_from_slice(suffix);
+                (data, flags, deadline, None)
+            }
+            Op::Prepend { prefix, .. } => {
+                let mut v = Vec::with_capacity(data.len() + prefix.len());
+                v.extend_from_slice(prefix);
+                v.extend_from_slice(&data);
+                (v, flags, deadline, None)
+            }
+            Op::Incr { delta, .. } => {
+                let Some(n) = parse_counter(&data) else {
+                    return Stage::RmwAbort;
+                };
+                let v = n.wrapping_add(delta);
+                (v.to_string().into_bytes(), flags, deadline, Some(v))
+            }
+            Op::Decr { delta, .. } => {
+                let Some(n) = parse_counter(&data) else {
+                    return Stage::RmwAbort;
+                };
+                let v = n.saturating_sub(delta);
+                (v.to_string().into_bytes(), flags, deadline, Some(v))
+            }
+            Op::Touch { exptime, .. } => (data, flags, deadline_from_exptime(exptime), None),
+            _ => unreachable!("stage_rmw on a non-RMW op"),
+        };
+        match self.alloc_item_pressured(&value, new_flags, new_deadline, 0) {
+            Ok(item) => Stage::RmwReady {
+                token,
+                item,
+                counter,
+            },
+            Err(e) => Stage::RmwFail(e),
+        }
+    }
+
+    /// Phase-B install of a staged RMW item: succeeds iff the key still
+    /// holds the snapshotted token (the CAS-token race detector, same as
+    /// the classic RMW phase 3). Does **not** free `item` on failure —
+    /// the caller owns that (and the fallback).
+    fn install_staged_rmw(
+        &self,
+        key: &[u8],
+        hash: u64,
+        token: u64,
+        item: *mut Item,
+        guard: &Guard,
+    ) -> bool {
+        loop {
+            let (_, find) = self.locate_for_write(hash, key, guard);
+            match find {
+                Find::Found(n) => {
+                    let node = unsafe { &*n };
+                    let w = node.item.load(Ordering::Acquire);
+                    match decode_item(w) {
+                        ItemState::Live(old) => {
+                            if unsafe { (*old).cas } != token {
+                                return false;
+                            }
+                            // Stamp the token at install time so batched
+                            // runs hand out tokens in execution order.
+                            let cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
+                            unsafe { (*item).cas = cas };
+                            if node
+                                .item
+                                .compare_exchange(w, live_word(item), Ordering::AcqRel, Ordering::Acquire)
+                                .is_ok()
+                            {
+                                Item::retire(guard, &self.slab, old);
+                                return true;
+                            }
+                            // Raced with another writer: re-check; the
+                            // token test decides next round.
+                        }
+                        ItemState::Tomb => return false,
+                        ItemState::Moved => continue,
+                    }
+                }
+                Find::Absent { .. } => return false,
+                Find::Frozen | Find::Forwarded => {
+                    unreachable!("locate_for_write resolves these")
+                }
+            }
+        }
+    }
+
+    /// Phase-B resolution of one staged RMW op. `fallback` runs the
+    /// classic in-guard loop when the speculation cannot apply (terminal
+    /// stage outcomes short-circuit through `miss`/`fail`).
+    fn finish_staged_rmw<T>(
+        &self,
+        key: &[u8],
+        hash: u64,
+        stage: Stage,
+        guard: &Guard,
+        on_success: impl FnOnce(Option<u64>) -> T,
+        miss: T,
+        fail: impl FnOnce(StoreOutcome) -> T,
+        fallback: impl FnOnce() -> T,
+    ) -> T {
+        match stage {
+            Stage::RmwReady {
+                token,
+                item,
+                counter,
+            } => {
+                if self.install_staged_rmw(key, hash, token, item, guard) {
+                    on_success(counter)
+                } else {
+                    // Token moved (or the key vanished) between the
+                    // pre-read and our turn: drop the speculative item
+                    // and rerun the read-stage-install loop in place.
+                    unsafe { self.slab.free(item as *mut u8, (*item).class) };
+                    self.note_rmw_speculation_miss();
+                    fallback()
+                }
+            }
+            Stage::RmwMiss | Stage::RmwAbort => miss,
+            Stage::RmwFail(e) => fail(e),
+            Stage::RmwDependent => fallback(),
+            Stage::Pass | Stage::Store(_) => unreachable!("not an RMW stage"),
         }
     }
 
@@ -592,78 +872,39 @@ impl FleecCache {
     ) -> RmwResult {
         let hash = hash_key(key);
         loop {
-            // Phase 1 (pinned): snapshot the current item.
-            let snapshot = {
+            // Phase 1 (pinned): snapshot the current item. Shares
+            // [`FleecCache::rmw_snapshot`] with the batched staging path
+            // so the two can never drift semantically.
+            let snap = {
                 let guard = self.collector.pin();
-                let mut t = self.root(&guard);
-                loop {
-                    match search(t, hash, key, false, &guard) {
-                        Find::Found(n) => {
-                            let node = unsafe { &*n };
-                            let w = node.item.load(Ordering::Acquire);
-                            match decode_item(w) {
-                                ItemState::Live(item) => {
-                                    let hdr = unsafe { &*item };
-                                    if is_expired(hdr.deadline) {
-                                        self.expire_node(node, w, item, &guard);
-                                        break None;
-                                    }
-                                    let data = unsafe { Item::data(item) }.to_vec();
-                                    break Some((hdr.cas, hdr.flags, hdr.deadline, data));
-                                }
-                                ItemState::Tomb => break None,
-                                ItemState::Moved => {
-                                    let next = t.next.load(Ordering::Acquire);
-                                    if next.is_null() {
-                                        break None;
-                                    }
-                                    t = unsafe { &*next };
-                                }
-                            }
-                        }
-                        Find::Forwarded => {
-                            let next = t.next.load(Ordering::Acquire);
-                            if next.is_null() {
-                                break None;
-                            }
-                            t = unsafe { &*next };
-                        }
-                        _ => break None,
-                    }
-                }
+                self.rmw_snapshot(key, hash, &guard)
             };
-            let (token, flags, deadline, data) = match snapshot {
-                Some(s) => s,
-                None => return RmwResult::NotFound,
+            let (token, flags, deadline, data) = match snap {
+                RmwSnap::Live {
+                    token,
+                    flags,
+                    deadline,
+                    data,
+                } => (token, flags, deadline, data),
+                _ => return RmwResult::NotFound,
             };
-            // Phase 2 (unpinned): compute + allocate.
+            // Phase 2 (unpinned): compute + allocate. The CAS token is
+            // stamped at install time (inside `install_staged_rmw`), so a
+            // failed allocation consumes no token — identically to the
+            // batched staging path.
             let (new_value, new_flags, new_deadline) = match f(flags, deadline, &data) {
                 Some(v) => v,
                 None => return RmwResult::Aborted,
             };
-            let new_cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
-            let item = match self.alloc_item_pressured(&new_value, new_flags, new_deadline, new_cas)
-            {
+            let item = match self.alloc_item_pressured(&new_value, new_flags, new_deadline, 0) {
                 Ok(i) => i,
                 Err(e) => return RmwResult::Failed(e),
             };
-            // Phase 3 (pinned): install iff the token still matches.
+            // Phase 3 (pinned): install iff the token still matches —
+            // the same token-guarded install the batched path uses.
             let guard = self.collector.pin();
-            let (_, find) = self.locate_for_write(hash, key, &guard);
-            if let Find::Found(n) = find {
-                let node = unsafe { &*n };
-                let w = node.item.load(Ordering::Acquire);
-                if let ItemState::Live(old) = decode_item(w) {
-                    if unsafe { (*old).cas } == token
-                        && node
-                            .item
-                            .compare_exchange(w, live_word(item), Ordering::AcqRel, Ordering::Acquire)
-                            .is_ok()
-                    {
-                        Item::retire(&guard, &self.slab, old);
-                        return RmwResult::Done(new_value);
-                    }
-                }
+            if self.install_staged_rmw(key, hash, token, item, &guard) {
+                return RmwResult::Done(new_value);
             }
             // Token moved under us: free the speculative item and retry.
             unsafe { self.slab.free(item as *mut u8, (*item).class) };
@@ -695,40 +936,83 @@ impl Cache for FleecCache {
 
     /// The batched fast path: the whole batch crosses the engine once.
     ///
-    /// * **One EBR guard** is pinned for the entire batch (the default
-    ///   impl pins once per op); ops that pin internally nest re-entrantly
-    ///   at zero cost.
+    /// * **One EBR guard** is pinned for the execution of the entire
+    ///   batch (the default impl pins once per op); ops that pin
+    ///   internally nest re-entrantly at zero cost. Batches containing
+    ///   RMW ops pin one *additional* short-lived guard up front (phase
+    ///   A0 below) — never more than two top-level pins per batch.
     /// * Keys are **pre-hashed** up front and the bucket heads touched in
     ///   ascending bucket order, so execution finds the hot cache lines
     ///   resident.
     /// * Items for plain storage ops are **pre-allocated before pinning**
     ///   — allocation is the one step that may need to force reclamation,
     ///   which wants quiescence. (Under memory pressure this phase may
-    ///   pin internally to evict; the one-guard property holds on the
-    ///   uncontended fast path.)
+    ///   pin internally to evict; the pin bound holds on the uncontended
+    ///   fast path.)
+    /// * **RMW ops are staged like plain stores** (phase A0): their
+    ///   current values are pre-read under the up-front guard, the
+    ///   replacement items allocated *outside* any guard, and installed
+    ///   at their turn iff the key's CAS token is unchanged — so batched
+    ///   RMW no longer allocates under the held guard and epoch
+    ///   advancement under memory pressure matches sequential execution.
+    ///   An op whose key an earlier op in the same batch writes (or whose
+    ///   token moved concurrently) reruns the classic read-stage-install
+    ///   loop at its turn instead, which preserves exact sequential
+    ///   semantics at the cost of allocating under the guard for that op
+    ///   only.
     /// * Metrics are **batched**: one sharded-counter add per counter per
     ///   batch instead of one per op.
     ///
     /// Execution order is strictly the batch order — results and final
     /// state are identical to running the ops sequentially, including
     /// the `cas`-token sequence (tokens are stamped at install time) —
-    /// **absent memory pressure**. At the memory limit two deliberate
-    /// deviations exist: pre-allocation can trigger eviction before the
-    /// batch's reads run, and RMW ops allocating under the held guard
-    /// reclaim less effectively (their own pin caps epoch advancement
-    /// at one), so eviction victims and `OutOfMemory` outcomes may
-    /// differ from a sequential run.
+    /// **absent memory pressure**. At the memory limit one deliberate
+    /// deviation remains: pre-allocation can trigger eviction before the
+    /// batch's reads run, so eviction victims and `OutOfMemory` outcomes
+    /// may differ from a sequential run. (Failed allocations consume no
+    /// CAS token on either path — both stamp at install time.)
     fn execute_batch(&self, ops: &[Op<'_>]) -> Vec<OpResult> {
         if ops.is_empty() {
             return Vec::new();
         }
-        // Phase A (unpinned): pre-hash, validate keys, pre-allocate
-        // storage items. `staged[i]` holds the ready item (or terminal
-        // outcome) for storage ops, `None` for everything else.
         let hashes: Vec<u64> = ops.iter().map(|op| hash_key(op.key())).collect();
-        let mut staged: Vec<StagedItem> = Vec::with_capacity(ops.len());
+
+        // Phase A0 (pinned briefly, only when the batch has RMW ops):
+        // snapshot the value each *independent* RMW op will transform.
+        // An RMW op behind an in-batch write to its key is marked
+        // dependent instead — it must observe that write, not this
+        // snapshot.
+        let has_rmw = ops.iter().any(is_rmw);
+        let mut snaps: Vec<RmwSnap> = Vec::new();
+        if has_rmw {
+            snaps.reserve_exact(ops.len());
+            let guard = self.collector.pin();
+            let mut written: Vec<&[u8]> = Vec::new();
+            for (i, op) in ops.iter().enumerate() {
+                let key = op.key();
+                let snap = if is_rmw(op) {
+                    if written.iter().any(|w| *w == key) {
+                        RmwSnap::Dependent
+                    } else {
+                        self.rmw_snapshot(key, hashes[i], &guard)
+                    }
+                } else {
+                    RmwSnap::Pass
+                };
+                snaps.push(snap);
+                if !op.is_read() {
+                    written.push(key);
+                }
+            }
+        }
+
+        // Phase A (unpinned): validate keys, pre-allocate storage items
+        // and RMW replacement items. `staged[i]` holds each op's staging
+        // state; allocation here may force reclamation/eviction, which is
+        // exactly why no guard is held.
+        let mut staged: Vec<Stage> = Vec::with_capacity(ops.len());
         let mut sets = 0u64;
-        for op in ops {
+        for (i, op) in ops.iter().enumerate() {
             let stage = match *op {
                 Op::Set {
                     key,
@@ -756,16 +1040,23 @@ impl Cache for FleecCache {
                     ..
                 } => {
                     if key.len() > MAX_KEY_LEN || key.is_empty() {
-                        Some(Err(StoreOutcome::NotStored))
+                        Stage::Store(Err(StoreOutcome::NotStored))
                     } else {
                         sets += 1;
                         let deadline = deadline_from_exptime(exptime);
                         // CAS token 0 here; store_prealloc stamps the real
                         // one at install time to keep sequential ordering.
-                        Some(self.alloc_item_pressured(value, flags, deadline, 0))
+                        Stage::Store(self.alloc_item_pressured(value, flags, deadline, 0))
                     }
                 }
-                _ => None,
+                Op::Append { .. }
+                | Op::Prepend { .. }
+                | Op::Incr { .. }
+                | Op::Decr { .. }
+                | Op::Touch { .. } => {
+                    self.stage_rmw(op, std::mem::replace(&mut snaps[i], RmwSnap::Pass))
+                }
+                _ => Stage::Pass,
             };
             staged.push(stage);
         }
@@ -826,14 +1117,59 @@ impl Cache for FleecCache {
                         deletes += 1;
                         OpResult::Deleted(self.delete_in(key, hash, &guard))
                     }
-                    // RMW ops allocate mid-flight by design (their 3-phase
-                    // loop); they run under the outer guard via re-entrant
-                    // pins. Rare in batches; kept on the shared path.
-                    Op::Append { key, suffix } => OpResult::Store(self.append(key, suffix)),
-                    Op::Prepend { key, prefix } => OpResult::Store(self.prepend(key, prefix)),
-                    Op::Incr { key, delta } => OpResult::Counter(self.incr(key, delta)),
-                    Op::Decr { key, delta } => OpResult::Counter(self.decr(key, delta)),
-                    Op::Touch { key, exptime } => OpResult::Touched(self.touch(key, exptime)),
+                    // RMW ops: install the phase-A staged replacement
+                    // (token-guarded); dependent/conflicted ops rerun the
+                    // classic loop under the outer guard (re-entrant pin).
+                    Op::Append { key, suffix } => OpResult::Store(self.finish_staged_rmw(
+                        key,
+                        hash,
+                        staged[i],
+                        &guard,
+                        |_| StoreOutcome::Stored,
+                        StoreOutcome::NotStored,
+                        |e| e,
+                        || self.append(key, suffix),
+                    )),
+                    Op::Prepend { key, prefix } => OpResult::Store(self.finish_staged_rmw(
+                        key,
+                        hash,
+                        staged[i],
+                        &guard,
+                        |_| StoreOutcome::Stored,
+                        StoreOutcome::NotStored,
+                        |e| e,
+                        || self.prepend(key, prefix),
+                    )),
+                    Op::Incr { key, delta } => OpResult::Counter(self.finish_staged_rmw(
+                        key,
+                        hash,
+                        staged[i],
+                        &guard,
+                        |counter| counter,
+                        None,
+                        |_| None,
+                        || self.incr(key, delta),
+                    )),
+                    Op::Decr { key, delta } => OpResult::Counter(self.finish_staged_rmw(
+                        key,
+                        hash,
+                        staged[i],
+                        &guard,
+                        |counter| counter,
+                        None,
+                        |_| None,
+                        || self.decr(key, delta),
+                    )),
+                    Op::Touch { key, exptime } => OpResult::Touched(self.finish_staged_rmw(
+                        key,
+                        hash,
+                        staged[i],
+                        &guard,
+                        |_| true,
+                        false,
+                        |_| false,
+                        || self.touch(key, exptime),
+                    )),
                 };
                 results.push(r);
             }
@@ -921,7 +1257,7 @@ impl Cache for FleecCache {
     fn incr(&self, key: &[u8], delta: u64) -> Option<u64> {
         let mut result = None;
         let out = self.rmw(key, |flags, deadline, old| {
-            let n: u64 = std::str::from_utf8(old).ok()?.trim().parse().ok()?;
+            let n = parse_counter(old)?;
             let v = n.wrapping_add(delta);
             Some((v.to_string().into_bytes(), flags, deadline))
         });
@@ -934,7 +1270,7 @@ impl Cache for FleecCache {
     fn decr(&self, key: &[u8], delta: u64) -> Option<u64> {
         let mut result = None;
         let out = self.rmw(key, |flags, deadline, old| {
-            let n: u64 = std::str::from_utf8(old).ok()?.trim().parse().ok()?;
+            let n = parse_counter(old)?;
             let v = n.saturating_sub(delta);
             Some((v.to_string().into_bytes(), flags, deadline))
         });

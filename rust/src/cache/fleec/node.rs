@@ -199,8 +199,8 @@ mod tests {
 
     #[test]
     fn retire_keeps_slab_alive_until_reclaim() {
-        let collector = Arc::new(Collector::default());
-        let slab = Arc::new(Slab::new(SlabConfig::small(1 << 20)));
+        let collector = Collector::default();
+        let slab = Slab::new(SlabConfig::small(1 << 20));
         let item = Item::alloc(&slab, b"x", 0, 0, 1).unwrap();
         {
             let g = collector.pin();

@@ -390,8 +390,8 @@ mod tests {
 
     fn setup() -> (Arc<Collector>, Arc<Slab>, *mut Table) {
         (
-            Arc::new(Collector::default()),
-            Arc::new(Slab::new(SlabConfig::small(1 << 20))),
+            Collector::default(),
+            Slab::new(SlabConfig::small(1 << 20)),
             Table::alloc(8),
         )
     }

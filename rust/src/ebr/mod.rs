@@ -29,7 +29,7 @@ pub use bag::Retired;
 use std::cell::{Cell, RefCell, UnsafeCell};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 
 use crossbeam_utils::CachePadded;
 
@@ -95,6 +95,12 @@ pub struct Collector {
     /// release builds — no hot-path cost where it matters.
     #[cfg(debug_assertions)]
     top_pins: AtomicU64,
+    /// Handle to the owning `Arc`, set at construction. Per-thread
+    /// registrations clone it so a thread's limbo bags keep the collector
+    /// alive, which is why the constructors return `Arc<Collector>`
+    /// directly (`&Arc<Self>` is not a valid method receiver on stable
+    /// Rust, so `pin` takes `&self` and upgrades this instead).
+    self_weak: Weak<Collector>,
     config: Config,
 }
 
@@ -102,15 +108,15 @@ pub struct Collector {
 unsafe impl Send for Collector {}
 unsafe impl Sync for Collector {}
 
-impl Default for Collector {
-    fn default() -> Self {
+impl Collector {
+    /// Collector with default tuning (the `Arc` is part of the API — see
+    /// [`Collector::new`]).
+    pub fn default() -> Arc<Self> {
         Self::new(Config::default())
     }
-}
 
-impl Collector {
     /// Create a collector with the given tuning.
-    pub fn new(config: Config) -> Self {
+    pub fn new(config: Config) -> Arc<Self> {
         let slots = (0..MAX_THREADS)
             .map(|_| {
                 CachePadded::new(Slot {
@@ -120,7 +126,7 @@ impl Collector {
             })
             .collect::<Vec<_>>()
             .into_boxed_slice();
-        Collector {
+        Arc::new_cyclic(|self_weak| Collector {
             global_epoch: CachePadded::new(AtomicU64::new(2)), // start >1 so epoch-2 math never underflows
             slots,
             pressure: AtomicBool::new(false),
@@ -132,8 +138,9 @@ impl Collector {
             advances: AtomicUsize::new(0),
             #[cfg(debug_assertions)]
             top_pins: AtomicU64::new(0),
+            self_weak: self_weak.clone(),
             config,
-        }
+        })
     }
 
     /// Top-level pins since creation (debug builds; always 0 in release).
@@ -193,7 +200,7 @@ impl Collector {
 
     /// Pin the current thread: returns a guard inside which loads from the
     /// protected structures are safe. Re-entrant; inner pins are free.
-    pub fn pin(self: &Arc<Self>) -> Guard {
+    pub fn pin(&self) -> Guard {
         let local = local_handle(self);
         if local.pin_depth.get() == 0 {
             #[cfg(debug_assertions)]
@@ -238,7 +245,7 @@ impl Collector {
     /// advance, so the rounds are clamped to 1 — progress is reduced, not
     /// unsafe, because collection only frees bags whose grace period has
     /// already fully elapsed.
-    pub fn force_reclaim(self: &Arc<Self>, rounds: usize) {
+    pub fn force_reclaim(&self, rounds: usize) {
         let local = local_handle(self);
         let rounds = if local.pin_depth.get() > 0 { rounds.min(1) } else { rounds };
         for _ in 0..rounds {
@@ -465,8 +472,8 @@ thread_local! {
 }
 
 /// Find (or create) this thread's registration with `collector`.
-fn local_handle(collector: &Arc<Collector>) -> Rc<Local> {
-    let key = Arc::as_ptr(collector) as usize;
+fn local_handle(collector: &Collector) -> Rc<Local> {
+    let key = collector as *const Collector as usize;
     LOCALS.with(|cell| {
         // SAFETY: single-threaded access (thread_local), no re-entrancy:
         // nothing below calls back into LOCALS.
@@ -474,7 +481,9 @@ fn local_handle(collector: &Arc<Collector>) -> Rc<Local> {
         if let Some((_, l)) = locals.iter().find(|(k, _)| *k == key) {
             return Rc::clone(l);
         }
-        // Register: claim a free slot.
+        // Register: claim a free slot. The registration holds a strong
+        // handle (upgraded from the collector's own weak) so limbo bags
+        // never outlive the collector.
         let idx = collector
             .slots
             .iter()
@@ -491,7 +500,10 @@ fn local_handle(collector: &Arc<Collector>) -> Rc<Local> {
             pin_depth: Cell::new(0),
             observed_epoch: Cell::new(epoch),
             bags: RefCell::new([Bag::new(epoch), Bag::new(epoch), Bag::new(epoch)]),
-            collector: Arc::clone(collector),
+            collector: collector
+                .self_weak
+                .upgrade()
+                .expect("EBR: collector pinned while being dropped"),
         });
         locals.push((key, Rc::clone(&local)));
         // Opportunistically GC dead registrations (collector freed).
@@ -517,9 +529,9 @@ mod tests {
     #[test]
     fn deferred_drop_waits_for_grace_period() {
         DROPS.store(0, Ordering::SeqCst);
-        let c = Arc::new(Collector::new(Config {
+        let c = Collector::new(Config {
             retire_threshold: usize::MAX, // never auto-advance
-        }));
+        });
         {
             let g = c.pin();
             unsafe { g.defer_drop_box(Box::into_raw(Box::new(Tracked))) };
@@ -537,7 +549,7 @@ mod tests {
 
     #[test]
     fn pinned_reader_blocks_advancement() {
-        let c = Arc::new(Collector::default());
+        let c = Collector::default();
         let c2 = Arc::clone(&c);
         let epoch0 = c.epoch();
         let (started_tx, started_rx) = std::sync::mpsc::channel();
@@ -566,9 +578,9 @@ mod tests {
     #[test]
     fn threshold_triggers_reclamation_without_explicit_force() {
         DROPS.store(0, Ordering::SeqCst);
-        let c = Arc::new(Collector::new(Config {
+        let c = Collector::new(Config {
             retire_threshold: 8,
-        }));
+        });
         // Retire from a worker thread so its Local (and the Arc it holds)
         // is gone after join; the main thread never pins.
         let c2 = Arc::clone(&c);
@@ -589,9 +601,9 @@ mod tests {
     #[test]
     fn pressure_flag_forces_progress_on_next_pin() {
         DROPS.store(0, Ordering::SeqCst);
-        let c = Arc::new(Collector::new(Config {
+        let c = Collector::new(Config {
             retire_threshold: usize::MAX,
-        }));
+        });
         {
             let g = c.pin();
             unsafe { g.defer_drop_box(Box::into_raw(Box::new(Tracked))) };
@@ -609,9 +621,9 @@ mod tests {
     #[test]
     fn exiting_thread_orphans_are_reclaimed() {
         DROPS.store(0, Ordering::SeqCst);
-        let c = Arc::new(Collector::new(Config {
+        let c = Collector::new(Config {
             retire_threshold: usize::MAX,
-        }));
+        });
         let c2 = Arc::clone(&c);
         std::thread::spawn(move || {
             let g = c2.pin();
@@ -626,7 +638,7 @@ mod tests {
 
     #[test]
     fn reentrant_pin_is_allowed() {
-        let c = Arc::new(Collector::default());
+        let c = Collector::default();
         let g1 = c.pin();
         let g2 = c.pin();
         drop(g1);
@@ -636,9 +648,9 @@ mod tests {
 
     #[test]
     fn advance_stats_reflect_lazy_policy() {
-        let c = Arc::new(Collector::new(Config {
+        let c = Collector::new(Config {
             retire_threshold: usize::MAX,
-        }));
+        });
         for _ in 0..1000 {
             drop(c.pin());
         }

@@ -35,11 +35,28 @@
 //! [`cache::OpResult`]s. The default implementation delegates to the
 //! single-key tier, so engines are batch-capable by construction; FLeeC
 //! overrides it with a real fast path — **one EBR guard pinned per
-//! batch**, keys pre-hashed and bucket heads prefetched up front, storage
-//! items pre-allocated outside the guard, metrics folded into one update
-//! per counter. A batch is always semantically identical to running its
-//! ops sequentially (results, state, `cas`-token sequence) — enforced by
-//! `rust/tests/batch_semantics.rs`.
+//! batch** (plus one short pre-read guard when the batch carries RMW
+//! ops), keys pre-hashed and bucket heads prefetched up front, storage
+//! items pre-allocated outside the guard, and `append`/`prepend`/`incr`/
+//! `decr`/`touch` **staged like plain stores**: values pre-read, the
+//! replacement items allocated unpinned, then installed token-guarded at
+//! their turn (same-key in-batch dependencies rerun the classic loop in
+//! place), so nothing allocates under the held guard and metrics fold
+//! into one update per counter. A batch is always semantically identical
+//! to running its ops sequentially (results, state, `cas`-token
+//! sequence) — enforced by `rust/tests/batch_semantics.rs`.
+//!
+//! ## The write-side memory path
+//!
+//! The [`slab`] allocator behind every FLeeC item is privatized: each
+//! thread keeps per-size-class **magazines** of up to `slab::MAG_CAP`
+//! free chunks, so steady-state alloc/free touch only thread-local state;
+//! refills and flushes exchange whole **segments** (intra-linked chunk
+//! chains) with the shared lock-free free list, one tagged CAS per
+//! ~`MAG_CAP` chunks. Accounting stays exact with chunks parked
+//! privately (magazine residents count as free in
+//! `utilization`/`mem_used`, thread exit flushes, `exhausted()` publishes
+//! the caller's parked chunks before reporting pressure).
 //!
 //! ## The shard router
 //!
@@ -65,8 +82,9 @@
 //! protocol pump (`server::batch::drain`) turns every complete command in
 //! a connection's read buffer into rounds of one `execute_batch` crossing
 //! each (`stats`/`flush_all` act as barriers), reusing per-connection
-//! op/action arenas so planning allocates nothing per read (the one
-//! remaining hot-path allocation is `proto::parse`'s multi-key get list).
+//! op/action arenas plus the multi-key `get` scratch fed to
+//! `proto::parse_into`, so the read path allocates nothing once a
+//! connection is warm.
 //! Two front-ends run that pump ([`server::ServerModel`]):
 //!
 //! * **`reactor`** (default on Unix): N event-loop threads, each owning

@@ -267,7 +267,7 @@ mod tests {
     use std::sync::atomic::AtomicUsize as Counter;
 
     fn list() -> HarrisList<u64, u64> {
-        HarrisList::new(Arc::new(Collector::default()))
+        HarrisList::new(Collector::default())
     }
 
     #[test]
@@ -371,7 +371,7 @@ mod tests {
 
     #[test]
     fn mixed_storm_keeps_list_consistent() {
-        let collector = Arc::new(Collector::default());
+        let collector = Collector::default();
         let l = Arc::new(HarrisList::<u64, u64>::new(Arc::clone(&collector)));
         let handles: Vec<_> = (0..8)
             .map(|t| {

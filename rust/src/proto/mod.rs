@@ -6,9 +6,11 @@
 //! `quit`, with `noreply` support. The parser is incremental: feed it a
 //! byte buffer, get back `(command, bytes_consumed)` or "need more".
 //!
-//! Parsing borrows from the input buffer (no per-command allocation on
-//! the hot path beyond the multi-key vector); the server copies only what
-//! the engine needs.
+//! Parsing borrows from the input buffer and allocates nothing on the
+//! hot path: even the multi-key `get` list is collected into a
+//! caller-provided scratch vector ([`parse_into`]) whose buffer the
+//! server recycles across reads ([`crate::server::batch::BatchArena`]).
+//! [`parse`] is the scratch-less convenience wrapper.
 
 use std::fmt::Write as _;
 
@@ -97,8 +99,20 @@ fn parse_u64(tok: &[u8]) -> Option<u64> {
 /// rejects sizes no engine configuration could ever store.
 pub const MAX_DATA_LEN: u64 = 16 << 20;
 
-/// Parse one command from the head of `buf`.
+/// Parse one command from the head of `buf` (allocating convenience
+/// wrapper over [`parse_into`]).
 pub fn parse(buf: &[u8]) -> Parsed<'_> {
+    let mut scratch = Vec::new();
+    parse_into(buf, &mut scratch)
+}
+
+/// Parse one command from the head of `buf`, collecting any multi-key
+/// `get` keys into `key_scratch` (cleared first). On a `get`/`gets` the
+/// returned [`Command::Get`] *takes* the scratch's buffer (the caller
+/// gets the capacity back by restoring the vector after planning — see
+/// `server::batch::plan`); every other outcome leaves the scratch
+/// untouched, so its allocation survives across calls.
+pub fn parse_into<'a>(buf: &'a [u8], key_scratch: &mut Vec<&'a [u8]>) -> Parsed<'a> {
     let Some(line_end) = find_crlf(buf) else {
         // Guard against unbounded garbage without a newline.
         if buf.len() > 64 * 1024 {
@@ -114,13 +128,14 @@ pub fn parse(buf: &[u8]) -> Parsed<'_> {
     };
     match cmd {
         b"get" | b"gets" => {
-            let keys: Vec<&[u8]> = tokens.collect();
-            if keys.is_empty() {
+            key_scratch.clear();
+            key_scratch.extend(tokens);
+            if key_scratch.is_empty() {
                 return Parsed::Error("get requires a key", consumed_line);
             }
             Parsed::Done(
                 Command::Get {
-                    keys,
+                    keys: std::mem::take(key_scratch),
                     with_cas: cmd == b"gets",
                 },
                 consumed_line,
@@ -424,6 +439,46 @@ mod tests {
     fn incomplete_line_waits_for_more() {
         assert_eq!(parse(b"get fo"), Parsed::Incomplete);
         assert_eq!(parse(b""), Parsed::Incomplete);
+    }
+
+    #[test]
+    fn parse_into_recycles_the_key_scratch() {
+        let mut scratch: Vec<&[u8]> = Vec::new();
+        match parse_into(b"get a bb ccc\r\n", &mut scratch) {
+            Parsed::Done(Command::Get { mut keys, .. }, _) => {
+                assert_eq!(keys, vec![b"a" as &[u8], b"bb", b"ccc"]);
+                // The planner's restore step: hand the buffer back.
+                keys.clear();
+                scratch = keys;
+            }
+            other => panic!("{other:?}"),
+        }
+        let cap = scratch.capacity();
+        assert!(cap >= 3);
+        // Non-get commands must leave the scratch (and its capacity)
+        // alone...
+        assert!(matches!(
+            parse_into(b"delete k\r\n", &mut scratch),
+            Parsed::Done(Command::Delete { .. }, _)
+        ));
+        assert_eq!(scratch.capacity(), cap);
+        // ...as must the keyless-get error path.
+        assert!(matches!(
+            parse_into(b"get\r\n", &mut scratch),
+            Parsed::Error(..)
+        ));
+        assert_eq!(scratch.capacity(), cap);
+        // A same-shape get reuses the buffer without growing it.
+        match parse_into(b"get x yy zzz\r\n", &mut scratch) {
+            Parsed::Done(Command::Get { mut keys, .. }, _) => {
+                assert_eq!(keys.len(), 3);
+                assert_eq!(keys.capacity(), cap, "no reallocation on reuse");
+                keys.clear();
+                scratch = keys;
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(scratch.capacity(), cap);
     }
 
     #[test]

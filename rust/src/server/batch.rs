@@ -14,11 +14,11 @@
 //! [`Action`] carries no borrowed data: value-reply keys are recovered
 //! from the op list itself (`ops[first + i].key()`), so the action arena
 //! recycles trivially and — together with [`BatchArena`]'s lifetime
-//! laundering of the op vector — the plan side of a read allocates
-//! nothing once a connection's arenas are warm (the ROADMAP "server hot
-//! path" item; the old code rebuilt both vectors per read). The one
-//! remaining per-command allocation on the read path is the key list a
-//! `get`/`gets` collects inside [`proto::parse`].
+//! laundering of the op vector and the multi-key `get` scratch it feeds
+//! to [`proto::parse_into`] — the read path allocates nothing once a
+//! connection's arenas are warm (the ROADMAP "server hot path" item is
+//! now fully discharged: the old code rebuilt both vectors per read and
+//! collected a fresh key `Vec` per `get`).
 //!
 //! Two commands cannot ride in a batch: `stats` (reads the very counters
 //! the pending ops are about to bump) and `flush_all` (clobbers state the
@@ -96,22 +96,28 @@ pub enum Action {
 pub struct BatchArena {
     ops: Vec<Op<'static>>,
     actions: Vec<Action>,
+    /// Scratch for [`proto::parse_into`]'s multi-key `get` list; same
+    /// park-empty-at-`'static` recycling as `ops`.
+    keys: Vec<&'static [u8]>,
 }
 
 impl BatchArena {
-    /// Borrow both arenas for one drain call (empty, capacity retained).
-    fn take<'a>(&mut self) -> (Vec<Op<'a>>, Vec<Action>) {
+    /// Borrow the arenas for one drain call (empty, capacity retained).
+    #[allow(clippy::type_complexity)]
+    fn take<'a>(&mut self) -> (Vec<Op<'a>>, Vec<Action>, Vec<&'a [u8]>) {
         (
             recycle_ops(std::mem::take(&mut self.ops)),
             std::mem::take(&mut self.actions),
+            recycle_keys(std::mem::take(&mut self.keys)),
         )
     }
 
     /// Return the arenas; contents are cleared, capacity kept.
-    fn put(&mut self, ops: Vec<Op<'_>>, mut actions: Vec<Action>) {
+    fn put(&mut self, ops: Vec<Op<'_>>, mut actions: Vec<Action>, keys: Vec<&[u8]>) {
         self.ops = recycle_ops(ops);
         actions.clear();
         self.actions = actions;
+        self.keys = recycle_keys(keys);
     }
 }
 
@@ -129,6 +135,15 @@ fn recycle_ops<'from, 'to>(mut v: Vec<Op<'from>>) -> Vec<Op<'to>> {
     let ptr = v.as_mut_ptr();
     std::mem::forget(v);
     unsafe { Vec::from_raw_parts(ptr as *mut Op<'to>, 0, cap) }
+}
+
+/// Same soundness argument as [`recycle_ops`], for the key scratch.
+fn recycle_keys<'from, 'to>(mut v: Vec<&'from [u8]>) -> Vec<&'to [u8]> {
+    v.clear();
+    let cap = v.capacity();
+    let ptr = v.as_mut_ptr();
+    std::mem::forget(v);
+    unsafe { Vec::from_raw_parts(ptr as *mut &'to [u8], 0, cap) }
 }
 
 /// Render the `stats` barrier's reply. Goes through [`Cache::stats`], the
@@ -155,23 +170,34 @@ pub fn is_barrier(cmd: &Command<'_>) -> bool {
 /// `actions`. Lossless: every field of the parsed command survives into
 /// either the op or the action. Barrier commands (see [`is_barrier`]) are
 /// the caller's job and not accepted here.
-pub fn plan<'a>(cmd: Command<'a>, ops: &mut Vec<Op<'a>>, actions: &mut Vec<Action>) {
+///
+/// `key_scratch` is the buffer [`proto::parse_into`] collected a `get`'s
+/// keys into: a `Get` command hands it back here (cleared, capacity
+/// kept) so the next parse reuses the allocation.
+pub fn plan<'a>(
+    cmd: Command<'a>,
+    ops: &mut Vec<Op<'a>>,
+    actions: &mut Vec<Action>,
+    key_scratch: &mut Vec<&'a [u8]>,
+) {
     match cmd {
-        Command::Get { keys, with_cas } => {
+        Command::Get { mut keys, with_cas } => {
             if keys.len() > MAX_GET_KEYS {
                 actions.push(Action::ClientError("too many keys in get"));
-                return;
+            } else {
+                let first = ops.len();
+                let count = keys.len();
+                for &key in &keys {
+                    ops.push(Op::Get { key });
+                }
+                actions.push(Action::Values {
+                    first,
+                    count,
+                    with_cas,
+                });
             }
-            let first = ops.len();
-            let count = keys.len();
-            for &key in &keys {
-                ops.push(Op::Get { key });
-            }
-            actions.push(Action::Values {
-                first,
-                count,
-                with_cas,
-            });
+            keys.clear();
+            *key_scratch = keys;
         }
         Command::Store {
             kind,
@@ -371,14 +397,14 @@ pub fn drain(
     out_budget: usize,
 ) -> Drained {
     let mut consumed = 0;
-    let (mut ops, mut actions) = arena.take();
+    let (mut ops, mut actions, mut keys) = arena.take();
     let stop = 'drain: loop {
         if out.len() >= out_budget {
             break DrainStop::Budget;
         }
         // One round: plan up to ROUND_OPS ops, or up to a barrier.
         loop {
-            match proto::parse(&input[consumed..]) {
+            match proto::parse_into(&input[consumed..], &mut keys) {
                 Parsed::Done(cmd, n) => {
                     consumed += n;
                     if is_barrier(&cmd) {
@@ -396,7 +422,7 @@ pub fn drain(
                         }
                         break; // barrier ends the round; re-check budget
                     }
-                    plan(cmd, &mut ops, &mut actions);
+                    plan(cmd, &mut ops, &mut actions, &mut keys);
                     if ops.len() >= ROUND_OPS {
                         break; // round full; execute and re-check budget
                     }
@@ -416,7 +442,7 @@ pub fn drain(
         }
         flush_batch(cache, &mut ops, &mut actions, out);
     };
-    arena.put(ops, actions);
+    arena.put(ops, actions, keys);
     Drained { consumed, stop }
 }
 
@@ -579,21 +605,29 @@ mod tests {
     fn arena_allocates_only_on_first_use() {
         let cache = build_engine("fleec", CacheConfig::small()).unwrap();
         let mut arena = BatchArena::default();
-        let wire = b"set k 0 0 1\r\nv\r\nget k\r\n";
+        // Multi-key get included so the parse key scratch is exercised.
+        let wire = b"set k 0 0 1\r\nv\r\nget k k k\r\nget k\r\n";
         let mut out = Vec::new();
         drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX);
-        let (cap_ops, cap_actions) = (arena.ops.capacity(), arena.actions.capacity());
+        let (cap_ops, cap_actions, cap_keys) = (
+            arena.ops.capacity(),
+            arena.actions.capacity(),
+            arena.keys.capacity(),
+        );
         assert!(cap_ops >= 2 && cap_actions >= 2, "arena warmed");
-        // A same-shape drain must not grow (or shrink) either arena.
+        assert!(cap_keys >= 3, "key scratch warmed by the multi-key get");
+        // A same-shape drain must not grow (or shrink) any arena.
         for _ in 0..8 {
             out.clear();
             drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX);
             assert_eq!(arena.ops.capacity(), cap_ops);
             assert_eq!(arena.actions.capacity(), cap_actions);
+            assert_eq!(arena.keys.capacity(), cap_keys, "key scratch recycled");
         }
         assert_eq!(
             out,
-            b"STORED\r\nVALUE k 0 1\r\nv\r\nEND\r\n" as &[u8],
+            b"STORED\r\nVALUE k 0 1\r\nv\r\nVALUE k 0 1\r\nv\r\nVALUE k 0 1\r\nv\r\nEND\r\nVALUE k 0 1\r\nv\r\nEND\r\n"
+                as &[u8],
             "recycled arenas must not corrupt replies"
         );
     }

@@ -4,6 +4,27 @@
 //! page installation and chunk claiming are both single CASes — two
 //! separate `bump`/`end` words could be read torn across an install and
 //! hand out memory past a page boundary.
+//!
+//! ## Segment free list
+//!
+//! The free list stores **segments**: short chains of free chunks linked
+//! through each chunk's *second* word (the first word belongs to the
+//! Treiber stack itself). One push/pop of the shared stack therefore
+//! transfers a whole batch of chunks, which is what lets the per-thread
+//! magazine layer ([`crate::slab`]) refill and flush with one shared CAS
+//! per ~[`crate::slab::MAG_CAP`] operations instead of one per chunk.
+//! Walking a segment's intra-links is only ever done *after* the pop —
+//! on memory the walker exclusively owns — so the stack's ABA/version
+//! reasoning is untouched (the stack still only reads the first word of
+//! its top node).
+//!
+//! ## Accounting
+//!
+//! `handed` counts chunks currently *outside* the shared structures:
+//! handed to callers **or** parked in a thread magazine. The slab layer
+//! subtracts the magazine population (tracked per registration slot) to
+//! report user-live chunks, so `utilization`/`mem_used` treat magazine
+//! residents as free.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -24,12 +45,36 @@ fn unpack(word: usize) -> (usize, usize) {
     (word >> COUNT_BITS, word & COUNT_MASK)
 }
 
+/// Read a chunk's intra-segment link (second word).
+///
+/// # Safety
+/// `p` must be a chunk the caller exclusively owns (freshly popped
+/// segment or a chain being assembled), with `chunk_size >= 16`.
+#[inline]
+unsafe fn seg_next(p: *mut u8) -> *mut u8 {
+    (p.add(8) as *const u64).read() as *mut u8
+}
+
+/// Write a chunk's intra-segment link (second word).
+///
+/// # Safety
+/// Same ownership contract as [`seg_next`].
+#[inline]
+unsafe fn set_seg_next(p: *mut u8, next: *mut u8) {
+    (p.add(8) as *mut u64).write(next as u64);
+}
+
 /// Statistics for one size class.
 #[derive(Debug, Clone, Copy)]
 pub struct SizeClassStats {
     pub chunk_size: usize,
-    /// Chunks handed out and not yet freed.
+    /// Chunks handed out to users and not yet freed. At the class level
+    /// this includes magazine-parked chunks; [`crate::slab::Slab`]
+    /// subtracts those into `cached_chunks` before reporting.
     pub live_chunks: usize,
+    /// Chunks parked in per-thread magazines (free, but privatized).
+    /// Always 0 in a class-level snapshot; filled in by the slab.
+    pub cached_chunks: usize,
     /// Total chunks ever carved from pages.
     pub total_chunks: usize,
 }
@@ -41,18 +86,27 @@ pub struct SizeClass {
     chunk_size: usize,
     free: TaggedStack,
     region: AtomicUsize,
-    live: AtomicUsize,
+    /// Chunks outside the shared structures (user-live + magazine).
+    handed: AtomicUsize,
     total: AtomicUsize,
+    /// Debug-build hook: successful shared CAS transfers (free-list
+    /// push/pop, bump claims). The magazine tests assert this stays flat
+    /// across magazine-served steady state. Compiled out of release.
+    #[cfg(debug_assertions)]
+    shared_ops: AtomicUsize,
 }
 
 impl SizeClass {
     pub fn new(chunk_size: usize) -> Self {
+        assert!(chunk_size >= 16, "segment links need two words per chunk");
         SizeClass {
             chunk_size,
             free: TaggedStack::new(),
             region: AtomicUsize::new(0),
-            live: AtomicUsize::new(0),
+            handed: AtomicUsize::new(0),
             total: AtomicUsize::new(0),
+            #[cfg(debug_assertions)]
+            shared_ops: AtomicUsize::new(0),
         }
     }
 
@@ -60,13 +114,42 @@ impl SizeClass {
         self.chunk_size
     }
 
-    /// Try to allocate from the free list, then the bump region. `None`
-    /// means the caller must install a new page (or report pressure).
+    #[inline]
+    fn note_shared_op(&self) {
+        #[cfg(debug_assertions)]
+        self.shared_ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Successful shared free-list/bump transfers so far (debug builds;
+    /// always 0 in release).
+    pub fn shared_ops(&self) -> usize {
+        #[cfg(debug_assertions)]
+        {
+            self.shared_ops.load(Ordering::Relaxed)
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            0
+        }
+    }
+
+    /// Try to allocate one chunk from the free list, then the bump
+    /// region. `None` means the caller must install a new page (or report
+    /// pressure).
     pub fn try_alloc(&self) -> Option<*mut u8> {
-        // Free list first: reuse keeps the working set dense.
-        if let Some(ptr) = unsafe { self.free.pop() } {
-            self.live.fetch_add(1, Ordering::Relaxed);
-            return Some(ptr);
+        // Free list first: reuse keeps the working set dense. The popped
+        // node is a whole segment; keep its head and return the rest.
+        if let Some(seg) = unsafe { self.free.pop() } {
+            self.note_shared_op();
+            let rest = unsafe { seg_next(seg) };
+            if !rest.is_null() {
+                // `rest` is still a well-formed (intra-linked,
+                // null-terminated) segment; push it back as one node.
+                self.note_shared_op();
+                unsafe { self.free.push(rest) };
+            }
+            self.handed.fetch_add(1, Ordering::Relaxed);
+            return Some(seg);
         }
         let mut word = self.region.load(Ordering::Acquire);
         loop {
@@ -81,13 +164,74 @@ impl SizeClass {
                 Ordering::Acquire,
             ) {
                 Ok(_) => {
-                    self.live.fetch_add(1, Ordering::Relaxed);
+                    self.note_shared_op();
+                    self.handed.fetch_add(1, Ordering::Relaxed);
                     self.total.fetch_add(1, Ordering::Relaxed);
                     return Some(addr as *mut u8);
                 }
                 Err(cur) => word = cur,
             }
         }
+    }
+
+    /// Pop up to `want` chunks into `out` (one shared segment pop, then
+    /// one batched bump claim). Returns how many were appended.
+    ///
+    /// # Safety
+    /// Same contract as [`SizeClass::try_alloc`]: returned chunks are
+    /// exclusively the caller's.
+    pub unsafe fn alloc_batch(&self, out: &mut Vec<*mut u8>, want: usize) -> usize {
+        let mut got = 0usize;
+        if want == 0 {
+            return 0;
+        }
+        if let Some(seg) = self.free.pop() {
+            self.note_shared_op();
+            let mut cur = seg;
+            while !cur.is_null() && got < want {
+                let next = seg_next(cur);
+                out.push(cur);
+                got += 1;
+                cur = next;
+            }
+            if !cur.is_null() {
+                // Oversized segment (shouldn't happen with magazine-sized
+                // flushes, but singles can chain): return the tail.
+                self.note_shared_op();
+                self.free.push(cur);
+            }
+        }
+        if got < want {
+            let mut word = self.region.load(Ordering::Acquire);
+            loop {
+                let (addr, count) = unpack(word);
+                let take = count.min(want - got);
+                if take == 0 {
+                    break;
+                }
+                match self.region.compare_exchange_weak(
+                    word,
+                    pack(addr + take * self.chunk_size, count - take),
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => {
+                        self.note_shared_op();
+                        for i in 0..take {
+                            out.push((addr + i * self.chunk_size) as *mut u8);
+                        }
+                        self.total.fetch_add(take, Ordering::Relaxed);
+                        got += take;
+                        break;
+                    }
+                    Err(cur) => word = cur,
+                }
+            }
+        }
+        if got > 0 {
+            self.handed.fetch_add(got, Ordering::Relaxed);
+        }
+        got
     }
 
     /// Install a fresh page as the bump region (single atomic publish).
@@ -102,19 +246,40 @@ impl SizeClass {
             .store(pack(page as usize, count), Ordering::Release);
     }
 
-    /// Return a chunk to the free list.
+    /// Return one chunk to the free list (a singleton segment).
     ///
     /// # Safety
     /// `ptr` must be an unreferenced chunk of this class.
     pub unsafe fn free(&self, ptr: *mut u8) {
-        self.live.fetch_sub(1, Ordering::Relaxed);
+        set_seg_next(ptr, std::ptr::null_mut());
+        self.handed.fetch_sub(1, Ordering::Relaxed);
+        self.note_shared_op();
         self.free.push(ptr);
+    }
+
+    /// Return a batch of chunks as one segment (one shared CAS).
+    ///
+    /// # Safety
+    /// Every chunk must be an unreferenced chunk of this class, owned by
+    /// the caller.
+    pub unsafe fn free_batch(&self, chunks: &[*mut u8]) {
+        if chunks.is_empty() {
+            return;
+        }
+        for w in chunks.windows(2) {
+            set_seg_next(w[0], w[1]);
+        }
+        set_seg_next(*chunks.last().unwrap(), std::ptr::null_mut());
+        self.handed.fetch_sub(chunks.len(), Ordering::Relaxed);
+        self.note_shared_op();
+        self.free.push(chunks[0]);
     }
 
     pub fn stats(&self) -> SizeClassStats {
         SizeClassStats {
             chunk_size: self.chunk_size,
-            live_chunks: self.live.load(Ordering::Relaxed),
+            live_chunks: self.handed.load(Ordering::Relaxed),
+            cached_chunks: 0,
             total_chunks: self.total.load(Ordering::Relaxed),
         }
     }
@@ -161,6 +326,51 @@ mod tests {
     }
 
     #[test]
+    fn batch_roundtrip_preserves_chunks_and_counts() {
+        let sc = SizeClass::new(64);
+        let mut page = vec![0u8; 4096]; // 64 chunks
+        sc.install_page(page.as_mut_ptr(), 4096);
+        let mut batch = Vec::new();
+        let got = unsafe { sc.alloc_batch(&mut batch, 16) };
+        assert_eq!(got, 16);
+        assert_eq!(sc.stats().live_chunks, 16);
+        unsafe { sc.free_batch(&batch) };
+        assert_eq!(sc.stats().live_chunks, 0);
+        // The whole 16-chunk segment comes back in one pop.
+        let mut again = Vec::new();
+        let got = unsafe { sc.alloc_batch(&mut again, 16) };
+        assert_eq!(got, 16);
+        use std::collections::HashSet;
+        let a: HashSet<usize> = batch.iter().map(|p| *p as usize).collect();
+        let b: HashSet<usize> = again.iter().map(|p| *p as usize).collect();
+        assert_eq!(a, b, "segment reuse must hand back the same chunks");
+    }
+
+    #[test]
+    fn alloc_batch_splits_oversized_segments() {
+        let sc = SizeClass::new(64);
+        let mut page = vec![0u8; 4096];
+        sc.install_page(page.as_mut_ptr(), 4096);
+        let mut batch = Vec::new();
+        unsafe { sc.alloc_batch(&mut batch, 12) };
+        unsafe { sc.free_batch(&batch) }; // one 12-chunk segment
+        let mut small = Vec::new();
+        let got = unsafe { sc.alloc_batch(&mut small, 5) };
+        assert_eq!(got, 5, "takes only what was asked");
+        // The 7-chunk tail went back; singles still pop.
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..7 {
+            let p = sc.try_alloc().unwrap();
+            assert!(
+                batch.iter().any(|&b| b == p),
+                "tail chunk must come from the returned segment"
+            );
+            assert!(seen.insert(p as usize));
+        }
+        assert_eq!(sc.stats().live_chunks, 12);
+    }
+
+    #[test]
     fn concurrent_bump_claims_are_disjoint() {
         use std::collections::HashSet;
         use std::sync::Arc;
@@ -184,6 +394,55 @@ mod tests {
             all.extend(h.join().unwrap());
         }
         assert_eq!(all.len(), 1024);
+        assert_eq!(all.iter().collect::<HashSet<_>>().len(), 1024);
+    }
+
+    #[test]
+    fn concurrent_batch_transfers_conserve_chunks() {
+        use std::collections::HashSet;
+        use std::sync::Arc;
+        let sc = Arc::new(SizeClass::new(64));
+        let mut page = vec![0u8; 64 * 1024]; // 1024 chunks
+        sc.install_page(page.as_mut_ptr(), 64 * 1024);
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let sc = Arc::clone(&sc);
+                std::thread::spawn(move || {
+                    let mut rng = crate::sync::Xoshiro256::seeded(t);
+                    let mut held: Vec<*mut u8> = Vec::new();
+                    for _ in 0..2_000 {
+                        if rng.chance(0.5) {
+                            let want = 1 + rng.next_below(16) as usize;
+                            unsafe { sc.alloc_batch(&mut held, want) };
+                        } else if !held.is_empty() {
+                            let n = 1 + rng.next_below(held.len() as u64) as usize;
+                            let tail: Vec<*mut u8> =
+                                held.drain(held.len() - n..).collect();
+                            unsafe { sc.free_batch(&tail) };
+                        }
+                    }
+                    held.iter().map(|p| *p as usize).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let mut live: Vec<usize> = Vec::new();
+        for h in handles {
+            live.extend(h.join().unwrap());
+        }
+        // Drain everything left in shared structures.
+        let mut rest = Vec::new();
+        loop {
+            let got = unsafe { sc.alloc_batch(&mut rest, 64) };
+            if got == 0 {
+                break;
+            }
+        }
+        let all: Vec<usize> = live
+            .iter()
+            .copied()
+            .chain(rest.iter().map(|p| *p as usize))
+            .collect();
+        assert_eq!(all.len(), 1024, "no chunk lost or duplicated");
         assert_eq!(all.iter().collect::<HashSet<_>>().len(), 1024);
     }
 }

@@ -1,0 +1,265 @@
+//! Per-thread chunk magazines — the privatized fast path over the shared
+//! size-class structures.
+//!
+//! Every thread keeps, per (slab, size class), a small *magazine* of free
+//! chunks. Steady-state `alloc`/`free` pop/push the magazine only — no
+//! shared CAS, no contended cache line. The magazine exchanges chunks
+//! with the shared [`super::SizeClass`] in batches: an empty magazine
+//! refills with one segment pop (up to [`MAG_CAP`] chunks, one CAS), a
+//! full one flushes its whole contents as one segment push (one CAS).
+//! This is the commutative-update privatization argument: alloc/free of
+//! *distinct* chunks commute, so nothing about their order needs to be
+//! globally visible until a batch boundary.
+//!
+//! ## Truthful accounting
+//!
+//! Magazine-resident chunks are *free*, not live. Each registration owns
+//! a slot in the slab's [`SlotTable`] and publishes its per-class
+//! magazine length with plain relaxed stores to its own cache line;
+//! [`super::Slab::class_stats`] subtracts the summed slot lengths from
+//! the classes' `handed` counters, so `utilization`/`mem_used` stay exact
+//! (up to the usual racy-snapshot caveat) with chunks parked privately.
+//!
+//! ## Lifetime
+//!
+//! The registry is a thread-local keyed by slab address. Each entry holds
+//! a `Weak<Slab>` (cloned from the slab's own handle): at thread exit the
+//! entry upgrades it and — if the slab is still alive — flushes every
+//! magazine back to the shared lists and releases its slot, so chunks are
+//! never stranded by a departing thread. If the slab died first, the
+//! chunks died with its pages and the entry simply evaporates. A live
+//! `Weak` also pins the slab's allocation, so a registry key can never
+//! alias a *different* live slab.
+
+use std::cell::{Cell, RefCell, UnsafeCell};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::Weak;
+
+use crossbeam_utils::CachePadded;
+
+use super::Slab;
+
+/// Magazine capacity per (thread, size class): the batch size of shared
+/// free-list interactions.
+pub const MAG_CAP: usize = 16;
+
+/// Registration slots per slab (matches [`crate::ebr::MAX_THREADS`]).
+pub(super) const MAG_SLOTS: usize = 128;
+
+/// One thread's published magazine lengths (owner-written, stats-read).
+pub(super) struct Slot {
+    owned: AtomicBool,
+    lens: Box<[AtomicU32]>,
+}
+
+/// The slab-resident side of the magazine layer: per-thread slots whose
+/// published lengths make magazine-parked chunks visible to stats.
+pub(super) struct SlotTable {
+    slots: Box<[CachePadded<Slot>]>,
+}
+
+impl SlotTable {
+    pub(super) fn new(classes: usize) -> Self {
+        let slots = (0..MAG_SLOTS)
+            .map(|_| {
+                CachePadded::new(Slot {
+                    owned: AtomicBool::new(false),
+                    lens: (0..classes).map(|_| AtomicU32::new(0)).collect(),
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        SlotTable { slots }
+    }
+
+    /// Claim a free slot; `None` when all are taken (magazines disabled
+    /// for that thread — it falls back to the shared path).
+    fn claim(&self) -> Option<usize> {
+        self.slots.iter().position(|s| {
+            !s.owned.load(Ordering::Relaxed)
+                && s.owned
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+        })
+    }
+
+    /// Chunks of `class` currently parked across every thread's magazine.
+    pub(super) fn cached(&self, class: usize) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.owned.load(Ordering::Acquire))
+            .map(|s| s.lens[class].load(Ordering::Relaxed) as usize)
+            .sum()
+    }
+}
+
+/// How many slot-less lookups to wait between re-attempts at claiming a
+/// stats slot (a claim scans the whole table, so don't do it per op).
+const CLAIM_RETRY_EVERY: u32 = 1024;
+
+/// One thread's magazines for one slab.
+pub(super) struct LocalMags {
+    slab_key: usize,
+    weak: Weak<Slab>,
+    /// Claimed stats slot. `None` when the table was full at registration
+    /// — re-attempted every [`CLAIM_RETRY_EVERY`] lookups so a transient
+    /// thread spike doesn't cost this thread its fast path forever.
+    slot: Cell<Option<usize>>,
+    claim_countdown: Cell<u32>,
+    /// Chunk pointers, owner-thread only. `RefCell` (not a lock): the
+    /// registry is thread-local and nothing below re-enters it.
+    mags: RefCell<Box<[Vec<*mut u8>]>>,
+}
+
+impl LocalMags {
+    /// Whether this registration can actually park chunks (it claimed a
+    /// stats slot). Without a slot, parking would make stats untruthful,
+    /// so the slab falls back to the shared path instead.
+    pub(super) fn active(&self) -> bool {
+        self.slot.get().is_some()
+    }
+
+    /// Periodic re-attempt to claim a slot after a full-table miss.
+    fn maybe_reclaim_slot(&self, slab: &Slab) {
+        if self.slot.get().is_some() {
+            return;
+        }
+        let left = self.claim_countdown.get();
+        if left > 0 {
+            self.claim_countdown.set(left - 1);
+            return;
+        }
+        self.claim_countdown.set(CLAIM_RETRY_EVERY);
+        self.slot.set(slab.depot.claim());
+    }
+
+    #[inline]
+    fn publish_len(&self, slab: &Slab, class: usize, len: usize) {
+        if let Some(s) = self.slot.get() {
+            slab.depot.slots[s].lens[class].store(len as u32, Ordering::Relaxed);
+        }
+    }
+
+    /// Magazine-only pop: `None` means empty (caller refills).
+    pub(super) fn pop(&self, slab: &Slab, class: u8) -> Option<*mut u8> {
+        let mut mags = self.mags.borrow_mut();
+        let m = &mut mags[class as usize];
+        let p = m.pop();
+        if p.is_some() {
+            self.publish_len(slab, class as usize, m.len());
+        }
+        p
+    }
+
+    /// Park a freed chunk; a full magazine first flushes its entire
+    /// contents to the shared list as one segment.
+    ///
+    /// # Safety
+    /// `ptr` must be an unreferenced chunk of `class` from `slab`.
+    pub(super) unsafe fn push(&self, slab: &Slab, class: u8, ptr: *mut u8) {
+        let mut mags = self.mags.borrow_mut();
+        let m = &mut mags[class as usize];
+        if m.len() >= MAG_CAP {
+            slab.classes[class as usize].free_batch(m.as_slice());
+            m.clear();
+        }
+        m.push(ptr);
+        self.publish_len(slab, class as usize, m.len());
+    }
+
+    /// Refill an empty magazine from the shared structures and hand one
+    /// chunk out. `None` = the shared side is empty too (caller grows the
+    /// class or reports pressure).
+    pub(super) fn refill_and_pop(&self, slab: &Slab, class: u8) -> Option<*mut u8> {
+        let mut mags = self.mags.borrow_mut();
+        let m = &mut mags[class as usize];
+        debug_assert!(m.is_empty(), "refill on a non-empty magazine");
+        let got = unsafe { slab.classes[class as usize].alloc_batch(m, MAG_CAP) };
+        if got == 0 {
+            return None;
+        }
+        let p = m.pop();
+        self.publish_len(slab, class as usize, m.len());
+        p
+    }
+
+    /// Return every parked chunk to the shared lists (one segment per
+    /// non-empty class).
+    pub(super) fn flush_all(&self, slab: &Slab) {
+        let mut mags = self.mags.borrow_mut();
+        for (class, m) in mags.iter_mut().enumerate() {
+            if !m.is_empty() {
+                unsafe { slab.classes[class].free_batch(m.as_slice()) };
+                m.clear();
+                self.publish_len(slab, class, 0);
+            }
+        }
+    }
+}
+
+impl Drop for LocalMags {
+    fn drop(&mut self) {
+        // Thread exit (or registry GC): if the slab is still alive, give
+        // the chunks back and release the slot. If not, its pages are
+        // gone and so are the chunks — nothing to do (and nothing is
+        // dereferenced).
+        if let Some(slab) = self.weak.upgrade() {
+            self.flush_all(&slab);
+            if let Some(s) = self.slot.get() {
+                slab.depot.slots[s].owned.store(false, Ordering::Release);
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// This thread's magazine registrations (one per slab ever touched;
+    /// linear scan — a thread talks to very few slabs).
+    static MAGS: UnsafeCell<Vec<Rc<LocalMags>>> = const { UnsafeCell::new(Vec::new()) };
+}
+
+/// Find (or create) this thread's magazines for `slab`. Returns `None`
+/// only during thread teardown (the registry TLS is already destroyed);
+/// callers then use the shared path directly.
+pub(super) fn local(slab: &Slab) -> Option<Rc<LocalMags>> {
+    let key = slab as *const Slab as usize;
+    MAGS.try_with(|cell| {
+        // SAFETY: single-threaded access (thread_local), no re-entrancy:
+        // nothing below calls back into MAGS.
+        let mags = unsafe { &mut *cell.get() };
+        if let Some(l) = mags.iter().find(|l| l.slab_key == key) {
+            l.maybe_reclaim_slot(slab);
+            return Rc::clone(l);
+        }
+        let classes = slab.classes.len();
+        let local = Rc::new(LocalMags {
+            slab_key: key,
+            weak: slab.self_weak.clone(),
+            slot: Cell::new(slab.depot.claim()),
+            claim_countdown: Cell::new(CLAIM_RETRY_EVERY),
+            mags: RefCell::new(
+                (0..classes)
+                    .map(|_| Vec::with_capacity(MAG_CAP))
+                    .collect(),
+            ),
+        });
+        mags.push(Rc::clone(&local));
+        // GC registrations whose slab died (their Drop is a no-op).
+        mags.retain(|l| l.weak.strong_count() > 0);
+        local
+    })
+    .ok()
+}
+
+/// This thread's existing registration for `slab`, if any — used by
+/// flush-only paths that should not register just to flush nothing.
+pub(super) fn local_existing(slab: &Slab) -> Option<Rc<LocalMags>> {
+    let key = slab as *const Slab as usize;
+    MAGS.try_with(|cell| {
+        let mags = unsafe { &*cell.get() };
+        mags.iter().find(|l| l.slab_key == key).map(Rc::clone)
+    })
+    .ok()
+    .flatten()
+}

@@ -8,7 +8,7 @@
 
 use fleec::cache::fleec::FleecCache;
 use fleec::cache::op::execute_sequential;
-use fleec::cache::{build_engine, Cache, CacheConfig, Op, OpResult, ENGINES};
+use fleec::cache::{build_engine, build_sharded, Cache, CacheConfig, Op, OpResult, ENGINES};
 
 /// Phase 1: a mixed script exercising every op kind plus same-key
 /// read-after-write / write-after-write dependencies inside one batch.
@@ -161,7 +161,7 @@ fn randomized_batches_match_sequential() {
         let mut ops: Vec<Op<'_>> = Vec::with_capacity(len);
         for val in &vals {
             let key = keys[rng.next_below(keys.len() as u64) as usize].as_slice();
-            ops.push(match rng.next_below(12) {
+            ops.push(match rng.next_below(15) {
                 0..=3 => Op::Get { key },
                 4..=5 => Op::Set {
                     key,
@@ -187,9 +187,20 @@ fn randomized_batches_match_sequential() {
                     key,
                     delta: rng.next_below(1000),
                 },
-                _ => Op::Decr {
+                11 => Op::Decr {
                     key,
                     delta: rng.next_below(1000),
+                },
+                12 => Op::Prepend { key, prefix: val },
+                13 => Op::Touch { key, exptime: 0 },
+                // Small guessed tokens: both runs produce the identical
+                // token sequence, so hits and misses land identically.
+                _ => Op::CasOp {
+                    key,
+                    value: val,
+                    flags: 0,
+                    exptime: 0,
+                    cas: rng.next_below(8),
                 },
             });
         }
@@ -211,6 +222,182 @@ fn randomized_batches_match_sequential() {
             }
         }
     });
+}
+
+/// Deep RMW-heavy batches vs the sequential oracle — across every engine
+/// *and* the sharded router, cas tokens included. This is the staged
+/// batched-RMW fast path's equivalence gate: append/prepend/incr/decr/
+/// touch inside 64-deep batches with dense same-key dependencies.
+#[test]
+fn randomized_rmw_batches_match_sequential_across_router() {
+    fleec::testutil::run_prop("rmw-batch-equivalence", 0x51AB_CAFE, |rng| {
+        let keys: Vec<Vec<u8>> = (0..6).map(|i| format!("rw{i}").into_bytes()).collect();
+        let len = 64usize;
+        // Values: numeric strings often enough that incr/decr hit real
+        // counters, raw bytes otherwise (exercising the abort path).
+        let vals: Vec<Vec<u8>> = (0..len)
+            .map(|_| {
+                if rng.chance(0.6) {
+                    rng.next_below(10_000).to_string().into_bytes()
+                } else {
+                    (0..1 + rng.next_below(16))
+                        .map(|_| rng.next_u64() as u8)
+                        .collect()
+                }
+            })
+            .collect();
+        let mut ops: Vec<Op<'_>> = Vec::with_capacity(len);
+        for val in &vals {
+            let key = keys[rng.next_below(keys.len() as u64) as usize].as_slice();
+            ops.push(match rng.next_below(12) {
+                0 => Op::Get { key },
+                1 => Op::Set {
+                    key,
+                    value: val,
+                    flags: 0,
+                    exptime: 0,
+                },
+                2..=3 => Op::Append { key, suffix: val },
+                4..=5 => Op::Prepend { key, prefix: val },
+                6..=7 => Op::Incr {
+                    key,
+                    delta: rng.next_below(100),
+                },
+                8 => Op::Decr {
+                    key,
+                    delta: rng.next_below(100),
+                },
+                9 => Op::Touch { key, exptime: 0 },
+                10 => Op::Delete { key },
+                _ => Op::CasOp {
+                    key,
+                    value: val,
+                    flags: 0,
+                    exptime: 0,
+                    cas: rng.next_below(8),
+                },
+            });
+        }
+        for engine in ENGINES {
+            for shards in [1usize, 4] {
+                let batched = build_sharded(engine, shards, CacheConfig::small()).unwrap();
+                let sequential = build_sharded(engine, shards, CacheConfig::small()).unwrap();
+                assert_eq!(
+                    batched.execute_batch(&ops),
+                    execute_sequential(sequential.as_ref(), &ops),
+                    "{engine}/shards={shards}: RMW batch diverged"
+                );
+                for key in &keys {
+                    assert_eq!(
+                        batched.get(key),
+                        sequential.get(key),
+                        "{engine}/shards={shards}: final state diverged for {:?}",
+                        String::from_utf8_lossy(key)
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Staged batched RMW structural properties (debug-build hooks):
+/// a batch containing RMW ops pins exactly *two* top-level guards (the
+/// pre-read pass and the execution pass) and — when every RMW op is
+/// independent and uncontended — installs every staged item first try,
+/// i.e. allocates nothing under the held execution guard.
+#[test]
+fn fleec_rmw_batch_pins_two_guards_with_zero_speculation_misses() {
+    if !cfg!(debug_assertions) {
+        eprintln!("SKIP: pin/speculation counters are debug_assertions hooks");
+        return;
+    }
+    let cache = FleecCache::new(CacheConfig::small());
+    for i in 0..8 {
+        assert_eq!(
+            cache.set(format!("rmw-{i}").as_bytes(), b"10", 0, 0),
+            fleec::cache::StoreOutcome::Stored
+        );
+    }
+    let keys: Vec<Vec<u8>> = (0..8).map(|i| format!("rmw-{i}").into_bytes()).collect();
+    let ops = vec![
+        Op::Append {
+            key: &keys[0],
+            suffix: b"x",
+        },
+        Op::Prepend {
+            key: &keys[1],
+            prefix: b"p",
+        },
+        Op::Incr {
+            key: &keys[2],
+            delta: 5,
+        },
+        Op::Decr {
+            key: &keys[3],
+            delta: 3,
+        },
+        Op::Touch {
+            key: &keys[4],
+            exptime: 300,
+        },
+        Op::Get { key: &keys[5] },
+        Op::Incr {
+            key: b"absent",
+            delta: 1,
+        },
+        Op::Set {
+            key: &keys[6],
+            value: b"fresh",
+            flags: 0,
+            exptime: 0,
+        },
+    ];
+    let pins_before = cache.collector().top_level_pins();
+    let misses_before = cache.rmw_speculation_misses();
+    let rs = cache.execute_batch(&ops);
+    assert_eq!(
+        cache.collector().top_level_pins() - pins_before,
+        2,
+        "RMW batch = pre-read pin + execution pin, nothing more"
+    );
+    assert_eq!(
+        cache.rmw_speculation_misses() - misses_before,
+        0,
+        "independent uncontended RMW ops must install their staged items"
+    );
+    assert_eq!(rs[0], OpResult::Store(fleec::cache::StoreOutcome::Stored));
+    assert_eq!(rs[2], OpResult::Counter(Some(15)));
+    assert_eq!(rs[3], OpResult::Counter(Some(7)));
+    assert_eq!(rs[4], OpResult::Touched(true));
+    assert_eq!(rs[6], OpResult::Counter(None));
+    assert_eq!(cache.get(&keys[0]).unwrap().data, b"10x");
+    assert_eq!(cache.get(&keys[1]).unwrap().data, b"p10");
+
+    // In-batch dependency: the append must see the set's value, via the
+    // dependent (in-guard) path — correct, and not a speculation miss.
+    let dep_ops = vec![
+        Op::Set {
+            key: b"dep",
+            value: b"a",
+            flags: 0,
+            exptime: 0,
+        },
+        Op::Append {
+            key: b"dep",
+            suffix: b"b",
+        },
+        Op::Get { key: b"dep" },
+    ];
+    let pins_before = cache.collector().top_level_pins();
+    let misses_before = cache.rmw_speculation_misses();
+    let rs = cache.execute_batch(&dep_ops);
+    assert_eq!(cache.collector().top_level_pins() - pins_before, 2);
+    assert_eq!(cache.rmw_speculation_misses() - misses_before, 0);
+    assert_eq!(rs[1], OpResult::Store(fleec::cache::StoreOutcome::Stored));
+    match &rs[2] {
+        OpResult::Value(Some(r)) => assert_eq!(r.data, b"ab"),
+        other => panic!("dependent append lost the in-batch write: {other:?}"),
+    }
 }
 
 /// The acceptance hook for the fast path's headline property: a batch of
