@@ -27,16 +27,25 @@
 //!                64B/1KiB/8KiB × batch depth × a set-heavy and an
 //!                RMW-heavy mix, fleec only (the slab's one consumer),
 //!                4 threads. Emits `BENCH_alloc_path.json`.
+//!   read-path  — the read-side memory-path sweep behind the
+//!                guard-scoped sink API: 64-deep GET batches rendered to
+//!                wire bytes through the **owned** tier (`execute_batch`
+//!                → copy out of `GetResult`) vs the **sink** tier
+//!                (`execute_batch_into` → value bytes lent straight into
+//!                the reply buffer), value size 64B/1KiB/8KiB ×
+//!                hit-ratio 0.5/0.9/1.0, fleec, 4 threads. The sink
+//!                column's edge over owned is the copy+allocation the
+//!                redesign removed. Emits `BENCH_read_path.json`.
 //!
 //! Every row is also appended to `BENCH_batch_pipeline.json` (flat array
-//! of records; the alloc-path sweep writes its own file) so the perf
-//! trajectory is machine-readable across PRs.
+//! of records; the alloc-path and read-path sweeps write their own
+//! files) so the perf trajectory is machine-readable across PRs.
 
 use std::io::Write as _;
 use std::sync::Arc;
 use std::time::Instant;
 
-use fleec::cache::{build_engine, build_sharded, CacheConfig, ENGINES};
+use fleec::cache::{build_engine, build_sharded, Cache as _, CacheConfig, ENGINES};
 use fleec::client::{Client, PipelineReply};
 use fleec::server::{Server, ServerConfig, ServerModel};
 use fleec::workload::{
@@ -228,6 +237,152 @@ fn alloc_path_sweep() {
         println!();
     }
     write_alloc_json(&records);
+}
+
+const READ_JSON_PATH: &str = "BENCH_read_path.json";
+
+/// One read-path sweep point, serialized into `BENCH_read_path.json`.
+struct ReadRec {
+    mode: &'static str,
+    value_size: usize,
+    hit_ratio: f64,
+    ops_per_s: f64,
+}
+
+fn write_read_json(records: &[ReadRec]) {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"section\":\"read_path\",\"engine\":\"fleec\",\"mode\":\"{}\",\"value_size\":{},\"hit_ratio\":{},\"ops_per_s\":{:.1}}}{}\n",
+            r.mode,
+            r.value_size,
+            r.hit_ratio,
+            r.ops_per_s,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    match std::fs::File::create(READ_JSON_PATH).and_then(|mut f| f.write_all(out.as_bytes())) {
+        Ok(()) => println!("wrote {} records to {READ_JSON_PATH}", records.len()),
+        Err(e) => eprintln!("!! could not write {READ_JSON_PATH}: {e}"),
+    }
+}
+
+/// A reply-rendering [`fleec::cache::BatchSink`]: value bytes go
+/// engine→reply buffer in one copy, exactly what the server's emitter
+/// does with the connection outbuf.
+struct WireSink<'a> {
+    out: &'a mut Vec<u8>,
+}
+
+impl fleec::cache::BatchSink for WireSink<'_> {
+    fn value(&mut self, _idx: usize, key: &[u8], flags: u32, _cas: u64, data: &[u8]) {
+        fleec::proto::write_value(self.out, key, flags, data, None);
+    }
+    fn miss(&mut self, _idx: usize) {}
+    fn store(&mut self, _idx: usize, _outcome: fleec::cache::StoreOutcome) {}
+    fn deleted(&mut self, _idx: usize, _existed: bool) {}
+    fn counter(&mut self, _idx: usize, _value: Option<u64>) {}
+    fn touched(&mut self, _idx: usize, _existed: bool) {}
+}
+
+/// The read-side memory-path sweep: GET-only 64-deep batches rendered to
+/// wire bytes, owned tier vs sink tier. Hit ratio is steered by mixing
+/// prefilled keys with absent ones; the reply buffer is recycled across
+/// batches so the sink column measures the engine+render path, not
+/// buffer growth.
+fn read_path_sweep() {
+    const SIZES: [usize; 3] = [64, 1024, 8192];
+    const HIT_RATIOS: [f64; 3] = [0.5, 0.9, 1.0];
+    const DEPTH: usize = 64;
+    const CATALOG: u64 = 4096;
+    const THREADS: u64 = 4;
+    const OPS_PER_THREAD: u64 = 100_000;
+    println!("== read-path: owned vs sink x value size x hit ratio (fleec) ======");
+    println!(
+        "{:>6} {:>7} {:>5} {:>12}",
+        "mode", "vsize", "hit", "ops/s"
+    );
+    let mut records: Vec<ReadRec> = Vec::new();
+    for &vsize in &SIZES {
+        for &hit_ratio in &HIT_RATIOS {
+            for mode in ["owned", "sink"] {
+                let cache = build_engine(
+                    "fleec",
+                    CacheConfig {
+                        mem_limit: 256 << 20,
+                        ..CacheConfig::default()
+                    },
+                )
+                .unwrap();
+                let template = vec![0x5Au8; vsize];
+                for id in 0..CATALOG {
+                    cache.set(format!("rg-{id}").as_bytes(), &template, 0, 0);
+                }
+                let t0 = Instant::now();
+                std::thread::scope(|s| {
+                    for t in 0..THREADS {
+                        let cache = &cache;
+                        s.spawn(move || {
+                            let mut rng = fleec::sync::Xoshiro256::seeded(0x8EAD ^ t);
+                            let hit_keys: Vec<Vec<u8>> = (0..CATALOG)
+                                .map(|id| format!("rg-{id}").into_bytes())
+                                .collect();
+                            let miss_keys: Vec<Vec<u8>> = (0..CATALOG)
+                                .map(|id| format!("xx-{id}").into_bytes())
+                                .collect();
+                            let mut reply = Vec::with_capacity(DEPTH * (vsize + 64));
+                            let mut done = 0u64;
+                            while done < OPS_PER_THREAD {
+                                let mut ops: Vec<fleec::cache::Op<'_>> =
+                                    Vec::with_capacity(DEPTH);
+                                for _ in 0..DEPTH {
+                                    let id = rng.next_below(CATALOG) as usize;
+                                    let key = if rng.chance(hit_ratio) {
+                                        hit_keys[id].as_slice()
+                                    } else {
+                                        miss_keys[id].as_slice()
+                                    };
+                                    ops.push(fleec::cache::Op::Get { key });
+                                }
+                                reply.clear();
+                                if mode == "owned" {
+                                    let results = cache.execute_batch(&ops);
+                                    for (op, r) in ops.iter().zip(&results) {
+                                        if let fleec::cache::OpResult::Value(Some(g)) = r {
+                                            fleec::proto::write_value(
+                                                &mut reply,
+                                                op.key(),
+                                                g.flags,
+                                                &g.data,
+                                                None,
+                                            );
+                                        }
+                                    }
+                                } else {
+                                    let mut sink = WireSink { out: &mut reply };
+                                    cache.execute_batch_into(&ops, &mut sink);
+                                }
+                                std::hint::black_box(reply.len());
+                                done += DEPTH as u64;
+                            }
+                        });
+                    }
+                });
+                let total = THREADS * OPS_PER_THREAD;
+                let tput = total as f64 / t0.elapsed().as_secs_f64();
+                println!("{:>6} {:>7} {:>5.2} {:>12.0}", mode, vsize, hit_ratio, tput);
+                records.push(ReadRec {
+                    mode,
+                    value_size: vsize,
+                    hit_ratio,
+                    ops_per_s: tput,
+                });
+            }
+        }
+        println!();
+    }
+    write_read_json(&records);
 }
 
 fn main() {
@@ -468,4 +623,7 @@ fn main() {
 
     println!();
     alloc_path_sweep();
+
+    println!();
+    read_path_sweep();
 }

@@ -18,7 +18,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use fleec::cache::{build_engine, CacheConfig};
+use fleec::cache::{build_engine, Cache as _, CacheConfig};
 use fleec::ebr::Collector;
 use fleec::lockfree::{HarrisList, TaggedStack};
 use fleec::slab::{Slab, SlabConfig};

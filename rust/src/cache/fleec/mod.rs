@@ -22,7 +22,7 @@ use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, 
 use std::sync::Arc;
 
 use crate::cache::{
-    deadline_from_exptime, hash_key, is_expired, Cache, CacheConfig, GetResult, Op, OpResult,
+    deadline_from_exptime, hash_key, is_expired, BatchSink, Cache, CacheConfig, GetResult, Op,
     StatsSnapshot, StoreOutcome, MAX_KEY_LEN,
 };
 use crate::ebr::{Collector, Guard};
@@ -782,8 +782,24 @@ impl FleecCache {
 
     /// Guard-passing lookup core (metrics-free): the body of [`Cache::get`]
     /// minus pinning and counting, shared by the single-key path and the
-    /// batched fast path.
-    fn get_in(&self, key: &[u8], hash: u64, guard: &Guard) -> Option<GetResult> {
+    /// batched fast path. Returns the hit's `(flags, cas, data)` with the
+    /// value bytes **borrowed at the guard's lifetime** — zero copy.
+    ///
+    /// SOUNDNESS of the `'g` borrow: the returned slice points into the
+    /// item's slab chunk. Every path that unpublishes a live item —
+    /// overwrite ([`FleecCache::store_prealloc`]), delete, eviction,
+    /// expiry, migration swap-out and `flush_all` — retires it through
+    /// [`Item::retire`], i.e. through the EBR collector; nothing frees a
+    /// *published* item's chunk directly. A retired item's chunk is only
+    /// reused after a grace period no pinned guard straddles, so while
+    /// `guard` stays pinned the bytes cannot be freed or recycled, no
+    /// matter what concurrent writers do to the key. (Direct
+    /// `slab.free` calls exist only for items that were never published:
+    /// failed-store leftovers and lost staged-RMW speculations.) This is
+    /// what lets the batched read path lend these slices across the API
+    /// boundary ([`crate::cache::BatchSink::value`]) for the remainder
+    /// of the batch.
+    fn get_view<'g>(&self, key: &[u8], hash: u64, guard: &'g Guard) -> Option<(u32, u64, &'g [u8])> {
         let mut t = self.root(guard);
         loop {
             match search(t, hash, key, false, guard) {
@@ -797,14 +813,9 @@ impl FleecCache {
                                 self.expire_node(node, w, item, guard);
                                 return None;
                             }
-                            let data = unsafe { Item::data(item) }.to_vec();
-                            let result = GetResult {
-                                flags: hdr.flags,
-                                cas: hdr.cas,
-                                data,
-                            };
+                            let data: &'g [u8] = unsafe { Item::data(item) };
                             self.touch_clock(t, hash);
-                            return Some(result);
+                            return Some((hdr.flags, hdr.cas, data));
                         }
                         ItemState::Tomb => return None,
                         ItemState::Moved => {
@@ -826,6 +837,15 @@ impl FleecCache {
                 Find::Absent { .. } | Find::Frozen => return None,
             }
         }
+    }
+
+    /// Owning wrapper over [`FleecCache::get_view`].
+    fn get_in(&self, key: &[u8], hash: u64, guard: &Guard) -> Option<GetResult> {
+        self.get_view(key, hash, guard).map(|(flags, cas, data)| GetResult {
+            data: data.to_vec(),
+            flags,
+            cas,
+        })
     }
 
     /// Guard-passing delete core (metrics-free); see [`Cache::delete`].
@@ -934,13 +954,20 @@ impl Cache for FleecCache {
         "fleec"
     }
 
-    /// The batched fast path: the whole batch crosses the engine once.
+    /// The batched fast path: the whole batch crosses the engine once,
+    /// results stream into `sink`, in batch order.
     ///
     /// * **One EBR guard** is pinned for the execution of the entire
-    ///   batch (the default impl pins once per op); ops that pin
+    ///   batch (a sequential run pins once per op); ops that pin
     ///   internally nest re-entrantly at zero cost. Batches containing
     ///   RMW ops pin one *additional* short-lived guard up front (phase
     ///   A0 below) — never more than two top-level pins per batch.
+    /// * **GET hits are delivered zero-copy**: [`BatchSink::value`] gets
+    ///   the item's slab bytes directly ([`FleecCache::get_view`]). The
+    ///   batch guard keeps every lent slice stable until the batch
+    ///   returns — overwrites and evictions only retire items through
+    ///   EBR — so the engine never materializes an owned value on the
+    ///   read path.
     /// * Keys are **pre-hashed** up front and the bucket heads touched in
     ///   ascending bucket order, so execution finds the hot cache lines
     ///   resident.
@@ -971,9 +998,9 @@ impl Cache for FleecCache {
     /// batch's reads run, so eviction victims and `OutOfMemory` outcomes
     /// may differ from a sequential run. (Failed allocations consume no
     /// CAS token on either path — both stamp at install time.)
-    fn execute_batch(&self, ops: &[Op<'_>]) -> Vec<OpResult> {
+    fn execute_batch_into(&self, ops: &[Op<'_>], sink: &mut dyn BatchSink) {
         if ops.is_empty() {
-            return Vec::new();
+            return;
         }
         let hashes: Vec<u64> = ops.iter().map(|op| hash_key(op.key())).collect();
 
@@ -1062,9 +1089,10 @@ impl Cache for FleecCache {
         }
 
         // Phase B (pinned once): prefetch bucket heads, then execute in
-        // batch order under the single guard.
+        // batch order under the single guard, delivering straight into
+        // the sink (value bytes lent from the slab — the guard keeps
+        // them stable for the rest of the batch).
         let (mut gets, mut hits, mut misses, mut deletes) = (0u64, 0u64, 0u64, 0u64);
-        let mut results = Vec::with_capacity(ops.len());
         {
             let guard = self.collector.pin();
             // Touch every bucket head in ascending bucket order (grouped
@@ -1082,96 +1110,109 @@ impl Cache for FleecCache {
             }
             for (i, op) in ops.iter().enumerate() {
                 let hash = hashes[i];
-                let r = match *op {
+                match *op {
                     Op::Get { key } => {
                         gets += 1;
-                        let v = self.get_in(key, hash, &guard);
-                        if v.is_some() {
-                            hits += 1;
-                        } else {
-                            misses += 1;
+                        match self.get_view(key, hash, &guard) {
+                            Some((flags, cas, data)) => {
+                                hits += 1;
+                                sink.value(i, key, flags, cas, data);
+                            }
+                            None => {
+                                misses += 1;
+                                sink.miss(i);
+                            }
                         }
-                        OpResult::Value(v)
                     }
-                    Op::Set { key, .. } => {
-                        OpResult::Store(self.finish_staged(key, hash, staged[i], StoreMode::Set, &guard))
-                    }
-                    Op::Add { key, .. } => {
-                        OpResult::Store(self.finish_staged(key, hash, staged[i], StoreMode::Add, &guard))
-                    }
-                    Op::Replace { key, .. } => OpResult::Store(self.finish_staged(
-                        key,
-                        hash,
-                        staged[i],
-                        StoreMode::Replace,
-                        &guard,
-                    )),
-                    Op::CasOp { key, cas, .. } => OpResult::Store(self.finish_staged(
-                        key,
-                        hash,
-                        staged[i],
-                        StoreMode::Cas(cas),
-                        &guard,
-                    )),
+                    Op::Set { key, .. } => sink.store(
+                        i,
+                        self.finish_staged(key, hash, staged[i], StoreMode::Set, &guard),
+                    ),
+                    Op::Add { key, .. } => sink.store(
+                        i,
+                        self.finish_staged(key, hash, staged[i], StoreMode::Add, &guard),
+                    ),
+                    Op::Replace { key, .. } => sink.store(
+                        i,
+                        self.finish_staged(key, hash, staged[i], StoreMode::Replace, &guard),
+                    ),
+                    Op::CasOp { key, cas, .. } => sink.store(
+                        i,
+                        self.finish_staged(key, hash, staged[i], StoreMode::Cas(cas), &guard),
+                    ),
                     Op::Delete { key } => {
                         deletes += 1;
-                        OpResult::Deleted(self.delete_in(key, hash, &guard))
+                        sink.deleted(i, self.delete_in(key, hash, &guard));
                     }
                     // RMW ops: install the phase-A staged replacement
                     // (token-guarded); dependent/conflicted ops rerun the
                     // classic loop under the outer guard (re-entrant pin).
-                    Op::Append { key, suffix } => OpResult::Store(self.finish_staged_rmw(
-                        key,
-                        hash,
-                        staged[i],
-                        &guard,
-                        |_| StoreOutcome::Stored,
-                        StoreOutcome::NotStored,
-                        |e| e,
-                        || self.append(key, suffix),
-                    )),
-                    Op::Prepend { key, prefix } => OpResult::Store(self.finish_staged_rmw(
-                        key,
-                        hash,
-                        staged[i],
-                        &guard,
-                        |_| StoreOutcome::Stored,
-                        StoreOutcome::NotStored,
-                        |e| e,
-                        || self.prepend(key, prefix),
-                    )),
-                    Op::Incr { key, delta } => OpResult::Counter(self.finish_staged_rmw(
-                        key,
-                        hash,
-                        staged[i],
-                        &guard,
-                        |counter| counter,
-                        None,
-                        |_| None,
-                        || self.incr(key, delta),
-                    )),
-                    Op::Decr { key, delta } => OpResult::Counter(self.finish_staged_rmw(
-                        key,
-                        hash,
-                        staged[i],
-                        &guard,
-                        |counter| counter,
-                        None,
-                        |_| None,
-                        || self.decr(key, delta),
-                    )),
-                    Op::Touch { key, exptime } => OpResult::Touched(self.finish_staged_rmw(
-                        key,
-                        hash,
-                        staged[i],
-                        &guard,
-                        |_| true,
-                        false,
-                        |_| false,
-                        || self.touch(key, exptime),
-                    )),
-                };
-                results.push(r);
+                    Op::Append { key, suffix } => sink.store(
+                        i,
+                        self.finish_staged_rmw(
+                            key,
+                            hash,
+                            staged[i],
+                            &guard,
+                            |_| StoreOutcome::Stored,
+                            StoreOutcome::NotStored,
+                            |e| e,
+                            || self.append(key, suffix),
+                        ),
+                    ),
+                    Op::Prepend { key, prefix } => sink.store(
+                        i,
+                        self.finish_staged_rmw(
+                            key,
+                            hash,
+                            staged[i],
+                            &guard,
+                            |_| StoreOutcome::Stored,
+                            StoreOutcome::NotStored,
+                            |e| e,
+                            || self.prepend(key, prefix),
+                        ),
+                    ),
+                    Op::Incr { key, delta } => sink.counter(
+                        i,
+                        self.finish_staged_rmw(
+                            key,
+                            hash,
+                            staged[i],
+                            &guard,
+                            |counter| counter,
+                            None,
+                            |_| None,
+                            || self.incr(key, delta),
+                        ),
+                    ),
+                    Op::Decr { key, delta } => sink.counter(
+                        i,
+                        self.finish_staged_rmw(
+                            key,
+                            hash,
+                            staged[i],
+                            &guard,
+                            |counter| counter,
+                            None,
+                            |_| None,
+                            || self.decr(key, delta),
+                        ),
+                    ),
+                    Op::Touch { key, exptime } => sink.touched(
+                        i,
+                        self.finish_staged_rmw(
+                            key,
+                            hash,
+                            staged[i],
+                            &guard,
+                            |_| true,
+                            false,
+                            |_| false,
+                            || self.touch(key, exptime),
+                        ),
+                    ),
+                }
             }
         }
 
@@ -1187,7 +1228,6 @@ impl Cache for FleecCache {
         if deletes > 0 {
             self.metrics.deletes.add(deletes);
         }
-        results
     }
 
     fn get(&self, key: &[u8]) -> Option<GetResult> {
@@ -1410,7 +1450,7 @@ impl Drop for FleecCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cache::CacheConfig;
+    use crate::cache::{CacheConfig, OpResult};
 
     fn small() -> FleecCache {
         FleecCache::new(CacheConfig::small())

@@ -315,6 +315,35 @@ impl MemClockCache {
     pub fn metrics(&self) -> &EngineMetrics {
         &self.metrics
     }
+
+    /// Locked lookup core (metrics-free), shared by [`Cache::get`] and
+    /// the sink batch path: on a live hit, calls `hit` with the entry's
+    /// `(flags, cas, value)` **while the stripe lock is held** — the
+    /// borrow is only valid inside the closure — then bumps the bucket
+    /// CLOCK. Returns `None` on miss/expiry.
+    fn get_with<R>(&self, key: &[u8], hit: impl FnOnce(u32, u64, &[u8]) -> R) -> Option<R> {
+        let hash = hash_key(key);
+        let _s = self.stripe_of(hash).lock().unwrap();
+        unsafe {
+            match self.find(hash, key) {
+                Some((idx, pos)) => {
+                    let st = self.state();
+                    if is_expired(st.buckets[idx][pos].deadline) {
+                        let _ = self.remove_at(idx, pos);
+                        self.metrics.expired.inc();
+                        None
+                    } else {
+                        let e = &st.buckets[idx][pos];
+                        let r = hit(e.flags, e.cas, &e.value);
+                        // No LRU lock: recency is one atomic store.
+                        self.touch_clock(idx);
+                        Some(r)
+                    }
+                }
+                None => None,
+            }
+        }
+    }
 }
 
 impl Cache for MemClockCache {
@@ -322,35 +351,38 @@ impl Cache for MemClockCache {
         "memclock"
     }
 
+    /// Sequential per-op execution (batching buys a blocking engine
+    /// nothing), except that GET hits lend the sink the entry's bytes
+    /// under the stripe lock ([`MemClockCache::get_with`]) instead of
+    /// cloning the value — the one copy is sink-side, straight to its
+    /// destination.
+    fn execute_batch_into(&self, ops: &[crate::cache::Op<'_>], sink: &mut dyn crate::cache::BatchSink) {
+        for (i, op) in ops.iter().enumerate() {
+            match *op {
+                crate::cache::Op::Get { key } => {
+                    self.metrics.gets.inc();
+                    let hit = self
+                        .get_with(key, |flags, cas, data| sink.value(i, key, flags, cas, data))
+                        .is_some();
+                    if hit {
+                        self.metrics.hits.inc();
+                    } else {
+                        self.metrics.misses.inc();
+                        sink.miss(i);
+                    }
+                }
+                _ => crate::cache::op::forward_one(self, i, op, sink),
+            }
+        }
+    }
+
     fn get(&self, key: &[u8]) -> Option<GetResult> {
         self.metrics.gets.inc();
-        let hash = hash_key(key);
-        let result = {
-            let _s = self.stripe_of(hash).lock().unwrap();
-            unsafe {
-                match self.find(hash, key) {
-                    Some((idx, pos)) => {
-                        let st = self.state();
-                        if is_expired(st.buckets[idx][pos].deadline) {
-                            let _ = self.remove_at(idx, pos);
-                            self.metrics.expired.inc();
-                            None
-                        } else {
-                            let e = &st.buckets[idx][pos];
-                            let r = GetResult {
-                                data: e.value.clone(),
-                                flags: e.flags,
-                                cas: e.cas,
-                            };
-                            // No LRU lock: recency is one atomic store.
-                            self.touch_clock(idx);
-                            Some(r)
-                        }
-                    }
-                    None => None,
-                }
-            }
-        };
+        let result = self.get_with(key, |flags, cas, data| GetResult {
+            data: data.to_vec(),
+            flags,
+            cas,
+        });
         if result.is_some() {
             self.metrics.hits.inc();
         } else {

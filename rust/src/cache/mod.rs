@@ -15,7 +15,7 @@ pub mod memclock;
 pub mod op;
 pub mod sharded;
 
-pub use op::{Op, OpResult};
+pub use op::{BatchSink, CollectSink, Op, OpResult};
 
 use std::sync::Arc;
 
@@ -119,21 +119,27 @@ impl StatsSnapshot {
 
 /// The engine-neutral cache interface (Memcached text-protocol semantics).
 ///
-/// The API is two-tier: the single-key methods below are the convenience
-/// tier, and [`Cache::execute_batch`] is the batched core the serving
-/// plane uses. The default `execute_batch` delegates to the single-key
-/// methods (one trait crossing per op), so engines only override it when
-/// they can amortize per-op synchronization — FLeeC pins one EBR guard
-/// per batch instead of one per op.
+/// The API is two-tier, **sink-first**: the single-key methods below are
+/// the convenience tier; the batched core the serving plane uses is
+/// [`Cache::execute_batch_into`], which streams one result per op into a
+/// caller-supplied [`BatchSink`] — GET hits hand the sink the item's
+/// bytes *borrowed from the engine* (FLeeC: slab bytes kept alive by the
+/// pinned batch guard; blocking engines: entry bytes under the held
+/// stripe lock), so a consumer can move value bytes slab→destination in
+/// one copy with no intermediate allocation. [`Cache::execute_batch`] is
+/// the owned-results convenience wrapper over a [`CollectSink`].
 pub trait Cache: Send + Sync {
     /// Engine identifier used by the CLI / benches.
     fn engine_name(&self) -> &'static str;
 
-    /// Execute a batch of typed commands, returning one result per op in
-    /// input order. Must be indistinguishable from running the ops
-    /// sequentially through the single-key methods (same results, state
-    /// and `cas`-token sequence); engines override it only to cut
-    /// per-operation synchronization cost.
+    /// Execute a batch of typed commands, delivering exactly one result
+    /// per op into `sink` (indices are batch positions; delivery order is
+    /// unspecified — see [`BatchSink`]). Must be indistinguishable from
+    /// running the ops sequentially through the single-key methods (same
+    /// results, state and `cas`-token sequence); engines implement it
+    /// natively to cut per-operation synchronization cost and to lend
+    /// value bytes without copying ([`op::execute_sequential_into`] is
+    /// the reference body, one trait crossing per op).
     ///
     /// Caveat at the memory limit: a batching engine may pre-allocate a
     /// batch's storage up front and hold synchronization state across
@@ -141,8 +147,15 @@ pub trait Cache: Send + Sync {
     /// `OutOfMemory` — can differ from a sequential run under pressure.
     /// Per-op semantics (preconditions, cas gating, reply values for
     /// the state actually observed) are honored regardless.
+    fn execute_batch_into(&self, ops: &[Op<'_>], sink: &mut dyn BatchSink);
+
+    /// Owned-results convenience tier over [`Cache::execute_batch_into`]:
+    /// collect every delivery (copying value bytes) and return them
+    /// index-aligned with the input batch.
     fn execute_batch(&self, ops: &[Op<'_>]) -> Vec<OpResult> {
-        op::execute_sequential(self, ops)
+        let mut sink = CollectSink::new(ops.len());
+        self.execute_batch_into(ops, &mut sink);
+        sink.into_results()
     }
 
     /// Look up `key`; bumps recency on hit.

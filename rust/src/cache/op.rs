@@ -1,5 +1,6 @@
 //! Typed, owner-less command representation — the batched half of the
-//! two-tier cache API.
+//! two-tier cache API — and the **result sink** batch results flow
+//! through.
 //!
 //! [`Op`] is one cache command with **borrowed** keys/values (no
 //! allocation to build a batch; the server borrows straight from its read
@@ -7,16 +8,29 @@
 //! mirrors the protocol's reply space one-to-one, so a reply writer can
 //! render a result without consulting the op that produced it.
 //!
-//! [`crate::cache::Cache::execute_batch`] takes a slice of ops and returns
-//! one result per op, **in order**. The contract every engine must obey:
-//! a batch behaves exactly like issuing its ops sequentially through the
-//! single-key convenience methods — same results, same final state, same
-//! `cas`-token sequence. Batching is purely a *synchronization* optimization
-//! (the FLeeC engine pins one EBR guard for a whole batch instead of one
-//! per op), never a semantic one. `rust/tests/batch_semantics.rs` holds
-//! every engine to this equivalence. (Sole carve-out, documented on the
-//! trait: at the memory limit, eviction timing and `OutOfMemory`
-//! outcomes may differ from a sequential run.)
+//! The primary executor is
+//! [`crate::cache::Cache::execute_batch_into`]: it pushes one result per
+//! op into a caller-supplied [`BatchSink`]. A GET hit is delivered as
+//! [`BatchSink::value`] with the item's bytes **borrowed from the
+//! engine** — FLeeC hands out the slab bytes directly while its batch
+//! guard is pinned (epoch reclamation keeps the slice stable for the
+//! whole batch), the blocking engines hand out the entry's bytes while
+//! holding its stripe lock — so a sink can stream value bytes to their
+//! final destination (the server writes them straight into the
+//! connection outbuf) without the engine ever materializing an owned
+//! copy. [`crate::cache::Cache::execute_batch`] is the convenience
+//! wrapper: it runs a [`CollectSink`] and returns owned, index-aligned
+//! [`OpResult`]s.
+//!
+//! The contract every engine must obey: a batch behaves exactly like
+//! issuing its ops sequentially through the single-key convenience
+//! methods — same results, same final state, same `cas`-token sequence.
+//! Batching is purely a *synchronization* optimization (the FLeeC engine
+//! pins one EBR guard for a whole batch instead of one per op), never a
+//! semantic one. `rust/tests/batch_semantics.rs` holds every engine to
+//! this equivalence. (Sole carve-out, documented on the trait: at the
+//! memory limit, eviction timing and `OutOfMemory` outcomes may differ
+//! from a sequential run.)
 
 use super::{Cache, GetResult, StoreOutcome};
 
@@ -109,6 +123,167 @@ pub enum OpResult {
     Touched(bool),
 }
 
+/// Receiver for batch results — the zero-copy half of the batch API.
+///
+/// [`crate::cache::Cache::execute_batch_into`] calls **exactly one**
+/// method per op, passing the op's batch index. The contract, on both
+/// sides of the boundary:
+///
+/// * **Delivery order is unspecified.** Bare engines deliver in batch
+///   order, but routers ([`crate::cache::sharded::Sharded`]) deliver
+///   shard-grouped — each op's index is correct, their sequence is not.
+///   A sink that renders in batch order must reorder (see
+///   `server::batch`'s emitter, which parks out-of-order results and
+///   streams the in-order prefix straight through).
+/// * **`value`'s `data` slice is borrowed from the engine** and valid
+///   only for the duration of the call: FLeeC lends slab bytes kept
+///   alive by its pinned batch guard, the blocking engines lend entry
+///   bytes under a held lock. Copy it if you need it later; never stash
+///   the reference. (On FLeeC the bytes are in fact stable until
+///   `execute_batch_into` returns — concurrent overwrites and evictions
+///   only *retire* items through EBR, and the batch guard holds the
+///   epoch — which is what makes lending them across the API boundary
+///   sound. `rust/tests/read_path.rs` stress-tests this.)
+/// * **A sink must not call back into the cache** (single-key methods or
+///   another batch): the engine may be holding locks or an EBR guard
+///   across the call, so re-entry can deadlock or pin epochs forever.
+///   Sinks should do cheap, non-blocking work — format bytes, bump
+///   counters, copy out.
+pub trait BatchSink {
+    /// `Get` hit: header fields plus the value bytes (borrowed — see the
+    /// trait docs for the lifetime contract).
+    fn value(&mut self, idx: usize, key: &[u8], flags: u32, cas: u64, data: &[u8]);
+    /// `Get` miss.
+    fn miss(&mut self, idx: usize);
+    /// Outcome of any of the six storage commands.
+    fn store(&mut self, idx: usize, outcome: StoreOutcome);
+    /// `Delete` outcome: whether the key was present.
+    fn deleted(&mut self, idx: usize, existed: bool);
+    /// `Incr`/`Decr` outcome (`None` = missing or non-numeric).
+    fn counter(&mut self, idx: usize, value: Option<u64>);
+    /// `Touch` outcome: whether the key was present.
+    fn touched(&mut self, idx: usize, existed: bool);
+}
+
+/// The collecting sink behind the owned-results convenience tier:
+/// copies every delivery into an index-aligned `Vec<OpResult>`
+/// (tolerating out-of-order delivery from routers).
+pub struct CollectSink {
+    slots: Vec<Option<OpResult>>,
+}
+
+impl CollectSink {
+    /// A sink expecting exactly `n` deliveries (one per op).
+    pub fn new(n: usize) -> Self {
+        CollectSink {
+            slots: vec![None; n],
+        }
+    }
+
+    /// Unwrap into index-aligned results. Panics if an engine broke the
+    /// exactly-once contract and left a slot empty.
+    pub fn into_results(self) -> Vec<OpResult> {
+        self.slots
+            .into_iter()
+            .map(|r| r.expect("execute_batch_into left a result slot empty"))
+            .collect()
+    }
+
+    fn put(&mut self, idx: usize, r: OpResult) {
+        debug_assert!(self.slots[idx].is_none(), "double delivery for op {idx}");
+        self.slots[idx] = Some(r);
+    }
+}
+
+impl BatchSink for CollectSink {
+    fn value(&mut self, idx: usize, _key: &[u8], flags: u32, cas: u64, data: &[u8]) {
+        self.put(
+            idx,
+            OpResult::Value(Some(GetResult {
+                data: data.to_vec(),
+                flags,
+                cas,
+            })),
+        );
+    }
+
+    fn miss(&mut self, idx: usize) {
+        self.put(idx, OpResult::Value(None));
+    }
+
+    fn store(&mut self, idx: usize, outcome: StoreOutcome) {
+        self.put(idx, OpResult::Store(outcome));
+    }
+
+    fn deleted(&mut self, idx: usize, existed: bool) {
+        self.put(idx, OpResult::Deleted(existed));
+    }
+
+    fn counter(&mut self, idx: usize, value: Option<u64>) {
+        self.put(idx, OpResult::Counter(value));
+    }
+
+    fn touched(&mut self, idx: usize, existed: bool) {
+        self.put(idx, OpResult::Touched(existed));
+    }
+}
+
+/// Execute one op through the single-key convenience methods and deliver
+/// its result to `sink` as op `idx`. The building block engines use for
+/// ops they have no sink-native path for.
+pub fn forward_one<C: Cache + ?Sized>(cache: &C, idx: usize, op: &Op<'_>, sink: &mut dyn BatchSink) {
+    match *op {
+        Op::Get { key } => match cache.get(key) {
+            Some(r) => sink.value(idx, key, r.flags, r.cas, &r.data),
+            None => sink.miss(idx),
+        },
+        Op::Set {
+            key,
+            value,
+            flags,
+            exptime,
+        } => sink.store(idx, cache.set(key, value, flags, exptime)),
+        Op::Add {
+            key,
+            value,
+            flags,
+            exptime,
+        } => sink.store(idx, cache.add(key, value, flags, exptime)),
+        Op::Replace {
+            key,
+            value,
+            flags,
+            exptime,
+        } => sink.store(idx, cache.replace(key, value, flags, exptime)),
+        Op::Append { key, suffix } => sink.store(idx, cache.append(key, suffix)),
+        Op::Prepend { key, prefix } => sink.store(idx, cache.prepend(key, prefix)),
+        Op::CasOp {
+            key,
+            value,
+            flags,
+            exptime,
+            cas,
+        } => sink.store(idx, cache.cas(key, value, flags, exptime, cas)),
+        Op::Delete { key } => sink.deleted(idx, cache.delete(key)),
+        Op::Incr { key, delta } => sink.counter(idx, cache.incr(key, delta)),
+        Op::Decr { key, delta } => sink.counter(idx, cache.decr(key, delta)),
+        Op::Touch { key, exptime } => sink.touched(idx, cache.touch(key, exptime)),
+    }
+}
+
+/// Reference sink executor: one trait crossing per op, delivery in batch
+/// order. The body an engine without any batch-level synchronization
+/// opportunity would write.
+pub fn execute_sequential_into<C: Cache + ?Sized>(
+    cache: &C,
+    ops: &[Op<'_>],
+    sink: &mut dyn BatchSink,
+) {
+    for (idx, op) in ops.iter().enumerate() {
+        forward_one(cache, idx, op, sink);
+    }
+}
+
 /// Execute one op through the single-key convenience methods.
 pub fn execute_one<C: Cache + ?Sized>(cache: &C, op: &Op<'_>) -> OpResult {
     match *op {
@@ -147,9 +322,8 @@ pub fn execute_one<C: Cache + ?Sized>(cache: &C, op: &Op<'_>) -> OpResult {
     }
 }
 
-/// Reference batch executor: one trait crossing per op. This is the
-/// default [`Cache::execute_batch`] body, and the semantic oracle the
-/// equivalence tests compare fast paths against.
+/// Reference batch executor: one trait crossing per op, owned results.
+/// The semantic oracle the equivalence tests compare fast paths against.
 pub fn execute_sequential<C: Cache + ?Sized>(cache: &C, ops: &[Op<'_>]) -> Vec<OpResult> {
     ops.iter().map(|op| execute_one(cache, op)).collect()
 }
@@ -216,5 +390,99 @@ mod tests {
             assert_eq!(results[4], OpResult::Deleted(true), "{engine}");
             assert_eq!(results[5], OpResult::Deleted(false), "{engine}");
         }
+    }
+
+    /// A sink that records the order and shape of every delivery.
+    #[derive(Default)]
+    struct TraceSink {
+        calls: Vec<(usize, OpResult)>,
+    }
+
+    impl BatchSink for TraceSink {
+        fn value(&mut self, idx: usize, _key: &[u8], flags: u32, cas: u64, data: &[u8]) {
+            self.calls.push((
+                idx,
+                OpResult::Value(Some(GetResult {
+                    data: data.to_vec(),
+                    flags,
+                    cas,
+                })),
+            ));
+        }
+        fn miss(&mut self, idx: usize) {
+            self.calls.push((idx, OpResult::Value(None)));
+        }
+        fn store(&mut self, idx: usize, outcome: StoreOutcome) {
+            self.calls.push((idx, OpResult::Store(outcome)));
+        }
+        fn deleted(&mut self, idx: usize, existed: bool) {
+            self.calls.push((idx, OpResult::Deleted(existed)));
+        }
+        fn counter(&mut self, idx: usize, value: Option<u64>) {
+            self.calls.push((idx, OpResult::Counter(value)));
+        }
+        fn touched(&mut self, idx: usize, existed: bool) {
+            self.calls.push((idx, OpResult::Touched(existed)));
+        }
+    }
+
+    #[test]
+    fn sink_path_delivers_exactly_once_per_op_on_every_engine() {
+        for engine in crate::cache::ENGINES {
+            let cache = build_engine(engine, CacheConfig::small()).unwrap();
+            cache.set(b"n", b"5", 0, 0);
+            let ops = [
+                Op::Set {
+                    key: b"a",
+                    value: b"hello",
+                    flags: 3,
+                    exptime: 0,
+                },
+                Op::Get { key: b"a" },
+                Op::Get { key: b"missing" },
+                Op::Incr { key: b"n", delta: 2 },
+                Op::Touch { key: b"a", exptime: 60 },
+                Op::Delete { key: b"a" },
+            ];
+            let mut sink = TraceSink::default();
+            cache.execute_batch_into(&ops, &mut sink);
+            assert_eq!(sink.calls.len(), ops.len(), "{engine}: one call per op");
+            let mut seen = vec![false; ops.len()];
+            for &(idx, _) in &sink.calls {
+                assert!(!seen[idx], "{engine}: double delivery for op {idx}");
+                seen[idx] = true;
+            }
+            // Sink deliveries must agree with the owned convenience tier
+            // run on a fresh identical cache.
+            let oracle = build_engine(engine, CacheConfig::small()).unwrap();
+            oracle.set(b"n", b"5", 0, 0);
+            let owned = oracle.execute_batch(&ops);
+            for &(idx, ref r) in &sink.calls {
+                assert_eq!(r, &owned[idx], "{engine}: op {idx}");
+            }
+            match &sink.calls.iter().find(|(i, _)| *i == 1).unwrap().1 {
+                OpResult::Value(Some(r)) => {
+                    assert_eq!(r.data, b"hello", "{engine}");
+                    assert_eq!(r.flags, 3, "{engine}");
+                }
+                other => panic!("{engine}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn collect_sink_tolerates_out_of_order_delivery() {
+        let mut sink = CollectSink::new(3);
+        sink.counter(2, Some(7));
+        sink.miss(0);
+        sink.store(1, StoreOutcome::Stored);
+        assert_eq!(
+            sink.into_results(),
+            vec![
+                OpResult::Value(None),
+                OpResult::Store(StoreOutcome::Stored),
+                OpResult::Counter(Some(7)),
+            ]
+        );
     }
 }

@@ -34,8 +34,44 @@ use std::sync::Mutex;
 use once_cell::sync::Lazy;
 
 use crate::cache::{
-    hash_key, Cache, CacheConfig, GetResult, Op, OpResult, StatsSnapshot, StoreOutcome,
+    hash_key, BatchSink, Cache, CacheConfig, GetResult, Op, StatsSnapshot, StoreOutcome,
 };
+
+/// The index-remapping sink adapter: wraps the caller's sink for one
+/// shard's sub-batch, translating the shard's sub-batch indices back to
+/// original batch positions (`map[sub_idx]`). Borrowed value bytes pass
+/// straight through — the shard's guard/lock is still held across the
+/// forwarded call, so the lending contract survives the hop.
+struct RemapSink<'a, 'b> {
+    inner: &'a mut dyn BatchSink,
+    map: &'b [u32],
+}
+
+impl BatchSink for RemapSink<'_, '_> {
+    fn value(&mut self, idx: usize, key: &[u8], flags: u32, cas: u64, data: &[u8]) {
+        self.inner.value(self.map[idx] as usize, key, flags, cas, data);
+    }
+
+    fn miss(&mut self, idx: usize) {
+        self.inner.miss(self.map[idx] as usize);
+    }
+
+    fn store(&mut self, idx: usize, outcome: StoreOutcome) {
+        self.inner.store(self.map[idx] as usize, outcome);
+    }
+
+    fn deleted(&mut self, idx: usize, existed: bool) {
+        self.inner.deleted(self.map[idx] as usize, existed);
+    }
+
+    fn counter(&mut self, idx: usize, value: Option<u64>) {
+        self.inner.counter(self.map[idx] as usize, value);
+    }
+
+    fn touched(&mut self, idx: usize, existed: bool) {
+        self.inner.touched(self.map[idx] as usize, existed);
+    }
+}
 
 /// An N-shard router over any [`Cache`] engine.
 pub struct Sharded<C: Cache> {
@@ -109,16 +145,23 @@ impl<C: Cache> Cache for Sharded<C> {
     }
 
     /// Split the batch into per-shard sub-batches (preserving each key's
-    /// op order), execute one sub-batch per shard, and re-interleave the
-    /// results into original batch order. Each sub-batch crosses its
-    /// shard through that engine's own `execute_batch`, so FLeeC shards
-    /// still pin one EBR guard per sub-batch.
-    fn execute_batch(&self, ops: &[Op<'_>]) -> Vec<OpResult> {
+    /// op order) and execute one sub-batch per shard, each through that
+    /// engine's own `execute_batch_into` — FLeeC shards still pin one
+    /// EBR guard per sub-batch. Results flow to the caller's sink
+    /// through an **index-remapping adapter** ([`RemapSink`]) that
+    /// translates sub-batch positions back to original batch indices,
+    /// so re-interleaving materializes nothing: the router adds no
+    /// per-shard result vectors and no value copies, and a zero-copy
+    /// engine hit stays zero-copy through the router. Consequently the
+    /// sink sees deliveries **shard-grouped, not in batch order** — the
+    /// delivery-order freedom [`crate::cache::BatchSink`] documents
+    /// exists exactly for this path.
+    fn execute_batch_into(&self, ops: &[Op<'_>], sink: &mut dyn crate::cache::BatchSink) {
         if ops.is_empty() {
-            return Vec::new();
+            return;
         }
         if self.shards.len() == 1 {
-            return self.shards[0].execute_batch(ops);
+            return self.shards[0].execute_batch_into(ops, sink);
         }
         // Counting-sort partition into one flat buffer: allocation count
         // is independent of the shard count (this sits on the
@@ -148,23 +191,21 @@ impl<C: Cache> Cache for Sharded<C> {
             flat_ops[pos] = *op;
             flat_idx[pos] = i as u32;
         }
-        // Execute per-shard slices and re-interleave.
-        let mut results: Vec<Option<OpResult>> = vec![None; ops.len()];
+        // Execute per-shard slices; the remapping adapter forwards each
+        // delivery to the caller's sink under its original index.
         for (s, shard) in self.shards.iter().enumerate() {
             let (lo, hi) = (starts[s] as usize, starts[s + 1] as usize);
             if lo == hi {
                 continue;
             }
-            let rs = shard.execute_batch(&flat_ops[lo..hi]);
-            debug_assert_eq!(rs.len(), hi - lo, "shard broke the batch contract");
-            for (j, r) in rs.into_iter().enumerate() {
-                results[flat_idx[lo + j] as usize] = Some(r);
-            }
+            // `&mut *sink`: reborrow (a struct literal would move the
+            // `&mut dyn` out of `sink` on the first shard).
+            let mut remap = RemapSink {
+                inner: &mut *sink,
+                map: &flat_idx[lo..hi],
+            };
+            shard.execute_batch_into(&flat_ops[lo..hi], &mut remap);
         }
-        results
-            .into_iter()
-            .map(|r| r.expect("sharded batch left a result slot empty"))
-            .collect()
     }
 
     fn get(&self, key: &[u8]) -> Option<GetResult> {
@@ -283,6 +324,7 @@ fn interned_name(inner: &str, n: usize) -> &'static str {
 mod tests {
     use super::*;
     use crate::cache::fleec::FleecCache;
+    use crate::cache::OpResult;
 
     fn router(n: usize) -> Sharded<FleecCache> {
         Sharded::from_fn(n, CacheConfig::small(), |_, cfg| FleecCache::new(cfg))
@@ -382,5 +424,69 @@ mod tests {
                 other => panic!("slot {i}: {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn sink_batch_delivers_original_indices_shard_grouped() {
+        struct Recorder {
+            deliveries: Vec<(usize, Vec<u8>)>,
+            outcomes: Vec<(usize, StoreOutcome)>,
+        }
+        impl BatchSink for Recorder {
+            fn value(&mut self, idx: usize, _key: &[u8], _flags: u32, _cas: u64, data: &[u8]) {
+                self.deliveries.push((idx, data.to_vec()));
+            }
+            fn miss(&mut self, idx: usize) {
+                self.deliveries.push((idx, Vec::new()));
+            }
+            fn store(&mut self, idx: usize, outcome: StoreOutcome) {
+                self.outcomes.push((idx, outcome));
+            }
+            fn deleted(&mut self, _idx: usize, _existed: bool) {}
+            fn counter(&mut self, _idx: usize, _value: Option<u64>) {}
+            fn touched(&mut self, _idx: usize, _existed: bool) {}
+        }
+
+        let r = router(4);
+        let keys: Vec<String> = (0..32).map(|i| format!("remap-{i}")).collect();
+        let mut ops = Vec::new();
+        for key in &keys {
+            ops.push(Op::Set {
+                key: key.as_bytes(),
+                value: key.as_bytes(),
+                flags: 0,
+                exptime: 0,
+            });
+        }
+        for key in &keys {
+            ops.push(Op::Get { key: key.as_bytes() });
+        }
+        let mut sink = Recorder {
+            deliveries: Vec::new(),
+            outcomes: Vec::new(),
+        };
+        r.execute_batch_into(&ops, &mut sink);
+        // Exactly one delivery per op, each under its ORIGINAL index with
+        // the right payload, regardless of shard-grouped arrival order.
+        assert_eq!(sink.outcomes.len(), keys.len());
+        assert_eq!(sink.deliveries.len(), keys.len());
+        let mut seen = vec![false; ops.len()];
+        for &(idx, outcome) in &sink.outcomes {
+            assert!(idx < keys.len() && !seen[idx], "bad store idx {idx}");
+            seen[idx] = true;
+            assert_eq!(outcome, StoreOutcome::Stored);
+        }
+        for (idx, data) in &sink.deliveries {
+            assert!(*idx >= keys.len() && !seen[*idx], "bad get idx {idx}");
+            seen[*idx] = true;
+            assert_eq!(data, keys[idx - keys.len()].as_bytes(), "idx {idx}");
+        }
+        assert!(seen.iter().all(|&s| s), "every op delivered exactly once");
+        // With >1 shard and 32 spread-out keys, delivery cannot be in
+        // batch order (shard 0's sub-batch drains before shard 1's).
+        let order: Vec<usize> = sink.deliveries.iter().map(|(i, _)| *i).collect();
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_ne!(order, sorted, "expected shard-grouped (non-batch) order");
     }
 }

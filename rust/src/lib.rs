@@ -25,19 +25,38 @@
 //! | [`cache::memclock`]  | striped locks | per-bucket CLOCK | stop-the-world |
 //! | [`cache::fleec`]     | lock-free (Harris) | embedded lock-free CLOCK | non-blocking |
 //!
-//! ## The two-tier cache API
+//! ## The two-tier cache API: sink-first
 //!
 //! [`cache::Cache`] exposes two tiers. The single-key methods
-//! (`get`/`set`/…) are the convenience tier. Underneath sits the batched
-//! core: [`cache::Op`] is a typed, owner-less command (keys/values are
-//! borrowed slices) and [`cache::Cache::execute_batch`] runs a whole
-//! slice of them in one engine crossing, returning index-aligned
-//! [`cache::OpResult`]s. The default implementation delegates to the
-//! single-key tier, so engines are batch-capable by construction; FLeeC
-//! overrides it with a real fast path — **one EBR guard pinned per
-//! batch** (plus one short pre-read guard when the batch carries RMW
-//! ops), keys pre-hashed and bucket heads prefetched up front, storage
-//! items pre-allocated outside the guard, and `append`/`prepend`/`incr`/
+//! (`get`/`set`/…) are the convenience tier. The primary tier is the
+//! batched, **sink-scoped** core: [`cache::Op`] is a typed, owner-less
+//! command (keys/values are borrowed slices) and
+//! [`cache::Cache::execute_batch_into`] runs a whole slice of them in
+//! one engine crossing, streaming one result per op into a
+//! caller-supplied [`cache::BatchSink`]. A GET hit is delivered as
+//! `sink.value(idx, key, flags, cas, bytes)` with `bytes` **borrowed
+//! from the engine** — the read path's zero-copy seam.
+//! [`cache::Cache::execute_batch`] remains as the owned convenience
+//! wrapper (a collecting sink returning index-aligned
+//! [`cache::OpResult`]s).
+//!
+//! The guard-lifetime contract a [`cache::BatchSink`] implementor must
+//! respect: the lent `bytes` are valid only during the `value` call
+//! (copy to retain), delivery order is unspecified (routers deliver
+//! shard-grouped; indices are always correct), and a sink must never
+//! call back into the cache — the engine may be holding locks or an EBR
+//! guard across the call. What the engine promises in return: FLeeC
+//! lends the item's slab bytes *while its batch guard is pinned*, and
+//! since overwrites/evictions/deletes only retire items through epoch
+//! reclamation, the slice stays byte-stable until `execute_batch_into`
+//! returns no matter what concurrent writers do
+//! (`rust/tests/read_path.rs` stress-tests exactly this); the blocking
+//! engines lend entry bytes under the held stripe lock.
+//!
+//! FLeeC's batched fast path: **one EBR guard pinned per batch** (plus
+//! one short pre-read guard when the batch carries RMW ops), keys
+//! pre-hashed and bucket heads prefetched up front, storage items
+//! pre-allocated outside the guard, and `append`/`prepend`/`incr`/
 //! `decr`/`touch` **staged like plain stores**: values pre-read, the
 //! replacement items allocated unpinned, then installed token-guarded at
 //! their turn (same-key in-batch dependencies rerun the classic loop in
@@ -80,11 +99,16 @@
 //! The serving plane ([`proto`], [`server`], [`client`]) makes FLeeC a
 //! plug-in Memcached replacement, built around that batched core: the
 //! protocol pump (`server::batch::drain`) turns every complete command in
-//! a connection's read buffer into rounds of one `execute_batch` crossing
-//! each (`stats`/`flush_all` act as barriers), reusing per-connection
-//! op/action arenas plus the multi-key `get` scratch fed to
-//! `proto::parse_into`, so the read path allocates nothing once a
-//! connection is warm.
+//! a connection's read buffer into rounds of one `execute_batch_into`
+//! crossing each (`stats`/`flush_all` act as barriers), and the sink it
+//! passes **is the reply emitter** — results stream out of the engine
+//! straight into the connection outbuf, so a GET hit's bytes go
+//! slab→outbuf in one `memcpy` with zero per-hit allocation
+//! (`rust/tests/read_path_alloc.rs` proves it with a counting
+//! allocator; out-of-order shard-router deliveries park in recycled
+//! buffers until their wire turn). Per-connection op/action arenas plus
+//! the multi-key `get` scratch fed to `proto::parse_into` make the rest
+//! of the path allocation-free once a connection is warm.
 //! Two front-ends run that pump ([`server::ServerModel`]):
 //!
 //! * **`reactor`** (default on Unix): N event-loop threads, each owning

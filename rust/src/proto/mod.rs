@@ -244,19 +244,51 @@ pub fn parse_into<'a>(buf: &'a [u8], key_scratch: &mut Vec<&'a [u8]>) -> Parsed<
     }
 }
 
-/// Append a `VALUE` reply for one hit.
-pub fn write_value(out: &mut Vec<u8>, key: &[u8], flags: u32, data: &[u8], cas: Option<u64>) {
+/// Append a decimal `u64` without allocating: formatted into a stack
+/// buffer, then copied. The emit path renders every numeric wire field
+/// through this (VALUE headers, counter replies), keeping reply
+/// rendering allocation-free.
+pub fn write_uint(out: &mut Vec<u8>, mut v: u64) {
+    let mut buf = [0u8; 20]; // u64::MAX is 20 digits
+    let mut i = buf.len();
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    out.extend_from_slice(&buf[i..]);
+}
+
+/// Append a `VALUE` reply header (`VALUE <key> <flags> <len>[ <cas>]`)
+/// without the data block. Allocation-free; the sink emit path follows
+/// it with the borrowed value bytes and [`write_data_crlf`].
+pub fn write_value_header(out: &mut Vec<u8>, key: &[u8], flags: u32, len: usize, cas: Option<u64>) {
     out.extend_from_slice(b"VALUE ");
     out.extend_from_slice(key);
-    let mut header = String::with_capacity(24);
-    let _ = write!(header, " {} {}", flags, data.len());
+    out.push(b' ');
+    write_uint(out, flags as u64);
+    out.push(b' ');
+    write_uint(out, len as u64);
     if let Some(cas) = cas {
-        let _ = write!(header, " {}", cas);
+        out.push(b' ');
+        write_uint(out, cas);
     }
-    out.extend_from_slice(header.as_bytes());
     out.extend_from_slice(b"\r\n");
+}
+
+/// Append a data block's bytes plus the closing CRLF.
+pub fn write_data_crlf(out: &mut Vec<u8>, data: &[u8]) {
     out.extend_from_slice(data);
     out.extend_from_slice(b"\r\n");
+}
+
+/// Append a full `VALUE` reply for one hit (header + data block).
+pub fn write_value(out: &mut Vec<u8>, key: &[u8], flags: u32, data: &[u8], cas: Option<u64>) {
+    write_value_header(out, key, flags, data.len(), cas);
+    write_data_crlf(out, data);
 }
 
 /// Append `END\r\n` (terminates a get).
@@ -479,6 +511,16 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert_eq!(scratch.capacity(), cap);
+    }
+
+    #[test]
+    fn uint_writer_matches_display() {
+        let mut out = Vec::new();
+        for v in [0u64, 1, 9, 10, 99, 100, 12345, u32::MAX as u64, u64::MAX] {
+            out.clear();
+            write_uint(&mut out, v);
+            assert_eq!(out, v.to_string().as_bytes(), "{v}");
+        }
     }
 
     #[test]

@@ -8,17 +8,33 @@
 //! a parallel [`Action`] list that remembers how to reply — which ops
 //! belong to which command, `noreply` suppression, `gets` CAS rendering.
 //! Each round then crosses the engine in a single
-//! [`crate::cache::Cache::execute_batch`] call, and [`emit`] renders the
-//! results **byte-identically** to the old one-dispatch-per-command path.
+//! [`crate::cache::Cache::execute_batch_into`] call whose sink **is the
+//! reply emitter** ([`EmitSink`]): results stream out of the engine
+//! directly into the connection outbuf. A GET hit's value bytes are
+//! lent by the engine (FLeeC: slab bytes under the pinned batch guard)
+//! and land in the outbuf in **one memcpy** — no `GetResult` Vec, no
+//! intermediate copy, byte-identical to the owned reference renderer
+//! [`emit`] (kept as the differential-testing oracle;
+//! `rust/tests/read_path.rs` holds the two equal on random pipelines).
+//!
+//! Wire replies must come out in command order, but a sharded router
+//! delivers results shard-grouped ([`crate::cache::BatchSink`] leaves
+//! delivery order free). The emitter streams the in-order prefix
+//! straight through and **parks** out-of-order arrivals — tiny outcomes
+//! in a recycled slot array, value bytes in one recycled spill buffer —
+//! flushing each as its turn comes. Over a bare engine (in-order
+//! delivery) the parking machinery never engages and every hit takes
+//! the zero-copy path.
 //!
 //! [`Action`] carries no borrowed data: value-reply keys are recovered
 //! from the op list itself (`ops[first + i].key()`), so the action arena
 //! recycles trivially and — together with [`BatchArena`]'s lifetime
-//! laundering of the op vector and the multi-key `get` scratch it feeds
-//! to [`proto::parse_into`] — the read path allocates nothing once a
-//! connection's arenas are warm (the ROADMAP "server hot path" item is
-//! now fully discharged: the old code rebuilt both vectors per read and
-//! collected a fresh key `Vec` per `get`).
+//! laundering of the op vector, the multi-key `get` scratch it feeds
+//! to [`proto::parse_into`], and the emitter's recycled park/spill
+//! buffers — the read path allocates nothing once a connection's arenas
+//! are warm, on both the request and the reply side (reply numerics are
+//! formatted through the stack-buffer [`proto::write_uint`], not
+//! `to_string`).
 //!
 //! Two commands cannot ride in a batch: `stats` (reads the very counters
 //! the pending ops are about to bump) and `flush_all` (clobbers state the
@@ -39,8 +55,12 @@
 //! cap is checked between commands, and no single command may fan out
 //! into more than [`MAX_GET_KEYS`] ops).
 
-use crate::cache::{Cache, Op, OpResult};
+use crate::cache::{BatchSink, Cache, Op, OpResult, StoreOutcome};
 use crate::proto::{self, Command, Parsed, StoreKind};
+
+/// The `version` reply, shared by both renderers (the owned oracle and
+/// the streaming emitter must never drift apart byte-wise).
+const VERSION_REPLY: &[u8] = b"VERSION fleec-0.1.0\r\n";
 
 /// Maximum ops executed per engine crossing. Splitting an over-long
 /// pipeline into rounds is semantically free (a batch is defined to equal
@@ -99,6 +119,13 @@ pub struct BatchArena {
     /// Scratch for [`proto::parse_into`]'s multi-key `get` list; same
     /// park-empty-at-`'static` recycling as `ops`.
     keys: Vec<&'static [u8]>,
+    /// [`EmitSink`]'s out-of-order parking slots (one per op; engaged
+    /// only when a router delivers shard-grouped). Lifetime-free, so
+    /// plain recycling.
+    pending: Vec<Pending>,
+    /// Value bytes of parked hits, appended end-to-end — one shared
+    /// recycled buffer, not one allocation per parked value.
+    spill: Vec<u8>,
 }
 
 impl BatchArena {
@@ -268,9 +295,16 @@ pub fn plan<'a>(
     }
 }
 
-/// Render replies for `actions` against the batch `results`, appending
-/// wire bytes to `out` in command order. `ops` is the batch the actions
-/// index into (value replies read their keys from it).
+/// Render replies for `actions` against **owned** batch `results`,
+/// appending wire bytes to `out` in command order. `ops` is the batch
+/// the actions index into (value replies read their keys from it).
+///
+/// This is the reference renderer over the owned
+/// [`Cache::execute_batch`] tier. The live pump no longer uses it —
+/// [`drain`] streams results through [`EmitSink`] instead — but it is
+/// kept as the differential-testing oracle: `rust/tests/read_path.rs`
+/// holds the two paths byte-identical on randomized pipelines across
+/// every engine and the shard router.
 pub fn emit(ops: &[Op<'_>], actions: &[Action], results: &[OpResult], out: &mut Vec<u8>) {
     for action in actions {
         match *action {
@@ -315,7 +349,7 @@ pub fn emit(ops: &[Op<'_>], actions: &[Action], results: &[OpResult], out: &mut 
                 if !noreply {
                     match results[first] {
                         OpResult::Counter(Some(v)) => {
-                            out.extend_from_slice(v.to_string().as_bytes());
+                            proto::write_uint(out, v);
                             out.extend_from_slice(b"\r\n");
                         }
                         OpResult::Counter(None) => out.extend_from_slice(b"NOT_FOUND\r\n"),
@@ -332,7 +366,7 @@ pub fn emit(ops: &[Op<'_>], actions: &[Action], results: &[OpResult], out: &mut 
                     }
                 }
             }
-            Action::Version => out.extend_from_slice(b"VERSION fleec-0.1.0\r\n"),
+            Action::Version => out.extend_from_slice(VERSION_REPLY),
             Action::Ok { noreply } => {
                 if !noreply {
                     out.extend_from_slice(b"OK\r\n");
@@ -353,6 +387,314 @@ pub fn emit(ops: &[Op<'_>], actions: &[Action], results: &[OpResult], out: &mut 
 fn mismatch(out: &mut Vec<u8>) {
     debug_assert!(false, "execute_batch result variant mismatch");
     out.extend_from_slice(b"SERVER_ERROR batch result mismatch\r\n");
+}
+
+/// One parked out-of-order result inside [`EmitSink`]. Everything is
+/// `Copy`-small; a parked hit's bytes live in the arena's shared spill
+/// buffer at `spill[lo..hi]` (`u32` offsets: a round's reply volume is
+/// bounded far below 4 GiB by [`ROUND_OPS`] × [`proto::MAX_DATA_LEN`]).
+#[derive(Clone, Copy)]
+enum Pending {
+    /// Not delivered yet.
+    NotYet,
+    /// Value hit, bytes parked in the spill buffer.
+    Value { flags: u32, cas: u64, lo: u32, hi: u32 },
+    Miss,
+    Store(StoreOutcome),
+    Deleted(bool),
+    Counter(Option<u64>),
+    Touched(bool),
+}
+
+/// A result being rendered: either fresh from the engine (`data`
+/// borrowed from slab/entry memory — this is the zero-copy path) or
+/// re-materialized from the park slots.
+enum Rendered<'a> {
+    Value { flags: u32, cas: u64, data: &'a [u8] },
+    Miss,
+    Store(StoreOutcome),
+    Deleted(bool),
+    Counter(Option<u64>),
+    Touched(bool),
+    /// Exactly-once contract violation: the op was never delivered.
+    /// Renders as a mismatch wherever a reply is owed (keeps framing).
+    Missing,
+}
+
+/// The streaming reply emitter — a [`BatchSink`] that renders wire bytes
+/// straight into the connection outbuf as the engine delivers results.
+///
+/// In-order deliveries (bare engines) render immediately: a GET hit's
+/// borrowed bytes go slab→outbuf in one `memcpy`, store/counter/touch
+/// outcomes become their reply lines, and the action cursor interleaves
+/// zero-op replies (`VERSION`, `CLIENT_ERROR`, …) at their command
+/// positions. Out-of-order deliveries (sharded routers) park in the
+/// arena's recycled slot/spill buffers until their turn. [`finish`]
+/// (`EmitSink::finish`) must run after `execute_batch_into` returns to
+/// render any trailing zero-op actions.
+struct EmitSink<'o, 'b> {
+    ops: &'b [Op<'o>],
+    actions: &'b [Action],
+    out: &'b mut Vec<u8>,
+    pending: &'b mut Vec<Pending>,
+    spill: &'b mut Vec<u8>,
+    /// Actions `[..a_idx]` are fully rendered.
+    a_idx: usize,
+    /// Next op index owed to the wire.
+    next: usize,
+}
+
+impl<'o, 'b> EmitSink<'o, 'b> {
+    fn new(
+        ops: &'b [Op<'o>],
+        actions: &'b [Action],
+        out: &'b mut Vec<u8>,
+        pending: &'b mut Vec<Pending>,
+        spill: &'b mut Vec<u8>,
+    ) -> Self {
+        pending.clear();
+        pending.resize(ops.len(), Pending::NotYet);
+        spill.clear();
+        EmitSink {
+            ops,
+            actions,
+            out,
+            pending,
+            spill,
+            a_idx: 0,
+            next: 0,
+        }
+    }
+
+    /// Render every zero-op action at the cursor (they owe the wire a
+    /// reply *before* the next op-bearing command's).
+    fn catch_up_plain(out: &mut Vec<u8>, actions: &[Action], a_idx: &mut usize) {
+        while let Some(action) = actions.get(*a_idx) {
+            match *action {
+                Action::Version => out.extend_from_slice(VERSION_REPLY),
+                Action::Ok { noreply } => {
+                    if !noreply {
+                        out.extend_from_slice(b"OK\r\n");
+                    }
+                }
+                Action::ClientError(msg) => {
+                    out.extend_from_slice(b"CLIENT_ERROR ");
+                    out.extend_from_slice(msg.as_bytes());
+                    out.extend_from_slice(b"\r\n");
+                }
+                _ => break,
+            }
+            *a_idx += 1;
+        }
+    }
+
+    /// Render op `idx`'s reply fragment (associated fn so callers can
+    /// split-borrow `out`/`spill`). Byte-for-byte the same output as the
+    /// owned [`emit`] renderer.
+    fn render_one(
+        out: &mut Vec<u8>,
+        ops: &[Op<'_>],
+        actions: &[Action],
+        a_idx: &mut usize,
+        idx: usize,
+        r: Rendered<'_>,
+    ) {
+        Self::catch_up_plain(out, actions, a_idx);
+        let Some(&action) = actions.get(*a_idx) else {
+            debug_assert!(false, "result delivered past the last action");
+            return;
+        };
+        match action {
+            Action::Values {
+                first,
+                count,
+                with_cas,
+            } => {
+                debug_assert!(first <= idx && idx < first + count, "op outside its action");
+                match r {
+                    Rendered::Value { flags, cas, data } => {
+                        proto::write_value_header(
+                            out,
+                            ops[idx].key(),
+                            flags,
+                            data.len(),
+                            with_cas.then_some(cas),
+                        );
+                        proto::write_data_crlf(out, data);
+                    }
+                    // Misses render nothing; so does a mismatched
+                    // variant (same as the owned renderer's `if let`).
+                    _ => {}
+                }
+                if idx + 1 == first + count {
+                    proto::write_end(out);
+                    *a_idx += 1;
+                }
+            }
+            Action::Store { noreply, .. } => {
+                if !noreply {
+                    match r {
+                        Rendered::Store(outcome) => {
+                            out.extend_from_slice(proto::store_reply(outcome))
+                        }
+                        _ => mismatch(out),
+                    }
+                }
+                *a_idx += 1;
+            }
+            Action::Delete { noreply, .. } => {
+                if !noreply {
+                    match r {
+                        Rendered::Deleted(true) => out.extend_from_slice(b"DELETED\r\n"),
+                        Rendered::Deleted(false) => out.extend_from_slice(b"NOT_FOUND\r\n"),
+                        _ => mismatch(out),
+                    }
+                }
+                *a_idx += 1;
+            }
+            Action::Counter { noreply, .. } => {
+                if !noreply {
+                    match r {
+                        Rendered::Counter(Some(v)) => {
+                            proto::write_uint(out, v);
+                            out.extend_from_slice(b"\r\n");
+                        }
+                        Rendered::Counter(None) => out.extend_from_slice(b"NOT_FOUND\r\n"),
+                        _ => mismatch(out),
+                    }
+                }
+                *a_idx += 1;
+            }
+            Action::Touch { noreply, .. } => {
+                if !noreply {
+                    match r {
+                        Rendered::Touched(true) => out.extend_from_slice(b"TOUCHED\r\n"),
+                        Rendered::Touched(false) => out.extend_from_slice(b"NOT_FOUND\r\n"),
+                        _ => mismatch(out),
+                    }
+                }
+                *a_idx += 1;
+            }
+            Action::Version | Action::Ok { .. } | Action::ClientError(..) => {
+                unreachable!("catch_up_plain consumed every zero-op action")
+            }
+        }
+    }
+
+    /// Rebuild a parked result's [`Rendered`] view (value bytes from the
+    /// spill buffer).
+    fn unpark(p: Pending, spill: &[u8]) -> Rendered<'_> {
+        match p {
+            Pending::NotYet => Rendered::Missing,
+            Pending::Value { flags, cas, lo, hi } => Rendered::Value {
+                flags,
+                cas,
+                data: &spill[lo as usize..hi as usize],
+            },
+            Pending::Miss => Rendered::Miss,
+            Pending::Store(o) => Rendered::Store(o),
+            Pending::Deleted(b) => Rendered::Deleted(b),
+            Pending::Counter(c) => Rendered::Counter(c),
+            Pending::Touched(b) => Rendered::Touched(b),
+        }
+    }
+
+    /// Accept one delivery: stream it if it's the next op owed to the
+    /// wire (then flush any parked successors), park it otherwise.
+    fn deliver(&mut self, idx: usize, r: Rendered<'_>) {
+        debug_assert!(idx < self.pending.len(), "delivery index out of range");
+        if idx != self.next {
+            debug_assert!(
+                matches!(self.pending[idx], Pending::NotYet),
+                "double delivery for op {idx}"
+            );
+            self.pending[idx] = match r {
+                Rendered::Value { flags, cas, data } => {
+                    let lo = self.spill.len() as u32;
+                    self.spill.extend_from_slice(data);
+                    Pending::Value {
+                        flags,
+                        cas,
+                        lo,
+                        hi: self.spill.len() as u32,
+                    }
+                }
+                Rendered::Miss => Pending::Miss,
+                Rendered::Store(o) => Pending::Store(o),
+                Rendered::Deleted(b) => Pending::Deleted(b),
+                Rendered::Counter(c) => Pending::Counter(c),
+                Rendered::Touched(b) => Pending::Touched(b),
+                // `Missing` is synthesized only by `finish` for
+                // undelivered slots; it is never a sink delivery. Keep
+                // the slot NotYet (release renders a framed mismatch at
+                // finish) but trip loudly in debug builds.
+                Rendered::Missing => {
+                    debug_assert!(false, "Rendered::Missing delivered to the sink");
+                    Pending::NotYet
+                }
+            };
+            return;
+        }
+        Self::render_one(self.out, self.ops, self.actions, &mut self.a_idx, idx, r);
+        self.next += 1;
+        while self.next < self.pending.len() {
+            let p = std::mem::replace(&mut self.pending[self.next], Pending::NotYet);
+            if matches!(p, Pending::NotYet) {
+                break;
+            }
+            let r = Self::unpark(p, self.spill);
+            Self::render_one(self.out, self.ops, self.actions, &mut self.a_idx, self.next, r);
+            self.next += 1;
+        }
+    }
+
+    /// Close out the round after `execute_batch_into` returned: render
+    /// anything still owed (undelivered ops — an engine contract
+    /// violation — render as framed mismatches) and the trailing zero-op
+    /// actions.
+    fn finish(mut self) {
+        while self.next < self.pending.len() {
+            let p = std::mem::replace(&mut self.pending[self.next], Pending::NotYet);
+            debug_assert!(
+                !matches!(p, Pending::NotYet),
+                "engine left op {} undelivered",
+                self.next
+            );
+            let r = Self::unpark(p, self.spill);
+            Self::render_one(self.out, self.ops, self.actions, &mut self.a_idx, self.next, r);
+            self.next += 1;
+        }
+        Self::catch_up_plain(self.out, self.actions, &mut self.a_idx);
+        debug_assert_eq!(self.a_idx, self.actions.len(), "unrendered trailing actions");
+    }
+}
+
+impl BatchSink for EmitSink<'_, '_> {
+    fn value(&mut self, idx: usize, _key: &[u8], flags: u32, cas: u64, data: &[u8]) {
+        // Reply keys come from `ops[idx]` (the engine's `key` is the
+        // same bytes by contract).
+        self.deliver(idx, Rendered::Value { flags, cas, data });
+    }
+
+    fn miss(&mut self, idx: usize) {
+        self.deliver(idx, Rendered::Miss);
+    }
+
+    fn store(&mut self, idx: usize, outcome: StoreOutcome) {
+        self.deliver(idx, Rendered::Store(outcome));
+    }
+
+    fn deleted(&mut self, idx: usize, existed: bool) {
+        self.deliver(idx, Rendered::Deleted(existed));
+    }
+
+    fn counter(&mut self, idx: usize, value: Option<u64>) {
+        self.deliver(idx, Rendered::Counter(value));
+    }
+
+    fn touched(&mut self, idx: usize, existed: bool) {
+        self.deliver(idx, Rendered::Touched(existed));
+    }
 }
 
 /// Why [`drain`] stopped consuming input.
@@ -408,7 +750,7 @@ pub fn drain(
                 Parsed::Done(cmd, n) => {
                     consumed += n;
                     if is_barrier(&cmd) {
-                        flush_batch(cache, &mut ops, &mut actions, out);
+                        flush_batch(cache, &mut ops, &mut actions, arena, out);
                         match cmd {
                             Command::Stats => write_stats_reply(cache, curr_connections, out),
                             Command::FlushAll { noreply } => {
@@ -435,24 +777,44 @@ pub fn drain(
                     }
                 }
                 Parsed::Incomplete => {
-                    flush_batch(cache, &mut ops, &mut actions, out);
+                    flush_batch(cache, &mut ops, &mut actions, arena, out);
                     break 'drain DrainStop::NeedMoreInput;
                 }
             }
         }
-        flush_batch(cache, &mut ops, &mut actions, out);
+        flush_batch(cache, &mut ops, &mut actions, arena, out);
     };
     arena.put(ops, actions, keys);
     Drained { consumed, stop }
 }
 
-/// Execute the pending batch and render its replies; clears both lists.
-fn flush_batch(cache: &dyn Cache, ops: &mut Vec<Op<'_>>, actions: &mut Vec<Action>, out: &mut Vec<u8>) {
+/// Execute the pending batch, streaming its replies into `out` through
+/// an [`EmitSink`] (the engine lends GET-hit bytes straight into the
+/// outbuf); clears both lists. `arena` only contributes the emitter's
+/// recycled park/spill buffers — the op/action/key vectors stay checked
+/// out with the caller.
+fn flush_batch(
+    cache: &dyn Cache,
+    ops: &mut Vec<Op<'_>>,
+    actions: &mut Vec<Action>,
+    arena: &mut BatchArena,
+    out: &mut Vec<u8>,
+) {
     if actions.is_empty() && ops.is_empty() {
         return;
     }
-    let results = cache.execute_batch(ops);
-    emit(ops, actions, &results, out);
+    {
+        let ops: &[Op<'_>] = ops.as_slice();
+        let mut sink = EmitSink::new(
+            ops,
+            actions.as_slice(),
+            out,
+            &mut arena.pending,
+            &mut arena.spill,
+        );
+        cache.execute_batch_into(ops, &mut sink);
+        sink.finish();
+    }
     ops.clear();
     actions.clear();
 }
@@ -609,13 +971,15 @@ mod tests {
         let wire = b"set k 0 0 1\r\nv\r\nget k k k\r\nget k\r\n";
         let mut out = Vec::new();
         drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX);
-        let (cap_ops, cap_actions, cap_keys) = (
+        let (cap_ops, cap_actions, cap_keys, cap_pending) = (
             arena.ops.capacity(),
             arena.actions.capacity(),
             arena.keys.capacity(),
+            arena.pending.capacity(),
         );
         assert!(cap_ops >= 2 && cap_actions >= 2, "arena warmed");
         assert!(cap_keys >= 3, "key scratch warmed by the multi-key get");
+        assert!(cap_pending >= 2, "emitter park slots warmed");
         // A same-shape drain must not grow (or shrink) any arena.
         for _ in 0..8 {
             out.clear();
@@ -623,12 +987,77 @@ mod tests {
             assert_eq!(arena.ops.capacity(), cap_ops);
             assert_eq!(arena.actions.capacity(), cap_actions);
             assert_eq!(arena.keys.capacity(), cap_keys, "key scratch recycled");
+            assert_eq!(arena.pending.capacity(), cap_pending, "park slots recycled");
         }
+        // A bare engine delivers in order: the value-byte spill buffer
+        // must never have engaged (its capacity is still zero), i.e.
+        // every hit streamed slab→outbuf without an intermediate copy.
+        assert_eq!(
+            arena.spill.capacity(),
+            0,
+            "in-order delivery must never copy into the spill buffer"
+        );
         assert_eq!(
             out,
             b"STORED\r\nVALUE k 0 1\r\nv\r\nVALUE k 0 1\r\nv\r\nVALUE k 0 1\r\nv\r\nEND\r\nVALUE k 0 1\r\nv\r\nEND\r\n"
                 as &[u8],
             "recycled arenas must not corrupt replies"
+        );
+    }
+
+    #[test]
+    fn sharded_cache_replies_come_back_in_command_order() {
+        // A 4-shard router delivers results shard-grouped; the emitter
+        // must still put wire replies in command order, byte-identical
+        // to what a flat engine would produce (plain `get`s only — cas
+        // token *values* are per-shard).
+        let cache = crate::cache::build_sharded("fleec", 4, CacheConfig::small()).unwrap();
+        let mut arena = BatchArena::default();
+        let n = 12usize;
+        let mut wire = Vec::new();
+        for i in 0..n {
+            wire.extend_from_slice(format!("set sh{i} 7 0 3\r\nv{i:02}\r\n").as_bytes());
+        }
+        wire.extend_from_slice(b"get");
+        for i in 0..n {
+            wire.extend_from_slice(format!(" sh{i}").as_bytes());
+        }
+        wire.extend_from_slice(b"\r\n");
+        wire.extend_from_slice(b"delete sh3\r\nincr sh5 1\r\nget sh3 sh4\r\nversion\r\n");
+        let mut out = Vec::new();
+        let mut consumed = 0;
+        loop {
+            let d = drain(
+                cache.as_ref(),
+                0,
+                &wire[consumed..],
+                &mut out,
+                &mut arena,
+                usize::MAX,
+            );
+            consumed += d.consumed;
+            if d.stop == DrainStop::NeedMoreInput {
+                break;
+            }
+        }
+        assert_eq!(consumed, wire.len());
+        let mut expect = Vec::new();
+        for _ in 0..n {
+            expect.extend_from_slice(b"STORED\r\n");
+        }
+        for i in 0..n {
+            expect.extend_from_slice(format!("VALUE sh{i} 7 3\r\nv{i:02}\r\n").as_bytes());
+        }
+        expect.extend_from_slice(b"END\r\n");
+        expect.extend_from_slice(b"DELETED\r\nNOT_FOUND\r\n"); // v05 is not numeric
+        expect.extend_from_slice(b"VALUE sh4 7 3\r\nv04\r\nEND\r\n"); // sh3 deleted
+        expect.extend_from_slice(b"VERSION fleec-0.1.0\r\n");
+        assert_eq!(
+            out,
+            expect,
+            "got {:?}, want {:?}",
+            String::from_utf8_lossy(&out),
+            String::from_utf8_lossy(&expect)
         );
     }
 

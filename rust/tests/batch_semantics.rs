@@ -1,10 +1,13 @@
 //! Batch semantics: for every engine, `execute_batch(ops)` must be
 //! indistinguishable from issuing the same ops sequentially through the
 //! single-key convenience methods — same per-op results, same final
-//! state, and the same `cas`-token sequence. The blocking engines run the
-//! default delegating impl (trivially equivalent); FLeeC's overridden
-//! fast path (one EBR guard, pre-hash, pre-allocation) is the real
-//! subject under test.
+//! state, and the same `cas`-token sequence. Since the owned tier is a
+//! collecting wrapper over `execute_batch_into`, everything here also
+//! pins the sink path: the blocking engines run per-op loops that lend
+//! GET bytes under their locks; FLeeC's fast path (one EBR guard,
+//! pre-hash, pre-allocation, guard-stable lent values) is the real
+//! subject under test. (`rust/tests/read_path.rs` covers the
+//! sink-specific contracts: guard stability and emitter byte-equality.)
 
 use fleec::cache::fleec::FleecCache;
 use fleec::cache::op::execute_sequential;

@@ -2,7 +2,7 @@
 //! empty values, expiry semantics, key-limit enforcement, and the
 //! protocol's odd corners.
 
-use fleec::cache::{build_engine, CacheConfig, StoreOutcome, ENGINES, MAX_KEY_LEN};
+use fleec::cache::{build_engine, Cache as _, CacheConfig, StoreOutcome, ENGINES, MAX_KEY_LEN};
 
 #[test]
 fn zero_length_values_roundtrip() {

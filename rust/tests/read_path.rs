@@ -1,0 +1,358 @@
+//! The guard-scoped zero-copy read path, held to its two contracts:
+//!
+//! 1. **Guard stability** — the `&[u8]` a [`BatchSink::value`] call lends
+//!    from the FLeeC engine stays byte-identical for the remainder of the
+//!    batch, even while concurrent writers overwrite and evict the very
+//!    keys being read (overwrites only *retire* items through EBR; the
+//!    batch guard holds the epoch). The stress test re-reads every
+//!    previously lent slice — via raw parts, deliberately outliving the
+//!    borrow — on each later delivery and at batch end.
+//! 2. **Emitter equivalence** — the server's streaming sink emitter
+//!    produces byte-identical wire replies to the owned reference
+//!    renderer (`plan → execute_batch → emit`) on randomized pipelines,
+//!    across every engine and the 4-shard router (whose shard-grouped
+//!    delivery exercises the emitter's reordering path).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use fleec::cache::fleec::FleecCache;
+use fleec::cache::{
+    build_engine, build_sharded, BatchSink, Cache, CacheConfig, Op, StoreOutcome,
+};
+use fleec::proto::{self, Parsed};
+use fleec::server::batch::{self, Action, BatchArena, DrainStop};
+use fleec::workload::{check_value, fill_value};
+
+/// Env-tunable stress knobs (same convention as `concurrent_stress.rs`).
+fn knob(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// A sink that keeps the raw parts of every lent value slice and, on
+/// each later delivery, asserts all earlier slices are still exactly the
+/// bytes they were lent as. Between deliveries of one batch the engine's
+/// guard is pinned, so this is precisely the stability window the API
+/// promises.
+#[derive(Default)]
+struct StabilitySink {
+    /// `(ptr, len, key_id, snapshot-at-delivery)` per hit this batch.
+    views: Vec<(usize, usize, u64, Vec<u8>)>,
+}
+
+impl StabilitySink {
+    fn revalidate(&self) {
+        for &(ptr, len, key_id, ref snap) in &self.views {
+            // SAFETY (of the test, conditional on the claim under test):
+            // the engine promises these bytes stay valid until its batch
+            // guard drops, which is after `execute_batch_into` returns —
+            // and we only re-read inside that window.
+            let now = unsafe { std::slice::from_raw_parts(ptr as *const u8, len) };
+            assert_eq!(
+                now,
+                snap.as_slice(),
+                "lent bytes for key id {key_id} mutated mid-batch"
+            );
+        }
+    }
+}
+
+impl BatchSink for StabilitySink {
+    fn value(&mut self, _idx: usize, key: &[u8], _flags: u32, _cas: u64, data: &[u8]) {
+        self.revalidate();
+        // Keys are "rp<id>"; values carry the id's self-validating
+        // pattern, so a reused chunk (use-after-free) shows up as a
+        // pattern mismatch even before a later revalidation.
+        let key_id: u64 = std::str::from_utf8(&key[2..]).unwrap().parse().unwrap();
+        assert!(
+            check_value(key_id, data),
+            "key id {key_id}: lent bytes are not this key's pattern (len {})",
+            data.len()
+        );
+        self.views
+            .push((data.as_ptr() as usize, data.len(), key_id, data.to_vec()));
+    }
+
+    fn miss(&mut self, _idx: usize) {
+        self.revalidate();
+    }
+
+    fn store(&mut self, _idx: usize, _outcome: StoreOutcome) {}
+    fn deleted(&mut self, _idx: usize, _existed: bool) {}
+    fn counter(&mut self, _idx: usize, _value: Option<u64>) {}
+    fn touched(&mut self, _idx: usize, _existed: bool) {}
+}
+
+#[test]
+fn lent_value_bytes_stay_stable_while_writers_overwrite() {
+    let threads = knob("FLEEC_STRESS_THREADS", 4).max(2) as usize;
+    let batches = knob("FLEEC_STRESS_OPS", 3000);
+    const KEYS: u64 = 16; // few keys → every batch races with overwrites
+    let cache = Arc::new(FleecCache::new(CacheConfig {
+        mem_limit: 8 << 20,
+        ..CacheConfig::small()
+    }));
+    let keys: Vec<Vec<u8>> = (0..KEYS).map(|id| format!("rp{id}").into_bytes()).collect();
+    // Per-id value length (stable across overwrites so patterns verify).
+    let len_of = |id: u64| 48 + (id as usize * 24) % 160;
+    for id in 0..KEYS {
+        let mut v = vec![0u8; len_of(id)];
+        fill_value(id, &mut v);
+        assert_eq!(cache.set(&keys[id as usize], &v, 0, 0), StoreOutcome::Stored);
+    }
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        // Writers: overwrite + occasionally delete/reinsert the hot keys
+        // as fast as possible (every overwrite retires the old item).
+        for t in 0..(threads - 1) as u64 {
+            let cache = Arc::clone(&cache);
+            let keys = &keys;
+            let stop = &stop;
+            s.spawn(move || {
+                let mut rng = fleec::sync::Xoshiro256::seeded(0x57AB1E ^ t);
+                let mut v = vec![0u8; 256];
+                while !stop.load(Ordering::Relaxed) {
+                    let id = rng.next_below(KEYS);
+                    let len = len_of(id);
+                    fill_value(id, &mut v[..len]);
+                    if rng.chance(0.05) {
+                        let _ = cache.delete(&keys[id as usize]);
+                    }
+                    let _ = cache.set(&keys[id as usize], &v[..len], 0, 0);
+                }
+            });
+        }
+        // Reader: long all-get batches through the sink; every delivery
+        // revalidates all earlier lent slices of the same batch.
+        let mut rng = fleec::sync::Xoshiro256::seeded(0x0DD5EED);
+        let mut sink = StabilitySink::default();
+        for _ in 0..batches {
+            let mut ops: Vec<Op<'_>> = Vec::with_capacity(32);
+            for _ in 0..32 {
+                let id = rng.next_below(KEYS) as usize;
+                ops.push(Op::Get { key: &keys[id] });
+            }
+            sink.views.clear();
+            cache.execute_batch_into(&ops, &mut sink);
+            // One more sweep right before the guard would drop.
+            sink.revalidate();
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    cache.collector().force_reclaim(4);
+}
+
+/// Random printable key from a small catalog (collisions wanted).
+fn pick_key(rng: &mut fleec::sync::Xoshiro256) -> String {
+    format!("dk{}", rng.next_below(24))
+}
+
+/// Append one random command (with its data block) to `wire`.
+fn push_random_command(rng: &mut fleec::sync::Xoshiro256, wire: &mut Vec<u8>) {
+    let noreply = if rng.chance(0.2) { " noreply" } else { "" };
+    match rng.next_below(100) {
+        // Multi-key get/gets (the reorder-heavy shape under a router).
+        0..=29 => {
+            let verb = if rng.chance(0.3) { "gets" } else { "get" };
+            let n = 1 + rng.next_below(4);
+            let mut line = verb.to_string();
+            for _ in 0..n {
+                line.push(' ');
+                line.push_str(&pick_key(rng));
+            }
+            wire.extend_from_slice(line.as_bytes());
+            wire.extend_from_slice(b"\r\n");
+        }
+        30..=59 => {
+            let verb = ["set", "add", "replace"][rng.next_below(3) as usize];
+            let len = rng.next_below(96) as usize;
+            let mut data = vec![0u8; len];
+            for b in data.iter_mut() {
+                *b = b'a' + (rng.next_below(26) as u8);
+            }
+            wire.extend_from_slice(
+                format!(
+                    "{verb} {} {} 0 {len}{noreply}\r\n",
+                    pick_key(rng),
+                    rng.next_below(1000)
+                )
+                .as_bytes(),
+            );
+            wire.extend_from_slice(&data);
+            wire.extend_from_slice(b"\r\n");
+        }
+        60..=67 => {
+            let verb = ["append", "prepend"][rng.next_below(2) as usize];
+            wire.extend_from_slice(
+                format!("{verb} {} 0 0 3{noreply}\r\nxyz\r\n", pick_key(rng)).as_bytes(),
+            );
+        }
+        68..=73 => {
+            // cas with a guessed token: identical deterministic outcome
+            // on both instances (their token counters move in lockstep).
+            wire.extend_from_slice(
+                format!(
+                    "cas {} 0 0 2 {}{noreply}\r\nCC\r\n",
+                    pick_key(rng),
+                    rng.next_below(200)
+                )
+                .as_bytes(),
+            );
+        }
+        74..=81 => {
+            let verb = ["incr", "decr"][rng.next_below(2) as usize];
+            wire.extend_from_slice(
+                format!("{verb} {} {}{noreply}\r\n", pick_key(rng), rng.next_below(50)).as_bytes(),
+            );
+        }
+        82..=87 => {
+            wire.extend_from_slice(format!("delete {}{noreply}\r\n", pick_key(rng)).as_bytes());
+        }
+        88..=91 => {
+            wire.extend_from_slice(
+                format!("touch {} {}{noreply}\r\n", pick_key(rng), rng.next_below(500)).as_bytes(),
+            );
+        }
+        92..=93 => wire.extend_from_slice(b"version\r\n"),
+        94 => wire.extend_from_slice(format!("verbosity 1{noreply}\r\n").as_bytes()),
+        95 => wire.extend_from_slice(b"not-a-command\r\n"),
+        96 => wire.extend_from_slice(b"stats\r\n"),
+        _ => {
+            // Occasional numeric seed so incr/decr sometimes succeed.
+            wire.extend_from_slice(
+                format!("set {} 0 0 2\r\n{:02}\r\n", pick_key(rng), rng.next_below(100)).as_bytes(),
+            );
+        }
+    }
+}
+
+/// [`reference_pump`]'s flush: owned results through [`batch::emit`].
+fn flush_owned(
+    cache: &dyn Cache,
+    ops: &mut Vec<Op<'_>>,
+    actions: &mut Vec<Action>,
+    out: &mut Vec<u8>,
+) {
+    if ops.is_empty() && actions.is_empty() {
+        return;
+    }
+    let results = cache.execute_batch(ops);
+    batch::emit(ops, actions, &results, out);
+    ops.clear();
+    actions.clear();
+}
+
+/// The owned reference pump: parse → plan → `execute_batch` (owned
+/// results) → [`batch::emit`], barriers handled like [`batch::drain`].
+fn reference_pump(cache: &dyn Cache, wire: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut ops: Vec<Op<'_>> = Vec::new();
+    let mut actions: Vec<Action> = Vec::new();
+    let mut keys: Vec<&[u8]> = Vec::new();
+    let mut consumed = 0;
+    loop {
+        match proto::parse_into(&wire[consumed..], &mut keys) {
+            Parsed::Done(cmd, n) => {
+                consumed += n;
+                if batch::is_barrier(&cmd) {
+                    flush_owned(cache, &mut ops, &mut actions, &mut out);
+                    match cmd {
+                        proto::Command::Stats => batch::write_stats_reply(cache, 0, &mut out),
+                        proto::Command::FlushAll { noreply } => {
+                            cache.flush_all();
+                            if !noreply {
+                                out.extend_from_slice(b"OK\r\n");
+                            }
+                        }
+                        proto::Command::Quit => break,
+                        _ => unreachable!(),
+                    }
+                } else {
+                    batch::plan(cmd, &mut ops, &mut actions, &mut keys);
+                }
+            }
+            Parsed::Error(msg, n) => {
+                consumed += n;
+                actions.push(Action::ClientError(msg));
+            }
+            Parsed::Incomplete => {
+                flush_owned(cache, &mut ops, &mut actions, &mut out);
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// The live pump: [`batch::drain`] (sink emitter, recycled arenas).
+fn sink_pump(cache: &dyn Cache, wire: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut arena = BatchArena::default();
+    let mut consumed = 0;
+    loop {
+        let d = batch::drain(cache, 0, &wire[consumed..], &mut out, &mut arena, usize::MAX);
+        consumed += d.consumed;
+        match d.stop {
+            DrainStop::NeedMoreInput | DrainStop::Quit => break,
+            DrainStop::Budget => continue,
+        }
+    }
+    assert_eq!(consumed, wire.len(), "pump left input unconsumed");
+    out
+}
+
+#[test]
+fn sink_and_owned_emitters_are_wire_byte_identical() {
+    // Engines × {flat, 4-shard router}: two identically-built instances
+    // fed the identical single-connection pipeline are deterministic
+    // (cas tokens included), so the sink path must reproduce the owned
+    // reference bytes exactly — including `gets` cas rendering and the
+    // router's shard-grouped delivery being reordered back.
+    for engine in fleec::cache::ENGINES {
+        for shards in [1usize, 4] {
+            fleec::testutil::run_prop(
+                &format!("read-path-differential-{engine}-{shards}"),
+                0xD1FF ^ ((shards as u64) << 8),
+                |rng| {
+                    let owned = build_sharded(engine, shards, CacheConfig::small()).unwrap();
+                    let sunk = build_sharded(engine, shards, CacheConfig::small()).unwrap();
+                    let mut wire = Vec::new();
+                    let n_cmds = 60 + rng.next_below(200);
+                    for _ in 0..n_cmds {
+                        push_random_command(rng, &mut wire);
+                    }
+                    let want = reference_pump(owned.as_ref(), &wire);
+                    let got = sink_pump(sunk.as_ref(), &wire);
+                    assert_eq!(
+                        got,
+                        want,
+                        "{engine}/{shards}: wire bytes diverge\nsink : {:?}\nowned: {:?}",
+                        String::from_utf8_lossy(&got),
+                        String::from_utf8_lossy(&want)
+                    );
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn multiget_across_shards_reassembles_in_key_order() {
+    // Focused regression for the emitter's parking path: one VALUE…END
+    // reply whose keys deliberately span all 4 shards.
+    let cache = build_sharded("fleec", 4, CacheConfig::small()).unwrap();
+    let flat = build_engine("fleec", CacheConfig::small()).unwrap();
+    let mut wire = Vec::new();
+    for i in 0..24 {
+        wire.extend_from_slice(format!("set mg{i} 1 0 4\r\nw{i:03}\r\n").as_bytes());
+    }
+    wire.extend_from_slice(b"get");
+    for i in 0..24 {
+        wire.extend_from_slice(format!(" mg{i}").as_bytes());
+    }
+    wire.extend_from_slice(b"\r\n");
+    assert_eq!(sink_pump(cache.as_ref(), &wire), sink_pump(flat.as_ref(), &wire));
+}

@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use fleec::cache::{build_engine, build_sharded, CacheConfig, ENGINES};
+use fleec::cache::{build_engine, build_sharded, Cache as _, CacheConfig, ENGINES};
 use fleec::client::Client;
 use fleec::coordinator::{Coordinator, CoordinatorConfig};
 use fleec::server::{Server, ServerConfig, ServerModel};
