@@ -1,0 +1,334 @@
+//! A small line-aware Rust lexer for [`fleec-audit`](crate::audit).
+//!
+//! The audit rules are *comment-adjacency* rules ("this line of code must
+//! carry that tag"), so the lexer does not build a token tree — it splits
+//! every source line into a **code channel** and a **comment channel**:
+//!
+//! * `code` — the line's source text with comments removed and the
+//!   *contents* of string/char literals blanked out (quotes kept). Token
+//!   scans over this channel can never be fooled by `"unsafe"` inside a
+//!   string or `// Ordering::Release` inside a comment.
+//! * `comment` — the concatenated text of every comment overlapping the
+//!   line (line comments, doc comments, block comments — including the
+//!   interior lines of a multi-line `/* … */`).
+//!
+//! Handled Rust surface: nested block comments, string literals with
+//! escapes, raw strings (`r"…"`, `r#"…"#`, any hash depth), byte
+//! strings/chars, char literals (including escapes), and the char-vs-
+//! lifetime ambiguity of `'` (`'a'` is a literal, `<'a>` is not).
+//!
+//! The lexer is intentionally *forgiving*: on malformed input it degrades
+//! to treating the rest of the file as code, which at worst produces an
+//! extra finding — never a silently skipped one.
+
+/// One source line, split into its code and comment channels.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Source text minus comments, with literal contents blanked.
+    pub code: String,
+    /// Concatenated comment text overlapping this line.
+    pub comment: String,
+}
+
+impl Line {
+    /// True when the line carries no code (blank, or comment-only).
+    pub fn is_code_blank(&self) -> bool {
+        self.code.trim().is_empty()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Code,
+    LineComment,
+    /// Nested depth of `/* … */`.
+    BlockComment(u32),
+    /// Inside `"…"` (escape-aware).
+    Str,
+    /// Inside `r##"…"##` with the given hash count.
+    RawStr(u32),
+    /// Inside `'…'` (escape-aware).
+    CharLit,
+}
+
+/// Split `src` into per-line code/comment channels.
+pub fn lex(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<Line> = vec![Line::default()];
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+
+    // Push helpers operate on the last (current) line.
+    macro_rules! code {
+        ($c:expr) => {
+            lines.last_mut().unwrap().code.push($c)
+        };
+    }
+    macro_rules! comment {
+        ($c:expr) => {
+            lines.last_mut().unwrap().comment.push($c)
+        };
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            lines.push(Line::default());
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied();
+                match c {
+                    '/' if next == Some('/') => {
+                        mode = Mode::LineComment;
+                        comment!('/');
+                        comment!('/');
+                        i += 2;
+                    }
+                    '/' if next == Some('*') => {
+                        mode = Mode::BlockComment(1);
+                        comment!('/');
+                        comment!('*');
+                        i += 2;
+                    }
+                    '"' => {
+                        mode = Mode::Str;
+                        code!('"');
+                        i += 1;
+                    }
+                    'r' | 'b' if !prev_is_ident(&lines) => {
+                        // Possible raw/byte literal prefix: r"…", r#"…"#,
+                        // b"…", br#"…"#, b'…'.
+                        if let Some((consumed, m)) = match_literal_prefix(&chars, i) {
+                            for _ in 0..consumed {
+                                code!(chars[i]); // prefix chars + opening quote(s)
+                                i += 1;
+                            }
+                            mode = m;
+                        } else {
+                            code!(c);
+                            i += 1;
+                        }
+                    }
+                    '\'' => {
+                        // Char literal vs lifetime. A literal is '<esc>' or
+                        // 'x' (any single char followed by a closing quote);
+                        // everything else ('a in generics, '_ etc.) is a
+                        // lifetime and stays in the code channel.
+                        let is_char_lit = match next {
+                            Some('\\') => true,
+                            Some(_) => chars.get(i + 2) == Some(&'\''),
+                            None => false,
+                        };
+                        code!('\'');
+                        i += 1;
+                        if is_char_lit {
+                            mode = Mode::CharLit;
+                        }
+                    }
+                    _ => {
+                        code!(c);
+                        i += 1;
+                    }
+                }
+            }
+            Mode::LineComment => {
+                comment!(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    comment!('/');
+                    comment!('*');
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    comment!('*');
+                    comment!('/');
+                    i += 2;
+                    mode = if depth > 1 {
+                        Mode::BlockComment(depth - 1)
+                    } else {
+                        Mode::Code
+                    };
+                } else {
+                    comment!(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // Skip the escaped char — unless it is a newline
+                    // (line-continuation), which must still split lines.
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    code!('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1; // blank out content
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && raw_str_closes(&chars, i, hashes) {
+                    code!('"');
+                    for _ in 0..hashes {
+                        code!('#');
+                    }
+                    i += 1 + hashes as usize;
+                    mode = Mode::Code;
+                } else {
+                    i += 1; // blank out content
+                }
+            }
+            Mode::CharLit => {
+                if c == '\\' {
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '\'' {
+                    code!('\'');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines
+}
+
+/// Whether the last emitted code char continues an identifier — used to
+/// tell the literal prefix `r` in `r"…"` from the trailing `r` of `for`.
+fn prev_is_ident(lines: &[Line]) -> bool {
+    lines
+        .last()
+        .and_then(|l| l.code.chars().last())
+        .is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// At `chars[i]` (an `r` or `b` not continuing an identifier), detect a
+/// raw/byte literal opener. Returns `(chars_to_consume, next_mode)` where
+/// the consumed span covers the prefix and the opening quote(s).
+fn match_literal_prefix(chars: &[char], i: usize) -> Option<(usize, Mode)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    let raw = chars.get(j) == Some(&'r');
+    if raw {
+        j += 1;
+        let mut hashes = 0u32;
+        while chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if chars.get(j) == Some(&'"') {
+            return Some((j - i + 1, Mode::RawStr(hashes)));
+        }
+        return None; // e.g. `r#ident` raw identifier — leave as code
+    }
+    match chars.get(j) {
+        Some('"') => Some((j - i + 1, Mode::Str)),
+        Some('\'') => Some((j - i + 1, Mode::CharLit)),
+        _ => None,
+    }
+}
+
+/// At a `"` inside a raw string with `hashes` hashes, check the closer.
+fn raw_str_closes(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn splits_code_and_line_comment() {
+        let lines = lex("let x = 1; // SAFETY: fine\n");
+        assert_eq!(lines[0].code, "let x = 1; ");
+        assert!(lines[0].comment.contains("SAFETY: fine"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let lines = lex("let s = \"unsafe Ordering::Release // ord:\";");
+        assert_eq!(lines[0].code, "let s = \"\";");
+        assert!(lines[0].comment.is_empty());
+    }
+
+    #[test]
+    fn raw_string_with_hashes() {
+        let lines = lex("let s = r#\"has \"quotes\" and unsafe\"#; let y = 2;");
+        assert_eq!(lines[0].code, "let s = r#\"\"#; let y = 2;");
+    }
+
+    #[test]
+    fn multiline_string_blanks_interior_lines() {
+        let c = code_of("let s = \"line one\nunsafe line two\";\nlet z = 3;");
+        assert_eq!(c[0], "let s = \"");
+        assert_eq!(c[1], "\";");
+        assert_eq!(c[2], "let z = 3;");
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let lines = lex("a /* outer /* inner */ still */ b");
+        assert_eq!(lines[0].code.replace(' ', ""), "ab");
+        assert!(lines[0].comment.contains("inner"));
+    }
+
+    #[test]
+    fn multiline_block_comment_marks_every_line() {
+        let lines = lex("code(); /* SAFETY:\nspans lines */ tail();");
+        assert!(lines[0].comment.contains("SAFETY:"));
+        assert!(lines[1].comment.contains("spans lines"));
+        assert_eq!(lines[1].code.trim(), "tail();");
+    }
+
+    #[test]
+    fn lifetime_is_not_a_char_literal() {
+        let lines = lex("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(lines[0].code.contains("&'a str"));
+    }
+
+    #[test]
+    fn char_literal_contents_blanked() {
+        let lines = lex("let c = 'u'; let esc = '\\n'; let q = '\"';");
+        // The quote inside the char literal must not open a string.
+        assert!(lines[0].code.contains("let esc"));
+        assert!(lines[0].code.contains("let q"));
+        assert!(!lines[0].code.contains('u'));
+    }
+
+    #[test]
+    fn byte_string_and_byte_char() {
+        let lines = lex("let b = b\"unsafe\"; let c = b'x'; for_ = 1;");
+        assert_eq!(lines[0].code, "let b = b\"\"; let c = b''; for_ = 1;");
+    }
+
+    #[test]
+    fn ident_ending_in_r_does_not_open_raw_string() {
+        // `for` ends in `r`; the following `"` is a plain string.
+        let lines = lex("for x in bar\"s\" {}");
+        assert_eq!(lines[0].code, "for x in bar\"\" {}");
+    }
+
+    #[test]
+    fn doc_comments_land_in_comment_channel() {
+        let lines = lex("/// # Safety\n/// callers must hold the guard\nunsafe fn f() {}");
+        assert!(lines[0].comment.contains("# Safety"));
+        assert!(lines[1].comment.contains("guard"));
+        assert!(lines[2].code.contains("unsafe fn"));
+    }
+}

@@ -1,0 +1,189 @@
+//! `fleec-audit` — an in-repo static analyzer for lock-free discipline.
+//!
+//! FLeeC's correctness story rests on hand-maintained invariants: every
+//! `unsafe` site has a safety argument, every release-side memory
+//! ordering names the acquire it pairs with (the map lives in
+//! `docs/concurrency.md`), and every API that lends guard-scoped memory
+//! restates the byte-stability contract of the zero-copy read path.
+//! This module makes those conventions machine-checked: a dependency-free
+//! analyzer (small line-aware lexer + comment-adjacency rules) that walks
+//! `rust/src/**` and reports violations as both human diagnostics and a
+//! JSON report.
+//!
+//! Three entry points:
+//! * [`audit_source`] — rules over one in-memory file (unit-test
+//!   fixtures, editor integrations);
+//! * [`audit_tree`] — walk a source root and audit every `.rs` file;
+//! * the `fleec-audit` binary (`src/bin/fleec-audit.rs`) — CLI wrapper
+//!   used by CI (`--deny-warnings --json …`).
+//!
+//! The test gate `tests/audit.rs` runs [`audit_tree`] over this crate's
+//! own `src/` and fails on any unwaived finding, so `cargo test -q`
+//! enforces the discipline without any extra CI plumbing.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use rules::{audit_source, Finding, Rule, Severity};
+
+/// The result of auditing a tree: every finding plus walk statistics.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub lines_scanned: usize,
+}
+
+impl Report {
+    pub fn errors(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Warning)
+            .count()
+    }
+
+    /// Human-readable diagnostics, one `file:line: severity[rule] msg`
+    /// per finding, followed by a summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let _ = writeln!(
+                out,
+                "{}:{}: {}[{}] {}",
+                f.file,
+                f.line,
+                f.severity.label(),
+                f.rule.key(),
+                f.message
+            );
+        }
+        let _ = writeln!(
+            out,
+            "fleec-audit: {} error(s), {} warning(s) across {} file(s) / {} line(s)",
+            self.errors(),
+            self.warnings(),
+            self.files_scanned,
+            self.lines_scanned
+        );
+        out
+    }
+
+    /// Serialize as JSON (hand-rolled — the crate is dependency-free).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        let _ = writeln!(out, "  \"files_scanned\": {},", self.files_scanned);
+        let _ = writeln!(out, "  \"lines_scanned\": {},", self.lines_scanned);
+        let _ = writeln!(out, "  \"errors\": {},", self.errors());
+        let _ = writeln!(out, "  \"warnings\": {},", self.warnings());
+        out.push_str("  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "\n    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"severity\": {}, \
+                 \"message\": {}}}",
+                json_str(&f.file),
+                f.line,
+                json_str(f.rule.key()),
+                json_str(f.severity.label()),
+                json_str(&f.message)
+            );
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for determinism.
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(root)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Audit every `.rs` file under `root` (typically the crate's `src/`).
+pub fn audit_tree(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    let mut report = Report::default();
+    for path in files {
+        let src = fs::read_to_string(&path)?;
+        report.files_scanned += 1;
+        report.lines_scanned += src.lines().count();
+        let label = path.to_string_lossy();
+        report.findings.extend(audit_source(&label, &src));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_report_escapes_and_counts() {
+        let mut r = Report::default();
+        r.files_scanned = 1;
+        r.lines_scanned = 2;
+        r.findings = audit_source("src/ebr/x.rs", "unsafe fn f(s: &str) {} // has \"quote\n");
+        assert_eq!(r.errors(), 1);
+        let j = r.to_json();
+        assert!(j.contains("\"errors\": 1"));
+        assert!(j.contains("\"rule\": \"safety\""));
+        // Valid JSON shape: balanced braces/brackets at least.
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn render_has_summary_line() {
+        let r = Report::default();
+        assert!(r.render().contains("0 error(s), 0 warning(s)"));
+    }
+}

@@ -1,0 +1,645 @@
+//! The lock-free-discipline rules enforced by `fleec-audit`.
+//!
+//! All three rules are *comment-adjacency* checks over the per-line
+//! code/comment channels produced by [`super::lexer`]:
+//!
+//! * **U1 `safety`** — every line of code containing the `unsafe`
+//!   keyword must carry a `SAFETY:` marker (or a `# Safety` doc
+//!   section): a trailing comment on the same line, or a contiguous
+//!   comment block immediately above (attribute-only lines in between
+//!   are allowed; a blank line breaks adjacency).
+//! * **O1 `ord`** — every `Ordering::Release` / `Ordering::AcqRel` /
+//!   `Ordering::SeqCst` site must carry an `ord:` tag naming the
+//!   Acquire counterpart it pairs with (see `docs/concurrency.md`).
+//!   `Ordering::Relaxed` inside the lock-free core
+//!   (`lockfree/`, `ebr/`, `slab/`, `sync/`, `cache/fleec/`) must carry
+//!   an `ord: relaxed-ok <reason>` tag; outside the core, `Relaxed` is
+//!   flagged only on lines that also mention `AtomicPtr` (pointer-valued
+//!   atomics are never orderable "by accident"). Plain `Acquire` needs
+//!   no tag — it is named by its Release counterpart's tag.
+//! * **G1 `guard`** — in the guard-lending layers (`ebr/`, `slab/`,
+//!   `cache/fleec/`), `pub` functions returning raw pointers or
+//!   explicit-lifetime references must carry a `guard-stable:` tag
+//!   restating the byte-stability contract of the zero-copy read path.
+//!
+//! Any finding can be waived in place with `audit:allow(<rule>) <reason>`
+//! (rule keys: `safety`, `ord`, `guard`). A waiver without a reason, or
+//! with an unknown rule key, is reported as a warning.
+//!
+//! Lines inside `#[cfg(test)] mod …` blocks are skipped: test code is
+//! covered dynamically (Miri and the sanitizer jobs), and the static
+//! discipline targets production paths.
+
+use super::lexer::{lex, Line};
+
+/// Rule identifiers (the keys accepted by `audit:allow(...)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// U1: `unsafe` without an adjacent `SAFETY:` comment.
+    Safety,
+    /// O1: ordering site without an adjacent `ord:` tag.
+    Ord,
+    /// G1: guard-lending `pub fn` without a `guard-stable:` tag.
+    Guard,
+    /// Malformed waiver (no reason / unknown rule key).
+    Waiver,
+}
+
+impl Rule {
+    pub fn key(self) -> &'static str {
+        match self {
+            Rule::Safety => "safety",
+            Rule::Ord => "ord",
+            Rule::Guard => "guard",
+            Rule::Waiver => "waiver",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One diagnostic: `file:line: [rule] message`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    /// 1-indexed source line.
+    pub line: usize,
+    pub rule: Rule,
+    pub severity: Severity,
+    pub message: String,
+}
+
+/// Path prefixes (relative to `src/`) forming the lock-free core, where
+/// even `Relaxed` must justify itself.
+const CORE_PATHS: &[&str] = &["lockfree/", "ebr/", "slab/", "sync/", "cache/fleec/"];
+
+/// Path prefixes where G1 (guard-stable returns) applies.
+const GUARD_PATHS: &[&str] = &["ebr/", "slab/", "cache/fleec/"];
+
+/// Normalize a path label to its `src/`-relative form with `/` separators.
+fn rel_label(path: &str) -> String {
+    let p = path.replace('\\', "/");
+    match p.rfind("/src/") {
+        Some(i) => p[i + 5..].to_string(),
+        None => p.strip_prefix("src/").unwrap_or(&p).to_string(),
+    }
+}
+
+fn in_paths(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+/// Word-boundary token search over the code channel.
+fn has_token(code: &str, word: &str) -> bool {
+    token_pos(code, word).is_some()
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Marker search over comment text: the marker must start at a
+/// non-identifier boundary (so "word:" never satisfies "ord:").
+fn has_marker(comment: &str, marker: &str) -> bool {
+    let bytes = comment.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = comment[start..].find(marker) {
+        let i = start + pos;
+        if i == 0 || !is_ident_byte(bytes[i - 1]) {
+            return true;
+        }
+        start = i + marker.len();
+    }
+    false
+}
+
+/// Whether a line is attribute-only (e.g. `#[inline]`) — transparent for
+/// comment-adjacency but contributes no comment text itself.
+fn is_attr_only(code: &str) -> bool {
+    let t = code.trim();
+    t.starts_with("#[") || t.starts_with("#![")
+}
+
+/// The comment context of line `i` (0-indexed): the line's own comment
+/// plus the contiguous comment block immediately above. Attribute-only
+/// lines are skipped while walking up; a line with real code or a fully
+/// blank line terminates the walk.
+fn comment_context(lines: &[Line], i: usize) -> String {
+    let mut ctx = lines[i].comment.clone();
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if l.is_code_blank() && !l.comment.is_empty() {
+            ctx.push('\n');
+            ctx.push_str(&l.comment);
+        } else if !l.is_code_blank() && is_attr_only(&l.code) && l.comment.is_empty() {
+            continue; // transparent attribute line
+        } else if !l.is_code_blank() && is_attr_only(&l.code) {
+            // Attribute line with a trailing comment: transparent AND
+            // contributes its comment.
+            ctx.push('\n');
+            ctx.push_str(&l.comment);
+        } else {
+            break; // real code or fully blank line
+        }
+    }
+    ctx
+}
+
+/// Parse waivers out of a comment context. Returns `(waived_rules,
+/// malformed)` where `malformed` lists `(needle, problem)` pairs.
+fn waivers(ctx: &str) -> (Vec<&'static str>, Vec<String>) {
+    let mut waived = Vec::new();
+    let mut malformed = Vec::new();
+    let mut start = 0;
+    const NEEDLE: &str = "audit:allow(";
+    while let Some(pos) = ctx[start..].find(NEEDLE) {
+        let open = start + pos + NEEDLE.len();
+        match ctx[open..].find(')') {
+            None => {
+                malformed.push("unclosed audit:allow(".to_string());
+                break;
+            }
+            Some(close_rel) => {
+                let key = ctx[open..open + close_rel].trim();
+                // Non-identifier "keys" (e.g. the `<rule>` placeholder in
+                // prose documenting the waiver syntax) are not waiver
+                // attempts — skip them silently.
+                if key.is_empty() || !key.bytes().all(is_ident_byte) {
+                    start = open + close_rel + 1;
+                    continue;
+                }
+                let after = ctx[open + close_rel + 1..]
+                    .lines()
+                    .next()
+                    .unwrap_or("")
+                    .trim();
+                let known: Option<&'static str> = match key {
+                    "safety" | "U1" => Some("safety"),
+                    "ord" | "O1" => Some("ord"),
+                    "guard" | "G1" => Some("guard"),
+                    _ => None,
+                };
+                match known {
+                    None => malformed.push(format!("unknown rule key `{key}` in audit:allow")),
+                    Some(k) => {
+                        if after.is_empty() {
+                            malformed.push(format!("audit:allow({k}) carries no reason"));
+                        }
+                        waived.push(k);
+                    }
+                }
+                start = open + close_rel + 1;
+            }
+        }
+    }
+    (waived, malformed)
+}
+
+/// Mark lines belonging to `#[cfg(test)] mod … { … }` blocks.
+fn cfg_test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].code.trim() == "#[cfg(test)]" {
+            // Walk forward over attributes/comments to the introduced item.
+            let mut j = i + 1;
+            while j < lines.len()
+                && (lines[j].is_code_blank() || is_attr_only(&lines[j].code))
+            {
+                j += 1;
+            }
+            if j < lines.len() && has_token(&lines[j].code, "mod") {
+                // Skip from the attribute through the matching close brace.
+                let mut depth = 0i64;
+                let mut opened = false;
+                let mut k = j;
+                while k < lines.len() {
+                    for c in lines[k].code.chars() {
+                        match c {
+                            '{' => {
+                                depth += 1;
+                                opened = true;
+                            }
+                            '}' => depth -= 1,
+                            _ => {}
+                        }
+                    }
+                    mask[k] = true;
+                    if opened && depth <= 0 {
+                        break;
+                    }
+                    k += 1;
+                }
+                for m in mask.iter_mut().take(j).skip(i) {
+                    *m = true;
+                }
+                i = k + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// Extract the signature of a fn item starting at line `i`: concatenated
+/// code from the `fn` line until the body `{` or a trailing `;`.
+fn fn_signature(lines: &[Line], i: usize) -> String {
+    let mut sig = String::new();
+    for l in lines.iter().skip(i).take(16) {
+        sig.push_str(&l.code);
+        sig.push(' ');
+        if l.code.contains('{') || l.code.trim_end().ends_with(';') {
+            break;
+        }
+    }
+    sig
+}
+
+/// The return type portion of a signature: everything after the first
+/// paren-depth-0 `->`, up to `{`, `;` or `where`.
+fn return_type(sig: &str) -> Option<String> {
+    let bytes = sig.as_bytes();
+    let mut depth = 0i64;
+    let mut k = 0;
+    let arrow = loop {
+        if k + 1 >= bytes.len() {
+            return None;
+        }
+        match bytes[k] {
+            b'(' => depth += 1,
+            b')' => depth -= 1,
+            b'-' if depth == 0 && bytes[k + 1] == b'>' => break k,
+            _ => {}
+        }
+        k += 1;
+    };
+    let rest = &sig[arrow + 2..];
+    let mut end = rest.len();
+    for stop in ["{", ";"] {
+        if let Some(p) = rest.find(stop) {
+            end = end.min(p);
+        }
+    }
+    // `where` as a token, not a substring of an identifier.
+    let mut start = 0;
+    while let Some(p) = rest[start..end].find("where") {
+        let i = start + p;
+        let before_ok = i == 0 || !is_ident_byte(rest.as_bytes()[i - 1]);
+        let after_ok =
+            i + 5 >= rest.len() || !is_ident_byte(rest.as_bytes()[i + 5]);
+        if before_ok && after_ok {
+            end = i;
+            break;
+        }
+        start = i + 5;
+    }
+    Some(rest[..end].to_string())
+}
+
+/// Whether a return type lends guard-scoped memory: raw pointers, or
+/// references with an explicit non-`'static` lifetime.
+fn lends_guard_memory(ret: &str) -> bool {
+    if ret.contains("*const") || ret.contains("*mut") {
+        return true;
+    }
+    let mut start = 0;
+    while let Some(p) = ret[start..].find("&'") {
+        let i = start + p;
+        let after = &ret[i + 2..];
+        if !after.starts_with("static") {
+            return true;
+        }
+        start = i + 2;
+    }
+    false
+}
+
+/// Byte offset of `word` as a whole token in `code`, if present.
+fn token_pos(code: &str, word: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let wlen = word.len();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let i = start + pos;
+        let before_ok = i == 0 || !is_ident_byte(bytes[i - 1]);
+        let after_ok = i + wlen >= bytes.len() || !is_ident_byte(bytes[i + wlen]);
+        if before_ok && after_ok {
+            return Some(i);
+        }
+        start = i + wlen;
+    }
+    None
+}
+
+/// Whether the fn item beginning at line `i` is pub. Visibility sits on
+/// the `fn` line itself in this codebase (`pub fn`, `pub(crate) unsafe
+/// fn`, …), so the check is a prefix scan of that line.
+fn is_pub_fn_line(code: &str) -> bool {
+    match token_pos(code, "fn") {
+        None => false,
+        Some(pos) => has_token(&code[..pos], "pub"),
+    }
+}
+
+/// Run every rule over one source file. `path` is used both for
+/// diagnostics and for path-scoped rules (core/guard layers).
+pub fn audit_source(path: &str, src: &str) -> Vec<Finding> {
+    let rel = rel_label(path);
+    let lines = lex(src);
+    let skip = cfg_test_mask(&lines);
+    let core = in_paths(&rel, CORE_PATHS);
+    let guard_layer = in_paths(&rel, GUARD_PATHS);
+    let mut out = Vec::new();
+
+    let mut push = |line: usize, rule: Rule, severity: Severity, message: String| {
+        out.push(Finding {
+            file: rel.clone(),
+            line: line + 1,
+            rule,
+            severity,
+            message,
+        });
+    };
+
+    for (i, l) in lines.iter().enumerate() {
+        if skip[i] || l.is_code_blank() {
+            continue;
+        }
+        let code = &l.code;
+        let ctx = comment_context(&lines, i);
+        let (waived, malformed) = waivers(&ctx);
+        for m in malformed {
+            push(i, Rule::Waiver, Severity::Warning, m);
+        }
+
+        // U1: unsafe needs SAFETY.
+        if has_token(code, "unsafe")
+            && !has_marker(&ctx, "SAFETY:")
+            && !ctx.contains("# Safety")
+            && !waived.contains(&"safety")
+        {
+            push(
+                i,
+                Rule::Safety,
+                Severity::Error,
+                "`unsafe` without an adjacent `SAFETY:` comment".to_string(),
+            );
+        }
+
+        // O1: release-side orderings need an ord: tag.
+        let strong = ["Ordering::Release", "Ordering::AcqRel", "Ordering::SeqCst"]
+            .iter()
+            .find(|o| code.contains(*o));
+        if let Some(o) = strong {
+            if !has_marker(&ctx, "ord:") && !waived.contains(&"ord") {
+                push(
+                    i,
+                    Rule::Ord,
+                    Severity::Error,
+                    format!("`{o}` without an `ord:` tag naming its Acquire counterpart"),
+                );
+            }
+        }
+
+        // O1: Relaxed in the core (or on AtomicPtr lines anywhere) needs
+        // an explicit relaxed-ok justification.
+        if code.contains("Ordering::Relaxed")
+            && (core || code.contains("AtomicPtr"))
+            && !has_marker(&ctx, "ord:")
+            && !waived.contains(&"ord")
+        {
+            push(
+                i,
+                Rule::Ord,
+                Severity::Error,
+                "`Ordering::Relaxed` in the lock-free core without an \
+                 `ord: relaxed-ok <reason>` tag"
+                    .to_string(),
+            );
+        }
+
+        // G1: guard-lending pub fns need a guard-stable: tag.
+        if guard_layer && is_pub_fn_line(code) {
+            let sig = fn_signature(&lines, i);
+            if let Some(ret) = return_type(&sig) {
+                if lends_guard_memory(&ret)
+                    && !has_marker(&ctx, "guard-stable:")
+                    && !waived.contains(&"guard")
+                {
+                    push(
+                        i,
+                        Rule::Guard,
+                        Severity::Error,
+                        format!(
+                            "pub fn returning guard-scoped memory (`{}`) without a \
+                             `guard-stable:` tag",
+                            ret.trim()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn errors(path: &str, src: &str) -> Vec<Finding> {
+        audit_source(path, src)
+            .into_iter()
+            .filter(|f| f.severity == Severity::Error)
+            .collect()
+    }
+
+    // ---- U1 fixtures -------------------------------------------------
+
+    #[test]
+    fn missing_safety_is_flagged() {
+        let f = errors("src/ebr/mod.rs", "fn f() {\n    unsafe { g() };\n}\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::Safety);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn same_line_safety_passes() {
+        let src = "fn f() {\n    unsafe { g() }; // SAFETY: g has no preconditions\n}\n";
+        assert!(errors("src/ebr/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn block_above_safety_passes_and_attr_is_transparent() {
+        let src = "// SAFETY: ptr is live for 'g\n#[inline]\nunsafe fn f() {}\n";
+        assert!(errors("src/ebr/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn doc_safety_section_passes() {
+        let src = "/// Does things.\n///\n/// # Safety\n/// caller pins an epoch\nunsafe fn f() {}\n";
+        assert!(errors("src/ebr/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn blank_line_breaks_adjacency() {
+        let src = "// SAFETY: stale, not adjacent\n\nunsafe fn f() {}\n";
+        let f = errors("src/ebr/mod.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::Safety);
+    }
+
+    #[test]
+    fn unsafe_in_string_or_comment_is_ignored() {
+        let src = "fn f() { let s = \"unsafe\"; } // unsafe is just a word here\n";
+        assert!(errors("src/ebr/mod.rs", src).is_empty());
+    }
+
+    // ---- O1 fixtures -------------------------------------------------
+
+    #[test]
+    fn untagged_release_is_flagged() {
+        let src = "fn f(a: &AtomicUsize) {\n    a.store(1, Ordering::Release);\n}\n";
+        let f = errors("src/server/mod.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::Ord);
+    }
+
+    #[test]
+    fn tagged_release_passes() {
+        let src = "// ord: Release publish; Acquire ctr: reader.load in g()\n\
+                   fn f(a: &AtomicUsize) { a.store(1, Ordering::Release); }\n";
+        assert!(errors("src/server/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn core_relaxed_needs_relaxed_ok() {
+        let src = "fn f(a: &AtomicUsize) { a.store(1, Ordering::Relaxed); }\n";
+        assert_eq!(errors("src/ebr/mod.rs", src).len(), 1);
+        // Same line outside the core: fine (not pointer-valued).
+        assert!(errors("src/server/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn non_core_atomicptr_relaxed_is_flagged() {
+        let src = "fn f(a: &AtomicPtr<u8>) { a.store(p, Ordering::Relaxed); }\n";
+        assert_eq!(errors("src/server/mod.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn relaxed_ok_tag_passes() {
+        let src = "// ord: relaxed-ok — monotonic stats counter, never read for sync\n\
+                   fn f(a: &AtomicUsize) { a.fetch_add(1, Ordering::Relaxed); }\n";
+        assert!(errors("src/ebr/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn word_colon_does_not_satisfy_ord_marker() {
+        let src = "// sword: not an ord tag\nfn f(a: &AtomicUsize) { a.store(1, Ordering::Release); }\n";
+        assert_eq!(errors("src/ebr/mod.rs", src).len(), 1);
+    }
+
+    // ---- G1 fixtures -------------------------------------------------
+
+    #[test]
+    fn pub_fn_returning_raw_ptr_needs_guard_stable() {
+        let src = "pub fn alloc(&self) -> *mut Node {\n    todo!()\n}\n";
+        let f = errors("src/cache/fleec/node.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::Guard);
+    }
+
+    #[test]
+    fn guard_stable_tag_passes() {
+        let src = "// guard-stable: bytes stay valid while the batch guard is pinned\n\
+                   pub fn view<'g>(&self, g: &'g Guard) -> &'g [u8] { todo!() }\n";
+        assert!(errors("src/cache/fleec/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn private_fn_and_static_ref_are_exempt() {
+        let src = "fn view<'g>(&self) -> &'g [u8] { todo!() }\n\
+                   pub fn name(&self) -> &'static str { \"x\" }\n";
+        assert!(errors("src/cache/fleec/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn guard_rule_scoped_to_guard_layers() {
+        let src = "pub fn raw(&self) -> *const u8 { todo!() }\n";
+        assert!(errors("src/server/mod.rs", src).is_empty());
+        assert_eq!(errors("src/slab/mod.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn multiline_signature_return_type_found() {
+        let src = "pub fn alloc(\n    &self,\n    n: usize,\n) -> *mut u8 {\n    todo!()\n}\n";
+        assert_eq!(errors("src/slab/mod.rs", src).len(), 1);
+    }
+
+    // ---- waivers and cfg(test) ---------------------------------------
+
+    #[test]
+    fn waiver_suppresses_finding() {
+        let src = "// audit:allow(safety) FFI shim, kernel validates fds\n\
+                   unsafe fn f() {}\n";
+        assert!(errors("src/ebr/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waiver_without_reason_warns() {
+        let src = "// audit:allow(ord)\nfn f(a: &AtomicUsize) { a.store(1, Ordering::Release); }\n";
+        let all = audit_source("src/ebr/mod.rs", src);
+        assert!(all.iter().any(|f| f.rule == Rule::Waiver && f.severity == Severity::Warning));
+        // The ord finding itself is still suppressed by the waiver.
+        assert!(!all.iter().any(|f| f.rule == Rule::Ord));
+    }
+
+    #[test]
+    fn unknown_waiver_key_warns_and_does_not_waive() {
+        let src = "// audit:allow(everything) because\nunsafe fn f() {}\n";
+        let all = audit_source("src/ebr/mod.rs", src);
+        assert!(all.iter().any(|f| f.rule == Rule::Waiver));
+        assert!(all.iter().any(|f| f.rule == Rule::Safety));
+    }
+
+    #[test]
+    fn cfg_test_mod_is_skipped() {
+        let src = "fn prod() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       use super::*;\n\
+                       #[test]\n\
+                       fn t() { unsafe { core::hint::unreachable_unchecked() } }\n\
+                   }\n";
+        assert!(errors("src/ebr/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn code_after_cfg_test_mod_is_still_audited() {
+        let src = "#[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { unsafe { g() } }\n\
+                   }\n\
+                   unsafe fn tail() {}\n";
+        let f = errors("src/ebr/mod.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 5);
+    }
+}

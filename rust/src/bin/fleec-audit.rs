@@ -1,0 +1,96 @@
+//! `fleec-audit` — CLI for the in-repo lock-free-discipline analyzer.
+//!
+//! Walks a Rust source tree (default: this crate's `src/`) and enforces
+//! the repo's lock-free conventions (see [`fleec::audit`] and
+//! `rust/docs/concurrency.md`): `SAFETY:` on every `unsafe` site,
+//! `ord:` tags on every release-side memory ordering, `guard-stable:`
+//! on guard-lending public APIs.
+//!
+//! ```text
+//! fleec-audit [--root DIR] [--json PATH|-] [--deny-warnings] [--quiet]
+//! ```
+//!
+//! Exit status: 0 clean, 1 findings (errors, or warnings under
+//! `--deny-warnings`), 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fleec::audit;
+
+struct Opts {
+    root: PathBuf,
+    json: Option<String>,
+    deny_warnings: bool,
+    quiet: bool,
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: fleec-audit [--root DIR] [--json PATH|-] [--deny-warnings] [--quiet]\n\
+         \n\
+         Audits a Rust tree for FLeeC's lock-free discipline:\n\
+           safety  `unsafe` sites must carry a SAFETY: comment\n\
+           ord     Release/AcqRel/SeqCst must carry an ord: pairing tag;\n\
+                   Relaxed in the lock-free core must carry ord: relaxed-ok\n\
+           guard   guard-lending pub fns must carry a guard-stable: tag\n\
+         Waive in place with `audit:allow(<rule>) <reason>`."
+    );
+    std::process::exit(2);
+}
+
+fn parse_args() -> Opts {
+    let mut opts = Opts {
+        root: PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src")),
+        json: None,
+        deny_warnings: false,
+        quiet: false,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(d) => opts.root = PathBuf::from(d),
+                None => usage(),
+            },
+            "--json" => match args.next() {
+                Some(p) => opts.json = Some(p),
+                None => usage(),
+            },
+            "--deny-warnings" => opts.deny_warnings = true,
+            "--quiet" | "-q" => opts.quiet = true,
+            "--help" | "-h" => usage(),
+            _ => usage(),
+        }
+    }
+    opts
+}
+
+fn main() -> ExitCode {
+    let opts = parse_args();
+    let report = match audit::audit_tree(&opts.root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fleec-audit: cannot walk {}: {e}", opts.root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if let Some(path) = &opts.json {
+        let json = report.to_json();
+        if path == "-" {
+            print!("{json}");
+        } else if let Err(e) = std::fs::write(path, json) {
+            eprintln!("fleec-audit: cannot write {path}: {e}");
+            return ExitCode::from(2);
+        }
+    }
+    if !opts.quiet || report.errors() > 0 || report.warnings() > 0 {
+        eprint!("{}", report.render());
+    }
+    let failed = report.errors() > 0 || (opts.deny_warnings && report.warnings() > 0);
+    if failed {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}

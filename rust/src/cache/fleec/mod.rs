@@ -145,6 +145,8 @@ impl FleecCache {
     pub fn rmw_speculation_misses(&self) -> u64 {
         #[cfg(debug_assertions)]
         {
+            // ord: relaxed-ok — debug accounting counter; stats tolerate
+            // racy snapshots.
             self.rmw_speculation_misses.load(Ordering::Relaxed)
         }
         #[cfg(not(debug_assertions))]
@@ -156,6 +158,7 @@ impl FleecCache {
     #[inline]
     fn note_rmw_speculation_miss(&self) {
         #[cfg(debug_assertions)]
+        // ord: relaxed-ok — debug accounting counter.
         self.rmw_speculation_misses.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -189,7 +192,10 @@ impl FleecCache {
     fn touch_clock(&self, t: &Table, hash: u64) {
         let c = &t.clocks[t.index(hash)];
         let max = self.config.clock_max;
+        // ord: relaxed-ok — CLOCK eviction heuristic (load + store below);
+        // racy reads/writes only skew victim choice.
         if c.load(Ordering::Relaxed) != max {
+            // ord: relaxed-ok — CLOCK heuristic, as above.
             c.store(max, Ordering::Relaxed);
         }
     }
@@ -200,6 +206,8 @@ impl FleecCache {
     #[inline]
     fn seed_clock(&self, t: &Table, hash: u64) {
         let c = &t.clocks[t.index(hash)];
+        // ord: relaxed-ok — CLOCK eviction heuristic; a lost race only
+        // skews victim choice.
         let _ = c.compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed);
     }
 
@@ -216,6 +224,9 @@ impl FleecCache {
             }
             match node
                 .next
+                // ord: AcqRel — Release seals the node's final successor
+                // under the DEL mark; Acquire counterpart: the link loads
+                // in search and the unlink CAS there.
                 .compare_exchange_weak(w, w | DEL, Ordering::AcqRel, Ordering::Acquire)
             {
                 Ok(_) => return true,
@@ -232,6 +243,9 @@ impl FleecCache {
                 Find::Frozen => {
                     let next = t.next.load(Ordering::Acquire);
                     debug_assert!(!next.is_null());
+                    // SAFETY: chain tables are retired only through EBR
+                    // after the root swings past them; the guard keeps
+                    // `next` live.
                     let next_ref = unsafe { &*next };
                     migrate_bucket(t, t.index(hash), next_ref, &self.slab, &self.items, guard);
                     self.try_promote(guard);
@@ -240,6 +254,7 @@ impl FleecCache {
                 Find::Forwarded => {
                     let next = t.next.load(Ordering::Acquire);
                     debug_assert!(!next.is_null());
+                    // SAFETY: guard-protected successor table, as above.
                     t = unsafe { &*next };
                 }
                 found => return (t, found),
@@ -251,6 +266,8 @@ impl FleecCache {
     /// successor and retire the old generation.
     fn try_promote(&self, guard: &Guard) {
         let root = self.table.load(Ordering::Acquire);
+        // SAFETY: the root table is only retired after being unlinked by
+        // the CAS below, and we hold a guard.
         let t = unsafe { &*root };
         if !t.fully_migrated() {
             return;
@@ -261,9 +278,14 @@ impl FleecCache {
         }
         if self
             .table
+            // ord: AcqRel — Release publishes the promotion so later root
+            // loads start at the new generation; Acquire counterpart: the
+            // root loads in root() and here.
             .compare_exchange(root, next, Ordering::AcqRel, Ordering::Acquire)
             .is_ok()
         {
+            // SAFETY: we won the root swing — sole retirer of the old
+            // generation; stragglers still reading it hold guards.
             unsafe { guard.defer_drop_box(root) };
         }
     }
@@ -272,6 +294,8 @@ impl FleecCache {
     /// 1.5 threshold.
     fn maybe_expand(&self, guard: &Guard) {
         let t = self.root(guard);
+        // ord: relaxed-ok — load-factor heuristic; an approximate count
+        // only shifts when expansion triggers.
         let items = self.items.load(Ordering::Relaxed);
         if (items as f64) <= self.config.load_factor * t.len() as f64 {
             return;
@@ -281,7 +305,11 @@ impl FleecCache {
             // bucket per overloaded insert) and promote when done, so
             // chained expansions never stall waiting for the maintenance
             // thread.
+            // SAFETY: non-null was just checked; successor tables are
+            // retired only through EBR and we hold a guard.
             let next = unsafe { &*t.next.load(Ordering::Acquire) };
+            // ord: relaxed-ok — CLOCK-hand position; any interleaving of
+            // increments is a valid sweep order.
             let idx = t.hand.fetch_add(1, Ordering::Relaxed) & t.mask;
             migrate_bucket(t, idx, next, &self.slab, &self.items, guard);
             self.try_promote(guard);
@@ -291,12 +319,17 @@ impl FleecCache {
         match t.next.compare_exchange(
             std::ptr::null_mut(),
             new,
+            // ord: AcqRel — Release publishes the new table's initialized
+            // buckets; Acquire counterpart: the `next` loads in
+            // locate_for_write, migrate_bucket and the read paths.
             Ordering::AcqRel,
             Ordering::Acquire,
         ) {
             Ok(_) => {
                 self.metrics.expansions.inc();
             }
+            // SAFETY: the CAS failed — `new` was never published and we
+            // still exclusively own the Box.
             Err(_) => unsafe {
                 drop(Box::from_raw(new));
             },
@@ -337,6 +370,7 @@ impl FleecCache {
             }
             {
                 let guard = self.collector.pin();
+                // ord: relaxed-ok — tuning knob; any recent value works.
                 let batch = self.evict_batch.load(Ordering::Relaxed) as usize;
                 self.evict_some(batch * (round + 1), &guard);
             }
@@ -363,16 +397,23 @@ impl FleecCache {
             if next.is_null() {
                 break;
             }
+            // SAFETY: chain tables are retired only through EBR after the
+            // root swings past them; the guard keeps `next` live.
             t = unsafe { &*next };
         }
+        // ord: relaxed-ok — tuning knob; any recent value works.
         let decay = self.evict_decay.load(Ordering::Relaxed).max(1);
         let mut freed = 0usize;
         for t in chain.iter().rev() {
             let size = t.len();
             let mut scanned = 0usize;
             while freed < want && scanned < 2 * size {
+                // ord: relaxed-ok — CLOCK-hand position; any interleaving
+                // of increments is a valid sweep order.
                 let idx = t.hand.fetch_add(1, Ordering::Relaxed) & t.mask;
                 scanned += 1;
+                // ord: relaxed-ok — CLOCK eviction heuristic; a stale
+                // value only skews victim choice.
                 let c = t.clocks[idx].load(Ordering::Relaxed);
                 if c > 0 {
                     // Racy decrement is fine: losing a race just means
@@ -380,7 +421,10 @@ impl FleecCache {
                     let _ = t.clocks[idx].compare_exchange(
                         c,
                         c.saturating_sub(decay),
+                        // ord: relaxed-ok — CLOCK heuristic (both
+                        // orderings); a lost race only skews victims.
                         Ordering::Relaxed,
+                        // ord: relaxed-ok — as above.
                         Ordering::Relaxed,
                     );
                     continue;
@@ -403,6 +447,8 @@ impl FleecCache {
         let mut freed = 0;
         let mut cur = crate::sync::tagged::untagged(head) as *mut Node;
         while !cur.is_null() {
+            // SAFETY: nodes are unlinked before EBR retirement and we
+            // hold a guard, so every reachable node is live.
             let node = unsafe { &*cur };
             let next = node.next.load(Ordering::Acquire);
             if next & DEL == 0 {
@@ -410,10 +456,16 @@ impl FleecCache {
                 if let ItemState::Live(item) = decode_item(w) {
                     if node
                         .item
+                        // ord: AcqRel — Acquire pairs with the Release of
+                        // the install CAS that published `item` (safe to
+                        // retire); Release publishes the tombstone to
+                        // writers whose item CAS now fails.
                         .compare_exchange(w, TOMB_WORD, Ordering::AcqRel, Ordering::Acquire)
                         .is_ok()
                     {
                         Item::retire(guard, &self.slab, item);
+                        // ord: relaxed-ok — accounting counter; stats
+                        // tolerate racy snapshots.
                         self.items.fetch_sub(1, Ordering::Relaxed);
                         self.metrics.evictions.inc();
                         Self::try_mark(node);
@@ -430,10 +482,15 @@ impl FleecCache {
     fn expire_node(&self, node: &Node, item_word: usize, item: *mut Item, guard: &Guard) -> bool {
         if node
             .item
+            // ord: AcqRel — Acquire pairs with the Release of the install
+            // CAS that published `item`; Release publishes the tombstone
+            // to writers whose item CAS now fails.
             .compare_exchange(item_word, TOMB_WORD, Ordering::AcqRel, Ordering::Acquire)
             .is_ok()
         {
             Item::retire(guard, &self.slab, item);
+            // ord: relaxed-ok — accounting counter; stats tolerate racy
+            // snapshots.
             self.items.fetch_sub(1, Ordering::Relaxed);
             self.metrics.expired.inc();
             Self::try_mark(node);
@@ -484,24 +541,35 @@ impl FleecCache {
         mode: StoreMode,
         guard: &Guard,
     ) -> StoreOutcome {
+        // ord: relaxed-ok — the counter only needs uniqueness; the
+        // install CAS's Release publishes the stamped token.
         let cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
+        // SAFETY: `item` is exclusively ours — unpublished until the
+        // install CAS below.
         unsafe { (*item).cas = cas };
         let mut shell: *mut Node = std::ptr::null_mut();
         let outcome = loop {
             let (t, find) = self.locate_for_write(hash, key, guard);
             match find {
                 Find::Found(n) => {
+                    // SAFETY: nodes are unlinked before EBR retirement and
+                    // we hold a guard.
                     let node = unsafe { &*n };
                     let w = node.item.load(Ordering::Acquire);
                     match decode_item(w) {
                         ItemState::Live(old) => {
                             // Preconditions against the live value.
+                            // SAFETY: `old` was live under the guard;
+                            // unpublished items retire through EBR, so the
+                            // header outlives our pin.
                             let expired = is_expired(unsafe { (*old).deadline });
                             if expired && self.expire_node(node, w, old, guard) {
                                 continue; // now absent; loop decides
                             }
                             match mode {
                                 StoreMode::Add => break StoreOutcome::NotStored,
+                                // SAFETY: guard-protected live item, as
+                                // above.
                                 StoreMode::Cas(expect) if unsafe { (*old).cas } != expect => {
                                     break StoreOutcome::Exists;
                                 }
@@ -509,6 +577,12 @@ impl FleecCache {
                             }
                             if node
                                 .item
+                                // ord: AcqRel — Release publishes the new
+                                // item's bytes and token (Acquire
+                                // counterpart: item loads in get_view /
+                                // rmw_snapshot); Acquire pairs with the
+                                // Release that published `old`, so the
+                                // retire below is well-founded.
                                 .compare_exchange(w, live_word(item), Ordering::AcqRel, Ordering::Acquire)
                                 .is_ok()
                             {
@@ -542,11 +616,20 @@ impl FleecCache {
                     if shell.is_null() {
                         shell = Node::alloc(hash, key, item);
                     }
+                    // SAFETY: `shell` is exclusively ours until the CAS
+                    // below publishes it.
+                    // ord: relaxed-ok — pre-publication store; the Release
+                    // CAS below publishes it.
                     unsafe { (*shell).next.store(succ_word, Ordering::Relaxed) };
+                    // SAFETY: `pred` is either a bucket head or a
+                    // guard-protected node's link observed by search.
                     if unsafe {
                         (*pred).compare_exchange(
                             succ_word,
                             shell as usize,
+                            // ord: AcqRel — Release publishes the node's
+                            // hash/key/item/next writes; Acquire
+                            // counterpart: the link loads in search.
                             Ordering::AcqRel,
                             Ordering::Acquire,
                         )
@@ -554,6 +637,8 @@ impl FleecCache {
                     .is_ok()
                     {
                         shell = std::ptr::null_mut(); // published
+                        // ord: relaxed-ok — accounting counter; the
+                        // load-factor check tolerates approximation.
                         self.items.fetch_add(1, Ordering::Relaxed);
                         self.seed_clock(t, hash);
                         self.maybe_expand(guard);
@@ -565,9 +650,13 @@ impl FleecCache {
         };
         // Unpublished leftovers.
         if !shell.is_null() {
+            // SAFETY: the shell was never published — we still exclusively
+            // own the Box.
             unsafe { drop(Box::from_raw(shell)) };
         }
         if outcome != StoreOutcome::Stored {
+            // SAFETY: on every non-Stored outcome the item was never
+            // published — no reader can hold it, free directly.
             unsafe { self.slab.free(item as *mut u8, (*item).class) };
         }
         outcome
@@ -599,10 +688,15 @@ impl FleecCache {
         loop {
             match search(t, hash, key, false, guard) {
                 Find::Found(n) => {
+                    // SAFETY: nodes are unlinked before EBR retirement and
+                    // we hold a guard.
                     let node = unsafe { &*n };
                     let w = node.item.load(Ordering::Acquire);
                     match decode_item(w) {
                         ItemState::Live(item) => {
+                            // SAFETY: live item observed under the guard;
+                            // unpublishers retire through EBR, so header
+                            // and bytes outlive our pin.
                             let hdr = unsafe { &*item };
                             if is_expired(hdr.deadline) {
                                 self.expire_node(node, w, item, guard);
@@ -612,6 +706,8 @@ impl FleecCache {
                                 token: hdr.cas,
                                 flags: hdr.flags,
                                 deadline: hdr.deadline,
+                                // SAFETY: guard-protected live item, as
+                                // above.
                                 data: unsafe { Item::data(item) }.to_vec(),
                             };
                         }
@@ -621,6 +717,8 @@ impl FleecCache {
                             if next.is_null() {
                                 return RmwSnap::Miss;
                             }
+                            // SAFETY: guard-protected successor table —
+                            // chain tables retire only through EBR.
                             t = unsafe { &*next };
                         }
                     }
@@ -630,6 +728,7 @@ impl FleecCache {
                     if next.is_null() {
                         return RmwSnap::Miss;
                     }
+                    // SAFETY: guard-protected successor table, as above.
                     t = unsafe { &*next };
                 }
                 Find::Absent { .. } | Find::Frozen => return RmwSnap::Miss,
@@ -708,19 +807,31 @@ impl FleecCache {
             let (_, find) = self.locate_for_write(hash, key, guard);
             match find {
                 Find::Found(n) => {
+                    // SAFETY: nodes are unlinked before EBR retirement and
+                    // we hold a guard.
                     let node = unsafe { &*n };
                     let w = node.item.load(Ordering::Acquire);
                     match decode_item(w) {
                         ItemState::Live(old) => {
+                            // SAFETY: live item observed under the guard;
+                            // unpublishers retire through EBR.
                             if unsafe { (*old).cas } != token {
                                 return false;
                             }
                             // Stamp the token at install time so batched
                             // runs hand out tokens in execution order.
+                            // ord: relaxed-ok — uniqueness only; the
+                            // install CAS's Release publishes the stamp.
                             let cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
+                            // SAFETY: `item` is exclusively ours until the
+                            // CAS below publishes it.
                             unsafe { (*item).cas = cas };
                             if node
                                 .item
+                                // ord: AcqRel — Release publishes the new
+                                // item's bytes and token; Acquire pairs
+                                // with the Release that published `old`,
+                                // grounding the retire below.
                                 .compare_exchange(w, live_word(item), Ordering::AcqRel, Ordering::Acquire)
                                 .is_ok()
                             {
@@ -768,6 +879,8 @@ impl FleecCache {
                     // Token moved (or the key vanished) between the
                     // pre-read and our turn: drop the speculative item
                     // and rerun the read-stage-install loop in place.
+                    // SAFETY: the speculative item was never published —
+                    // no reader can hold it, free directly.
                     unsafe { self.slab.free(item as *mut u8, (*item).class) };
                     self.note_rmw_speculation_miss();
                     fallback()
@@ -804,15 +917,26 @@ impl FleecCache {
         loop {
             match search(t, hash, key, false, guard) {
                 Find::Found(n) => {
+                    // SAFETY: nodes are unlinked before EBR retirement and
+                    // we hold a guard.
                     let node = unsafe { &*n };
                     let w = node.item.load(Ordering::Acquire);
                     match decode_item(w) {
                         ItemState::Live(item) => {
+                            // SAFETY: live item observed under the guard;
+                            // see the SOUNDNESS note in the fn doc.
                             let hdr = unsafe { &*item };
                             if is_expired(hdr.deadline) {
                                 self.expire_node(node, w, item, guard);
                                 return None;
                             }
+                            // SAFETY: the `'g` borrow is sound per the
+                            // SOUNDNESS note in the fn doc — every
+                            // unpublish retires through EBR, so the bytes
+                            // outlive the guard.
+                            // guard-stable: the lent slice lives in the
+                            // item's slab chunk; retirement is deferred
+                            // past every pinned guard.
                             let data: &'g [u8] = unsafe { Item::data(item) };
                             self.touch_clock(t, hash);
                             return Some((hdr.flags, hdr.cas, data));
@@ -823,6 +947,8 @@ impl FleecCache {
                             if next.is_null() {
                                 return None;
                             }
+                            // SAFETY: guard-protected successor table —
+                            // chain tables retire only through EBR.
                             t = unsafe { &*next };
                         }
                     }
@@ -832,6 +958,7 @@ impl FleecCache {
                     if next.is_null() {
                         return None;
                     }
+                    // SAFETY: guard-protected successor table, as above.
                     t = unsafe { &*next };
                 }
                 Find::Absent { .. } | Find::Frozen => return None,
@@ -854,16 +981,24 @@ impl FleecCache {
             let (_, find) = self.locate_for_write(hash, key, guard);
             match find {
                 Find::Found(n) => {
+                    // SAFETY: nodes are unlinked before EBR retirement and
+                    // we hold a guard.
                     let node = unsafe { &*n };
                     let w = node.item.load(Ordering::Acquire);
                     match decode_item(w) {
                         ItemState::Live(item) => {
                             if node
                                 .item
+                                // ord: AcqRel — Acquire pairs with the
+                                // Release that published `item`; Release
+                                // publishes the tombstone to racing
+                                // writers.
                                 .compare_exchange(w, TOMB_WORD, Ordering::AcqRel, Ordering::Acquire)
                                 .is_ok()
                             {
                                 Item::retire(guard, &self.slab, item);
+                                // ord: relaxed-ok — accounting counter;
+                                // stats tolerate racy snapshots.
                                 self.items.fetch_sub(1, Ordering::Relaxed);
                                 Self::try_mark(node);
                                 // Nudge physical cleanup.
@@ -927,6 +1062,8 @@ impl FleecCache {
                 return RmwResult::Done(new_value);
             }
             // Token moved under us: free the speculative item and retry.
+            // SAFETY: the speculative item was never published — no reader
+            // can hold it, free directly.
             unsafe { self.slab.free(item as *mut u8, (*item).class) };
         }
     }
@@ -1105,6 +1242,8 @@ impl Cache for FleecCache {
                 let mut order: Vec<u32> = (0..ops.len() as u32).collect();
                 order.sort_unstable_by_key(|&i| t.index(hashes[i as usize]));
                 for &i in &order {
+                    // ord: relaxed-ok — cache-line prefetch; the value is
+                    // discarded and re-loaded with Acquire at execution.
                     let _ = t.buckets[t.index(hashes[i as usize])].load(Ordering::Relaxed);
                 }
             }
@@ -1339,11 +1478,14 @@ impl Cache for FleecCache {
             if next.is_null() {
                 break;
             }
+            // SAFETY: guard-protected successor table — chain tables
+            // retire only through EBR.
             t = unsafe { &*next };
         }
     }
 
     fn item_count(&self) -> usize {
+        // ord: relaxed-ok — approximate counter by contract.
         self.items.load(Ordering::Relaxed)
     }
 
@@ -1379,6 +1521,8 @@ impl Cache for FleecCache {
         let root = self.root(&guard);
         let next = root.next.load(Ordering::Acquire);
         if !next.is_null() {
+            // SAFETY: guard-protected successor table — chain tables
+            // retire only through EBR.
             let next_ref = unsafe { &*next };
             for idx in 0..root.len() {
                 migrate_bucket(root, idx, next_ref, &self.slab, &self.items, &guard);
@@ -1393,13 +1537,18 @@ impl Cache for FleecCache {
         Some(
             t.clocks
                 .iter()
+                // ord: relaxed-ok — diagnostic snapshot of the CLOCK
+                // values; racy by nature.
                 .map(|c| c.load(Ordering::Relaxed))
                 .collect(),
         )
     }
 
     fn set_evict_params(&self, decay: u8, batch: u32) {
+        // ord: relaxed-ok — tuning knobs (both stores); no data is
+        // ordered against them.
         self.evict_decay.store(decay.max(1), Ordering::Relaxed);
+        // ord: relaxed-ok — as above.
         self.evict_batch.store(batch.max(1), Ordering::Relaxed);
     }
 }
@@ -1414,22 +1563,30 @@ impl FleecCache {
         }
         let mut cur = crate::sync::tagged::untagged(head) as *mut Node;
         while !cur.is_null() {
+            // SAFETY: nodes are unlinked before EBR retirement and we
+            // hold a guard.
             let node = unsafe { &*cur };
             let next = node.next.load(Ordering::Acquire);
             let w = node.item.load(Ordering::Acquire);
             if let ItemState::Live(item) = decode_item(w) {
                 if node
                     .item
+                    // ord: AcqRel — Acquire pairs with the Release that
+                    // published `item`; Release publishes the tombstone
+                    // to racing writers.
                     .compare_exchange(w, TOMB_WORD, Ordering::AcqRel, Ordering::Acquire)
                     .is_ok()
                 {
                     Item::retire(guard, &self.slab, item);
+                    // ord: relaxed-ok — accounting counter; stats
+                    // tolerate racy snapshots.
                     self.items.fetch_sub(1, Ordering::Relaxed);
                     Self::try_mark(node);
                 }
             }
             cur = crate::sync::tagged::untagged(next) as *mut Node;
         }
+        // ord: relaxed-ok — CLOCK eviction heuristic reset.
         t.clocks[idx].store(0, Ordering::Relaxed);
     }
 }
@@ -1441,7 +1598,10 @@ impl Drop for FleecCache {
         // retired into the collector frees when the collector drains.
         let mut t = *self.table.get_mut();
         while !t.is_null() {
+            // SAFETY: `&mut self` in drop — exclusive access; every table
+            // in the chain is owned by the cache until this point.
             let boxed = unsafe { Box::from_raw(t) };
+            // ord: relaxed-ok — exclusive access in drop.
             t = boxed.next.load(Ordering::Relaxed);
         }
     }

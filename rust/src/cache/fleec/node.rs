@@ -55,6 +55,11 @@ pub const ITEM_HEADER: usize = std::mem::size_of::<Item>();
 impl Item {
     /// Allocate an item from the slab and copy `value` in. `None` under
     /// memory pressure.
+    // guard-stable: the returned chunk is exclusively owned (unpublished)
+    // until the caller installs it in a node's item word; after
+    // publication its bytes never change — mutation swings the word to a
+    // fresh item and the old one is only freed via [`Item::retire`]
+    // through EBR, so guard-holding readers keep a byte-stable view.
     pub fn alloc(
         slab: &Slab,
         value: &[u8],
@@ -65,6 +70,9 @@ impl Item {
         let total = ITEM_HEADER + value.len();
         let (ptr, class) = slab.alloc(total)?;
         let item = ptr as *mut Item;
+        // SAFETY: `ptr` is a fresh chunk of ≥ `total` bytes from
+        // `slab.alloc`, exclusively ours — the header write and the value
+        // copy stay in bounds and race with nothing.
         unsafe {
             item.write(Item {
                 vlen: value.len() as u32,
@@ -83,6 +91,10 @@ impl Item {
     ///
     /// # Safety
     /// `ptr` must be a live item protected by an EBR guard.
+    // guard-stable: the slice lends the item's slab bytes. Items are
+    // immutable after publication and unpublish only via [`Item::retire`]
+    // (EBR), so while the caller's guard is pinned the bytes cannot be
+    // freed or rewritten — the PR-5 read-path contract.
     pub unsafe fn data<'a>(ptr: *const Item) -> &'a [u8] {
         let vlen = (*ptr).vlen as usize;
         std::slice::from_raw_parts((ptr as *const u8).add(ITEM_HEADER), vlen)
@@ -90,6 +102,9 @@ impl Item {
 
     /// Total slab bytes the item occupies.
     pub fn footprint(ptr: *const Item) -> usize {
+        // SAFETY: callers pass an item that is either exclusively owned
+        // (pre-publication) or guard-protected; the header is initialized
+        // by `Item::alloc` and immutable thereafter.
         unsafe { ITEM_HEADER + (*ptr).vlen as usize }
     }
 
@@ -97,6 +112,9 @@ impl Item {
     /// The `Arc` travels through the context word so the slab (and its
     /// pages) outlive every retired chunk no matter the drop order.
     pub fn retire(guard: &Guard, slab: &Arc<Slab>, ptr: *mut Item) {
+        // SAFETY: the reclaimer runs only after the grace period; `p` is the
+        // retired chunk and `ctx` the Arc<Slab> leaked below, so the
+        // free targets live pages of the right slab.
         unsafe fn reclaim(p: *mut u8, ctx: usize) {
             let slab = Arc::from_raw(ctx as *const Slab);
             let class = (*(p as *mut Item)).class;
@@ -105,6 +123,9 @@ impl Item {
         }
         let ctx = Arc::into_raw(Arc::clone(slab)) as usize;
         let bytes = Item::footprint(ptr);
+        // SAFETY: the caller won the item-word swap, so it exclusively
+        // owns `ptr`'s retirement; no new reference can be created once
+        // the word no longer carries the pointer.
         unsafe { guard.defer(ptr as *mut u8, ctx, bytes, reclaim) };
     }
 }
@@ -146,6 +167,9 @@ pub struct Node {
 
 impl Node {
     /// Heap-allocate a node holding `item` (already slab-allocated).
+    // guard-stable: returns an exclusively-owned, unpublished node; once
+    // inserted into a bucket it is only freed through EBR retirement
+    // after a successful unlink, never under a live guard.
     pub fn alloc(hash: u64, key: &[u8], item: *mut Item) -> *mut Node {
         Box::into_raw(Box::new(Node {
             hash,

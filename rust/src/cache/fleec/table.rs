@@ -69,6 +69,10 @@ pub struct Table {
 
 impl Table {
     /// Allocate a table with `size` buckets (power of two).
+    // guard-stable: returns an exclusively-owned, unpublished table; once
+    // installed (as the root or a `next` successor) it is only freed
+    // after migration completes via EBR retirement or at cache drop,
+    // never while a guard may still traverse it.
     pub fn alloc(size: usize) -> *mut Table {
         assert!(size.is_power_of_two());
         let buckets = (0..size)
@@ -161,18 +165,26 @@ pub fn search(
                     succ_word: curr_word,
                 };
             }
+            // SAFETY: `curr` was read from a live link under the guard.
             let node = unsafe { &*curr };
             let next = node.next.load(Ordering::Acquire);
             if next & DEL != 0 {
                 // Logically deleted. Unlink if the structure is mutable.
                 if next & FRZ == 0 && !pred_is_frozen && !frozen {
                     let clean = untagged(next);
+                    // SAFETY: `pred` points into a guard-protected node
+                    // (or the bucket head).
                     match unsafe {
+                        // ord: Release publishes the shortened chain;
+                        // Acquire counterpart: bucket/link loads in
+                        // search and migrate_bucket.
                         (*pred).compare_exchange(curr_word, clean, Ordering::AcqRel, Ordering::Acquire)
                     } {
                         Ok(_) => {
                             // Unlinked: retire the node (its item was
                             // already retired by whoever tombstoned it).
+                            // SAFETY: we won the unlink CAS — sole retirer
+                            // of a Box-allocated node now unreachable.
                             unsafe { guard.defer_drop_box(curr) };
                             curr_word = clean;
                             continue;
@@ -235,6 +247,9 @@ pub fn migrate_bucket(
             BUCKET_FROZEN => break untagged(w),
             _ => {
                 if bucket
+                    // ord: Release publishes the freeze so helpers see a
+                    // consistent head; Acquire counterpart: the bucket
+                    // loads in search/migrate_bucket.
                     .compare_exchange(w, untagged(w) | BUCKET_FROZEN, Ordering::AcqRel, Ordering::Acquire)
                     .is_ok()
                 {
@@ -247,11 +262,16 @@ pub fn migrate_bucket(
     // Phase 2: freeze every link so the structure is immutable.
     let mut cur = head as *mut Node;
     while !cur.is_null() {
+        // SAFETY: the chain hangs off a frozen head and is only retired
+        // by the phase-4 winner through EBR; our guard protects it.
         let node = unsafe { &*cur };
         let mut w = node.next.load(Ordering::Acquire);
         while w & FRZ == 0 {
             match node
                 .next
+                // ord: Release publishes the frozen link; Acquire
+                // counterpart: next-loads in search (step-over path) and
+                // the phase-3 walk below.
                 .compare_exchange_weak(w, w | FRZ, Ordering::AcqRel, Ordering::Acquire)
             {
                 Ok(_) => {
@@ -266,9 +286,13 @@ pub fn migrate_bucket(
     // Phase 3: transfer live items.
     let mut cur = head as *mut Node;
     while !cur.is_null() {
+        // SAFETY: same chain as phase 2, still guard-protected.
         let node = unsafe { &*cur };
         let next = node.next.load(Ordering::Acquire);
         if next & DEL == 0 {
+            // ord: AcqRel swap — Acquire sees the writer's Release that
+            // published the item; Release makes MOVED (and our transfer)
+            // visible to writers whose item-word CAS now fails.
             let prev = node.item.swap(MOVED_WORD, Ordering::AcqRel);
             if let ItemState::Live(item) = decode_item(prev) {
                 insert_migrated(next_table, node.hash, &node.key, item, slab, items_delta, guard);
@@ -276,6 +300,7 @@ pub fn migrate_bucket(
         } else {
             // Deleted node: make sure the word is MOVED so late writers
             // bounce to the successor rather than resurrecting it.
+            // ord: AcqRel — same pairing as the live-item swap above.
             node.item.swap(MOVED_WORD, Ordering::AcqRel);
         }
         cur = untagged(next) as *mut Node;
@@ -286,16 +311,26 @@ pub fn migrate_bucket(
         .compare_exchange(
             head | BUCKET_FROZEN,
             FORWARD_WORD,
+            // ord: Release publishes the completed transfer before the
+            // forward word; Acquire counterpart: bucket loads in search
+            // that redirect to the successor.
             Ordering::AcqRel,
             Ordering::Acquire,
         )
         .is_ok()
     {
+        // ord: AcqRel — Release orders this bucket's forward before the
+        // count; Acquire counterpart: fully_migrated()'s load, so a true
+        // result proves every forward happened-before.
         table.migrated.fetch_add(1, Ordering::AcqRel);
         let mut cur = head as *mut Node;
         while !cur.is_null() {
+            // SAFETY: forward CAS won — we are the sole retirer of the
+            // frozen chain; the guard keeps it live while we walk it.
             let node = unsafe { &*cur };
             let next = untagged(node.next.load(Ordering::Acquire)) as *mut Node;
+            // SAFETY: each node is a Box unreachable from the forwarded
+            // bucket; retired exactly once by the CAS winner.
             unsafe { guard.defer_drop_box(cur) };
             cur = next;
         }
@@ -320,6 +355,7 @@ fn insert_migrated(
             Find::Found(_) => {
                 // A racing writer already stored a newer value there.
                 Item::retire(guard, slab, item);
+                // ord: relaxed-ok — item-count accounting only.
                 items_delta.fetch_sub(1, Ordering::Relaxed);
                 break;
             }
@@ -327,8 +363,15 @@ fn insert_migrated(
                 if node.is_null() {
                     node = Node::alloc(hash, key, item);
                 }
+                // SAFETY: `node` is ours until the CAS below publishes it.
+                // ord: relaxed-ok — pre-publication store; the Release
+                // CAS below publishes it.
                 unsafe { (*node).next.store(succ_word, Ordering::Relaxed) };
+                // SAFETY: `pred` points into a guard-protected node (or
+                // the bucket head) returned by search.
                 if unsafe {
+                    // ord: Release publishes the node's writes; Acquire
+                    // counterpart: link loads in search.
                     (*pred).compare_exchange(succ_word, node as usize, Ordering::AcqRel, Ordering::Acquire)
                 }
                 .is_ok()
@@ -342,9 +385,13 @@ fn insert_migrated(
                 assert!(!next.is_null(), "frozen bucket without successor");
                 // Free the node shell if we allocated one for this table.
                 if !node.is_null() {
+                    // SAFETY: the CAS never succeeded, so the node was
+                    // never published — still exclusively ours.
                     unsafe { drop(Box::from_raw(node)) };
                 }
                 insert_migrated(
+                    // SAFETY: a non-null successor stays live while our
+                    // guard is pinned (tables retire through EBR).
                     unsafe { &*next },
                     hash,
                     key,
@@ -360,6 +407,8 @@ fn insert_migrated(
     // Mildly warm: a migrated bucket starts with CLOCK = 1, matching the
     // "not recently used but present" state.
     let idx = table.index(hash);
+    // ord: relaxed-ok — CLOCK values are eviction heuristics; no memory
+    // is published through them.
     let _ = table.clocks[idx].compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed);
 }
 
@@ -369,12 +418,18 @@ impl Drop for Table {
         // slab chunks — freed when the slab drops its pages, or already
         // retired; nodes are ours.
         for bucket in self.buckets.iter() {
+            // ord: relaxed-ok — `&mut self` in drop; no concurrent
+            // writers exist (applies to every load in this fn).
             let mut cur = untagged(bucket.load(Ordering::Relaxed)) as *mut Node;
+            // ord: relaxed-ok — exclusive access in drop.
             if tag_of(bucket.load(Ordering::Relaxed)) == BUCKET_FORWARD {
                 continue;
             }
             while !cur.is_null() {
+                // SAFETY: exclusive access in drop; every non-forwarded
+                // chain node is a Box owned by this table alone.
                 let node = unsafe { Box::from_raw(cur) };
+                // ord: relaxed-ok — exclusive access in drop.
                 cur = untagged(node.next.load(Ordering::Relaxed)) as *mut Node;
             }
         }

@@ -61,9 +61,13 @@ struct Lru {
     tail: *mut MEntry,
 }
 
+// SAFETY: the raw entry pointers are only dereferenced under the LRU
+// lock (the list lives inside a Mutex).
 unsafe impl Send for Lru {}
 
 impl Lru {
+    /// # Safety
+    /// `e` must point to a live entry; caller holds the LRU lock.
     unsafe fn push_front(&mut self, e: *mut MEntry) {
         (*e).prev = std::ptr::null_mut();
         (*e).next = self.head;
@@ -76,6 +80,9 @@ impl Lru {
         }
     }
 
+    /// # Safety
+    /// `e` must be a live entry currently linked into this list; caller
+    /// holds the LRU lock.
     unsafe fn unlink(&mut self, e: *mut MEntry) {
         let (p, n) = ((*e).prev, (*e).next);
         if p.is_null() {
@@ -92,6 +99,8 @@ impl Lru {
         (*e).next = std::ptr::null_mut();
     }
 
+    /// # Safety
+    /// Same contract as [`Lru::unlink`].
     unsafe fn move_to_front(&mut self, e: *mut MEntry) {
         if self.head == e {
             return;
@@ -119,7 +128,11 @@ pub struct MemcachedCache {
     config: CacheConfig,
 }
 
+// SAFETY: the UnsafeCell'd table is only touched under stripe locks (all
+// stripes for structural changes), the LRU under its own Mutex, and the
+// rest is atomics.
 unsafe impl Send for MemcachedCache {}
+// SAFETY: same locking discipline as Send.
 unsafe impl Sync for MemcachedCache {}
 
 impl MemcachedCache {
@@ -149,14 +162,20 @@ impl MemcachedCache {
         &self.stripes[(hash as usize) & (self.stripes.len() - 1)]
     }
 
-    /// Access the table state. Caller must hold at least one stripe (reads
-    /// of the array structure) — expansion holds *all* stripes to mutate.
+    /// Access the table state.
+    ///
+    /// # Safety
+    /// Caller must hold at least one stripe (reads of the array
+    /// structure) — expansion holds *all* stripes to mutate.
     #[allow(clippy::mut_from_ref)]
     unsafe fn state(&self) -> &mut TableState {
         &mut *self.state.get()
     }
 
-    /// Find an entry in its bucket. Caller holds the stripe.
+    /// Find an entry in its bucket.
+    ///
+    /// # Safety
+    /// Caller must hold `hash`'s stripe lock.
     unsafe fn find(&self, hash: u64, key: &[u8]) -> Option<(usize, usize, *mut MEntry)> {
         let st = self.state();
         let idx = (hash as usize) & st.mask;
@@ -169,7 +188,10 @@ impl MemcachedCache {
     }
 
     /// Remove `e` from its bucket and the LRU and free it.
-    /// Caller holds the stripe; takes the LRU lock itself.
+    ///
+    /// # Safety
+    /// Caller holds the stripe owning `(idx, pos)`; `e` is the entry at
+    /// that position. Takes the LRU lock itself (stripe → LRU order).
     unsafe fn remove_entry(&self, idx: usize, pos: usize, e: *mut MEntry) {
         let st = self.state();
         st.buckets[idx].swap_remove(pos);
@@ -195,8 +217,13 @@ impl MemcachedCache {
                 if victim.is_null() {
                     break;
                 }
+                // SAFETY: `victim` is linked in the LRU we hold locked, so
+                // it cannot be freed out from under us (every free
+                // unlinks under this lock first).
                 let hash = unsafe { (*victim).hash };
                 if let Ok(_s) = self.stripe(hash).try_lock() {
+                    // SAFETY: victim's stripe lock acquired — full access
+                    // to its bucket; LRU still held for the unlink.
                     unsafe {
                         let key = (*victim).key.clone();
                         if let Some((idx, pos, e)) = self.find(hash, &key) {
@@ -213,6 +240,7 @@ impl MemcachedCache {
                     }
                     break;
                 }
+                // SAFETY: still under the LRU lock (see above).
                 victim = unsafe { (*victim).prev };
             }
             drop(lru);
@@ -235,6 +263,8 @@ impl MemcachedCache {
         {
             // Cheap pre-check under one stripe.
             let _s0 = self.stripes[0].lock().unwrap();
+            // SAFETY: only `mask` is read; it changes only under all
+            // stripes, which includes the stripe-0 lock held here.
             let st = unsafe { self.state() };
             if !need(self.items.load(Ordering::Relaxed), st.mask + 1) {
                 return;
@@ -243,6 +273,7 @@ impl MemcachedCache {
         // Acquire ALL stripes in index order (the stop-the-world phase).
         let guards: Vec<MutexGuard<()>> =
             self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        // SAFETY: every stripe is locked — exclusive structural access.
         let st = unsafe { self.state() };
         if !need(self.items.load(Ordering::Relaxed), st.mask + 1) {
             return; // someone else expanded while we queued
@@ -251,6 +282,7 @@ impl MemcachedCache {
         let mut new_buckets: Vec<Vec<*mut MEntry>> = (0..new_size).map(|_| Vec::new()).collect();
         for bucket in st.buckets.drain(..) {
             for e in bucket {
+                // SAFETY: all stripes held; every bucketed entry is live.
                 let idx = unsafe { (*e).hash as usize } & (new_size - 1);
                 new_buckets[idx].push(e);
             }
@@ -271,6 +303,8 @@ impl MemcachedCache {
         let cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
         let outcome = {
             let _s = self.stripe(hash).lock().unwrap();
+            // SAFETY: `hash`'s stripe lock is held for the whole block;
+            // every dereferenced entry lives in that stripe's buckets.
             unsafe {
                 match self.find(hash, key) {
                     Some((idx, pos, e)) => {
@@ -318,7 +352,10 @@ impl MemcachedCache {
         outcome
     }
 
-    /// Insert a brand-new entry. Caller holds the stripe.
+    /// Insert a brand-new entry.
+    ///
+    /// # Safety
+    /// Caller must hold `hash`'s stripe lock.
     unsafe fn insert_new(
         &self,
         hash: u64,
@@ -357,6 +394,7 @@ impl MemcachedCache {
     ) -> Option<()> {
         let hash = hash_key(key);
         let _s = self.stripe(hash).lock().unwrap();
+        // SAFETY: `hash`'s stripe lock is held for the whole block.
         unsafe {
             let (idx, pos, e) = self.find(hash, key)?;
             if is_expired((*e).deadline) {
@@ -406,6 +444,8 @@ impl MemcachedCache {
     fn get_with<R>(&self, key: &[u8], hit: impl FnOnce(u32, u64, &[u8]) -> R) -> Option<R> {
         let hash = hash_key(key);
         let _s = self.stripe(hash).lock().unwrap();
+        // SAFETY: `hash`'s stripe lock is held for the whole block; the
+        // `hit` borrow ends before the lock drops.
         unsafe {
             match self.find(hash, key) {
                 Some((idx, pos, e)) => {
@@ -516,6 +556,7 @@ impl Cache for MemcachedCache {
         self.metrics.deletes.inc();
         let hash = hash_key(key);
         let _s = self.stripe(hash).lock().unwrap();
+        // SAFETY: `hash`'s stripe lock is held for the whole block.
         unsafe {
             match self.find(hash, key) {
                 Some((idx, pos, e)) => {
@@ -578,9 +619,12 @@ impl Cache for MemcachedCache {
         let _guards: Vec<MutexGuard<()>> =
             self.stripes.iter().map(|s| s.lock().unwrap()).collect();
         let mut lru = self.lru.lock().unwrap();
+        // SAFETY: every stripe is locked — exclusive structural access.
         let st = unsafe { self.state() };
         for bucket in st.buckets.iter_mut() {
             for e in bucket.drain(..) {
+                // SAFETY: all stripes + LRU held; each entry is freed
+                // exactly once (drained from its only bucket).
                 unsafe {
                     lru.unlink(e);
                     drop(Box::from_raw(e));
@@ -597,6 +641,7 @@ impl Cache for MemcachedCache {
 
     fn bucket_count(&self) -> usize {
         let _s = self.stripes[0].lock().unwrap();
+        // SAFETY: `mask` changes only under all stripes; stripe 0 held.
         unsafe { self.state().mask + 1 }
     }
 
@@ -624,6 +669,8 @@ impl Drop for MemcachedCache {
         let st = self.state.get_mut();
         for bucket in st.buckets.iter_mut() {
             for e in bucket.drain(..) {
+                // SAFETY: `&mut self` in drop — exclusive access; each
+                // entry is owned by exactly one bucket.
                 unsafe { drop(Box::from_raw(e)) };
             }
         }

@@ -63,7 +63,10 @@ pub struct MemClockCache {
     config: CacheConfig,
 }
 
+// SAFETY: the UnsafeCell'd table is only touched under stripe locks (all
+// stripes for structural changes); everything else is atomics.
 unsafe impl Send for MemClockCache {}
+// SAFETY: same locking discipline as Send.
 unsafe impl Sync for MemClockCache {}
 
 impl MemClockCache {
@@ -91,12 +94,19 @@ impl MemClockCache {
         &self.stripes[(hash as usize) & (self.stripes.len() - 1)]
     }
 
+    /// # Safety
+    /// Caller must hold the stripe lock(s) covering whatever it touches:
+    /// one stripe for its own bucket, all stripes for structural fields
+    /// (`mask`, the vectors themselves).
     #[allow(clippy::mut_from_ref)]
     unsafe fn state(&self) -> &mut TableState {
         &mut *self.state.get()
     }
 
     /// Find under the caller-held stripe.
+    ///
+    /// # Safety
+    /// Caller must hold `hash`'s stripe lock.
     unsafe fn find(&self, hash: u64, key: &[u8]) -> Option<(usize, usize)> {
         let st = self.state();
         let idx = (hash as usize) & st.mask;
@@ -108,6 +118,9 @@ impl MemClockCache {
 
     /// Bump the bucket CLOCK to max (atomic; no lock beyond the stripe the
     /// caller already holds — and it would be safe lock-free too).
+    ///
+    /// # Safety
+    /// Caller must hold `idx`'s stripe lock (pins the clocks vector).
     #[inline]
     unsafe fn touch_clock(&self, idx: usize) {
         let st = self.state();
@@ -118,6 +131,8 @@ impl MemClockCache {
         }
     }
 
+    /// # Safety
+    /// Caller must hold `idx`'s stripe lock.
     unsafe fn remove_at(&self, idx: usize, pos: usize) -> Box<CEntry> {
         let st = self.state();
         let e = st.buckets[idx].swap_remove(pos);
@@ -133,6 +148,8 @@ impl MemClockCache {
         while self.bytes.load(Ordering::Relaxed) > self.config.mem_limit {
             let raw = self.hand.fetch_add(1, Ordering::Relaxed);
             let _s = self.stripes[raw & (self.stripes.len() - 1)].lock().unwrap();
+            // SAFETY: `raw`'s stripe is locked above, and the bucket/clock
+            // index below maps to that same stripe (stripes ≤ buckets).
             let st = unsafe { self.state() };
             let idx = raw & st.mask;
             scanned += 1;
@@ -146,6 +163,7 @@ impl MemClockCache {
             }
             let n = st.buckets[idx].len();
             for _ in 0..n {
+                // SAFETY: `idx`'s stripe lock is still held (`_s`).
                 unsafe {
                     let _ = self.remove_at(idx, 0);
                 }
@@ -160,6 +178,8 @@ impl MemClockCache {
         };
         {
             let _s0 = self.stripes[0].lock().unwrap();
+            // SAFETY: only `mask` is read; it changes only under all
+            // stripes, which includes the stripe-0 lock held here.
             let st = unsafe { self.state() };
             if !need(self.items.load(Ordering::Relaxed), st.mask + 1) {
                 return;
@@ -167,6 +187,7 @@ impl MemClockCache {
         }
         let guards: Vec<MutexGuard<()>> =
             self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        // SAFETY: every stripe is locked — exclusive structural access.
         let st = unsafe { self.state() };
         if !need(self.items.load(Ordering::Relaxed), st.mask + 1) {
             return;
@@ -196,6 +217,8 @@ impl MemClockCache {
         let cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
         let outcome = {
             let _s = self.stripe_of(hash).lock().unwrap();
+            // SAFETY: `hash`'s stripe lock is held for the whole block;
+            // every touched bucket/clock index maps to that stripe.
             unsafe {
                 match self.find(hash, key) {
                     Some((idx, pos)) => {
@@ -244,6 +267,8 @@ impl MemClockCache {
         outcome
     }
 
+    /// # Safety
+    /// Caller must hold `hash`'s stripe lock.
     unsafe fn insert_new(
         &self,
         hash: u64,
@@ -274,6 +299,7 @@ impl MemClockCache {
     fn rmw_inner(&self, key: &[u8], f: impl FnOnce(&mut CEntry) -> bool) -> Option<()> {
         let hash = hash_key(key);
         let _s = self.stripe_of(hash).lock().unwrap();
+        // SAFETY: `hash`'s stripe lock is held for the whole block.
         unsafe {
             let (idx, pos) = self.find(hash, key)?;
             let st = self.state();
@@ -324,6 +350,8 @@ impl MemClockCache {
     fn get_with<R>(&self, key: &[u8], hit: impl FnOnce(u32, u64, &[u8]) -> R) -> Option<R> {
         let hash = hash_key(key);
         let _s = self.stripe_of(hash).lock().unwrap();
+        // SAFETY: `hash`'s stripe lock is held for the whole block; the
+        // `hit` borrow ends before the lock drops.
         unsafe {
             match self.find(hash, key) {
                 Some((idx, pos)) => {
@@ -434,6 +462,7 @@ impl Cache for MemClockCache {
         self.metrics.deletes.inc();
         let hash = hash_key(key);
         let _s = self.stripe_of(hash).lock().unwrap();
+        // SAFETY: `hash`'s stripe lock is held for the whole block.
         unsafe {
             match self.find(hash, key) {
                 Some((idx, pos)) => {
@@ -487,6 +516,7 @@ impl Cache for MemClockCache {
     fn flush_all(&self) {
         let _guards: Vec<MutexGuard<()>> =
             self.stripes.iter().map(|s| s.lock().unwrap()).collect();
+        // SAFETY: every stripe is locked — exclusive structural access.
         let st = unsafe { self.state() };
         for bucket in st.buckets.iter_mut() {
             bucket.clear();
@@ -504,6 +534,7 @@ impl Cache for MemClockCache {
 
     fn bucket_count(&self) -> usize {
         let _s = self.stripes[0].lock().unwrap();
+        // SAFETY: `mask` changes only under all stripes; stripe 0 held.
         unsafe { self.state().mask + 1 }
     }
 
@@ -527,6 +558,8 @@ impl Cache for MemClockCache {
 
     fn clock_snapshot(&self) -> Option<Vec<u8>> {
         let _s = self.stripes[0].lock().unwrap();
+        // SAFETY: the clocks vector is only replaced under all stripes;
+        // stripe 0 held pins it, and the values are atomics.
         let st = unsafe { self.state() };
         Some(st.clocks.iter().map(|c| c.load(Ordering::Relaxed)).collect())
     }

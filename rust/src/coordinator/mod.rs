@@ -133,6 +133,9 @@ impl Coordinator {
                         }
                         st.smoothed_pressure = smoothed_pressure;
                     }
+                    // ord: Release orders the status-mutex publish above
+                    // before the round count; Acquire counterpart:
+                    // `rounds()` load (test progress waits).
                     t_rounds.fetch_add(1, Ordering::Release);
 
                     let elapsed = round_start.elapsed();
@@ -162,6 +165,8 @@ impl Coordinator {
 
     /// Stop and join.
     pub fn shutdown(&mut self) {
+        // ord: Release stop flag; Acquire counterpart: the round loop's
+        // stop.load (join below is the real sync — the flag only exits).
         self.stop.store(true, Ordering::Release);
         if let Some(h) = self.thread.take() {
             let _ = h.join();

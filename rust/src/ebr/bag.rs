@@ -10,6 +10,8 @@ pub struct Retired {
     ptr: *mut u8,
     ctx: usize,
     bytes: usize,
+    // SAFETY: the fn pointer is only invoked through [`Retired::reclaim`],
+    // whose caller guarantees the grace period elapsed.
     reclaim_fn: unsafe fn(*mut u8, usize),
 }
 
@@ -19,6 +21,8 @@ unsafe impl Send for Retired {}
 
 impl Retired {
     /// Package a retirement. See [`crate::ebr::Guard::defer`] for the contract.
+    // SAFETY: constructing is safe — `reclaim_fn` is not called here; its
+    // `unsafe` contract is discharged by [`Retired::reclaim`]'s caller.
     pub fn new(ptr: *mut u8, ctx: usize, bytes: usize, reclaim_fn: unsafe fn(*mut u8, usize)) -> Self {
         Retired {
             ptr,
@@ -33,7 +37,11 @@ impl Retired {
         self.bytes
     }
 
-    /// Run the reclaimer. Caller must guarantee the grace period elapsed.
+    /// Run the reclaimer.
+    ///
+    /// # Safety
+    /// The grace period must have elapsed: no thread may still hold a
+    /// guard pinned at an epoch that could observe `ptr`.
     pub unsafe fn reclaim(self) {
         (self.reclaim_fn)(self.ptr, self.ctx);
     }
@@ -71,6 +79,9 @@ impl Bag {
         let mut bytes = 0;
         for item in self.items.drain(..) {
             bytes += item.bytes();
+            // SAFETY: the collector only drains bags whose epoch is two
+            // advances behind the global epoch, so the grace period for
+            // every item in the bag has elapsed.
             unsafe { item.reclaim() };
         }
         (n, bytes)

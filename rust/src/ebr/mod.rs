@@ -106,6 +106,8 @@ pub struct Collector {
 
 // SAFETY: all shared state is atomics or mutex-protected.
 unsafe impl Send for Collector {}
+// SAFETY: same argument as Send — atomics, a Mutex, and an immutable
+// config; the Weak self-handle is only upgraded, never mutated.
 unsafe impl Sync for Collector {}
 
 impl Collector {
@@ -149,6 +151,8 @@ impl Collector {
     pub fn top_level_pins(&self) -> u64 {
         #[cfg(debug_assertions)]
         {
+            // ord: relaxed-ok — debug-only test counter; asserted after
+            // joins.
             self.top_pins.load(Ordering::Relaxed)
         }
         #[cfg(not(debug_assertions))]
@@ -164,16 +168,19 @@ impl Collector {
 
     /// Items retired but not yet reclaimed.
     pub fn pending_items(&self) -> usize {
+        // ord: relaxed-ok — stats snapshot; racy by design.
         self.pending_items.load(Ordering::Relaxed)
     }
 
     /// Bytes retired but not yet reclaimed (as reported by retirers).
     pub fn pending_bytes(&self) -> usize {
+        // ord: relaxed-ok — stats snapshot; racy by design.
         self.pending_bytes.load(Ordering::Relaxed)
     }
 
     /// Items reclaimed since creation.
     pub fn reclaimed_items(&self) -> usize {
+        // ord: relaxed-ok — stats snapshot; racy by design.
         self.reclaimed_items.load(Ordering::Relaxed)
     }
 
@@ -181,7 +188,9 @@ impl Collector {
     /// should show far fewer attempts than ops.
     pub fn advance_stats(&self) -> (usize, usize) {
         (
+            // ord: relaxed-ok — stats snapshot; racy by design.
             self.advance_attempts.load(Ordering::Relaxed),
+            // ord: relaxed-ok — stats snapshot; racy by design.
             self.advances.load(Ordering::Relaxed),
         )
     }
@@ -190,6 +199,9 @@ impl Collector {
     /// will attempt epoch advancement and collection. Called by the slab
     /// when an allocation fails.
     pub fn request_reclaim(&self) {
+        // ord: Release orders the failed-allocation state before the flag;
+        // Acquire counterpart: pressure_requested (the in-line pressure
+        // checks in pin/defer_retired are deliberately Relaxed hints).
         self.pressure.store(true, Ordering::Release);
     }
 
@@ -204,6 +216,7 @@ impl Collector {
         let local = local_handle(self);
         if local.pin_depth.get() == 0 {
             #[cfg(debug_assertions)]
+            // ord: relaxed-ok — debug-only test counter.
             self.top_pins.fetch_add(1, Ordering::Relaxed);
             // Standard announce loop: publish (epoch, active), re-check.
             // Relaxed store + one SeqCst fence (crossbeam's pattern) is
@@ -212,9 +225,18 @@ impl Collector {
             // re-check load, which is all the Dekker-style handshake
             // with try_advance needs.
             let slot = &self.slots[local.slot_idx].state;
+            // ord: relaxed-ok — seed value only; the loop re-reads with
+            // Acquire after the fence before trusting it.
             let mut e = self.global_epoch.load(Ordering::Relaxed);
             loop {
+                // ord: relaxed-ok — the SeqCst fence below orders this
+                // announce before the re-check load (and before any
+                // protected loads); a Release store would not order the
+                // *subsequent* loads, the fence does.
                 slot.store((e << 1) | 1, Ordering::Relaxed);
+                // ord: SeqCst fence — Dekker handshake with the fence in
+                // try_advance_and_collect: either the scanner sees our
+                // announce, or we see the new epoch and re-announce.
                 std::sync::atomic::fence(Ordering::SeqCst);
                 let e2 = self.global_epoch.load(Ordering::Acquire);
                 if e == e2 {
@@ -229,6 +251,8 @@ impl Collector {
                 self.drain_expired(&local, e);
             }
             // Under pressure, try to make progress right away.
+            // ord: relaxed-ok — hint only; missing the flag by one pin is
+            // harmless and try_advance does its own synchronization.
             if self.pressure.load(Ordering::Relaxed) {
                 self.try_advance_and_collect(&local);
             }
@@ -258,10 +282,12 @@ impl Collector {
     /// Attempt one epoch advance; on success drain newly-expired bags and
     /// orphans. Returns whether the epoch moved.
     fn try_advance_and_collect(&self, local: &Rc<Local>) -> bool {
+        // ord: relaxed-ok — stats counter only.
         self.advance_attempts.fetch_add(1, Ordering::Relaxed);
         let e = self.global_epoch.load(Ordering::Acquire);
         // Pair with the pin-side fence: everything announced before this
         // fence is visible to the scan below.
+        // ord: SeqCst fence — the other half of pin's Dekker handshake.
         std::sync::atomic::fence(Ordering::SeqCst);
         for slot in self.slots.iter() {
             if !slot.owned.load(Ordering::Acquire) {
@@ -277,9 +303,13 @@ impl Collector {
         }
         let moved = self
             .global_epoch
+            // ord: Release publishes the advance after a clean scan;
+            // Acquire counterpart: global_epoch loads in pin,
+            // defer_retired and epoch().
             .compare_exchange(e, e + 1, Ordering::AcqRel, Ordering::Acquire)
             .is_ok();
         if moved {
+            // ord: relaxed-ok — stats counter only.
             self.advances.fetch_add(1, Ordering::Relaxed);
         }
         // Whether we or a peer moved it, drain what is now expired.
@@ -290,7 +320,11 @@ impl Collector {
         // Pressure stays raised until the backlog is actually gone, so
         // successive pins keep making progress (items retired at e need
         // two further advances before they free).
+        // ord: relaxed-ok — racy backlog check; worst case the flag stays
+        // raised one extra round and the next pin re-tries.
         if self.pending_items.load(Ordering::Relaxed) == 0 {
+            // ord: Release clears the flag after the drains above; Acquire
+            // counterpart: pressure_requested.
             self.pressure.store(false, Ordering::Release);
         }
         moved
@@ -302,8 +336,11 @@ impl Collector {
         for bag in bags.iter_mut() {
             if bag.epoch + 2 <= now && !bag.is_empty() {
                 let (n, bytes) = bag.drain();
+                // ord: relaxed-ok — stats counters only (×3 below).
                 self.pending_items.fetch_sub(n, Ordering::Relaxed);
+                // ord: relaxed-ok — stats counter.
                 self.pending_bytes.fetch_sub(bytes, Ordering::Relaxed);
+                // ord: relaxed-ok — stats counter.
                 self.reclaimed_items.fetch_add(n, Ordering::Relaxed);
             }
         }
@@ -321,6 +358,9 @@ impl Collector {
         for o in orphans.drain(..) {
             if o.epoch + 2 <= now {
                 bytes += o.item.bytes();
+                // SAFETY: the item was orphaned at `o.epoch`; two full
+                // advances have happened since, so no guard can still
+                // observe it — the grace period has elapsed.
                 unsafe { o.item.reclaim() };
             } else {
                 kept.push(o);
@@ -329,8 +369,11 @@ impl Collector {
         let freed = before - kept.len();
         *orphans = kept;
         if freed > 0 {
+            // ord: relaxed-ok — stats counters only (×3 below).
             self.pending_items.fetch_sub(freed, Ordering::Relaxed);
+            // ord: relaxed-ok — stats counter.
             self.pending_bytes.fetch_sub(bytes, Ordering::Relaxed);
+            // ord: relaxed-ok — stats counter.
             self.reclaimed_items.fetch_add(freed, Ordering::Relaxed);
         }
     }
@@ -338,10 +381,30 @@ impl Collector {
 
 impl Drop for Collector {
     fn drop(&mut self) {
+        // Pin-balance check: by the time the collector drops, every
+        // thread's `Local` has dropped (they hold `Arc<Collector>`), and
+        // `Local::drop` zeroes + releases its slot. A slot still owned or
+        // announced active here means a guard or registration was leaked
+        // past its collector — a use-after-free in waiting.
+        #[cfg(debug_assertions)]
+        for (i, slot) in self.slots.iter().enumerate() {
+            // ord: relaxed-ok — `&mut self` in drop; no concurrent
+            // writers exist (×2 below).
+            let s = slot.state.load(Ordering::Relaxed);
+            assert_eq!(s & 1, 0, "EBR slot {i} still pinned at collector drop");
+            assert!(
+                // ord: relaxed-ok — exclusive access in drop.
+                !slot.owned.load(Ordering::Relaxed),
+                "EBR slot {i} still registered at collector drop"
+            );
+        }
         // Exclusive access: every handle has been dropped (handles hold an
         // Arc), so all bags have been orphaned. Reclaim everything.
         let orphans = self.orphans.get_mut().unwrap();
         for o in orphans.drain(..) {
+            // SAFETY: no guard can exist anymore (guards transitively hold
+            // the collector alive), so every grace period has trivially
+            // elapsed.
             unsafe { o.item.reclaim() };
         }
     }
@@ -369,6 +432,8 @@ impl Guard {
     /// Same reachability contract as [`Guard::defer`]; `ptr` must have
     /// come from `Box::into_raw`.
     pub unsafe fn defer_drop_box<T>(&self, ptr: *mut T) {
+        // SAFETY: runs once, after the grace period, on the pointer passed
+        // below — which the caller contract says came from Box::into_raw.
         unsafe fn dropper<T>(p: *mut u8, _ctx: usize) {
             drop(Box::from_raw(p as *mut T));
         }
@@ -398,19 +463,26 @@ impl Guard {
                     // hence expired — drain it first.
                     debug_assert!(bag.epoch + 2 <= now, "unexpired bag reuse");
                     let (n, freed_bytes) = bag.drain();
+                    // ord: relaxed-ok — stats counters only (×3 below).
                     c.pending_items.fetch_sub(n, Ordering::Relaxed);
+                    // ord: relaxed-ok — stats counter.
                     c.pending_bytes.fetch_sub(freed_bytes, Ordering::Relaxed);
+                    // ord: relaxed-ok — stats counter.
                     c.reclaimed_items.fetch_add(n, Ordering::Relaxed);
                 }
                 bag.epoch = now;
             }
             bag.push(item);
         }
+        // ord: relaxed-ok — stats counter (and the one below).
         c.pending_items.fetch_add(1, Ordering::Relaxed);
+        // ord: relaxed-ok — stats counter.
         c.pending_bytes.fetch_add(bytes, Ordering::Relaxed);
         // The DEBRA deviation: only *attempt* progress when this thread's
         // backlog crosses the threshold or the slab asked for memory.
         let backlog: usize = self.local.bags.borrow().iter().map(Bag::len).sum();
+        // ord: relaxed-ok — pressure is a hint here; try_advance does its
+        // own synchronization.
         if backlog >= c.config.retire_threshold || c.pressure.load(Ordering::Relaxed) {
             c.try_advance_and_collect(&self.local);
         }
@@ -429,9 +501,12 @@ impl Drop for Guard {
         if depth == 0 {
             let slot = &self.local.collector.slots[self.local.slot_idx].state;
             // Deactivate but keep the announced epoch (DEBRA quiescence).
-            // Release: the reads we did while pinned happen-before a
-            // try_advance that observes us inactive.
+            // ord: relaxed-ok — reading our own announce word; only this
+            // thread writes it while registered.
             let s = slot.load(Ordering::Relaxed);
+            // ord: Release — the reads we did while pinned happen-before a
+            // try_advance that observes us inactive; Acquire counterpart:
+            // the state scan in try_advance_and_collect.
             slot.store(s & !1, Ordering::Release);
         }
     }
@@ -461,7 +536,13 @@ impl Drop for Local {
             }
         }
         let slot = &self.collector.slots[self.slot_idx];
+        // ord: SeqCst — the deactivation must be totally ordered with the
+        // pin/advance fences before the slot is recycled, so no scanner
+        // can still see this exiting thread as an active straggler.
         slot.state.store(0, Ordering::SeqCst);
+        // ord: Release hands the slot back (after the orphan handoff
+        // above); Acquire counterpart: the claim CAS in local_handle and
+        // the owned scan in try_advance_and_collect.
         slot.owned.store(false, Ordering::Release);
     }
 }
@@ -488,8 +569,14 @@ fn local_handle(collector: &Collector) -> Rc<Local> {
             .slots
             .iter()
             .position(|s| {
+                // ord: relaxed-ok — optimistic pre-check; ownership is
+                // decided by the CAS below.
                 !s.owned.load(Ordering::Relaxed)
                     && s.owned
+                        // ord: AcqRel claim — Acquire sees the previous
+                        // owner's Release in Local::drop (zeroed state);
+                        // Release pairs with the owned scan in
+                        // try_advance_and_collect.
                         .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
                         .is_ok()
             })

@@ -135,7 +135,20 @@
 //! JAX/Pallas maintenance kernels (eviction planner, analytic hit-ratio
 //! model) via PJRT (behind the `pjrt` feature) and runs them off the
 //! request path.
+//!
+//! ## Concurrency discipline
+//!
+//! The unsafe core is held to a written, machine-checked discipline:
+//! every `unsafe` carries a `SAFETY:` argument, every
+//! `Release`/`AcqRel`/`SeqCst` site an `// ord:` tag naming its
+//! `Acquire` counterpart, and every `Relaxed` in a lock-free path an
+//! `ord: relaxed-ok <reason>` tag — enforced by the in-repo analyzer
+//! ([`audit`]; `cargo run --bin fleec-audit -- rust/src`, gated by
+//! `tests/audit.rs` and the required CI job). The cross-cutting
+//! memory-ordering map — which atomics pair with which, and why each
+//! `Relaxed` is safe — is `rust/docs/concurrency.md`.
 
+pub mod audit;
 pub mod cache;
 pub mod cli;
 pub mod client;

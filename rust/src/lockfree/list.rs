@@ -36,6 +36,8 @@ pub struct HarrisList<K, V> {
 
 // SAFETY: nodes are shared across threads; K/V must therefore be Send+Sync.
 unsafe impl<K: Send + Sync, V: Send + Sync> Send for HarrisList<K, V> {}
+// SAFETY: same argument as Send — all shared state is atomics plus
+// Send+Sync K/V reached through guard-protected pointers.
 unsafe impl<K: Send + Sync, V: Send + Sync> Sync for HarrisList<K, V> {}
 
 /// Result of an internal `search`: the predecessor link to CAS and the
@@ -63,6 +65,8 @@ impl<K: Ord, V> HarrisList<K, V> {
 
     /// Approximate number of live nodes.
     pub fn len(&self) -> usize {
+        // ord: relaxed-ok — approximate counter by contract; no memory is
+        // accessed based on the value.
         self.len.load(Ordering::Relaxed)
     }
 
@@ -84,21 +88,32 @@ impl<K: Ord, V> HarrisList<K, V> {
                 if untagged(curr) == 0 {
                     return Position { pred, curr: 0 };
                 }
+                // SAFETY: `curr` was read from a live link under the
+                // guard, so the node cannot be reclaimed while we hold it.
                 let node = unsafe { &*(untagged(curr) as *const Node<K, V>) };
                 let next = node.next.load(Ordering::Acquire);
                 if tag_of(next) == 1 {
                     // Logically deleted: attempt the physical unlink.
                     let clean_next = untagged(next);
+                    // SAFETY: `pred` points into a guard-protected node
+                    // (or the list head), so the link word is live.
                     match unsafe {
                         (*pred).compare_exchange(
                             curr,
                             clean_next,
+                            // ord: Release publishes the shortened chain;
+                            // Acquire counterpart: the link loads in
+                            // search/keys (and Acquire here orders the
+                            // re-read of pred's word).
                             Ordering::AcqRel,
                             Ordering::Acquire,
                         )
                     } {
                         Ok(_) => {
                             // We unlinked it; we retire it.
+                            // SAFETY: winning the unlink CAS makes us the
+                            // sole retirer; the node was Box-allocated by
+                            // insert and is now unreachable from the list.
                             unsafe {
                                 guard.defer_drop_box(untagged(curr) as *mut Node<K, V>);
                             }
@@ -130,27 +145,39 @@ impl<K: Ord, V> HarrisList<K, V> {
         loop {
             let pos = self.search(&node.key, &guard);
             if pos.curr != 0 {
+                // SAFETY: `pos.curr` came from search under our guard.
                 let curr = unsafe { &*(untagged(pos.curr) as *const Node<K, V>) };
                 if curr.key == node.key {
                     return Err((node.key, node.value));
                 }
             }
+            // ord: relaxed-ok — pre-publication store to our own node; the
+            // Release CAS below is what makes it (and the key/value
+            // writes) visible.
             node.next.store(pos.curr, Ordering::Relaxed);
             let node_ptr = Box::into_raw(node);
+            // SAFETY: `pos.pred` points into a guard-protected node (or
+            // the head) returned by search.
             match unsafe {
                 (*pos.pred).compare_exchange(
                     pos.curr,
                     node_ptr as usize,
+                    // ord: Release publishes the node's key/value/next
+                    // writes; Acquire counterpart: link loads in
+                    // search/keys.
                     Ordering::AcqRel,
                     Ordering::Acquire,
                 )
             } {
                 Ok(_) => {
+                    // ord: relaxed-ok — approximate length counter only.
                     self.len.fetch_add(1, Ordering::Relaxed);
                     return Ok(());
                 }
                 Err(_) => {
                     // Reclaim the box and retry.
+                    // SAFETY: the CAS failed, so `node_ptr` was never
+                    // published — we still exclusively own the Box.
                     node = unsafe { Box::from_raw(node_ptr) };
                     backoff.spin();
                 }
@@ -168,6 +195,7 @@ impl<K: Ord, V> HarrisList<K, V> {
             if pos.curr == 0 {
                 return false;
             }
+            // SAFETY: `pos.curr` came from search under our guard.
             let node = unsafe { &*(untagged(pos.curr) as *const Node<K, V>) };
             if node.key != *key {
                 return false;
@@ -178,27 +206,37 @@ impl<K: Ord, V> HarrisList<K, V> {
                 backoff.spin();
                 continue;
             }
-            // Logical deletion.
+            // Logical deletion (the linearization point).
             if node
                 .next
+                // ord: Release seals the node's final successor under the
+                // mark; Acquire counterpart: next-loads in search/remove
+                // that observe the mark before unlinking.
                 .compare_exchange(next, with_tag(untagged(next), 1), Ordering::AcqRel, Ordering::Acquire)
                 .is_err()
             {
                 backoff.spin();
                 continue;
             }
+            // ord: relaxed-ok — approximate length counter only.
             self.len.fetch_sub(1, Ordering::Relaxed);
             // Physical unlink (best effort; search will finish otherwise).
+            // SAFETY: `pos.pred` points into a guard-protected node (or
+            // the head) returned by search.
             if unsafe {
                 (*pos.pred).compare_exchange(
                     pos.curr,
                     untagged(next),
+                    // ord: Release publishes the shortened chain; Acquire
+                    // counterpart: link loads in search/keys.
                     Ordering::AcqRel,
                     Ordering::Acquire,
                 )
             }
             .is_ok()
             {
+                // SAFETY: we won both the mark and the unlink CAS, so we
+                // are the sole retirer of this Box-allocated node.
                 unsafe {
                     guard.defer_drop_box(untagged(pos.curr) as *mut Node<K, V>);
                 }
@@ -217,6 +255,7 @@ impl<K: Ord, V> HarrisList<K, V> {
         if pos.curr == 0 {
             return None;
         }
+        // SAFETY: `pos.curr` came from search under the guard pinned above.
         let node = unsafe { &*(untagged(pos.curr) as *const Node<K, V>) };
         if node.key == *key {
             Some(f(&node.value))
@@ -239,6 +278,7 @@ impl<K: Ord, V> HarrisList<K, V> {
         let mut out = Vec::new();
         let mut curr = self.head.load(Ordering::Acquire);
         while untagged(curr) != 0 {
+            // SAFETY: `curr` was read from a live link under `_guard`.
             let node = unsafe { &*(untagged(curr) as *const Node<K, V>) };
             let next = node.next.load(Ordering::Acquire);
             if tag_of(next) == 0 {
@@ -255,7 +295,11 @@ impl<K, V> Drop for HarrisList<K, V> {
         // Exclusive access: free the remaining chain directly.
         let mut curr = untagged(*self.head.get_mut());
         while curr != 0 {
+            // SAFETY: `&mut self` in drop — every reachable node is a
+            // published Box nobody else can touch anymore.
             let node = unsafe { Box::from_raw(curr as *mut Node<K, V>) };
+            // ord: relaxed-ok — exclusive access in drop; no concurrent
+            // writers exist.
             curr = untagged(node.next.load(Ordering::Relaxed));
         }
     }

@@ -59,6 +59,8 @@ impl TaggedStack {
                 .compare_exchange_weak(
                     head,
                     pack(block_word, ver.wrapping_add(1)),
+                    // ord: Release publishes the block's next-link write
+                    // above; Acquire counterpart: head.load in push/pop.
                     Ordering::AcqRel,
                     Ordering::Acquire,
                 )
@@ -94,6 +96,8 @@ impl TaggedStack {
                 .compare_exchange_weak(
                     head,
                     pack(next, ver.wrapping_add(1)),
+                    // ord: Release hands the popped block to the next
+                    // pusher; Acquire counterpart: head.load in push/pop.
                     Ordering::AcqRel,
                     Ordering::Acquire,
                 )

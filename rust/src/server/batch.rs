@@ -161,6 +161,8 @@ fn recycle_ops<'from, 'to>(mut v: Vec<Op<'from>>) -> Vec<Op<'to>> {
     let cap = v.capacity();
     let ptr = v.as_mut_ptr();
     std::mem::forget(v);
+    // SAFETY: see the doc above — the Vec is empty, and `Op<'from>` /
+    // `Op<'to>` share layout and allocator contract.
     unsafe { Vec::from_raw_parts(ptr as *mut Op<'to>, 0, cap) }
 }
 
@@ -170,6 +172,8 @@ fn recycle_keys<'from, 'to>(mut v: Vec<&'from [u8]>) -> Vec<&'to [u8]> {
     let cap = v.capacity();
     let ptr = v.as_mut_ptr();
     std::mem::forget(v);
+    // SAFETY: empty Vec recycled across lifetimes — same argument as
+    // [`recycle_ops`].
     unsafe { Vec::from_raw_parts(ptr as *mut &'to [u8], 0, cap) }
 }
 

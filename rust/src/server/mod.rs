@@ -140,6 +140,8 @@ impl Server {
 
     /// Stop accepting, close the loops, join threads.
     pub fn shutdown(&mut self) {
+        // ord: Release stop flag; Acquire counterpart: accept/conn loops'
+        // stop.load (join below is the real sync — the flag only exits).
         self.stop.store(true, Ordering::Release);
         for h in self.threads.drain(..) {
             let _ = h.join();
@@ -274,6 +276,9 @@ fn spawn_thread_model(
                         let cache = Arc::clone(&cache);
                         let stop = Arc::clone(&accept_stop);
                         let active = Arc::clone(&accept_conns);
+                        // ord: AcqRel connection gauge — increments and
+                        // decrements form one modification order; Acquire
+                        // counterpart: curr_conns() observers.
                         active.fetch_add(1, Ordering::AcqRel);
                         let spawned = std::thread::Builder::new()
                             .name("fleec-conn".into())
@@ -285,6 +290,8 @@ fn spawn_thread_model(
                                     Arc::clone(&active),
                                     max_outbuf,
                                 );
+                                // ord: AcqRel gauge decrement; pairs with
+                                // the Acquire curr_conns() observers.
                                 active.fetch_sub(1, Ordering::AcqRel);
                             });
                         match spawned {
@@ -296,6 +303,8 @@ fn spawn_thread_model(
                             // serving. This is exactly the load point the
                             // reactor model exists for.
                             Err(_) => {
+                                // ord: AcqRel gauge decrement; pairs with
+                                // the Acquire curr_conns() observers.
                                 accept_conns.fetch_sub(1, Ordering::AcqRel);
                                 std::thread::sleep(Duration::from_millis(50));
                             }

@@ -117,6 +117,8 @@ mod sys {
 
     impl Poller {
         pub fn new() -> io::Result<Poller> {
+            // SAFETY: FFI call with no pointer arguments; the kernel
+            // validates the flags and reports failure via the return.
             let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
             if epfd < 0 {
                 return Err(io::Error::last_os_error());
@@ -137,6 +139,9 @@ mod sys {
             } else {
                 &mut ev as *mut EpollEvent
             };
+            // SAFETY: `evp` is either null (DEL, where the kernel ignores
+            // it) or points at `ev`, which outlives the call; the kernel
+            // validates `epfd`/`op`/`fd`.
             if unsafe { epoll_ctl(self.epfd, op, fd, evp) } < 0 {
                 return Err(io::Error::last_os_error());
             }
@@ -159,6 +164,9 @@ mod sys {
         /// A signal interruption reports as zero events, not an error.
         pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
             out.clear();
+            // SAFETY: `buf` is a live Vec whose length bounds how many
+            // events the kernel may write; `&mut self` keeps it exclusive
+            // for the duration of the call.
             let n = unsafe {
                 epoll_wait(
                     self.epfd,
@@ -189,6 +197,8 @@ mod sys {
 
     impl Drop for Poller {
         fn drop(&mut self) {
+            // SAFETY: `epfd` was returned by `epoll_create1` and is owned
+            // exclusively by this Poller; closing it at most once.
             unsafe {
                 close(self.epfd);
             }
@@ -279,6 +289,9 @@ mod sys {
                     revents: 0,
                 });
             }
+            // SAFETY: `fds` is a live Vec sized to the registration table;
+            // `&mut self` keeps it exclusive while the kernel fills
+            // `revents`.
             let n = unsafe {
                 poll(
                     self.fds.as_mut_ptr(),

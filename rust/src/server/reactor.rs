@@ -111,6 +111,8 @@ pub(super) fn run_reactor(listener: TcpListener, shared: ReactorShared) -> io::R
                 let conn = slot.take().expect("conn checked above");
                 let _ = poller.deregister(conn.stream.as_raw_fd());
                 free.push(ev.token);
+                // ord: AcqRel connection gauge; Acquire counterpart:
+                // Server::curr_conns observers.
                 shared.curr_conns.fetch_sub(1, Ordering::AcqRel);
                 // Dropping `conn` closes the socket.
             }
@@ -119,6 +121,8 @@ pub(super) fn run_reactor(listener: TcpListener, shared: ReactorShared) -> io::R
     // Account the connections this reactor takes down with it.
     for conn in conns.iter().flatten() {
         adjust_gauge(&shared.buffered_out, conn.out_pending(), 0);
+        // ord: AcqRel connection gauge; Acquire counterpart:
+        // Server::curr_conns observers.
         shared.curr_conns.fetch_sub(1, Ordering::AcqRel);
     }
     Ok(())
@@ -153,6 +157,8 @@ fn accept_ready(
                     continue;
                 }
                 conns[token] = Some(conn);
+                // ord: AcqRel connection gauge; Acquire counterpart:
+                // Server::curr_conns observers.
                 shared.curr_conns.fetch_add(1, Ordering::AcqRel);
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,

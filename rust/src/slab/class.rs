@@ -117,6 +117,8 @@ impl SizeClass {
     #[inline]
     fn note_shared_op(&self) {
         #[cfg(debug_assertions)]
+        // ord: relaxed-ok — debug-only event counter; tests read it from
+        // the same thread or after a join.
         self.shared_ops.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -125,6 +127,7 @@ impl SizeClass {
     pub fn shared_ops(&self) -> usize {
         #[cfg(debug_assertions)]
         {
+            // ord: relaxed-ok — debug counter snapshot (see note_shared_op).
             self.shared_ops.load(Ordering::Relaxed)
         }
         #[cfg(not(debug_assertions))]
@@ -136,18 +139,29 @@ impl SizeClass {
     /// Try to allocate one chunk from the free list, then the bump
     /// region. `None` means the caller must install a new page (or report
     /// pressure).
+    // audit:allow(guard) hands out an exclusively-owned free chunk, not
+    // guard-lent memory — no byte-stability contract applies.
     pub fn try_alloc(&self) -> Option<*mut u8> {
         // Free list first: reuse keeps the working set dense. The popped
         // node is a whole segment; keep its head and return the rest.
+        // SAFETY: every node pushed onto `free` is a chunk of this class
+        // (see `free`/`free_batch` contracts), so popping yields a chunk
+        // we now exclusively own.
         if let Some(seg) = unsafe { self.free.pop() } {
             self.note_shared_op();
+            // SAFETY: `seg` is exclusively ours after the pop and
+            // chunk_size ≥ 16 (asserted in `new`).
             let rest = unsafe { seg_next(seg) };
             if !rest.is_null() {
                 // `rest` is still a well-formed (intra-linked,
                 // null-terminated) segment; push it back as one node.
                 self.note_shared_op();
+                // SAFETY: `rest` chains chunks of this class we own; its
+                // first word is free for the stack's use.
                 unsafe { self.free.push(rest) };
             }
+            // ord: relaxed-ok — accounting counter; stats tolerate racy
+            // snapshots (slab::class_stats clamps).
             self.handed.fetch_add(1, Ordering::Relaxed);
             return Some(seg);
         }
@@ -160,12 +174,18 @@ impl SizeClass {
             match self.region.compare_exchange_weak(
                 word,
                 pack(addr + self.chunk_size, count - 1),
+                // ord: AcqRel bump claim — Acquire pairs with
+                // install_page's Release store so the claimed address is
+                // backed by a visible page; Release orders claims.
                 Ordering::AcqRel,
                 Ordering::Acquire,
             ) {
                 Ok(_) => {
                     self.note_shared_op();
+                    // ord: relaxed-ok — accounting counters; stats
+                    // tolerate racy snapshots.
                     self.handed.fetch_add(1, Ordering::Relaxed);
+                    // ord: relaxed-ok — same accounting story as `handed`.
                     self.total.fetch_add(1, Ordering::Relaxed);
                     return Some(addr as *mut u8);
                 }
@@ -212,6 +232,8 @@ impl SizeClass {
                 match self.region.compare_exchange_weak(
                     word,
                     pack(addr + take * self.chunk_size, count - take),
+                    // ord: AcqRel batched bump claim — same pairing as
+                    // try_alloc: Acquire vs install_page's Release.
                     Ordering::AcqRel,
                     Ordering::Acquire,
                 ) {
@@ -220,6 +242,8 @@ impl SizeClass {
                         for i in 0..take {
                             out.push((addr + i * self.chunk_size) as *mut u8);
                         }
+                        // ord: relaxed-ok — accounting counter (racy
+                        // stats snapshots are fine).
                         self.total.fetch_add(take, Ordering::Relaxed);
                         got += take;
                         break;
@@ -229,6 +253,7 @@ impl SizeClass {
             }
         }
         if got > 0 {
+            // ord: relaxed-ok — accounting counter (racy stats are fine).
             self.handed.fetch_add(got, Ordering::Relaxed);
         }
         got
@@ -242,8 +267,10 @@ impl SizeClass {
         // Clamp to the packed width (loses at most one chunk of a
         // pathological 16-byte/1-MiB configuration).
         let count = (page_size / self.chunk_size).min(COUNT_MASK);
-        self.region
-            .store(pack(page as usize, count), Ordering::Release);
+        // ord: Release publishes the (zero-initialized-enough) page
+        // behind the packed word; Acquire counterpart: the region loads
+        // and claim CAS in try_alloc/alloc_batch.
+        self.region.store(pack(page as usize, count), Ordering::Release);
     }
 
     /// Return one chunk to the free list (a singleton segment).
@@ -252,6 +279,7 @@ impl SizeClass {
     /// `ptr` must be an unreferenced chunk of this class.
     pub unsafe fn free(&self, ptr: *mut u8) {
         set_seg_next(ptr, std::ptr::null_mut());
+        // ord: relaxed-ok — accounting counter (racy stats are fine).
         self.handed.fetch_sub(1, Ordering::Relaxed);
         self.note_shared_op();
         self.free.push(ptr);
@@ -270,6 +298,7 @@ impl SizeClass {
             set_seg_next(w[0], w[1]);
         }
         set_seg_next(*chunks.last().unwrap(), std::ptr::null_mut());
+        // ord: relaxed-ok — accounting counter (racy stats are fine).
         self.handed.fetch_sub(chunks.len(), Ordering::Relaxed);
         self.note_shared_op();
         self.free.push(chunks[0]);
@@ -278,8 +307,11 @@ impl SizeClass {
     pub fn stats(&self) -> SizeClassStats {
         SizeClassStats {
             chunk_size: self.chunk_size,
+            // ord: relaxed-ok — stats snapshot; both counters are racy by
+            // design and the slab layer clamps inconsistencies.
             live_chunks: self.handed.load(Ordering::Relaxed),
             cached_chunks: 0,
+            // ord: relaxed-ok — same snapshot story as live_chunks.
             total_chunks: self.total.load(Ordering::Relaxed),
         }
     }

@@ -77,8 +77,13 @@ impl SlotTable {
     /// for that thread — it falls back to the shared path).
     fn claim(&self) -> Option<usize> {
         self.slots.iter().position(|s| {
+            // ord: relaxed-ok — optimistic pre-check only; ownership is
+            // decided by the CAS below.
             !s.owned.load(Ordering::Relaxed)
                 && s.owned
+                    // ord: AcqRel claim — Acquire sees the previous
+                    // owner's Release in LocalMags::drop; Release pairs
+                    // with cached()'s Acquire owned.load.
                     .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
                     .is_ok()
         })
@@ -89,6 +94,8 @@ impl SlotTable {
         self.slots
             .iter()
             .filter(|s| s.owned.load(Ordering::Acquire))
+            // ord: relaxed-ok — published length is a racy stats snapshot
+            // by design (see "Truthful accounting" above).
             .map(|s| s.lens[class].load(Ordering::Relaxed) as usize)
             .sum()
     }
@@ -137,11 +144,15 @@ impl LocalMags {
     #[inline]
     fn publish_len(&self, slab: &Slab, class: usize, len: usize) {
         if let Some(s) = self.slot.get() {
+            // ord: relaxed-ok — owner-written stats line; readers accept a
+            // racy snapshot (class_stats clamps).
             slab.depot.slots[s].lens[class].store(len as u32, Ordering::Relaxed);
         }
     }
 
     /// Magazine-only pop: `None` means empty (caller refills).
+    // audit:allow(guard) hands out an exclusively-owned free chunk, not
+    // guard-lent memory — no byte-stability contract applies.
     pub(super) fn pop(&self, slab: &Slab, class: u8) -> Option<*mut u8> {
         let mut mags = self.mags.borrow_mut();
         let m = &mut mags[class as usize];
@@ -171,10 +182,15 @@ impl LocalMags {
     /// Refill an empty magazine from the shared structures and hand one
     /// chunk out. `None` = the shared side is empty too (caller grows the
     /// class or reports pressure).
+    // audit:allow(guard) hands out an exclusively-owned free chunk, not
+    // guard-lent memory — no byte-stability contract applies.
     pub(super) fn refill_and_pop(&self, slab: &Slab, class: u8) -> Option<*mut u8> {
         let mut mags = self.mags.borrow_mut();
         let m = &mut mags[class as usize];
         debug_assert!(m.is_empty(), "refill on a non-empty magazine");
+        // SAFETY: `class` indexes `slab.classes` (this magazine was built
+        // with one Vec per class), and the batch lands in this thread's
+        // own magazine.
         let got = unsafe { slab.classes[class as usize].alloc_batch(m, MAG_CAP) };
         if got == 0 {
             return None;
@@ -190,6 +206,9 @@ impl LocalMags {
         let mut mags = self.mags.borrow_mut();
         for (class, m) in mags.iter_mut().enumerate() {
             if !m.is_empty() {
+                // SAFETY: every pointer parked in magazine `class` came in
+                // through `push`, whose caller guaranteed an unreferenced
+                // chunk of that class from this slab.
                 unsafe { slab.classes[class].free_batch(m.as_slice()) };
                 m.clear();
                 self.publish_len(slab, class, 0);
@@ -207,6 +226,9 @@ impl Drop for LocalMags {
         if let Some(slab) = self.weak.upgrade() {
             self.flush_all(&slab);
             if let Some(s) = self.slot.get() {
+                // ord: Release hands the slot back after the flush above;
+                // Acquire counterpart: claim()'s CAS and cached()'s
+                // owned.load.
                 slab.depot.slots[s].owned.store(false, Ordering::Release);
             }
         }
@@ -257,6 +279,8 @@ pub(super) fn local(slab: &Slab) -> Option<Rc<LocalMags>> {
 pub(super) fn local_existing(slab: &Slab) -> Option<Rc<LocalMags>> {
     let key = slab as *const Slab as usize;
     MAGS.try_with(|cell| {
+        // SAFETY: single-threaded access (thread_local), no re-entrancy:
+        // nothing below calls back into MAGS.
         let mags = unsafe { &*cell.get() };
         mags.iter().find(|l| l.slab_key == key).map(Rc::clone)
     })

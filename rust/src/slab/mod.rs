@@ -87,6 +87,8 @@ struct Page {
     layout: Layout,
 }
 
+// SAFETY: a Page is just an owned allocation handle (ptr + layout); the
+// chunks inside are handed out under the slab's own synchronization.
 unsafe impl Send for Page {}
 
 /// The slab allocator.
@@ -103,7 +105,12 @@ pub struct Slab {
     self_weak: Weak<Slab>,
 }
 
+// SAFETY: all shared state is atomics, lock-free structures, or behind
+// the pages mutex; the raw page pointers are only dereferenced through
+// the size classes' synchronized hand-out paths.
 unsafe impl Send for Slab {}
+// SAFETY: see Send above — every &self entry point is either lock-free
+// (classes, depot) or takes the pages mutex.
 unsafe impl Sync for Slab {}
 
 impl Slab {
@@ -163,6 +170,9 @@ impl Slab {
     /// Fast path: the calling thread's magazine — no shared atomics at
     /// all. On a magazine miss, one segment pop refills up to [`MAG_CAP`]
     /// chunks; only page growth takes a lock.
+    // audit:allow(guard) hands out an exclusively-owned free chunk, not
+    // guard-lent memory — byte stability is the *caller's* story (items
+    // become guard-stable only once published, see cache/fleec/node.rs).
     pub fn alloc(&self, size: usize) -> Option<(*mut u8, u8)> {
         let class = self.class_for(size)?;
         let sc = &self.classes[class as usize];
@@ -214,6 +224,7 @@ impl Slab {
     fn grow_class(&self, sc: &SizeClass) -> bool {
         // Reserve budget first (lock-free).
         let page = self.config.page_size;
+        // ord: relaxed-ok — optimistic read; the CAS below revalidates.
         let mut left = self.budget_left.load(Ordering::Relaxed);
         loop {
             if left < page {
@@ -222,6 +233,9 @@ impl Slab {
             match self.budget_left.compare_exchange_weak(
                 left,
                 left - page,
+                // ord: AcqRel budget claim — Acquire sees a failed
+                // claimer's Release refund below; Release publishes the
+                // debit to other claimers' Acquire loads/CAS.
                 Ordering::AcqRel,
                 Ordering::Acquire,
             ) {
@@ -233,8 +247,12 @@ impl Slab {
         // anyway). 64-byte alignment so chunks never straddle cache lines
         // at smaller-than-line sizes.
         let layout = Layout::from_size_align(page, 64).expect("page layout");
+        // SAFETY: `layout` has non-zero size (page_size ≥ base_chunk ≥ 16)
+        // and valid 64-byte alignment; null is handled below.
         let ptr = unsafe { alloc(layout) };
         if ptr.is_null() {
+            // ord: Release refund; Acquire counterpart: the claim CAS
+            // above in other threads.
             self.budget_left.fetch_add(page, Ordering::Release);
             return false;
         }
@@ -251,6 +269,8 @@ impl Slab {
     /// Bytes of page budget already claimed by pages. Page-granular, so
     /// magazines (chunk-granular) cannot distort it.
     pub fn claimed_bytes(&self) -> usize {
+        // ord: relaxed-ok — stats snapshot; page installs it races with
+        // are already only eventually visible to callers.
         self.config.mem_limit - self.budget_left.load(Ordering::Relaxed)
     }
 
@@ -263,6 +283,8 @@ impl Slab {
     /// only run when chunk-level reuse genuinely cannot be served from
     /// what this thread already has.
     pub fn exhausted(&self) -> bool {
+        // ord: relaxed-ok — pressure heuristic; a stale read only delays
+        // or hastens a reclaim round, never breaks safety.
         if self.budget_left.load(Ordering::Relaxed) >= self.config.page_size {
             return false;
         }
@@ -325,7 +347,40 @@ impl Slab {
 
 impl Drop for Slab {
     fn drop(&mut self) {
+        // Debug-build chunk conservation: every chunk ever carved from a
+        // page is either outside the shared structures (user-live or
+        // magazine-parked — `handed`) or still reachable from the free
+        // lists / bump region. Draining the shared side and comparing
+        // against the carve counter catches lost chunks, double frees and
+        // accounting drift *semantically*, where a sanitizer would only
+        // see the byte-level symptom (if any).
+        #[cfg(debug_assertions)]
+        for (i, sc) in self.classes.iter().enumerate() {
+            let outside = sc.stats().live_chunks;
+            let mut drained: Vec<*mut u8> = Vec::new();
+            loop {
+                // SAFETY: `&mut self` in drop — no other thread can touch
+                // the free lists; drained chunks are owned until the page
+                // dealloc below.
+                let got = unsafe { sc.alloc_batch(&mut drained, 1024) };
+                if got == 0 {
+                    break;
+                }
+            }
+            // Draining the bump region carves fresh chunks (bumping the
+            // counters), so read `total` after the drain.
+            let total = sc.stats().total_chunks;
+            assert_eq!(
+                outside + drained.len(),
+                total,
+                "size class {i}: chunk conservation violated \
+                 (handed-out {outside} + shared-free {} != carved {total})",
+                drained.len()
+            );
+        }
         for page in self.pages.get_mut().unwrap().drain(..) {
+            // SAFETY: `ptr`/`layout` came from `alloc` in grow_class and
+            // each page is deallocated exactly once (drain).
             unsafe { dealloc(page.ptr, page.layout) };
         }
     }

@@ -17,6 +17,21 @@ pub fn default_cases() -> u64 {
         .unwrap_or(64)
 }
 
+/// Suite-level RNG seed: `FLEEC_SEED` overrides `default`, and the
+/// effective value is announced on stderr (`FLEEC_SEED=<n>`) so any
+/// failing randomized run — local or CI — can be replayed bit-exactly by
+/// exporting the printed value. Call once per test, before spawning
+/// workers; derive per-thread streams by xor/offset so threads stay
+/// decorrelated.
+pub fn suite_seed(default: u64) -> u64 {
+    let seed = std::env::var("FLEEC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default);
+    eprintln!("FLEEC_SEED={seed}");
+    seed
+}
+
 /// Run `prop` on `cases` random streams. On panic, reports the failing
 /// seed. Set `FLEEC_PROP_SEED` to replay a single seed.
 pub fn run_prop(name: &str, base_seed: u64, prop: impl Fn(&mut Xoshiro256)) {
@@ -26,6 +41,9 @@ pub fn run_prop(name: &str, base_seed: u64, prop: impl Fn(&mut Xoshiro256)) {
         prop(&mut rng);
         return;
     }
+    // `FLEEC_SEED` shifts the whole case stream (fresh schedules in CI);
+    // `FLEEC_PROP_SEED` above replays one exact case.
+    let base_seed = suite_seed(base_seed);
     for case in 0..default_cases() {
         let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -86,6 +104,15 @@ mod tests {
             RUNS.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(RUNS.load(Ordering::SeqCst), default_cases());
+    }
+
+    #[test]
+    fn suite_seed_defaults_without_env() {
+        // Only meaningful when the override is absent (the usual case);
+        // under FLEEC_SEED=<n> the env value wins by design.
+        if std::env::var("FLEEC_SEED").is_err() {
+            assert_eq!(suite_seed(42), 42);
+        }
     }
 
     #[test]

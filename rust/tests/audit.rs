@@ -1,0 +1,51 @@
+//! The lock-free-discipline gate: `cargo test -q` fails if `fleec-audit`
+//! finds any unwaived violation in this crate's own `src/` tree.
+//!
+//! This is the in-band version of the CI `audit` job (which runs the
+//! `fleec-audit` binary with `--deny-warnings` and uploads the JSON
+//! report): keeping the gate inside the plain test suite means the
+//! discipline cannot rot on machines that only ever run `cargo test`.
+
+use std::path::Path;
+
+use fleec::audit::{self, Severity};
+
+fn tree_report() -> audit::Report {
+    let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    audit::audit_tree(root).expect("walking src/ must succeed")
+}
+
+#[test]
+fn src_tree_has_no_unwaived_findings() {
+    let report = tree_report();
+    assert!(
+        report.files_scanned > 20 && report.lines_scanned > 5_000,
+        "suspiciously small walk ({} files, {} lines) — wrong root?",
+        report.files_scanned,
+        report.lines_scanned
+    );
+    let errors = report.errors();
+    assert_eq!(
+        errors,
+        0,
+        "fleec-audit found {errors} unwaived finding(s):\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn src_tree_is_clean_under_deny_warnings() {
+    // Warnings are malformed waivers (no reason / unknown rule key);
+    // the tree must not accumulate those either.
+    let report = tree_report();
+    let warnings: Vec<_> = report
+        .findings
+        .iter()
+        .filter(|f| f.severity == Severity::Warning)
+        .collect();
+    assert!(
+        warnings.is_empty(),
+        "fleec-audit warnings present:\n{}",
+        report.render()
+    );
+}

@@ -22,11 +22,12 @@ fn storm(engine: &str, threads: u64, ops: u64, keys: u64) {
         ..CacheConfig::default()
     })
     .unwrap();
+    let base = fleec::testutil::suite_seed(0x57A4);
     std::thread::scope(|s| {
         for t in 0..threads {
             let cache = Arc::clone(&cache);
             s.spawn(move || {
-                let mut rng = Xoshiro256::seeded(0x57A4 + t);
+                let mut rng = Xoshiro256::seeded(base + t);
                 let mut key = [0u8; KEY_LEN];
                 let mut val = vec![0u8; 256];
                 for _ in 0..ops {
@@ -106,6 +107,7 @@ fn fleec_expansion_under_concurrent_load() {
     let stop = Arc::new(AtomicBool::new(false));
     let misses = Arc::new(AtomicU64::new(0));
     let reads = Arc::new(AtomicU64::new(0));
+    let base = fleec::testutil::suite_seed(9);
     std::thread::scope(|s| {
         for w in 0..3u64 {
             let cache = Arc::clone(&cache);
@@ -125,7 +127,7 @@ fn fleec_expansion_under_concurrent_load() {
             let misses = Arc::clone(&misses);
             let reads = Arc::clone(&reads);
             s.spawn(move || {
-                let mut rng = Xoshiro256::seeded(9);
+                let mut rng = Xoshiro256::seeded(base);
                 let mut key = [0u8; KEY_LEN];
                 while !stop.load(Ordering::Relaxed) {
                     let id = rng.next_below(n_base);
@@ -227,6 +229,7 @@ fn cas_is_atomic_under_contention() {
 #[test]
 fn fleec_delete_set_race_no_resurrection() {
     let cache = Arc::new(FleecCache::new(CacheConfig::small()));
+    let base = fleec::testutil::suite_seed(17);
     for round in 0..50u64 {
         let key = format!("race-{round}");
         let k = key.as_bytes();
@@ -235,7 +238,7 @@ fn fleec_delete_set_race_no_resurrection() {
             for t in 0..4u64 {
                 let cache = Arc::clone(&cache);
                 s.spawn(move || {
-                    let mut rng = Xoshiro256::seeded(round * 17 + t);
+                    let mut rng = Xoshiro256::seeded(base ^ (round * 31 + t));
                     for _ in 0..50 {
                         if rng.chance(0.5) {
                             cache.delete(k);

@@ -104,6 +104,7 @@ fn lent_value_bytes_stay_stable_while_writers_overwrite() {
         assert_eq!(cache.set(&keys[id as usize], &v, 0, 0), StoreOutcome::Stored);
     }
     let stop = AtomicBool::new(false);
+    let base = fleec::testutil::suite_seed(0x57AB1E);
     std::thread::scope(|s| {
         // Writers: overwrite + occasionally delete/reinsert the hot keys
         // as fast as possible (every overwrite retires the old item).
@@ -112,7 +113,7 @@ fn lent_value_bytes_stay_stable_while_writers_overwrite() {
             let keys = &keys;
             let stop = &stop;
             s.spawn(move || {
-                let mut rng = fleec::sync::Xoshiro256::seeded(0x57AB1E ^ t);
+                let mut rng = fleec::sync::Xoshiro256::seeded(base ^ t);
                 let mut v = vec![0u8; 256];
                 while !stop.load(Ordering::Relaxed) {
                     let id = rng.next_below(KEYS);
@@ -127,7 +128,7 @@ fn lent_value_bytes_stay_stable_while_writers_overwrite() {
         }
         // Reader: long all-get batches through the sink; every delivery
         // revalidates all earlier lent slices of the same batch.
-        let mut rng = fleec::sync::Xoshiro256::seeded(0x0DD5EED);
+        let mut rng = fleec::sync::Xoshiro256::seeded(base ^ 0x0DD5EED);
         let mut sink = StabilitySink::default();
         for _ in 0..batches {
             let mut ops: Vec<Op<'_>> = Vec::with_capacity(32);

@@ -346,7 +346,7 @@ fn merged_request_metrics_match_unsharded() {
     // and no expansion assertions: shard tables expand on their own
     // schedules). Request counters must add back up across shards.
     let keys = key_space();
-    let mut rng = Xoshiro256::seeded(0x5AAD_ED03);
+    let mut rng = Xoshiro256::seeded(fleec::testutil::suite_seed(0x5AAD_ED03));
     let script: Vec<AbsOp> = (0..200)
         .map(|_| {
             let k = rng.next_below(keys.len() as u64) as usize;
