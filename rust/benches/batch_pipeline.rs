@@ -33,9 +33,11 @@
 //!                → copy out of `GetResult`) vs the **sink** tier
 //!                (`execute_batch_into` → value bytes lent straight into
 //!                the reply buffer), value size 64B/1KiB/8KiB ×
-//!                hit-ratio 0.5/0.9/1.0, fleec, 4 threads. The sink
-//!                column's edge over owned is the copy+allocation the
-//!                redesign removed. Emits `BENCH_read_path.json`.
+//!                hit-ratio 0.5/0.9/1.0, engine fleec vs oaflash (the
+//!                chained/open-addressing race — same item substrate,
+//!                probe structure is the only delta), 4 threads. The
+//!                sink column's edge over owned is the copy+allocation
+//!                the redesign removed. Emits `BENCH_read_path.json`.
 //!
 //! Every row is also appended to `BENCH_batch_pipeline.json` (flat array
 //! of records; the alloc-path and read-path sweeps write their own
@@ -243,6 +245,7 @@ const READ_JSON_PATH: &str = "BENCH_read_path.json";
 
 /// One read-path sweep point, serialized into `BENCH_read_path.json`.
 struct ReadRec {
+    engine: &'static str,
     mode: &'static str,
     value_size: usize,
     hit_ratio: f64,
@@ -253,7 +256,8 @@ fn write_read_json(records: &[ReadRec]) {
     let mut out = String::from("[\n");
     for (i, r) in records.iter().enumerate() {
         out.push_str(&format!(
-            "  {{\"section\":\"read_path\",\"engine\":\"fleec\",\"mode\":\"{}\",\"value_size\":{},\"hit_ratio\":{},\"ops_per_s\":{:.1}}}{}\n",
+            "  {{\"section\":\"read_path\",\"engine\":\"{}\",\"mode\":\"{}\",\"value_size\":{},\"hit_ratio\":{},\"ops_per_s\":{:.1}}}{}\n",
+            r.engine,
             r.mode,
             r.value_size,
             r.hit_ratio,
@@ -298,17 +302,21 @@ fn read_path_sweep() {
     const CATALOG: u64 = 4096;
     const THREADS: u64 = 4;
     const OPS_PER_THREAD: u64 = 100_000;
-    println!("== read-path: owned vs sink x value size x hit ratio (fleec) ======");
+    println!("== read-path: engine x owned vs sink x value size x hit ratio =====");
     println!(
-        "{:>6} {:>7} {:>5} {:>12}",
-        "mode", "vsize", "hit", "ops/s"
+        "{:>8} {:>6} {:>7} {:>5} {:>12}",
+        "engine", "mode", "vsize", "hit", "ops/s"
     );
     let mut records: Vec<ReadRec> = Vec::new();
-    for &vsize in &SIZES {
+    // The chained-vs-open-addressing race: identical workload, identical
+    // item substrate — the delta is purely the probe structure (pointer
+    // chase vs cache-line scan), sharpest at 8192-byte values / 0.9 hits.
+    for engine in ["fleec", "oaflash"] {
+        for &vsize in &SIZES {
         for &hit_ratio in &HIT_RATIOS {
             for mode in ["owned", "sink"] {
                 let cache = build_engine(
-                    "fleec",
+                    engine,
                     CacheConfig {
                         mem_limit: 256 << 20,
                         ..CacheConfig::default()
@@ -371,8 +379,12 @@ fn read_path_sweep() {
                 });
                 let total = THREADS * OPS_PER_THREAD;
                 let tput = total as f64 / t0.elapsed().as_secs_f64();
-                println!("{:>6} {:>7} {:>5.2} {:>12.0}", mode, vsize, hit_ratio, tput);
+                println!(
+                    "{:>8} {:>6} {:>7} {:>5.2} {:>12.0}",
+                    engine, mode, vsize, hit_ratio, tput
+                );
                 records.push(ReadRec {
+                    engine,
                     mode,
                     value_size: vsize,
                     hit_ratio,
@@ -381,6 +393,7 @@ fn read_path_sweep() {
             }
         }
         println!();
+        }
     }
     write_read_json(&records);
 }

@@ -18,13 +18,19 @@
 //!   atomics are never orderable "by accident"). Plain `Acquire` needs
 //!   no tag — it is named by its Release counterpart's tag.
 //! * **G1 `guard`** — in the guard-lending layers (`ebr/`, `slab/`,
-//!   `cache/fleec/`), `pub` functions returning raw pointers or
-//!   explicit-lifetime references must carry a `guard-stable:` tag
-//!   restating the byte-stability contract of the zero-copy read path.
+//!   `cache/fleec/`, `cache/oaflash/`), `pub` functions returning raw
+//!   pointers or explicit-lifetime references must carry a
+//!   `guard-stable:` tag restating the byte-stability contract of the
+//!   zero-copy read path.
+//! * **C1 `comment`** — a lone `/` sitting where a comment would start
+//!   (at the beginning of a line's code, or right after `;`/`,`/`{`/
+//!   `}`/`(`) is a malformed comment — `/` typed for `//` — which is a
+//!   syntax error a desk-checked PR can ship. `/=` is exempt (the only
+//!   legitimate operator in those positions).
 //!
 //! Any finding can be waived in place with `audit:allow(<rule>) <reason>`
-//! (rule keys: `safety`, `ord`, `guard`). A waiver without a reason, or
-//! with an unknown rule key, is reported as a warning.
+//! (rule keys: `safety`, `ord`, `guard`, `comment`). A waiver without a
+//! reason, or with an unknown rule key, is reported as a warning.
 //!
 //! Lines inside `#[cfg(test)] mod …` blocks are skipped: test code is
 //! covered dynamically (Miri and the sanitizer jobs), and the static
@@ -41,6 +47,8 @@ pub enum Rule {
     Ord,
     /// G1: guard-lending `pub fn` without a `guard-stable:` tag.
     Guard,
+    /// C1: lone `/` in comment position (malformed `//`).
+    Comment,
     /// Malformed waiver (no reason / unknown rule key).
     Waiver,
 }
@@ -51,6 +59,7 @@ impl Rule {
             Rule::Safety => "safety",
             Rule::Ord => "ord",
             Rule::Guard => "guard",
+            Rule::Comment => "comment",
             Rule::Waiver => "waiver",
         }
     }
@@ -84,10 +93,17 @@ pub struct Finding {
 
 /// Path prefixes (relative to `src/`) forming the lock-free core, where
 /// even `Relaxed` must justify itself.
-const CORE_PATHS: &[&str] = &["lockfree/", "ebr/", "slab/", "sync/", "cache/fleec/"];
+const CORE_PATHS: &[&str] = &[
+    "lockfree/",
+    "ebr/",
+    "slab/",
+    "sync/",
+    "cache/fleec/",
+    "cache/oaflash/",
+];
 
 /// Path prefixes where G1 (guard-stable returns) applies.
-const GUARD_PATHS: &[&str] = &["ebr/", "slab/", "cache/fleec/"];
+const GUARD_PATHS: &[&str] = &["ebr/", "slab/", "cache/fleec/", "cache/oaflash/"];
 
 /// Normalize a path label to its `src/`-relative form with `/` separators.
 fn rel_label(path: &str) -> String {
@@ -192,6 +208,7 @@ fn waivers(ctx: &str) -> (Vec<&'static str>, Vec<String>) {
                     "safety" | "U1" => Some("safety"),
                     "ord" | "O1" => Some("ord"),
                     "guard" | "G1" => Some("guard"),
+                    "comment" | "C1" => Some("comment"),
                     _ => None,
                 };
                 match known {
@@ -330,6 +347,33 @@ fn lends_guard_memory(ret: &str) -> bool {
     false
 }
 
+/// C1: byte offset of a lone `/` in comment position, if any. A `/` is
+/// "in comment position" when the nearest preceding non-space code char
+/// on the line is nothing (line starts with it) or a statement/list
+/// boundary (`;`, `,`, `{`, `}`, `(`) — places where a division can
+/// never legally begin but a `//` comment habitually sits, so a single
+/// slash there is a typo for `//` (the proto-style compile nit this rule
+/// exists to catch). `/=` is exempt; `//`/`/*` cannot appear here (the
+/// lexer routes real comments to the comment channel).
+fn lone_slash_pos(code: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b != b'/' {
+            continue;
+        }
+        if matches!(bytes.get(i + 1), Some(b'=') | Some(b'/') | Some(b'*')) {
+            continue;
+        }
+        match code[..i].trim_end().as_bytes().last() {
+            None | Some(b';') | Some(b',') | Some(b'{') | Some(b'}') | Some(b'(') => {
+                return Some(i);
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
 /// Byte offset of `word` as a whole token in `code`, if present.
 fn token_pos(code: &str, word: &str) -> Option<usize> {
     let bytes = code.as_bytes();
@@ -432,6 +476,22 @@ pub fn audit_source(path: &str, src: &str) -> Vec<Finding> {
                  `ord: relaxed-ok <reason>` tag"
                     .to_string(),
             );
+        }
+
+        // C1: lone `/` in comment position is a malformed comment.
+        if !waived.contains(&"comment") {
+            if let Some(col) = lone_slash_pos(code) {
+                push(
+                    i,
+                    Rule::Comment,
+                    Severity::Error,
+                    format!(
+                        "lone `/` at column {} where a comment would sit — \
+                         malformed `//`?",
+                        col + 1
+                    ),
+                );
+            }
         }
 
         // G1: guard-lending pub fns need a guard-stable: tag.
@@ -591,6 +651,50 @@ mod tests {
     fn multiline_signature_return_type_found() {
         let src = "pub fn alloc(\n    &self,\n    n: usize,\n) -> *mut u8 {\n    todo!()\n}\n";
         assert_eq!(errors("src/slab/mod.rs", src).len(), 1);
+    }
+
+    // ---- C1 fixtures -------------------------------------------------
+
+    #[test]
+    fn single_slash_comment_is_flagged() {
+        // The shape ISSUE 7 hunts: `/ text` where `// text` was meant.
+        let src = "fn f() {\n    let mut buf = [0u8; 20]; / u64::MAX is 20 digits\n}\n";
+        let f = errors("src/proto/mod.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::Comment);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn line_starting_slash_is_flagged() {
+        let src = "/ Documentation that lost a slash\nfn f() {}\n";
+        let f = errors("src/server/mod.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::Comment);
+    }
+
+    #[test]
+    fn division_and_slash_assign_pass() {
+        let src = "fn f(a: usize, b: usize) -> usize {\n    let mut x = a / b;\n    x /= 2;\n    (a / 2) + x\n}\n";
+        assert!(errors("src/server/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn slash_in_string_passes() {
+        let src = "fn f() -> &'static str { \"a/b; /path\" }\n";
+        assert!(errors("src/server/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn proper_comments_pass() {
+        let src = "// fine\n/// also fine\nfn f() { let x = 1; /* block */ }\n";
+        assert!(errors("src/server/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn comment_waiver_suppresses_c1() {
+        let src = "// audit:allow(comment) intentional odd formatting\nfn f() { g(); / 2 }\n";
+        assert!(errors("src/server/mod.rs", src).is_empty());
     }
 
     // ---- waivers and cfg(test) ---------------------------------------

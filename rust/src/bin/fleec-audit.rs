@@ -4,7 +4,8 @@
 //! the repo's lock-free conventions (see [`fleec::audit`] and
 //! `rust/docs/concurrency.md`): `SAFETY:` on every `unsafe` site,
 //! `ord:` tags on every release-side memory ordering, `guard-stable:`
-//! on guard-lending public APIs.
+//! on guard-lending public APIs, and no lone `/` where a `//` comment
+//! was meant (the desk-check-era compile nit).
 //!
 //! ```text
 //! fleec-audit [--root DIR] [--json PATH|-] [--deny-warnings] [--quiet]
@@ -34,6 +35,7 @@ fn usage() -> ! {
            ord     Release/AcqRel/SeqCst must carry an ord: pairing tag;\n\
                    Relaxed in the lock-free core must carry ord: relaxed-ok\n\
            guard   guard-lending pub fns must carry a guard-stable: tag\n\
+           comment lone `/` in comment position (malformed `//`) is an error\n\
          Waive in place with `audit:allow(<rule>) <reason>`."
     );
     std::process::exit(2);

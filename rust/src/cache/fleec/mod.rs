@@ -356,11 +356,13 @@ impl FleecCache {
             // Publish this thread's magazine-parked chunks (all classes)
             // to the shared free lists before acting on pressure: parked
             // chunks are free memory, and other threads/classes should be
-            // able to reuse them before anything gets evicted. (Chunks
-            // parked in *other* threads' magazines stay private until
-            // those threads allocate, free, or exit — a bounded
-            // MAG_CAP×threads×chunk_size blind spot, noted in ROADMAP.)
+            // able to reuse them before anything gets evicted. The raised
+            // flush-request epoch reaches *other* threads' magazines too:
+            // each registered thread flushes on its next alloc/free, so
+            // only truly idle threads keep chunks parked (bounded by
+            // MAG_CAP×idle-threads×chunk_size).
             self.slab.flush_local_magazines();
+            self.slab.request_magazine_flush();
             // Paper order: reclaim limbo memory first (it is free memory
             // merely awaiting a grace period), evict only if that fails.
             self.collector.request_reclaim();

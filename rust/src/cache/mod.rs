@@ -1,10 +1,12 @@
 //! The engine-neutral cache interface and shared item semantics.
 //!
-//! All three engines — [`memcached`] (blocking baseline), [`memclock`]
-//! (blocking table + CLOCK eviction, the paper's intermediate step) and
-//! [`fleec`] (the paper's lock-free system) — implement [`Cache`], so the
-//! protocol server, the workload driver and every bench are generic over
-//! the engine and the paper's three-way comparison is an `--engine` flag.
+//! All four engines — [`memcached`] (blocking baseline), [`memclock`]
+//! (blocking table + CLOCK eviction, the paper's intermediate step),
+//! [`fleec`] (the paper's lock-free system) and [`oaflash`] (lock-free
+//! open addressing over the same item substrate) — implement [`Cache`],
+//! so the protocol server, the workload driver and every bench are
+//! generic over the engine and the paper's comparison is an `--engine`
+//! flag.
 //! [`sharded::Sharded`] wraps any of them in an N-way key-hash router
 //! that is itself a [`Cache`], so every consumer scales by shard count
 //! without knowing it.
@@ -12,6 +14,7 @@
 pub mod fleec;
 pub mod memcached;
 pub mod memclock;
+pub mod oaflash;
 pub mod op;
 pub mod sharded;
 
@@ -234,9 +237,10 @@ pub trait Cache: Send + Sync {
 pub fn build_engine(name: &str, config: CacheConfig) -> crate::Result<Arc<dyn Cache>> {
     match name {
         "fleec" => Ok(Arc::new(fleec::FleecCache::new(config))),
+        "oaflash" => Ok(Arc::new(oaflash::OaFlashCache::new(config))),
         "memcached" => Ok(Arc::new(memcached::MemcachedCache::new(config))),
         "memclock" => Ok(Arc::new(memclock::MemClockCache::new(config))),
-        other => anyhow::bail!("unknown engine '{other}' (expected fleec|memcached|memclock)"),
+        other => anyhow::bail!("unknown engine '{other}' (expected fleec|oaflash|memcached|memclock)"),
     }
 }
 
@@ -263,12 +267,15 @@ pub fn build_sharded(
         "memclock" => Ok(Arc::new(sharded::Sharded::from_fn(shards, config, |_, c| {
             memclock::MemClockCache::new(c)
         }))),
-        other => anyhow::bail!("unknown engine '{other}' (expected fleec|memcached|memclock)"),
+        "oaflash" => Ok(Arc::new(sharded::Sharded::from_fn(shards, config, |_, c| {
+            oaflash::OaFlashCache::new(c)
+        }))),
+        other => anyhow::bail!("unknown engine '{other}' (expected fleec|oaflash|memcached|memclock)"),
     }
 }
 
 /// All engine names, baseline-first (bench iteration order).
-pub const ENGINES: [&str; 3] = ["memcached", "memclock", "fleec"];
+pub const ENGINES: [&str; 4] = ["memcached", "memclock", "fleec", "oaflash"];
 
 /// FNV-1a 64-bit — the hash every engine uses so key placement is
 /// identical across the three systems (fair hit-ratio comparisons).

@@ -1,0 +1,1849 @@
+//! `oaflash` — a lock-free **open-addressing** cache engine.
+//!
+//! The fourth engine: FLeeC's item/EBR/slab substrate under a
+//! cache-line-dense linear-probe table instead of chained Harris lists.
+//! A GET probe walks consecutive slot words (one cache line covers 8
+//! slots) instead of chasing node pointers, which is the whole point at
+//! the read-heavy corner the read-path sweep measures.
+//!
+//! Design in one paragraph (full argument in
+//! `rust/docs/concurrency.md`): **claim-only linear probing with
+//! generation-time relocation**. Within one table generation, a key's
+//! entry is installed exactly once, by a CAS on the first empty slot of
+//! its probe window, and never moves; deletion tombstones the *item
+//! word* (entry stays, claim is reusable via revival); relocation — the
+//! open-addressing analog of Robin-Hood/Hopscotch displacement — happens
+//! only when a generation migrates into its successor, entry pointers
+//! re-inserted one CAS at a time while readers keep resolving through
+//! the frozen old generation. We deliberately rejected in-generation
+//! displacement (both Robin Hood stealing and Hopscotch hops): moving a
+//! key between slots while racing an insert of the *same key* can leave
+//! two entries whose shadowing order flips as later displacements pass
+//! each other — the published fixes (Kelly & Pearlmutter's timestamped
+//! buckets, K-CAS) buy back linearizability at the cost of the simple
+//! single-word commit that FLeeC's item semantics give us for free.
+//!
+//! The PR-5 invariant is structural here: relocation moves *entry
+//! pointers between slot words*; item bytes live in slab chunks that
+//! only ever retire through EBR, so a lent GET slice stays byte-stable
+//! for the whole batch even while migration shuffles every entry.
+
+pub mod table;
+
+use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::cache::{
+    deadline_from_exptime, hash_key, is_expired, BatchSink, Cache, CacheConfig, GetResult, Op,
+    StatsSnapshot, StoreOutcome, MAX_KEY_LEN,
+};
+use crate::ebr::{Collector, Guard};
+use crate::metrics::EngineMetrics;
+use crate::slab::{Slab, SlabConfig};
+
+use crate::cache::fleec::node::{
+    decode_item, live_word, Item, ItemState, ITEM_HEADER, MOVED_WORD, TOMB_WORD,
+};
+use table::{decode_slot, Entry, OaTable, SlotState, FWD_WORD, MIGRATE_SPAN, PROBE_WINDOW, SLOT_FRZ};
+
+/// Allocation-retry rounds before a store reports `OutOfMemory`.
+const OOM_ROUNDS: usize = 8;
+
+/// Result of scanning one generation's probe window for a key.
+enum Probe<'g> {
+    /// The generation's unique entry for the key (its item word decides
+    /// liveness; the slot may or may not be frozen — both are writable).
+    Found { idx: usize, entry: &'g Entry },
+    /// First empty slot in the window — the claim target, and an
+    /// authoritative "key absent in this generation".
+    Empty { idx: usize },
+    /// A forwarded-empty slot before any match: the generation is closed
+    /// for this key (the key was provably never here — the slot was
+    /// empty from generation start until freeze).
+    Closed,
+    /// Window exhausted on occupied non-matching slots.
+    Full,
+}
+
+/// Write-path location, after generation descent is resolved.
+enum Spot<'g> {
+    Found { idx: usize, entry: &'g Entry },
+    Empty { idx: usize },
+    /// Window full in the deepest generation (no successor installed):
+    /// the key is absent; a store must expand before it can claim.
+    Full,
+}
+
+/// Phase-A staging state for one batch op, consumed in phase B.
+#[derive(Clone, Copy)]
+enum Stage {
+    /// Op stages nothing.
+    Pass,
+    /// Plain storage op: the ready item or the terminal staging failure.
+    Store(Result<*mut Item, StoreOutcome>),
+}
+
+/// Store precondition selector.
+#[derive(Clone, Copy, PartialEq)]
+enum StoreMode {
+    Set,
+    Add,
+    Replace,
+    Cas(u64),
+}
+
+/// Outcome of [`OaFlashCache::rmw`].
+enum RmwResult {
+    Done(Vec<u8>),
+    NotFound,
+    Aborted,
+    Failed(StoreOutcome),
+}
+
+/// The numeric-value parse `incr`/`decr` apply (protocol semantics:
+/// UTF-8, surrounding whitespace tolerated).
+#[inline]
+fn parse_counter(data: &[u8]) -> Option<u64> {
+    std::str::from_utf8(data).ok()?.trim().parse().ok()
+}
+
+/// Scan one generation's probe window for `key`. Readers and writers
+/// share this scan, so both stop at the same authoritative boundaries —
+/// the per-key uniqueness proof depends on a writer never claiming past
+/// a slot a reader would have trusted as a miss.
+fn probe<'g>(t: &'g OaTable, hash: u64, key: &[u8]) -> Probe<'g> {
+    let home = t.home(hash);
+    let window = PROBE_WINDOW.min(t.len());
+    for d in 0..window {
+        let i = (home + d) & t.mask;
+        let w = t.slots[i].load(Ordering::Acquire);
+        match decode_slot(w) {
+            SlotState::Empty => return Probe::Empty { idx: i },
+            SlotState::Fwd => return Probe::Closed,
+            SlotState::Resident { entry, .. } => {
+                // SAFETY: a resident entry is only freed with its table
+                // generation through EBR retirement; every caller holds a
+                // guard, and the slot never changes entries (monotonicity).
+                let e = unsafe { &*entry };
+                if e.hash == hash && *e.key == *key {
+                    return Probe::Found { idx: i, entry: e };
+                }
+            }
+        }
+    }
+    Probe::Full
+}
+
+/// The open-addressing lock-free cache engine.
+pub struct OaFlashCache {
+    collector: Arc<Collector>,
+    slab: Arc<Slab>,
+    /// Root of the generation chain (EBR-protected).
+    table: AtomicPtr<OaTable>,
+    /// Live entries across the chain.
+    items: AtomicUsize,
+    /// Monotonic CAS-token source (also the RMW race detector).
+    cas_counter: AtomicU64,
+    /// Entries relocated into a successor generation — the engine's
+    /// displacement count, read by the guard-stability stress.
+    displacements: AtomicU64,
+    metrics: EngineMetrics,
+    config: CacheConfig,
+    /// Planner-tunable eviction parameters.
+    evict_decay: AtomicU8,
+    evict_batch: AtomicU32,
+}
+
+impl OaFlashCache {
+    /// Build an engine from `config`.
+    pub fn new(config: CacheConfig) -> Self {
+        // Capacity floor keeps the probe window meaningful relative to
+        // the table (PROBE_WINDOW slots = the whole smallest table).
+        let slots = config.initial_buckets.next_power_of_two().max(64);
+        let slab = Slab::new(SlabConfig {
+            mem_limit: config.mem_limit,
+            ..SlabConfig::default()
+        });
+        OaFlashCache {
+            collector: Collector::default(),
+            slab,
+            table: AtomicPtr::new(OaTable::alloc(slots)),
+            items: AtomicUsize::new(0),
+            cas_counter: AtomicU64::new(0),
+            displacements: AtomicU64::new(0),
+            metrics: EngineMetrics::default(),
+            evict_batch: AtomicU32::new(config.evict_batch),
+            evict_decay: AtomicU8::new(1),
+            config,
+        }
+    }
+
+    /// The EBR collector (shared with the coordinator).
+    pub fn collector(&self) -> &Arc<Collector> {
+        &self.collector
+    }
+
+    /// The engine's live request-path counters (see
+    /// [`crate::cache::fleec::FleecCache::metrics`] for why inherent).
+    pub fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+
+    /// The slab allocator (stats).
+    pub fn slab(&self) -> &Arc<Slab> {
+        &self.slab
+    }
+
+    /// Entries relocated across generations since creation. The
+    /// guard-stability stress asserts this is non-zero while its lent
+    /// slices stay byte-identical.
+    pub fn displacements(&self) -> u64 {
+        // ord: relaxed-ok — accounting counter; stats tolerate racy
+        // snapshots.
+        self.displacements.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn root<'g>(&self, _guard: &'g Guard) -> &'g OaTable {
+        // SAFETY: the root table is only retired after being unlinked by
+        // try_promote, and we hold a guard.
+        unsafe { &*self.table.load(Ordering::Acquire) }
+    }
+
+    /// Bump a slot's CLOCK to the maximum (recently used). Load-first so
+    /// hot slots don't redirty the cache line on every hit.
+    #[inline]
+    fn touch_clock(&self, t: &OaTable, idx: usize) {
+        let c = &t.clocks[idx];
+        let max = self.config.clock_max;
+        // ord: relaxed-ok — CLOCK eviction heuristic (load + store below);
+        // racy reads/writes only skew victim choice.
+        if c.load(Ordering::Relaxed) != max {
+            // ord: relaxed-ok — CLOCK heuristic, as above.
+            c.store(max, Ordering::Relaxed);
+        }
+    }
+
+    /// Mark a slot mildly used (fresh insert: CLOCK 1 if previously 0 —
+    /// one sweep of protection without outranking hot slots).
+    #[inline]
+    fn seed_clock(&self, t: &OaTable, idx: usize) {
+        // ord: relaxed-ok — CLOCK eviction heuristic; a lost race only
+        // skews victim choice.
+        let _ = t.clocks[idx].compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed);
+    }
+
+    /// Descend to `t`'s successor, helping migration along the way.
+    fn descend<'g>(&self, t: &'g OaTable, guard: &'g Guard) -> &'g OaTable {
+        let next = t.next.load(Ordering::Acquire);
+        debug_assert!(!next.is_null(), "descend without a successor");
+        // SAFETY: chain tables are retired only through EBR after the
+        // root swings past them; the guard keeps `next` live.
+        let next_ref = unsafe { &*next };
+        self.migrate_span(t, next_ref, guard);
+        self.try_promote(guard);
+        next_ref
+    }
+
+    /// Walk the generation chain until a write-relevant location lands:
+    /// the key's entry with a non-`Moved` item word, the first empty slot
+    /// of the deepest reachable window, or `Full`.
+    fn locate_for_write<'g>(&self, hash: u64, key: &[u8], guard: &'g Guard) -> (&'g OaTable, Spot<'g>) {
+        let mut t = self.root(guard);
+        loop {
+            match probe(t, hash, key) {
+                Probe::Found { idx, entry } => {
+                    if matches!(
+                        decode_item(entry.item.load(Ordering::Acquire)),
+                        ItemState::Moved
+                    ) {
+                        // Entry already transferred: its current home is a
+                        // deeper generation.
+                        t = self.descend(t, guard);
+                        continue;
+                    }
+                    return (t, Spot::Found { idx, entry });
+                }
+                Probe::Empty { idx } => return (t, Spot::Empty { idx }),
+                Probe::Closed => t = self.descend(t, guard),
+                Probe::Full => {
+                    if t.next.load(Ordering::Acquire).is_null() {
+                        return (t, Spot::Full);
+                    }
+                    t = self.descend(t, guard);
+                }
+            }
+        }
+    }
+
+    /// If the root table is fully migrated, swing the root to its
+    /// successor and retire the old generation.
+    fn try_promote(&self, guard: &Guard) {
+        let root = self.table.load(Ordering::Acquire);
+        // SAFETY: the root table is only retired after being unlinked by
+        // the CAS below, and we hold a guard.
+        let t = unsafe { &*root };
+        if !t.fully_migrated() {
+            return;
+        }
+        let next = t.next.load(Ordering::Acquire);
+        if next.is_null() {
+            return;
+        }
+        if self
+            .table
+            // ord: AcqRel — Release publishes the promotion so later root
+            // loads start at the new generation; Acquire counterpart: the
+            // root loads in root() and here.
+            .compare_exchange(root, next, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            // SAFETY: we won the root swing — sole retirer of the old
+            // generation; stragglers still reading it hold guards. The
+            // generation's Drop frees its entries (items were already
+            // transferred or retired).
+            unsafe { guard.defer_drop_box(root) };
+        }
+    }
+
+    /// Install (or return) `t`'s successor generation. Same-size when the
+    /// live count says the pressure is tombstones (rehash purges them),
+    /// double otherwise. `config.load_factor` is a chaining knob (items
+    /// per bucket > 1); open addressing expands on *claimed slots*
+    /// instead, so it is deliberately unused here.
+    fn install_successor<'g>(&self, t: &'g OaTable, guard: &'g Guard) -> &'g OaTable {
+        let next = t.next.load(Ordering::Acquire);
+        if !next.is_null() {
+            // SAFETY: guard-protected successor; chain tables retire only
+            // through EBR.
+            return unsafe { &*next };
+        }
+        // ord: relaxed-ok — sizing heuristic; an approximate live count
+        // only shifts the growth decision.
+        let live = self.items.load(Ordering::Relaxed);
+        let cap = if live + live / 2 >= t.len() {
+            t.len() * 2
+        } else {
+            t.len()
+        };
+        let new = OaTable::alloc(cap.max(64));
+        match t.next.compare_exchange(
+            std::ptr::null_mut(),
+            new,
+            // ord: AcqRel — Release publishes the new table's initialized
+            // slots; Acquire counterpart: the `next` loads in descend,
+            // locate_for_write, migration and the read paths.
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => {
+                self.metrics.expansions.inc();
+                let _ = guard;
+                // SAFETY: just published; retired only through EBR.
+                unsafe { &*new }
+            }
+            Err(_) => {
+                // SAFETY: the CAS failed — `new` was never published and
+                // we still exclusively own the Box.
+                unsafe { drop(Box::from_raw(new)) };
+                // SAFETY: non-null was just observed by the failed CAS;
+                // guard-protected as above.
+                unsafe { &*t.next.load(Ordering::Acquire) }
+            }
+        }
+    }
+
+    /// Trigger/help expansion when claimed slots cross ~0.7 of capacity.
+    /// Claimed (not live) is the right load measure for open addressing:
+    /// tombstoned entries still lengthen probes.
+    fn maybe_expand(&self, guard: &Guard) {
+        let t = self.root(guard);
+        // ord: relaxed-ok — load-factor heuristic; an approximate count
+        // only shifts when expansion triggers.
+        let claimed = t.claimed.load(Ordering::Relaxed);
+        if claimed * 10 <= t.len() * 7 {
+            return;
+        }
+        let next = t.next.load(Ordering::Acquire);
+        if next.is_null() {
+            self.install_successor(t, guard);
+            return;
+        }
+        // An expansion is already in flight: keep it moving and promote
+        // when done, so chained expansions never stall waiting for the
+        // maintenance thread.
+        // SAFETY: non-null was just checked; successor tables are retired
+        // only through EBR and we hold a guard.
+        let next_ref = unsafe { &*next };
+        self.migrate_span(t, next_ref, guard);
+        self.try_promote(guard);
+    }
+
+    /// Claim and transfer one span of `t`'s slots. When every span is
+    /// claimed but the table is not yet fully migrated (a claimant may be
+    /// descheduled mid-span), sweep the whole table — transfers are
+    /// idempotent, so helping twice is merely redundant.
+    fn migrate_span(&self, t: &OaTable, next: &OaTable, guard: &Guard) {
+        // ord: relaxed-ok — work-partitioning counter; fetch_add is
+        // atomic regardless of ordering, and each slot transfer carries
+        // its own publish/consume edges.
+        let start = t.cursor.fetch_add(MIGRATE_SPAN, Ordering::Relaxed);
+        if start >= t.len() {
+            if !t.fully_migrated() {
+                for idx in 0..t.len() {
+                    self.migrate_slot(t, idx, next, guard);
+                }
+            }
+            return;
+        }
+        let end = (start + MIGRATE_SPAN).min(t.len());
+        for idx in start..end {
+            self.migrate_slot(t, idx, next, guard);
+        }
+    }
+
+    /// Drive one slot of `t` to its terminal migrated state: forwarded
+    /// (was empty) or frozen with its item transferred. Exactly one
+    /// helper performs each terminal transition and counts it.
+    fn migrate_slot(&self, t: &OaTable, idx: usize, next: &OaTable, guard: &Guard) {
+        loop {
+            let w = t.slots[idx].load(Ordering::Acquire);
+            match decode_slot(w) {
+                SlotState::Empty => {
+                    if t.slots[idx]
+                        // ord: AcqRel — Release publishes the forwarded
+                        // state (probes now treat the slot as terminal);
+                        // Acquire orders our re-read against a racing
+                        // claim's Release.
+                        .compare_exchange(0, FWD_WORD, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        // ord: AcqRel — pairs with fully_migrated()'s
+                        // Acquire: promotion proves every transfer
+                        // happened-before it.
+                        t.migrated.fetch_add(1, Ordering::AcqRel);
+                        return;
+                    }
+                    // Lost to a late claim: re-read and freeze the entry.
+                }
+                SlotState::Fwd => return,
+                SlotState::Resident { entry, frozen } => {
+                    if !frozen
+                        && t.slots[idx]
+                            // ord: AcqRel — Release publishes the frozen
+                            // tag; Acquire orders the entry reads below
+                            // after the claim that published it.
+                            .compare_exchange(w, w | SLOT_FRZ, Ordering::AcqRel, Ordering::Acquire)
+                            .is_err()
+                    {
+                        continue; // slot word changed under us: re-read
+                    }
+                    // SAFETY: resident entries are freed only with their
+                    // generation through EBR; we hold a guard.
+                    let e = unsafe { &*entry };
+                    loop {
+                        let iw = e.item.load(Ordering::Acquire);
+                        match decode_item(iw) {
+                            // Another helper completed (and counted) it.
+                            ItemState::Moved => return,
+                            ItemState::Tomb => {
+                                if e.item
+                                    .compare_exchange(
+                                        iw,
+                                        MOVED_WORD,
+                                        // ord: AcqRel — Release publishes the
+                                        // moved state to writers (their CAS
+                                        // fails and they descend); Acquire
+                                        // pairs with the tombstoning CAS.
+                                        Ordering::AcqRel,
+                                        Ordering::Acquire,
+                                    )
+                                    .is_ok()
+                                {
+                                    // Nothing to relocate.
+                                    // ord: AcqRel — see the forward case.
+                                    t.migrated.fetch_add(1, Ordering::AcqRel);
+                                    return;
+                                }
+                            }
+                            ItemState::Live(item) => {
+                                if e.item
+                                    .compare_exchange(
+                                        iw,
+                                        MOVED_WORD,
+                                        // ord: AcqRel — Acquire pairs with the
+                                        // Release that published `item` (we
+                                        // become its sole relocator); Release
+                                        // publishes the moved state to racing
+                                        // writers.
+                                        Ordering::AcqRel,
+                                        Ordering::Acquire,
+                                    )
+                                    .is_ok()
+                                {
+                                    self.install_migrated(next, e.hash, &e.key, item, guard);
+                                    // ord: AcqRel — see the forward case.
+                                    t.migrated.fetch_add(1, Ordering::AcqRel);
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Re-insert a transferred item pointer into `start` (or deeper).
+    /// This is the engine's *displacement*: the entry relocates, the item
+    /// bytes do not move — the invariant lent GET slices rely on.
+    fn install_migrated(
+        &self,
+        start: &OaTable,
+        hash: u64,
+        key: &[u8],
+        item: *mut Item,
+        guard: &Guard,
+    ) {
+        let mut t = start;
+        let mut shell: *mut Entry = std::ptr::null_mut();
+        loop {
+            match probe(t, hash, key) {
+                Probe::Found { entry, .. } => {
+                    // A same-key entry already lives here. Within one hop
+                    // this cannot happen (a writer only reaches the next
+                    // generation after helping this very transfer to
+                    // completion), so treat it defensively as a deeper
+                    // newer value: the migrated item lost.
+                    match decode_item(entry.item.load(Ordering::Acquire)) {
+                        ItemState::Moved => {
+                            t = self.descend(t, guard);
+                            continue;
+                        }
+                        _ => {
+                            Item::retire(guard, &self.slab, item);
+                            // ord: relaxed-ok — accounting counter.
+                            self.items.fetch_sub(1, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                }
+                Probe::Empty { idx } => {
+                    if shell.is_null() {
+                        shell = Entry::alloc(hash, key, live_word(item));
+                    }
+                    match t.slots[idx].compare_exchange(
+                        0,
+                        shell as usize,
+                        // ord: AcqRel — Release publishes the entry's
+                        // hash/key/item fields; Acquire counterpart: the
+                        // slot loads in probe.
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    ) {
+                        Ok(_) => {
+                            shell = std::ptr::null_mut();
+                            // ord: relaxed-ok — load heuristic counter.
+                            t.claimed.fetch_add(1, Ordering::Relaxed);
+                            // ord: relaxed-ok — accounting counter.
+                            self.displacements.fetch_add(1, Ordering::Relaxed);
+                            self.seed_clock(t, idx);
+                            break;
+                        }
+                        Err(_) => continue, // slot changed: re-probe
+                    }
+                }
+                Probe::Closed | Probe::Full => {
+                    // This generation is closed/full for the key: push
+                    // one level deeper (installing a deeper successor if
+                    // migration outran expansion).
+                    let next = t.next.load(Ordering::Acquire);
+                    t = if next.is_null() {
+                        self.install_successor(t, guard)
+                    } else {
+                        // SAFETY: guard-protected successor, as above.
+                        unsafe { &*next }
+                    };
+                }
+            }
+        }
+        if !shell.is_null() {
+            // SAFETY: the shell was never published — we still
+            // exclusively own the Box.
+            unsafe { drop(Box::from_raw(shell)) };
+        }
+    }
+
+    /// Allocate an item, driving reclamation and eviction on pressure.
+    /// Runs UNPINNED (reclamation needs quiescence).
+    fn alloc_item_pressured(
+        &self,
+        value: &[u8],
+        flags: u32,
+        deadline: u32,
+        cas: u64,
+    ) -> Result<*mut Item, StoreOutcome> {
+        if ITEM_HEADER + value.len() > self.slab.chunk_size((self.slab.class_count() - 1) as u8) {
+            return Err(StoreOutcome::TooLarge);
+        }
+        for round in 0..OOM_ROUNDS {
+            if let Some(item) = Item::alloc(&self.slab, value, flags, deadline, cas) {
+                return Ok(item);
+            }
+            self.metrics.oom_stalls.inc();
+            // Publish this thread's parked chunks, then ask every other
+            // registered thread to do the same at its next slab touch —
+            // the flush-request flag closes the idle-magazine blind spot.
+            self.slab.flush_local_magazines();
+            self.slab.request_magazine_flush();
+            // Paper order: reclaim limbo memory first (it is free memory
+            // merely awaiting a grace period), evict only if that fails.
+            self.collector.request_reclaim();
+            self.collector.force_reclaim(2);
+            if let Some(item) = Item::alloc(&self.slab, value, flags, deadline, cas) {
+                return Ok(item);
+            }
+            {
+                let guard = self.collector.pin();
+                // ord: relaxed-ok — tuning knob; any recent value works.
+                let batch = self.evict_batch.load(Ordering::Relaxed) as usize;
+                self.evict_some(batch * (round + 1), &guard);
+            }
+            self.collector.force_reclaim(2);
+        }
+        Err(StoreOutcome::OutOfMemory)
+    }
+
+    /// Advance the CLOCK hand, decaying per-slot values and evicting
+    /// zero-valued live slots, until `want` items were freed or two full
+    /// revolutions found nothing. Sweeps the chain tail-first during
+    /// expansion, like FLeeC, so memory in the successor is reachable.
+    fn evict_some(&self, want: usize, guard: &Guard) -> usize {
+        let mut chain: Vec<&OaTable> = Vec::with_capacity(2);
+        let mut t = self.root(guard);
+        loop {
+            chain.push(t);
+            let next = t.next.load(Ordering::Acquire);
+            if next.is_null() {
+                break;
+            }
+            // SAFETY: chain tables are retired only through EBR after the
+            // root swings past them; the guard keeps `next` live.
+            t = unsafe { &*next };
+        }
+        // ord: relaxed-ok — tuning knob; any recent value works.
+        let decay = self.evict_decay.load(Ordering::Relaxed).max(1);
+        let mut freed = 0usize;
+        for t in chain.iter().rev() {
+            let size = t.len();
+            let mut scanned = 0usize;
+            while freed < want && scanned < 2 * size {
+                // ord: relaxed-ok — CLOCK-hand position; any interleaving
+                // of increments is a valid sweep order.
+                let idx = t.hand.fetch_add(1, Ordering::Relaxed) & t.mask;
+                scanned += 1;
+                // ord: relaxed-ok — CLOCK eviction heuristic; a stale
+                // value only skews victim choice.
+                let c = t.clocks[idx].load(Ordering::Relaxed);
+                if c > 0 {
+                    // Racy decrement is fine: losing a race just means
+                    // another sweeper already decremented.
+                    let _ = t.clocks[idx].compare_exchange(
+                        c,
+                        c.saturating_sub(decay),
+                        // ord: relaxed-ok — CLOCK heuristic (both
+                        // orderings); a lost race only skews victims.
+                        Ordering::Relaxed,
+                        // ord: relaxed-ok — as above.
+                        Ordering::Relaxed,
+                    );
+                    continue;
+                }
+                freed += self.evict_slot(t, idx, guard);
+            }
+            if freed >= want {
+                break;
+            }
+        }
+        freed
+    }
+
+    /// Tombstone one slot's live item (CLOCK victim). Frozen slots are
+    /// skipped — migration owns them and the memory is seconds from being
+    /// reachable in the successor anyway.
+    fn evict_slot(&self, t: &OaTable, idx: usize, guard: &Guard) -> usize {
+        let w = t.slots[idx].load(Ordering::Acquire);
+        if let SlotState::Resident {
+            entry,
+            frozen: false,
+        } = decode_slot(w)
+        {
+            // SAFETY: resident entries are freed only with their
+            // generation through EBR; we hold a guard.
+            let e = unsafe { &*entry };
+            let iw = e.item.load(Ordering::Acquire);
+            if let ItemState::Live(item) = decode_item(iw) {
+                if e.item
+                    // ord: AcqRel — Acquire pairs with the Release of the
+                    // install CAS that published `item` (safe to retire);
+                    // Release publishes the tombstone to writers whose
+                    // item CAS now fails.
+                    .compare_exchange(iw, TOMB_WORD, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    Item::retire(guard, &self.slab, item);
+                    // ord: relaxed-ok — accounting counter; stats
+                    // tolerate racy snapshots.
+                    self.items.fetch_sub(1, Ordering::Relaxed);
+                    self.metrics.evictions.inc();
+                    return 1;
+                }
+            }
+        }
+        0
+    }
+
+    /// Lazily expire an entry's item (tombstone + retire). Returns true
+    /// if we won the race.
+    fn expire_entry(&self, entry: &Entry, item_word: usize, item: *mut Item, guard: &Guard) -> bool {
+        if entry
+            .item
+            // ord: AcqRel — Acquire pairs with the Release of the install
+            // CAS that published `item`; Release publishes the tombstone
+            // to writers whose item CAS now fails.
+            .compare_exchange(item_word, TOMB_WORD, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            Item::retire(guard, &self.slab, item);
+            // ord: relaxed-ok — accounting counter; stats tolerate racy
+            // snapshots.
+            self.items.fetch_sub(1, Ordering::Relaxed);
+            self.metrics.expired.inc();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Shared store path (see [`FleecCache::store`]'s precondition table —
+    /// identical semantics).
+    ///
+    /// [`FleecCache::store`]: crate::cache::fleec::FleecCache
+    fn store(
+        &self,
+        key: &[u8],
+        value: &[u8],
+        flags: u32,
+        exptime: u32,
+        mode: StoreMode,
+    ) -> StoreOutcome {
+        if key.len() > MAX_KEY_LEN || key.is_empty() {
+            return StoreOutcome::NotStored;
+        }
+        self.metrics.sets.inc();
+        let deadline = deadline_from_exptime(exptime);
+        let item = match self.alloc_item_pressured(value, flags, deadline, 0) {
+            Ok(i) => i,
+            Err(e) => return e,
+        };
+        let hash = hash_key(key);
+        let guard = self.collector.pin();
+        self.store_prealloc(key, hash, item, mode, &guard)
+    }
+
+    /// Install a pre-allocated `item` under `key` (metrics-free; the
+    /// caller counted the set and may hold a batch-wide guard). Owns
+    /// `item`: frees it on any non-`Stored` outcome. The CAS token is
+    /// stamped here — at install time — so batched runs hand out tokens
+    /// in execution order, exactly like FLeeC.
+    ///
+    /// Three install shapes, all one CAS: overwrite a live entry's item
+    /// word, **revive** a tombstoned entry (the claim is reused — this is
+    /// what bounds slot consumption to distinct-keys-per-generation), or
+    /// claim the window's first empty slot with a fresh entry.
+    fn store_prealloc(
+        &self,
+        key: &[u8],
+        hash: u64,
+        item: *mut Item,
+        mode: StoreMode,
+        guard: &Guard,
+    ) -> StoreOutcome {
+        // ord: relaxed-ok — the counter only needs uniqueness; the
+        // install CAS's Release publishes the stamped token.
+        let cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
+        // SAFETY: `item` is exclusively ours — unpublished until the
+        // install CAS below.
+        unsafe { (*item).cas = cas };
+        let mut shell: *mut Entry = std::ptr::null_mut();
+        let outcome = loop {
+            let (t, spot) = self.locate_for_write(hash, key, guard);
+            match spot {
+                Spot::Found { idx, entry } => {
+                    let w = entry.item.load(Ordering::Acquire);
+                    match decode_item(w) {
+                        ItemState::Live(old) => {
+                            // SAFETY: `old` was live under the guard;
+                            // published items retire only through EBR, so
+                            // the header outlives our pin.
+                            let expired = is_expired(unsafe { (*old).deadline });
+                            if expired && self.expire_entry(entry, w, old, guard) {
+                                continue; // now tombstoned; loop decides
+                            }
+                            match mode {
+                                StoreMode::Add => break StoreOutcome::NotStored,
+                                // SAFETY: guard-protected live item, as
+                                // above.
+                                StoreMode::Cas(expect) if unsafe { (*old).cas } != expect => {
+                                    break StoreOutcome::Exists;
+                                }
+                                _ => {}
+                            }
+                            if entry
+                                .item
+                                .compare_exchange(
+                                    w,
+                                    live_word(item),
+                                    // ord: AcqRel — Release publishes the new
+                                    // item's bytes and token (Acquire
+                                    // counterpart: item loads in get_view /
+                                    // rmw paths); Acquire pairs with the
+                                    // Release that published `old`, so the
+                                    // retire below is well-founded.
+                                    Ordering::AcqRel,
+                                    Ordering::Acquire,
+                                )
+                                .is_ok()
+                            {
+                                Item::retire(guard, &self.slab, old);
+                                self.touch_clock(t, idx);
+                                break StoreOutcome::Stored;
+                            }
+                            // Raced with another writer/evictor: retry.
+                        }
+                        ItemState::Tomb => {
+                            // Absent. Revive the entry's claim for
+                            // set/add; replace/cas miss.
+                            match mode {
+                                StoreMode::Replace | StoreMode::Cas(_) => {
+                                    break StoreOutcome::NotFound;
+                                }
+                                _ => {}
+                            }
+                            if entry
+                                .item
+                                .compare_exchange(
+                                    TOMB_WORD,
+                                    live_word(item),
+                                    // ord: AcqRel — Release publishes the
+                                    // revived item's bytes and token; Acquire
+                                    // pairs with the tombstoning CAS, so the
+                                    // revival happens-after the delete it
+                                    // overwrites.
+                                    Ordering::AcqRel,
+                                    Ordering::Acquire,
+                                )
+                                .is_ok()
+                            {
+                                // ord: relaxed-ok — accounting counter.
+                                self.items.fetch_add(1, Ordering::Relaxed);
+                                self.seed_clock(t, idx);
+                                break StoreOutcome::Stored;
+                            }
+                            // Lost a revival/transfer race: retry.
+                        }
+                        ItemState::Moved => continue, // re-locate deeper
+                    }
+                }
+                Spot::Empty { idx } => {
+                    match mode {
+                        StoreMode::Replace | StoreMode::Cas(_) => break StoreOutcome::NotFound,
+                        _ => {}
+                    }
+                    if shell.is_null() {
+                        shell = Entry::alloc(hash, key, live_word(item));
+                    }
+                    match t.slots[idx].compare_exchange(
+                        0,
+                        shell as usize,
+                        // ord: AcqRel — Release publishes the entry's
+                        // hash/key/item fields; Acquire counterpart: the
+                        // slot loads in probe.
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    ) {
+                        Ok(_) => {
+                            shell = std::ptr::null_mut(); // published
+                            // ord: relaxed-ok — load heuristic counter.
+                            t.claimed.fetch_add(1, Ordering::Relaxed);
+                            // ord: relaxed-ok — accounting counter.
+                            self.items.fetch_add(1, Ordering::Relaxed);
+                            self.seed_clock(t, idx);
+                            self.maybe_expand(guard);
+                            break StoreOutcome::Stored;
+                        }
+                        Err(_) => {} // slot changed: re-locate
+                    }
+                }
+                Spot::Full => {
+                    // Window exhausted in the deepest generation: the key
+                    // is authoritatively absent here.
+                    match mode {
+                        StoreMode::Replace | StoreMode::Cas(_) => break StoreOutcome::NotFound,
+                        _ => {}
+                    }
+                    // Force an expansion round, then retry (the next
+                    // locate descends into the successor).
+                    self.install_successor(t, guard);
+                }
+            }
+        };
+        if !shell.is_null() {
+            // SAFETY: the shell was never published — we still
+            // exclusively own the Box.
+            unsafe { drop(Box::from_raw(shell)) };
+        }
+        if outcome != StoreOutcome::Stored {
+            // SAFETY: on every non-Stored outcome the item was never
+            // published — no reader can hold it, free directly.
+            unsafe { self.slab.free(item as *mut u8, (*item).class) };
+        }
+        outcome
+    }
+
+    /// Resolve one staged storage op from the batch pre-allocation phase.
+    fn finish_staged(
+        &self,
+        key: &[u8],
+        hash: u64,
+        stage: Stage,
+        mode: StoreMode,
+        guard: &Guard,
+    ) -> StoreOutcome {
+        match stage {
+            Stage::Store(Ok(item)) => self.store_prealloc(key, hash, item, mode, guard),
+            Stage::Store(Err(e)) => e,
+            Stage::Pass => unreachable!("storage op was not staged in phase A"),
+        }
+    }
+
+    /// Guard-passing lookup core (metrics-free), shared by the single-key
+    /// path and the batched fast path. Returns the hit's
+    /// `(flags, cas, data)` with the value bytes **borrowed at the
+    /// guard's lifetime** — zero copy.
+    ///
+    /// SOUNDNESS of the `'g` borrow: identical to FLeeC's
+    /// (`FleecCache::get_view`) — every path that unpublishes a live item
+    /// (overwrite, delete, eviction, expiry, migration's superseded-drop
+    /// and `flush_all`) retires it through [`Item::retire`], i.e. through
+    /// EBR; nothing frees a *published* item's chunk directly. Migration
+    /// is the one new mechanic, and it moves the item *pointer* between
+    /// entries — never the bytes — so a lent slice survives arbitrary
+    /// concurrent relocation. Direct `slab.free` exists only for items
+    /// that were never published (failed stores, lost RMW speculation).
+    ///
+    /// Miss authority: an `Empty` probe result is terminal — a key can
+    /// only reach a deeper generation by its entry being frozen+moved or
+    /// its window being closed (forwarded slot) or full, all of which
+    /// this probe would have seen first. `Closed`/`Full` descend.
+    fn get_view<'g>(&self, key: &[u8], hash: u64, guard: &'g Guard) -> Option<(u32, u64, &'g [u8])> {
+        let mut t = self.root(guard);
+        loop {
+            match probe(t, hash, key) {
+                Probe::Found { idx, entry } => {
+                    let w = entry.item.load(Ordering::Acquire);
+                    match decode_item(w) {
+                        ItemState::Live(item) => {
+                            // SAFETY: live item observed under the guard;
+                            // see the SOUNDNESS note in the fn doc.
+                            let hdr = unsafe { &*item };
+                            if is_expired(hdr.deadline) {
+                                self.expire_entry(entry, w, item, guard);
+                                return None;
+                            }
+                            // SAFETY: the `'g` borrow is sound per the
+                            // SOUNDNESS note in the fn doc.
+                            // guard-stable: the lent slice lives in the
+                            // item's slab chunk; retirement is deferred
+                            // past every pinned guard, and migration
+                            // relocates pointers, not bytes.
+                            let data: &'g [u8] = unsafe { Item::data(item) };
+                            self.touch_clock(t, idx);
+                            return Some((hdr.flags, hdr.cas, data));
+                        }
+                        // Tombstone is an authoritative miss: revival
+                        // happens in place, never in a deeper generation
+                        // while this entry is visible.
+                        ItemState::Tomb => return None,
+                        ItemState::Moved => {
+                            let next = t.next.load(Ordering::Acquire);
+                            if next.is_null() {
+                                return None;
+                            }
+                            // SAFETY: guard-protected successor table —
+                            // chain tables retire only through EBR.
+                            t = unsafe { &*next };
+                        }
+                    }
+                }
+                Probe::Empty { .. } => return None,
+                Probe::Closed | Probe::Full => {
+                    let next = t.next.load(Ordering::Acquire);
+                    if next.is_null() {
+                        return None;
+                    }
+                    // SAFETY: guard-protected successor table, as above.
+                    t = unsafe { &*next };
+                }
+            }
+        }
+    }
+
+    /// Owning wrapper over [`OaFlashCache::get_view`].
+    fn get_in(&self, key: &[u8], hash: u64, guard: &Guard) -> Option<GetResult> {
+        self.get_view(key, hash, guard).map(|(flags, cas, data)| GetResult {
+            data: data.to_vec(),
+            flags,
+            cas,
+        })
+    }
+
+    /// Guard-passing delete core (metrics-free).
+    fn delete_in(&self, key: &[u8], hash: u64, guard: &Guard) -> bool {
+        loop {
+            let (_, spot) = self.locate_for_write(hash, key, guard);
+            match spot {
+                Spot::Found { entry, .. } => {
+                    let w = entry.item.load(Ordering::Acquire);
+                    match decode_item(w) {
+                        ItemState::Live(item) => {
+                            if entry
+                                .item
+                                // ord: AcqRel — Acquire pairs with the
+                                // Release that published `item`; Release
+                                // publishes the tombstone to racing
+                                // writers.
+                                .compare_exchange(w, TOMB_WORD, Ordering::AcqRel, Ordering::Acquire)
+                                .is_ok()
+                            {
+                                Item::retire(guard, &self.slab, item);
+                                // ord: relaxed-ok — accounting counter;
+                                // stats tolerate racy snapshots.
+                                self.items.fetch_sub(1, Ordering::Relaxed);
+                                return true;
+                            }
+                        }
+                        ItemState::Tomb => return false,
+                        ItemState::Moved => continue,
+                    }
+                }
+                Spot::Empty { .. } | Spot::Full => return false,
+            }
+        }
+    }
+
+    /// Phase-1 snapshot for [`OaFlashCache::rmw`]: the current token +
+    /// header + value bytes, or `None` (lazy expiry applied).
+    fn rmw_snapshot(
+        &self,
+        key: &[u8],
+        hash: u64,
+        guard: &Guard,
+    ) -> Option<(u64, u32, u32, Vec<u8>)> {
+        let mut t = self.root(guard);
+        loop {
+            match probe(t, hash, key) {
+                Probe::Found { entry, .. } => {
+                    let w = entry.item.load(Ordering::Acquire);
+                    match decode_item(w) {
+                        ItemState::Live(item) => {
+                            // SAFETY: live item observed under the guard;
+                            // published items retire only through EBR.
+                            let hdr = unsafe { &*item };
+                            if is_expired(hdr.deadline) {
+                                self.expire_entry(entry, w, item, guard);
+                                return None;
+                            }
+                            return Some((
+                                hdr.cas,
+                                hdr.flags,
+                                hdr.deadline,
+                                // SAFETY: guard-protected live item, as
+                                // above.
+                                unsafe { Item::data(item) }.to_vec(),
+                            ));
+                        }
+                        ItemState::Tomb => return None,
+                        ItemState::Moved => {
+                            let next = t.next.load(Ordering::Acquire);
+                            if next.is_null() {
+                                return None;
+                            }
+                            // SAFETY: guard-protected successor table.
+                            t = unsafe { &*next };
+                        }
+                    }
+                }
+                Probe::Empty { .. } => return None,
+                Probe::Closed | Probe::Full => {
+                    let next = t.next.load(Ordering::Acquire);
+                    if next.is_null() {
+                        return None;
+                    }
+                    // SAFETY: guard-protected successor table, as above.
+                    t = unsafe { &*next };
+                }
+            }
+        }
+    }
+
+    /// Phase-3 token-guarded install for [`OaFlashCache::rmw`]: succeeds
+    /// iff the key still holds the snapshotted token. Does **not** free
+    /// `item` on failure — the caller owns the retry.
+    fn install_rmw(&self, key: &[u8], hash: u64, token: u64, item: *mut Item, guard: &Guard) -> bool {
+        loop {
+            let (_, spot) = self.locate_for_write(hash, key, guard);
+            match spot {
+                Spot::Found { entry, .. } => {
+                    let w = entry.item.load(Ordering::Acquire);
+                    match decode_item(w) {
+                        ItemState::Live(old) => {
+                            // SAFETY: live item observed under the guard;
+                            // published items retire only through EBR.
+                            if unsafe { (*old).cas } != token {
+                                return false;
+                            }
+                            // Stamp the token at install time so batched
+                            // runs hand out tokens in execution order.
+                            // ord: relaxed-ok — uniqueness only; the
+                            // install CAS's Release publishes the stamp.
+                            let cas = self.cas_counter.fetch_add(1, Ordering::Relaxed) + 1;
+                            // SAFETY: `item` is exclusively ours until the
+                            // CAS below publishes it.
+                            unsafe { (*item).cas = cas };
+                            if entry
+                                .item
+                                .compare_exchange(
+                                    w,
+                                    live_word(item),
+                                    // ord: AcqRel — Release publishes the new
+                                    // item's bytes and token; Acquire pairs
+                                    // with the Release that published `old`,
+                                    // grounding the retire below.
+                                    Ordering::AcqRel,
+                                    Ordering::Acquire,
+                                )
+                                .is_ok()
+                            {
+                                Item::retire(guard, &self.slab, old);
+                                return true;
+                            }
+                            // Raced with another writer: the token test
+                            // decides next round.
+                        }
+                        ItemState::Tomb => return false,
+                        ItemState::Moved => continue,
+                    }
+                }
+                Spot::Empty { .. } | Spot::Full => return false,
+            }
+        }
+    }
+
+    /// Read-modify-write with the CAS-token race detector — the same
+    /// three-phase snapshot → unpinned transform+alloc → token-guarded
+    /// install protocol as FLeeC's (`FleecCache::rmw`).
+    fn rmw(
+        &self,
+        key: &[u8],
+        f: impl Fn(u32, u32, &[u8]) -> Option<(Vec<u8>, u32, u32)>,
+    ) -> RmwResult {
+        let hash = hash_key(key);
+        loop {
+            let snap = {
+                let guard = self.collector.pin();
+                self.rmw_snapshot(key, hash, &guard)
+            };
+            let Some((token, flags, deadline, data)) = snap else {
+                return RmwResult::NotFound;
+            };
+            let (new_value, new_flags, new_deadline) = match f(flags, deadline, &data) {
+                Some(v) => v,
+                None => return RmwResult::Aborted,
+            };
+            let item = match self.alloc_item_pressured(&new_value, new_flags, new_deadline, 0) {
+                Ok(i) => i,
+                Err(e) => return RmwResult::Failed(e),
+            };
+            let guard = self.collector.pin();
+            if self.install_rmw(key, hash, token, item, &guard) {
+                return RmwResult::Done(new_value);
+            }
+            // Token moved under us: free the speculative item and retry.
+            // SAFETY: the speculative item was never published — no
+            // reader can hold it, free directly.
+            unsafe { self.slab.free(item as *mut u8, (*item).class) };
+        }
+    }
+
+    /// `flush_all` helper: tombstone one slot's item regardless of CLOCK
+    /// or freeze state (no eviction metrics — protocol flush is not
+    /// cache pressure) and reset the slot's CLOCK.
+    fn flush_slot(&self, t: &OaTable, idx: usize, guard: &Guard) {
+        let w = t.slots[idx].load(Ordering::Acquire);
+        if let SlotState::Resident { entry, .. } = decode_slot(w) {
+            // SAFETY: resident entries are freed only with their
+            // generation through EBR; we hold a guard.
+            let e = unsafe { &*entry };
+            loop {
+                let iw = e.item.load(Ordering::Acquire);
+                match decode_item(iw) {
+                    ItemState::Live(item) => {
+                        if e.item
+                            // ord: AcqRel — Acquire pairs with the Release
+                            // that published `item`; Release publishes
+                            // the tombstone to racing writers.
+                            .compare_exchange(iw, TOMB_WORD, Ordering::AcqRel, Ordering::Acquire)
+                            .is_ok()
+                        {
+                            Item::retire(guard, &self.slab, item);
+                            // ord: relaxed-ok — accounting counter.
+                            self.items.fetch_sub(1, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                    ItemState::Tomb | ItemState::Moved => break,
+                }
+            }
+        }
+        // ord: relaxed-ok — CLOCK eviction heuristic reset.
+        t.clocks[idx].store(0, Ordering::Relaxed);
+    }
+}
+
+impl Cache for OaFlashCache {
+    fn engine_name(&self) -> &'static str {
+        "oaflash"
+    }
+
+    /// The batched fast path — FLeeC's shape on the open-addressing
+    /// table:
+    ///
+    /// * **One EBR guard** pinned for the whole batch; GET hits are
+    ///   delivered zero-copy ([`OaFlashCache::get_view`] — the batch
+    ///   guard keeps every lent slice byte-stable until return, even
+    ///   across concurrent generation migration).
+    /// * Keys are **pre-hashed** and home slots touched in ascending
+    ///   order so execution finds the lines resident.
+    /// * Items for plain storage ops are **pre-allocated before
+    ///   pinning** (allocation may force reclamation, which wants
+    ///   quiescence); tokens are stamped at install, so the token
+    ///   sequence matches a sequential run.
+    /// * **RMW ops run the classic three-phase loop at their turn**
+    ///   (re-entrant pin under the batch guard). This is a deliberate
+    ///   simplification over FLeeC's speculative RMW staging: semantics
+    ///   are identical; the cost is that an RMW op's allocation happens
+    ///   under the held guard, so epoch advancement under memory
+    ///   pressure is slightly more constrained for RMW-heavy batches.
+    /// * Metrics are **batched**: one counter add per counter per batch.
+    fn execute_batch_into(&self, ops: &[Op<'_>], sink: &mut dyn BatchSink) {
+        if ops.is_empty() {
+            return;
+        }
+        let hashes: Vec<u64> = ops.iter().map(|op| hash_key(op.key())).collect();
+
+        // Phase A (unpinned): validate keys and pre-allocate storage
+        // items.
+        let mut staged: Vec<Stage> = Vec::with_capacity(ops.len());
+        let mut sets = 0u64;
+        for op in ops {
+            let stage = match *op {
+                Op::Set {
+                    key,
+                    value,
+                    flags,
+                    exptime,
+                }
+                | Op::Add {
+                    key,
+                    value,
+                    flags,
+                    exptime,
+                }
+                | Op::Replace {
+                    key,
+                    value,
+                    flags,
+                    exptime,
+                }
+                | Op::CasOp {
+                    key,
+                    value,
+                    flags,
+                    exptime,
+                    ..
+                } => {
+                    if key.len() > MAX_KEY_LEN || key.is_empty() {
+                        Stage::Store(Err(StoreOutcome::NotStored))
+                    } else {
+                        sets += 1;
+                        let deadline = deadline_from_exptime(exptime);
+                        // Token 0 here; store_prealloc stamps the real one
+                        // at install time to keep sequential ordering.
+                        Stage::Store(self.alloc_item_pressured(value, flags, deadline, 0))
+                    }
+                }
+                _ => Stage::Pass,
+            };
+            staged.push(stage);
+        }
+
+        // Phase B (pinned once): prefetch home slots, then execute in
+        // batch order under the single guard.
+        let (mut gets, mut hits, mut misses, mut deletes) = (0u64, 0u64, 0u64, 0u64);
+        {
+            let guard = self.collector.pin();
+            if ops.len() > 1 {
+                let t = self.root(&guard);
+                let mut order: Vec<u32> = (0..ops.len() as u32).collect();
+                order.sort_unstable_by_key(|&i| t.home(hashes[i as usize]));
+                for &i in &order {
+                    // ord: relaxed-ok — cache-line prefetch; the value is
+                    // discarded and re-loaded with Acquire at execution.
+                    let _ = t.slots[t.home(hashes[i as usize])].load(Ordering::Relaxed);
+                }
+            }
+            for (i, op) in ops.iter().enumerate() {
+                let hash = hashes[i];
+                match *op {
+                    Op::Get { key } => {
+                        gets += 1;
+                        match self.get_view(key, hash, &guard) {
+                            Some((flags, cas, data)) => {
+                                hits += 1;
+                                sink.value(i, key, flags, cas, data);
+                            }
+                            None => {
+                                misses += 1;
+                                sink.miss(i);
+                            }
+                        }
+                    }
+                    Op::Set { key, .. } => sink.store(
+                        i,
+                        self.finish_staged(key, hash, staged[i], StoreMode::Set, &guard),
+                    ),
+                    Op::Add { key, .. } => sink.store(
+                        i,
+                        self.finish_staged(key, hash, staged[i], StoreMode::Add, &guard),
+                    ),
+                    Op::Replace { key, .. } => sink.store(
+                        i,
+                        self.finish_staged(key, hash, staged[i], StoreMode::Replace, &guard),
+                    ),
+                    Op::CasOp { key, cas, .. } => sink.store(
+                        i,
+                        self.finish_staged(key, hash, staged[i], StoreMode::Cas(cas), &guard),
+                    ),
+                    Op::Delete { key } => {
+                        deletes += 1;
+                        sink.deleted(i, self.delete_in(key, hash, &guard));
+                    }
+                    // RMW ops: classic loop at their turn (re-entrant pin
+                    // under the batch guard) — see the method docs.
+                    Op::Append { key, suffix } => sink.store(i, self.append(key, suffix)),
+                    Op::Prepend { key, prefix } => sink.store(i, self.prepend(key, prefix)),
+                    Op::Incr { key, delta } => sink.counter(i, self.incr(key, delta)),
+                    Op::Decr { key, delta } => sink.counter(i, self.decr(key, delta)),
+                    Op::Touch { key, exptime } => sink.touched(i, self.touch(key, exptime)),
+                }
+            }
+        }
+
+        // Phase C: one counter update each for the whole batch.
+        if gets > 0 {
+            self.metrics.gets.add(gets);
+            self.metrics.hits.add(hits);
+            self.metrics.misses.add(misses);
+        }
+        if sets > 0 {
+            self.metrics.sets.add(sets);
+        }
+        if deletes > 0 {
+            self.metrics.deletes.add(deletes);
+        }
+    }
+
+    fn get(&self, key: &[u8]) -> Option<GetResult> {
+        self.metrics.gets.inc();
+        let hash = hash_key(key);
+        let guard = self.collector.pin();
+        let r = self.get_in(key, hash, &guard);
+        if r.is_some() {
+            self.metrics.hits.inc();
+        } else {
+            self.metrics.misses.inc();
+        }
+        r
+    }
+
+    fn set(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
+        self.store(key, value, flags, exptime, StoreMode::Set)
+    }
+
+    fn add(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
+        self.store(key, value, flags, exptime, StoreMode::Add)
+    }
+
+    fn replace(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32) -> StoreOutcome {
+        self.store(key, value, flags, exptime, StoreMode::Replace)
+    }
+
+    fn cas(&self, key: &[u8], value: &[u8], flags: u32, exptime: u32, cas: u64) -> StoreOutcome {
+        self.store(key, value, flags, exptime, StoreMode::Cas(cas))
+    }
+
+    fn append(&self, key: &[u8], suffix: &[u8]) -> StoreOutcome {
+        match self.rmw(key, |flags, deadline, old| {
+            let mut v = Vec::with_capacity(old.len() + suffix.len());
+            v.extend_from_slice(old);
+            v.extend_from_slice(suffix);
+            Some((v, flags, deadline))
+        }) {
+            RmwResult::Done(_) => StoreOutcome::Stored,
+            RmwResult::NotFound | RmwResult::Aborted => StoreOutcome::NotStored,
+            RmwResult::Failed(e) => e,
+        }
+    }
+
+    fn prepend(&self, key: &[u8], prefix: &[u8]) -> StoreOutcome {
+        match self.rmw(key, |flags, deadline, old| {
+            let mut v = Vec::with_capacity(old.len() + prefix.len());
+            v.extend_from_slice(prefix);
+            v.extend_from_slice(old);
+            Some((v, flags, deadline))
+        }) {
+            RmwResult::Done(_) => StoreOutcome::Stored,
+            RmwResult::NotFound | RmwResult::Aborted => StoreOutcome::NotStored,
+            RmwResult::Failed(e) => e,
+        }
+    }
+
+    fn delete(&self, key: &[u8]) -> bool {
+        self.metrics.deletes.inc();
+        let hash = hash_key(key);
+        let guard = self.collector.pin();
+        self.delete_in(key, hash, &guard)
+    }
+
+    fn incr(&self, key: &[u8], delta: u64) -> Option<u64> {
+        let mut result = None;
+        let out = self.rmw(key, |flags, deadline, old| {
+            let n = parse_counter(old)?;
+            let v = n.wrapping_add(delta);
+            Some((v.to_string().into_bytes(), flags, deadline))
+        });
+        if let RmwResult::Done(v) = out {
+            result = std::str::from_utf8(&v).ok()?.parse().ok();
+        }
+        result
+    }
+
+    fn decr(&self, key: &[u8], delta: u64) -> Option<u64> {
+        let mut result = None;
+        let out = self.rmw(key, |flags, deadline, old| {
+            let n = parse_counter(old)?;
+            let v = n.saturating_sub(delta);
+            Some((v.to_string().into_bytes(), flags, deadline))
+        });
+        if let RmwResult::Done(v) = out {
+            result = std::str::from_utf8(&v).ok()?.parse().ok();
+        }
+        result
+    }
+
+    fn touch(&self, key: &[u8], exptime: u32) -> bool {
+        let deadline = deadline_from_exptime(exptime);
+        matches!(
+            self.rmw(key, |flags, _old_deadline, old| Some((
+                old.to_vec(),
+                flags,
+                deadline
+            ))),
+            RmwResult::Done(_)
+        )
+    }
+
+    fn flush_all(&self) {
+        let guard = self.collector.pin();
+        let mut t = self.root(&guard);
+        loop {
+            for idx in 0..t.len() {
+                self.flush_slot(t, idx, &guard);
+            }
+            let next = t.next.load(Ordering::Acquire);
+            if next.is_null() {
+                break;
+            }
+            // SAFETY: guard-protected successor table — chain tables
+            // retire only through EBR.
+            t = unsafe { &*next };
+        }
+    }
+
+    fn item_count(&self) -> usize {
+        // ord: relaxed-ok — approximate counter by contract.
+        self.items.load(Ordering::Relaxed)
+    }
+
+    fn bucket_count(&self) -> usize {
+        let guard = self.collector.pin();
+        self.root(&guard).len()
+    }
+
+    fn stats(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            metrics: self.metrics.snapshot(),
+            items: self.item_count(),
+            buckets: self.bucket_count(),
+            mem_used: self.mem_used(),
+            mem_limit: self.mem_limit(),
+        }
+    }
+
+    fn mem_used(&self) -> usize {
+        self.slab
+            .class_stats()
+            .iter()
+            .map(|c| c.live_chunks * c.chunk_size)
+            .sum()
+    }
+
+    fn mem_limit(&self) -> usize {
+        self.config.mem_limit
+    }
+
+    fn maintenance(&self) {
+        let guard = self.collector.pin();
+        let root = self.root(&guard);
+        let next = root.next.load(Ordering::Acquire);
+        if !next.is_null() {
+            // SAFETY: guard-protected successor table — chain tables
+            // retire only through EBR.
+            let next_ref = unsafe { &*next };
+            for idx in 0..root.len() {
+                self.migrate_slot(root, idx, next_ref, &guard);
+            }
+            self.try_promote(&guard);
+        }
+    }
+
+    fn clock_snapshot(&self) -> Option<Vec<u8>> {
+        let guard = self.collector.pin();
+        let t = self.root(&guard);
+        Some(
+            t.clocks
+                .iter()
+                // ord: relaxed-ok — diagnostic snapshot of the CLOCK
+                // values; racy by nature.
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+        )
+    }
+
+    fn set_evict_params(&self, decay: u8, batch: u32) {
+        // ord: relaxed-ok — tuning knobs (both stores); no data is
+        // ordered against them.
+        self.evict_decay.store(decay.max(1), Ordering::Relaxed);
+        // ord: relaxed-ok — as above.
+        self.evict_batch.store(batch.max(1), Ordering::Relaxed);
+    }
+}
+
+impl Drop for OaFlashCache {
+    fn drop(&mut self) {
+        // Exclusive access: free the whole generation chain. Entries are
+        // freed by OaTable::drop; item chunks die with the slab pages;
+        // anything retired into the collector frees when it drains.
+        let mut t = *self.table.get_mut();
+        while !t.is_null() {
+            // SAFETY: `&mut self` in drop — exclusive access; every table
+            // in the chain is owned by the cache until this point.
+            let boxed = unsafe { Box::from_raw(t) };
+            // ord: relaxed-ok — exclusive access in drop.
+            t = boxed.next.load(Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::op::execute_sequential;
+    use crate::sync::Xoshiro256;
+
+    fn small() -> OaFlashCache {
+        OaFlashCache::new(CacheConfig::small())
+    }
+
+    fn root_claimed(c: &OaFlashCache) -> usize {
+        let g = c.collector.pin();
+        c.root(&g).claimed.load(Ordering::Relaxed)
+    }
+
+    #[test]
+    fn set_get_roundtrip_with_metadata() {
+        let c = small();
+        assert_eq!(c.set(b"k", b"value", 77, 0), StoreOutcome::Stored);
+        let r = c.get(b"k").unwrap();
+        assert_eq!(r.data, b"value");
+        assert_eq!(r.flags, 77);
+        assert!(r.cas > 0);
+        assert_eq!(c.item_count(), 1);
+    }
+
+    #[test]
+    fn set_overwrites_and_bumps_cas() {
+        let c = small();
+        c.set(b"k", b"v1", 0, 0);
+        let cas1 = c.get(b"k").unwrap().cas;
+        c.set(b"k", b"v2", 0, 0);
+        let r = c.get(b"k").unwrap();
+        assert_eq!(r.data, b"v2");
+        assert!(r.cas > cas1);
+        assert_eq!(c.item_count(), 1, "overwrite must not grow the count");
+    }
+
+    #[test]
+    fn add_replace_semantics() {
+        let c = small();
+        assert_eq!(c.replace(b"k", b"x", 0, 0), StoreOutcome::NotFound);
+        assert_eq!(c.add(b"k", b"1", 0, 0), StoreOutcome::Stored);
+        assert_eq!(c.add(b"k", b"2", 0, 0), StoreOutcome::NotStored);
+        assert_eq!(c.replace(b"k", b"3", 0, 0), StoreOutcome::Stored);
+        assert_eq!(c.get(b"k").unwrap().data, b"3");
+    }
+
+    #[test]
+    fn cas_token_gating() {
+        let c = small();
+        c.set(b"k", b"v1", 0, 0);
+        let tok = c.get(b"k").unwrap().cas;
+        assert_eq!(c.cas(b"k", b"v2", 0, 0, tok), StoreOutcome::Stored);
+        assert_eq!(c.cas(b"k", b"v3", 0, 0, tok), StoreOutcome::Exists);
+        assert_eq!(c.cas(b"missing", b"x", 0, 0, 1), StoreOutcome::NotFound);
+        assert_eq!(c.get(b"k").unwrap().data, b"v2");
+    }
+
+    #[test]
+    fn delete_then_reinsert_revives_the_claim() {
+        let c = small();
+        c.set(b"k", b"v", 0, 0);
+        let claims = root_claimed(&c);
+        assert!(c.delete(b"k"));
+        assert!(!c.delete(b"k"));
+        assert!(c.get(b"k").is_none());
+        assert_eq!(c.item_count(), 0);
+        assert_eq!(c.set(b"k", b"v2", 0, 0), StoreOutcome::Stored);
+        assert_eq!(c.get(b"k").unwrap().data, b"v2");
+        // Revival must reuse the tombstoned claim, not burn a new slot —
+        // what bounds slot consumption to distinct keys per generation.
+        assert_eq!(root_claimed(&c), claims, "revival must not claim a new slot");
+    }
+
+    #[test]
+    fn incr_decr_arithmetic() {
+        let c = small();
+        c.set(b"n", b"10", 0, 0);
+        assert_eq!(c.incr(b"n", 5), Some(15));
+        assert_eq!(c.decr(b"n", 3), Some(12));
+        assert_eq!(c.decr(b"n", 100), Some(0), "decr saturates at 0");
+        assert_eq!(c.incr(b"missing", 1), None);
+        c.set(b"s", b"not-a-number", 0, 0);
+        assert_eq!(c.incr(b"s", 1), None);
+    }
+
+    #[test]
+    fn append_prepend() {
+        let c = small();
+        assert_eq!(c.append(b"k", b"x"), StoreOutcome::NotStored);
+        c.set(b"k", b"mid", 0, 0);
+        assert_eq!(c.append(b"k", b"-end"), StoreOutcome::Stored);
+        assert_eq!(c.prepend(b"k", b"start-"), StoreOutcome::Stored);
+        assert_eq!(c.get(b"k").unwrap().data, b"start-mid-end");
+    }
+
+    #[test]
+    fn flush_all_empties_cache() {
+        let c = small();
+        for i in 0..100u32 {
+            c.set(format!("k{i}").as_bytes(), b"v", 0, 0);
+        }
+        assert_eq!(c.item_count(), 100);
+        c.flush_all();
+        assert_eq!(c.item_count(), 0);
+        for i in 0..100u32 {
+            assert!(c.get(format!("k{i}").as_bytes()).is_none());
+        }
+        // Flushed claims stay reusable: the same keys store again.
+        for i in 0..100u32 {
+            assert_eq!(c.set(format!("k{i}").as_bytes(), b"w", 0, 0), StoreOutcome::Stored);
+        }
+        assert_eq!(c.item_count(), 100);
+    }
+
+    #[test]
+    fn expansion_relocates_entries_and_preserves_items() {
+        let c = small(); // 64 slots
+        for i in 0..300u32 {
+            assert_eq!(
+                c.set(format!("key-{i}").as_bytes(), format!("val-{i}").as_bytes(), 0, 0),
+                StoreOutcome::Stored
+            );
+        }
+        // Finish any in-flight migration so the root reflects the final
+        // generation.
+        for _ in 0..6 {
+            c.maintenance();
+        }
+        assert!(c.bucket_count() > 64, "table must have grown");
+        assert!(c.stats().metrics.expansions > 0);
+        assert!(
+            c.displacements() > 0,
+            "growth must have relocated entries across generations"
+        );
+        assert_eq!(c.item_count(), 300);
+        for i in 0..300u32 {
+            assert_eq!(
+                c.get(format!("key-{i}").as_bytes()).unwrap().data,
+                format!("val-{i}").as_bytes(),
+                "key-{i} lost across migration"
+            );
+        }
+    }
+
+    #[test]
+    fn eviction_frees_memory_under_pressure() {
+        let c = OaFlashCache::new(CacheConfig {
+            mem_limit: 1 << 20,
+            initial_buckets: 64,
+            ..CacheConfig::default()
+        });
+        let value = vec![0xabu8; 4096];
+        for i in 0..400u32 {
+            assert_eq!(
+                c.set(format!("big-{i}").as_bytes(), &value, 0, 0),
+                StoreOutcome::Stored,
+                "eviction must keep stores succeeding at the memory limit"
+            );
+        }
+        assert!(c.stats().metrics.evictions > 0, "pressure must have evicted");
+        assert!(c.mem_used() <= c.mem_limit());
+    }
+
+    #[test]
+    fn batch_matches_sequential_oracle() {
+        let c = small();
+        let oracle = small();
+        let ops = [
+            Op::Set {
+                key: b"a",
+                value: b"1",
+                flags: 7,
+                exptime: 0,
+            },
+            Op::Get { key: b"a" },
+            Op::Incr { key: b"a", delta: 41 },
+            Op::Append {
+                key: b"a",
+                suffix: b"!",
+            },
+            Op::Get { key: b"a" },
+            Op::Get { key: b"missing" },
+            Op::Delete { key: b"a" },
+            Op::Delete { key: b"a" },
+        ];
+        let batched = c.execute_batch(&ops);
+        let sequential = execute_sequential(&oracle, &ops);
+        assert_eq!(batched, sequential, "batch must match the sequential oracle");
+    }
+
+    #[test]
+    fn concurrent_storm_with_expansion_stays_consistent() {
+        use std::sync::atomic::AtomicU32;
+        let c = Arc::new(OaFlashCache::new(CacheConfig {
+            mem_limit: 16 << 20,
+            initial_buckets: 64,
+            ..CacheConfig::default()
+        }));
+        let errors = Arc::new(AtomicU32::new(0));
+        let threads: Vec<_> = (0..4u64)
+            .map(|tid| {
+                let c = Arc::clone(&c);
+                let errors = Arc::clone(&errors);
+                std::thread::spawn(move || {
+                    let mut rng = Xoshiro256::seeded(0x0af1a5 + tid);
+                    for n in 0..3000u64 {
+                        let key = format!("storm-{}", rng.next_below(512));
+                        match rng.next_below(10) {
+                            0..=4 => {
+                                let v = format!("{tid}-{n}");
+                                if c.set(key.as_bytes(), v.as_bytes(), 0, 0)
+                                    != StoreOutcome::Stored
+                                {
+                                    // ord: relaxed-ok — test accounting.
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            5..=7 => {
+                                // Hits must carry intact bytes.
+                                if let Some(r) = c.get(key.as_bytes()) {
+                                    if r.data.is_empty() {
+                                        // ord: relaxed-ok — test accounting.
+                                        errors.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                            _ => {
+                                c.delete(key.as_bytes());
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(errors.load(Ordering::Relaxed), 0);
+        // The 512-key space over 64 initial slots must have expanded.
+        for _ in 0..6 {
+            c.maintenance();
+        }
+        assert!(c.bucket_count() > 64);
+        // Every surviving key must read back consistently.
+        let live = (0..512u64)
+            .filter(|i| c.get(format!("storm-{i}").as_bytes()).is_some())
+            .count();
+        assert_eq!(c.item_count(), live, "item count must match live keys");
+    }
+
+    #[test]
+    fn stats_and_clock_snapshot_shape() {
+        let c = small();
+        c.set(b"k", b"v", 0, 0);
+        c.get(b"k");
+        c.get(b"missing");
+        let s = c.stats();
+        assert_eq!(s.metrics.gets, 2);
+        assert_eq!(s.metrics.hits, 1);
+        assert_eq!(s.metrics.misses, 1);
+        assert_eq!(s.metrics.sets, 1);
+        assert_eq!(s.items, 1);
+        assert_eq!(s.buckets, 64);
+        assert_eq!(s.mem_limit, 4 << 20);
+        let clocks = c.clock_snapshot().unwrap();
+        assert_eq!(clocks.len(), 64);
+        assert!(clocks.iter().any(|&v| v > 0), "hit must have touched a clock");
+    }
+}

@@ -1,0 +1,237 @@
+//! The open-addressing table generations behind [`super::OaFlashCache`].
+//!
+//! One generation is a power-of-two array of *slot words*. A slot word is
+//! one of:
+//!
+//! * `0` — **empty**: never claimed in this generation.
+//! * `entry-ptr` (tag `0`) — **resident**: points at a heap [`Entry`].
+//! * `entry-ptr | `[`SLOT_FRZ`] — **frozen resident**: migration has
+//!   claimed the entry; it is still fully readable (and its item word is
+//!   still writable) but the slot word itself is terminal.
+//! * [`FWD_WORD`] — **forwarded-empty**: the slot was frozen while still
+//!   empty. Terminal; the generation is closed for any key whose probe
+//!   reaches this slot.
+//!
+//! The load-bearing structural invariant is **slot monotonicity**: a slot
+//! word only ever moves forward through `empty → {resident, forwarded}`
+//! and `resident → frozen resident`; a claimed slot never changes which
+//! [`Entry`] it holds and never becomes empty again. Combined with the
+//! first-empty-claim discipline in the engine, monotonicity gives each
+//! key at most one entry per generation and makes an empty slot an
+//! authoritative "this key was never here" for every probe that reaches
+//! it (see `rust/docs/concurrency.md`, oaflash section).
+//!
+//! Entries carry the *item word* from [`crate::cache::fleec::node`]
+//! unchanged — `Live(ptr) / Tomb / Moved` — so mutation linearizes on a
+//! single CAS exactly like FLeeC's chained engine, and relocation between
+//! generations moves only the item *pointer*, never the slab bytes.
+
+use std::sync::atomic::{AtomicPtr, AtomicU8, AtomicUsize, Ordering};
+
+use crate::sync::tagged::{tag_of, untagged};
+
+/// Slot tag bit: resident entry frozen for migration.
+pub const SLOT_FRZ: usize = 0b01;
+
+/// Whole-word marker: slot frozen while empty (forwarded-empty).
+pub const FWD_WORD: usize = 0b10;
+
+/// Maximum probe distance from a key's home slot. A probe that walks
+/// this many occupied non-matching slots declares the generation full
+/// for that key (writers then expand / descend; readers descend).
+pub const PROBE_WINDOW: usize = 64;
+
+/// Slots transferred per cooperatively-claimed migration span.
+pub const MIGRATE_SPAN: usize = 32;
+
+/// One key's table entry. Heap-allocated once at claim time and never
+/// moved or mutated structurally afterwards (only the `item` word and
+/// the containing slot's tag change), so guard-holding readers can keep
+/// dereferencing it for as long as their pin lasts — entries retire only
+/// with their generation, through EBR.
+pub struct Entry {
+    pub hash: u64,
+    /// Packed item word — same encoding as the FLeeC node
+    /// ([`crate::cache::fleec::node::decode_item`]).
+    pub item: AtomicUsize,
+    pub key: Box<[u8]>,
+}
+
+impl Entry {
+    /// Heap-allocate an entry holding `item_word`.
+    // guard-stable: returns an exclusively-owned, unpublished entry; once
+    // a slot-claim CAS publishes it, it is only freed with its table
+    // generation through EBR retirement, never under a live guard.
+    pub fn alloc(hash: u64, key: &[u8], item_word: usize) -> *mut Entry {
+        Box::into_raw(Box::new(Entry {
+            hash,
+            item: AtomicUsize::new(item_word),
+            key: key.to_vec().into_boxed_slice(),
+        }))
+    }
+}
+
+/// Decoded slot word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotState {
+    Empty,
+    /// Forwarded-empty: terminally closed without ever holding an entry.
+    Fwd,
+    Resident {
+        entry: *mut Entry,
+        frozen: bool,
+    },
+}
+
+/// Decode a slot word into its state.
+#[inline]
+pub fn decode_slot(w: usize) -> SlotState {
+    if w == 0 {
+        SlotState::Empty
+    } else if w == FWD_WORD {
+        SlotState::Fwd
+    } else {
+        SlotState::Resident {
+            entry: untagged(w) as *mut Entry,
+            frozen: tag_of(w) & SLOT_FRZ != 0,
+        }
+    }
+}
+
+/// One table generation. Generations form a forward chain (`next`)
+/// during migration; the engine's root pointer swings down the chain as
+/// generations complete.
+pub struct OaTable {
+    pub mask: usize,
+    /// Slot words (see module docs for the encoding).
+    pub slots: Box<[AtomicUsize]>,
+    /// Per-slot CLOCK values (the paper's embedded multi-bit CLOCK,
+    /// here at entry granularity instead of bucket granularity).
+    pub clocks: Box<[AtomicU8]>,
+    /// CLOCK hand (shared sweep position).
+    pub hand: AtomicUsize,
+    /// Successor generation (null until expansion starts).
+    pub next: AtomicPtr<OaTable>,
+    /// Next unclaimed migration span start (grows past `len`).
+    pub cursor: AtomicUsize,
+    /// Slots whose transfer is complete (forwarded, or frozen with the
+    /// item word swapped to `Moved`).
+    pub migrated: AtomicUsize,
+    /// Slots ever claimed by an entry — tombstoned entries included.
+    /// This, not the live-item count, is what drives expansion: probe
+    /// lengths degrade with *claimed* slots.
+    pub claimed: AtomicUsize,
+}
+
+impl OaTable {
+    /// Allocate a generation of `capacity` slots (must be a power of
+    /// two), leaked to a raw pointer for the atomic chain.
+    // guard-stable: the returned table is exclusively owned until a CAS
+    // publishes it (root or a `next` link); afterwards it is only freed
+    // through EBR retirement once unreachable.
+    pub fn alloc(capacity: usize) -> *mut OaTable {
+        assert!(capacity.is_power_of_two());
+        Box::into_raw(Box::new(OaTable {
+            mask: capacity - 1,
+            slots: (0..capacity).map(|_| AtomicUsize::new(0)).collect(),
+            clocks: (0..capacity).map(|_| AtomicU8::new(0)).collect(),
+            hand: AtomicUsize::new(0),
+            next: AtomicPtr::new(std::ptr::null_mut()),
+            cursor: AtomicUsize::new(0),
+            migrated: AtomicUsize::new(0),
+            claimed: AtomicUsize::new(0),
+        }))
+    }
+
+    /// Slot count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// A key's home slot.
+    #[inline]
+    pub fn home(&self, hash: u64) -> usize {
+        hash as usize & self.mask
+    }
+
+    /// Whether every slot's transfer is complete. The `Acquire` pairs
+    /// with the `AcqRel` `migrated` increments, so a `true` result
+    /// proves every relocation happened-before it — what makes the root
+    /// promotion safe to follow with retirement of this generation.
+    #[inline]
+    pub fn fully_migrated(&self) -> bool {
+        self.migrated.load(Ordering::Acquire) == self.len()
+    }
+}
+
+impl Drop for OaTable {
+    fn drop(&mut self) {
+        // Exclusive access (drop runs post-EBR grace or from the engine's
+        // own Drop): free every resident entry exactly once. Claimed
+        // slots never change entries (slot monotonicity), so each
+        // resident pointer appears in exactly one slot. Items hanging
+        // off live entry words are slab chunks — they die with the slab
+        // pages (engine Drop) or were already retired (migration/flush).
+        for slot in self.slots.iter_mut() {
+            // ord: relaxed-ok — exclusive access in drop.
+            if let SlotState::Resident { entry, .. } = decode_slot(slot.load(Ordering::Relaxed)) {
+                // SAFETY: `entry` came from `Entry::alloc` (Box) and this
+                // is the sole slot holding it; exclusive access in drop.
+                unsafe { drop(Box::from_raw(entry)) };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::fleec::node::TOMB_WORD;
+
+    #[test]
+    fn slot_word_decoding() {
+        assert_eq!(decode_slot(0), SlotState::Empty);
+        assert_eq!(decode_slot(FWD_WORD), SlotState::Fwd);
+        let e = Entry::alloc(7, b"k", TOMB_WORD);
+        assert_eq!(
+            decode_slot(e as usize),
+            SlotState::Resident {
+                entry: e,
+                frozen: false
+            }
+        );
+        assert_eq!(
+            decode_slot(e as usize | SLOT_FRZ),
+            SlotState::Resident {
+                entry: e,
+                frozen: true
+            }
+        );
+        unsafe { drop(Box::from_raw(e)) };
+    }
+
+    #[test]
+    fn table_frees_resident_entries_on_drop() {
+        let t = OaTable::alloc(64);
+        let tref = unsafe { &*t };
+        assert_eq!(tref.len(), 64);
+        let e = Entry::alloc(1, b"abc", TOMB_WORD);
+        tref.slots[tref.home(1)].store(e as usize, Ordering::Relaxed);
+        let f = Entry::alloc(2, b"def", TOMB_WORD);
+        tref.slots[tref.home(2)].store(f as usize | SLOT_FRZ, Ordering::Relaxed);
+        tref.slots[5].store(FWD_WORD, Ordering::Relaxed);
+        // Drop must free both entries (frozen included) and skip
+        // empty/forwarded slots without faulting.
+        unsafe { drop(Box::from_raw(t)) };
+    }
+
+    #[test]
+    fn home_masks_low_bits() {
+        let t = OaTable::alloc(256);
+        let tref = unsafe { &*t };
+        assert_eq!(tref.home(0x1234), 0x34);
+        assert_eq!(tref.home(u64::MAX), 255);
+        unsafe { drop(Box::from_raw(t)) };
+    }
+}

@@ -148,7 +148,7 @@ fn print_usage() {
          \n\
          USAGE: fleec <subcommand> [options]\n\
          \n\
-         serve         --engine fleec|memcached|memclock --port 11211 --mem-mb 64\n\
+         serve         --engine fleec|oaflash|memcached|memclock --port 11211 --mem-mb 64\n\
                        [--buckets N] [--clock-max K] [--no-planner]\n\
                        [--shards N]  (engine instances behind the key-hash\n\
                                       router; rounded up to a power of two,\n\

@@ -16,7 +16,7 @@
 //! * the hash table expands without stopping the world (forwarding
 //!   marks + cooperative helping).
 //!
-//! Three engines implement the common [`cache::Cache`] trait so the
+//! Four engines implement the common [`cache::Cache`] trait so the
 //! paper's comparison is reproducible in-process:
 //!
 //! | engine | hash table | eviction | expansion |
@@ -24,6 +24,7 @@
 //! | [`cache::memcached`] | striped locks | strict LRU (one lock) | stop-the-world |
 //! | [`cache::memclock`]  | striped locks | per-bucket CLOCK | stop-the-world |
 //! | [`cache::fleec`]     | lock-free (Harris) | embedded lock-free CLOCK | non-blocking |
+//! | [`cache::oaflash`]   | lock-free open addressing | per-slot lock-free CLOCK | non-blocking |
 //!
 //! ## The two-tier cache API: sink-first
 //!

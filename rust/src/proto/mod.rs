@@ -580,4 +580,70 @@ mod tests {
             }
         });
     }
+
+    #[test]
+    fn uint_writer_edges_match_format() {
+        // Differential check of the allocation-free digit writer against
+        // the standard formatter, pinning the digit-count boundaries
+        // (1→2, 2→3, 3→4 digits), the 20-digit ceiling (`write_uint`'s
+        // buffer is exactly 20 bytes), and integer-width maxima.
+        let edges: &[u64] = &[
+            0,
+            1,
+            9,
+            10,
+            11,
+            99,
+            100,
+            101,
+            999,
+            1000,
+            u8::MAX as u64,
+            u16::MAX as u64,
+            u32::MAX as u64,
+            9_999_999_999_999_999_999, // largest 19-digit value
+            10_000_000_000_000_000_000, // smallest 20-digit value
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        for &v in edges {
+            let mut out = Vec::new();
+            write_uint(&mut out, v);
+            assert_eq!(out, format!("{v}").into_bytes(), "write_uint({v})");
+        }
+    }
+
+    #[test]
+    fn value_header_edges_match_format() {
+        // Differential check of the hand-rolled VALUE header against a
+        // format!-rendered oracle across the cas-present/absent split and
+        // the field extremes (zero everything; max flags, long key, large
+        // len; cas ∈ {0, 1, u64::MAX}).
+        let long_key = b"a-rather-long-key-near-the-250-byte-protocol-limit_0123456789";
+        let shapes: &[(&[u8], u32, usize)] =
+            &[(b"k", 0, 0), (long_key, u32::MAX, 8192)];
+        let cases: &[Option<u64>] = &[None, Some(0), Some(1), Some(u64::MAX)];
+        for &(key, flags, len) in shapes {
+            for &cas in cases {
+                let mut out = Vec::new();
+                write_value_header(&mut out, key, flags, len, cas);
+                let expect = match cas {
+                    Some(c) => format!(
+                        "VALUE {} {flags} {len} {c}\r\n",
+                        String::from_utf8_lossy(key)
+                    ),
+                    None => format!(
+                        "VALUE {} {flags} {len}\r\n",
+                        String::from_utf8_lossy(key)
+                    ),
+                };
+                assert_eq!(
+                    out,
+                    expect.into_bytes(),
+                    "header for key={:?} flags={flags} len={len} cas={cas:?}",
+                    String::from_utf8_lossy(key)
+                );
+            }
+        }
+    }
 }

@@ -20,6 +20,16 @@
 //! the classes' `handed` counters, so `utilization`/`mem_used` stay exact
 //! (up to the usual racy-snapshot caveat) with chunks parked privately.
 //!
+//! ## Pressure cooperation
+//!
+//! Privatized chunks are invisible to *other* threads until a batch
+//! boundary — under memory pressure that is a starvation hazard (thread A
+//! fails to allocate while thread B's magazine parks plenty). The slab's
+//! flush-request epoch ([`super::Slab::request_magazine_flush`]) closes
+//! it: every `pop`/`push` first compares the epoch against the value this
+//! registration last honored and, if it moved, flushes all magazines back
+//! to the shared lists before proceeding.
+//!
 //! ## Lifetime
 //!
 //! The registry is a thread-local keyed by slab address. Each entry holds
@@ -114,6 +124,9 @@ pub(super) struct LocalMags {
     /// thread spike doesn't cost this thread its fast path forever.
     slot: Cell<Option<usize>>,
     claim_countdown: Cell<u32>,
+    /// Last flush-request epoch honored (see
+    /// [`super::Slab::request_magazine_flush`]).
+    seen_flush: Cell<u32>,
     /// Chunk pointers, owner-thread only. `RefCell` (not a lock): the
     /// registry is thread-local and nothing below re-enters it.
     mags: RefCell<Box<[Vec<*mut u8>]>>,
@@ -150,10 +163,26 @@ impl LocalMags {
         }
     }
 
+    /// Flush everything we parked if the slab raised its flush-request
+    /// epoch since we last looked — the cooperative half of
+    /// [`super::Slab::request_magazine_flush`]. Must run before the
+    /// magazine borrow in the caller ([`Self::flush_all`] re-borrows).
+    fn honor_flush_request(&self, slab: &Slab) {
+        // ord: relaxed-ok — advisory flush request; the flush itself
+        // publishes through the free lists' Release CASes, and a missed
+        // epoch is honored on the next op.
+        let e = slab.flush_epoch.load(Ordering::Relaxed);
+        if e != self.seen_flush.get() {
+            self.seen_flush.set(e);
+            self.flush_all(slab);
+        }
+    }
+
     /// Magazine-only pop: `None` means empty (caller refills).
     // audit:allow(guard) hands out an exclusively-owned free chunk, not
     // guard-lent memory — no byte-stability contract applies.
     pub(super) fn pop(&self, slab: &Slab, class: u8) -> Option<*mut u8> {
+        self.honor_flush_request(slab);
         let mut mags = self.mags.borrow_mut();
         let m = &mut mags[class as usize];
         let p = m.pop();
@@ -169,6 +198,7 @@ impl LocalMags {
     /// # Safety
     /// `ptr` must be an unreferenced chunk of `class` from `slab`.
     pub(super) unsafe fn push(&self, slab: &Slab, class: u8, ptr: *mut u8) {
+        self.honor_flush_request(slab);
         let mut mags = self.mags.borrow_mut();
         let m = &mut mags[class as usize];
         if m.len() >= MAG_CAP {
@@ -260,6 +290,10 @@ pub(super) fn local(slab: &Slab) -> Option<Rc<LocalMags>> {
             weak: slab.self_weak.clone(),
             slot: Cell::new(slab.depot.claim()),
             claim_countdown: Cell::new(CLAIM_RETRY_EVERY),
+            // ord: relaxed-ok — start at the current epoch: a fresh
+            // registration has nothing parked, so pending requests are
+            // vacuously honored.
+            seen_flush: Cell::new(slab.flush_epoch.load(Ordering::Relaxed)),
             mags: RefCell::new(
                 (0..classes)
                     .map(|_| Vec::with_capacity(MAG_CAP))

@@ -29,6 +29,13 @@
 //! before reporting pressure so parked chunks become globally reusable
 //! right when it matters.
 //!
+//! Pressure also reaches *other* threads' magazines: allocation failure
+//! raises a flush-request epoch ([`Slab::request_magazine_flush`]) that
+//! every registered thread checks on its next magazine op and honors by
+//! flushing everything it parked. This closes the privatization blind
+//! spot where chunks parked by threads with no traffic of their own
+//! stayed invisible to a thread starving under pressure.
+//!
 //! [`Slab::new`] returns `Arc<Slab>`: thread registrations hold a
 //! `Weak<Slab>` so a departing thread can flush its magazines iff the
 //! slab still exists (and never dangles if it doesn't).
@@ -40,7 +47,7 @@ pub use class::{SizeClass, SizeClassStats};
 pub use magazine::MAG_CAP;
 
 use std::alloc::{alloc, dealloc, Layout};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
 /// Slab tuning; defaults mirror Memcached's.
@@ -101,6 +108,10 @@ pub struct Slab {
     pages: Mutex<Vec<Page>>,
     /// Published per-thread magazine lengths (stats truthfulness).
     depot: magazine::SlotTable,
+    /// Pressure-raised flush-request epoch (see module docs). Registered
+    /// threads compare it against their last-seen value on every magazine
+    /// op and flush their parked chunks when it moved.
+    flush_epoch: AtomicU32,
     /// Own-`Arc` handle for magazine registrations (see module docs).
     self_weak: Weak<Slab>,
 }
@@ -138,6 +149,7 @@ impl Slab {
             config,
             pages: Mutex::new(Vec::new()),
             depot,
+            flush_epoch: AtomicU32::new(0),
             self_weak: self_weak.clone(),
         })
     }
@@ -187,6 +199,7 @@ impl Slab {
                     }
                     // Shared structures empty: try to claim a fresh page.
                     if !self.grow_class(sc) {
+                        self.request_magazine_flush();
                         return None;
                     }
                 }
@@ -198,6 +211,7 @@ impl Slab {
                 return Some((ptr, class));
             }
             if !self.grow_class(sc) {
+                self.request_magazine_flush();
                 return None;
             }
         }
@@ -289,7 +303,24 @@ impl Slab {
             return false;
         }
         self.flush_local_magazines();
+        self.request_magazine_flush();
         true
+    }
+
+    /// Ask every registered thread to flush its magazines at its next
+    /// opportunity (its next alloc/free against this slab).
+    ///
+    /// Magazines are thread-local, so a starving thread cannot drain them
+    /// directly; raising the epoch makes every *active* thread publish its
+    /// parked chunks promptly. Truly idle threads still hold theirs until
+    /// they run again or exit (bounded by [`MAG_CAP`] chunks per class
+    /// per idle thread). Called automatically whenever [`Slab::alloc`]
+    /// fails or [`Slab::exhausted`] reports pressure; pressure handlers
+    /// (eviction, EBR reclaim drivers) may also call it directly.
+    pub fn request_magazine_flush(&self) {
+        // ord: relaxed-ok — advisory counter; the flushes it triggers
+        // publish through the free lists' Release CASes.
+        self.flush_epoch.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Return every chunk parked in the *calling thread's* magazines to
@@ -643,6 +674,72 @@ mod tests {
             got.contains(&(first_ptr as usize)),
             "worker's flushed chunks must be reused"
         );
+    }
+
+    #[test]
+    fn pressure_flush_request_publishes_idle_magazines() {
+        // The privatization blind spot: chunks parked in an *idle*
+        // thread's magazine used to stay invisible to a thread starving
+        // under pressure until the owner happened to alloc/free again
+        // with a full/empty magazine. The flush-request epoch closes it:
+        // a failed alloc raises the epoch, and the owner's very next
+        // magazine op (here: one free) publishes everything it parked.
+        let slab = Slab::new(SlabConfig {
+            mem_limit: 64 << 10,
+            page_size: 64 << 10,
+            base_chunk: 1024,
+            growth: 1.25,
+            max_chunk: 8192,
+        });
+        let (to_victim, victim_rx) = std::sync::mpsc::channel::<()>();
+        let (to_main, main_rx) = std::sync::mpsc::channel::<()>();
+        let victim = {
+            let slab = Arc::clone(&slab);
+            std::thread::spawn(move || {
+                // Alloc 8, free 7: the refill batch plus the frees leave
+                // well over half the magazine parked privately.
+                let mut held = Vec::new();
+                for _ in 0..8 {
+                    held.push(slab.alloc(1024).unwrap());
+                }
+                let keep = held.pop().unwrap();
+                for (p, c) in held {
+                    unsafe { slab.free(p, c) };
+                }
+                to_main.send(()).unwrap();
+                // Sit idle until main has hit the pressure wall.
+                victim_rx.recv().unwrap();
+                // One magazine op honors the raised epoch and flushes.
+                unsafe { slab.free(keep.0, keep.1) };
+                to_main.send(()).unwrap();
+                // Keep this thread (and its magazines) alive until the
+                // assertions ran, so exit-flush can't mask the epoch path.
+                victim_rx.recv().unwrap();
+            })
+        };
+        main_rx.recv().unwrap();
+        // Drain the budget from this thread until allocation fails — each
+        // failure raises the flush-request epoch.
+        let mut held = Vec::new();
+        while let Some(got) = slab.alloc(1024) {
+            held.push(got);
+        }
+        assert!(
+            slab.alloc(1024).is_none(),
+            "victim's parked chunks must not be reachable while it idles"
+        );
+        // Wake the victim; its single free must publish its magazine.
+        to_victim.send(()).unwrap();
+        main_rx.recv().unwrap();
+        assert!(
+            slab.alloc(1024).is_some(),
+            "epoch-honoring flush must publish the idle thread's magazine"
+        );
+        to_victim.send(()).unwrap();
+        victim.join().unwrap();
+        for (p, c) in held {
+            unsafe { slab.free(p, c) };
+        }
     }
 
     #[test]

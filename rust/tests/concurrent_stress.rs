@@ -16,15 +16,16 @@
 //!
 //! Thread and iteration counts come from `FLEEC_STRESS_THREADS` /
 //! `FLEEC_STRESS_OPS` so CI can pin them low while a workstation run can
-//! turn them up. Each check runs over bare `FleecCache` and over
-//! `Sharded<FleecCache>` (4 shards) — the router must not weaken any
-//! per-key guarantee.
+//! turn them up. Each check runs over both lock-free engines
+//! (`FleecCache` and `OaFlashCache`), bare and behind a 4-shard
+//! `Sharded` router — the router must not weaken any per-key guarantee.
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 
 use fleec::cache::fleec::FleecCache;
+use fleec::cache::oaflash::OaFlashCache;
 use fleec::cache::sharded::Sharded;
 use fleec::cache::{Cache, CacheConfig, StoreOutcome};
 
@@ -64,12 +65,16 @@ fn quiet_config() -> CacheConfig {
     }
 }
 
-/// The engines under test: the paper's lock-free core, bare and routed.
+/// The engines under test: both lock-free cores, bare and routed.
 fn engines_under_test() -> Vec<Arc<dyn Cache>> {
     vec![
         Arc::new(FleecCache::new(quiet_config())),
         Arc::new(Sharded::from_fn(4, quiet_config(), |_, c| {
             FleecCache::new(c)
+        })),
+        Arc::new(OaFlashCache::new(quiet_config())),
+        Arc::new(Sharded::from_fn(4, quiet_config(), |_, c| {
+            OaFlashCache::new(c)
         })),
     ]
 }

@@ -146,6 +146,78 @@ fn lent_value_bytes_stay_stable_while_writers_overwrite() {
     cache.collector().force_reclaim(4);
 }
 
+#[test]
+fn oaflash_lent_bytes_survive_concurrent_displacement() {
+    // The open-addressing engine's version of the stability stress, aimed
+    // at its one new hazard: generation migration *relocates entries*
+    // (displacement) while a batch guard is live. Writers churn distinct
+    // keys to keep claimed-slot pressure high, driving doubling and
+    // tombstone-purge migrations that displace the hot keys' entries
+    // mid-batch; every lent slice must stay byte-identical regardless,
+    // because displacement moves item pointers, never item bytes.
+    let threads = knob("FLEEC_STRESS_THREADS", 4).max(2) as usize;
+    let batches = knob("FLEEC_STRESS_OPS", 3000).min(3000);
+    const KEYS: u64 = 16;
+    let cache = Arc::new(fleec::cache::oaflash::OaFlashCache::new(CacheConfig {
+        mem_limit: 32 << 20,
+        initial_buckets: 64, // small root: migrations start immediately
+        ..CacheConfig::small()
+    }));
+    let keys: Vec<Vec<u8>> = (0..KEYS).map(|id| format!("rp{id}").into_bytes()).collect();
+    let len_of = |id: u64| 48 + (id as usize * 24) % 160;
+    for id in 0..KEYS {
+        let mut v = vec![0u8; len_of(id)];
+        fill_value(id, &mut v);
+        assert_eq!(cache.set(&keys[id as usize], &v, 0, 0), StoreOutcome::Stored);
+    }
+    let stop = AtomicBool::new(false);
+    let base = fleec::testutil::suite_seed(0x0AF1A5);
+    std::thread::scope(|s| {
+        for t in 0..(threads - 1) as u64 {
+            let cache = Arc::clone(&cache);
+            let keys = &keys;
+            let stop = &stop;
+            s.spawn(move || {
+                let mut rng = fleec::sync::Xoshiro256::seeded(base ^ t);
+                let mut v = vec![0u8; 256];
+                let mut n = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    // Overwrite a hot key (retire-under-reader hazard)…
+                    let id = rng.next_below(KEYS);
+                    let len = len_of(id);
+                    fill_value(id, &mut v[..len]);
+                    let _ = cache.set(&keys[id as usize], &v[..len], 0, 0);
+                    // …and churn distinct filler keys (claim-pressure →
+                    // expansion → displacement hazard).
+                    let fresh = format!("mig{t}-{}", n % 1024);
+                    let _ = cache.set(fresh.as_bytes(), b"filler-value", 0, 0);
+                    let stale = format!("mig{t}-{}", (n + 512) % 1024);
+                    let _ = cache.delete(stale.as_bytes());
+                    n += 1;
+                }
+            });
+        }
+        let mut rng = fleec::sync::Xoshiro256::seeded(base ^ 0x0DD5EED);
+        let mut sink = StabilitySink::default();
+        for _ in 0..batches {
+            let mut ops: Vec<Op<'_>> = Vec::with_capacity(32);
+            for _ in 0..32 {
+                let id = rng.next_below(KEYS) as usize;
+                ops.push(Op::Get { key: &keys[id] });
+            }
+            sink.views.clear();
+            cache.execute_batch_into(&ops, &mut sink);
+            sink.revalidate();
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    assert!(
+        cache.displacements() > 0,
+        "churn never displaced an entry — the stress exercised nothing"
+    );
+    cache.collector().force_reclaim(4);
+}
+
 /// Random printable key from a small catalog (collisions wanted).
 fn pick_key(rng: &mut fleec::sync::Xoshiro256) -> String {
     format!("dk{}", rng.next_below(24))

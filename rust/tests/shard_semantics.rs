@@ -23,6 +23,7 @@ use std::sync::Arc;
 use fleec::cache::fleec::FleecCache;
 use fleec::cache::memcached::MemcachedCache;
 use fleec::cache::memclock::MemClockCache;
+use fleec::cache::oaflash::OaFlashCache;
 use fleec::cache::op::execute_one;
 use fleec::cache::sharded::Sharded;
 use fleec::cache::{Cache, CacheConfig, Op, OpResult, StoreOutcome, ENGINES};
@@ -50,6 +51,7 @@ fn build_router(engine: &str, n: usize) -> Arc<dyn Cache> {
         "fleec" => Arc::new(Sharded::from_fn(n, config(), |_, c| FleecCache::new(c))),
         "memcached" => Arc::new(Sharded::from_fn(n, config(), |_, c| MemcachedCache::new(c))),
         "memclock" => Arc::new(Sharded::from_fn(n, config(), |_, c| MemClockCache::new(c))),
+        "oaflash" => Arc::new(Sharded::from_fn(n, config(), |_, c| OaFlashCache::new(c))),
         other => panic!("unknown engine {other}"),
     }
 }

@@ -1,0 +1,566 @@
+#!/usr/bin/env python3
+"""deskcheck.py — toolchain-less mirror of `fleec-audit`.
+
+Seven PRs in, no container has carried a Rust toolchain, so the audit
+binary (`rust/src/audit/`) cannot run where the code is written. This
+script is a line-for-line Python transliteration of its lexer and rules,
+kept in the tree so a desk-checked session can still run the gate:
+
+    python3 tools/deskcheck.py                 # audit rust/src (full rules)
+    python3 tools/deskcheck.py --comments-only rust/tests rust/benches
+
+Rules (same keys, same semantics as rust/src/audit/rules.rs):
+
+  safety   U1  `unsafe` code lines need an adjacent `SAFETY:` comment
+               (or a `# Safety` doc section).
+  ord      O1  Release/AcqRel/SeqCst need an `ord:` pairing tag; Relaxed
+               in the lock-free core (lockfree/ ebr/ slab/ sync/
+               cache/fleec/ cache/oaflash/) — or on any AtomicPtr line —
+               needs `ord: relaxed-ok <reason>`.
+  guard    G1  In guard-lending layers (ebr/ slab/ cache/fleec/
+               cache/oaflash/), pub fns returning raw pointers or
+               non-'static references need a `guard-stable:` tag.
+  comment  C1  A lone `/` in comment position (line start, or right
+               after `;` `,` `{` `}` `(`) is a malformed `//` — the
+               compile nit ISSUE 7's sweep hunts. `/=` is exempt.
+
+Waive in place with `audit:allow(<rule>) <reason>`. `#[cfg(test)] mod`
+bodies are skipped in full mode. `--comments-only` runs just C1 over
+every line (no cfg(test) masking): malformed comments are syntax errors
+in test code too, while the tag disciplines only target production
+paths.
+
+Exit status: 0 clean, 1 findings, 2 usage error — same as fleec-audit.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# --------------------------------------------------------------------------
+# Lexer: split each source line into a code channel (comments removed,
+# literal contents blanked) and a comment channel. Mirrors audit/lexer.rs.
+# --------------------------------------------------------------------------
+
+CODE, LINE_COMMENT, STR, CHARLIT = "code", "line", "str", "char"
+# block comments carry their depth, raw strings their hash count:
+# mode is a tuple (kind, n) for those.
+
+
+class Line:
+    __slots__ = ("code", "comment")
+
+    def __init__(self):
+        self.code = []
+        self.comment = []
+
+    def code_str(self):
+        return "".join(self.code)
+
+    def comment_str(self):
+        return "".join(self.comment)
+
+    def is_code_blank(self):
+        return not self.code_str().strip()
+
+
+def _prev_is_ident(line):
+    for c in reversed(line.code):
+        return c.isalnum() or c == "_"
+    return False
+
+
+def _match_literal_prefix(chars, i):
+    """At an `r`/`b` not continuing an identifier, detect a raw/byte
+    literal opener. Returns (chars_to_consume, mode) or None."""
+    j = i
+    if j < len(chars) and chars[j] == "b":
+        j += 1
+    raw = j < len(chars) and chars[j] == "r"
+    if raw:
+        j += 1
+        hashes = 0
+        while j < len(chars) and chars[j] == "#":
+            hashes += 1
+            j += 1
+        if j < len(chars) and chars[j] == '"':
+            return (j - i + 1, ("rawstr", hashes))
+        return None  # raw identifier r#ident
+    if j < len(chars):
+        if chars[j] == '"':
+            return (j - i + 1, STR)
+        if chars[j] == "'":
+            return (j - i + 1, CHARLIT)
+    return None
+
+
+def lex(src):
+    chars = list(src)
+    lines = [Line()]
+    mode = CODE
+    i = 0
+    n = len(chars)
+    while i < n:
+        c = chars[i]
+        if c == "\n":
+            if mode == LINE_COMMENT:
+                mode = CODE
+            lines.append(Line())
+            i += 1
+            continue
+        if mode == CODE:
+            nxt = chars[i + 1] if i + 1 < n else None
+            if c == "/" and nxt == "/":
+                mode = LINE_COMMENT
+                lines[-1].comment.append("//")
+                i += 2
+            elif c == "/" and nxt == "*":
+                mode = ("block", 1)
+                lines[-1].comment.append("/*")
+                i += 2
+            elif c == '"':
+                mode = STR
+                lines[-1].code.append('"')
+                i += 1
+            elif c in "rb" and not _prev_is_ident(lines[-1]):
+                m = _match_literal_prefix(chars, i)
+                if m:
+                    consumed, new_mode = m
+                    for _ in range(consumed):
+                        lines[-1].code.append(chars[i])
+                        i += 1
+                    mode = new_mode
+                else:
+                    lines[-1].code.append(c)
+                    i += 1
+            elif c == "'":
+                is_char_lit = (
+                    nxt == "\\"
+                    if nxt is not None
+                    else False
+                ) or (nxt is not None and i + 2 < n and chars[i + 2] == "'")
+                lines[-1].code.append("'")
+                i += 1
+                if is_char_lit:
+                    mode = CHARLIT
+            else:
+                lines[-1].code.append(c)
+                i += 1
+        elif mode == LINE_COMMENT:
+            lines[-1].comment.append(c)
+            i += 1
+        elif isinstance(mode, tuple) and mode[0] == "block":
+            depth = mode[1]
+            nxt = chars[i + 1] if i + 1 < n else None
+            if c == "/" and nxt == "*":
+                mode = ("block", depth + 1)
+                lines[-1].comment.append("/*")
+                i += 2
+            elif c == "*" and nxt == "/":
+                lines[-1].comment.append("*/")
+                i += 2
+                mode = ("block", depth - 1) if depth > 1 else CODE
+            else:
+                lines[-1].comment.append(c)
+                i += 1
+        elif mode == STR:
+            if c == "\\":
+                i += 1 if (i + 1 < n and chars[i + 1] == "\n") else 2
+            elif c == '"':
+                lines[-1].code.append('"')
+                mode = CODE
+                i += 1
+            else:
+                i += 1  # blank out content
+        elif isinstance(mode, tuple) and mode[0] == "rawstr":
+            hashes = mode[1]
+            if c == '"' and all(
+                i + k < n and chars[i + k] == "#" for k in range(1, hashes + 1)
+            ):
+                lines[-1].code.append('"' + "#" * hashes)
+                i += 1 + hashes
+                mode = CODE
+            else:
+                i += 1
+        elif mode == CHARLIT:
+            if c == "\\":
+                i += 1 if (i + 1 < n and chars[i + 1] == "\n") else 2
+            elif c == "'":
+                lines[-1].code.append("'")
+                mode = CODE
+                i += 1
+            else:
+                i += 1
+    return lines
+
+
+# --------------------------------------------------------------------------
+# Rules: mirrors audit/rules.rs.
+# --------------------------------------------------------------------------
+
+CORE_PATHS = ("lockfree/", "ebr/", "slab/", "sync/", "cache/fleec/", "cache/oaflash/")
+GUARD_PATHS = ("ebr/", "slab/", "cache/fleec/", "cache/oaflash/")
+
+IDENT_RE = re.compile(r"[A-Za-z0-9_]")
+
+
+def rel_label(path):
+    p = str(path).replace("\\", "/")
+    i = p.rfind("/src/")
+    if i >= 0:
+        return p[i + 5 :]
+    return p[4:] if p.startswith("src/") else p
+
+
+def in_paths(rel, prefixes):
+    return any(rel.startswith(p) for p in prefixes)
+
+
+def is_ident_char(ch):
+    return bool(IDENT_RE.match(ch))
+
+
+def has_marker(comment, marker):
+    start = 0
+    while True:
+        i = comment.find(marker, start)
+        if i < 0:
+            return False
+        if i == 0 or not is_ident_char(comment[i - 1]):
+            return True
+        start = i + len(marker)
+
+
+def token_pos(code, word):
+    start = 0
+    wlen = len(word)
+    while True:
+        i = code.find(word, start)
+        if i < 0:
+            return None
+        before_ok = i == 0 or not is_ident_char(code[i - 1])
+        after_ok = i + wlen >= len(code) or not is_ident_char(code[i + wlen])
+        if before_ok and after_ok:
+            return i
+        start = i + wlen
+
+
+def has_token(code, word):
+    return token_pos(code, word) is not None
+
+
+def is_attr_only(code):
+    t = code.strip()
+    return t.startswith("#[") or t.startswith("#![")
+
+
+def comment_context(lines, i):
+    ctx = [lines[i].comment_str()]
+    j = i
+    while j > 0:
+        j -= 1
+        l = lines[j]
+        code_blank = l.is_code_blank()
+        comment = l.comment_str()
+        if code_blank and comment:
+            ctx.append(comment)
+        elif not code_blank and is_attr_only(l.code_str()) and not comment:
+            continue
+        elif not code_blank and is_attr_only(l.code_str()):
+            ctx.append(comment)
+        else:
+            break
+    return "\n".join(ctx)
+
+
+def parse_waivers(ctx):
+    waived, malformed = [], []
+    start = 0
+    needle = "audit:allow("
+    while True:
+        pos = ctx.find(needle, start)
+        if pos < 0:
+            break
+        open_ = pos + len(needle)
+        close = ctx.find(")", open_)
+        if close < 0:
+            malformed.append("unclosed audit:allow(")
+            break
+        key = ctx[open_:close].strip()
+        if not key or not all(is_ident_char(ch) for ch in key):
+            start = close + 1
+            continue
+        rest = ctx[close + 1 :].split("\n", 1)[0].strip()
+        known = {
+            "safety": "safety",
+            "U1": "safety",
+            "ord": "ord",
+            "O1": "ord",
+            "guard": "guard",
+            "G1": "guard",
+            "comment": "comment",
+            "C1": "comment",
+        }.get(key)
+        if known is None:
+            malformed.append(f"unknown rule key `{key}` in audit:allow")
+        else:
+            if not rest:
+                malformed.append(f"audit:allow({known}) carries no reason")
+            waived.append(known)
+        start = close + 1
+    return waived, malformed
+
+
+def cfg_test_mask(lines):
+    mask = [False] * len(lines)
+    i = 0
+    while i < len(lines):
+        if lines[i].code_str().strip() == "#[cfg(test)]":
+            j = i + 1
+            while j < len(lines) and (
+                lines[j].is_code_blank() or is_attr_only(lines[j].code_str())
+            ):
+                j += 1
+            if j < len(lines) and has_token(lines[j].code_str(), "mod"):
+                depth = 0
+                opened = False
+                k = j
+                while k < len(lines):
+                    for ch in lines[k].code_str():
+                        if ch == "{":
+                            depth += 1
+                            opened = True
+                        elif ch == "}":
+                            depth -= 1
+                    mask[k] = True
+                    if opened and depth <= 0:
+                        break
+                    k += 1
+                for m in range(i, j):
+                    mask[m] = True
+                i = k + 1
+                continue
+        i += 1
+    return mask
+
+
+def fn_signature(lines, i):
+    sig = []
+    for l in lines[i : i + 16]:
+        code = l.code_str()
+        sig.append(code)
+        sig.append(" ")
+        if "{" in code or code.rstrip().endswith(";"):
+            break
+    return "".join(sig)
+
+
+def return_type(sig):
+    depth = 0
+    arrow = None
+    k = 0
+    while k + 1 < len(sig):
+        c = sig[k]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        elif c == "-" and depth == 0 and sig[k + 1] == ">":
+            arrow = k
+            break
+        k += 1
+    if arrow is None:
+        return None
+    rest = sig[arrow + 2 :]
+    end = len(rest)
+    for stop in ("{", ";"):
+        p = rest.find(stop)
+        if p >= 0:
+            end = min(end, p)
+    start = 0
+    while True:
+        p = rest.find("where", start)
+        if p < 0 or p >= end:
+            break
+        before_ok = p == 0 or not is_ident_char(rest[p - 1])
+        after_ok = p + 5 >= len(rest) or not is_ident_char(rest[p + 5])
+        if before_ok and after_ok:
+            end = min(end, p)
+            break
+        start = p + 5
+    return rest[:end]
+
+
+def lends_guard_memory(ret):
+    if "*const" in ret or "*mut" in ret:
+        return True
+    start = 0
+    while True:
+        p = ret.find("&'", start)
+        if p < 0:
+            return False
+        if not ret[p + 2 :].startswith("static"):
+            return True
+        start = p + 2
+
+
+def is_pub_fn_line(code):
+    pos = token_pos(code, "fn")
+    return pos is not None and has_token(code[:pos], "pub")
+
+
+def lone_slash_pos(code):
+    for i, ch in enumerate(code):
+        if ch != "/":
+            continue
+        nxt = code[i + 1] if i + 1 < len(code) else None
+        if nxt in ("=", "/", "*"):
+            continue
+        before = code[:i].rstrip()
+        prev = before[-1] if before else None
+        if prev in (None, ";", ",", "{", "}", "("):
+            return i
+    return None
+
+
+STRONG = ("Ordering::Release", "Ordering::AcqRel", "Ordering::SeqCst")
+
+
+def audit_source(path, src, comments_only=False):
+    """Returns a list of (line_no_1based, rule, severity, message)."""
+    rel = rel_label(path)
+    lines = lex(src)
+    findings = []
+    if comments_only:
+        for i, l in enumerate(lines):
+            if l.is_code_blank():
+                continue
+            ctx = comment_context(lines, i)
+            waived, _ = parse_waivers(ctx)
+            if "comment" in waived:
+                continue
+            col = lone_slash_pos(l.code_str())
+            if col is not None:
+                findings.append(
+                    (i + 1, "comment", "error",
+                     f"lone `/` at column {col + 1} where a comment would sit"
+                     " — malformed `//`?")
+                )
+        return findings
+
+    skip = cfg_test_mask(lines)
+    core = in_paths(rel, CORE_PATHS)
+    guard_layer = in_paths(rel, GUARD_PATHS)
+    for i, l in enumerate(lines):
+        if skip[i] or l.is_code_blank():
+            continue
+        code = l.code_str()
+        ctx = comment_context(lines, i)
+        waived, malformed = parse_waivers(ctx)
+        for m in malformed:
+            findings.append((i + 1, "waiver", "warning", m))
+
+        if (
+            has_token(code, "unsafe")
+            and not has_marker(ctx, "SAFETY:")
+            and "# Safety" not in ctx
+            and "safety" not in waived
+        ):
+            findings.append(
+                (i + 1, "safety", "error",
+                 "`unsafe` without an adjacent `SAFETY:` comment")
+            )
+
+        strong = next((o for o in STRONG if o in code), None)
+        if strong and not has_marker(ctx, "ord:") and "ord" not in waived:
+            findings.append(
+                (i + 1, "ord", "error",
+                 f"`{strong}` without an `ord:` tag naming its Acquire"
+                 " counterpart")
+            )
+
+        if (
+            "Ordering::Relaxed" in code
+            and (core or "AtomicPtr" in code)
+            and not has_marker(ctx, "ord:")
+            and "ord" not in waived
+        ):
+            findings.append(
+                (i + 1, "ord", "error",
+                 "`Ordering::Relaxed` in the lock-free core without an"
+                 " `ord: relaxed-ok <reason>` tag")
+            )
+
+        if "comment" not in waived:
+            col = lone_slash_pos(code)
+            if col is not None:
+                findings.append(
+                    (i + 1, "comment", "error",
+                     f"lone `/` at column {col + 1} where a comment would"
+                     " sit — malformed `//`?")
+                )
+
+        if guard_layer and is_pub_fn_line(code):
+            ret = return_type(fn_signature(lines, i))
+            if (
+                ret is not None
+                and lends_guard_memory(ret)
+                and not has_marker(ctx, "guard-stable:")
+                and "guard" not in waived
+            ):
+                findings.append(
+                    (i + 1, "guard", "error",
+                     f"pub fn returning guard-scoped memory (`{ret.strip()}`)"
+                     " without a `guard-stable:` tag")
+                )
+    return findings
+
+
+def main(argv):
+    comments_only = False
+    roots = []
+    for a in argv[1:]:
+        if a == "--comments-only":
+            comments_only = True
+        elif a in ("-h", "--help"):
+            print(__doc__)
+            return 0
+        elif a.startswith("-"):
+            print(f"deskcheck: unknown option {a}", file=sys.stderr)
+            return 2
+        else:
+            roots.append(Path(a))
+    if not roots:
+        roots = [Path(__file__).resolve().parent.parent / "rust" / "src"]
+
+    files = []
+    for root in roots:
+        if root.is_file():
+            files.append(root)
+        elif root.is_dir():
+            files.extend(sorted(root.rglob("*.rs")))
+        else:
+            print(f"deskcheck: no such path {root}", file=sys.stderr)
+            return 2
+
+    errors = warnings = 0
+    for f in files:
+        src = f.read_text(encoding="utf-8")
+        for line_no, rule, severity, msg in audit_source(
+            str(f), src, comments_only
+        ):
+            print(f"{f}:{line_no}: {severity}: [{rule}] {msg}")
+            if severity == "error":
+                errors += 1
+            else:
+                warnings += 1
+    mode = "comments-only" if comments_only else "full"
+    print(
+        f"deskcheck ({mode}): {len(files)} files, "
+        f"{errors} errors, {warnings} warnings"
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
