@@ -38,6 +38,10 @@
 //!                probe structure is the only delta), 4 threads. The
 //!                sink column's edge over owned is the copy+allocation
 //!                the redesign removed. Emits `BENCH_read_path.json`.
+//!   obs-overhead — the observability-plane cost sweep: the in-process
+//!                workload with the sampled latency clock off / 1-in-64
+//!                (default) / on every batch, fleec only. Emits
+//!                `BENCH_obs_overhead.json`.
 //!
 //! Every row is also appended to `BENCH_batch_pipeline.json` (flat array
 //! of records; the alloc-path and read-path sweeps write their own
@@ -639,4 +643,79 @@ fn main() {
 
     println!();
     read_path_sweep();
+
+    println!();
+    obs_overhead_sweep();
+}
+
+const OBS_JSON_PATH: &str = "BENCH_obs_overhead.json";
+
+/// The observability-overhead sweep: the identical in-process workload
+/// with the latency clock off (`latency_sample: 0`), at the shipping
+/// default (1-in-64), and fully on (every batch timed). The deltas are
+/// the cost of the sampled clock itself — the counters and histogram
+/// buckets are always live. Emits `BENCH_obs_overhead.json`.
+fn obs_overhead_sweep() {
+    const SAMPLES: [u32; 3] = [0, 64, 1];
+    println!("== obs-overhead: latency-sample stride vs throughput (fleec, threads=4, depth=16) ==");
+    println!("{:>8} {:>12} {:>10}", "stride", "ops/s", "vs off");
+    let spec = WorkloadSpec {
+        catalog: 50_000,
+        alpha: 0.99,
+        read_ratio: 0.95,
+        value_size: ValueSize::Fixed(64),
+        seed: 0xBA7C_4ED0,
+    };
+    let opts = DriverOptions {
+        threads: 4,
+        stop: StopRule::OpsPerThread(150_000),
+        prefill: true,
+        sample_every: 16,
+        validate: false,
+        batch: 16,
+    };
+    let mut rows = Vec::new();
+    let mut baseline = 0.0f64;
+    for &stride in &SAMPLES {
+        let cache = build_engine(
+            "fleec",
+            CacheConfig {
+                mem_limit: 64 << 20,
+                latency_sample: stride,
+                ..CacheConfig::default()
+            },
+        )
+        .unwrap();
+        let report = run_driver(&cache, &spec, &opts);
+        let tput = report.throughput();
+        if stride == 0 {
+            baseline = tput;
+        }
+        let rel = if baseline > 0.0 { tput / baseline } else { 1.0 };
+        println!("{:>8} {:>12.0} {:>9.1}%", stride, tput, rel * 100.0);
+        rows.push((stride, tput, rel));
+        // Sanity: a timed run must actually have timed something.
+        if stride > 0 {
+            let lat = cache.stats().latency;
+            assert!(
+                lat.class(fleec::metrics::OpClass::Get).count > 0,
+                "stride {stride}: latency clock never fired"
+            );
+        }
+    }
+    let mut out = String::from("[\n");
+    for (i, (stride, tput, rel)) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"section\":\"obs_overhead\",\"engine\":\"fleec\",\"latency_sample\":{},\"ops_per_s\":{:.1},\"vs_off\":{:.4}}}{}\n",
+            stride,
+            tput,
+            rel,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("]\n");
+    match std::fs::File::create(OBS_JSON_PATH).and_then(|mut f| f.write_all(out.as_bytes())) {
+        Ok(()) => println!("wrote {} records to {OBS_JSON_PATH}", rows.len()),
+        Err(e) => eprintln!("!! could not write {OBS_JSON_PATH}: {e}"),
+    }
 }

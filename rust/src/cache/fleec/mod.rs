@@ -26,7 +26,7 @@ use crate::cache::{
     StatsSnapshot, StoreOutcome, MAX_KEY_LEN,
 };
 use crate::ebr::{Collector, Guard};
-use crate::metrics::EngineMetrics;
+use crate::metrics::{EngineMetrics, LatencyMetrics};
 use crate::slab::{Slab, SlabConfig};
 
 use node::{decode_item, live_word, Item, ItemState, Node, DEL, FRZ, ITEM_HEADER, TOMB_WORD};
@@ -106,6 +106,8 @@ pub struct FleecCache {
     /// Monotonic CAS-token source (also the RMW race detector).
     cas_counter: AtomicU64,
     metrics: EngineMetrics,
+    /// Sampled per-op-class latency histograms (`stats latency`).
+    latency: LatencyMetrics,
     config: CacheConfig,
     /// Planner-tunable eviction parameters.
     evict_decay: AtomicU8,
@@ -132,6 +134,7 @@ impl FleecCache {
             items: AtomicUsize::new(0),
             cas_counter: AtomicU64::new(0),
             metrics: EngineMetrics::default(),
+            latency: LatencyMetrics::default(),
             evict_batch: AtomicU32::new(config.evict_batch),
             evict_decay: AtomicU8::new(1),
             #[cfg(debug_assertions)]
@@ -1232,6 +1235,10 @@ impl Cache for FleecCache {
         // the sink (value bytes lent from the slab — the guard keeps
         // them stable for the rest of the batch).
         let (mut gets, mut hits, mut misses, mut deletes) = (0u64, 0u64, 0u64, 0u64);
+        // Sampled clock: one relaxed tick decides whether this batch
+        // reads `Instant::now` at all; non-sampled batches pay one
+        // predictable branch per op and nothing else.
+        let timed = self.latency.sample_batch(self.config.latency_sample);
         {
             let guard = self.collector.pin();
             // Touch every bucket head in ascending bucket order (grouped
@@ -1250,6 +1257,7 @@ impl Cache for FleecCache {
                 }
             }
             for (i, op) in ops.iter().enumerate() {
+                let t0 = if timed { Some(std::time::Instant::now()) } else { None };
                 let hash = hashes[i];
                 match *op {
                     Op::Get { key } => {
@@ -1353,6 +1361,10 @@ impl Cache for FleecCache {
                             || self.touch(key, exptime),
                         ),
                     ),
+                }
+                if let Some(t0) = t0 {
+                    self.latency
+                        .record(op.class(), t0.elapsed().as_nanos() as u64);
                 }
             }
         }
@@ -1503,6 +1515,9 @@ impl Cache for FleecCache {
             buckets: self.bucket_count(),
             mem_used: self.mem_used(),
             mem_limit: self.mem_limit(),
+            latency: self.latency.snapshot(),
+            internals: crate::cache::substrate_internals(&self.collector, &self.slab),
+            slabs: crate::cache::slab_class_snapshots(&self.slab),
         }
     }
 

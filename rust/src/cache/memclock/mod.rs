@@ -545,6 +545,9 @@ impl Cache for MemClockCache {
             buckets: self.bucket_count(),
             mem_used: self.mem_used(),
             mem_limit: self.mem_limit(),
+            // Blocking engines have no EBR/slab substrate and use the
+            // sequential batch path: observability extras stay zero.
+            ..StatsSnapshot::default()
         }
     }
 

@@ -22,7 +22,7 @@ pub use op::{BatchSink, CollectSink, Op, OpResult};
 
 use std::sync::Arc;
 
-use crate::metrics::MetricsSnapshot;
+use crate::metrics::{HistogramSnapshot, LatencySnapshot, MetricsSnapshot};
 
 /// Hard cap on key length (Memcached's limit).
 pub const MAX_KEY_LEN: usize = 250;
@@ -69,6 +69,10 @@ pub struct CacheConfig {
     pub lock_stripes: usize,
     /// Items evicted per eviction pass before re-trying an allocation.
     pub evict_batch: u32,
+    /// Latency sampling stride: record per-op latency histograms on
+    /// 1-in-N batches (`--latency-sample N`). 0 disables the clock
+    /// entirely; 1 times every batch (tests / deep profiling).
+    pub latency_sample: u32,
 }
 
 impl Default for CacheConfig {
@@ -80,6 +84,7 @@ impl Default for CacheConfig {
             clock_max: 3,
             lock_stripes: 16,
             evict_batch: 8,
+            latency_sample: 64,
         }
     }
 }
@@ -96,17 +101,28 @@ impl CacheConfig {
 }
 
 /// One coherent `stats`-grade view of a cache: request counters plus the
-/// capacity figures the text protocol reports. Exists so aggregating
-/// engines ([`sharded::Sharded`]) can hand the serving plane a *merged*
-/// view — [`StatsSnapshot::absorb`] sums every field, and per-shard
-/// `mem_limit`s add back up to the configured total.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// capacity figures the text protocol reports, the sampled per-op-class
+/// latency histograms (`stats latency`), the subsystem internals
+/// (`stats internals`) and the per-size-class slab occupancy (`stats
+/// slabs`). Exists so aggregating engines ([`sharded::Sharded`]) can
+/// hand the serving plane a *merged* view — [`StatsSnapshot::absorb`]
+/// sums every field (histograms merge bucket-wise, slab classes merge
+/// by chunk size), and per-shard `mem_limit`s add back up to the
+/// configured total.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct StatsSnapshot {
     pub metrics: MetricsSnapshot,
     pub items: usize,
     pub buckets: usize,
     pub mem_used: usize,
     pub mem_limit: usize,
+    /// Sampled per-op-class latency histograms (empty when
+    /// `latency_sample == 0` or the engine does not time batches).
+    pub latency: LatencySnapshot,
+    /// Subsystem gauges/counters (EBR, slab, open addressing).
+    pub internals: InternalsSnapshot,
+    /// Per-size-class slab occupancy; empty for engines without a slab.
+    pub slabs: Vec<SlabClassSnapshot>,
 }
 
 impl StatsSnapshot {
@@ -117,7 +133,128 @@ impl StatsSnapshot {
         self.buckets += other.buckets;
         self.mem_used += other.mem_used;
         self.mem_limit += other.mem_limit;
+        self.latency.absorb(&other.latency);
+        self.internals.absorb(&other.internals);
+        if self.slabs.is_empty() {
+            self.slabs = other.slabs.clone();
+        } else {
+            for s in &other.slabs {
+                match self.slabs.iter_mut().find(|c| c.chunk_size == s.chunk_size) {
+                    Some(c) => c.absorb(s),
+                    None => self.slabs.push(s.clone()),
+                }
+            }
+            self.slabs.sort_by_key(|c| c.chunk_size);
+        }
     }
+}
+
+/// Subsystem internals surfaced by `stats internals`: where the
+/// lock-free design pays (or would be seen failing to). All fields are
+/// stats-grade relaxed counter folds; [`absorb`](Self::absorb) sums
+/// them across shards.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct InternalsSnapshot {
+    /// EBR: successful global-epoch advances.
+    pub ebr_advances: u64,
+    /// EBR: advance attempts that found a pinned straggler and gave up.
+    pub ebr_failed_advances: u64,
+    /// EBR: items currently parked in limbo bags (deferred, not yet
+    /// reclaimable).
+    pub ebr_deferred_items: u64,
+    /// EBR: bytes currently parked in limbo bags.
+    pub ebr_deferred_bytes: u64,
+    /// EBR: items whose destructors have run (freed for reuse).
+    pub ebr_reclaimed_items: u64,
+    /// Slab: allocations served from a thread's private magazine (the
+    /// zero-shared-CAS fast path).
+    pub slab_magazine_hits: u64,
+    /// Slab: magazine refills that went to the shared segment lists.
+    pub slab_shared_refills: u64,
+    /// Slab: flush-request epochs honored by registered threads.
+    pub slab_flushes_honored: u64,
+    /// Open addressing: slot migrations completed (generation moves).
+    pub oa_migrations: u64,
+    /// Open addressing: entries displaced during insert probing.
+    pub oa_displacements: u64,
+    /// Open addressing: probe lengths (slot distance from home, not
+    /// nanoseconds), recorded on sampled batches.
+    pub oa_probe: HistogramSnapshot,
+}
+
+impl InternalsSnapshot {
+    /// Fold another snapshot into this one (counters sum, the probe
+    /// histogram merges bucket-wise).
+    pub fn absorb(&mut self, other: &InternalsSnapshot) {
+        self.ebr_advances += other.ebr_advances;
+        self.ebr_failed_advances += other.ebr_failed_advances;
+        self.ebr_deferred_items += other.ebr_deferred_items;
+        self.ebr_deferred_bytes += other.ebr_deferred_bytes;
+        self.ebr_reclaimed_items += other.ebr_reclaimed_items;
+        self.slab_magazine_hits += other.slab_magazine_hits;
+        self.slab_shared_refills += other.slab_shared_refills;
+        self.slab_flushes_honored += other.slab_flushes_honored;
+        self.oa_migrations += other.oa_migrations;
+        self.oa_displacements += other.oa_displacements;
+        self.oa_probe.absorb(&other.oa_probe);
+    }
+}
+
+/// Per-size-class slab occupancy for `stats slabs` (memcached's
+/// `STAT <cls>:chunk_size …` shape). Shards share one chunk-size
+/// ladder, so [`absorb`](Self::absorb) merges same-size classes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SlabClassSnapshot {
+    pub chunk_size: usize,
+    /// Chunks holding live items.
+    pub live_chunks: usize,
+    /// Chunks parked in free lists / magazines.
+    pub cached_chunks: usize,
+    /// All chunks ever carved for this class.
+    pub total_chunks: usize,
+}
+
+impl SlabClassSnapshot {
+    pub fn absorb(&mut self, other: &SlabClassSnapshot) {
+        debug_assert_eq!(self.chunk_size, other.chunk_size, "merging across class ladders");
+        self.live_chunks += other.live_chunks;
+        self.cached_chunks += other.cached_chunks;
+        self.total_chunks += other.total_chunks;
+    }
+}
+
+/// Assemble the EBR + slab portion of an [`InternalsSnapshot`], shared by
+/// the engines built over the collector/slab substrate (fleec, oaflash).
+/// The open-addressing fields stay default; oaflash fills them itself.
+pub(crate) fn substrate_internals(
+    collector: &crate::ebr::Collector,
+    slab: &crate::slab::Slab,
+) -> InternalsSnapshot {
+    let (attempts, successes) = collector.advance_stats();
+    InternalsSnapshot {
+        ebr_advances: successes as u64,
+        ebr_failed_advances: attempts.saturating_sub(successes) as u64,
+        ebr_deferred_items: collector.pending_items() as u64,
+        ebr_deferred_bytes: collector.pending_bytes() as u64,
+        ebr_reclaimed_items: collector.reclaimed_items() as u64,
+        slab_magazine_hits: slab.magazine_hits(),
+        slab_shared_refills: slab.shared_refills(),
+        slab_flushes_honored: slab.flushes_honored(),
+        ..InternalsSnapshot::default()
+    }
+}
+
+/// Convert the slab's per-class occupancy into `stats slabs` rows.
+pub(crate) fn slab_class_snapshots(slab: &crate::slab::Slab) -> Vec<SlabClassSnapshot> {
+    slab.class_stats()
+        .iter()
+        .map(|c| SlabClassSnapshot {
+            chunk_size: c.chunk_size,
+            live_chunks: c.live_chunks,
+            cached_chunks: c.cached_chunks,
+            total_chunks: c.total_chunks,
+        })
+        .collect()
 }
 
 /// The engine-neutral cache interface (Memcached text-protocol semantics).

@@ -30,7 +30,9 @@
 
 pub mod table;
 
-use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{
+    AtomicBool, AtomicPtr, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+};
 use std::sync::Arc;
 
 use crate::cache::{
@@ -38,7 +40,7 @@ use crate::cache::{
     StatsSnapshot, StoreOutcome, MAX_KEY_LEN,
 };
 use crate::ebr::{Collector, Guard};
-use crate::metrics::EngineMetrics;
+use crate::metrics::{EngineMetrics, LatencyHistogram, LatencyMetrics};
 use crate::slab::{Slab, SlabConfig};
 
 use crate::cache::fleec::node::{
@@ -147,7 +149,19 @@ pub struct OaFlashCache {
     /// Entries relocated into a successor generation — the engine's
     /// displacement count, read by the guard-stability stress.
     displacements: AtomicU64,
+    /// Generation promotions completed (an old root fully migrated and
+    /// retired) — `stats internals` reports this as `oa_migrations`.
+    migrations: AtomicU64,
     metrics: EngineMetrics,
+    /// Sampled per-op-class latency histograms (`stats latency`).
+    latency: LatencyMetrics,
+    /// Probe lengths (slots examined per terminal lookup — distance
+    /// units, not nanoseconds), recorded only while `probe_sample` is up.
+    oa_probe: LatencyHistogram,
+    /// Raised while a sampled batch runs so lookup cores record probe
+    /// lengths. Shared across threads: a racing non-sampled batch can
+    /// lower it early, dropping a few samples — stats-grade, tolerated.
+    probe_sample: AtomicBool,
     config: CacheConfig,
     /// Planner-tunable eviction parameters.
     evict_decay: AtomicU8,
@@ -171,7 +185,11 @@ impl OaFlashCache {
             items: AtomicUsize::new(0),
             cas_counter: AtomicU64::new(0),
             displacements: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
             metrics: EngineMetrics::default(),
+            latency: LatencyMetrics::default(),
+            oa_probe: LatencyHistogram::new(),
+            probe_sample: AtomicBool::new(false),
             evict_batch: AtomicU32::new(config.evict_batch),
             evict_decay: AtomicU8::new(1),
             config,
@@ -303,6 +321,9 @@ impl OaFlashCache {
             // generation's Drop frees its entries (items were already
             // transferred or retired).
             unsafe { guard.defer_drop_box(root) };
+            // ord: relaxed-ok — accounting counter; stats tolerate racy
+            // snapshots.
+            self.migrations.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -927,6 +948,21 @@ impl OaFlashCache {
         }
     }
 
+    /// Record one probe outcome's length (slots examined before the scan
+    /// became authoritative) into the probe histogram. Distance units —
+    /// a home-slot hit records 1. Called only on sampled batches.
+    fn note_probe(&self, t: &OaTable, hash: u64, p: &Probe<'_>) {
+        let len = match *p {
+            Probe::Found { idx, .. } | Probe::Empty { idx } => {
+                (idx.wrapping_sub(t.home(hash)) & t.mask) as u64 + 1
+            }
+            Probe::Full => PROBE_WINDOW.min(t.len()) as u64,
+            // A forwarded slot ends the scan at an unknown depth.
+            Probe::Closed => return,
+        };
+        self.oa_probe.record(len);
+    }
+
     /// Guard-passing lookup core (metrics-free), shared by the single-key
     /// path and the batched fast path. Returns the hit's
     /// `(flags, cas, data)` with the value bytes **borrowed at the
@@ -947,9 +983,16 @@ impl OaFlashCache {
     /// its window being closed (forwarded slot) or full, all of which
     /// this probe would have seen first. `Closed`/`Full` descend.
     fn get_view<'g>(&self, key: &[u8], hash: u64, guard: &'g Guard) -> Option<(u32, u64, &'g [u8])> {
+        // ord: relaxed-ok — stats-grade sampling flag; reading it stale
+        // merely drops or adds a few probe-length samples.
+        let sampling = self.probe_sample.load(Ordering::Relaxed);
         let mut t = self.root(guard);
         loop {
-            match probe(t, hash, key) {
+            let p = probe(t, hash, key);
+            if sampling {
+                self.note_probe(t, hash, &p);
+            }
+            match p {
                 Probe::Found { idx, entry } => {
                     let w = entry.item.load(Ordering::Acquire);
                     match decode_item(w) {
@@ -1301,8 +1344,17 @@ impl Cache for OaFlashCache {
         // Phase B (pinned once): prefetch home slots, then execute in
         // batch order under the single guard.
         let (mut gets, mut hits, mut misses, mut deletes) = (0u64, 0u64, 0u64, 0u64);
+        // Sampled clock (same shape as FLeeC's): one relaxed tick decides
+        // whether this batch reads `Instant::now` per op and records
+        // probe lengths; non-sampled batches pay one predictable branch.
+        let timed = self.latency.sample_batch(self.config.latency_sample);
         {
             let guard = self.collector.pin();
+            if timed {
+                // ord: relaxed-ok — stats-grade sampling flag (see the
+                // field doc); no data is ordered against it.
+                self.probe_sample.store(true, Ordering::Relaxed);
+            }
             if ops.len() > 1 {
                 let t = self.root(&guard);
                 let mut order: Vec<u32> = (0..ops.len() as u32).collect();
@@ -1314,6 +1366,7 @@ impl Cache for OaFlashCache {
                 }
             }
             for (i, op) in ops.iter().enumerate() {
+                let t0 = if timed { Some(std::time::Instant::now()) } else { None };
                 let hash = hashes[i];
                 match *op {
                     Op::Get { key } => {
@@ -1357,6 +1410,14 @@ impl Cache for OaFlashCache {
                     Op::Decr { key, delta } => sink.counter(i, self.decr(key, delta)),
                     Op::Touch { key, exptime } => sink.touched(i, self.touch(key, exptime)),
                 }
+                if let Some(t0) = t0 {
+                    self.latency
+                        .record(op.class(), t0.elapsed().as_nanos() as u64);
+                }
+            }
+            if timed {
+                // ord: relaxed-ok — as the store above.
+                self.probe_sample.store(false, Ordering::Relaxed);
             }
         }
 
@@ -1502,12 +1563,21 @@ impl Cache for OaFlashCache {
     }
 
     fn stats(&self) -> StatsSnapshot {
+        let mut internals = crate::cache::substrate_internals(&self.collector, &self.slab);
+        // ord: relaxed-ok — accounting counter; stats tolerate racy
+        // snapshots.
+        internals.oa_migrations = self.migrations.load(Ordering::Relaxed);
+        internals.oa_displacements = self.displacements();
+        internals.oa_probe = self.oa_probe.snapshot();
         StatsSnapshot {
             metrics: self.metrics.snapshot(),
             items: self.item_count(),
             buckets: self.bucket_count(),
             mem_used: self.mem_used(),
             mem_limit: self.mem_limit(),
+            latency: self.latency.snapshot(),
+            internals,
+            slabs: crate::cache::slab_class_snapshots(&self.slab),
         }
     }
 

@@ -106,6 +106,26 @@ impl<'a> Op<'a> {
     pub fn is_read(&self) -> bool {
         matches!(self, Op::Get { .. })
     }
+
+    /// The latency class this op records under (`stats latency`):
+    /// lookups, fresh installs, read-modify-writes and unlinks have
+    /// mechanically different costs, so they get separate histograms.
+    #[inline]
+    pub fn class(&self) -> crate::metrics::OpClass {
+        use crate::metrics::OpClass;
+        match self {
+            Op::Get { .. } => OpClass::Get,
+            Op::Set { .. } | Op::Add { .. } | Op::Replace { .. } | Op::CasOp { .. } => {
+                OpClass::Store
+            }
+            Op::Append { .. }
+            | Op::Prepend { .. }
+            | Op::Incr { .. }
+            | Op::Decr { .. }
+            | Op::Touch { .. } => OpClass::Rmw,
+            Op::Delete { .. } => OpClass::Delete,
+        }
+    }
 }
 
 /// Result of one executed [`Op`], index-aligned with the input batch.

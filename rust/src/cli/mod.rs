@@ -4,6 +4,7 @@
 //! ```text
 //! fleec serve   --engine fleec --port 11211 --mem-mb 64 [--no-planner]
 //!               [--model reactor|thread] [--io-threads N]
+//!               [--latency-sample N] [--metrics-addr HOST:PORT]
 //! fleec bench   --engine all --alpha 0.99 --threads 8 --ops 200000 ...
 //!               [--conns N] (over-the-wire connection-scaling mode)
 //! fleec hit-ratio --alpha 0.99 --catalog 100000 --mem-mb 4
@@ -116,6 +117,7 @@ pub fn cache_config(args: &Args) -> CacheConfig {
         clock_max: args.get_or("clock-max", 3u8),
         lock_stripes: args.get_or("stripes", 16usize),
         evict_batch: args.get_or("evict-batch", 8u32),
+        latency_sample: args.get_or("latency-sample", 64u32),
     }
 }
 
@@ -161,6 +163,13 @@ fn print_usage() {
                                       per connection, the portable fallback)\n\
                        [--io-threads N]\n\
                                      (reactor threads; 0 = one per core)\n\
+                       [--latency-sample N]\n\
+                                     (time 1-in-N batches for the latency\n\
+                                      histograms; 0 = off, 1 = every batch;\n\
+                                      default 64 — see `stats latency`)\n\
+                       [--metrics-addr HOST:PORT]\n\
+                                     (serve Prometheus text exposition at\n\
+                                      GET /metrics on this address)\n\
          bench         --engine all|<name> --alpha 0.99 --threads 8 --ops 200000\n\
                        [--catalog N] [--value-bytes N] [--read-ratio R] [--mem-mb N]\n\
                        [--batch N]  (ops per engine crossing; >1 uses execute_batch)\n\
@@ -197,14 +206,23 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     );
 
     let model = server_model(args)?;
+    let metrics_addr = match args.options.get("metrics-addr") {
+        Some(s) => Some(s.parse()?),
+        None => None,
+    };
     let server = Server::start(
         ServerConfig {
             addr: format!("127.0.0.1:{port}").parse()?,
             model,
+            drain_sample: args.get_or("latency-sample", 64u32),
+            metrics_addr,
             ..ServerConfig::default()
         },
         Arc::clone(&cache),
     )?;
+    if let Some(m) = server.metrics_addr() {
+        eprintln!("fleec metrics on http://{m}/metrics");
+    }
     let model_desc = match model {
         ServerModel::Thread => "thread-per-connection".to_string(),
         ServerModel::Reactor { io_threads } => format!(

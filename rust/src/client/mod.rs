@@ -142,6 +142,17 @@ impl Client {
     /// `stats` as (name, value) pairs.
     pub fn stats(&mut self) -> Result<Vec<(String, String)>> {
         self.writer.write_all(b"stats\r\n")?;
+        self.read_stat_lines()
+    }
+
+    /// A `stats <sub>` subcommand (`latency`, `slabs`, `internals`) as
+    /// (name, value) pairs.
+    pub fn stats_sub(&mut self, sub: &str) -> Result<Vec<(String, String)>> {
+        self.writer.write_all(format!("stats {sub}\r\n").as_bytes())?;
+        self.read_stat_lines()
+    }
+
+    fn read_stat_lines(&mut self) -> Result<Vec<(String, String)>> {
         let mut out = Vec::new();
         loop {
             let line = self.read_line()?;

@@ -148,6 +148,16 @@
 //! `tests/audit.rs` and the required CI job). The cross-cutting
 //! memory-ordering map — which atomics pair with which, and why each
 //! `Relaxed` is safe — is `rust/docs/concurrency.md`.
+//!
+//! ## Observability
+//!
+//! The cache watches itself without locks or new shared-write
+//! contention: sampled per-op-class latency histograms ([`metrics`]),
+//! EBR/slab/probe internals ([`cache::InternalsSnapshot`]), serving-
+//! plane gauges (`server::ServerObs`), the `stats
+//! latency`/`slabs`/`internals` protocol subcommands, and an optional
+//! Prometheus text endpoint (`--metrics-addr`). The design rules and
+//! the full metric inventory are in `rust/docs/observability.md`.
 
 pub mod audit;
 pub mod cache;

@@ -3,7 +3,16 @@
 //! Values (nanoseconds) are bucketed by octave with 8 sub-buckets per
 //! octave — ≤ 12.5 % relative error, 512 buckets ≈ 4 KiB, one relaxed
 //! `fetch_add` per record. Percentile queries interpolate inside the
-//! winning bucket.
+//! winning bucket: the returned value is the bucket's lower bound plus
+//! the target rank's linear fraction of the bucket width (rank-based
+//! linear interpolation), clamped to the observed maximum — so the
+//! relative error stays within the bucket resolution (≤ 12.5 %) instead
+//! of snapping to midpoints.
+//!
+//! [`HistogramSnapshot`] is the plain (non-atomic) image used by
+//! `stats` replies and sharded merging: `snapshot()` freezes a live
+//! histogram, `absorb()` folds snapshots bucket-wise the same way
+//! `MetricsSnapshot` folds counters.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -13,6 +22,52 @@ const SUB: usize = 1 << SUB_BITS;
 /// Octaves covered: 2^0 .. 2^63 ns (584 years; plenty).
 const OCTAVES: usize = 64;
 const BUCKETS: usize = OCTAVES * SUB;
+
+/// Inclusive lower / exclusive upper value bounds of bucket `i`.
+///
+/// For octaves below `SUB_BITS` each representable value gets its own
+/// bucket (the sub index *is* the value), so the bounds are exact.
+fn bucket_bounds(i: usize) -> (u64, u64) {
+    let exp = (i / SUB) as u32;
+    let sub = (i % SUB) as u64;
+    if exp >= SUB_BITS {
+        let base = 1u64 << exp;
+        let step = 1u64 << (exp - SUB_BITS);
+        let lo = base + sub * step;
+        (lo, lo + step)
+    } else {
+        let v = sub.max(1);
+        (v, v + 1)
+    }
+}
+
+/// Rank-based linear interpolation over a bucket array: find the bucket
+/// holding the `p`-quantile's rank, then interpolate the rank's fraction
+/// through that bucket's value bounds. Shared by the live histogram and
+/// the snapshot so both answer identically.
+fn rank_percentile(mut load: impl FnMut(usize) -> u64, n: u64, max: u64, p: f64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    let target = ((p.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+    let mut seen = 0u64;
+    for i in 0..BUCKETS {
+        let c = load(i);
+        if c == 0 {
+            continue;
+        }
+        if seen + c >= target {
+            let (lo, hi) = bucket_bounds(i);
+            let frac = (target - seen) as f64 / c as f64;
+            let v = lo as f64 + frac * (hi - lo) as f64;
+            return (v as u64).min(max);
+        }
+        seen += c;
+    }
+    // Racy under-count (concurrent recorders): the max is the best
+    // stats-grade answer.
+    max
+}
 
 /// Concurrent fixed-size latency histogram.
 pub struct LatencyHistogram {
@@ -54,19 +109,6 @@ impl LatencyHistogram {
         (exp as usize) * SUB + sub
     }
 
-    /// Representative (geometric-ish midpoint) value of bucket `i`.
-    fn bucket_value(i: usize) -> u64 {
-        let exp = (i / SUB) as u32;
-        let sub = (i % SUB) as u64;
-        if exp >= SUB_BITS {
-            let base = 1u64 << exp;
-            let step = 1u64 << (exp - SUB_BITS);
-            base + sub * step + step / 2
-        } else {
-            1u64 << exp
-        }
-    }
-
     /// Record one sample (nanoseconds).
     #[inline]
     pub fn record(&self, nanos: u64) {
@@ -102,25 +144,48 @@ impl LatencyHistogram {
         self.max.load(Ordering::Relaxed)
     }
 
-    /// Approximate `p`-quantile (0 < p ≤ 1) in nanoseconds.
+    /// Approximate `p`-quantile (0 < p ≤ 1) in nanoseconds, linearly
+    /// interpolated within the winning bucket.
     pub fn percentile(&self, p: f64) -> u64 {
-        let n = self.count();
-        if n == 0 {
-            return 0;
-        }
-        let target = ((p.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
-        let mut seen = 0u64;
-        for i in 0..BUCKETS {
-            let c = self.buckets[i].load(Ordering::Relaxed);
-            if c == 0 {
-                continue;
+        rank_percentile(
+            |i| self.buckets[i].load(Ordering::Relaxed),
+            self.count(),
+            self.max(),
+            p,
+        )
+    }
+
+    /// Fold another live histogram into this one (relaxed adds; the
+    /// sharded-merge primitive for long-lived aggregation — `stats`
+    /// replies merge [`HistogramSnapshot`]s instead).
+    pub fn absorb(&self, other: &LatencyHistogram) {
+        for (dst, src) in self.buckets.iter().zip(other.buckets.iter()) {
+            let c = src.load(Ordering::Relaxed);
+            if c != 0 {
+                dst.fetch_add(c, Ordering::Relaxed);
             }
-            seen += c;
-            if seen >= target {
-                return Self::bucket_value(i).min(self.max());
-            }
         }
-        self.max()
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum
+            .fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max
+            .fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Freeze a plain, mergeable image of the current state. Slightly
+    /// torn under concurrent recording; stats-grade by design.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            count: self.count(),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max(),
+        }
     }
 
     /// Reset all state (between bench phases).
@@ -135,15 +200,70 @@ impl LatencyHistogram {
 
     /// Standard percentile summary (p50, p90, p95, p99, p999, max) in ns.
     pub fn summary(&self) -> HistogramSummary {
+        self.snapshot().summary()
+    }
+}
+
+/// Plain, mergeable image of a [`LatencyHistogram`] — the form `stats`
+/// snapshots carry and sharded routers fold. `Default` is the empty
+/// histogram (bucket storage allocates lazily on the first `absorb`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts; empty means "no buckets yet" (all zero).
+    buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistogramSnapshot {
+    /// Approximate `p`-quantile, same interpolation as the live
+    /// histogram.
+    pub fn percentile(&self, p: f64) -> u64 {
+        rank_percentile(
+            |i| self.buckets.get(i).copied().unwrap_or(0),
+            self.count,
+            self.max,
+            p,
+        )
+    }
+
+    /// Mean sample in nanoseconds (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Fold another snapshot into this one (bucket-wise sum; the merge
+    /// step behind sharded `stats latency`).
+    pub fn absorb(&mut self, other: &HistogramSnapshot) {
+        if !other.buckets.is_empty() {
+            if self.buckets.is_empty() {
+                self.buckets = vec![0; BUCKETS];
+            }
+            for (dst, &src) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+                *dst += src;
+            }
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Standard percentile summary in ns.
+    pub fn summary(&self) -> HistogramSummary {
         HistogramSummary {
-            count: self.count(),
+            count: self.count,
             mean_ns: self.mean(),
             p50_ns: self.percentile(0.50),
             p90_ns: self.percentile(0.90),
             p95_ns: self.percentile(0.95),
             p99_ns: self.percentile(0.99),
             p999_ns: self.percentile(0.999),
-            max_ns: self.max(),
+            max_ns: self.max,
         }
     }
 }
@@ -204,6 +324,63 @@ mod tests {
                 "p{p} = {got} too far from the only sample"
             );
         }
+    }
+
+    #[test]
+    fn interpolated_percentiles_track_a_log_uniform_sweep() {
+        // Samples spread log-uniformly over 2^7..2^20 ns (uniform within
+        // each octave → uniform across octaves on the log axis), with
+        // deliberately non-power-of-two values; the interpolated
+        // percentile must stay within the bucket resolution (≤ 12.5 %
+        // relative error) of the exact order statistic.
+        let h = LatencyHistogram::new();
+        let mut all: Vec<u64> = Vec::new();
+        for exp in 7u32..20 {
+            let base = 1u64 << exp;
+            for k in 0..200u64 {
+                let v = base + (k * base) / 200 + 3; // off-grid offsets
+                h.record(v);
+                all.push(v);
+            }
+        }
+        all.sort_unstable();
+        let n = all.len() as f64;
+        for p in [0.10, 0.25, 0.50, 0.75, 0.90, 0.95, 0.99, 0.999] {
+            let exact = all[((p * n).ceil() as usize).max(1) - 1] as f64;
+            let got = h.percentile(p) as f64;
+            assert!(
+                (got / exact - 1.0).abs() <= 0.125,
+                "p{p}: interpolated {got} vs exact {exact} exceeds 12.5% relative error"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_merging_matches_combined_recording() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        let combined = LatencyHistogram::new();
+        for v in (100..5_000u64).step_by(7) {
+            a.record(v);
+            combined.record(v);
+        }
+        for v in (3_000..50_000u64).step_by(13) {
+            b.record(v);
+            combined.record(v);
+        }
+        // Snapshot-level merge (the stats path)…
+        let mut merged = HistogramSnapshot::default();
+        merged.absorb(&a.snapshot());
+        merged.absorb(&b.snapshot());
+        assert_eq!(merged.count, combined.count());
+        assert_eq!(merged.max, combined.max());
+        for p in [0.5, 0.9, 0.99] {
+            assert_eq!(merged.percentile(p), combined.percentile(p));
+        }
+        // …and the live-histogram merge agree with one another.
+        a.absorb(&b);
+        assert_eq!(a.count(), combined.count());
+        assert_eq!(a.percentile(0.5), combined.percentile(0.5));
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 mod histogram;
 
-pub use histogram::{HistogramSummary, LatencyHistogram};
+pub use histogram::{HistogramSnapshot, HistogramSummary, LatencyHistogram};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -55,6 +55,114 @@ impl ShardedCounter {
     /// Fold all stripes.
     pub fn get(&self) -> u64 {
         self.shards.iter().map(|s| s.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Latency classes the observability plane distinguishes. Coarser than
+/// [`crate::cache::Op`] on purpose: four histograms cover the shapes
+/// that differ mechanically (lookup, install, read-modify-write,
+/// unlink) without a per-variant footprint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Get = 0,
+    Store = 1,
+    Rmw = 2,
+    Delete = 3,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 4] = [OpClass::Get, OpClass::Store, OpClass::Rmw, OpClass::Delete];
+
+    /// Stable lowercase name used in `stats latency` / Prometheus keys.
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Get => "get",
+            OpClass::Store => "store",
+            OpClass::Rmw => "rmw",
+            OpClass::Delete => "delete",
+        }
+    }
+}
+
+/// Per-op-class latency histograms plus the batch sampling tick.
+///
+/// Engines call [`sample_batch`](Self::sample_batch) once per batch: a
+/// single relaxed `fetch_add` decides whether this batch reads the
+/// clock at all, so at `--latency-sample N` the steady-state cost on
+/// the other N−1 batches is one increment and one predictable branch —
+/// no `Instant::now()`, no allocation.
+#[derive(Default)]
+pub struct LatencyMetrics {
+    classes: [LatencyHistogram; 4],
+    tick: AtomicU64,
+}
+
+impl LatencyMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Decide whether this batch is a sampled one. `every == 0` turns
+    /// sampling off entirely; otherwise batch 0, N, 2N… are sampled
+    /// (the *first* batch always is, so short runs still see data).
+    #[inline]
+    pub fn sample_batch(&self, every: u32) -> bool {
+        if every == 0 {
+            return false;
+        }
+        // ord: relaxed-ok — private sampling tick; counts batches only,
+        // orders nothing, and an occasional torn stride is harmless.
+        let t = self.tick.fetch_add(1, Ordering::Relaxed);
+        t % u64::from(every) == 0
+    }
+
+    /// Record one sampled op latency.
+    #[inline]
+    pub fn record(&self, class: OpClass, nanos: u64) {
+        self.classes[class as usize].record(nanos);
+    }
+
+    /// The live histogram for one class (bench reporting).
+    pub fn class(&self, class: OpClass) -> &LatencyHistogram {
+        &self.classes[class as usize]
+    }
+
+    pub fn snapshot(&self) -> LatencySnapshot {
+        LatencySnapshot {
+            get: self.classes[OpClass::Get as usize].snapshot(),
+            store: self.classes[OpClass::Store as usize].snapshot(),
+            rmw: self.classes[OpClass::Rmw as usize].snapshot(),
+            delete: self.classes[OpClass::Delete as usize].snapshot(),
+        }
+    }
+}
+
+/// Plain snapshot of [`LatencyMetrics`] (serialized into `stats
+/// latency`, merged across shards like [`MetricsSnapshot`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LatencySnapshot {
+    pub get: HistogramSnapshot,
+    pub store: HistogramSnapshot,
+    pub rmw: HistogramSnapshot,
+    pub delete: HistogramSnapshot,
+}
+
+impl LatencySnapshot {
+    /// Fold another snapshot into this one, class by class.
+    pub fn absorb(&mut self, other: &LatencySnapshot) {
+        self.get.absorb(&other.get);
+        self.store.absorb(&other.store);
+        self.rmw.absorb(&other.rmw);
+        self.delete.absorb(&other.delete);
+    }
+
+    pub fn class(&self, class: OpClass) -> &HistogramSnapshot {
+        match class {
+            OpClass::Get => &self.get,
+            OpClass::Store => &self.store,
+            OpClass::Rmw => &self.rmw,
+            OpClass::Delete => &self.delete,
+        }
     }
 }
 

@@ -12,9 +12,8 @@
 //! server recycles across reads ([`crate::server::batch::BatchArena`]).
 //! [`parse`] is the scratch-less convenience wrapper.
 
-use std::fmt::Write as _;
-
-use crate::cache::{StatsSnapshot, StoreOutcome};
+use crate::cache::{InternalsSnapshot, SlabClassSnapshot, StatsSnapshot, StoreOutcome};
+use crate::metrics::{LatencySnapshot, OpClass};
 
 /// Storage-command flavor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,11 +44,25 @@ pub enum Command<'a> {
     Incr { key: &'a [u8], delta: u64, noreply: bool },
     Decr { key: &'a [u8], delta: u64, noreply: bool },
     Touch { key: &'a [u8], exptime: u32, noreply: bool },
-    Stats,
+    Stats { sub: StatsSub },
     FlushAll { noreply: bool },
     Version,
     Verbosity { noreply: bool },
     Quit,
+}
+
+/// `stats` subcommand selector (`stats`, `stats latency`, `stats slabs`,
+/// `stats internals`); unknown arguments are a parse error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatsSub {
+    /// Bare `stats`: the memcached-compatible general block.
+    All,
+    /// Per-op-class sampled latency percentiles.
+    Latency,
+    /// Per-size-class slab occupancy.
+    Slabs,
+    /// Lock-free subsystem internals (EBR, slab, open addressing).
+    Internals,
 }
 
 /// Parser outcome.
@@ -229,7 +242,16 @@ pub fn parse_into<'a>(buf: &'a [u8], key_scratch: &mut Vec<&'a [u8]>) -> Parsed<
             let noreply = tokens.next() == Some(b"noreply" as &[u8]);
             Parsed::Done(Command::Touch { key, exptime, noreply }, consumed_line)
         }
-        b"stats" => Parsed::Done(Command::Stats, consumed_line),
+        b"stats" => {
+            let sub = match tokens.next() {
+                None => StatsSub::All,
+                Some(b"latency") => StatsSub::Latency,
+                Some(b"slabs") => StatsSub::Slabs,
+                Some(b"internals") => StatsSub::Internals,
+                Some(_) => return Parsed::Error("unknown stats subcommand", consumed_line),
+            };
+            Parsed::Done(Command::Stats { sub }, consumed_line)
+        }
         b"flush_all" => {
             let noreply = tokens.any(|t| t == b"noreply");
             Parsed::Done(Command::FlushAll { noreply }, consumed_line)
@@ -308,50 +330,309 @@ pub fn store_reply(outcome: StoreOutcome) -> &'static [u8] {
     }
 }
 
+/// Server-plane facts the `stats` family reports alongside the cache
+/// snapshot. The serving layer fills this from its listener state; tests
+/// and offline tooling can pass `ServerInfo::default()`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerInfo {
+    /// Seconds since the server started accepting.
+    pub uptime_secs: u64,
+    /// Current wall-clock time (seconds since the Unix epoch).
+    pub time_secs: u64,
+    /// Serving threads (reactors or per-connection threads alive).
+    pub threads: u64,
+    /// Connections currently open.
+    pub curr_connections: u64,
+    /// Connections ever accepted.
+    pub total_connections: u64,
+}
+
+/// Append one `STAT <name> <value>\r\n` line, allocation-free.
+pub fn write_stat(out: &mut Vec<u8>, name: &str, v: u64) {
+    out.extend_from_slice(b"STAT ");
+    out.extend_from_slice(name.as_bytes());
+    out.push(b' ');
+    write_uint(out, v);
+    out.extend_from_slice(b"\r\n");
+}
+
+/// [`write_stat`] with a two-part name (`<prefix><suffix>`), so per-class
+/// stat names render without a format allocation.
+fn write_stat2(out: &mut Vec<u8>, prefix: &str, suffix: &str, v: u64) {
+    out.extend_from_slice(b"STAT ");
+    out.extend_from_slice(prefix.as_bytes());
+    out.extend_from_slice(suffix.as_bytes());
+    out.push(b' ');
+    write_uint(out, v);
+    out.extend_from_slice(b"\r\n");
+}
+
+/// Append one memcached-style per-slab-class line
+/// (`STAT <cls>:<name> <value>\r\n`), allocation-free.
+fn write_class_stat(out: &mut Vec<u8>, cls: u64, name: &str, v: u64) {
+    out.extend_from_slice(b"STAT ");
+    write_uint(out, cls);
+    out.push(b':');
+    out.extend_from_slice(name.as_bytes());
+    out.push(b' ');
+    write_uint(out, v);
+    out.extend_from_slice(b"\r\n");
+}
+
 /// Render `stats` output (Memcached stat names where they exist) from
 /// one coherent [`StatsSnapshot`] — single-engine or shard-merged, the
-/// wire format cannot tell the difference.
-pub fn write_stats(
-    out: &mut Vec<u8>,
-    engine: &str,
-    stats: &StatsSnapshot,
-    curr_connections: usize,
-) {
+/// wire format cannot tell the difference. Allocation-free.
+pub fn write_stats(out: &mut Vec<u8>, engine: &str, stats: &StatsSnapshot, info: &ServerInfo) {
     let m = &stats.metrics;
-    let mut s = String::with_capacity(512);
-    let _ = write!(
-        s,
-        "STAT engine {engine}\r\n\
-         STAT curr_connections {curr_connections}\r\n\
-         STAT curr_items {}\r\n\
-         STAT hash_buckets {}\r\n\
-         STAT bytes {}\r\n\
-         STAT limit_maxbytes {}\r\n\
-         STAT cmd_get {}\r\n\
-         STAT get_hits {}\r\n\
-         STAT get_misses {}\r\n\
-         STAT cmd_set {}\r\n\
-         STAT delete_hits {}\r\n\
-         STAT evictions {}\r\n\
-         STAT expired_unfetched {}\r\n\
-         STAT hash_expansions {}\r\n\
-         STAT oom_stalls {}\r\n\
-         END\r\n",
-        stats.items,
-        stats.buckets,
-        stats.mem_used,
-        stats.mem_limit,
-        m.gets,
-        m.hits,
-        m.misses,
-        m.sets,
-        m.deletes,
-        m.evictions,
-        m.expired,
-        m.expansions,
-        m.oom_stalls,
-    );
-    out.extend_from_slice(s.as_bytes());
+    out.extend_from_slice(b"STAT engine ");
+    out.extend_from_slice(engine.as_bytes());
+    out.extend_from_slice(b"\r\n");
+    write_stat(out, "uptime", info.uptime_secs);
+    write_stat(out, "time", info.time_secs);
+    write_stat(out, "threads", info.threads);
+    write_stat(out, "curr_connections", info.curr_connections);
+    write_stat(out, "total_connections", info.total_connections);
+    write_stat(out, "curr_items", stats.items as u64);
+    write_stat(out, "hash_buckets", stats.buckets as u64);
+    write_stat(out, "bytes", stats.mem_used as u64);
+    write_stat(out, "limit_maxbytes", stats.mem_limit as u64);
+    write_stat(out, "cmd_get", m.gets);
+    write_stat(out, "get_hits", m.hits);
+    write_stat(out, "get_misses", m.misses);
+    write_stat(out, "cmd_set", m.sets);
+    write_stat(out, "delete_hits", m.deletes);
+    write_stat(out, "evictions", m.evictions);
+    write_stat(out, "expired_unfetched", m.expired);
+    write_stat(out, "hash_expansions", m.expansions);
+    write_stat(out, "oom_stalls", m.oom_stalls);
+    out.extend_from_slice(b"END\r\n");
+}
+
+/// The percentiles the latency renderers report, as (suffix, p) pairs.
+const LATENCY_POINTS: [(&str, f64); 4] =
+    [("_p50_ns", 0.50), ("_p90_ns", 0.90), ("_p99_ns", 0.99), ("_p999_ns", 0.999)];
+
+/// Render `stats latency`: per-op-class sampled percentiles (nanoseconds)
+/// plus sample counts. Classes with no samples report zeros rather than
+/// disappearing, so scrapers see a stable schema.
+pub fn write_stats_latency(out: &mut Vec<u8>, latency: &LatencySnapshot) {
+    for class in OpClass::ALL {
+        let h = latency.class(class);
+        write_stat2(out, class.name(), "_ops_sampled", h.count);
+        for (suffix, p) in LATENCY_POINTS {
+            write_stat2(out, class.name(), suffix, h.percentile(p));
+        }
+        write_stat2(out, class.name(), "_mean_ns", h.mean() as u64);
+        write_stat2(out, class.name(), "_max_ns", h.max);
+    }
+    out.extend_from_slice(b"END\r\n");
+}
+
+/// Render `stats slabs` in memcached's `<cls>:<name>` shape. Classes that
+/// never carved a chunk are omitted (memcached behavior); class ids are
+/// 1-based positions in the size ladder.
+pub fn write_stats_slabs(out: &mut Vec<u8>, slabs: &[SlabClassSnapshot]) {
+    let mut active = 0u64;
+    for (i, c) in slabs.iter().enumerate() {
+        if c.total_chunks == 0 {
+            continue;
+        }
+        active += 1;
+        let cls = i as u64 + 1;
+        write_class_stat(out, cls, "chunk_size", c.chunk_size as u64);
+        write_class_stat(out, cls, "used_chunks", c.live_chunks as u64);
+        write_class_stat(out, cls, "free_chunks", c.cached_chunks as u64);
+        write_class_stat(out, cls, "total_chunks", c.total_chunks as u64);
+    }
+    write_stat(out, "active_slabs", active);
+    out.extend_from_slice(b"END\r\n");
+}
+
+/// Render `stats internals`: the lock-free subsystem gauges (EBR, slab
+/// magazines, open-addressing migration), plus the probe-length
+/// distribution (slot-distance units, not nanoseconds).
+pub fn write_stats_internals(out: &mut Vec<u8>, i: &InternalsSnapshot) {
+    write_stat(out, "ebr_advances", i.ebr_advances);
+    write_stat(out, "ebr_failed_advances", i.ebr_failed_advances);
+    write_stat(out, "ebr_deferred_items", i.ebr_deferred_items);
+    write_stat(out, "ebr_deferred_bytes", i.ebr_deferred_bytes);
+    write_stat(out, "ebr_reclaimed_items", i.ebr_reclaimed_items);
+    write_stat(out, "slab_magazine_hits", i.slab_magazine_hits);
+    write_stat(out, "slab_shared_refills", i.slab_shared_refills);
+    write_stat(out, "slab_flushes_honored", i.slab_flushes_honored);
+    write_stat(out, "oa_migrations", i.oa_migrations);
+    write_stat(out, "oa_displacements", i.oa_displacements);
+    write_stat(out, "oa_probe_samples", i.oa_probe.count);
+    write_stat(out, "oa_probe_p50", i.oa_probe.percentile(0.50));
+    write_stat(out, "oa_probe_p99", i.oa_probe.percentile(0.99));
+    write_stat(out, "oa_probe_max", i.oa_probe.max);
+    out.extend_from_slice(b"END\r\n");
+}
+
+/// Append one Prometheus sample:
+/// `fleec_<name>{engine="<engine>"[,<k>="<v>"]} <value>\n`.
+fn prom_sample(out: &mut Vec<u8>, name: &str, engine: &str, extra: Option<(&str, &str)>, v: u64) {
+    out.extend_from_slice(b"fleec_");
+    out.extend_from_slice(name.as_bytes());
+    out.extend_from_slice(b"{engine=\"");
+    out.extend_from_slice(engine.as_bytes());
+    out.push(b'"');
+    if let Some((k, val)) = extra {
+        out.push(b',');
+        out.extend_from_slice(k.as_bytes());
+        out.extend_from_slice(b"=\"");
+        out.extend_from_slice(val.as_bytes());
+        out.push(b'"');
+    }
+    out.extend_from_slice(b"} ");
+    write_uint(out, v);
+    out.push(b'\n');
+}
+
+/// Append a Prometheus `# TYPE` header.
+fn prom_type(out: &mut Vec<u8>, name: &str, kind: &str) {
+    out.extend_from_slice(b"# TYPE fleec_");
+    out.extend_from_slice(name.as_bytes());
+    out.push(b' ');
+    out.extend_from_slice(kind.as_bytes());
+    out.push(b'\n');
+}
+
+/// Render the whole observability surface in Prometheus text exposition
+/// format (the `/metrics` body). Every value is an integer — counters in
+/// events, gauges in items/bytes, latency quantiles in nanoseconds.
+pub fn write_prometheus(out: &mut Vec<u8>, engine: &str, stats: &StatsSnapshot, info: &ServerInfo) {
+    let m = &stats.metrics;
+    prom_type(out, "uptime_seconds", "gauge");
+    prom_sample(out, "uptime_seconds", engine, None, info.uptime_secs);
+    prom_type(out, "threads", "gauge");
+    prom_sample(out, "threads", engine, None, info.threads);
+    prom_type(out, "connections_current", "gauge");
+    prom_sample(out, "connections_current", engine, None, info.curr_connections);
+    prom_type(out, "connections_total", "counter");
+    prom_sample(out, "connections_total", engine, None, info.total_connections);
+
+    prom_type(out, "items_current", "gauge");
+    prom_sample(out, "items_current", engine, None, stats.items as u64);
+    prom_type(out, "bytes_used", "gauge");
+    prom_sample(out, "bytes_used", engine, None, stats.mem_used as u64);
+    prom_type(out, "bytes_limit", "gauge");
+    prom_sample(out, "bytes_limit", engine, None, stats.mem_limit as u64);
+
+    prom_type(out, "ops_total", "counter");
+    for (op, v) in [
+        ("get", m.gets),
+        ("get_hit", m.hits),
+        ("get_miss", m.misses),
+        ("set", m.sets),
+        ("delete", m.deletes),
+        ("eviction", m.evictions),
+        ("expired", m.expired),
+        ("hash_expansion", m.expansions),
+        ("oom_stall", m.oom_stalls),
+    ] {
+        prom_sample(out, "ops_total", engine, Some(("op", op)), v);
+    }
+
+    prom_type(out, "op_latency_ns", "gauge");
+    prom_type(out, "op_samples_total", "counter");
+    for class in OpClass::ALL {
+        let h = stats.latency.class(class);
+        prom_sample(out, "op_samples_total", engine, Some(("op", class.name())), h.count);
+        for (suffix, p) in LATENCY_POINTS {
+            // "_pNN_ns" → "pNN" for the quantile label.
+            let q = &suffix[1..suffix.len() - 3];
+            prom_sample2(out, "op_latency_ns", engine, ("op", class.name()), ("q", q), h.percentile(p));
+        }
+    }
+
+    let i = &stats.internals;
+    prom_type(out, "internal_events_total", "counter");
+    for (kind, v) in [
+        ("ebr_advance", i.ebr_advances),
+        ("ebr_failed_advance", i.ebr_failed_advances),
+        ("ebr_reclaimed_item", i.ebr_reclaimed_items),
+        ("slab_magazine_hit", i.slab_magazine_hits),
+        ("slab_shared_refill", i.slab_shared_refills),
+        ("slab_flush_honored", i.slab_flushes_honored),
+        ("oa_migration", i.oa_migrations),
+        ("oa_displacement", i.oa_displacements),
+    ] {
+        prom_sample(out, "internal_events_total", engine, Some(("kind", kind)), v);
+    }
+    prom_type(out, "ebr_deferred_items", "gauge");
+    prom_sample(out, "ebr_deferred_items", engine, None, i.ebr_deferred_items);
+    prom_type(out, "ebr_deferred_bytes", "gauge");
+    prom_sample(out, "ebr_deferred_bytes", engine, None, i.ebr_deferred_bytes);
+    prom_type(out, "oa_probe_len", "gauge");
+    for (q, p) in [("p50", 0.50), ("p99", 0.99)] {
+        prom_sample(out, "oa_probe_len", engine, Some(("q", q)), i.oa_probe.percentile(p));
+    }
+}
+
+/// Serving-plane (reactor/accept loop) gauges for `/metrics` — the
+/// engine-independent half of the exposition, snapshotted from
+/// `server::ServerObs`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerGauges {
+    /// Connections ever closed (any reason).
+    pub closed_connections: u64,
+    /// Poller wakeups across all reactors (0 under the thread model).
+    pub poller_wakeups: u64,
+    /// High-water mark of any single connection's pending reply bytes.
+    pub outbuf_high_water: u64,
+    /// Ops per flushed batch, sampled (count units).
+    pub batch_size_p50: u64,
+    pub batch_size_p99: u64,
+    /// Sampled whole-drain-call wall times.
+    pub drain_samples: u64,
+    pub drain_p50_ns: u64,
+    pub drain_p99_ns: u64,
+}
+
+/// Append the serving-plane families to a Prometheus exposition started
+/// by [`write_prometheus`].
+pub fn write_prometheus_server(out: &mut Vec<u8>, engine: &str, g: &ServerGauges) {
+    prom_type(out, "connections_closed_total", "counter");
+    prom_sample(out, "connections_closed_total", engine, None, g.closed_connections);
+    prom_type(out, "poller_wakeups_total", "counter");
+    prom_sample(out, "poller_wakeups_total", engine, None, g.poller_wakeups);
+    prom_type(out, "outbuf_high_water_bytes", "gauge");
+    prom_sample(out, "outbuf_high_water_bytes", engine, None, g.outbuf_high_water);
+    prom_type(out, "batch_size_ops", "gauge");
+    prom_sample(out, "batch_size_ops", engine, Some(("q", "p50")), g.batch_size_p50);
+    prom_sample(out, "batch_size_ops", engine, Some(("q", "p99")), g.batch_size_p99);
+    prom_type(out, "drain_samples_total", "counter");
+    prom_sample(out, "drain_samples_total", engine, None, g.drain_samples);
+    prom_type(out, "drain_latency_ns", "gauge");
+    prom_sample(out, "drain_latency_ns", engine, Some(("q", "p50")), g.drain_p50_ns);
+    prom_sample(out, "drain_latency_ns", engine, Some(("q", "p99")), g.drain_p99_ns);
+}
+
+/// [`prom_sample`] with two extra labels.
+fn prom_sample2(
+    out: &mut Vec<u8>,
+    name: &str,
+    engine: &str,
+    l1: (&str, &str),
+    l2: (&str, &str),
+    v: u64,
+) {
+    out.extend_from_slice(b"fleec_");
+    out.extend_from_slice(name.as_bytes());
+    out.extend_from_slice(b"{engine=\"");
+    out.extend_from_slice(engine.as_bytes());
+    out.push(b'"');
+    for (k, val) in [l1, l2] {
+        out.push(b',');
+        out.extend_from_slice(k.as_bytes());
+        out.extend_from_slice(b"=\"");
+        out.extend_from_slice(val.as_bytes());
+        out.push(b'"');
+    }
+    out.extend_from_slice(b"} ");
+    write_uint(out, v);
+    out.push(b'\n');
 }
 
 #[cfg(test)]
@@ -421,8 +702,28 @@ mod tests {
     }
 
     #[test]
+    fn parses_stats_subcommands() {
+        assert!(matches!(
+            parse(b"stats latency\r\n"),
+            Parsed::Done(Command::Stats { sub: StatsSub::Latency }, 15)
+        ));
+        assert!(matches!(
+            parse(b"stats slabs\r\n"),
+            Parsed::Done(Command::Stats { sub: StatsSub::Slabs }, _)
+        ));
+        assert!(matches!(
+            parse(b"stats internals\r\n"),
+            Parsed::Done(Command::Stats { sub: StatsSub::Internals }, _)
+        ));
+        assert!(matches!(parse(b"stats bogus\r\n"), Parsed::Error(..)));
+    }
+
+    #[test]
     fn parses_management_commands() {
-        assert!(matches!(parse(b"stats\r\n"), Parsed::Done(Command::Stats, 7)));
+        assert!(matches!(
+            parse(b"stats\r\n"),
+            Parsed::Done(Command::Stats { sub: StatsSub::All }, 7)
+        ));
         assert!(matches!(
             parse(b"flush_all\r\n"),
             Parsed::Done(Command::FlushAll { noreply: false }, _)
@@ -511,6 +812,150 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert_eq!(scratch.capacity(), cap);
+    }
+
+    #[test]
+    fn stat_writers_are_wire_shaped() {
+        // Every STAT-family renderer must emit `STAT <name> <value>\r\n`
+        // lines and close with `END\r\n`.
+        let check = |out: &[u8]| {
+            let text = std::str::from_utf8(out).unwrap();
+            assert!(text.ends_with("END\r\n"), "{text:?}");
+            for line in text.trim_end().split("\r\n") {
+                if line == "END" {
+                    continue;
+                }
+                let mut parts = line.split(' ');
+                assert_eq!(parts.next(), Some("STAT"), "{line:?}");
+                assert!(parts.next().is_some(), "{line:?}");
+                let v = parts.next().expect("value");
+                assert!(parts.next().is_none(), "{line:?}");
+                // Values here are all unsigned integers or the engine name
+                // (first line of the general block).
+                assert!(
+                    v.parse::<u64>().is_ok() || line.starts_with("STAT engine "),
+                    "{line:?}"
+                );
+            }
+        };
+        let stats = StatsSnapshot::default();
+        let mut out = Vec::new();
+        write_stats(&mut out, "fleec", &stats, &ServerInfo::default());
+        check(&out);
+        out.clear();
+        write_stats_latency(&mut out, &stats.latency);
+        check(&out);
+        let text = String::from_utf8(out.clone()).unwrap();
+        for class in ["get", "store", "rmw", "delete"] {
+            assert!(text.contains(&format!("STAT {class}_p50_ns 0\r\n")), "{text}");
+            assert!(text.contains(&format!("STAT {class}_ops_sampled 0\r\n")), "{text}");
+        }
+        out.clear();
+        write_stats_internals(&mut out, &stats.internals);
+        check(&out);
+        out.clear();
+        write_stats_slabs(
+            &mut out,
+            &[
+                SlabClassSnapshot { chunk_size: 64, live_chunks: 3, cached_chunks: 1, total_chunks: 4 },
+                SlabClassSnapshot { chunk_size: 128, ..SlabClassSnapshot::default() },
+            ],
+        );
+        let text = String::from_utf8(out.clone()).unwrap();
+        assert!(text.contains("STAT 1:chunk_size 64\r\n"), "{text}");
+        assert!(text.contains("STAT 1:used_chunks 3\r\n"), "{text}");
+        assert!(!text.contains("2:chunk_size"), "empty class must be omitted: {text}");
+        assert!(text.contains("STAT active_slabs 1\r\n"), "{text}");
+        assert!(text.ends_with("END\r\n"), "{text}");
+    }
+
+    #[test]
+    fn general_stats_report_server_info() {
+        let mut out = Vec::new();
+        let info = ServerInfo {
+            uptime_secs: 12,
+            time_secs: 1_700_000_000,
+            threads: 4,
+            curr_connections: 2,
+            total_connections: 9,
+        };
+        write_stats(&mut out, "fleec", &StatsSnapshot::default(), &info);
+        let text = String::from_utf8(out).unwrap();
+        for expect in [
+            "STAT uptime 12\r\n",
+            "STAT time 1700000000\r\n",
+            "STAT threads 4\r\n",
+            "STAT curr_connections 2\r\n",
+            "STAT total_connections 9\r\n",
+        ] {
+            assert!(text.contains(expect), "missing {expect:?} in {text}");
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_is_line_shaped() {
+        let mut stats = StatsSnapshot::default();
+        stats.metrics.gets = 10;
+        stats.metrics.hits = 7;
+        stats.items = 3;
+        let info = ServerInfo { uptime_secs: 5, total_connections: 2, ..ServerInfo::default() };
+        let mut out = Vec::new();
+        write_prometheus(&mut out, "fleec", &stats, &info);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.ends_with('\n'));
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(line.starts_with("# TYPE fleec_"), "{line:?}");
+                continue;
+            }
+            // `name{labels} value` with an integer value.
+            let (head, value) = line.rsplit_once(' ').expect("sample line");
+            assert!(head.starts_with("fleec_"), "{line:?}");
+            assert!(head.contains("engine=\"fleec\""), "{line:?}");
+            assert!(head.ends_with('}'), "{line:?}");
+            assert!(value.parse::<u64>().is_ok(), "{line:?}");
+        }
+        assert!(text.contains("fleec_ops_total{engine=\"fleec\",op=\"get\"} 10\n"), "{text}");
+        assert!(text.contains("fleec_uptime_seconds{engine=\"fleec\"} 5\n"), "{text}");
+        assert!(
+            text.contains("fleec_op_latency_ns{engine=\"fleec\",op=\"get\",q=\"p50\"} 0\n"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn prometheus_server_families_are_line_shaped() {
+        let g = ServerGauges {
+            closed_connections: 4,
+            poller_wakeups: 100,
+            outbuf_high_water: 2048,
+            batch_size_p50: 8,
+            batch_size_p99: 64,
+            drain_samples: 12,
+            drain_p50_ns: 900,
+            drain_p99_ns: 4500,
+        };
+        let mut out = Vec::new();
+        write_prometheus_server(&mut out, "fleec", &g);
+        let text = String::from_utf8(out).unwrap();
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(line.starts_with("# TYPE fleec_"), "{line:?}");
+                continue;
+            }
+            let (head, value) = line.rsplit_once(' ').expect("sample line");
+            assert!(head.starts_with("fleec_"), "{line:?}");
+            assert!(head.contains("engine=\"fleec\""), "{line:?}");
+            assert!(value.parse::<u64>().is_ok(), "{line:?}");
+        }
+        assert!(
+            text.contains("fleec_connections_closed_total{engine=\"fleec\"} 4\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("fleec_drain_latency_ns{engine=\"fleec\",q=\"p99\"} 4500\n"),
+            "{text}"
+        );
     }
 
     #[test]

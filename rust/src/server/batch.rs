@@ -56,7 +56,8 @@
 //! into more than [`MAX_GET_KEYS`] ops).
 
 use crate::cache::{BatchSink, Cache, Op, OpResult, StoreOutcome};
-use crate::proto::{self, Command, Parsed, StoreKind};
+use crate::proto::{self, Command, Parsed, StatsSub, StoreKind};
+use crate::server::ServerObs;
 
 /// The `version` reply, shared by both renderers (the owned oracle and
 /// the streaming emitter must never drift apart byte-wise).
@@ -177,14 +178,26 @@ fn recycle_keys<'from, 'to>(mut v: Vec<&'from [u8]>) -> Vec<&'to [u8]> {
     unsafe { Vec::from_raw_parts(ptr as *mut &'to [u8], 0, cap) }
 }
 
-/// Render the `stats` barrier's reply. Goes through [`Cache::stats`], the
+/// Render a `stats` barrier's reply. Goes through [`Cache::stats`], the
 /// one coherent snapshot an engine can assemble however it likes — a
 /// sharded router merges all its shards here (counters and `curr_items`
-/// sum, per-shard `mem_limit`s add back up to the configured total), so
-/// `limit_maxbytes` over a sharded server stays truthful.
-pub fn write_stats_reply(cache: &dyn Cache, curr_connections: usize, out: &mut Vec<u8>) {
+/// sum, per-shard `mem_limit`s add back up to the configured total, and
+/// the latency/internals observability extras fold bucket-wise), so
+/// `limit_maxbytes` over a sharded server stays truthful and every
+/// subcommand renders from one coherent snapshot.
+pub fn write_stats_reply(
+    cache: &dyn Cache,
+    sub: StatsSub,
+    info: &proto::ServerInfo,
+    out: &mut Vec<u8>,
+) {
     let stats = cache.stats();
-    proto::write_stats(out, cache.engine_name(), &stats, curr_connections);
+    match sub {
+        StatsSub::All => proto::write_stats(out, cache.engine_name(), &stats, info),
+        StatsSub::Latency => proto::write_stats_latency(out, &stats.latency),
+        StatsSub::Slabs => proto::write_stats_slabs(out, &stats.slabs),
+        StatsSub::Internals => proto::write_stats_internals(out, &stats.internals),
+    }
 }
 
 /// Whether `cmd` must not share a batch with the ops queued before it
@@ -193,7 +206,7 @@ pub fn write_stats_reply(cache: &dyn Cache, curr_connections: usize, out: &mut V
 pub fn is_barrier(cmd: &Command<'_>) -> bool {
     matches!(
         cmd,
-        Command::Stats | Command::FlushAll { .. } | Command::Quit
+        Command::Stats { .. } | Command::FlushAll { .. } | Command::Quit
     )
 }
 
@@ -293,7 +306,7 @@ pub fn plan<'a>(
         }
         Command::Version => actions.push(Action::Version),
         Command::Verbosity { noreply } => actions.push(Action::Ok { noreply }),
-        Command::Stats | Command::FlushAll { .. } | Command::Quit => {
+        Command::Stats { .. } | Command::FlushAll { .. } | Command::Quit => {
             unreachable!("barrier commands are handled by the caller")
         }
     }
@@ -734,6 +747,12 @@ pub struct Drained {
 /// inline. Both server front-ends call this in a loop: the thread model
 /// with a blocking flush between calls, the reactor from its readiness
 /// state machine.
+///
+/// `obs` is the serving plane's observability sink (`None` in tests and
+/// offline tools): it supplies the `stats` reply's server facts and, on
+/// sampled calls, receives this drain's wall time and per-flush batch
+/// sizes. The non-sampled steady state touches only `obs.sample()`'s one
+/// relaxed tick.
 pub fn drain(
     cache: &dyn Cache,
     curr_connections: usize,
@@ -741,7 +760,13 @@ pub fn drain(
     out: &mut Vec<u8>,
     arena: &mut BatchArena,
     out_budget: usize,
+    obs: Option<&ServerObs>,
 ) -> Drained {
+    let t0 = match obs {
+        Some(o) if o.sample() => Some(std::time::Instant::now()),
+        _ => None,
+    };
+    let sampled = t0.is_some();
     let mut consumed = 0;
     let (mut ops, mut actions, mut keys) = arena.take();
     let stop = 'drain: loop {
@@ -754,9 +779,19 @@ pub fn drain(
                 Parsed::Done(cmd, n) => {
                     consumed += n;
                     if is_barrier(&cmd) {
+                        note_batch(obs, sampled, ops.len());
                         flush_batch(cache, &mut ops, &mut actions, arena, out);
                         match cmd {
-                            Command::Stats => write_stats_reply(cache, curr_connections, out),
+                            Command::Stats { sub } => {
+                                let info = match obs {
+                                    Some(o) => o.info(curr_connections),
+                                    None => proto::ServerInfo {
+                                        curr_connections: curr_connections as u64,
+                                        ..proto::ServerInfo::default()
+                                    },
+                                };
+                                write_stats_reply(cache, sub, &info, out);
+                            }
                             Command::FlushAll { noreply } => {
                                 cache.flush_all();
                                 if !noreply {
@@ -781,15 +816,31 @@ pub fn drain(
                     }
                 }
                 Parsed::Incomplete => {
+                    note_batch(obs, sampled, ops.len());
                     flush_batch(cache, &mut ops, &mut actions, arena, out);
                     break 'drain DrainStop::NeedMoreInput;
                 }
             }
         }
+        note_batch(obs, sampled, ops.len());
         flush_batch(cache, &mut ops, &mut actions, arena, out);
     };
     arena.put(ops, actions, keys);
+    if let (Some(o), Some(t0)) = (obs, t0) {
+        o.drain_ns.record(t0.elapsed().as_nanos() as u64);
+    }
     Drained { consumed, stop }
+}
+
+/// On a sampled drain, record one flushed batch's op count (empty
+/// flushes — barrier with nothing pending — are not samples).
+#[inline]
+fn note_batch(obs: Option<&ServerObs>, sampled: bool, n: usize) {
+    if sampled && n > 0 {
+        if let Some(o) = obs {
+            o.batch_sizes.record(n as u64);
+        }
+    }
 }
 
 /// Execute the pending batch, streaming its replies into `out` through
@@ -843,6 +894,7 @@ mod tests {
                 &mut out,
                 &mut arena,
                 usize::MAX,
+                None,
             );
             consumed += d.consumed;
             match d.stop {
@@ -906,7 +958,7 @@ mod tests {
         let mut arena = BatchArena::default();
         let mut out = Vec::new();
         let wire = b"version\r\nquit\r\nget never-parsed\r\n";
-        let d = drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX);
+        let d = drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX, None);
         assert_eq!(d.stop, DrainStop::Quit);
         assert_eq!(out, b"VERSION fleec-0.1.0\r\n");
         // Everything through the quit line is consumed; the rest is not.
@@ -974,7 +1026,7 @@ mod tests {
         // Multi-key get included so the parse key scratch is exercised.
         let wire = b"set k 0 0 1\r\nv\r\nget k k k\r\nget k\r\n";
         let mut out = Vec::new();
-        drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX);
+        drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX, None);
         let (cap_ops, cap_actions, cap_keys, cap_pending) = (
             arena.ops.capacity(),
             arena.actions.capacity(),
@@ -987,7 +1039,7 @@ mod tests {
         // A same-shape drain must not grow (or shrink) any arena.
         for _ in 0..8 {
             out.clear();
-            drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX);
+            drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX, None);
             assert_eq!(arena.ops.capacity(), cap_ops);
             assert_eq!(arena.actions.capacity(), cap_actions);
             assert_eq!(arena.keys.capacity(), cap_keys, "key scratch recycled");
@@ -1038,6 +1090,7 @@ mod tests {
                 &mut out,
                 &mut arena,
                 usize::MAX,
+                None,
             );
             consumed += d.consumed;
             if d.stop == DrainStop::NeedMoreInput {
@@ -1094,7 +1147,7 @@ mod tests {
 
     #[test]
     fn barrier_classification() {
-        assert!(is_barrier(&Command::Stats));
+        assert!(is_barrier(&Command::Stats { sub: StatsSub::All }));
         assert!(is_barrier(&Command::FlushAll { noreply: false }));
         assert!(is_barrier(&Command::Quit));
         assert!(!is_barrier(&Command::Version));

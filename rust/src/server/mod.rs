@@ -27,11 +27,122 @@ mod reactor;
 
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use crate::cache::Cache;
+use crate::metrics::{LatencyHistogram, ShardedCounter};
+use crate::proto;
+
+/// Serving-plane observability state, shared by every front-end thread.
+/// All counters are stats-grade striped/relaxed atomics — recording
+/// takes no lock and the hot path touches at most one relaxed tick per
+/// [`batch::drain`] call (see `rust/docs/observability.md`).
+pub struct ServerObs {
+    /// When the server started accepting (uptime anchor).
+    start: Instant,
+    /// Server I/O threads: reactor count, or the accept loop (1) under
+    /// the thread model. Set once at startup.
+    threads: AtomicU64,
+    /// Connections ever accepted.
+    pub total_connections: ShardedCounter,
+    /// Connections closed (any reason).
+    pub closed_connections: ShardedCounter,
+    /// Reactor poller wakeups (0 under the thread model).
+    pub poller_wakeups: ShardedCounter,
+    /// High-water mark of any single connection's pending reply bytes.
+    outbuf_high_water: AtomicU64,
+    /// Ops per flushed batch (count units, not nanoseconds), recorded on
+    /// sampled drains.
+    pub batch_sizes: LatencyHistogram,
+    /// Whole-drain-call wall time, recorded on sampled drains.
+    pub drain_ns: LatencyHistogram,
+    /// 1-in-N drain sampling stride; 0 disables.
+    sample_every: u32,
+    /// Private sampling tick (see [`ServerObs::sample`]).
+    tick: AtomicU64,
+}
+
+impl ServerObs {
+    /// Build with the given drain-sampling stride (0 disables sampling;
+    /// the `stats` server facts still work).
+    pub fn new(sample_every: u32) -> ServerObs {
+        ServerObs {
+            start: Instant::now(),
+            threads: AtomicU64::new(0),
+            total_connections: ShardedCounter::new(),
+            closed_connections: ShardedCounter::new(),
+            poller_wakeups: ShardedCounter::new(),
+            outbuf_high_water: AtomicU64::new(0),
+            batch_sizes: LatencyHistogram::new(),
+            drain_ns: LatencyHistogram::new(),
+            sample_every,
+            tick: AtomicU64::new(0),
+        }
+    }
+
+    /// Record the serving-thread count (startup, once).
+    fn set_threads(&self, n: usize) {
+        // ord: relaxed-ok — written once before serving starts; readers
+        // are stats renderers.
+        self.threads.store(n as u64, Ordering::Relaxed);
+    }
+
+    /// Sampled-clock tick: true on 1-in-`sample_every` calls (the first
+    /// call always samples). One relaxed `fetch_add` — the entire cost a
+    /// non-sampled drain pays.
+    pub fn sample(&self) -> bool {
+        if self.sample_every == 0 {
+            return false;
+        }
+        // ord: relaxed-ok — private sampling tick; counts drain calls
+        // only, orders nothing, and an occasional torn stride is
+        // harmless.
+        let t = self.tick.fetch_add(1, Ordering::Relaxed);
+        t % u64::from(self.sample_every) == 0
+    }
+
+    /// Fold one connection's pending reply bytes into the high-water
+    /// mark.
+    pub fn note_outbuf(&self, pending: usize) {
+        // ord: relaxed-ok — monotonic stats-grade high-water mark; no
+        // data is ordered against it.
+        self.outbuf_high_water.fetch_max(pending as u64, Ordering::Relaxed);
+    }
+
+    /// Assemble the `stats` reply's server facts.
+    pub fn info(&self, curr_connections: usize) -> proto::ServerInfo {
+        proto::ServerInfo {
+            uptime_secs: self.start.elapsed().as_secs(),
+            time_secs: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+            // ord: relaxed-ok — startup-written thread count.
+            threads: self.threads.load(Ordering::Relaxed),
+            curr_connections: curr_connections as u64,
+            total_connections: self.total_connections.get(),
+        }
+    }
+
+    /// Snapshot the serving-plane gauges for `/metrics`.
+    pub fn gauges(&self) -> proto::ServerGauges {
+        let batch = self.batch_sizes.snapshot();
+        let drain = self.drain_ns.snapshot();
+        proto::ServerGauges {
+            closed_connections: self.closed_connections.get(),
+            poller_wakeups: self.poller_wakeups.get(),
+            // ord: relaxed-ok — stats-grade high-water mark.
+            outbuf_high_water: self.outbuf_high_water.load(Ordering::Relaxed),
+            batch_size_p50: batch.percentile(0.50),
+            batch_size_p99: batch.percentile(0.99),
+            drain_samples: drain.count,
+            drain_p50_ns: drain.percentile(0.50),
+            drain_p99_ns: drain.percentile(0.99),
+        }
+    }
+}
 
 /// Which connection-handling front-end a server runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,6 +167,12 @@ pub struct ServerConfig {
     /// drains. Bounds server memory against slow/non-reading clients;
     /// see [`batch::drain`] for the precise bound.
     pub max_outbuf: usize,
+    /// 1-in-N sampling stride for the serving-plane batch/drain
+    /// histograms (0 disables). Mirrors `CacheConfig::latency_sample`.
+    pub drain_sample: u32,
+    /// Bind a Prometheus-style text exposition endpoint here (`GET
+    /// /metrics`); `None` (default) serves no HTTP.
+    pub metrics_addr: Option<SocketAddr>,
 }
 
 impl Default for ServerConfig {
@@ -65,6 +182,8 @@ impl Default for ServerConfig {
             nodelay: true,
             model: ServerModel::Thread,
             max_outbuf: 256 * 1024,
+            drain_sample: 64,
+            metrics_addr: None,
         }
     }
 }
@@ -84,10 +203,12 @@ pub fn resolve_io_threads(io_threads: usize) -> usize {
 /// the accept/reactor loops and joins every server thread.
 pub struct Server {
     addr: SocketAddr,
+    metrics_addr: Option<SocketAddr>,
     stop: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
     curr_conns: Arc<AtomicUsize>,
     buffered_out: Arc<AtomicUsize>,
+    obs: Arc<ServerObs>,
 }
 
 impl Server {
@@ -99,30 +220,68 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let curr_conns = Arc::new(AtomicUsize::new(0));
         let buffered_out = Arc::new(AtomicUsize::new(0));
-        let threads = match config.model {
+        let obs = Arc::new(ServerObs::new(config.drain_sample));
+        obs.set_threads(match config.model {
+            ServerModel::Thread => 1,
+            ServerModel::Reactor { io_threads } => resolve_io_threads(io_threads),
+        });
+        let mut threads = match config.model {
             ServerModel::Thread => vec![spawn_thread_model(
                 listener,
-                cache,
+                Arc::clone(&cache),
                 &config,
                 &stop,
                 &curr_conns,
+                &obs,
             )?],
-            ServerModel::Reactor { io_threads } => {
-                spawn_reactors(listener, cache, &config, io_threads, &stop, &curr_conns, &buffered_out)?
-            }
+            ServerModel::Reactor { io_threads } => spawn_reactors(
+                listener,
+                Arc::clone(&cache),
+                &config,
+                io_threads,
+                &stop,
+                &curr_conns,
+                &buffered_out,
+                &obs,
+            )?,
         };
+        let mut metrics_addr = None;
+        if let Some(want) = config.metrics_addr {
+            let ml = TcpListener::bind(want)?;
+            metrics_addr = Some(ml.local_addr()?);
+            threads.push(spawn_metrics_listener(
+                ml,
+                cache,
+                Arc::clone(&obs),
+                Arc::clone(&stop),
+                Arc::clone(&curr_conns),
+            )?);
+        }
         Ok(Server {
             addr,
+            metrics_addr,
             stop,
             threads,
             curr_conns,
             buffered_out,
+            obs,
         })
     }
 
     /// The bound address (useful with port 0).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The bound `/metrics` address, when the endpoint is enabled
+    /// (useful with port 0).
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
+    }
+
+    /// Serving-plane observability state (tests and embedders).
+    pub fn obs(&self) -> &ServerObs {
+        &self.obs
     }
 
     /// Number of currently-open connections.
@@ -158,6 +317,7 @@ impl Drop for Server {
 /// Spawn the reactor fleet: each thread gets a clone of the (shared,
 /// non-blocking) listener and accepts into its own poller.
 #[cfg(unix)]
+#[allow(clippy::too_many_arguments)]
 fn spawn_reactors(
     listener: TcpListener,
     cache: Arc<dyn Cache>,
@@ -166,6 +326,7 @@ fn spawn_reactors(
     stop: &Arc<AtomicBool>,
     curr_conns: &Arc<AtomicUsize>,
     buffered_out: &Arc<AtomicUsize>,
+    obs: &Arc<ServerObs>,
 ) -> std::io::Result<Vec<std::thread::JoinHandle<()>>> {
     let n = resolve_io_threads(io_threads);
     let mut threads = Vec::with_capacity(n);
@@ -180,6 +341,7 @@ fn spawn_reactors(
             buffered_out: Arc::clone(buffered_out),
             max_outbuf: config.max_outbuf,
             nodelay: config.nodelay,
+            obs: Arc::clone(obs),
         };
         threads.push(
             std::thread::Builder::new()
@@ -194,6 +356,7 @@ fn spawn_reactors(
 
 /// Reactor model on a platform without a poller backend.
 #[cfg(not(unix))]
+#[allow(clippy::too_many_arguments)]
 fn spawn_reactors(
     _listener: TcpListener,
     _cache: Arc<dyn Cache>,
@@ -202,6 +365,7 @@ fn spawn_reactors(
     _stop: &Arc<AtomicBool>,
     _curr_conns: &Arc<AtomicUsize>,
     _buffered_out: &Arc<AtomicUsize>,
+    _obs: &Arc<ServerObs>,
 ) -> std::io::Result<Vec<std::thread::JoinHandle<()>>> {
     Err(std::io::Error::new(
         std::io::ErrorKind::Unsupported,
@@ -258,9 +422,11 @@ fn spawn_thread_model(
     config: &ServerConfig,
     stop: &Arc<AtomicBool>,
     curr_conns: &Arc<AtomicUsize>,
+    obs: &Arc<ServerObs>,
 ) -> std::io::Result<std::thread::JoinHandle<()>> {
     let accept_stop = Arc::clone(stop);
     let accept_conns = Arc::clone(curr_conns);
+    let accept_obs = Arc::clone(obs);
     let nodelay = config.nodelay;
     let max_outbuf = config.max_outbuf;
     std::thread::Builder::new()
@@ -276,6 +442,8 @@ fn spawn_thread_model(
                         let cache = Arc::clone(&cache);
                         let stop = Arc::clone(&accept_stop);
                         let active = Arc::clone(&accept_conns);
+                        let obs = Arc::clone(&accept_obs);
+                        obs.total_connections.inc();
                         // ord: AcqRel connection gauge — increments and
                         // decrements form one modification order; Acquire
                         // counterpart: curr_conns() observers.
@@ -289,7 +457,9 @@ fn spawn_thread_model(
                                     stop,
                                     Arc::clone(&active),
                                     max_outbuf,
+                                    Arc::clone(&obs),
                                 );
+                                obs.closed_connections.inc();
                                 // ord: AcqRel gauge decrement; pairs with
                                 // the Acquire curr_conns() observers.
                                 active.fetch_sub(1, Ordering::AcqRel);
@@ -303,6 +473,7 @@ fn spawn_thread_model(
                             // serving. This is exactly the load point the
                             // reactor model exists for.
                             Err(_) => {
+                                accept_obs.closed_connections.inc();
                                 // ord: AcqRel gauge decrement; pairs with
                                 // the Acquire curr_conns() observers.
                                 accept_conns.fetch_sub(1, Ordering::AcqRel);
@@ -340,6 +511,7 @@ fn handle_connection(
     stop: Arc<AtomicBool>,
     curr_conns: Arc<AtomicUsize>,
     max_outbuf: usize,
+    obs: Arc<ServerObs>,
 ) -> std::io::Result<()> {
     use std::io::Write;
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
@@ -362,8 +534,10 @@ fn handle_connection(
                 &mut outbuf,
                 &mut arena,
                 max_outbuf,
+                Some(&obs),
             );
             pos += d.consumed;
+            obs.note_outbuf(outbuf.len());
             if !outbuf.is_empty() {
                 stream.write_all(&outbuf)?;
                 outbuf.clear();
@@ -391,6 +565,97 @@ fn handle_connection(
             Err(e) => return Err(e),
         }
     }
+}
+
+/// Spawn the optional Prometheus scrape listener. Scrapes are rare,
+/// serial, and fully off the cache hot path; each request renders a
+/// fresh exposition from the engine and serving-plane snapshots.
+fn spawn_metrics_listener(
+    listener: TcpListener,
+    cache: Arc<dyn Cache>,
+    obs: Arc<ServerObs>,
+    stop: Arc<AtomicBool>,
+    curr_conns: Arc<AtomicUsize>,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    listener.set_nonblocking(true)?;
+    std::thread::Builder::new()
+        .name("fleec-metrics".into())
+        .spawn(move || {
+            let mut waiter = AcceptWaiter::new(&listener);
+            while !stop.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let _ = serve_metrics_once(
+                            stream,
+                            cache.as_ref(),
+                            &obs,
+                            curr_conns.load(Ordering::Acquire),
+                        );
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => waiter.wait(),
+                    // Same transient-failure policy as the accept loops.
+                    Err(_) => std::thread::sleep(Duration::from_millis(50)),
+                }
+            }
+        })
+}
+
+/// Serve one HTTP GET on an accepted scrape connection. Handwritten
+/// minimal HTTP/1.1: the offline crate set has no HTTP stack and a
+/// text-exposition endpoint needs none.
+fn serve_metrics_once(
+    mut stream: TcpStream,
+    cache: &dyn Cache,
+    obs: &ServerObs,
+    curr_connections: usize,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let _ = stream.set_nodelay(true);
+    let mut req: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    // Read up to the header terminator; request bodies are not accepted.
+    while !req.windows(4).any(|w| w == b"\r\n\r\n") {
+        if req.len() > 8 * 1024 {
+            return write_http(&mut stream, "431 Request Header Fields Too Large", b"");
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(()), // peer gave up mid-request
+            Ok(n) => req.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let line_end = req
+        .windows(2)
+        .position(|w| w == b"\r\n")
+        .unwrap_or(req.len());
+    let mut parts = req[..line_end].split(|&b| b == b' ');
+    let method = parts.next().unwrap_or(b"");
+    let path = parts.next().unwrap_or(b"");
+    if method != b"GET" {
+        return write_http(&mut stream, "405 Method Not Allowed", b"");
+    }
+    if path != b"/metrics" {
+        return write_http(&mut stream, "404 Not Found", b"");
+    }
+    let stats = cache.stats();
+    let info = obs.info(curr_connections);
+    let mut body = Vec::with_capacity(4096);
+    proto::write_prometheus(&mut body, cache.engine_name(), &stats, &info);
+    proto::write_prometheus_server(&mut body, cache.engine_name(), &obs.gauges());
+    write_http(&mut stream, "200 OK", &body)
+}
+
+/// Write a complete HTTP/1.1 response and finish the exchange.
+fn write_http(stream: &mut TcpStream, status: &str, body: &[u8]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut msg = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    msg.extend_from_slice(body);
+    stream.write_all(&msg)
 }
 
 #[cfg(test)]

@@ -69,6 +69,8 @@ pub(super) struct ReactorShared {
     /// Per-connection pending-reply cap before reading stops.
     pub max_outbuf: usize,
     pub nodelay: bool,
+    /// Serving-plane observability (counters, sampled histograms).
+    pub obs: Arc<super::ServerObs>,
 }
 
 /// Run one reactor until the stop flag trips (or the poller itself
@@ -86,6 +88,7 @@ pub(super) fn run_reactor(listener: TcpListener, shared: ReactorShared) -> io::R
         if poller.wait(&mut events, Some(WAIT)).is_err() {
             break;
         }
+        shared.obs.poller_wakeups.inc();
         for i in 0..events.len() {
             let ev = events[i];
             if ev.token == LISTENER_TOKEN {
@@ -111,6 +114,7 @@ pub(super) fn run_reactor(listener: TcpListener, shared: ReactorShared) -> io::R
                 let conn = slot.take().expect("conn checked above");
                 let _ = poller.deregister(conn.stream.as_raw_fd());
                 free.push(ev.token);
+                shared.obs.closed_connections.inc();
                 // ord: AcqRel connection gauge; Acquire counterpart:
                 // Server::curr_conns observers.
                 shared.curr_conns.fetch_sub(1, Ordering::AcqRel);
@@ -121,6 +125,7 @@ pub(super) fn run_reactor(listener: TcpListener, shared: ReactorShared) -> io::R
     // Account the connections this reactor takes down with it.
     for conn in conns.iter().flatten() {
         adjust_gauge(&shared.buffered_out, conn.out_pending(), 0);
+        shared.obs.closed_connections.inc();
         // ord: AcqRel connection gauge; Acquire counterpart:
         // Server::curr_conns observers.
         shared.curr_conns.fetch_sub(1, Ordering::AcqRel);
@@ -157,6 +162,7 @@ fn accept_ready(
                     continue;
                 }
                 conns[token] = Some(conn);
+                shared.obs.total_connections.inc();
                 // ord: AcqRel connection gauge; Acquire counterpart:
                 // Server::curr_conns observers.
                 shared.curr_conns.fetch_add(1, Ordering::AcqRel);
@@ -306,8 +312,10 @@ impl Conn {
                 &mut self.outbuf,
                 &mut self.arena,
                 budget,
+                Some(shared.obs.as_ref()),
             );
             self.pos += d.consumed;
+            shared.obs.note_outbuf(self.out_pending());
             match d.stop {
                 DrainStop::Quit => self.closing = true,
                 DrainStop::NeedMoreInput => self.need_input = true,

@@ -175,6 +175,7 @@ impl LocalMags {
         if e != self.seen_flush.get() {
             self.seen_flush.set(e);
             self.flush_all(slab);
+            slab.flushes_honored.inc();
         }
     }
 

@@ -50,6 +50,8 @@ use std::alloc::{alloc, dealloc, Layout};
 use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
+use crate::metrics::ShardedCounter;
+
 /// Slab tuning; defaults mirror Memcached's.
 #[derive(Debug, Clone)]
 pub struct SlabConfig {
@@ -112,6 +114,16 @@ pub struct Slab {
     /// threads compare it against their last-seen value on every magazine
     /// op and flush their parked chunks when it moved.
     flush_epoch: AtomicU32,
+    /// Observability: allocations served straight from the calling
+    /// thread's magazine (the zero-shared-CAS fast path). Stats-grade
+    /// striped relaxed counter.
+    magazine_hits: ShardedCounter,
+    /// Observability: allocations that fell through to the shared
+    /// structures (magazine refill or slot-less direct alloc).
+    shared_refills: ShardedCounter,
+    /// Observability: flush-request epochs honored by registered threads
+    /// (each count is one thread publishing its parked chunks).
+    flushes_honored: ShardedCounter,
     /// Own-`Arc` handle for magazine registrations (see module docs).
     self_weak: Weak<Slab>,
 }
@@ -150,6 +162,9 @@ impl Slab {
             pages: Mutex::new(Vec::new()),
             depot,
             flush_epoch: AtomicU32::new(0),
+            magazine_hits: ShardedCounter::new(),
+            shared_refills: ShardedCounter::new(),
+            flushes_honored: ShardedCounter::new(),
             self_weak: self_weak.clone(),
         })
     }
@@ -191,10 +206,12 @@ impl Slab {
         if let Some(local) = magazine::local(self) {
             if local.active() {
                 if let Some(ptr) = local.pop(self, class) {
+                    self.magazine_hits.inc();
                     return Some((ptr, class));
                 }
                 loop {
                     if let Some(ptr) = local.refill_and_pop(self, class) {
+                        self.shared_refills.inc();
                         return Some((ptr, class));
                     }
                     // Shared structures empty: try to claim a fresh page.
@@ -208,6 +225,7 @@ impl Slab {
         // No magazine (slot table full / thread teardown): shared path.
         loop {
             if let Some(ptr) = sc.try_alloc() {
+                self.shared_refills.inc();
                 return Some((ptr, class));
             }
             if !self.grow_class(sc) {
@@ -364,6 +382,21 @@ impl Slab {
                 s
             })
             .collect()
+    }
+
+    /// Allocations served straight from a thread magazine (stats).
+    pub fn magazine_hits(&self) -> u64 {
+        self.magazine_hits.get()
+    }
+
+    /// Allocations that went through the shared structures (stats).
+    pub fn shared_refills(&self) -> u64 {
+        self.shared_refills.get()
+    }
+
+    /// Flush-request epochs honored by registered threads (stats).
+    pub fn flushes_honored(&self) -> u64 {
+        self.flushes_honored.get()
     }
 
     /// Shared-structure transfer count for the class serving `size`

@@ -1,0 +1,92 @@
+//! Acceptance for the observability plane: drive a warm wire workload
+//! through `batch::drain` with sampling turned all the way up, then
+//! assert the `stats` subcommands report live numbers — per-op latency
+//! percentiles, EBR reclamation, slab magazine activity and (for
+//! oaflash) probe-length samples — for both lock-free engines, flat and
+//! behind the 4-shard router.
+
+use fleec::cache::{build_sharded, CacheConfig};
+use fleec::server::batch::{drain, BatchArena};
+
+/// Run a wire through `drain` to completion and return the reply bytes.
+fn pump(cache: &dyn fleec::cache::Cache, wire: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut arena = BatchArena::default();
+    let mut consumed = 0;
+    loop {
+        let d = drain(cache, 0, &wire[consumed..], &mut out, &mut arena, usize::MAX, None);
+        consumed += d.consumed;
+        match d.stop {
+            fleec::server::batch::DrainStop::Budget => continue,
+            _ => break,
+        }
+    }
+    assert_eq!(consumed, wire.len(), "input left unconsumed");
+    out
+}
+
+/// Extract `STAT <name> <value>` from a stats reply.
+fn stat(reply: &[u8], name: &str) -> u64 {
+    let text = std::str::from_utf8(reply).unwrap();
+    text.lines()
+        .filter_map(|l| l.strip_prefix("STAT "))
+        .filter_map(|l| l.split_once(' '))
+        .find(|(k, _)| *k == name)
+        .map(|(_, v)| v.parse().unwrap())
+        .unwrap_or_else(|| panic!("stat {name} missing from:\n{text}"))
+}
+
+#[test]
+fn stats_subcommands_report_live_numbers() {
+    for engine in ["fleec", "oaflash"] {
+        for shards in [1usize, 4] {
+            // Memory budget far below the working set, so the set storm
+            // must evict — which defers items to EBR and churns the slab
+            // magazines. Every batch is timed (`latency_sample: 1`).
+            let cache = build_sharded(
+                engine,
+                shards,
+                CacheConfig {
+                    mem_limit: 512 * 1024,
+                    initial_buckets: 64,
+                    latency_sample: 1,
+                    ..CacheConfig::default()
+                },
+            )
+            .unwrap();
+
+            let value = "v".repeat(1024);
+            let mut wire = Vec::new();
+            for i in 0..2_000u32 {
+                wire.extend_from_slice(
+                    format!("set ob-{i:04} 0 0 {} noreply\r\n{value}\r\n", value.len()).as_bytes(),
+                );
+            }
+            // Recent keys are resident; older ones were evicted — both
+            // hit the timed read path.
+            for i in (0..2_000u32).step_by(3) {
+                wire.extend_from_slice(format!("get ob-{i:04}\r\n").as_bytes());
+            }
+            pump(cache.as_ref(), &wire);
+
+            let ctx = format!("{engine}/{shards} shard(s)");
+            let lat = pump(cache.as_ref(), b"stats latency\r\n");
+            assert!(stat(&lat, "get_ops_sampled") > 0, "{ctx}");
+            assert!(stat(&lat, "get_p50_ns") > 0, "{ctx}");
+            assert!(stat(&lat, "get_p99_ns") > 0, "{ctx}");
+            assert!(stat(&lat, "store_ops_sampled") > 0, "{ctx}");
+            assert!(stat(&lat, "store_p99_ns") >= stat(&lat, "store_p50_ns"), "{ctx}");
+
+            let ints = pump(cache.as_ref(), b"stats internals\r\n");
+            assert!(stat(&ints, "ebr_reclaimed_items") > 0, "{ctx}: eviction must reclaim");
+            assert!(stat(&ints, "slab_magazine_hits") > 0, "{ctx}: magazines must serve");
+            assert!(stat(&ints, "ebr_advances") > 0, "{ctx}: epochs must advance");
+            if engine == "oaflash" {
+                assert!(stat(&ints, "oa_probe_samples") > 0, "{ctx}: probes sampled");
+            }
+
+            let slabs = pump(cache.as_ref(), b"stats slabs\r\n");
+            assert!(stat(&slabs, "active_slabs") > 0, "{ctx}");
+        }
+    }
+}

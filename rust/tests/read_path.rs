@@ -333,7 +333,15 @@ fn reference_pump(cache: &dyn Cache, wire: &[u8]) -> Vec<u8> {
                 if batch::is_barrier(&cmd) {
                     flush_owned(cache, &mut ops, &mut actions, &mut out);
                     match cmd {
-                        proto::Command::Stats => batch::write_stats_reply(cache, 0, &mut out),
+                        // `drain` runs with no ServerObs here, so the
+                        // sink side renders zeroed server facts; match
+                        // them byte-for-byte.
+                        proto::Command::Stats { sub } => batch::write_stats_reply(
+                            cache,
+                            sub,
+                            &proto::ServerInfo::default(),
+                            &mut out,
+                        ),
                         proto::Command::FlushAll { noreply } => {
                             cache.flush_all();
                             if !noreply {
@@ -366,7 +374,7 @@ fn sink_pump(cache: &dyn Cache, wire: &[u8]) -> Vec<u8> {
     let mut arena = BatchArena::default();
     let mut consumed = 0;
     loop {
-        let d = batch::drain(cache, 0, &wire[consumed..], &mut out, &mut arena, usize::MAX);
+        let d = batch::drain(cache, 0, &wire[consumed..], &mut out, &mut arena, usize::MAX, None);
         consumed += d.consumed;
         match d.stop {
             DrainStop::NeedMoreInput | DrainStop::Quit => break,

@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use fleec::cache::{build_engine, Cache as _, CacheConfig};
 use fleec::server::batch::{drain, BatchArena};
+use fleec::server::ServerObs;
 
 struct CountingAlloc;
 
@@ -52,7 +53,18 @@ fn allocs() -> u64 {
 #[test]
 fn warm_get_round_allocates_nothing_per_hit() {
     const N: usize = 64; // exactly one ROUND_OPS drain round
-    let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+    // Observability turned all the way up (every batch timed, every
+    // drain sampled): the latency/batch histograms are fixed-size atomic
+    // arrays, so full sampling must not move the allocation constant.
+    let cache = build_engine(
+        "fleec",
+        CacheConfig {
+            latency_sample: 1,
+            ..CacheConfig::small()
+        },
+    )
+    .unwrap();
+    let obs = ServerObs::new(1);
     let value = vec![0xC3u8; 1024];
     for i in 0..N {
         // Hit keys h00..h63; miss keys m00..m63 (same key length, so the
@@ -75,20 +87,20 @@ fn warm_get_round_allocates_nothing_per_hit() {
     // statics) with both shapes before measuring.
     for _ in 0..3 {
         out.clear();
-        drain(cache.as_ref(), 0, &wire_hit, &mut out, &mut arena, usize::MAX);
-        drain(cache.as_ref(), 0, &wire_miss, &mut out, &mut arena, usize::MAX);
+        drain(cache.as_ref(), 0, &wire_hit, &mut out, &mut arena, usize::MAX, Some(&obs));
+        drain(cache.as_ref(), 0, &wire_miss, &mut out, &mut arena, usize::MAX, Some(&obs));
     }
 
     out.clear();
     let before_hits = allocs();
-    let d = drain(cache.as_ref(), 0, &wire_hit, &mut out, &mut arena, usize::MAX);
+    let d = drain(cache.as_ref(), 0, &wire_hit, &mut out, &mut arena, usize::MAX, Some(&obs));
     let hit_allocs = allocs() - before_hits;
     assert_eq!(d.consumed, wire_hit.len());
     let hit_bytes = out.len();
 
     out.clear();
     let before_misses = allocs();
-    let d = drain(cache.as_ref(), 0, &wire_miss, &mut out, &mut arena, usize::MAX);
+    let d = drain(cache.as_ref(), 0, &wire_miss, &mut out, &mut arena, usize::MAX, Some(&obs));
     let miss_allocs = allocs() - before_misses;
     assert_eq!(d.consumed, wire_miss.len());
 
@@ -107,5 +119,12 @@ fn warm_get_round_allocates_nothing_per_hit() {
     assert!(
         hit_allocs <= 8,
         "per-round allocation constant grew suspiciously: {hit_allocs}"
+    );
+    // Prove the observability plane was actually live while we measured:
+    // every drain was sampled and every get was timed.
+    assert!(obs.gauges().drain_samples >= 8, "drain sampling never ran");
+    assert!(
+        cache.stats().latency.class(fleec::metrics::OpClass::Get).count >= (8 * N) as u64,
+        "per-op latency clock never ran"
     );
 }

@@ -108,7 +108,99 @@ fn stats_reflect_traffic() {
         assert_eq!(get("get_hits"), 50, "{model:?}");
         assert_eq!(get("get_misses"), 1, "{model:?}");
         assert_eq!(get("curr_connections"), 1, "{model:?}");
+        // Server facts: the live serving plane (unlike offline renderers)
+        // must report real wall-clock time, its thread count and the
+        // accept counter. `uptime` is only probed for presence — the
+        // server is seconds old.
+        let _ = get("uptime");
+        assert!(get("time") > 1_700_000_000, "{model:?}: time is wall-clock");
+        assert!(get("threads") >= 1, "{model:?}");
+        assert_eq!(get("total_connections"), 1, "{model:?}");
         assert_eq!(cache.item_count(), 50, "{model:?}");
+    }
+}
+
+#[test]
+fn stats_subcommands_and_metrics_endpoint() {
+    use std::io::{Read as _, Write as _};
+    for model in models() {
+        // Sampling turned all the way up so one short run produces
+        // non-zero histograms, plus the scrape endpoint on a free port.
+        let cache = build_engine(
+            "fleec",
+            CacheConfig {
+                mem_limit: 16 << 20,
+                latency_sample: 1,
+                ..CacheConfig::small()
+            },
+        )
+        .unwrap();
+        let server = Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".parse().unwrap(),
+                model,
+                drain_sample: 1,
+                metrics_addr: Some("127.0.0.1:0".parse().unwrap()),
+                ..ServerConfig::default()
+            },
+            Arc::clone(&cache),
+        )
+        .unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        for i in 0..200u32 {
+            c.set(format!("k{i}").as_bytes(), b"value", 0, 0).unwrap();
+        }
+        for i in 0..200u32 {
+            assert!(c.get(format!("k{i}").as_bytes()).unwrap().is_some());
+        }
+
+        let lat = c.stats_sub("latency").unwrap();
+        let lookup = |rows: &[(String, String)], name: &str| -> u64 {
+            rows.iter()
+                .find(|(k, _)| k == name)
+                .map(|(_, v)| v.parse().unwrap())
+                .unwrap_or_else(|| panic!("{model:?}: stat {name} missing"))
+        };
+        assert!(lookup(&lat, "get_ops_sampled") > 0, "{model:?}: {lat:?}");
+        assert!(lookup(&lat, "get_p50_ns") > 0, "{model:?}: {lat:?}");
+        assert!(lookup(&lat, "get_p99_ns") > 0, "{model:?}: {lat:?}");
+        assert!(lookup(&lat, "store_ops_sampled") > 0, "{model:?}: {lat:?}");
+
+        let ints = c.stats_sub("internals").unwrap();
+        assert!(lookup(&ints, "slab_magazine_hits") > 0, "{model:?}: {ints:?}");
+        let _ = lookup(&ints, "ebr_advances"); // present even when zero
+
+        let slabs = c.stats_sub("slabs").unwrap();
+        assert!(lookup(&slabs, "active_slabs") > 0, "{model:?}: {slabs:?}");
+        assert!(
+            slabs.iter().any(|(k, _)| k.ends_with(":used_chunks")),
+            "{model:?}: {slabs:?}"
+        );
+
+        // Prometheus scrape over raw HTTP.
+        let maddr = server.metrics_addr().expect("metrics endpoint enabled");
+        let mut s = std::net::TcpStream::connect(maddr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+        let mut reply = Vec::new();
+        s.read_to_end(&mut reply).unwrap();
+        let text = String::from_utf8_lossy(&reply);
+        assert!(text.starts_with("HTTP/1.1 200 OK"), "{model:?}: {text}");
+        assert!(
+            text.contains("fleec_ops_total{engine=\"fleec\",op=\"get\"} 200\n"),
+            "{model:?}: {text}"
+        );
+        assert!(text.contains("fleec_connections_total"), "{model:?}");
+        assert!(text.contains("fleec_drain_latency_ns"), "{model:?}");
+
+        // Anything but GET /metrics is a 404.
+        let mut s = std::net::TcpStream::connect(maddr).unwrap();
+        s.write_all(b"GET /nope HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+        let mut reply = Vec::new();
+        s.read_to_end(&mut reply).unwrap();
+        assert!(
+            String::from_utf8_lossy(&reply).starts_with("HTTP/1.1 404"),
+            "{model:?}"
+        );
     }
 }
 

@@ -378,3 +378,58 @@ fn merged_request_metrics_match_unsharded() {
         );
     }
 }
+
+#[test]
+fn sampled_latency_counts_survive_sharding() {
+    // `latency_sample = 1` times every batch in every topology, so each
+    // op class's *sample count* is topology-invariant (the measured
+    // nanoseconds of course are not), and the substrate counters must
+    // surface through the router's merged snapshot.
+    use fleec::metrics::OpClass;
+    let keys = key_space();
+    let mut rng = Xoshiro256::seeded(fleec::testutil::suite_seed(0x5AAD_ED04));
+    let script: Vec<AbsOp> = (0..200)
+        .map(|_| {
+            let k = rng.next_below(keys.len() as u64) as usize;
+            match rng.next_below(10) {
+                0..=5 => AbsOp::Get(k),
+                6..=7 => AbsOp::Set(k, rng.next_u64() as u8),
+                8 => AbsOp::Delete(k),
+                _ => AbsOp::Incr(k, 1),
+            }
+        })
+        .collect();
+    let cfg = CacheConfig {
+        mem_limit: 16 << 20,
+        latency_sample: 1,
+        ..CacheConfig::small()
+    };
+    for engine in ENGINES {
+        let flat = fleec::cache::build_engine(engine, cfg.clone()).unwrap();
+        let routed: Arc<dyn Cache> = match engine {
+            "fleec" => Arc::new(Sharded::from_fn(4, cfg.clone(), |_, c| FleecCache::new(c))),
+            "memcached" => Arc::new(Sharded::from_fn(4, cfg.clone(), |_, c| MemcachedCache::new(c))),
+            "memclock" => Arc::new(Sharded::from_fn(4, cfg.clone(), |_, c| MemClockCache::new(c))),
+            "oaflash" => Arc::new(Sharded::from_fn(4, cfg.clone(), |_, c| OaFlashCache::new(c))),
+            other => panic!("unknown engine {other}"),
+        };
+        run_script(flat.as_ref(), &script, &keys, &[7], true);
+        run_script(routed.as_ref(), &script, &keys, &[7], true);
+        let (f, r) = (flat.stats(), routed.stats());
+        for class in OpClass::ALL {
+            assert_eq!(
+                r.latency.class(class).count,
+                f.latency.class(class).count,
+                "{engine}/{class:?}: sampled-op count must survive sharding"
+            );
+        }
+        if engine == "fleec" || engine == "oaflash" {
+            assert!(f.latency.class(OpClass::Get).count > 0, "{engine}: gets timed");
+            assert!(
+                r.internals.slab_magazine_hits + r.internals.slab_shared_refills > 0,
+                "{engine}: merged slab substrate counters"
+            );
+            assert!(!r.slabs.is_empty(), "{engine}: merged slab classes");
+        }
+    }
+}
