@@ -609,6 +609,7 @@ fn main() {
                 ops_per_conn: (TOTAL_OPS / conns as u64).max(DEPTH as u64),
                 workers: 0,
                 prefill: true,
+                read_timeout: None,
             };
             match run_wire(server.addr(), &wire_spec, &opts) {
                 Ok(report) => {

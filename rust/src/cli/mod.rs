@@ -5,6 +5,7 @@
 //! fleec serve   --engine fleec --port 11211 --mem-mb 64 [--no-planner]
 //!               [--model reactor|thread] [--io-threads N]
 //!               [--latency-sample N] [--metrics-addr HOST:PORT]
+//!               [--max-conns N] [--conn-idle-timeout SECS]
 //! fleec bench   --engine all --alpha 0.99 --threads 8 --ops 200000 ...
 //!               [--conns N] (over-the-wire connection-scaling mode)
 //! fleec hit-ratio --alpha 0.99 --catalog 100000 --mem-mb 4
@@ -170,6 +171,13 @@ fn print_usage() {
                        [--metrics-addr HOST:PORT]\n\
                                      (serve Prometheus text exposition at\n\
                                       GET /metrics on this address)\n\
+                       [--max-conns N]\n\
+                                     (admission cap: shed accepts past N live\n\
+                                      connections with SERVER_ERROR busy;\n\
+                                      0 = unlimited, the default)\n\
+                       [--conn-idle-timeout SECS]\n\
+                                     (reap connections idle this long;\n\
+                                      0 = never, the default)\n\
          bench         --engine all|<name> --alpha 0.99 --threads 8 --ops 200000\n\
                        [--catalog N] [--value-bytes N] [--read-ratio R] [--mem-mb N]\n\
                        [--batch N]  (ops per engine crossing; >1 uses execute_batch)\n\
@@ -179,6 +187,10 @@ fn print_usage() {
                                      ops — --batch is the pipeline depth,\n\
                                      --ops the per-connection op count;\n\
                                      --model/--io-threads pick the front-end)\n\
+                       [--read-timeout-ms N]\n\
+                                     (wire mode: per-reply client read timeout;\n\
+                                      timed-out connections are dropped and\n\
+                                      counted, not fatal; 0 = wait forever)\n\
          hit-ratio     --alpha 0.99 --catalog 100000 --mem-mb 4 [--trace-len N]\n\
                        [--shards N] (splits mem/buckets per shard — changes eviction)\n\
          planner-demo  (load artifacts, run the planner once, print the decision)\n\
@@ -210,12 +222,15 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         Some(s) => Some(s.parse()?),
         None => None,
     };
-    let server = Server::start(
+    let idle_secs: u64 = args.get_or("conn-idle-timeout", 0u64);
+    let mut server = Server::start(
         ServerConfig {
             addr: format!("127.0.0.1:{port}").parse()?,
             model,
             drain_sample: args.get_or("latency-sample", 64u32),
             metrics_addr,
+            max_conns: args.get_or("max-conns", 0usize),
+            idle_timeout: (idle_secs > 0).then(|| Duration::from_secs(idle_secs)),
             ..ServerConfig::default()
         },
         Arc::clone(&cache),
@@ -236,9 +251,81 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         server.addr(),
         cache.mem_limit() >> 20
     );
-    // Serve until killed.
-    loop {
-        std::thread::sleep(Duration::from_secs(3600));
+    // Serve until SIGTERM/SIGINT, then drain gracefully: stop accepting,
+    // flush buffered replies, close connections as they empty, hard-stop
+    // at the deadline.
+    sig::install();
+    while !sig::termination_requested() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    eprintln!("fleec draining (deadline {}s)...", DRAIN_DEADLINE.as_secs());
+    let clean = server.drain(DRAIN_DEADLINE);
+    eprintln!(
+        "fleec stopped ({})",
+        if clean { "drained clean" } else { "drain deadline hit" }
+    );
+    Ok(0)
+}
+
+/// How long `fleec serve` waits for connections to drain after SIGTERM
+/// before hard-stopping. Kubernetes-style supervisors default to 30s
+/// grace; finishing well inside it avoids the SIGKILL race.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Minimal Unix signal handling (the offline crate set has no signal
+/// crate, and std exposes none): a `signal(2)` shim installing a handler
+/// that records the request in an atomic the serve loop polls.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        /// `signal(2)`. Not `sigaction` — no struct layout to mirror, and
+        /// one-shot semantics are irrelevant here (any delivery latches
+        /// the flag forever).
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    /// Signal handler: must stay async-signal-safe — one atomic store,
+    /// nothing else (no allocation, no locks, no stderr).
+    extern "C" fn on_term(_signum: i32) {
+        // ord: relaxed-ok — a monotonic latch polled by the serve loop;
+        // it orders no other data, and the poll loop's 100ms cadence
+        // dwarfs any propagation delay.
+        TERM.store(true, Ordering::Relaxed);
+    }
+
+    /// Install the SIGTERM/SIGINT handlers (idempotent).
+    pub fn install() {
+        // SAFETY: `signal` is the C library's own prototype; `on_term`
+        // is a valid `extern "C" fn(i32)` for the life of the process
+        // (static item), and the handler body is async-signal-safe (one
+        // relaxed atomic store). Failure (SIG_ERR) just leaves default
+        // disposition — acceptable for a best-effort graceful path.
+        unsafe {
+            signal(SIGTERM, on_term);
+            signal(SIGINT, on_term);
+        }
+    }
+
+    /// Whether a termination signal has been delivered.
+    pub fn termination_requested() -> bool {
+        // ord: relaxed-ok — see the store side; a latch, nothing ordered.
+        TERM.load(Ordering::Relaxed)
+    }
+}
+
+/// Non-Unix stub: no signal shim; `fleec serve` runs until killed.
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+    pub fn termination_requested() -> bool {
+        false
     }
 }
 
@@ -305,12 +392,14 @@ fn cmd_bench_wire(args: &Args) -> Result<i32> {
         value_size: ValueSize::Fixed(args.get_or("value-bytes", 64usize)),
         seed: args.get_or("seed", 0xF1EE_C0DEu64),
     };
+    let timeout_ms: u64 = args.get_or("read-timeout-ms", 0u64);
     let opts = WireOptions {
         conns: args.get_or("conns", 64usize),
         depth: args.get_or("batch", 16usize),
         ops_per_conn: args.get_or("ops", 10_000u64),
         workers: args.get_or("workers", 0usize),
         prefill: true,
+        read_timeout: (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms)),
     };
     let model = server_model(args)?;
     let shards: usize = args.get_or("shards", 1usize).max(1).next_power_of_two();

@@ -19,6 +19,44 @@ pub struct Client {
     writer: TcpStream,
 }
 
+/// Typed marker for a read that exceeded the connection's io timeout
+/// (see [`Client::connect_with`] / [`Client::set_io_timeout`]).
+///
+/// Load generators and chaos tests need to tell "the server is slow or
+/// wedged" apart from "the stream broke": a timeout means the connection
+/// should be abandoned and *counted*, not treated as a protocol error.
+/// Test with [`is_timeout`] rather than string-matching the message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadTimedOut;
+
+impl std::fmt::Display for ReadTimedOut {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("client read timed out")
+    }
+}
+
+impl std::error::Error for ReadTimedOut {}
+
+/// Whether an error from any [`Client`] read path was a read timeout.
+pub fn is_timeout(err: &anyhow::Error) -> bool {
+    err.is::<ReadTimedOut>()
+}
+
+/// Map an io error from a socket read: timeout kinds become the typed
+/// [`ReadTimedOut`], everything else passes through. Both kinds matter —
+/// Unix reports an expired `SO_RCVTIMEO` as `WouldBlock`, Windows as
+/// `TimedOut`.
+fn map_read_err(e: std::io::Error) -> anyhow::Error {
+    if matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    ) {
+        anyhow::Error::new(ReadTimedOut)
+    } else {
+        e.into()
+    }
+}
+
 /// A `VALUE` returned by [`Client::get`]/[`Client::gets`].
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ClientValue {
@@ -29,15 +67,30 @@ pub struct ClientValue {
 }
 
 impl Client {
-    /// Connect with a sane timeout.
+    /// Connect with a sane default read timeout (10s).
     pub fn connect(addr: SocketAddr) -> Result<Client> {
+        Client::connect_with(addr, Some(Duration::from_secs(10)))
+    }
+
+    /// Connect with an explicit per-read io timeout (`None` = block
+    /// forever). A read that exceeds it fails with the typed
+    /// [`ReadTimedOut`] error ([`is_timeout`] recognises it), after which
+    /// the reply stream position is unknown — abandon the connection.
+    pub fn connect_with(addr: SocketAddr, io_timeout: Option<Duration>) -> Result<Client> {
         let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5))?;
         stream.set_nodelay(true)?;
-        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        stream.set_read_timeout(io_timeout)?;
         Ok(Client {
             reader: BufReader::with_capacity(64 * 1024, stream.try_clone()?),
             writer: stream,
         })
+    }
+
+    /// Change the per-read io timeout on a live connection (`None` =
+    /// block forever).
+    pub fn set_io_timeout(&mut self, io_timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(io_timeout)?;
+        Ok(())
     }
 
     /// Read one reply line (without the trailing CRLF). Byte-level
@@ -46,7 +99,7 @@ impl Client {
     /// never be derailed by whatever bytes a desynced stream delivers.
     fn read_line(&mut self) -> Result<String> {
         let mut raw = Vec::new();
-        self.reader.read_until(b'\n', &mut raw)?;
+        self.reader.read_until(b'\n', &mut raw).map_err(map_read_err)?;
         if raw.is_empty() {
             anyhow::bail!("connection closed mid-reply");
         }
@@ -205,7 +258,7 @@ impl Client {
             let len: usize = parts[2].parse()?;
             let cas: Option<u64> = parts.get(3).and_then(|s| s.parse().ok());
             let mut data = vec![0u8; len + 2];
-            self.reader.read_exact(&mut data)?;
+            self.reader.read_exact(&mut data).map_err(map_read_err)?;
             anyhow::ensure!(
                 &data[len..] == b"\r\n",
                 "VALUE data for {:?} not CRLF-terminated (stream desync)",
@@ -572,6 +625,20 @@ mod tests {
             PipelineReply::Values(v) => assert_eq!(v[0].data, b"v2"),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn read_timeout_yields_typed_error() {
+        // A listener that accepts and then never replies: the read must
+        // fail with the typed timeout, not hang and not EOF.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut c = Client::connect_with(addr, Some(Duration::from_millis(50))).unwrap();
+        let (_peer, _) = listener.accept().unwrap(); // held open, silent
+        let err = c.version().unwrap_err();
+        assert!(is_timeout(&err), "expected ReadTimedOut, got: {err:#}");
+        // Non-timeout errors are not misclassified.
+        assert!(!is_timeout(&anyhow::anyhow!("boom")));
     }
 
     #[test]

@@ -1,0 +1,409 @@
+//! Deterministic fault injection: named failpoints for the chaos tests.
+//!
+//! A **failpoint** is a named site in the serving/memory stack where a
+//! test can make the code misbehave on purpose: `slab.alloc` can be made
+//! to fail as if memory were exhausted, `conn.write` can be made to
+//! short-write or error, `batch.drain` can be made to panic. Production
+//! builds compile every probe to a constant `None` — the `faults` cargo
+//! feature is off by default, so the hot paths carry **zero** cost and
+//! zero branches from this module.
+//!
+//! With the feature on, faults are configured by a spec string — either
+//! the `FLEEC_FAULTS` environment variable (read once, at the first
+//! probe) or [`configure`] (tests; replaces the whole table):
+//!
+//! ```text
+//! FLEEC_FAULTS = entry[,entry...]
+//! entry        = site:kind:rate:seed
+//! site         = failpoint name (see the inventory in
+//!                rust/docs/robustness.md: slab.alloc, poller.wait,
+//!                poller.arm, accept, conn.read, conn.write, batch.drain)
+//! kind         = error-return | delay | partial-write | oom | panic
+//! rate         = probability in [0,1], or "once" (fire exactly one time)
+//! seed         = u64 (decimal or 0x-hex) driving the per-site decision
+//!                sequence
+//! ```
+//!
+//! Example: `FLEEC_FAULTS=slab.alloc:oom:0.02:0xF1EE,conn.write:partial-write:0.1:7`.
+//!
+//! **Determinism.** Each rule decides its *n*-th probe independently of
+//! wall clock and of every other rule: probe `n` fires iff
+//! `splitmix64(seed ^ n)` falls below `rate` (as a fraction of `2⁶⁴`).
+//! Re-running with the same seed replays the same per-site decision
+//! *sequence*; which thread draws the n-th probe still depends on
+//! scheduling, which is exactly the nondeterminism a chaos test wants to
+//! keep. The CI `chaos` job pins the seed (`FLEEC_SEED` convention) and
+//! prints it so any failure replays.
+//!
+//! **Call-site contract.** Sites call the cheapest probe that fits:
+//! [`fail`] for error-return/oom decisions (it also services delay —
+//! sleeps inline — and panic — unwinds, to be caught by the reactor's
+//! per-connection `catch_unwind`), [`io`] when an injected error should
+//! surface as an `io::Error`, [`write_len`] for partial-write
+//! truncation. [`hit`] is the raw probe when a site wants to handle the
+//! kinds itself. A fault kind a site does not model is ignored there.
+
+use std::time::Duration;
+
+/// What an armed failpoint asks the call site to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Return the site's injected-error path (I/O error, `None`, ...).
+    ErrorReturn,
+    /// Sleep this long, then proceed normally (slow peer / slow disk).
+    Delay(Duration),
+    /// Truncate this write (the state machine must resume correctly).
+    PartialWrite,
+    /// Fail as if memory were exhausted (alias of `ErrorReturn` at
+    /// allocation sites; kept distinct so specs read naturally).
+    Oom,
+    /// Panic at the site (exercises the panic-isolation layer).
+    Panic,
+}
+
+/// Injected sleep for `delay` faults — long enough to reorder events,
+/// short enough that chaos runs stay fast.
+pub const DELAY: Duration = Duration::from_millis(2);
+
+#[cfg(feature = "faults")]
+mod imp {
+    use super::{Fault, DELAY};
+    use once_cell::sync::Lazy;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::RwLock;
+
+    /// One configured failpoint rule.
+    struct Rule {
+        site: String,
+        kind: RuleKind,
+        /// Firing threshold: probe `n` fires iff `splitmix64(seed ^ n) <
+        /// threshold` (`rate` scaled to the u64 range).
+        threshold: u64,
+        seed: u64,
+        /// Cap on total firings (0 = unlimited; `once` sets 1).
+        max_fires: u64,
+        /// Probes seen at this site (the deterministic sequence index).
+        probes: AtomicU64,
+        /// Times this rule fired.
+        fires: AtomicU64,
+    }
+
+    #[derive(Clone, Copy)]
+    enum RuleKind {
+        ErrorReturn,
+        Delay,
+        PartialWrite,
+        Oom,
+        Panic,
+    }
+
+    /// The active rule table. `Lazy` seeds it from `FLEEC_FAULTS` on the
+    /// first probe; [`super::configure`] replaces it wholesale. A
+    /// read-mostly `RwLock` is fine here: the probe path only ever takes
+    /// the read lock, and the `faults` feature is never on in production
+    /// builds.
+    static RULES: Lazy<RwLock<Vec<Rule>>> = Lazy::new(|| {
+        let spec = std::env::var("FLEEC_FAULTS").unwrap_or_default();
+        RwLock::new(parse(&spec).unwrap_or_default())
+    });
+
+    /// SplitMix64: the standard 64-bit finalizer-style mixer. Chosen for
+    /// the same reason the workload generator uses it — one multiply
+    /// chain, full avalanche, trivially reproducible in any language.
+    fn splitmix64(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^ (x >> 31)
+    }
+
+    fn parse_u64(s: &str) -> Option<u64> {
+        if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+            u64::from_str_radix(hex, 16).ok()
+        } else {
+            s.parse().ok()
+        }
+    }
+
+    /// Parse a spec string into rules. `Err` carries the offending entry.
+    fn parse(spec: &str) -> Result<Vec<Rule>, String> {
+        let mut rules = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let parts: Vec<&str> = entry.split(':').collect();
+            if parts.len() != 4 {
+                return Err(format!("bad fault entry {entry:?} (want site:kind:rate:seed)"));
+            }
+            let kind = match parts[1] {
+                "error-return" => RuleKind::ErrorReturn,
+                "delay" => RuleKind::Delay,
+                "partial-write" => RuleKind::PartialWrite,
+                "oom" => RuleKind::Oom,
+                "panic" => RuleKind::Panic,
+                k => return Err(format!("bad fault kind {k:?} in {entry:?}")),
+            };
+            let (threshold, max_fires) = if parts[2] == "once" {
+                (u64::MAX, 1)
+            } else {
+                let rate: f64 = parts[2]
+                    .parse()
+                    .ok()
+                    .filter(|r| (0.0..=1.0).contains(r))
+                    .ok_or_else(|| format!("bad fault rate {:?} in {entry:?}", parts[2]))?;
+                // rate 1.0 must always fire; scale everything else.
+                if rate >= 1.0 {
+                    (u64::MAX, 0)
+                } else {
+                    ((rate * u64::MAX as f64) as u64, 0)
+                }
+            };
+            let seed = parse_u64(parts[3])
+                .ok_or_else(|| format!("bad fault seed {:?} in {entry:?}", parts[3]))?;
+            rules.push(Rule {
+                site: parts[0].to_string(),
+                kind,
+                threshold,
+                seed,
+                max_fires,
+                probes: AtomicU64::new(0),
+                fires: AtomicU64::new(0),
+            });
+        }
+        Ok(rules)
+    }
+
+    pub fn configure(spec: &str) -> Result<(), String> {
+        let rules = parse(spec)?;
+        *RULES.write().unwrap() = rules;
+        Ok(())
+    }
+
+    pub fn hit(site: &str) -> Option<Fault> {
+        let rules = RULES.read().unwrap();
+        if rules.is_empty() {
+            return None;
+        }
+        for rule in rules.iter() {
+            if rule.site != site {
+                continue;
+            }
+            // ord: relaxed-ok — the probe index is a private sequence
+            // counter; it orders nothing and cross-thread interleaving of
+            // indices is inherent to a multi-threaded chaos run.
+            let n = rule.probes.fetch_add(1, Ordering::Relaxed);
+            if rule.threshold != u64::MAX && splitmix64(rule.seed ^ n) >= rule.threshold {
+                continue;
+            }
+            if rule.max_fires != 0 {
+                // ord: relaxed-ok — stats-grade firing cap; a rare
+                // over-count race would fire one extra fault, which a
+                // chaos harness tolerates by construction.
+                if rule.fires.load(Ordering::Relaxed) >= rule.max_fires {
+                    continue;
+                }
+            }
+            rule.fires.fetch_add(1, Ordering::Relaxed);
+            return Some(match rule.kind {
+                RuleKind::ErrorReturn => Fault::ErrorReturn,
+                RuleKind::Delay => Fault::Delay(DELAY),
+                RuleKind::PartialWrite => Fault::PartialWrite,
+                RuleKind::Oom => Fault::Oom,
+                RuleKind::Panic => Fault::Panic,
+            });
+        }
+        None
+    }
+
+    pub fn fired(site: &str) -> u64 {
+        RULES
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|r| r.site == site)
+            // ord: relaxed-ok — stats-grade read for test assertions.
+            .map(|r| r.fires.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    pub fn active() -> bool {
+        !RULES.read().unwrap().is_empty()
+    }
+}
+
+/// Probe a failpoint: `None` (always, with the feature off) or the fault
+/// the site should act out. Prefer [`fail`]/[`clamp_write`] unless the
+/// site needs kind-specific handling.
+#[cfg(feature = "faults")]
+pub fn hit(site: &str) -> Option<Fault> {
+    imp::hit(site)
+}
+
+/// Probe a failpoint (no-op build: the `faults` feature is off).
+#[cfg(not(feature = "faults"))]
+#[inline(always)]
+pub fn hit(_site: &str) -> Option<Fault> {
+    None
+}
+
+/// Replace the fault table from a spec string (tests; see module docs
+/// for the grammar). With the feature off this is a no-op `Ok`.
+#[cfg(feature = "faults")]
+pub fn configure(spec: &str) -> Result<(), String> {
+    imp::configure(spec)
+}
+
+/// Replace the fault table (no-op build).
+#[cfg(not(feature = "faults"))]
+pub fn configure(_spec: &str) -> Result<(), String> {
+    Ok(())
+}
+
+/// How many times rules at `site` have fired (test assertions).
+#[cfg(feature = "faults")]
+pub fn fired(site: &str) -> u64 {
+    imp::fired(site)
+}
+
+/// Firing count (no-op build: always 0).
+#[cfg(not(feature = "faults"))]
+pub fn fired(_site: &str) -> u64 {
+    0
+}
+
+/// Whether any fault rule is configured.
+#[cfg(feature = "faults")]
+pub fn active() -> bool {
+    imp::active()
+}
+
+/// Whether any fault rule is configured (no-op build: never).
+#[cfg(not(feature = "faults"))]
+#[inline(always)]
+pub fn active() -> bool {
+    false
+}
+
+/// The common error-style probe: `true` when the site should take its
+/// injected-failure path. `delay` faults sleep here and return `false`
+/// (the site then proceeds normally); `panic` faults unwind here — the
+/// serving plane's per-connection `catch_unwind` is the designed catcher.
+#[inline]
+pub fn fail(site: &str) -> bool {
+    match hit(site) {
+        None => false,
+        Some(Fault::ErrorReturn) | Some(Fault::Oom) => true,
+        Some(Fault::Delay(d)) => {
+            std::thread::sleep(d);
+            false
+        }
+        // A partial-write kind at a non-write site degrades to a no-op.
+        Some(Fault::PartialWrite) => false,
+        Some(Fault::Panic) => panic!("fleec::faults — injected panic at failpoint {site:?}"),
+    }
+}
+
+/// I/O-site probe: `Err` (an injected `ConnectionReset`) when an
+/// error-return/oom fault fires, so call sites can `faults::io(site)?`
+/// straight into their normal error handling. Delay faults sleep and
+/// return `Ok`; panic faults unwind.
+#[inline]
+pub fn io(site: &str) -> std::io::Result<()> {
+    if fail(site) {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::ConnectionReset,
+            "fleec::faults — injected I/O error",
+        ));
+    }
+    Ok(())
+}
+
+/// Write-site probe: the number of bytes the site should actually write
+/// (`len`, a truncation when a `partial-write` fault fires, or `Err`
+/// when an error-return fault fires). Truncation never extends and never
+/// returns 0 for a non-empty write, so what gets exercised is the
+/// caller's short-write resumption logic, not a fake EOF.
+#[inline]
+pub fn write_len(site: &str, len: usize) -> std::io::Result<usize> {
+    match hit(site) {
+        Some(Fault::ErrorReturn) | Some(Fault::Oom) => Err(std::io::Error::new(
+            std::io::ErrorKind::ConnectionReset,
+            "fleec::faults — injected write error",
+        )),
+        Some(Fault::PartialWrite) if len > 1 => Ok((len / 2).max(1)),
+        Some(Fault::Delay(d)) => {
+            std::thread::sleep(d);
+            Ok(len)
+        }
+        Some(Fault::Panic) => panic!("fleec::faults — injected panic at failpoint {site:?}"),
+        _ => Ok(len),
+    }
+}
+
+#[cfg(all(test, feature = "faults"))]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// The rule table is process-global; serialize these tests (and use
+    /// site names no production code probes, so a full `cargo test
+    /// --features faults` can't destabilize concurrently-running tests).
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn gate() -> std::sync::MutexGuard<'static, ()> {
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn spec_parses_and_replays_deterministically() {
+        let _g = gate();
+        configure("t.alpha:oom:0.5:42").unwrap();
+        let first: Vec<bool> = (0..64).map(|_| fail("t.alpha")).collect();
+        assert!(first.iter().any(|&b| b), "rate 0.5 must fire in 64 probes");
+        assert!(first.iter().any(|&b| !b), "rate 0.5 must also pass");
+        // Reconfiguring resets the probe counter: same seed, same sequence.
+        configure("t.alpha:oom:0.5:42").unwrap();
+        let second: Vec<bool> = (0..64).map(|_| fail("t.alpha")).collect();
+        assert_eq!(first, second, "seeded decision sequence must replay");
+        configure("").unwrap();
+    }
+
+    #[test]
+    fn once_fires_exactly_one_time() {
+        let _g = gate();
+        configure("t.beta:error-return:once:7").unwrap();
+        let fires: usize = (0..100).filter(|_| fail("t.beta")).count();
+        assert_eq!(fires, 1);
+        assert_eq!(fired("t.beta"), 1);
+        configure("").unwrap();
+    }
+
+    #[test]
+    fn partial_write_truncates_but_never_zeroes() {
+        let _g = gate();
+        configure("t.gamma:partial-write:1.0:1").unwrap();
+        assert_eq!(write_len("t.gamma", 100).unwrap(), 50);
+        assert_eq!(write_len("t.gamma", 1).unwrap(), 1);
+        configure("").unwrap();
+    }
+
+    #[test]
+    fn error_return_surfaces_as_io_error() {
+        let _g = gate();
+        configure("t.delta:error-return:1.0:1").unwrap();
+        assert!(write_len("t.delta", 100).is_err());
+        assert!(io("t.delta").is_err());
+        configure("").unwrap();
+        assert_eq!(write_len("t.delta", 100).unwrap(), 100);
+        assert!(io("t.delta").is_ok());
+    }
+
+    #[test]
+    fn unknown_site_never_fires_and_bad_specs_error() {
+        let _g = gate();
+        configure("t.epsilon:oom:1.0:1").unwrap();
+        assert!(!fail("not.a.site"));
+        configure("").unwrap();
+        assert!(configure("t.epsilon:frobnicate:1.0:1").is_err());
+        assert!(configure("t.epsilon:oom:2.5:1").is_err());
+        assert!(configure("missing:fields").is_err());
+    }
+}

@@ -158,6 +158,21 @@
 //! latency`/`slabs`/`internals` protocol subcommands, and an optional
 //! Prometheus text endpoint (`--metrics-addr`). The design rules and
 //! the full metric inventory are in `rust/docs/observability.md`.
+//!
+//! ## Robustness
+//!
+//! The serving plane degrades instead of dying: a panicking connection
+//! state machine is caught per-connection (`catch_unwind`) and closes
+//! only that connection; a reactor thread that dies is respawned by a
+//! supervisor that re-homes its registered fds; `--max-conns` sheds new
+//! accepts with `SERVER_ERROR busy` before fd exhaustion; dead peers are
+//! reaped by `--conn-idle-timeout`; and `Server::drain` (the SIGTERM
+//! path of `fleec serve`) stops accepting, flushes buffered replies and
+//! shuts down within a deadline. All of it is exercised deterministically
+//! by the [`faults`] failpoint harness (`faults` cargo feature,
+//! `FLEEC_FAULTS=site:kind:rate:seed`) and `rust/tests/chaos_e2e.rs`.
+//! The failure→behavior matrix, failpoint inventory and drain semantics
+//! are in `rust/docs/robustness.md`.
 
 pub mod audit;
 pub mod cache;
@@ -165,6 +180,7 @@ pub mod cli;
 pub mod client;
 pub mod coordinator;
 pub mod ebr;
+pub mod faults;
 pub mod lockfree;
 pub mod metrics;
 pub mod proto;

@@ -450,8 +450,16 @@ pub fn write_stats_slabs(out: &mut Vec<u8>, slabs: &[SlabClassSnapshot]) {
 
 /// Render `stats internals`: the lock-free subsystem gauges (EBR, slab
 /// magazines, open-addressing migration), plus the probe-length
-/// distribution (slot-distance units, not nanoseconds).
-pub fn write_stats_internals(out: &mut Vec<u8>, i: &InternalsSnapshot) {
+/// distribution (slot-distance units, not nanoseconds). When `server`
+/// carries serving-plane gauges (a live server; `None` from offline
+/// tools), the robustness counters render too — `conn_panics`, `sheds`,
+/// `idle_reaped`, `reactor_respawns` — so chaos tests and operators can
+/// read degradation events off the wire.
+pub fn write_stats_internals(
+    out: &mut Vec<u8>,
+    i: &InternalsSnapshot,
+    server: Option<&ServerGauges>,
+) {
     write_stat(out, "ebr_advances", i.ebr_advances);
     write_stat(out, "ebr_failed_advances", i.ebr_failed_advances);
     write_stat(out, "ebr_deferred_items", i.ebr_deferred_items);
@@ -466,6 +474,12 @@ pub fn write_stats_internals(out: &mut Vec<u8>, i: &InternalsSnapshot) {
     write_stat(out, "oa_probe_p50", i.oa_probe.percentile(0.50));
     write_stat(out, "oa_probe_p99", i.oa_probe.percentile(0.99));
     write_stat(out, "oa_probe_max", i.oa_probe.max);
+    if let Some(g) = server {
+        write_stat(out, "conn_panics", g.conn_panics);
+        write_stat(out, "reactor_respawns", g.reactor_respawns);
+        write_stat(out, "sheds", g.sheds);
+        write_stat(out, "idle_reaped", g.idle_reaped);
+    }
     out.extend_from_slice(b"END\r\n");
 }
 
@@ -579,6 +593,15 @@ pub struct ServerGauges {
     pub closed_connections: u64,
     /// Poller wakeups across all reactors (0 under the thread model).
     pub poller_wakeups: u64,
+    /// Connections closed because their state machine panicked (caught
+    /// per-connection; the server survived).
+    pub conn_panics: u64,
+    /// Reactor threads respawned by the supervisor.
+    pub reactor_respawns: u64,
+    /// Accepts shed by admission control (`SERVER_ERROR busy`).
+    pub sheds: u64,
+    /// Connections reaped by the idle timeout.
+    pub idle_reaped: u64,
     /// High-water mark of any single connection's pending reply bytes.
     pub outbuf_high_water: u64,
     /// Ops per flushed batch, sampled (count units).
@@ -597,6 +620,15 @@ pub fn write_prometheus_server(out: &mut Vec<u8>, engine: &str, g: &ServerGauges
     prom_sample(out, "connections_closed_total", engine, None, g.closed_connections);
     prom_type(out, "poller_wakeups_total", "counter");
     prom_sample(out, "poller_wakeups_total", engine, None, g.poller_wakeups);
+    prom_type(out, "degradation_events_total", "counter");
+    for (kind, v) in [
+        ("conn_panic", g.conn_panics),
+        ("reactor_respawn", g.reactor_respawns),
+        ("shed", g.sheds),
+        ("idle_reap", g.idle_reaped),
+    ] {
+        prom_sample(out, "degradation_events_total", engine, Some(("kind", kind)), v);
+    }
     prom_type(out, "outbuf_high_water_bytes", "gauge");
     prom_sample(out, "outbuf_high_water_bytes", engine, None, g.outbuf_high_water);
     prom_type(out, "batch_size_ops", "gauge");
@@ -851,8 +883,23 @@ mod tests {
             assert!(text.contains(&format!("STAT {class}_ops_sampled 0\r\n")), "{text}");
         }
         out.clear();
-        write_stats_internals(&mut out, &stats.internals);
+        write_stats_internals(&mut out, &stats.internals, None);
         check(&out);
+        // With serving-plane gauges attached, the robustness counters
+        // render in the same STAT shape.
+        out.clear();
+        let gauges = ServerGauges {
+            conn_panics: 2,
+            sheds: 5,
+            ..ServerGauges::default()
+        };
+        write_stats_internals(&mut out, &stats.internals, Some(&gauges));
+        check(&out);
+        let text = String::from_utf8(out.clone()).unwrap();
+        assert!(text.contains("STAT conn_panics 2\r\n"), "{text}");
+        assert!(text.contains("STAT reactor_respawns 0\r\n"), "{text}");
+        assert!(text.contains("STAT sheds 5\r\n"), "{text}");
+        assert!(text.contains("STAT idle_reaped 0\r\n"), "{text}");
         out.clear();
         write_stats_slabs(
             &mut out,
@@ -928,6 +975,10 @@ mod tests {
         let g = ServerGauges {
             closed_connections: 4,
             poller_wakeups: 100,
+            conn_panics: 1,
+            reactor_respawns: 2,
+            sheds: 3,
+            idle_reaped: 5,
             outbuf_high_water: 2048,
             batch_size_p50: 8,
             batch_size_p99: 64,
@@ -954,6 +1005,16 @@ mod tests {
         );
         assert!(
             text.contains("fleec_drain_latency_ns{engine=\"fleec\",q=\"p99\"} 4500\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("fleec_degradation_events_total{engine=\"fleec\",kind=\"shed\"} 3\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "fleec_degradation_events_total{engine=\"fleec\",kind=\"idle_reap\"} 5\n"
+            ),
             "{text}"
         );
     }

@@ -185,10 +185,13 @@ fn recycle_keys<'from, 'to>(mut v: Vec<&'from [u8]>) -> Vec<&'to [u8]> {
 /// the latency/internals observability extras fold bucket-wise), so
 /// `limit_maxbytes` over a sharded server stays truthful and every
 /// subcommand renders from one coherent snapshot.
+/// `server` carries the serving-plane gauges for `stats internals`
+/// (`None` in tests and offline tools renders engine internals only).
 pub fn write_stats_reply(
     cache: &dyn Cache,
     sub: StatsSub,
     info: &proto::ServerInfo,
+    server: Option<&proto::ServerGauges>,
     out: &mut Vec<u8>,
 ) {
     let stats = cache.stats();
@@ -196,7 +199,7 @@ pub fn write_stats_reply(
         StatsSub::All => proto::write_stats(out, cache.engine_name(), &stats, info),
         StatsSub::Latency => proto::write_stats_latency(out, &stats.latency),
         StatsSub::Slabs => proto::write_stats_slabs(out, &stats.slabs),
-        StatsSub::Internals => proto::write_stats_internals(out, &stats.internals),
+        StatsSub::Internals => proto::write_stats_internals(out, &stats.internals, server),
     }
 }
 
@@ -322,7 +325,12 @@ pub fn plan<'a>(
 /// kept as the differential-testing oracle: `rust/tests/read_path.rs`
 /// holds the two paths byte-identical on randomized pipelines across
 /// every engine and the shard router.
-pub fn emit(ops: &[Op<'_>], actions: &[Action], results: &[OpResult], out: &mut Vec<u8>) {
+///
+/// Returns `true` when a result-variant mismatch turned the reply stream
+/// fatal (see [`mismatch`]); callers serving a live connection must
+/// flush and close.
+pub fn emit(ops: &[Op<'_>], actions: &[Action], results: &[OpResult], out: &mut Vec<u8>) -> bool {
+    let mut fatal = false;
     for action in actions {
         match *action {
             Action::Values {
@@ -349,7 +357,7 @@ pub fn emit(ops: &[Op<'_>], actions: &[Action], results: &[OpResult], out: &mut 
                         OpResult::Store(outcome) => {
                             out.extend_from_slice(proto::store_reply(outcome))
                         }
-                        _ => mismatch(out),
+                        _ => mismatch(out, &mut fatal),
                     }
                 }
             }
@@ -358,7 +366,7 @@ pub fn emit(ops: &[Op<'_>], actions: &[Action], results: &[OpResult], out: &mut 
                     match results[first] {
                         OpResult::Deleted(true) => out.extend_from_slice(b"DELETED\r\n"),
                         OpResult::Deleted(false) => out.extend_from_slice(b"NOT_FOUND\r\n"),
-                        _ => mismatch(out),
+                        _ => mismatch(out, &mut fatal),
                     }
                 }
             }
@@ -370,7 +378,7 @@ pub fn emit(ops: &[Op<'_>], actions: &[Action], results: &[OpResult], out: &mut 
                             out.extend_from_slice(b"\r\n");
                         }
                         OpResult::Counter(None) => out.extend_from_slice(b"NOT_FOUND\r\n"),
-                        _ => mismatch(out),
+                        _ => mismatch(out, &mut fatal),
                     }
                 }
             }
@@ -379,7 +387,7 @@ pub fn emit(ops: &[Op<'_>], actions: &[Action], results: &[OpResult], out: &mut 
                     match results[first] {
                         OpResult::Touched(true) => out.extend_from_slice(b"TOUCHED\r\n"),
                         OpResult::Touched(false) => out.extend_from_slice(b"NOT_FOUND\r\n"),
-                        _ => mismatch(out),
+                        _ => mismatch(out, &mut fatal),
                     }
                 }
             }
@@ -396,14 +404,19 @@ pub fn emit(ops: &[Op<'_>], actions: &[Action], results: &[OpResult], out: &mut 
             }
         }
     }
+    fatal
 }
 
 /// An engine returned a result variant that doesn't match the op — a
-/// `Cache::execute_batch` contract violation. Keep the wire stream framed
-/// rather than hanging the client.
-fn mismatch(out: &mut Vec<u8>) {
-    debug_assert!(false, "execute_batch result variant mismatch");
+/// `Cache::execute_batch` contract violation. Emit a framed error rather
+/// than hanging the client, and flag the stream **fatal**: past this
+/// point reply/command alignment is untrustworthy (the client counts
+/// replies; a wrong variant may have produced the wrong number of
+/// lines), so the connection must close after flushing. Serving on would
+/// silently answer command N+1's reply to command N forever.
+fn mismatch(out: &mut Vec<u8>, fatal: &mut bool) {
     out.extend_from_slice(b"SERVER_ERROR batch result mismatch\r\n");
+    *fatal = true;
 }
 
 /// One parked out-of-order result inside [`EmitSink`]. Everything is
@@ -459,6 +472,10 @@ struct EmitSink<'o, 'b> {
     a_idx: usize,
     /// Next op index owed to the wire.
     next: usize,
+    /// A [`mismatch`] was rendered: the stream is desynced and the
+    /// connection must close after flushing (reported by
+    /// [`EmitSink::finish`]).
+    fatal: bool,
 }
 
 impl<'o, 'b> EmitSink<'o, 'b> {
@@ -480,6 +497,7 @@ impl<'o, 'b> EmitSink<'o, 'b> {
             spill,
             a_idx: 0,
             next: 0,
+            fatal: false,
         }
     }
 
@@ -508,11 +526,13 @@ impl<'o, 'b> EmitSink<'o, 'b> {
     /// Render op `idx`'s reply fragment (associated fn so callers can
     /// split-borrow `out`/`spill`). Byte-for-byte the same output as the
     /// owned [`emit`] renderer.
+    #[allow(clippy::too_many_arguments)]
     fn render_one(
         out: &mut Vec<u8>,
         ops: &[Op<'_>],
         actions: &[Action],
         a_idx: &mut usize,
+        fatal: &mut bool,
         idx: usize,
         r: Rendered<'_>,
     ) {
@@ -554,7 +574,7 @@ impl<'o, 'b> EmitSink<'o, 'b> {
                         Rendered::Store(outcome) => {
                             out.extend_from_slice(proto::store_reply(outcome))
                         }
-                        _ => mismatch(out),
+                        _ => mismatch(out, fatal),
                     }
                 }
                 *a_idx += 1;
@@ -564,7 +584,7 @@ impl<'o, 'b> EmitSink<'o, 'b> {
                     match r {
                         Rendered::Deleted(true) => out.extend_from_slice(b"DELETED\r\n"),
                         Rendered::Deleted(false) => out.extend_from_slice(b"NOT_FOUND\r\n"),
-                        _ => mismatch(out),
+                        _ => mismatch(out, fatal),
                     }
                 }
                 *a_idx += 1;
@@ -577,7 +597,7 @@ impl<'o, 'b> EmitSink<'o, 'b> {
                             out.extend_from_slice(b"\r\n");
                         }
                         Rendered::Counter(None) => out.extend_from_slice(b"NOT_FOUND\r\n"),
-                        _ => mismatch(out),
+                        _ => mismatch(out, fatal),
                     }
                 }
                 *a_idx += 1;
@@ -587,7 +607,7 @@ impl<'o, 'b> EmitSink<'o, 'b> {
                     match r {
                         Rendered::Touched(true) => out.extend_from_slice(b"TOUCHED\r\n"),
                         Rendered::Touched(false) => out.extend_from_slice(b"NOT_FOUND\r\n"),
-                        _ => mismatch(out),
+                        _ => mismatch(out, fatal),
                     }
                 }
                 *a_idx += 1;
@@ -652,7 +672,15 @@ impl<'o, 'b> EmitSink<'o, 'b> {
             };
             return;
         }
-        Self::render_one(self.out, self.ops, self.actions, &mut self.a_idx, idx, r);
+        Self::render_one(
+            self.out,
+            self.ops,
+            self.actions,
+            &mut self.a_idx,
+            &mut self.fatal,
+            idx,
+            r,
+        );
         self.next += 1;
         while self.next < self.pending.len() {
             let p = std::mem::replace(&mut self.pending[self.next], Pending::NotYet);
@@ -660,7 +688,15 @@ impl<'o, 'b> EmitSink<'o, 'b> {
                 break;
             }
             let r = Self::unpark(p, self.spill);
-            Self::render_one(self.out, self.ops, self.actions, &mut self.a_idx, self.next, r);
+            Self::render_one(
+                self.out,
+                self.ops,
+                self.actions,
+                &mut self.a_idx,
+                &mut self.fatal,
+                self.next,
+                r,
+            );
             self.next += 1;
         }
     }
@@ -668,8 +704,9 @@ impl<'o, 'b> EmitSink<'o, 'b> {
     /// Close out the round after `execute_batch_into` returned: render
     /// anything still owed (undelivered ops — an engine contract
     /// violation — render as framed mismatches) and the trailing zero-op
-    /// actions.
-    fn finish(mut self) {
+    /// actions. Returns `true` when the round turned the stream fatal
+    /// (any [`mismatch`] rendered): the connection must flush and close.
+    fn finish(mut self) -> bool {
         while self.next < self.pending.len() {
             let p = std::mem::replace(&mut self.pending[self.next], Pending::NotYet);
             debug_assert!(
@@ -678,11 +715,20 @@ impl<'o, 'b> EmitSink<'o, 'b> {
                 self.next
             );
             let r = Self::unpark(p, self.spill);
-            Self::render_one(self.out, self.ops, self.actions, &mut self.a_idx, self.next, r);
+            Self::render_one(
+                self.out,
+                self.ops,
+                self.actions,
+                &mut self.a_idx,
+                &mut self.fatal,
+                self.next,
+                r,
+            );
             self.next += 1;
         }
         Self::catch_up_plain(self.out, self.actions, &mut self.a_idx);
         debug_assert_eq!(self.a_idx, self.actions.len(), "unrendered trailing actions");
+        self.fatal
     }
 }
 
@@ -734,6 +780,11 @@ pub struct Drained {
     /// Bytes of `input` consumed; the caller advances its buffer by this.
     pub consumed: usize,
     pub stop: DrainStop,
+    /// A result-variant mismatch desynced the reply stream (see
+    /// [`mismatch`]): everything in `out` is still well-framed, but the
+    /// caller must flush it and **close the connection** — further
+    /// replies could answer the wrong commands.
+    pub fatal: bool,
 }
 
 /// The protocol pump: parse, plan, execute and reply for every complete
@@ -768,6 +819,7 @@ pub fn drain(
     };
     let sampled = t0.is_some();
     let mut consumed = 0;
+    let mut fatal = false;
     let (mut ops, mut actions, mut keys) = arena.take();
     let stop = 'drain: loop {
         if out.len() >= out_budget {
@@ -780,7 +832,7 @@ pub fn drain(
                     consumed += n;
                     if is_barrier(&cmd) {
                         note_batch(obs, sampled, ops.len());
-                        flush_batch(cache, &mut ops, &mut actions, arena, out);
+                        fatal |= flush_batch(cache, &mut ops, &mut actions, arena, out);
                         match cmd {
                             Command::Stats { sub } => {
                                 let info = match obs {
@@ -790,7 +842,8 @@ pub fn drain(
                                         ..proto::ServerInfo::default()
                                     },
                                 };
-                                write_stats_reply(cache, sub, &info, out);
+                                let gauges = obs.map(|o| o.gauges());
+                                write_stats_reply(cache, sub, &info, gauges.as_ref(), out);
                             }
                             Command::FlushAll { noreply } => {
                                 cache.flush_all();
@@ -817,19 +870,23 @@ pub fn drain(
                 }
                 Parsed::Incomplete => {
                     note_batch(obs, sampled, ops.len());
-                    flush_batch(cache, &mut ops, &mut actions, arena, out);
+                    fatal |= flush_batch(cache, &mut ops, &mut actions, arena, out);
                     break 'drain DrainStop::NeedMoreInput;
                 }
             }
         }
         note_batch(obs, sampled, ops.len());
-        flush_batch(cache, &mut ops, &mut actions, arena, out);
+        fatal |= flush_batch(cache, &mut ops, &mut actions, arena, out);
     };
     arena.put(ops, actions, keys);
     if let (Some(o), Some(t0)) = (obs, t0) {
         o.drain_ns.record(t0.elapsed().as_nanos() as u64);
     }
-    Drained { consumed, stop }
+    Drained {
+        consumed,
+        stop,
+        fatal,
+    }
 }
 
 /// On a sampled drain, record one flushed batch's op count (empty
@@ -847,18 +904,18 @@ fn note_batch(obs: Option<&ServerObs>, sampled: bool, n: usize) {
 /// an [`EmitSink`] (the engine lends GET-hit bytes straight into the
 /// outbuf); clears both lists. `arena` only contributes the emitter's
 /// recycled park/spill buffers — the op/action/key vectors stay checked
-/// out with the caller.
+/// out with the caller. Returns [`EmitSink::finish`]'s fatal flag.
 fn flush_batch(
     cache: &dyn Cache,
     ops: &mut Vec<Op<'_>>,
     actions: &mut Vec<Action>,
     arena: &mut BatchArena,
     out: &mut Vec<u8>,
-) {
+) -> bool {
     if actions.is_empty() && ops.is_empty() {
-        return;
+        return false;
     }
-    {
+    let fatal = {
         let ops: &[Op<'_>] = ops.as_slice();
         let mut sink = EmitSink::new(
             ops,
@@ -868,10 +925,11 @@ fn flush_batch(
             &mut arena.spill,
         );
         cache.execute_batch_into(ops, &mut sink);
-        sink.finish();
-    }
+        sink.finish()
+    };
     ops.clear();
     actions.clear();
+    fatal
 }
 
 #[cfg(test)]
@@ -995,6 +1053,7 @@ mod tests {
                 &mut out,
                 &mut arena,
                 budget,
+                None,
             );
             consumed += d.consumed;
             calls += 1;
@@ -1143,6 +1202,72 @@ mod tests {
         );
         assert!(text.contains("CLIENT_ERROR too many keys in get\r\n"), "{text}");
         assert!(text.ends_with("VALUE mk 0 1\r\nv\r\nEND\r\n"), "{text}");
+    }
+
+    #[test]
+    fn result_mismatch_flags_fatal_and_keeps_framing() {
+        // A contract-violating engine answers a `set` with the wrong
+        // result variant: the pump must emit a framed SERVER_ERROR *and*
+        // flag the stream fatal — the front-ends close the connection on
+        // that flag (a desynced stream would answer command N+1's reply
+        // to command N forever).
+        let cache = crate::testutil::MismatchCache;
+        let mut arena = BatchArena::default();
+        let mut out = Vec::new();
+        let d = drain(
+            &cache,
+            0,
+            b"set m 0 0 1\r\nx\r\n",
+            &mut out,
+            &mut arena,
+            usize::MAX,
+            None,
+        );
+        assert!(d.fatal, "mismatch must flag the stream fatal");
+        assert_eq!(d.stop, DrainStop::NeedMoreInput);
+        assert_eq!(out, b"SERVER_ERROR batch result mismatch\r\n");
+        // A healthy engine never trips the flag.
+        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+        out.clear();
+        let d = drain(
+            cache.as_ref(),
+            0,
+            b"set m 0 0 1\r\nx\r\n",
+            &mut out,
+            &mut arena,
+            usize::MAX,
+            None,
+        );
+        assert!(!d.fatal);
+        assert_eq!(out, b"STORED\r\n");
+    }
+
+    #[test]
+    fn owned_oracle_reports_mismatch_fatal_identically() {
+        use crate::cache::OpResult;
+        let ops = vec![Op::Set {
+            key: b"m",
+            value: b"x",
+            flags: 0,
+            exptime: 0,
+        }];
+        let actions = vec![Action::Store {
+            first: 0,
+            noreply: false,
+        }];
+        let mut out = Vec::new();
+        let fatal = emit(&ops, &actions, &[OpResult::Touched(true)], &mut out);
+        assert!(fatal, "oracle must report the mismatch as fatal");
+        assert_eq!(out, b"SERVER_ERROR batch result mismatch\r\n");
+        out.clear();
+        let fatal = emit(
+            &ops,
+            &actions,
+            &[OpResult::Store(crate::cache::StoreOutcome::Stored)],
+            &mut out,
+        );
+        assert!(!fatal);
+        assert_eq!(out, b"STORED\r\n");
     }
 
     #[test]

@@ -51,6 +51,16 @@ pub struct ServerObs {
     pub closed_connections: ShardedCounter,
     /// Reactor poller wakeups (0 under the thread model).
     pub poller_wakeups: ShardedCounter,
+    /// Connections closed because their state machine panicked (caught
+    /// per-connection; the server survives).
+    pub conn_panics: ShardedCounter,
+    /// Reactor threads respawned by the supervisor after dying.
+    pub reactor_respawns: ShardedCounter,
+    /// Accepts shed by `--max-conns` admission control
+    /// (`SERVER_ERROR busy`).
+    pub sheds: ShardedCounter,
+    /// Connections reaped by `--conn-idle-timeout`.
+    pub idle_reaped: ShardedCounter,
     /// High-water mark of any single connection's pending reply bytes.
     outbuf_high_water: AtomicU64,
     /// Ops per flushed batch (count units, not nanoseconds), recorded on
@@ -74,6 +84,10 @@ impl ServerObs {
             total_connections: ShardedCounter::new(),
             closed_connections: ShardedCounter::new(),
             poller_wakeups: ShardedCounter::new(),
+            conn_panics: ShardedCounter::new(),
+            reactor_respawns: ShardedCounter::new(),
+            sheds: ShardedCounter::new(),
+            idle_reaped: ShardedCounter::new(),
             outbuf_high_water: AtomicU64::new(0),
             batch_sizes: LatencyHistogram::new(),
             drain_ns: LatencyHistogram::new(),
@@ -133,6 +147,10 @@ impl ServerObs {
         proto::ServerGauges {
             closed_connections: self.closed_connections.get(),
             poller_wakeups: self.poller_wakeups.get(),
+            conn_panics: self.conn_panics.get(),
+            reactor_respawns: self.reactor_respawns.get(),
+            sheds: self.sheds.get(),
+            idle_reaped: self.idle_reaped.get(),
             // ord: relaxed-ok — stats-grade high-water mark.
             outbuf_high_water: self.outbuf_high_water.load(Ordering::Relaxed),
             batch_size_p50: batch.percentile(0.50),
@@ -173,6 +191,15 @@ pub struct ServerConfig {
     /// Bind a Prometheus-style text exposition endpoint here (`GET
     /// /metrics`); `None` (default) serves no HTTP.
     pub metrics_addr: Option<SocketAddr>,
+    /// Admission cap: past this many live connections, new accepts are
+    /// shed with `SERVER_ERROR busy` and closed instead of admitted —
+    /// explicit degradation at the edge rather than an `EMFILE` spiral
+    /// that takes working connections down. 0 (default) = unlimited.
+    pub max_conns: usize,
+    /// Close connections with no activity for this long (coarse — the
+    /// reap sweep runs on the existing poller wakeup, never per event).
+    /// `None` (default) = never reap.
+    pub idle_timeout: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -184,6 +211,8 @@ impl Default for ServerConfig {
             max_outbuf: 256 * 1024,
             drain_sample: 64,
             metrics_addr: None,
+            max_conns: 0,
+            idle_timeout: None,
         }
     }
 }
@@ -205,6 +234,7 @@ pub struct Server {
     addr: SocketAddr,
     metrics_addr: Option<SocketAddr>,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
     curr_conns: Arc<AtomicUsize>,
     buffered_out: Arc<AtomicUsize>,
@@ -218,6 +248,7 @@ impl Server {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
         let curr_conns = Arc::new(AtomicUsize::new(0));
         let buffered_out = Arc::new(AtomicUsize::new(0));
         let obs = Arc::new(ServerObs::new(config.drain_sample));
@@ -231,6 +262,7 @@ impl Server {
                 Arc::clone(&cache),
                 &config,
                 &stop,
+                &draining,
                 &curr_conns,
                 &obs,
             )?],
@@ -240,6 +272,7 @@ impl Server {
                 &config,
                 io_threads,
                 &stop,
+                &draining,
                 &curr_conns,
                 &buffered_out,
                 &obs,
@@ -261,6 +294,7 @@ impl Server {
             addr,
             metrics_addr,
             stop,
+            draining,
             threads,
             curr_conns,
             buffered_out,
@@ -306,6 +340,36 @@ impl Server {
             let _ = h.join();
         }
     }
+
+    /// Graceful shutdown (the SIGTERM path of `fleec serve`): stop
+    /// accepting, let every connection flush its buffered replies, close
+    /// each as its outbuf empties, and wait up to `deadline` for the
+    /// count to reach zero — then hard-stop whatever is left and join
+    /// all server threads. Returns `true` when every connection drained
+    /// within the deadline (the clean case), `false` when the deadline
+    /// tripped first.
+    ///
+    /// Drain semantics: commands already *answered into* a connection's
+    /// outbuf are delivered; buffered-but-unexecuted request bytes are
+    /// dropped (a client that pipelined past the drain point sees the
+    /// close and retries against the replacement server — the protocol
+    /// is idempotent-retry shaped, this is the Memcached operational
+    /// norm).
+    pub fn drain(&mut self, deadline: Duration) -> bool {
+        // ord: Release drain flag; Acquire counterpart: reactor/conn
+        // loops' draining.load on their next wakeup.
+        self.draining.store(true, Ordering::Release);
+        let start = Instant::now();
+        while start.elapsed() < deadline {
+            if self.curr_conns.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let clean = self.curr_conns.load(Ordering::Acquire) == 0;
+        self.shutdown();
+        clean
+    }
 }
 
 impl Drop for Server {
@@ -314,8 +378,11 @@ impl Drop for Server {
     }
 }
 
-/// Spawn the reactor fleet: each thread gets a clone of the (shared,
-/// non-blocking) listener and accepts into its own poller.
+/// Spawn the reactor fleet under its supervisor: one supervisor thread
+/// that spawns `n` reactors (each with a clone of the shared,
+/// non-blocking listener), respawns any that die while the server is
+/// live (re-homing their connections — see [`reactor::supervise`]), and
+/// joins them all at stop.
 #[cfg(unix)]
 #[allow(clippy::too_many_arguments)]
 fn spawn_reactors(
@@ -324,34 +391,29 @@ fn spawn_reactors(
     config: &ServerConfig,
     io_threads: usize,
     stop: &Arc<AtomicBool>,
+    draining: &Arc<AtomicBool>,
     curr_conns: &Arc<AtomicUsize>,
     buffered_out: &Arc<AtomicUsize>,
     obs: &Arc<ServerObs>,
 ) -> std::io::Result<Vec<std::thread::JoinHandle<()>>> {
     let n = resolve_io_threads(io_threads);
-    let mut threads = Vec::with_capacity(n);
-    for i in 0..n {
-        // Each reactor owns a dup of the listening fd; dropping the
-        // original below leaves the clones listening.
-        let own = listener.try_clone()?;
-        let shared = reactor::ReactorShared {
-            cache: Arc::clone(&cache),
-            stop: Arc::clone(stop),
-            curr_conns: Arc::clone(curr_conns),
-            buffered_out: Arc::clone(buffered_out),
-            max_outbuf: config.max_outbuf,
-            nodelay: config.nodelay,
-            obs: Arc::clone(obs),
-        };
-        threads.push(
-            std::thread::Builder::new()
-                .name(format!("fleec-reactor-{i}"))
-                .spawn(move || {
-                    let _ = reactor::run_reactor(own, shared);
-                })?,
-        );
-    }
-    Ok(threads)
+    let shared = reactor::ReactorShared {
+        cache,
+        stop: Arc::clone(stop),
+        draining: Arc::clone(draining),
+        curr_conns: Arc::clone(curr_conns),
+        buffered_out: Arc::clone(buffered_out),
+        max_outbuf: config.max_outbuf,
+        max_conns: config.max_conns,
+        idle_timeout: config.idle_timeout,
+        nodelay: config.nodelay,
+        obs: Arc::clone(obs),
+        handoff: Arc::new(std::sync::Mutex::new(Vec::new())),
+    };
+    let supervisor = std::thread::Builder::new()
+        .name("fleec-supervisor".into())
+        .spawn(move || reactor::supervise(listener, shared, n))?;
+    Ok(vec![supervisor])
 }
 
 /// Reactor model on a platform without a poller backend.
@@ -363,6 +425,7 @@ fn spawn_reactors(
     _config: &ServerConfig,
     _io_threads: usize,
     _stop: &Arc<AtomicBool>,
+    _draining: &Arc<AtomicBool>,
     _curr_conns: &Arc<AtomicUsize>,
     _buffered_out: &Arc<AtomicUsize>,
     _obs: &Arc<ServerObs>,
@@ -371,6 +434,19 @@ fn spawn_reactors(
         std::io::ErrorKind::Unsupported,
         "the reactor model requires a Unix readiness poller; use --model thread",
     ))
+}
+
+/// Shed one over-cap accept: best-effort `SERVER_ERROR busy`, then
+/// close. The reply is a courtesy (the socket was never admitted, so it
+/// must not block the accept path — non-blocking write, failure
+/// ignored); the close is the contract. Both front-end models shed
+/// through here.
+fn shed_stream(mut stream: TcpStream, obs: &ServerObs) {
+    use std::io::Write;
+    let _ = stream.set_nonblocking(true);
+    let _ = stream.write(b"SERVER_ERROR busy\r\n");
+    obs.sheds.inc();
+    // Dropping `stream` closes the socket.
 }
 
 /// Idle-wait helper for the thread-model accept loop: a poller wait on
@@ -421,26 +497,53 @@ fn spawn_thread_model(
     cache: Arc<dyn Cache>,
     config: &ServerConfig,
     stop: &Arc<AtomicBool>,
+    draining: &Arc<AtomicBool>,
     curr_conns: &Arc<AtomicUsize>,
     obs: &Arc<ServerObs>,
 ) -> std::io::Result<std::thread::JoinHandle<()>> {
     let accept_stop = Arc::clone(stop);
+    let accept_draining = Arc::clone(draining);
     let accept_conns = Arc::clone(curr_conns);
     let accept_obs = Arc::clone(obs);
     let nodelay = config.nodelay;
     let max_outbuf = config.max_outbuf;
+    let max_conns = config.max_conns;
+    let idle_timeout = config.idle_timeout;
     std::thread::Builder::new()
         .name("fleec-accept".into())
         .spawn(move || {
             let mut waiter = AcceptWaiter::new(&listener);
             let mut conn_threads = Vec::new();
             while !accept_stop.load(Ordering::Acquire) {
+                if accept_draining.load(Ordering::Acquire) {
+                    // Draining: accept nothing more; just keep reaping
+                    // finished connection threads until the stop flag.
+                    std::thread::sleep(Duration::from_millis(10));
+                    conn_threads.retain(|h: &std::thread::JoinHandle<()>| !h.is_finished());
+                    continue;
+                }
                 match listener.accept() {
                     Ok((stream, _peer)) => {
+                        // Admission control: past the cap, shed at the
+                        // edge instead of marching into thread/fd
+                        // exhaustion.
+                        if max_conns != 0
+                            // ord: Acquire connection gauge (pairs with
+                            // the AcqRel increments/decrements); an
+                            // approximate read is fine — the cap is
+                            // advisory by a connection or two under
+                            // races, never unbounded.
+                            && accept_conns.load(Ordering::Acquire) >= max_conns
+                        {
+                            shed_stream(stream, &accept_obs);
+                            conn_threads.retain(|h| !h.is_finished());
+                            continue;
+                        }
                         let _ = stream.set_nodelay(nodelay);
                         let _ = stream.set_nonblocking(false);
                         let cache = Arc::clone(&cache);
                         let stop = Arc::clone(&accept_stop);
+                        let draining = Arc::clone(&accept_draining);
                         let active = Arc::clone(&accept_conns);
                         let obs = Arc::clone(&accept_obs);
                         obs.total_connections.inc();
@@ -451,14 +554,30 @@ fn spawn_thread_model(
                         let spawned = std::thread::Builder::new()
                             .name("fleec-conn".into())
                             .spawn(move || {
-                                let _ = handle_connection(
-                                    stream,
-                                    cache,
-                                    stop,
-                                    Arc::clone(&active),
-                                    max_outbuf,
-                                    Arc::clone(&obs),
-                                );
+                                // Panic isolation: a connection state
+                                // machine that panics (engine bug,
+                                // injected fault) takes down this
+                                // connection only — same contract as the
+                                // reactor's per-dispatch guard.
+                                // `AssertUnwindSafe` is justified because
+                                // all per-connection state lives inside
+                                // the closure and dies with it.
+                                let result =
+                                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                        let _ = handle_connection(
+                                            stream,
+                                            cache,
+                                            stop,
+                                            draining,
+                                            Arc::clone(&active),
+                                            max_outbuf,
+                                            idle_timeout,
+                                            Arc::clone(&obs),
+                                        );
+                                    }));
+                                if result.is_err() {
+                                    obs.conn_panics.inc();
+                                }
                                 obs.closed_connections.inc();
                                 // ord: AcqRel gauge decrement; pairs with
                                 // the Acquire curr_conns() observers.
@@ -504,13 +623,16 @@ fn spawn_thread_model(
 
 /// Blocking read-pump-write loop for one thread-model connection. The
 /// protocol work all lives in [`batch::drain`]; this wrapper just moves
-/// bytes and honors the stop flag via a read timeout.
+/// bytes and honors the stop/drain flags via a read timeout.
+#[allow(clippy::too_many_arguments)]
 fn handle_connection(
     mut stream: TcpStream,
     cache: Arc<dyn Cache>,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
     curr_conns: Arc<AtomicUsize>,
     max_outbuf: usize,
+    idle_timeout: Option<Duration>,
     obs: Arc<ServerObs>,
 ) -> std::io::Result<()> {
     use std::io::Write;
@@ -520,13 +642,24 @@ fn handle_connection(
     let mut arena = batch::BatchArena::default();
     let mut chunk = [0u8; 16 * 1024];
     let mut pos = 0usize;
+    let mut last_active = Instant::now();
     'conn: loop {
         if stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        // Draining: replies are written synchronously below, so nothing
+        // is buffered — everything already answered has been delivered.
+        // Buffered-but-unexecuted request bytes are dead (see
+        // `Server::drain`); just close.
+        if draining.load(Ordering::Acquire) {
             return Ok(());
         }
         // Pump everything buffered; blocking writes between budget stops
         // mean the outbuf never accumulates past one drain call.
         loop {
+            // Failpoint `batch.drain`: an error closes this connection; a
+            // panic unwinds into the spawn closure's `catch_unwind`.
+            crate::faults::io("batch.drain")?;
             let d = batch::drain(
                 cache.as_ref(),
                 curr_conns.load(Ordering::Acquire),
@@ -534,13 +667,22 @@ fn handle_connection(
                 &mut outbuf,
                 &mut arena,
                 max_outbuf,
-                Some(&obs),
+                Some(obs.as_ref()),
             );
             pos += d.consumed;
             obs.note_outbuf(outbuf.len());
             if !outbuf.is_empty() {
+                // Failpoint `conn.write`: an injected error closes this
+                // connection like a real broken pipe.
+                crate::faults::io("conn.write")?;
                 stream.write_all(&outbuf)?;
                 outbuf.clear();
+            }
+            if d.fatal {
+                // The reply stream is no longer trustworthy (batch result
+                // mismatch): everything rendered was written above —
+                // close so the peer can't read desynced replies.
+                return Ok(());
             }
             match d.stop {
                 batch::DrainStop::Quit => return Ok(()),
@@ -552,14 +694,28 @@ fn handle_connection(
             inbuf.drain(..pos);
             pos = 0;
         }
-        // Refill.
+        // Refill. Failpoint `conn.read`: an injected error closes this
+        // connection like a real peer reset.
+        crate::faults::io("conn.read")?;
         match stream.read(&mut chunk) {
             Ok(0) => return Ok(()), // peer closed
-            Ok(n) => inbuf.extend_from_slice(&chunk[..n]),
+            Ok(n) => {
+                inbuf.extend_from_slice(&chunk[..n]);
+                last_active = Instant::now();
+            }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
+                // Idle reap: the 200ms read timeout doubles as the sweep
+                // tick (coarse by contract — same as the reactor's
+                // wakeup-driven sweep).
+                if let Some(idle) = idle_timeout {
+                    if last_active.elapsed() >= idle {
+                        obs.idle_reaped.inc();
+                        return Ok(());
+                    }
+                }
                 continue 'conn;
             }
             Err(e) => return Err(e),
@@ -842,5 +998,165 @@ mod tests {
         roundtrip(&mut s, b"set x 0 0 1\r\nv\r\n", b"STORED\r\n");
         assert_eq!(server.active_connections(), 1);
         server.shutdown();
+    }
+
+    fn start_cfg_server(config: ServerConfig) -> (Server, SocketAddr) {
+        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+        let server = Server::start(config, cache).unwrap();
+        let addr = server.addr();
+        (server, addr)
+    }
+
+    fn shed_scenario(model: ServerModel) {
+        let (server, addr) = start_cfg_server(ServerConfig {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            model,
+            max_conns: 1,
+            ..ServerConfig::default()
+        });
+        // Admit one connection and prove it's registered (the op forces
+        // the accept to have completed server-side).
+        let mut keep = TcpStream::connect(addr).unwrap();
+        keep.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        roundtrip(&mut keep, b"set k 0 0 1\r\nv\r\n", b"STORED\r\n");
+        // The second connection must be shed with an explicit reply.
+        let mut shed = TcpStream::connect(addr).unwrap();
+        shed.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut acc = Vec::new();
+        let mut buf = [0u8; 64];
+        loop {
+            match shed.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => acc.extend_from_slice(&buf[..n]),
+                Err(e) => panic!("expected busy reply then close, got {e}"),
+            }
+        }
+        assert_eq!(acc, b"SERVER_ERROR busy\r\n");
+        assert!(server.obs().sheds.get() >= 1);
+        // The admitted connection is unaffected.
+        roundtrip(&mut keep, b"get k\r\n", b"VALUE k 0 1\r\nv\r\nEND\r\n");
+        assert_eq!(server.active_connections(), 1);
+    }
+
+    #[test]
+    fn max_conns_sheds_with_busy_thread_model() {
+        shed_scenario(ServerModel::Thread);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn max_conns_sheds_with_busy_reactor() {
+        shed_scenario(ServerModel::Reactor { io_threads: 1 });
+    }
+
+    fn drain_scenario(model: ServerModel) {
+        let (mut server, addr) = start_cfg_server(ServerConfig {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            model,
+            ..ServerConfig::default()
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        roundtrip(&mut s, b"set d 0 0 1\r\nx\r\n", b"STORED\r\n");
+        let clean = server.drain(Duration::from_secs(5));
+        assert!(clean, "drain must complete within the deadline");
+        assert_eq!(server.active_connections(), 0);
+        // The drained connection was closed from the server side.
+        let mut buf = [0u8; 8];
+        assert_eq!(s.read(&mut buf).unwrap_or(0), 0, "peer must see EOF after drain");
+    }
+
+    #[test]
+    fn drain_closes_connections_thread_model() {
+        drain_scenario(ServerModel::Thread);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn drain_closes_connections_reactor() {
+        drain_scenario(ServerModel::Reactor { io_threads: 2 });
+    }
+
+    fn idle_reap_scenario(model: ServerModel) {
+        let (server, addr) = start_cfg_server(ServerConfig {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            model,
+            idle_timeout: Some(Duration::from_millis(100)),
+            ..ServerConfig::default()
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        roundtrip(&mut s, b"set i 0 0 1\r\nx\r\n", b"STORED\r\n");
+        // Go idle well past the timeout; the sweep is coarse (500ms
+        // cadence in the reactor, 200ms tick in the thread model), so
+        // give it generous room before asserting.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut buf = [0u8; 8];
+        loop {
+            match s.read(&mut buf) {
+                Ok(0) => break, // reaped: server closed us
+                Ok(_) => panic!("unexpected bytes on an idle connection"),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    assert!(Instant::now() < deadline, "connection never reaped");
+                }
+                Err(_) => break, // reset also counts as closed
+            }
+        }
+        assert!(server.obs().idle_reaped.get() >= 1);
+        assert_eq!(server.active_connections(), 0);
+    }
+
+    #[test]
+    fn idle_timeout_reaps_thread_model() {
+        idle_reap_scenario(ServerModel::Thread);
+    }
+
+    fn mismatch_closes_scenario(model: ServerModel) {
+        // Regression: a batch-result mismatch used to leave the protocol
+        // stream desynced but *open* — every later reply answered the
+        // wrong command. The server must emit the framed error and close.
+        let cache: Arc<dyn Cache> = Arc::new(crate::testutil::MismatchCache);
+        let server = Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".parse().unwrap(),
+                model,
+                ..ServerConfig::default()
+            },
+            cache,
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(b"set m 0 0 1\r\nx\r\n").unwrap();
+        let mut acc = Vec::new();
+        let mut buf = [0u8; 128];
+        loop {
+            match s.read(&mut buf) {
+                Ok(0) => break, // server closed us: the new contract
+                Ok(n) => acc.extend_from_slice(&buf[..n]),
+                Err(e) => panic!("expected framed error then close, got {e}"),
+            }
+        }
+        assert_eq!(acc, b"SERVER_ERROR batch result mismatch\r\n");
+    }
+
+    #[test]
+    fn mismatch_closes_connection_thread_model() {
+        mismatch_closes_scenario(ServerModel::Thread);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mismatch_closes_connection_reactor() {
+        mismatch_closes_scenario(ServerModel::Reactor { io_threads: 1 });
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn idle_timeout_reaps_reactor() {
+        idle_reap_scenario(ServerModel::Reactor { io_threads: 1 });
     }
 }

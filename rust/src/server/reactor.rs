@@ -1,5 +1,5 @@
 //! Event-driven server front-end: N reactor threads multiplexing
-//! non-blocking connections over a [`Poller`].
+//! non-blocking connections over a [`Poller`], under a supervisor.
 //!
 //! The thread-per-connection model spends one native thread (stack,
 //! scheduler slot, context switches) per socket, which caps connection
@@ -27,23 +27,50 @@
 //! **Accept.** Every reactor registers the shared listener; whichever
 //! thread wakes first accepts (losers observe `WouldBlock`). This spreads
 //! connections across reactors without any cross-thread handoff, queues
-//! or wakeup pipes — connections never migrate between reactors, so all
-//! per-connection state stays thread-local.
+//! or wakeup pipes — connections never migrate between reactors in
+//! steady state, so all per-connection state stays thread-local. Past
+//! `max_conns` live connections, new accepts are **shed**: a best-effort
+//! `SERVER_ERROR busy` reply, then close — degrading at the edge instead
+//! of marching into `EMFILE` and taking working connections with it.
 //!
-//! **Shutdown.** Reactors wake at least every [`WAIT`] to observe the
-//! server's stop flag; dropping a reactor closes its poller and all its
-//! connections.
+//! **Fault isolation.** Each readiness dispatch runs the connection's
+//! state machine under `catch_unwind`: a panic (an engine bug, a protocol
+//! state machine bug, an injected `faults` panic) closes *that*
+//! connection (`conn_panics` in `ServerObs`) and nothing else. If the
+//! reactor loop itself dies — poller failure, or a panic outside the
+//! per-connection guard — the thread parks its surviving connections in
+//! the fleet-wide handoff pen and exits; the [`supervise`] loop respawns
+//! a replacement thread, which **re-homes** the parked fds into its fresh
+//! poller instead of orphaning them. Clients riding a re-homed connection
+//! observe at most a pause (level-triggered readiness re-reports pending
+//! work to the new poller).
+//!
+//! **Idle reaping.** With `--conn-idle-timeout`, each connection carries
+//! a coarse last-activity timestamp (refreshed from one clock read per
+//! poller wakeup — never per event) and a periodic sweep on the existing
+//! [`WAIT`] wakeup closes connections idle past the limit
+//! (`idle_reaped`). Dead peers stop holding fds forever.
+//!
+//! **Shutdown and drain.** Reactors wake at least every [`WAIT`] to
+//! observe the server's stop flag; dropping a reactor closes its poller
+//! and all its connections. The graceful path (`Server::drain`) sets the
+//! `draining` flag instead: reactors disarm the listener, stop reading,
+//! flush every connection's buffered replies, and close each connection
+//! as its outbuf empties — then the deadline in `Server::drain` trips the
+//! hard stop for whatever is left.
 
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use super::batch::{self, BatchArena, DrainStop};
 use super::poller::{Event, Interest, Poller};
 use crate::cache::Cache;
+use crate::faults;
 
 /// Token reserved for the listener; connection tokens are slab indices.
 const LISTENER_TOKEN: usize = usize::MAX;
@@ -56,10 +83,24 @@ const WAIT: Duration = Duration::from_millis(25);
 /// per read would defeat the arena work).
 const COMPACT_AT: usize = 8 * 1024;
 
+/// Idle-reap sweep cadence: connections are checked for staleness at
+/// most this often (a linear pass over the slab — cheap at this rate,
+/// and the timeout itself is coarse by contract).
+const SWEEP: Duration = Duration::from_millis(500);
+
+/// How often the supervisor checks its reactors for unexpected exits.
+const SUPERVISE_EVERY: Duration = Duration::from_millis(20);
+
+/// Fleet-wide pen for connections whose reactor died: the dying thread
+/// parks its survivors here, the supervisor's replacement adopts them.
+pub(super) type Handoff = Mutex<Vec<Conn>>;
+
 /// Per-reactor configuration (shared fields come in as `Arc`s).
 pub(super) struct ReactorShared {
     pub cache: Arc<dyn Cache>,
     pub stop: Arc<AtomicBool>,
+    /// Graceful-drain flag: stop accepting, flush, close as emptied.
+    pub draining: Arc<AtomicBool>,
     /// Live connection count across all reactors (`stats` truthfulness).
     pub curr_conns: Arc<AtomicUsize>,
     /// Total un-flushed reply bytes across all connections — the
@@ -68,52 +109,207 @@ pub(super) struct ReactorShared {
     pub buffered_out: Arc<AtomicUsize>,
     /// Per-connection pending-reply cap before reading stops.
     pub max_outbuf: usize,
+    /// Admission cap: shed accepts past this many live connections
+    /// (0 = unlimited).
+    pub max_conns: usize,
+    /// Reap connections with no events for this long (`None` = never).
+    pub idle_timeout: Option<Duration>,
     pub nodelay: bool,
     /// Serving-plane observability (counters, sampled histograms).
     pub obs: Arc<super::ServerObs>,
+    /// Orphan pen for supervisor re-homing (see module docs).
+    pub handoff: Arc<Handoff>,
 }
 
-/// Run one reactor until the stop flag trips (or the poller itself
-/// fails — never for per-connection errors). All exits run the
-/// connection-count/gauge accounting.
-pub(super) fn run_reactor(listener: TcpListener, shared: ReactorShared) -> io::Result<()> {
-    let mut poller = Poller::new()?;
-    poller.register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)?;
-    let mut conns: Vec<Option<Conn>> = Vec::new();
-    let mut free: Vec<usize> = Vec::new();
-    let mut events: Vec<Event> = Vec::new();
-    while !shared.stop.load(Ordering::Acquire) {
-        // A hard poller failure ends this reactor, but via `break` so the
-        // gauge/connection-count accounting below still runs.
-        if poller.wait(&mut events, Some(WAIT)).is_err() {
-            break;
+impl Clone for ReactorShared {
+    fn clone(&self) -> ReactorShared {
+        ReactorShared {
+            cache: Arc::clone(&self.cache),
+            stop: Arc::clone(&self.stop),
+            draining: Arc::clone(&self.draining),
+            curr_conns: Arc::clone(&self.curr_conns),
+            buffered_out: Arc::clone(&self.buffered_out),
+            max_outbuf: self.max_outbuf,
+            max_conns: self.max_conns,
+            idle_timeout: self.idle_timeout,
+            nodelay: self.nodelay,
+            obs: Arc::clone(&self.obs),
+            handoff: Arc::clone(&self.handoff),
         }
+    }
+}
+
+/// One reactor's connection table. Owned by the thread *closure*, outside
+/// the `catch_unwind` around the event loop, so survivors can be parked
+/// for re-homing even when the loop dies by panic.
+#[derive(Default)]
+struct ReactorState {
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+}
+
+/// Run the reactor fleet to completion: spawn `n` reactor threads, then
+/// watch them — a thread that exits while the server is live is
+/// respawned (its connections adopted from the handoff pen by the
+/// replacement). Called on the supervisor thread; returns when the stop
+/// flag trips and every reactor has joined.
+pub(super) fn supervise(listener: TcpListener, shared: ReactorShared, n: usize) {
+    let mut slots: Vec<Option<std::thread::JoinHandle<()>>> = Vec::with_capacity(n);
+    for i in 0..n {
+        slots.push(spawn_reactor(&listener, &shared, i));
+    }
+    while !shared.stop.load(Ordering::Acquire) {
+        std::thread::sleep(SUPERVISE_EVERY);
+        for (i, slot) in slots.iter_mut().enumerate() {
+            let finished = slot.as_ref().map(|h| h.is_finished()).unwrap_or(true);
+            if !finished || shared.stop.load(Ordering::Acquire) {
+                continue;
+            }
+            if let Some(h) = slot.take() {
+                let _ = h.join();
+            }
+            shared.obs.reactor_respawns.inc();
+            *slot = spawn_reactor(&listener, &shared, i);
+        }
+    }
+    for slot in slots.iter_mut() {
+        if let Some(h) = slot.take() {
+            let _ = h.join();
+        }
+    }
+    // A reactor that died just as the stop flag tripped may have parked
+    // connections no replacement ever adopted: account them closed here
+    // so the gauges end truthful.
+    let parked = {
+        let mut pen = shared.handoff.lock().unwrap_or_else(|e| e.into_inner());
+        std::mem::take(&mut *pen)
+    };
+    for conn in parked {
+        account_closed(&conn, &shared);
+    }
+}
+
+/// Spawn one reactor thread (`None` if thread creation itself failed —
+/// the supervisor retries on its next tick).
+fn spawn_reactor(
+    listener: &TcpListener,
+    shared: &ReactorShared,
+    index: usize,
+) -> Option<std::thread::JoinHandle<()>> {
+    // Each reactor owns a dup of the listening fd; the clones keep
+    // listening no matter which thread dies.
+    let own = listener.try_clone().ok()?;
+    let shared = shared.clone();
+    std::thread::Builder::new()
+        .name(format!("fleec-reactor-{index}"))
+        .spawn(move || reactor_thread(own, shared))
+        .ok()
+}
+
+/// Thread body for one reactor: the event loop under a loop-level
+/// `catch_unwind`. A clean exit (stop flag) accounts its connections
+/// closed; an abnormal exit (poller failure, escaped panic) parks the
+/// survivors for the supervisor's replacement and returns, which is what
+/// the supervisor observes as a died thread.
+fn reactor_thread(listener: TcpListener, shared: ReactorShared) {
+    let mut state = ReactorState::default();
+    let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        run_reactor(&listener, &shared, &mut state)
+    }));
+    let clean = matches!(result, Ok(Ok(()))) || shared.stop.load(Ordering::Acquire);
+    if !clean {
+        let mut pen = shared.handoff.lock().unwrap_or_else(|e| e.into_inner());
+        for conn in state.conns.iter_mut().filter_map(Option::take) {
+            pen.push(conn);
+        }
+        return;
+    }
+    // Account the connections this reactor takes down with it.
+    for conn in state.conns.iter().flatten() {
+        account_closed(conn, &shared);
+    }
+}
+
+/// Gauge/counter accounting for one connection leaving the server.
+fn account_closed(conn: &Conn, shared: &ReactorShared) {
+    adjust_gauge(&shared.buffered_out, conn.out_pending(), 0);
+    shared.obs.closed_connections.inc();
+    // ord: AcqRel connection gauge; Acquire counterpart:
+    // Server::curr_conns observers.
+    shared.curr_conns.fetch_sub(1, Ordering::AcqRel);
+}
+
+/// One reactor's event loop, until the stop flag trips. `Err` means the
+/// loop can no longer run (poller failure — real or injected); the
+/// caller parks `state`'s survivors for re-homing. Never errors for
+/// per-connection failures.
+fn run_reactor(
+    listener: &TcpListener,
+    shared: &ReactorShared,
+    state: &mut ReactorState,
+) -> io::Result<()> {
+    let mut poller = Poller::new()?;
+    let mut listener_armed = !shared.draining.load(Ordering::Acquire);
+    if listener_armed {
+        poller.register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)?;
+    }
+    adopt_handoff(&mut poller, state, shared);
+    let mut events: Vec<Event> = Vec::new();
+    let mut last_sweep = Instant::now();
+    while !shared.stop.load(Ordering::Acquire) {
+        poller.wait(&mut events, Some(WAIT))?;
+        // Failpoint `poller.wait`: an injected failure kills this
+        // reactor the same way a real epoll_wait failure would —
+        // exercising supervisor respawn + fd re-homing.
+        faults::io("poller.wait")?;
         shared.obs.poller_wakeups.inc();
+        // One clock read per wakeup — the coarse tick every
+        // last-activity stamp this wakeup shares. Never per event.
+        let now = Instant::now();
+        let draining = shared.draining.load(Ordering::Acquire);
         for i in 0..events.len() {
             let ev = events[i];
             if ev.token == LISTENER_TOKEN {
-                accept_ready(&listener, &mut poller, &mut conns, &mut free, &shared);
+                if !draining {
+                    accept_ready(listener, &mut poller, state, shared, now);
+                }
                 continue;
             }
-            let Some(slot) = conns.get_mut(ev.token) else {
+            let Some(slot) = state.conns.get_mut(ev.token) else {
                 continue;
             };
             let Some(conn) = slot.as_mut() else {
                 continue;
             };
             let before = conn.out_pending();
-            let keep = matches!(conn.on_ready(ev.readable, ev.writable, &shared), Ok(true));
+            // Panic isolation: a connection state machine that panics
+            // (engine bug, injected fault) takes down this connection
+            // only. `AssertUnwindSafe` is justified because the `conn`
+            // the closure may leave half-mutated is closed and dropped
+            // on the panic path before anything reads it again; the
+            // cache itself guards its own invariants (EBR guards and
+            // stripe locks release on unwind).
+            let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                conn.on_ready(ev.readable, ev.writable, shared)
+            }));
+            let panicked = result.is_err();
+            if panicked {
+                shared.obs.conn_panics.inc();
+            }
+            let mut keep = matches!(result, Ok(Ok(true)));
             let after = if keep { conn.out_pending() } else { 0 };
             adjust_gauge(&shared.buffered_out, before, after);
             // Re-arm only on change; level triggering makes a stale-but-
             // wider interest harmless, but a *failed* re-arm would leave
             // the connection unable to make progress — close it.
-            let keep = keep && conn.rearm(&mut poller).is_ok();
-            if !keep {
+            keep = keep && conn.rearm(&mut poller).is_ok();
+            if keep {
+                conn.last_active = now;
+            } else {
                 adjust_gauge(&shared.buffered_out, after, 0);
                 let conn = slot.take().expect("conn checked above");
                 let _ = poller.deregister(conn.stream.as_raw_fd());
-                free.push(ev.token);
+                state.free.push(ev.token);
                 shared.obs.closed_connections.inc();
                 // ord: AcqRel connection gauge; Acquire counterpart:
                 // Server::curr_conns observers.
@@ -121,47 +317,161 @@ pub(super) fn run_reactor(listener: TcpListener, shared: ReactorShared) -> io::R
                 // Dropping `conn` closes the socket.
             }
         }
+        if draining {
+            if listener_armed {
+                // Stop accepting: un-accepted backlog connections stay
+                // in the kernel (reset when the listener finally closes)
+                // instead of spinning the level-triggered poller.
+                let _ = poller.deregister(listener.as_raw_fd());
+                listener_armed = false;
+            }
+            drain_sweep(&mut poller, state, shared);
+        } else if let Some(idle) = shared.idle_timeout {
+            if now.duration_since(last_sweep) >= SWEEP {
+                last_sweep = now;
+                idle_sweep(&mut poller, state, shared, now, idle);
+            }
+        }
     }
-    // Account the connections this reactor takes down with it.
-    for conn in conns.iter().flatten() {
-        adjust_gauge(&shared.buffered_out, conn.out_pending(), 0);
+    Ok(())
+}
+
+/// Adopt connections a died reactor parked: register each into this
+/// reactor's fresh poller (re-homing). A connection whose fd can no
+/// longer register is closed and accounted.
+fn adopt_handoff(poller: &mut Poller, state: &mut ReactorState, shared: &ReactorShared) {
+    let parked = {
+        let mut pen = shared.handoff.lock().unwrap_or_else(|e| e.into_inner());
+        std::mem::take(&mut *pen)
+    };
+    for mut conn in parked {
+        let token = state.free.pop().unwrap_or_else(|| {
+            state.conns.push(None);
+            state.conns.len() - 1
+        });
+        conn.token = token;
+        // Want-everything interest: level triggering re-reports whatever
+        // is actually pending, and the first dispatch re-arms precisely.
+        let want = Interest {
+            read: !conn.read_closed && !conn.closing && !conn.backpressured(),
+            write: true,
+        };
+        if poller.register(conn.stream.as_raw_fd(), token, want).is_err() {
+            state.free.push(token);
+            account_closed(&conn, shared);
+            continue;
+        }
+        conn.interest = want;
+        conn.last_active = Instant::now();
+        state.conns[token] = Some(conn);
+    }
+}
+
+/// Close every connection idle past `idle`: dead peers must not hold
+/// fds (and their outbuf memory) forever. Runs at most once per
+/// [`SWEEP`] on the existing wakeup — no per-event cost.
+fn idle_sweep(
+    poller: &mut Poller,
+    state: &mut ReactorState,
+    shared: &ReactorShared,
+    now: Instant,
+    idle: Duration,
+) {
+    for token in 0..state.conns.len() {
+        let Some(conn) = state.conns[token].as_ref() else {
+            continue;
+        };
+        if now.duration_since(conn.last_active) < idle {
+            continue;
+        }
+        let conn = state.conns[token].take().expect("conn checked above");
+        let _ = poller.deregister(conn.stream.as_raw_fd());
+        state.free.push(token);
+        shared.obs.idle_reaped.inc();
+        account_closed(&conn, shared);
+    }
+}
+
+/// One drain pass: push every connection toward flush-and-close. Called
+/// on each wakeup while draining, so a connection closes within one
+/// [`WAIT`] of its outbuf emptying even with no socket events.
+fn drain_sweep(poller: &mut Poller, state: &mut ReactorState, shared: &ReactorShared) {
+    for token in 0..state.conns.len() {
+        let Some(conn) = state.conns[token].as_mut() else {
+            continue;
+        };
+        // Drain semantics: answer what is already rendered, accept
+        // nothing more. Unconsumed request bytes are dead.
+        conn.closing = true;
+        conn.inbuf.clear();
+        conn.pos = 0;
+        let before = conn.out_pending();
+        let flush_ok = conn.flush().is_ok();
+        let after = conn.out_pending();
+        adjust_gauge(&shared.buffered_out, before, after);
+        if flush_ok && after > 0 {
+            let _ = conn.rearm(poller);
+            continue;
+        }
+        let conn = state.conns[token].take().expect("conn checked above");
+        let _ = poller.deregister(conn.stream.as_raw_fd());
+        state.free.push(token);
+        adjust_gauge(&shared.buffered_out, after, 0);
         shared.obs.closed_connections.inc();
         // ord: AcqRel connection gauge; Acquire counterpart:
         // Server::curr_conns observers.
         shared.curr_conns.fetch_sub(1, Ordering::AcqRel);
     }
-    Ok(())
 }
 
 /// Accept until `WouldBlock`; each new socket becomes a registered
-/// connection on *this* reactor.
+/// connection on *this* reactor — unless the admission cap sheds it.
 fn accept_ready(
     listener: &TcpListener,
     poller: &mut Poller,
-    conns: &mut Vec<Option<Conn>>,
-    free: &mut Vec<usize>,
+    state: &mut ReactorState,
     shared: &ReactorShared,
+    now: Instant,
 ) {
     loop {
+        // Failpoint `accept`: an injected failure takes the transient-
+        // error path below (back off, keep serving).
+        if faults::fail("accept") {
+            std::thread::sleep(Duration::from_millis(10));
+            return;
+        }
         match listener.accept() {
             Ok((stream, _peer)) => {
+                // Admission control: past the cap, shed at the edge with
+                // an explicit reply instead of marching into EMFILE.
+                if shared.max_conns != 0
+                    // ord: Acquire connection gauge (pairs with the
+                    // AcqRel increments/decrements); an approximate read
+                    // is fine — the cap is advisory by a connection or
+                    // two under races, never unbounded.
+                    && shared.curr_conns.load(Ordering::Acquire) >= shared.max_conns
+                {
+                    super::shed_stream(stream, &shared.obs);
+                    continue;
+                }
                 let _ = stream.set_nodelay(shared.nodelay);
                 if stream.set_nonblocking(true).is_err() {
                     continue; // drop the socket; the peer sees a reset
                 }
-                let token = free.pop().unwrap_or_else(|| {
-                    conns.push(None);
-                    conns.len() - 1
+                let token = state.free.pop().unwrap_or_else(|| {
+                    state.conns.push(None);
+                    state.conns.len() - 1
                 });
-                let conn = Conn::new(stream, token, shared.max_outbuf);
+                let mut conn = Conn::new(stream, token, shared.max_outbuf);
+                conn.last_active = now;
                 if poller
                     .register(conn.stream.as_raw_fd(), token, Interest::READ)
                     .is_err()
                 {
-                    free.push(token);
+                    state.free.push(token);
                     continue;
                 }
-                conns[token] = Some(conn);
+                state.conns[token] = Some(conn);
                 shared.obs.total_connections.inc();
                 // ord: AcqRel connection gauge; Acquire counterpart:
                 // Server::curr_conns observers.
@@ -195,7 +505,7 @@ fn adjust_gauge(gauge: &AtomicUsize, before: usize, after: usize) {
 
 /// One non-blocking connection: buffers, batch arenas, and the flags the
 /// state machine steers by.
-struct Conn {
+pub(super) struct Conn {
     stream: TcpStream,
     token: usize,
     /// Raw request bytes; `pos..` is unconsumed.
@@ -210,12 +520,16 @@ struct Conn {
     /// Interest currently registered with the poller.
     interest: Interest,
     max_outbuf: usize,
-    /// `quit` executed: flush remaining replies, then close.
+    /// `quit` executed (or the reply stream turned fatal): flush
+    /// remaining replies, then close.
     closing: bool,
     /// Peer closed its write half (read returned 0).
     read_closed: bool,
     /// The pump stopped for lack of a complete command (vs. budget).
     need_input: bool,
+    /// Coarse last-activity stamp (refreshed per wakeup, not per
+    /// syscall) — the idle-reap sweep's input.
+    last_active: Instant,
 }
 
 impl Conn {
@@ -233,6 +547,7 @@ impl Conn {
             closing: false,
             read_closed: false,
             need_input: true,
+            last_active: Instant::now(),
         }
     }
 
@@ -277,7 +592,12 @@ impl Conn {
     /// Write `outbuf` to the socket until drained or `WouldBlock`.
     fn flush(&mut self) -> io::Result<()> {
         while self.out_pos < self.outbuf.len() {
-            match self.stream.write(&self.outbuf[self.out_pos..]) {
+            // Failpoint `conn.write`: injected short writes exercise the
+            // partial-write resumption below; injected errors close the
+            // connection like any real socket error.
+            let pending = self.outbuf.len() - self.out_pos;
+            let end = self.out_pos + faults::write_len("conn.write", pending)?;
+            match self.stream.write(&self.outbuf[self.out_pos..end]) {
                 Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
                 Ok(n) => self.out_pos += n,
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
@@ -304,6 +624,10 @@ impl Conn {
     /// more bytes, the connection backpressures, or a `quit` lands.
     fn pump(&mut self, shared: &ReactorShared) -> io::Result<()> {
         while !self.closing && !self.need_input && !self.backpressured() {
+            // Failpoint `batch.drain`: a delay models a slow engine; an
+            // error closes this connection; a panic is the forced-panic
+            // site the per-connection `catch_unwind` is tested with.
+            faults::io("batch.drain")?;
             let budget = self.out_pos.saturating_add(self.max_outbuf);
             let d = batch::drain(
                 shared.cache.as_ref(),
@@ -316,6 +640,12 @@ impl Conn {
             );
             self.pos += d.consumed;
             shared.obs.note_outbuf(self.out_pending());
+            if d.fatal {
+                // The reply stream is no longer trustworthy (batch
+                // result mismatch): flush what was rendered, then close
+                // — same policy as the thread model.
+                self.closing = true;
+            }
             match d.stop {
                 DrainStop::Quit => self.closing = true,
                 DrainStop::NeedMoreInput => self.need_input = true,
@@ -339,6 +669,9 @@ impl Conn {
     fn fill(&mut self, shared: &ReactorShared) -> io::Result<()> {
         let mut chunk = [0u8; 16 * 1024];
         while !self.read_closed && !self.closing && !self.backpressured() {
+            // Failpoint `conn.read`: an injected error closes this
+            // connection like a real peer reset.
+            faults::io("conn.read")?;
             match self.stream.read(&mut chunk) {
                 Ok(0) => self.read_closed = true,
                 Ok(n) => {
@@ -376,6 +709,9 @@ impl Conn {
             write: self.out_pending() > 0,
         };
         if want != self.interest {
+            // Failpoint `poller.arm`: a failed re-arm closes this
+            // connection (same as a real epoll_ctl failure).
+            faults::io("poller.arm")?;
             poller.modify(self.stream.as_raw_fd(), self.token, want)?;
             self.interest = want;
         }

@@ -201,6 +201,14 @@ impl Slab {
     // guard-lent memory — byte stability is the *caller's* story (items
     // become guard-stable only once published, see cache/fleec/node.rs).
     pub fn alloc(&self, size: usize) -> Option<(*mut u8, u8)> {
+        // Failpoint `slab.alloc` (chaos tests): an injected failure is
+        // indistinguishable from real exhaustion — it raises the
+        // flush-request epoch and returns `None`, driving callers down
+        // their reclamation/eviction/OOM paths.
+        if crate::faults::fail("slab.alloc") {
+            self.request_magazine_flush();
+            return None;
+        }
         let class = self.class_for(size)?;
         let sc = &self.classes[class as usize];
         if let Some(local) = magazine::local(self) {

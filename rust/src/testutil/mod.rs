@@ -17,19 +17,26 @@ pub fn default_cases() -> u64 {
         .unwrap_or(64)
 }
 
-/// Suite-level RNG seed: `FLEEC_SEED` overrides `default`, and the
-/// effective value is announced on stderr (`FLEEC_SEED=<n>`) so any
-/// failing randomized run — local or CI — can be replayed bit-exactly by
-/// exporting the printed value. Call once per test, before spawning
-/// workers; derive per-thread streams by xor/offset so threads stay
-/// decorrelated.
+/// Suite-level RNG seed: `FLEEC_SEED` overrides `default` (decimal or
+/// `0x`-prefixed hex), and the effective value is announced on stderr
+/// (`FLEEC_SEED=<n>`) so any failing randomized run — local or CI — can
+/// be replayed bit-exactly by exporting the printed value. Call once per
+/// test, before spawning workers; derive per-thread streams by
+/// xor/offset so threads stay decorrelated.
 pub fn suite_seed(default: u64) -> u64 {
     let seed = std::env::var("FLEEC_SEED")
         .ok()
-        .and_then(|s| s.parse().ok())
+        .and_then(|s| parse_seed(&s))
         .unwrap_or(default);
     eprintln!("FLEEC_SEED={seed}");
     seed
+}
+
+fn parse_seed(s: &str) -> Option<u64> {
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse().ok(),
+    }
 }
 
 /// Run `prop` on `cases` random streams. On panic, reports the failing
@@ -116,6 +123,15 @@ mod tests {
     }
 
     #[test]
+    fn seed_parses_decimal_and_hex() {
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed("0xC4A05EED"), Some(0xC4A0_5EED));
+        assert_eq!(parse_seed("0Xff"), Some(255));
+        assert_eq!(parse_seed("nope"), None);
+        assert_eq!(parse_seed("0xg"), None);
+    }
+
+    #[test]
     fn op_sequence_is_deterministic_per_seed() {
         let mut a = Xoshiro256::seeded(9);
         let mut b = Xoshiro256::seeded(9);
@@ -128,5 +144,87 @@ mod tests {
         let ops: Vec<u64> = vec![1, 2, 3, 7, 4, 5];
         let minimal = shrink_prefix(&ops, |prefix| !prefix.contains(&7));
         assert_eq!(minimal, vec![1, 2, 3, 7]);
+    }
+}
+
+/// A deliberately contract-violating [`crate::cache::Cache`]: every
+/// batched op is answered with the **wrong result variant** (exactly
+/// once, so the sink's exactly-once accounting stays clean). This is the
+/// regression fixture for the batch-result-mismatch path — the emitter
+/// must render a framed `SERVER_ERROR batch result mismatch` and flag
+/// the stream fatal so the serving front-ends close the connection
+/// instead of serving desynced replies forever.
+pub struct MismatchCache;
+
+impl crate::cache::Cache for MismatchCache {
+    fn engine_name(&self) -> &'static str {
+        "mismatch-stub"
+    }
+
+    fn execute_batch_into(
+        &self,
+        ops: &[crate::cache::Op<'_>],
+        sink: &mut dyn crate::cache::BatchSink,
+    ) {
+        for (idx, op) in ops.iter().enumerate() {
+            // Touch expects Touched — hand it a Store; everything else
+            // gets Touched. Either way the variant is wrong.
+            match op {
+                crate::cache::Op::Touch { .. } => {
+                    sink.store(idx, crate::cache::StoreOutcome::Stored)
+                }
+                _ => sink.touched(idx, true),
+            }
+        }
+    }
+
+    fn get(&self, _key: &[u8]) -> Option<crate::cache::GetResult> {
+        None
+    }
+    fn set(&self, _k: &[u8], _v: &[u8], _f: u32, _e: u32) -> crate::cache::StoreOutcome {
+        crate::cache::StoreOutcome::Stored
+    }
+    fn add(&self, _k: &[u8], _v: &[u8], _f: u32, _e: u32) -> crate::cache::StoreOutcome {
+        crate::cache::StoreOutcome::Stored
+    }
+    fn replace(&self, _k: &[u8], _v: &[u8], _f: u32, _e: u32) -> crate::cache::StoreOutcome {
+        crate::cache::StoreOutcome::Stored
+    }
+    fn append(&self, _k: &[u8], _s: &[u8]) -> crate::cache::StoreOutcome {
+        crate::cache::StoreOutcome::Stored
+    }
+    fn prepend(&self, _k: &[u8], _p: &[u8]) -> crate::cache::StoreOutcome {
+        crate::cache::StoreOutcome::Stored
+    }
+    fn cas(&self, _k: &[u8], _v: &[u8], _f: u32, _e: u32, _c: u64) -> crate::cache::StoreOutcome {
+        crate::cache::StoreOutcome::Stored
+    }
+    fn delete(&self, _key: &[u8]) -> bool {
+        false
+    }
+    fn incr(&self, _key: &[u8], _delta: u64) -> Option<u64> {
+        None
+    }
+    fn decr(&self, _key: &[u8], _delta: u64) -> Option<u64> {
+        None
+    }
+    fn touch(&self, _key: &[u8], _exptime: u32) -> bool {
+        false
+    }
+    fn flush_all(&self) {}
+    fn item_count(&self) -> usize {
+        0
+    }
+    fn bucket_count(&self) -> usize {
+        0
+    }
+    fn mem_used(&self) -> usize {
+        0
+    }
+    fn mem_limit(&self) -> usize {
+        0
+    }
+    fn stats(&self) -> crate::cache::StatsSnapshot {
+        crate::cache::StatsSnapshot::default()
     }
 }

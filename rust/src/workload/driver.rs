@@ -430,6 +430,13 @@ pub struct WireOptions {
     pub workers: usize,
     /// Pre-insert the catalog through one pipelined connection first.
     pub prefill: bool,
+    /// Per-reply client read timeout (`None` = wait forever). A timed-out
+    /// connection is abandoned and counted in [`WireReport::timeouts`] —
+    /// its reply stream position is unknown, so it cannot be reused — but
+    /// the run continues on the surviving connections. This is what lets
+    /// the chaos harness drive a fault-injected server without one stalled
+    /// connection hanging the whole bench.
+    pub read_timeout: Option<Duration>,
 }
 
 impl Default for WireOptions {
@@ -440,6 +447,7 @@ impl Default for WireOptions {
             ops_per_conn: 10_000,
             workers: 0,
             prefill: true,
+            read_timeout: None,
         }
     }
 }
@@ -451,6 +459,9 @@ pub struct WireReport {
     pub total_ops: u64,
     pub gets: u64,
     pub hits: u64,
+    /// Connections abandoned because a reply read exceeded
+    /// [`WireOptions::read_timeout`].
+    pub timeouts: u64,
     pub elapsed: Duration,
 }
 
@@ -469,15 +480,20 @@ impl WireReport {
         }
     }
 
-    /// One-line summary used by benches.
+    /// One-line summary used by benches. Timeouts only appear when they
+    /// happened — the healthy-run row format stays stable.
     pub fn row(&self) -> String {
-        format!(
+        let mut row = format!(
             "conns={:>4} ops={:>9} tput={:>10.0}/s hit={:.4}",
             self.conns,
             self.total_ops,
             self.throughput(),
             self.hit_ratio()
-        )
+        );
+        if self.timeouts > 0 {
+            row.push_str(&format!(" timeouts={}", self.timeouts));
+        }
+        row
     }
 }
 
@@ -527,17 +543,18 @@ pub fn run_wire(
         wire_prefill(addr, spec)?;
     }
     let rounds = (opts.ops_per_conn + depth as u64 - 1) / depth as u64;
+    let read_timeout = opts.read_timeout;
     let t0 = Instant::now();
-    let mut totals = (0u64, 0u64, 0u64); // (ops, gets, hits)
+    let mut totals = (0u64, 0u64, 0u64, 0u64); // (ops, gets, hits, timeouts)
     let mut first_err: Option<anyhow::Error> = None;
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
-            handles.push(s.spawn(move || -> crate::Result<(u64, u64, u64)> {
+            handles.push(s.spawn(move || -> crate::Result<(u64, u64, u64, u64)> {
                 let my: Vec<usize> = (w..conns).step_by(workers).collect();
                 let mut clients = Vec::with_capacity(my.len());
                 for _ in &my {
-                    clients.push(Client::connect(addr)?);
+                    clients.push(Client::connect_with(addr, read_timeout)?);
                 }
                 let mut streams: Vec<OpStream> = my
                     .iter()
@@ -545,11 +562,20 @@ pub fn run_wire(
                     .collect();
                 let mut pending: Vec<Option<PreparedPipeline>> =
                     (0..clients.len()).map(|_| None).collect();
+                // Connections abandoned after a reply read timed out: the
+                // stream position is unknown, so they are never reused.
+                let mut dead: Vec<bool> = vec![false; clients.len()];
                 let mut key = [0u8; KEY_LEN];
                 let mut val = vec![0u8; 4096];
-                let (mut ops_n, mut gets, mut hits) = (0u64, 0u64, 0u64);
+                let (mut ops_n, mut gets, mut hits, mut timeouts) = (0u64, 0u64, 0u64, 0u64);
                 for _round in 0..rounds {
+                    if dead.iter().all(|&d| d) {
+                        break;
+                    }
                     for i in 0..clients.len() {
+                        if dead[i] {
+                            continue;
+                        }
                         let prep = {
                             let mut p = clients[i].pipeline();
                             for _ in 0..depth {
@@ -573,27 +599,39 @@ pub fn run_wire(
                         pending[i] = Some(prep);
                     }
                     for i in 0..clients.len() {
-                        let prep = pending[i].take().expect("pipeline sent above");
-                        for reply in clients[i].recv_prepared(prep)? {
-                            if let PipelineReply::Values(v) = reply {
-                                gets += 1;
-                                if !v.is_empty() {
-                                    hits += 1;
+                        let Some(prep) = pending[i].take() else {
+                            continue; // dead before send this round
+                        };
+                        match clients[i].recv_prepared(prep) {
+                            Ok(replies) => {
+                                for reply in replies {
+                                    if let PipelineReply::Values(v) = reply {
+                                        gets += 1;
+                                        if !v.is_empty() {
+                                            hits += 1;
+                                        }
+                                    }
                                 }
+                                ops_n += depth as u64;
                             }
+                            Err(e) if crate::client::is_timeout(&e) => {
+                                timeouts += 1;
+                                dead[i] = true;
+                            }
+                            Err(e) => return Err(e),
                         }
-                        ops_n += depth as u64;
                     }
                 }
-                Ok((ops_n, gets, hits))
+                Ok((ops_n, gets, hits, timeouts))
             }));
         }
         for h in handles {
             match h.join().expect("wire worker panicked") {
-                Ok((o, g, hi)) => {
+                Ok((o, g, hi, t)) => {
                     totals.0 += o;
                     totals.1 += g;
                     totals.2 += hi;
+                    totals.3 += t;
                 }
                 Err(e) => {
                     if first_err.is_none() {
@@ -611,6 +649,7 @@ pub fn run_wire(
         total_ops: totals.0,
         gets: totals.1,
         hits: totals.2,
+        timeouts: totals.3,
         elapsed: t0.elapsed(),
     })
 }

@@ -1,0 +1,306 @@
+//! Chaos differential: a live server under **injected faults** must
+//! degrade, never corrupt.
+//!
+//! The harness drives randomized pipelined traffic over real sockets
+//! while `fleec::faults` rules make the slab refuse allocations, the
+//! socket writes truncate, the reads stall, and one connection's drain
+//! **panic** outright. The invariants under all of that:
+//!
+//! - every reply on a surviving connection is byte-exact against a
+//!   per-connection oracle (a hit must equal the last `STORED` value;
+//!   a miss is always legal — eviction and refused stores are normal);
+//! - an injected panic kills **one** connection, not the server, and is
+//!   counted (`stats internals` → `conn_panics`);
+//! - overload shedding and idle reaping surface in `stats internals`;
+//! - after the storm, [`Server::drain`] still joins within its deadline.
+//!
+//! Seeding follows the repo-wide `FLEEC_SEED` convention
+//! ([`fleec::testutil::suite_seed`]): the CI chaos job pins and prints
+//! the seed, so any failure replays bit-for-bit (per-site decision
+//! sequences are seeded; thread interleaving remains free, as a chaos
+//! test wants).
+//!
+//! Compiled only with `--features faults`; the fault table is
+//! process-global, so scenarios serialize on a gate mutex.
+#![cfg(all(not(miri), feature = "faults"))]
+
+use std::collections::HashMap;
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use fleec::cache::{build_engine, CacheConfig};
+use fleec::client::{Client, PipelineReply};
+use fleec::faults;
+use fleec::server::{Server, ServerConfig, ServerModel};
+use fleec::sync::Xoshiro256;
+
+/// The fault rule table is process-global: scenarios must not overlap.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Every front-end model this platform can run.
+fn models() -> Vec<ServerModel> {
+    if cfg!(unix) {
+        vec![ServerModel::Thread, ServerModel::Reactor { io_threads: 2 }]
+    } else {
+        vec![ServerModel::Thread]
+    }
+}
+
+fn stat(rows: &[(String, String)], name: &str) -> u64 {
+    rows.iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.parse().unwrap())
+        .unwrap_or_else(|| panic!("stat {name} missing: {rows:?}"))
+}
+
+/// One queued pipeline op plus what the oracle needs to check its reply.
+enum Q {
+    Get(u64),
+    Set(u64, Vec<u8>),
+}
+
+const CONNS: usize = 4;
+const ROUNDS: usize = 150;
+const DEPTH: usize = 4;
+
+#[test]
+fn chaos_traffic_survives_faults_and_drains() {
+    let base = fleec::testutil::suite_seed(0xC4A0_5EED);
+    for model in models() {
+        let _g = gate();
+        // The storm: ~3% of slab allocations refused (drives the OOM /
+        // eviction paths), 15% of reactor socket writes truncated
+        // (exercises short-write resumption), 2% of reads delayed, and
+        // exactly one drain call panics (exercises panic isolation).
+        faults::configure(&format!(
+            "slab.alloc:oom:0.03:{},conn.write:partial-write:0.15:{},\
+             conn.read:delay:0.02:{},batch.drain:panic:once:{}",
+            base,
+            base ^ 1,
+            base ^ 2,
+            base ^ 3,
+        ))
+        .unwrap();
+
+        let cache = build_engine(
+            "fleec",
+            CacheConfig {
+                mem_limit: 8 << 20,
+                ..CacheConfig::small()
+            },
+        )
+        .unwrap();
+        let mut server = Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".parse().unwrap(),
+                model,
+                ..ServerConfig::default()
+            },
+            cache,
+        )
+        .unwrap();
+        let addr = server.addr();
+
+        let mut survivors = 0usize;
+        let mut verified = 0u64;
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..CONNS as u64 {
+                handles.push(s.spawn(move || -> (bool, u64) {
+                    let Ok(mut c) = Client::connect_with(addr, Some(Duration::from_secs(10)))
+                    else {
+                        return (false, 0);
+                    };
+                    let mut rng = Xoshiro256::seeded(base ^ (t << 32));
+                    // Keys are prefixed per connection, so this oracle is
+                    // the *only* writer of the keys it checks.
+                    let mut oracle: HashMap<u64, Vec<u8>> = HashMap::new();
+                    let mut checked = 0u64;
+                    for _round in 0..ROUNDS {
+                        let mut queued = Vec::with_capacity(DEPTH);
+                        let mut p = c.pipeline();
+                        for _ in 0..DEPTH {
+                            let id = rng.next_below(64);
+                            let key = format!("c{t}-k{id}");
+                            if rng.chance(0.5) {
+                                p.get(key.as_bytes());
+                                queued.push(Q::Get(id));
+                            } else {
+                                let len = 8 + rng.next_below(800) as usize;
+                                let mut val = vec![0u8; len];
+                                for b in val.iter_mut() {
+                                    *b = rng.next_u64() as u8;
+                                }
+                                p.set(key.as_bytes(), &val, 0, 0);
+                                queued.push(Q::Set(id, val));
+                            }
+                        }
+                        let replies = match p.run() {
+                            Ok(r) => r,
+                            // The connection died (injected panic closed
+                            // it, or an injected error reset it): that is
+                            // *graceful* degradation — stop using it.
+                            Err(_) => return (false, checked),
+                        };
+                        for (q, r) in queued.iter().zip(replies) {
+                            match (q, r) {
+                                (Q::Get(id), PipelineReply::Values(v)) => {
+                                    if let Some(hit) = v.first() {
+                                        let expect = oracle.get(id).unwrap_or_else(|| {
+                                            panic!("{model:?}: hit for never-stored key c{t}-k{id}")
+                                        });
+                                        assert_eq!(
+                                            &hit.data, expect,
+                                            "{model:?}: reply bytes diverged under chaos"
+                                        );
+                                        checked += 1;
+                                    }
+                                }
+                                (Q::Set(id, val), PipelineReply::Store(line)) => {
+                                    match line.as_str() {
+                                        "STORED" => {
+                                            oracle.insert(*id, val.clone());
+                                        }
+                                        // The injected slab failure path.
+                                        "SERVER_ERROR out of memory storing object" => {}
+                                        other => panic!(
+                                            "{model:?}: unexpected store reply under chaos: {other}"
+                                        ),
+                                    }
+                                }
+                                _ => panic!("{model:?}: reply type desynced from request"),
+                            }
+                        }
+                    }
+                    (true, checked)
+                }));
+            }
+            for h in handles {
+                let (alive, checked) = h.join().expect("chaos client panicked");
+                survivors += alive as usize;
+                verified += checked;
+            }
+        });
+
+        // The storm actually happened, and the server weathered it: the
+        // one-shot panic killed at most one connection, the rest ran to
+        // completion checking real bytes.
+        assert_eq!(faults::fired("batch.drain"), 1, "{model:?}: panic never injected");
+        assert!(faults::fired("slab.alloc") > 0, "{model:?}: no alloc faults fired");
+        assert!(faults::fired("conn.write") > 0, "{model:?}: no write faults fired");
+        assert!(
+            survivors >= CONNS - 1,
+            "{model:?}: only {survivors}/{CONNS} connections survived"
+        );
+        assert!(verified > 0, "{model:?}: differential never checked a hit");
+
+        // Storm over: the injected panic must be isolated *and counted*.
+        faults::configure("").unwrap();
+        let mut c = Client::connect(addr).unwrap();
+        let ints = c.stats_sub("internals").unwrap();
+        assert!(
+            stat(&ints, "conn_panics") >= 1,
+            "{model:?}: injected panic not counted: {ints:?}"
+        );
+        assert!(c.version().unwrap().starts_with("VERSION"), "{model:?}");
+        drop(c);
+
+        // Drain with a connection still attached: the deadline must hold
+        // and the lingering peer must see a clean close.
+        let mut lingering = TcpStream::connect(addr).unwrap();
+        lingering.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        assert!(
+            server.drain(Duration::from_secs(10)),
+            "{model:?}: drain missed its deadline"
+        );
+        let mut buf = [0u8; 16];
+        match lingering.read(&mut buf) {
+            Ok(0) => {}                                         // clean close
+            Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset => {} // raced accept
+            other => panic!("{model:?}: expected close after drain, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn degradation_counters_surface_in_stats_internals() {
+    for model in models() {
+        let _g = gate();
+        faults::configure("").unwrap();
+        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+        let server = Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".parse().unwrap(),
+                model,
+                max_conns: 2,
+                idle_timeout: Some(Duration::from_millis(100)),
+                ..ServerConfig::default()
+            },
+            cache,
+        )
+        .unwrap();
+        let addr = server.addr();
+
+        // Slot 1: the victim (will take an injected panic later).
+        let mut victim = Client::connect(addr).unwrap();
+        assert!(victim.set(b"v", b"1", 0, 0).unwrap());
+        // Slot 2: confirmed admitted (got a reply), then left idle.
+        let mut idle = TcpStream::connect(addr).unwrap();
+        idle.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        idle.write_all(b"version\r\n").unwrap();
+        let mut buf = [0u8; 256];
+        assert!(idle.read(&mut buf).unwrap() > 0, "{model:?}: idle conn not admitted");
+
+        // Third connection: over the cap — shed with the busy line, then
+        // closed. Never counted as a real connection.
+        let mut shed = TcpStream::connect(addr).unwrap();
+        shed.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut got = Vec::new();
+        shed.read_to_end(&mut got).unwrap();
+        assert_eq!(got, b"SERVER_ERROR busy\r\n", "{model:?}");
+
+        // Panic the victim: its next drain unwinds; only that connection
+        // dies (the client observes the close as a failed reply read).
+        faults::configure("batch.drain:panic:once:1").unwrap();
+        assert!(victim.version().is_err(), "{model:?}: victim survived injected panic");
+        faults::configure("").unwrap();
+
+        // The idle connection gets reaped: blocking read sees the close.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut reaped = false;
+        while Instant::now() < deadline {
+            match idle.read(&mut buf) {
+                Ok(0) => {
+                    reaped = true;
+                    break;
+                }
+                Ok(_) => panic!("{model:?}: unsolicited bytes on idle conn"),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) => {}
+                // A reset is also a close.
+                Err(_) => {
+                    reaped = true;
+                    break;
+                }
+            }
+        }
+        assert!(reaped, "{model:?}: idle connection was never reaped");
+
+        // All three degradation paths, visible over the wire.
+        let mut c = Client::connect(addr).unwrap();
+        let ints = c.stats_sub("internals").unwrap();
+        assert!(stat(&ints, "conn_panics") >= 1, "{model:?}: {ints:?}");
+        assert!(stat(&ints, "sheds") >= 1, "{model:?}: {ints:?}");
+        assert!(stat(&ints, "idle_reaped") >= 1, "{model:?}: {ints:?}");
+        drop(server);
+    }
+}

@@ -340,6 +340,7 @@ fn reference_pump(cache: &dyn Cache, wire: &[u8]) -> Vec<u8> {
                             cache,
                             sub,
                             &proto::ServerInfo::default(),
+                            None,
                             &mut out,
                         ),
                         proto::Command::FlushAll { noreply } => {

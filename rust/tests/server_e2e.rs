@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use fleec::cache::{build_engine, build_sharded, Cache as _, CacheConfig, ENGINES};
-use fleec::client::Client;
+use fleec::client::{Client, PipelineReply};
 use fleec::coordinator::{Coordinator, CoordinatorConfig};
 use fleec::server::{Server, ServerConfig, ServerModel};
 use fleec::sync::Xoshiro256;
@@ -372,6 +372,56 @@ fn coordinator_server_cache_compose() {
             assert!(check_value(id, &v.unwrap().data));
         }
         coord.shutdown();
+    }
+}
+
+#[test]
+fn oom_store_returns_error_and_connection_survives() {
+    // Memory exhaustion must degrade, not destroy: the client gets the
+    // memcached-compatible `SERVER_ERROR out of memory storing object`
+    // line and the *connection keeps working* — an OOM store is an op
+    // failure, not a session failure. A 256 KiB budget is smaller than
+    // one 1 MiB slab page, so the very first page grow is refused and
+    // every store takes the OutOfMemory path deterministically.
+    for model in models() {
+        for engine in ["fleec", "oaflash"] {
+            let cache = build_engine(
+                engine,
+                CacheConfig {
+                    mem_limit: 256 << 10,
+                    ..CacheConfig::small()
+                },
+            )
+            .unwrap();
+            let server = Server::start(
+                ServerConfig {
+                    addr: "127.0.0.1:0".parse().unwrap(),
+                    model,
+                    ..ServerConfig::default()
+                },
+                Arc::clone(&cache),
+            )
+            .unwrap();
+            let mut c = Client::connect(server.addr()).unwrap();
+            let mut p = c.pipeline();
+            p.set(b"oomkey", &[0x5a; 1024], 0, 0);
+            let replies = p.run().unwrap();
+            assert_eq!(
+                replies[0],
+                PipelineReply::Store("SERVER_ERROR out of memory storing object".into()),
+                "{engine}/{model:?}: OOM store must report the memcached error line"
+            );
+            // Same stream, next commands: still in sync, still served.
+            assert!(
+                c.get(b"oomkey").unwrap().is_none(),
+                "{engine}/{model:?}: failed store must not be visible"
+            );
+            assert!(
+                c.version().unwrap().starts_with("VERSION"),
+                "{engine}/{model:?}: connection must survive an OOM store"
+            );
+            assert_eq!(cache.item_count(), 0, "{engine}/{model:?}");
+        }
     }
 }
 
