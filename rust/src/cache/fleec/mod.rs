@@ -351,6 +351,38 @@ impl FleecCache {
         if ITEM_HEADER + value.len() > self.slab.chunk_size((self.slab.class_count() - 1) as u8) {
             return Err(StoreOutcome::TooLarge);
         }
+        // Multi-tenant soft limits: an over-budget tenant evicts from
+        // *itself* before touching the shared pool — the arbiter steers
+        // memory by moving budget words, and this is the enforcement
+        // edge. A tenant at its floor with nothing of its own left to
+        // evict gets per-tenant OOM while other tenants keep storing.
+        let tenant = crate::slab::tenant::current();
+        let need = ITEM_HEADER + value.len();
+        if self.slab.tenant_must_yield(tenant, need) {
+            // ord: relaxed-ok — tuning knob; any recent value works.
+            let batch = self.evict_batch.load(Ordering::Relaxed) as usize;
+            for round in 0..OOM_ROUNDS {
+                {
+                    let guard = self.collector.pin();
+                    self.evict_some_filtered(batch * (round + 1), &guard, Some(tenant));
+                }
+                // Evicted bytes leave the tenant's account only when the
+                // grace period elapses (attribution unwinds in the EBR
+                // reclaimer), so drain limbo before re-checking.
+                self.collector.force_reclaim(2);
+                if !self.slab.tenant_must_yield(tenant, need) {
+                    break;
+                }
+            }
+            if self.slab.tenant_must_yield(tenant, need) {
+                // The budget still refuses `need` after evicting
+                // everything of its own it could: per-tenant OOM. The
+                // shared pool is off limits from over-budget, so other
+                // tenants keep storing.
+                self.metrics.oom_stalls.inc();
+                return Err(StoreOutcome::OutOfMemory);
+            }
+        }
         for round in 0..OOM_ROUNDS {
             if let Some(item) = Item::alloc(&self.slab, value, flags, deadline, cas) {
                 return Ok(item);
@@ -393,6 +425,15 @@ impl FleecCache {
     /// for their unmigrated remainder — otherwise a mostly-forwarded root
     /// would starve eviction while memory sits in the successor.
     pub fn evict_some(&self, want: usize, guard: &Guard) -> usize {
+        self.evict_some_filtered(want, guard, None)
+    }
+
+    /// [`Self::evict_some`] with an optional tenant filter: when set,
+    /// only items stamped with that tenant are victims — the
+    /// self-eviction half of per-tenant soft limits. The CLOCK hand and
+    /// decay still advance globally (a filtered sweep is a normal sweep
+    /// that declines other tenants' items).
+    fn evict_some_filtered(&self, want: usize, guard: &Guard, tenant: Option<u8>) -> usize {
         // Collect the generation chain (expansion depth is ~1–2).
         let mut chain: Vec<&Table> = Vec::with_capacity(2);
         let mut t = self.root(guard);
@@ -434,7 +475,7 @@ impl FleecCache {
                     );
                     continue;
                 }
-                freed += self.evict_bucket(t, idx, guard);
+                freed += self.evict_bucket(t, idx, guard, tenant);
             }
             if freed >= want {
                 break;
@@ -443,8 +484,9 @@ impl FleecCache {
         freed
     }
 
-    /// Tombstone every live item in one bucket. Returns items freed.
-    fn evict_bucket(&self, t: &Table, idx: usize, guard: &Guard) -> usize {
+    /// Tombstone every live item in one bucket (skipping items whose
+    /// stamp differs from `tenant`, when set). Returns items freed.
+    fn evict_bucket(&self, t: &Table, idx: usize, guard: &Guard, tenant: Option<u8>) -> usize {
         let head = t.buckets[idx].load(Ordering::Acquire);
         if crate::sync::tagged::tag_of(head) != 0 {
             return 0; // frozen/forwarded: migration owns it
@@ -459,6 +501,14 @@ impl FleecCache {
             if next & DEL == 0 {
                 let w = node.item.load(Ordering::Acquire);
                 if let ItemState::Live(item) = decode_item(w) {
+                    // SAFETY: the guard keeps `item` live (its word still
+                    // carried the pointer a moment ago; retirement goes
+                    // through EBR) and headers are immutable — the tenant
+                    // stamp read cannot tear or dangle.
+                    if tenant.is_some_and(|t| unsafe { (*item).tenant } != t) {
+                        cur = crate::sync::tagged::untagged(next) as *mut Node;
+                        continue;
+                    }
                     if node
                         .item
                         // ord: AcqRel — Acquire pairs with the Release of
@@ -662,7 +712,7 @@ impl FleecCache {
         if outcome != StoreOutcome::Stored {
             // SAFETY: on every non-Stored outcome the item was never
             // published — no reader can hold it, free directly.
-            unsafe { self.slab.free(item as *mut u8, (*item).class) };
+            unsafe { Item::dealloc(&self.slab, item) };
         }
         outcome
     }
@@ -886,7 +936,7 @@ impl FleecCache {
                     // and rerun the read-stage-install loop in place.
                     // SAFETY: the speculative item was never published —
                     // no reader can hold it, free directly.
-                    unsafe { self.slab.free(item as *mut u8, (*item).class) };
+                    unsafe { Item::dealloc(&self.slab, item) };
                     self.note_rmw_speculation_miss();
                     fallback()
                 }
@@ -1069,7 +1119,7 @@ impl FleecCache {
             // Token moved under us: free the speculative item and retry.
             // SAFETY: the speculative item was never published — no reader
             // can hold it, free directly.
-            unsafe { self.slab.free(item as *mut u8, (*item).class) };
+            unsafe { Item::dealloc(&self.slab, item) };
         }
     }
 }
@@ -1531,6 +1581,10 @@ impl Cache for FleecCache {
 
     fn mem_limit(&self) -> usize {
         self.config.mem_limit
+    }
+
+    fn tenant_slabs(&self) -> Vec<Arc<crate::slab::Slab>> {
+        vec![Arc::clone(&self.slab)]
     }
 
     fn maintenance(&self) {

@@ -47,7 +47,13 @@ pub struct Item {
     pub deadline: u32,
     /// Slab class the chunk came from (needed to free it).
     pub class: u8,
-    _pad: [u8; 3],
+    /// Owning tenant (multi-tenant plane). Stamped at allocation from
+    /// the thread-local current tenant and read back at free time,
+    /// because EBR reclamation runs on whichever thread flushes the
+    /// deferral queue — the header byte, not the freeing thread, is the
+    /// source of truth for attribution.
+    pub tenant: u8,
+    _pad: [u8; 2],
 }
 
 pub const ITEM_HEADER: usize = std::mem::size_of::<Item>();
@@ -69,6 +75,8 @@ impl Item {
     ) -> Option<*mut Item> {
         let total = ITEM_HEADER + value.len();
         let (ptr, class) = slab.alloc(total)?;
+        let tenant = crate::slab::tenant::current();
+        slab.note_tenant_alloc(tenant, class);
         let item = ptr as *mut Item;
         // SAFETY: `ptr` is a fresh chunk of ≥ `total` bytes from
         // `slab.alloc`, exclusively ours — the header write and the value
@@ -80,11 +88,28 @@ impl Item {
                 cas,
                 deadline,
                 class,
-                _pad: [0; 3],
+                tenant,
+                _pad: [0; 2],
             });
             std::ptr::copy_nonoverlapping(value.as_ptr(), ptr.add(ITEM_HEADER), value.len());
         }
         Some(item)
+    }
+
+    /// Free an item chunk, unwinding its tenant attribution — the single
+    /// choke point every item free goes through (directly for
+    /// exclusively-owned unpublished items, via [`Item::retire`]'s
+    /// reclaimer for published ones), so per-tenant accounting can never
+    /// drift from the chunks actually held.
+    ///
+    /// # Safety
+    /// `ptr` must be an item from `slab` that the caller exclusively
+    /// owns: either never published, or won via the item-word swap with
+    /// its grace period already elapsed.
+    pub unsafe fn dealloc(slab: &Slab, ptr: *mut Item) {
+        let class = (*ptr).class;
+        slab.note_tenant_free((*ptr).tenant, class);
+        slab.free(ptr as *mut u8, class);
     }
 
     /// The value bytes of an item.
@@ -117,8 +142,7 @@ impl Item {
         // free targets live pages of the right slab.
         unsafe fn reclaim(p: *mut u8, ctx: usize) {
             let slab = Arc::from_raw(ctx as *const Slab);
-            let class = (*(p as *mut Item)).class;
-            slab.free(p, class);
+            Item::dealloc(&slab, p as *mut Item);
             // `slab` Arc dropped here; last one frees the pages.
         }
         let ctx = Arc::into_raw(Arc::clone(slab)) as usize;
@@ -209,7 +233,7 @@ mod tests {
             assert_eq!((*item).deadline, 7);
             assert_eq!((*item).cas, 99);
             assert_eq!(Item::footprint(item), ITEM_HEADER + 11);
-            slab.free(item as *mut u8, (*item).class);
+            Item::dealloc(&slab, item);
         }
     }
 
@@ -251,7 +275,7 @@ mod tests {
             assert_eq!((*n).order(), (7, b"abc" as &[u8]));
             let boxed = Box::from_raw(n);
             if let ItemState::Live(p) = decode_item(boxed.item.load(Ordering::Relaxed)) {
-                slab.free(p as *mut u8, (*p).class);
+                Item::dealloc(&slab, p);
             }
         }
     }

@@ -481,7 +481,7 @@ mod tests {
                     unsafe {
                         let b = Box::from_raw(node);
                         if let ItemState::Live(p) = decode_item(b.item.load(Ordering::Relaxed)) {
-                            slab.free(p as *mut u8, (*p).class);
+                            Item::dealloc(slab, p);
                         }
                     }
                 }

@@ -17,6 +17,7 @@ pub mod memclock;
 pub mod oaflash;
 pub mod op;
 pub mod sharded;
+pub mod tenant;
 
 pub use op::{BatchSink, CollectSink, Op, OpResult};
 
@@ -368,6 +369,17 @@ pub trait Cache: Send + Sync {
 
     /// Apply planner-chosen eviction parameters (CLOCK engines only).
     fn set_evict_params(&self, _decay: u8, _batch: u32) {}
+
+    /// The slab allocators backing this cache, for the multi-tenant
+    /// plane ([`tenant`]): per-tenant accounting and budget words live
+    /// on the slab, so the plane enables tenancy on and arbitrates over
+    /// exactly these. Routers concatenate their shards'. Engines without
+    /// a slab (the blocking baselines) return nothing — they still get
+    /// namespace isolation and per-tenant hit stats, just no memory
+    /// accounting or arbitration.
+    fn tenant_slabs(&self) -> Vec<Arc<crate::slab::Slab>> {
+        Vec::new()
+    }
 }
 
 /// Construct an engine by name (CLI / benches).

@@ -607,6 +607,32 @@ impl OaFlashCache {
         if ITEM_HEADER + value.len() > self.slab.chunk_size((self.slab.class_count() - 1) as u8) {
             return Err(StoreOutcome::TooLarge);
         }
+        // Multi-tenant soft limits (mirrors FLeeC): an over-budget
+        // tenant evicts from itself before touching the shared pool; if
+        // the budget still refuses the allocation afterwards it gets
+        // per-tenant OOM while other tenants keep storing.
+        let tenant = crate::slab::tenant::current();
+        let need = ITEM_HEADER + value.len();
+        if self.slab.tenant_must_yield(tenant, need) {
+            // ord: relaxed-ok — tuning knob; any recent value works.
+            let batch = self.evict_batch.load(Ordering::Relaxed) as usize;
+            for round in 0..OOM_ROUNDS {
+                {
+                    let guard = self.collector.pin();
+                    self.evict_some_filtered(batch * (round + 1), &guard, Some(tenant));
+                }
+                // Attribution unwinds in the EBR reclaimer; drain limbo
+                // before re-checking the budget.
+                self.collector.force_reclaim(2);
+                if !self.slab.tenant_must_yield(tenant, need) {
+                    break;
+                }
+            }
+            if self.slab.tenant_must_yield(tenant, need) {
+                self.metrics.oom_stalls.inc();
+                return Err(StoreOutcome::OutOfMemory);
+            }
+        }
         for round in 0..OOM_ROUNDS {
             if let Some(item) = Item::alloc(&self.slab, value, flags, deadline, cas) {
                 return Ok(item);
@@ -640,6 +666,13 @@ impl OaFlashCache {
     /// revolutions found nothing. Sweeps the chain tail-first during
     /// expansion, like FLeeC, so memory in the successor is reachable.
     fn evict_some(&self, want: usize, guard: &Guard) -> usize {
+        self.evict_some_filtered(want, guard, None)
+    }
+
+    /// [`Self::evict_some`] with an optional tenant filter: when set,
+    /// only items stamped with that tenant are victims — the
+    /// self-eviction half of per-tenant soft limits.
+    fn evict_some_filtered(&self, want: usize, guard: &Guard, tenant: Option<u8>) -> usize {
         let mut chain: Vec<&OaTable> = Vec::with_capacity(2);
         let mut t = self.root(guard);
         loop {
@@ -680,7 +713,7 @@ impl OaFlashCache {
                     );
                     continue;
                 }
-                freed += self.evict_slot(t, idx, guard);
+                freed += self.evict_slot(t, idx, guard, tenant);
             }
             if freed >= want {
                 break;
@@ -692,7 +725,7 @@ impl OaFlashCache {
     /// Tombstone one slot's live item (CLOCK victim). Frozen slots are
     /// skipped — migration owns them and the memory is seconds from being
     /// reachable in the successor anyway.
-    fn evict_slot(&self, t: &OaTable, idx: usize, guard: &Guard) -> usize {
+    fn evict_slot(&self, t: &OaTable, idx: usize, guard: &Guard, tenant: Option<u8>) -> usize {
         let w = t.slots[idx].load(Ordering::Acquire);
         if let SlotState::Resident {
             entry,
@@ -704,6 +737,12 @@ impl OaFlashCache {
             let e = unsafe { &*entry };
             let iw = e.item.load(Ordering::Acquire);
             if let ItemState::Live(item) = decode_item(iw) {
+                // SAFETY: the guard keeps `item` live (retirement goes
+                // through EBR) and headers are immutable — the tenant
+                // stamp read cannot tear or dangle.
+                if tenant.is_some_and(|want| unsafe { (*item).tenant } != want) {
+                    return 0;
+                }
                 if e.item
                     // ord: AcqRel — Acquire pairs with the Release of the
                     // install CAS that published `item` (safe to retire);
@@ -927,7 +966,7 @@ impl OaFlashCache {
         if outcome != StoreOutcome::Stored {
             // SAFETY: on every non-Stored outcome the item was never
             // published — no reader can hold it, free directly.
-            unsafe { self.slab.free(item as *mut u8, (*item).class) };
+            unsafe { Item::dealloc(&self.slab, item) };
         }
         outcome
     }
@@ -1225,7 +1264,7 @@ impl OaFlashCache {
             // Token moved under us: free the speculative item and retry.
             // SAFETY: the speculative item was never published — no
             // reader can hold it, free directly.
-            unsafe { self.slab.free(item as *mut u8, (*item).class) };
+            unsafe { Item::dealloc(&self.slab, item) };
         }
     }
 
@@ -1591,6 +1630,10 @@ impl Cache for OaFlashCache {
 
     fn mem_limit(&self) -> usize {
         self.config.mem_limit
+    }
+
+    fn tenant_slabs(&self) -> Vec<Arc<crate::slab::Slab>> {
+        vec![Arc::clone(&self.slab)]
     }
 
     fn maintenance(&self) {

@@ -29,7 +29,7 @@
 //! total), `flush_all`/`maintenance` fan out, and `clock_snapshot`
 //! concatenates the shards' CLOCK arrays in shard order.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use once_cell::sync::Lazy;
 
@@ -289,6 +289,10 @@ impl<C: Cache> Cache for Sharded<C> {
         for s in self.shards.iter() {
             s.maintenance();
         }
+    }
+
+    fn tenant_slabs(&self) -> Vec<Arc<crate::slab::Slab>> {
+        self.shards.iter().flat_map(|s| s.tenant_slabs()).collect()
     }
 
     fn clock_snapshot(&self) -> Option<Vec<u8>> {

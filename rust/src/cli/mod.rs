@@ -24,6 +24,7 @@ use crate::server::{Server, ServerConfig, ServerModel};
 use crate::workload::{
     run_driver, run_wire, DriverOptions, ValueSize, WireOptions, WorkloadSpec,
     driver::StopRule,
+    tenants::{footprints, run_tenant_bench, TenantBenchReport, TenantBenchSpec},
 };
 use crate::Result;
 
@@ -35,7 +36,7 @@ pub struct Args {
 }
 
 /// Boolean flags (never consume a value).
-const BOOL_FLAGS: &[&str] = &["validate", "no-planner", "nodelay", "quiet"];
+const BOOL_FLAGS: &[&str] = &["validate", "no-planner", "nodelay", "quiet", "no-arbiter"];
 
 /// Parse raw argv (after the subcommand) into [`Args`].
 pub fn parse_args(argv: &[String]) -> Args {
@@ -178,6 +179,11 @@ fn print_usage() {
                        [--conn-idle-timeout SECS]\n\
                                      (reap connections idle this long;\n\
                                       0 = never, the default)\n\
+                       [--tenants]  (multi-tenant plane: per-connection\n\
+                                     `tenant <name>` namespaces, per-tenant\n\
+                                     accounting, `stats tenants`, and the\n\
+                                     slab budget arbiter;\n\
+                                     --no-arbiter keeps the static split)\n\
          bench         --engine all|<name> --alpha 0.99 --threads 8 --ops 200000\n\
                        [--catalog N] [--value-bytes N] [--read-ratio R] [--mem-mb N]\n\
                        [--batch N]  (ops per engine crossing; >1 uses execute_batch)\n\
@@ -191,6 +197,12 @@ fn print_usage() {
                                      (wire mode: per-reply client read timeout;\n\
                                       timed-out connections are dropped and\n\
                                       counted, not fatal; 0 = wait forever)\n\
+                       [--tenants N] (multi-tenant arbiter sweep: N tenants\n\
+                                      with power-law footprints\n\
+                                      [--tenant-skew S, default 1.0], same\n\
+                                      deterministic workload with the arbiter\n\
+                                      off then on; writes --out, default\n\
+                                      BENCH_tenants.json)\n\
          hit-ratio     --alpha 0.99 --catalog 100000 --mem-mb 4 [--trace-len N]\n\
                        [--shards N] (splits mem/buckets per shard — changes eviction)\n\
          planner-demo  (load artifacts, run the planner once, print the decision)\n\
@@ -203,7 +215,24 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     let port: u16 = args.get_or("port", 11211u16);
     let shards: usize = args.get_or("shards", 1usize).max(1).next_power_of_two();
     let config = cache_config(args);
-    let cache = build_sharded(engine_name, shards, config)?;
+    let mut cache = build_sharded(engine_name, shards, config)?;
+
+    // Multi-tenant plane: wrap the engine *before* the coordinator and
+    // the server see it, so maintenance ticks arbitrate and every
+    // connection gets tenant state.
+    let tenants_on = args.has_flag("tenants") || args.options.contains_key("tenants");
+    let mut plane = None;
+    if tenants_on {
+        use crate::cache::tenant::{PlaneConfig, TenantCache, TenantPlane};
+        let p = TenantPlane::new(
+            cache.as_ref(),
+            PlaneConfig {
+                arbiter: !args.has_flag("no-arbiter"),
+            },
+        );
+        cache = Arc::new(TenantCache::new(cache, Arc::clone(&p)));
+        plane = Some(p);
+    }
 
     // Planner is best-effort: a serving cache must not require artifacts.
     let planner_dir = if args.has_flag("no-planner") {
@@ -231,6 +260,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
             metrics_addr,
             max_conns: args.get_or("max-conns", 0usize),
             idle_timeout: (idle_secs > 0).then(|| Duration::from_secs(idle_secs)),
+            tenants: plane,
             ..ServerConfig::default()
         },
         Arc::clone(&cache),
@@ -246,10 +276,19 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         ),
     };
     eprintln!(
-        "fleec serving engine={} on {} (mem limit {} MiB, {model_desc})",
+        "fleec serving engine={} on {} (mem limit {} MiB, {model_desc}{})",
         cache.engine_name(),
         server.addr(),
-        cache.mem_limit() >> 20
+        cache.mem_limit() >> 20,
+        if tenants_on {
+            if args.has_flag("no-arbiter") {
+                ", multi-tenant static"
+            } else {
+                ", multi-tenant arbiter"
+            }
+        } else {
+            ""
+        }
     );
     // Serve until SIGTERM/SIGINT, then drain gracefully: stop accepting,
     // flush buffered replies, close connections as they empty, hard-stop
@@ -332,6 +371,9 @@ mod sig {
 fn cmd_bench(args: &Args) -> Result<i32> {
     if args.get_or("conns", 0usize) > 0 {
         return cmd_bench_wire(args);
+    }
+    if args.get_or("tenants", 0usize) > 0 {
+        return cmd_bench_tenants(args);
     }
     let spec = WorkloadSpec {
         catalog: args.get_or("catalog", 100_000u64),
@@ -427,6 +469,128 @@ fn cmd_bench_wire(args: &Args) -> Result<i32> {
         println!("{:>10}  {}", cache.engine_name(), report.row());
     }
     Ok(0)
+}
+
+/// `fleec bench --tenants N [--tenant-skew S]`: the multi-tenant
+/// arbiter sweep. Runs the identical deterministic workload twice —
+/// static equal partition (arbiter off) vs. the Memshare-style arbiter —
+/// prints both, and writes the machine-readable comparison to
+/// `--out` (default `BENCH_tenants.json`, the CI artifact).
+fn cmd_bench_tenants(args: &Args) -> Result<i32> {
+    let spec = TenantBenchSpec {
+        tenants: args.get_or("tenants", 4usize).clamp(2, 15),
+        skew: args.get_or("tenant-skew", 1.0f64),
+        catalog: args.get_or("catalog", 200_000u64),
+        alpha: args.get_or("alpha", 0.99f64),
+        read_ratio: args.get_or("read-ratio", 0.95f64),
+        value_bytes: args.get_or("value-bytes", 256usize),
+        ops: args.get_or("ops", 2_000_000u64),
+        maintenance_every: args.get_or("maintenance-every", 4096u64),
+        seed: args.get_or("seed", 0xF1EE_C0DEu64),
+    };
+    let engine_name = args.get_str("engine", "fleec");
+    let engine_name = if engine_name == "all" { "fleec" } else { engine_name };
+    let shards: usize = args.get_or("shards", 1usize).max(1).next_power_of_two();
+    println!(
+        "# tenant bench: engine={engine_name} shards={shards} tenants={} skew={} catalog={} alpha={} reads={} value={}B ops={}",
+        spec.tenants, spec.skew, spec.catalog, spec.alpha, spec.read_ratio, spec.value_bytes,
+        spec.ops
+    );
+    println!("# footprints (keys/tenant): {:?}", footprints(&spec));
+    let mut reports = Vec::new();
+    for arbiter in [false, true] {
+        let cache = build_sharded(engine_name, shards, cache_config(args))?;
+        let report = run_tenant_bench(&cache, &spec, arbiter);
+        println!(
+            "arbiter={:<5} aggregate_hit_ratio={:.4} moved_bytes={}",
+            arbiter,
+            report.hit_ratio(),
+            report.moved_bytes
+        );
+        for row in &report.rows {
+            let s = &row.snapshot;
+            let ratio = if s.gets == 0 {
+                0.0
+            } else {
+                s.hits as f64 / s.gets as f64
+            };
+            println!(
+                "  {:<8} catalog={:<8} hit_ratio={ratio:.4} shadow_hits={:<8} live={}KiB budget={}KiB",
+                s.name,
+                row.catalog,
+                s.shadow_hits,
+                s.live_bytes >> 10,
+                s.budget_bytes >> 10
+            );
+        }
+        reports.push(report);
+    }
+    let json = render_tenant_json(engine_name, shards, &spec, &reports);
+    let out_path = args.get_str("out", "BENCH_tenants.json").to_string();
+    std::fs::write(&out_path, json)?;
+    eprintln!("wrote {out_path}");
+    Ok(0)
+}
+
+/// Hand-rolled JSON for the tenant sweep (offline crate set: no serde).
+/// Every number is either an integer or a finite float, every string a
+/// controlled identifier — no escaping needed.
+fn render_tenant_json(
+    engine: &str,
+    shards: usize,
+    spec: &TenantBenchSpec,
+    reports: &[TenantBenchReport],
+) -> String {
+    use std::fmt::Write;
+    let mut j = String::with_capacity(4096);
+    let _ = write!(
+        j,
+        "{{\n  \"engine\": \"{engine}\",\n  \"shards\": {shards},\n  \"tenants\": {},\n  \"tenant_skew\": {},\n  \"catalog\": {},\n  \"alpha\": {},\n  \"read_ratio\": {},\n  \"value_bytes\": {},\n  \"ops\": {},\n  \"seed\": {},\n  \"runs\": [",
+        spec.tenants,
+        spec.skew,
+        spec.catalog,
+        spec.alpha,
+        spec.read_ratio,
+        spec.value_bytes,
+        spec.ops,
+        spec.seed
+    );
+    for (ri, r) in reports.iter().enumerate() {
+        let _ = write!(
+            j,
+            "{}\n    {{\n      \"arbiter\": {},\n      \"aggregate_hit_ratio\": {:.6},\n      \"gets\": {},\n      \"hits\": {},\n      \"moved_bytes\": {},\n      \"per_tenant\": [",
+            if ri == 0 { "" } else { "," },
+            r.arbiter,
+            r.hit_ratio(),
+            r.gets,
+            r.hits,
+            r.moved_bytes
+        );
+        for (ti, row) in r.rows.iter().enumerate() {
+            let s = &row.snapshot;
+            let ratio = if s.gets == 0 {
+                0.0
+            } else {
+                s.hits as f64 / s.gets as f64
+            };
+            let _ = write!(
+                j,
+                "{}\n        {{\"name\": \"{}\", \"catalog\": {}, \"gets\": {}, \"hits\": {}, \"hit_ratio\": {ratio:.6}, \"sets\": {}, \"shadow_hits\": {}, \"live_bytes\": {}, \"budget_bytes\": {}}}",
+                if ti == 0 { "" } else { "," },
+                s.name,
+                row.catalog,
+                s.gets,
+                s.hits,
+                s.sets,
+                s.shadow_hits,
+                s.live_bytes,
+                s.budget_bytes
+            );
+        }
+        let _ = write!(j, "\n      ]\n    }}");
+    }
+    j.push_str("\n  ]\n}\n");
+    j
 }
 
 fn cmd_hit_ratio(args: &Args) -> Result<i32> {

@@ -228,6 +228,15 @@ impl Client {
         Ok(())
     }
 
+    /// `tenant <name>`: switch this connection's tenant (multi-tenant
+    /// servers only). Returns the raw reply line (`OK` on success).
+    pub fn tenant(&mut self, name: &[u8]) -> Result<String> {
+        self.writer.write_all(b"tenant ")?;
+        self.writer.write_all(name)?;
+        self.writer.write_all(b"\r\n")?;
+        Ok(self.read_line()?)
+    }
+
     /// `version` string.
     pub fn version(&mut self) -> Result<String> {
         self.writer.write_all(b"version\r\n")?;

@@ -173,6 +173,21 @@
 //! `FLEEC_FAULTS=site:kind:rate:seed`) and `rust/tests/chaos_e2e.rs`.
 //! The failure→behavior matrix, failpoint inventory and drain semantics
 //! are in `rust/docs/robustness.md`.
+//!
+//! ## Multi-tenancy
+//!
+//! One process can serve many logical caches: `fleec serve --tenants`
+//! gives each connection a `tenant <name>` namespace with isolated keys
+//! and cas tokens, per-tenant slab accounting (one attribution byte in
+//! the item header, unwound at dealloc), soft budgets enforced by
+//! eviction steering (an over-budget tenant evicts from itself, a
+//! tenant at its floor sees per-tenant OOM), and a Memshare-style
+//! arbiter on the maintenance tick that moves page budget toward
+//! shadow-hit pain ([`cache::tenant`], [`slab::tenant`]). The default
+//! tenant's prefix is empty, so a client mix that never switches is
+//! byte-exact with a tenant-less server. The design — namespacing,
+//! accounting, arbitration, and the `stats tenants`/Prometheus surface
+//! — is `rust/docs/multitenancy.md`.
 
 pub mod audit;
 pub mod cache;

@@ -12,6 +12,7 @@
 //! server recycles across reads ([`crate::server::batch::BatchArena`]).
 //! [`parse`] is the scratch-less convenience wrapper.
 
+use crate::cache::tenant::TenantSnapshot;
 use crate::cache::{InternalsSnapshot, SlabClassSnapshot, StatsSnapshot, StoreOutcome};
 use crate::metrics::{LatencySnapshot, OpClass};
 
@@ -45,6 +46,9 @@ pub enum Command<'a> {
     Decr { key: &'a [u8], delta: u64, noreply: bool },
     Touch { key: &'a [u8], exptime: u32, noreply: bool },
     Stats { sub: StatsSub },
+    /// `tenant <name>` — switch this connection to the named tenant's
+    /// key space (registering the name on first use).
+    Tenant { name: &'a [u8], noreply: bool },
     FlushAll { noreply: bool },
     Version,
     Verbosity { noreply: bool },
@@ -63,6 +67,8 @@ pub enum StatsSub {
     Slabs,
     /// Lock-free subsystem internals (EBR, slab, open addressing).
     Internals,
+    /// Per-tenant accounting (multi-tenant plane).
+    Tenants,
 }
 
 /// Parser outcome.
@@ -248,9 +254,17 @@ pub fn parse_into<'a>(buf: &'a [u8], key_scratch: &mut Vec<&'a [u8]>) -> Parsed<
                 Some(b"latency") => StatsSub::Latency,
                 Some(b"slabs") => StatsSub::Slabs,
                 Some(b"internals") => StatsSub::Internals,
+                Some(b"tenants") => StatsSub::Tenants,
                 Some(_) => return Parsed::Error("unknown stats subcommand", consumed_line),
             };
             Parsed::Done(Command::Stats { sub }, consumed_line)
+        }
+        b"tenant" => {
+            let Some(name) = tokens.next() else {
+                return Parsed::Error("tenant requires a name", consumed_line);
+            };
+            let noreply = tokens.next() == Some(b"noreply" as &[u8]);
+            Parsed::Done(Command::Tenant { name, noreply }, consumed_line)
         }
         b"flush_all" => {
             let noreply = tokens.any(|t| t == b"noreply");
@@ -483,6 +497,35 @@ pub fn write_stats_internals(
     out.extend_from_slice(b"END\r\n");
 }
 
+/// Append one per-tenant line (`STAT <tenant>:<name> <value>\r\n`),
+/// allocation-free; mirrors the per-class shape of `stats slabs`.
+fn write_tenant_stat(out: &mut Vec<u8>, tenant: &str, name: &str, v: u64) {
+    out.extend_from_slice(b"STAT ");
+    out.extend_from_slice(tenant.as_bytes());
+    out.push(b':');
+    out.extend_from_slice(name.as_bytes());
+    out.push(b' ');
+    write_uint(out, v);
+    out.extend_from_slice(b"\r\n");
+}
+
+/// Render `stats tenants`: one block per registered tenant (wire
+/// counters, the arbiter's shadow-hit signal, and the slab-side byte
+/// accounting), then the tenant count. `budget_bytes 0` means
+/// unlimited (the default tenant before any split).
+pub fn write_stats_tenants(out: &mut Vec<u8>, rows: &[TenantSnapshot]) {
+    for t in rows {
+        write_tenant_stat(out, &t.name, "gets", t.gets);
+        write_tenant_stat(out, &t.name, "hits", t.hits);
+        write_tenant_stat(out, &t.name, "sets", t.sets);
+        write_tenant_stat(out, &t.name, "shadow_hits", t.shadow_hits);
+        write_tenant_stat(out, &t.name, "live_bytes", t.live_bytes as u64);
+        write_tenant_stat(out, &t.name, "budget_bytes", t.budget_bytes as u64);
+    }
+    write_stat(out, "tenants", rows.len() as u64);
+    out.extend_from_slice(b"END\r\n");
+}
+
 /// Append one Prometheus sample:
 /// `fleec_<name>{engine="<engine>"[,<k>="<v>"]} <value>\n`.
 fn prom_sample(out: &mut Vec<u8>, name: &str, engine: &str, extra: Option<(&str, &str)>, v: u64) {
@@ -641,6 +684,36 @@ pub fn write_prometheus_server(out: &mut Vec<u8>, engine: &str, g: &ServerGauges
     prom_sample(out, "drain_latency_ns", engine, Some(("q", "p99")), g.drain_p99_ns);
 }
 
+/// Render the per-tenant series for `/metrics`. Every sample carries a
+/// `tenant` label; emitted only when a tenant plane is configured, so a
+/// tenant-less server's exposition is byte-identical to before.
+pub fn write_prometheus_tenants(out: &mut Vec<u8>, engine: &str, rows: &[TenantSnapshot]) {
+    if rows.is_empty() {
+        return;
+    }
+    for (name, kind, pick) in [
+        ("tenant_gets_total", "counter", 0usize),
+        ("tenant_hits_total", "counter", 1),
+        ("tenant_sets_total", "counter", 2),
+        ("tenant_shadow_hits_total", "counter", 3),
+        ("tenant_live_bytes", "gauge", 4),
+        ("tenant_budget_bytes", "gauge", 5),
+    ] {
+        prom_type(out, name, kind);
+        for t in rows {
+            let v = match pick {
+                0 => t.gets,
+                1 => t.hits,
+                2 => t.sets,
+                3 => t.shadow_hits,
+                4 => t.live_bytes as u64,
+                _ => t.budget_bytes as u64,
+            };
+            prom_sample(out, name, engine, Some(("tenant", &t.name)), v);
+        }
+    }
+}
+
 /// [`prom_sample`] with two extra labels.
 fn prom_sample2(
     out: &mut Vec<u8>,
@@ -748,6 +821,26 @@ mod tests {
             Parsed::Done(Command::Stats { sub: StatsSub::Internals }, _)
         ));
         assert!(matches!(parse(b"stats bogus\r\n"), Parsed::Error(..)));
+        assert!(matches!(
+            parse(b"stats tenants\r\n"),
+            Parsed::Done(Command::Stats { sub: StatsSub::Tenants }, _)
+        ));
+    }
+
+    #[test]
+    fn parses_tenant_command() {
+        match parse(b"tenant acme\r\n") {
+            Parsed::Done(Command::Tenant { name, noreply }, 13) => {
+                assert_eq!(name, b"acme");
+                assert!(!noreply);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse(b"tenant acme noreply\r\n"),
+            Parsed::Done(Command::Tenant { noreply: true, .. }, _)
+        ));
+        assert!(matches!(parse(b"tenant\r\n"), Parsed::Error(..)));
     }
 
     #[test]

@@ -55,6 +55,7 @@
 //! cap is checked between commands, and no single command may fan out
 //! into more than [`MAX_GET_KEYS`] ops).
 
+use crate::cache::tenant::{TenantConn, TenantSink};
 use crate::cache::{BatchSink, Cache, Op, OpResult, StoreOutcome};
 use crate::proto::{self, Command, Parsed, StatsSub, StoreKind};
 use crate::server::ServerObs;
@@ -127,6 +128,13 @@ pub struct BatchArena {
     /// Value bytes of parked hits, appended end-to-end — one shared
     /// recycled buffer, not one allocation per parked value.
     spill: Vec<u8>,
+    /// Namespaced execution ops for non-default tenants (same
+    /// park-empty-at-`'static` recycling as `ops`); never engaged on the
+    /// default tenant or a tenant-less server.
+    ns_ops: Vec<Op<'static>>,
+    /// Backing bytes for the namespaced keys (`<tenant>\x1f<key>`),
+    /// appended end-to-end per flush and recycled.
+    ns_buf: Vec<u8>,
 }
 
 impl BatchArena {
@@ -187,19 +195,30 @@ fn recycle_keys<'from, 'to>(mut v: Vec<&'from [u8]>) -> Vec<&'to [u8]> {
 /// subcommand renders from one coherent snapshot.
 /// `server` carries the serving-plane gauges for `stats internals`
 /// (`None` in tests and offline tools renders engine internals only).
+/// `tenants` is the connection's tenant plane when one is configured;
+/// `stats tenants` without a plane is a client error.
 pub fn write_stats_reply(
     cache: &dyn Cache,
     sub: StatsSub,
     info: &proto::ServerInfo,
     server: Option<&proto::ServerGauges>,
+    tenants: Option<&crate::cache::tenant::TenantPlane>,
     out: &mut Vec<u8>,
 ) {
+    if let StatsSub::Tenants = sub {
+        match tenants {
+            Some(plane) => proto::write_stats_tenants(out, &plane.snapshot()),
+            None => out.extend_from_slice(b"CLIENT_ERROR tenant support is not enabled\r\n"),
+        }
+        return;
+    }
     let stats = cache.stats();
     match sub {
         StatsSub::All => proto::write_stats(out, cache.engine_name(), &stats, info),
         StatsSub::Latency => proto::write_stats_latency(out, &stats.latency),
         StatsSub::Slabs => proto::write_stats_slabs(out, &stats.slabs),
         StatsSub::Internals => proto::write_stats_internals(out, &stats.internals, server),
+        StatsSub::Tenants => unreachable!("handled above"),
     }
 }
 
@@ -209,7 +228,10 @@ pub fn write_stats_reply(
 pub fn is_barrier(cmd: &Command<'_>) -> bool {
     matches!(
         cmd,
-        Command::Stats { .. } | Command::FlushAll { .. } | Command::Quit
+        Command::Stats { .. }
+            | Command::FlushAll { .. }
+            | Command::Tenant { .. }
+            | Command::Quit
     )
 }
 
@@ -309,7 +331,10 @@ pub fn plan<'a>(
         }
         Command::Version => actions.push(Action::Version),
         Command::Verbosity { noreply } => actions.push(Action::Ok { noreply }),
-        Command::Stats { .. } | Command::FlushAll { .. } | Command::Quit => {
+        Command::Stats { .. }
+        | Command::FlushAll { .. }
+        | Command::Tenant { .. }
+        | Command::Quit => {
             unreachable!("barrier commands are handled by the caller")
         }
     }
@@ -804,6 +829,14 @@ pub struct Drained {
 /// sampled calls, receives this drain's wall time and per-flush batch
 /// sizes. The non-sampled steady state touches only `obs.sample()`'s one
 /// relaxed tick.
+///
+/// `tenant` is the connection's tenant state when the server runs a
+/// multi-tenant plane (`None` otherwise): the `tenant` barrier switches
+/// it, and every flushed batch executes under its namespace prefix and
+/// accounting (see [`crate::cache::tenant`]). A named tenant's prefix
+/// consumes key-length budget: client keys longer than
+/// `MAX_KEY_LEN - prefix.len()` degrade to the engines' oversized-key
+/// behavior (miss / `NOT_STORED`).
 pub fn drain(
     cache: &dyn Cache,
     curr_connections: usize,
@@ -812,6 +845,7 @@ pub fn drain(
     arena: &mut BatchArena,
     out_budget: usize,
     obs: Option<&ServerObs>,
+    mut tenant: Option<&mut TenantConn>,
 ) -> Drained {
     let t0 = match obs {
         Some(o) if o.sample() => Some(std::time::Instant::now()),
@@ -832,7 +866,7 @@ pub fn drain(
                     consumed += n;
                     if is_barrier(&cmd) {
                         note_batch(obs, sampled, ops.len());
-                        fatal |= flush_batch(cache, &mut ops, &mut actions, arena, out);
+                        fatal |= flush_batch(cache, &mut ops, &mut actions, arena, out, tenant.as_deref());
                         match cmd {
                             Command::Stats { sub } => {
                                 let info = match obs {
@@ -843,7 +877,8 @@ pub fn drain(
                                     },
                                 };
                                 let gauges = obs.map(|o| o.gauges());
-                                write_stats_reply(cache, sub, &info, gauges.as_ref(), out);
+                                let plane = tenant.as_deref().map(|t| &**t.plane());
+                                write_stats_reply(cache, sub, &info, gauges.as_ref(), plane, out);
                             }
                             Command::FlushAll { noreply } => {
                                 cache.flush_all();
@@ -851,6 +886,23 @@ pub fn drain(
                                     out.extend_from_slice(b"OK\r\n");
                                 }
                             }
+                            Command::Tenant { name, noreply } => match tenant.as_deref_mut() {
+                                None => out.extend_from_slice(
+                                    b"CLIENT_ERROR tenant support is not enabled\r\n",
+                                ),
+                                Some(conn) => match conn.switch(name) {
+                                    Ok(()) => {
+                                        if !noreply {
+                                            out.extend_from_slice(b"OK\r\n");
+                                        }
+                                    }
+                                    Err(msg) => {
+                                        out.extend_from_slice(b"CLIENT_ERROR ");
+                                        out.extend_from_slice(msg.as_bytes());
+                                        out.extend_from_slice(b"\r\n");
+                                    }
+                                },
+                            },
                             Command::Quit => break 'drain DrainStop::Quit,
                             _ => unreachable!("is_barrier covers exactly these"),
                         }
@@ -870,13 +922,13 @@ pub fn drain(
                 }
                 Parsed::Incomplete => {
                     note_batch(obs, sampled, ops.len());
-                    fatal |= flush_batch(cache, &mut ops, &mut actions, arena, out);
+                    fatal |= flush_batch(cache, &mut ops, &mut actions, arena, out, tenant.as_deref());
                     break 'drain DrainStop::NeedMoreInput;
                 }
             }
         }
         note_batch(obs, sampled, ops.len());
-        fatal |= flush_batch(cache, &mut ops, &mut actions, arena, out);
+        fatal |= flush_batch(cache, &mut ops, &mut actions, arena, out, tenant.as_deref());
     };
     arena.put(ops, actions, keys);
     if let (Some(o), Some(t0)) = (obs, t0) {
@@ -911,25 +963,130 @@ fn flush_batch(
     actions: &mut Vec<Action>,
     arena: &mut BatchArena,
     out: &mut Vec<u8>,
+    tenant: Option<&TenantConn>,
 ) -> bool {
     if actions.is_empty() && ops.is_empty() {
         return false;
     }
     let fatal = {
         let ops: &[Op<'_>] = ops.as_slice();
-        let mut sink = EmitSink::new(
-            ops,
-            actions.as_slice(),
-            out,
-            &mut arena.pending,
-            &mut arena.spill,
-        );
-        cache.execute_batch_into(ops, &mut sink);
+        let BatchArena {
+            pending,
+            spill,
+            ns_ops,
+            ns_buf,
+            ..
+        } = arena;
+        let mut sink = EmitSink::new(ops, actions.as_slice(), out, pending, spill);
+        match tenant {
+            None => cache.execute_batch_into(ops, &mut sink),
+            Some(conn) => {
+                // Accounting wraps the emitter; reply bytes still render
+                // from the original ops, so the wrapper is invisible on
+                // the wire. Slab attribution follows the thread-local
+                // tenant stamp for exactly this engine crossing.
+                let mut tsink = TenantSink::new(&mut sink, conn.plane(), conn.id(), ops);
+                crate::slab::tenant::set_current(conn.id());
+                if conn.prefix().is_empty() {
+                    // Default tenant: execution keys are the client keys
+                    // byte-for-byte — nothing namespaced, nothing copied.
+                    cache.execute_batch_into(ops, &mut tsink);
+                } else {
+                    // Two passes: materialize every `<prefix><key>` into
+                    // one recycled buffer first, then slice it — the
+                    // buffer never reallocates under a live borrow.
+                    ns_buf.clear();
+                    let prefix = conn.prefix();
+                    ns_buf.reserve(
+                        ops.iter()
+                            .map(|op| prefix.len() + op.key().len())
+                            .sum(),
+                    );
+                    for op in ops {
+                        ns_buf.extend_from_slice(prefix);
+                        ns_buf.extend_from_slice(op.key());
+                    }
+                    let buf: &[u8] = ns_buf.as_slice();
+                    let mut exec_ops = recycle_ops(std::mem::take(ns_ops));
+                    let mut at = 0;
+                    for op in ops {
+                        let len = prefix.len() + op.key().len();
+                        exec_ops.push(rekey(op, &buf[at..at + len]));
+                        at += len;
+                    }
+                    cache.execute_batch_into(&exec_ops, &mut tsink);
+                    *ns_ops = recycle_ops(exec_ops);
+                }
+                crate::slab::tenant::set_current(crate::slab::DEFAULT_TENANT);
+            }
+        }
         sink.finish()
     };
     ops.clear();
     actions.clear();
     fatal
+}
+
+/// Clone `op` with its key swapped for the namespaced execution key;
+/// every other field is borrowed unchanged. (`Op` is covariant in its
+/// lifetime, so the result's lifetime is the shorter of the input
+/// buffer's and the namespace buffer's.)
+fn rekey<'a>(op: &Op<'a>, key: &'a [u8]) -> Op<'a> {
+    match *op {
+        Op::Get { .. } => Op::Get { key },
+        Op::Set {
+            value,
+            flags,
+            exptime,
+            ..
+        } => Op::Set {
+            key,
+            value,
+            flags,
+            exptime,
+        },
+        Op::Add {
+            value,
+            flags,
+            exptime,
+            ..
+        } => Op::Add {
+            key,
+            value,
+            flags,
+            exptime,
+        },
+        Op::Replace {
+            value,
+            flags,
+            exptime,
+            ..
+        } => Op::Replace {
+            key,
+            value,
+            flags,
+            exptime,
+        },
+        Op::Append { suffix, .. } => Op::Append { key, suffix },
+        Op::Prepend { prefix, .. } => Op::Prepend { key, prefix },
+        Op::CasOp {
+            value,
+            flags,
+            exptime,
+            cas,
+            ..
+        } => Op::CasOp {
+            key,
+            value,
+            flags,
+            exptime,
+            cas,
+        },
+        Op::Delete { .. } => Op::Delete { key },
+        Op::Incr { delta, .. } => Op::Incr { key, delta },
+        Op::Decr { delta, .. } => Op::Decr { key, delta },
+        Op::Touch { exptime, .. } => Op::Touch { key, exptime },
+    }
 }
 
 #[cfg(test)]
@@ -952,6 +1109,7 @@ mod tests {
                 &mut out,
                 &mut arena,
                 usize::MAX,
+                None,
                 None,
             );
             consumed += d.consumed;
@@ -1016,7 +1174,7 @@ mod tests {
         let mut arena = BatchArena::default();
         let mut out = Vec::new();
         let wire = b"version\r\nquit\r\nget never-parsed\r\n";
-        let d = drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX, None);
+        let d = drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX, None, None);
         assert_eq!(d.stop, DrainStop::Quit);
         assert_eq!(out, b"VERSION fleec-0.1.0\r\n");
         // Everything through the quit line is consumed; the rest is not.
@@ -1054,6 +1212,7 @@ mod tests {
                 &mut arena,
                 budget,
                 None,
+                None,
             );
             consumed += d.consumed;
             calls += 1;
@@ -1085,7 +1244,7 @@ mod tests {
         // Multi-key get included so the parse key scratch is exercised.
         let wire = b"set k 0 0 1\r\nv\r\nget k k k\r\nget k\r\n";
         let mut out = Vec::new();
-        drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX, None);
+        drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX, None, None);
         let (cap_ops, cap_actions, cap_keys, cap_pending) = (
             arena.ops.capacity(),
             arena.actions.capacity(),
@@ -1098,7 +1257,7 @@ mod tests {
         // A same-shape drain must not grow (or shrink) any arena.
         for _ in 0..8 {
             out.clear();
-            drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX, None);
+            drain(cache.as_ref(), 0, wire, &mut out, &mut arena, usize::MAX, None, None);
             assert_eq!(arena.ops.capacity(), cap_ops);
             assert_eq!(arena.actions.capacity(), cap_actions);
             assert_eq!(arena.keys.capacity(), cap_keys, "key scratch recycled");
@@ -1149,6 +1308,7 @@ mod tests {
                 &mut out,
                 &mut arena,
                 usize::MAX,
+                None,
                 None,
             );
             consumed += d.consumed;
@@ -1222,6 +1382,7 @@ mod tests {
             &mut arena,
             usize::MAX,
             None,
+            None,
         );
         assert!(d.fatal, "mismatch must flag the stream fatal");
         assert_eq!(d.stop, DrainStop::NeedMoreInput);
@@ -1236,6 +1397,7 @@ mod tests {
             &mut out,
             &mut arena,
             usize::MAX,
+            None,
             None,
         );
         assert!(!d.fatal);

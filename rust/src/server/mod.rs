@@ -200,6 +200,11 @@ pub struct ServerConfig {
     /// reap sweep runs on the existing poller wakeup, never per event).
     /// `None` (default) = never reap.
     pub idle_timeout: Option<Duration>,
+    /// Multi-tenant control plane (see [`crate::cache::tenant`]):
+    /// `Some` enables the `tenant` command, per-tenant namespacing and
+    /// accounting on every connection. `None` (default) serves exactly
+    /// the pre-tenancy wire protocol.
+    pub tenants: Option<Arc<crate::cache::tenant::TenantPlane>>,
 }
 
 impl Default for ServerConfig {
@@ -213,6 +218,7 @@ impl Default for ServerConfig {
             metrics_addr: None,
             max_conns: 0,
             idle_timeout: None,
+            tenants: None,
         }
     }
 }
@@ -288,6 +294,7 @@ impl Server {
                 Arc::clone(&obs),
                 Arc::clone(&stop),
                 Arc::clone(&curr_conns),
+                config.tenants.clone(),
             )?);
         }
         Ok(Server {
@@ -409,6 +416,7 @@ fn spawn_reactors(
         nodelay: config.nodelay,
         obs: Arc::clone(obs),
         handoff: Arc::new(std::sync::Mutex::new(Vec::new())),
+        tenants: config.tenants.clone(),
     };
     let supervisor = std::thread::Builder::new()
         .name("fleec-supervisor".into())
@@ -509,6 +517,7 @@ fn spawn_thread_model(
     let max_outbuf = config.max_outbuf;
     let max_conns = config.max_conns;
     let idle_timeout = config.idle_timeout;
+    let tenants = config.tenants.clone();
     std::thread::Builder::new()
         .name("fleec-accept".into())
         .spawn(move || {
@@ -546,6 +555,7 @@ fn spawn_thread_model(
                         let draining = Arc::clone(&accept_draining);
                         let active = Arc::clone(&accept_conns);
                         let obs = Arc::clone(&accept_obs);
+                        let tenants = tenants.clone();
                         obs.total_connections.inc();
                         // ord: AcqRel connection gauge — increments and
                         // decrements form one modification order; Acquire
@@ -573,6 +583,7 @@ fn spawn_thread_model(
                                             max_outbuf,
                                             idle_timeout,
                                             Arc::clone(&obs),
+                                            tenants,
                                         );
                                     }));
                                 if result.is_err() {
@@ -634,12 +645,14 @@ fn handle_connection(
     max_outbuf: usize,
     idle_timeout: Option<Duration>,
     obs: Arc<ServerObs>,
+    tenants: Option<Arc<crate::cache::tenant::TenantPlane>>,
 ) -> std::io::Result<()> {
     use std::io::Write;
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut inbuf: Vec<u8> = Vec::with_capacity(16 * 1024);
     let mut outbuf: Vec<u8> = Vec::with_capacity(16 * 1024);
     let mut arena = batch::BatchArena::default();
+    let mut tenant = tenants.map(crate::cache::tenant::TenantConn::new);
     let mut chunk = [0u8; 16 * 1024];
     let mut pos = 0usize;
     let mut last_active = Instant::now();
@@ -668,6 +681,7 @@ fn handle_connection(
                 &mut arena,
                 max_outbuf,
                 Some(obs.as_ref()),
+                tenant.as_mut(),
             );
             pos += d.consumed;
             obs.note_outbuf(outbuf.len());
@@ -732,6 +746,7 @@ fn spawn_metrics_listener(
     obs: Arc<ServerObs>,
     stop: Arc<AtomicBool>,
     curr_conns: Arc<AtomicUsize>,
+    tenants: Option<Arc<crate::cache::tenant::TenantPlane>>,
 ) -> std::io::Result<std::thread::JoinHandle<()>> {
     listener.set_nonblocking(true)?;
     std::thread::Builder::new()
@@ -746,6 +761,7 @@ fn spawn_metrics_listener(
                             cache.as_ref(),
                             &obs,
                             curr_conns.load(Ordering::Acquire),
+                            tenants.as_deref(),
                         );
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => waiter.wait(),
@@ -764,6 +780,7 @@ fn serve_metrics_once(
     cache: &dyn Cache,
     obs: &ServerObs,
     curr_connections: usize,
+    tenants: Option<&crate::cache::tenant::TenantPlane>,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(2)))?;
     let _ = stream.set_nodelay(true);
@@ -799,6 +816,9 @@ fn serve_metrics_once(
     let mut body = Vec::with_capacity(4096);
     proto::write_prometheus(&mut body, cache.engine_name(), &stats, &info);
     proto::write_prometheus_server(&mut body, cache.engine_name(), &obs.gauges());
+    if let Some(plane) = tenants {
+        proto::write_prometheus_tenants(&mut body, cache.engine_name(), &plane.snapshot());
+    }
     write_http(&mut stream, "200 OK", &body)
 }
 

@@ -119,6 +119,8 @@ pub(super) struct ReactorShared {
     pub obs: Arc<super::ServerObs>,
     /// Orphan pen for supervisor re-homing (see module docs).
     pub handoff: Arc<Handoff>,
+    /// Multi-tenant control plane (`None` = tenant-less wire protocol).
+    pub tenants: Option<Arc<crate::cache::tenant::TenantPlane>>,
 }
 
 impl Clone for ReactorShared {
@@ -135,6 +137,7 @@ impl Clone for ReactorShared {
             nodelay: self.nodelay,
             obs: Arc::clone(&self.obs),
             handoff: Arc::clone(&self.handoff),
+            tenants: self.tenants.clone(),
         }
     }
 }
@@ -462,7 +465,15 @@ fn accept_ready(
                     state.conns.push(None);
                     state.conns.len() - 1
                 });
-                let mut conn = Conn::new(stream, token, shared.max_outbuf);
+                let mut conn = Conn::new(
+                    stream,
+                    token,
+                    shared.max_outbuf,
+                    shared
+                        .tenants
+                        .clone()
+                        .map(crate::cache::tenant::TenantConn::new),
+                );
                 conn.last_active = now;
                 if poller
                     .register(conn.stream.as_raw_fd(), token, Interest::READ)
@@ -530,10 +541,18 @@ pub(super) struct Conn {
     /// Coarse last-activity stamp (refreshed per wakeup, not per
     /// syscall) — the idle-reap sweep's input.
     last_active: Instant,
+    /// Tenant state when the server runs a multi-tenant plane. Lives on
+    /// the connection, so it survives re-homing to another reactor.
+    tenant: Option<crate::cache::tenant::TenantConn>,
 }
 
 impl Conn {
-    fn new(stream: TcpStream, token: usize, max_outbuf: usize) -> Conn {
+    fn new(
+        stream: TcpStream,
+        token: usize,
+        max_outbuf: usize,
+        tenant: Option<crate::cache::tenant::TenantConn>,
+    ) -> Conn {
         Conn {
             stream,
             token,
@@ -548,6 +567,7 @@ impl Conn {
             read_closed: false,
             need_input: true,
             last_active: Instant::now(),
+            tenant,
         }
     }
 
@@ -637,6 +657,7 @@ impl Conn {
                 &mut self.arena,
                 budget,
                 Some(shared.obs.as_ref()),
+                self.tenant.as_mut(),
             );
             self.pos += d.consumed;
             shared.obs.note_outbuf(self.out_pending());

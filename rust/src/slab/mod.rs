@@ -42,9 +42,11 @@
 
 mod class;
 mod magazine;
+pub mod tenant;
 
 pub use class::{SizeClass, SizeClassStats};
 pub use magazine::MAG_CAP;
+pub use tenant::{TenantClassStats, TenantUsage, DEFAULT_TENANT, MAX_TENANTS};
 
 use std::alloc::{alloc, dealloc, Layout};
 use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
@@ -124,6 +126,9 @@ pub struct Slab {
     /// Observability: flush-request epochs honored by registered threads
     /// (each count is one thread publishing its parked chunks).
     flushes_honored: ShardedCounter,
+    /// Per-tenant accounting + budget words (multi-tenant plane); a
+    /// single gated relaxed load when tenancy is off.
+    tenants: tenant::TenantTable,
     /// Own-`Arc` handle for magazine registrations (see module docs).
     self_weak: Weak<Slab>,
 }
@@ -155,8 +160,10 @@ impl Slab {
             .collect::<Vec<_>>()
             .into_boxed_slice();
         let depot = magazine::SlotTable::new(classes.len());
+        let tenants = tenant::TenantTable::new(classes.len());
         Arc::new_cyclic(|self_weak| Slab {
             budget_left: AtomicUsize::new(config.mem_limit),
+            tenants,
             classes,
             config,
             pages: Mutex::new(Vec::new()),
@@ -306,6 +313,12 @@ impl Slab {
         self.config.mem_limit
     }
 
+    /// Page size — the budget-claim granule, the tenant-budget floor,
+    /// and the arbiter's move quantum.
+    pub fn page_size(&self) -> usize {
+        self.config.page_size
+    }
+
     /// Bytes of page budget already claimed by pages. Page-granular, so
     /// magazines (chunk-granular) cannot distort it.
     pub fn claimed_bytes(&self) -> usize {
@@ -414,6 +427,110 @@ impl Slab {
         self.class_for(size)
             .map(|c| self.classes[c as usize].shared_ops())
             .unwrap_or(0)
+    }
+
+    // ---------------------------------------------------------------
+    // Multi-tenant plane (see [`tenant`] module docs). All of these are
+    // stats-grade relaxed accounting plus soft budget words; chunk
+    // ownership still flows through the allocator's own orderings.
+    // ---------------------------------------------------------------
+
+    /// Turn on per-tenant accounting. Until this is called every tenant
+    /// hook below is a no-op costing one relaxed load.
+    pub fn enable_tenancy(&self) {
+        self.tenants.enable();
+    }
+
+    /// Whether per-tenant accounting is on.
+    #[inline]
+    pub fn tenancy_enabled(&self) -> bool {
+        self.tenants.enabled()
+    }
+
+    /// Attribute a freshly handed chunk of `class` to `tenant`. Called
+    /// by the item layer right after a successful [`Slab::alloc`].
+    #[inline]
+    pub fn note_tenant_alloc(&self, tenant: u8, class: u8) {
+        if self.tenants.enabled() {
+            self.tenants
+                .note_alloc(tenant, class, self.chunk_size(class));
+        }
+    }
+
+    /// Unwind [`Slab::note_tenant_alloc`] when the chunk returns. Called
+    /// by the item layer right before [`Slab::free`], with the tenant
+    /// byte read back from the item header (frees run on whichever
+    /// thread EBR reclamation lands on).
+    #[inline]
+    pub fn note_tenant_free(&self, tenant: u8, class: u8) {
+        if self.tenants.enabled() {
+            self.tenants
+                .note_free(tenant, class, self.chunk_size(class));
+        }
+    }
+
+    /// Set a tenant's soft byte budget (`0` = unlimited).
+    pub fn set_tenant_budget(&self, tenant: u8, bytes: usize) {
+        self.tenants.set_budget(tenant, bytes);
+    }
+
+    /// A tenant's soft byte budget (`0` = unlimited).
+    pub fn tenant_budget(&self, tenant: u8) -> usize {
+        self.tenants.budget(tenant)
+    }
+
+    /// Live chunk bytes currently attributed to a tenant.
+    pub fn tenant_live_bytes(&self, tenant: u8) -> usize {
+        self.tenants.live(tenant)
+    }
+
+    /// Whether storing `add` more bytes would put `tenant` over its soft
+    /// budget — the eviction-steering signal: an over-budget tenant must
+    /// evict from itself before drawing on the shared pool, and a tenant
+    /// at its floor with nothing of its own left to evict is the one that
+    /// sees per-tenant OOM while other tenants keep storing.
+    #[inline]
+    pub fn tenant_must_yield(&self, tenant: u8, add: usize) -> bool {
+        if !self.tenants.enabled() {
+            return false;
+        }
+        let budget = self.tenants.budget(tenant);
+        budget != 0 && self.tenants.live(tenant).saturating_add(add) > budget
+    }
+
+    /// Arbiter hook: move up to `bytes` of soft budget from `from` to
+    /// `to` (donor floor: one page), then raise the flush-request epoch
+    /// so chunks the shrinking tenant's traffic parked in *other*
+    /// threads' magazines are published immediately — the taker should
+    /// be able to use the surrendered memory on its next allocation, not
+    /// after the donor's next natural pressure event. Returns the bytes
+    /// actually moved.
+    pub fn move_tenant_budget(&self, from: u8, to: u8, bytes: usize) -> usize {
+        let moved = self
+            .tenants
+            .move_budget(from, to, bytes, self.config.page_size);
+        if moved > 0 {
+            self.request_magazine_flush();
+        }
+        moved
+    }
+
+    /// Accounting snapshot for one tenant.
+    pub fn tenant_usage(&self, tenant: u8) -> TenantUsage {
+        self.tenants.usage(tenant)
+    }
+
+    /// Per-size-class rows for one tenant (the per-tenant mirror of
+    /// [`Slab::class_stats`]); classes the tenant never touched are
+    /// omitted.
+    pub fn tenant_class_stats(&self, tenant: u8) -> Vec<TenantClassStats> {
+        (0..self.classes.len())
+            .map(|c| {
+                self.tenants
+                    .class_row(tenant, c, self.classes[c].chunk_size())
+            })
+            .filter(|row| row.handed_chunks > 0)
+            .collect()
     }
 }
 
@@ -781,6 +898,121 @@ mod tests {
         for (p, c) in held {
             unsafe { slab.free(p, c) };
         }
+    }
+
+    #[test]
+    fn arbiter_budget_move_raises_flush_epoch() {
+        // Satellite of the multi-tenant plane: when the arbiter shrinks
+        // a tenant's budget, chunks parked in an *idle* thread's
+        // magazine must become publishable immediately —
+        // `move_tenant_budget` raises the flush-request epoch (PR 7)
+        // itself instead of waiting for the donor's next natural
+        // pressure event. Unlike
+        // `pressure_flush_request_publishes_idle_magazines`, nothing
+        // here ever hits the pressure wall, so the budget move is the
+        // ONLY epoch raiser the victim can observe.
+        let slab = Slab::new(SlabConfig::small(256 << 10));
+        slab.enable_tenancy();
+        slab.set_tenant_budget(1, 192 << 10);
+        slab.set_tenant_budget(2, 64 << 10);
+        let (to_victim, victim_rx) = std::sync::mpsc::channel::<()>();
+        let (to_main, main_rx) = std::sync::mpsc::channel::<()>();
+        let victim = {
+            let slab = Arc::clone(&slab);
+            std::thread::spawn(move || {
+                // Alloc 8, free 7, keep 1: refill batch + frees leave a
+                // well-stocked magazine parked privately.
+                let mut held = Vec::new();
+                for _ in 0..8 {
+                    held.push(slab.alloc(1024).unwrap());
+                }
+                let keep = held.pop().unwrap();
+                for (p, c) in held {
+                    unsafe { slab.free(p, c) };
+                }
+                to_main.send(()).unwrap();
+                // Idle while main runs the arbiter.
+                victim_rx.recv().unwrap();
+                // One magazine op honors the raised epoch and flushes.
+                unsafe { slab.free(keep.0, keep.1) };
+                to_main.send(()).unwrap();
+                // Stay alive until the assertions ran, so exit-flush
+                // cannot mask the epoch path.
+                victim_rx.recv().unwrap();
+            })
+        };
+        main_rx.recv().unwrap();
+        let class = slab.class_for(1024).unwrap() as usize;
+        assert!(
+            slab.class_stats()[class].cached_chunks > 0,
+            "victim parked chunks privately"
+        );
+        let honored_before = slab.flushes_honored();
+        let moved = slab.move_tenant_budget(1, 2, 64 << 10);
+        assert_eq!(moved, 64 << 10, "donor above floor surrenders in full");
+        assert_eq!(slab.tenant_budget(1), 128 << 10);
+        assert_eq!(slab.tenant_budget(2), 128 << 10);
+        // Wake the victim; its single free must publish its magazine.
+        to_victim.send(()).unwrap();
+        main_rx.recv().unwrap();
+        // The push honors the epoch (flushing everything parked) before
+        // parking the newly freed chunk, so exactly one chunk remains.
+        assert_eq!(
+            slab.class_stats()[class].cached_chunks,
+            1,
+            "budget move must make the idle thread publish its magazine"
+        );
+        assert!(
+            slab.flushes_honored() > honored_before,
+            "the flush must be epoch-honoring, not incidental"
+        );
+        to_victim.send(()).unwrap();
+        victim.join().unwrap();
+        // Donor floor: budget never shrinks below one page (64 KiB in
+        // the small test config), and an unlimited (0) tenant donates
+        // nothing.
+        assert_eq!(slab.move_tenant_budget(1, 2, usize::MAX), 64 << 10);
+        assert_eq!(slab.tenant_budget(1), 64 << 10);
+        assert_eq!(slab.move_tenant_budget(1, 2, 4 << 10), 0, "donor at floor");
+        assert_eq!(slab.move_tenant_budget(0, 2, 4 << 10), 0, "unlimited donor");
+    }
+
+    #[test]
+    fn tenant_accounting_attributes_allocs_and_frees() {
+        let slab = Slab::new(SlabConfig::small(256 << 10));
+        // Disabled: hooks are no-ops.
+        slab.note_tenant_alloc(3, 0);
+        assert_eq!(slab.tenant_usage(3), TenantUsage::default());
+        slab.enable_tenancy();
+        let (p, c) = slab.alloc(100).unwrap();
+        slab.note_tenant_alloc(3, c);
+        let chunk = slab.chunk_size(c);
+        assert_eq!(slab.tenant_live_bytes(3), chunk);
+        let u = slab.tenant_usage(3);
+        assert_eq!((u.handed_chunks, u.freed_chunks), (1, 0));
+        let rows = slab.tenant_class_stats(3);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].chunk_size, chunk);
+        assert_eq!(rows[0].live_chunks, 1);
+        // Budget enforcement signal: over-budget only when live + add
+        // exceeds a non-zero budget.
+        assert!(!slab.tenant_must_yield(3, chunk), "no budget set");
+        slab.set_tenant_budget(3, chunk + chunk / 2);
+        assert!(!slab.tenant_must_yield(3, chunk / 4));
+        assert!(slab.tenant_must_yield(3, chunk));
+        // Free attributes back via the explicit tenant (header byte in
+        // real use) even though nothing about the calling thread says 3.
+        slab.note_tenant_free(3, c);
+        unsafe { slab.free(p, c) };
+        assert_eq!(slab.tenant_live_bytes(3), 0);
+        let u = slab.tenant_usage(3);
+        assert_eq!((u.handed_chunks, u.freed_chunks), (1, 1));
+        assert!(!slab.tenant_must_yield(3, chunk));
+        // Thread-local plumbing used by the item layer.
+        assert_eq!(tenant::current(), DEFAULT_TENANT);
+        tenant::set_current(3);
+        assert_eq!(tenant::current(), 3);
+        tenant::set_current(DEFAULT_TENANT);
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Per-tenant slab accounting and page-budget words — the substrate the
+//! Memshare-style arbiter ([`crate::cache::tenant`]) steers.
+//!
+//! The multi-tenant plane needs three things from the allocator, none of
+//! which may slow the single-tenant fast path:
+//!
+//! 1. **Attribution**: how many live bytes (and per-size-class chunks)
+//!    each tenant holds. Allocation attributes to the *calling thread's*
+//!    current tenant (a thread-local set by the server's drain loop
+//!    around batch execution); frees attribute via the tenant byte the
+//!    item header carries, because EBR reclamation runs on whichever
+//!    thread happens to flush the deferral queue, long after the
+//!    allocating connection moved on.
+//! 2. **Budget words**: one soft page-budget per tenant that the arbiter
+//!    moves between tenants. A budget of `0` means *unlimited* — the
+//!    default tenant starts there, so a tenant-less server (or one where
+//!    the arbiter never ran) is budget-transparent.
+//! 3. **A gate**: with tenancy disabled (every slab built by a plain
+//!    `serve`), the only cost on the alloc/free path is one relaxed
+//!    load and a predictable branch.
+//!
+//! Everything here is stats-grade relaxed atomics: the counters steer
+//! eviction and arbitration heuristics, they are not synchronization
+//! edges. Chunk ownership itself still publishes through the free lists'
+//! and item words' orderings (see `rust/docs/concurrency.md`).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Hard cap on concurrently registered tenants per process. Small and
+/// fixed so every accounting structure is a flat array of atomics —
+/// no resizing, no locks on the data plane.
+pub const MAX_TENANTS: usize = 16;
+
+/// Tenant id of connections that never issued `tenant <name>`.
+pub const DEFAULT_TENANT: u8 = 0;
+
+thread_local! {
+    /// The tenant the calling thread is currently executing for.
+    /// Set by the server's drain loop around batch execution; read by
+    /// `Item::alloc` to stamp and attribute fresh items.
+    static CURRENT: Cell<u8> = const { Cell::new(DEFAULT_TENANT) };
+}
+
+/// Set the calling thread's current tenant (see [`CURRENT`]).
+#[inline]
+pub fn set_current(tenant: u8) {
+    CURRENT.with(|c| c.set(tenant));
+}
+
+/// The calling thread's current tenant id.
+#[inline]
+pub fn current() -> u8 {
+    CURRENT.with(|c| c.get())
+}
+
+/// One tenant's accounting snapshot (stats / arbiter input).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantUsage {
+    /// Item bytes currently attributed to the tenant (footprint of the
+    /// chunks it holds, at chunk granularity).
+    pub live_bytes: usize,
+    /// Soft page budget (0 = unlimited / unenforced).
+    pub budget_bytes: usize,
+    /// Chunks ever handed to the tenant (monotonic).
+    pub handed_chunks: u64,
+    /// Chunks the tenant returned (monotonic).
+    pub freed_chunks: u64,
+}
+
+/// One tenant's per-size-class row, riding [`super::SizeClassStats`]'
+/// shape: `live = handed - freed`, in chunks of `chunk_size`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantClassStats {
+    pub chunk_size: usize,
+    pub handed_chunks: u64,
+    pub freed_chunks: u64,
+    pub live_chunks: u64,
+}
+
+/// The per-slab tenant accounting table. All flat atomics; the `enabled`
+/// gate keeps the disabled path at one relaxed load.
+pub(super) struct TenantTable {
+    enabled: AtomicBool,
+    /// Soft byte budgets, `0` = unlimited.
+    budgets: [AtomicUsize; MAX_TENANTS],
+    /// Live chunk bytes attributed per tenant.
+    live_bytes: [AtomicUsize; MAX_TENANTS],
+    /// Monotonic handed/freed chunk counters, `tenant * n_classes +
+    /// class` — the per-tenant mirror of `SizeClass::handed`.
+    handed: Box<[AtomicU64]>,
+    freed: Box<[AtomicU64]>,
+    n_classes: usize,
+}
+
+impl TenantTable {
+    pub(super) fn new(n_classes: usize) -> Self {
+        let cells = MAX_TENANTS * n_classes;
+        TenantTable {
+            enabled: AtomicBool::new(false),
+            budgets: std::array::from_fn(|_| AtomicUsize::new(0)),
+            live_bytes: std::array::from_fn(|_| AtomicUsize::new(0)),
+            handed: (0..cells).map(|_| AtomicU64::new(0)).collect(),
+            freed: (0..cells).map(|_| AtomicU64::new(0)).collect(),
+            n_classes,
+        }
+    }
+
+    #[inline]
+    pub(super) fn enable(&self) {
+        // ord: relaxed-ok — a pure on/off gate for stats-grade counters;
+        // callers that race the flip merely miss a few early notes.
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub(super) fn enabled(&self) -> bool {
+        // ord: relaxed-ok — see enable(); the disabled fast path is one
+        // relaxed load + branch by design.
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub(super) fn note_alloc(&self, tenant: u8, class: u8, chunk_bytes: usize) {
+        let t = tenant as usize % MAX_TENANTS;
+        // ord: relaxed-ok — stats-grade attribution counters; ownership
+        // of the chunk publishes through the allocator, not these.
+        self.live_bytes[t].fetch_add(chunk_bytes, Ordering::Relaxed);
+        // ord: relaxed-ok — monotonic stats counter, same as above.
+        self.handed[t * self.n_classes + class as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub(super) fn note_free(&self, tenant: u8, class: u8, chunk_bytes: usize) {
+        let t = tenant as usize % MAX_TENANTS;
+        // ord: relaxed-ok — see note_alloc; saturation below guards the
+        // (startup-race) case of a free noted without its alloc.
+        let mut live = self.live_bytes[t].load(Ordering::Relaxed);
+        loop {
+            let next = live.saturating_sub(chunk_bytes);
+            // ord: relaxed-ok — stats-grade CAS, no payload published.
+            match self.live_bytes[t].compare_exchange_weak(
+                live,
+                next,
+                Ordering::Relaxed, // ord: relaxed-ok — stats-grade CAS
+                Ordering::Relaxed, // ord: relaxed-ok — failure re-load, same
+            ) {
+                Ok(_) => break,
+                Err(cur) => live = cur,
+            }
+        }
+        // ord: relaxed-ok — monotonic stats counter.
+        self.freed[t * self.n_classes + class as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub(super) fn budget(&self, tenant: u8) -> usize {
+        // ord: relaxed-ok — soft-limit heuristic read.
+        self.budgets[tenant as usize % MAX_TENANTS].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub(super) fn live(&self, tenant: u8) -> usize {
+        // ord: relaxed-ok — stats snapshot.
+        self.live_bytes[tenant as usize % MAX_TENANTS].load(Ordering::Relaxed)
+    }
+
+    pub(super) fn set_budget(&self, tenant: u8, bytes: usize) {
+        // ord: relaxed-ok — soft limit consumed by heuristic reads.
+        self.budgets[tenant as usize % MAX_TENANTS].store(bytes, Ordering::Relaxed);
+    }
+
+    /// Move up to `bytes` of budget from `from` to `to`, never shrinking
+    /// the donor below `floor`. Returns the bytes actually moved. A
+    /// donor at `0` (unlimited) donates nothing — unlimited is not a
+    /// balance to draw down.
+    pub(super) fn move_budget(&self, from: u8, to: u8, bytes: usize, floor: usize) -> usize {
+        let f = from as usize % MAX_TENANTS;
+        let t = to as usize % MAX_TENANTS;
+        if f == t {
+            return 0;
+        }
+        // ord: relaxed-ok — budget words are advisory soft limits; the
+        // CAS only needs atomicity (no torn donation), not ordering.
+        let mut cur = self.budgets[f].load(Ordering::Relaxed);
+        let moved = loop {
+            if cur == 0 || cur <= floor {
+                return 0;
+            }
+            let new = cur.saturating_sub(bytes).max(floor);
+            let moved = cur - new;
+            // ord: relaxed-ok — see the load above.
+            match self.budgets[f].compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed, // ord: relaxed-ok — advisory budget CAS
+                Ordering::Relaxed, // ord: relaxed-ok — failure re-load, same
+            ) {
+                Ok(_) => break moved,
+                Err(now) => cur = now,
+            }
+        };
+        // ord: relaxed-ok — advisory credit; pairs with nothing.
+        self.budgets[t].fetch_add(moved, Ordering::Relaxed);
+        moved
+    }
+
+    pub(super) fn usage(&self, tenant: u8) -> TenantUsage {
+        let t = tenant as usize % MAX_TENANTS;
+        let base = t * self.n_classes;
+        let mut handed = 0u64;
+        let mut freed = 0u64;
+        for c in 0..self.n_classes {
+            // ord: relaxed-ok — stats snapshot, tolerates skew between
+            // cells read at different instants.
+            handed += self.handed[base + c].load(Ordering::Relaxed);
+            // ord: relaxed-ok — same stats snapshot.
+            freed += self.freed[base + c].load(Ordering::Relaxed);
+        }
+        TenantUsage {
+            live_bytes: self.live(tenant),
+            budget_bytes: self.budget(tenant),
+            handed_chunks: handed,
+            freed_chunks: freed,
+        }
+    }
+
+    pub(super) fn class_row(&self, tenant: u8, class: usize, chunk_size: usize) -> TenantClassStats {
+        let base = (tenant as usize % MAX_TENANTS) * self.n_classes;
+        // ord: relaxed-ok — stats snapshot; see usage().
+        let handed = self.handed[base + class].load(Ordering::Relaxed);
+        // ord: relaxed-ok — same stats snapshot.
+        let freed = self.freed[base + class].load(Ordering::Relaxed);
+        TenantClassStats {
+            chunk_size,
+            handed_chunks: handed,
+            freed_chunks: freed,
+            live_chunks: handed.saturating_sub(freed),
+        }
+    }
+}

@@ -9,9 +9,11 @@
 //! every engine.
 
 pub mod driver;
+pub mod tenants;
 pub mod zipf;
 
 pub use driver::{run_driver, run_wire, DriverOptions, DriverReport, WireOptions, WireReport};
+pub use tenants::{run_tenant_bench, TenantBenchReport, TenantBenchSpec};
 pub use zipf::Zipf;
 
 use crate::sync::{SplitMix64, Xoshiro256};

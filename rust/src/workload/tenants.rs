@@ -1,0 +1,244 @@
+//! Multi-tenant bench: skewed per-tenant footprints under equal budget
+//! splits, with the Memshare-style arbiter on or off.
+//!
+//! The scenario the arbiter exists for: N tenants share one cache, each
+//! gets an equal slice of the byte budget at registration, but their
+//! working sets differ (footprints follow a power-law across tenants,
+//! `--tenant-skew`). A static partition strands memory at the small
+//! tenants while the large ones evict their own hot keys; the arbiter
+//! reads the shadow-hit signal and moves page budget toward the pain.
+//! Running the same deterministic workload with the arbiter off and on
+//! (`fleec bench --tenants N`) quantifies the difference as aggregate
+//! and per-tenant hit ratios — the repo's `BENCH_tenants.json` artifact.
+//!
+//! The loop drives the engine the way the server does — thread-local
+//! tenant stamp around every crossing, namespaced execution keys, the
+//! same hit/shadow accounting [`crate::cache::tenant::TenantSink`]
+//! performs — just without a socket in the middle.
+
+use std::sync::Arc;
+
+use crate::cache::tenant::{PlaneConfig, TenantPlane, TenantSnapshot};
+use crate::cache::{hash_key, Cache};
+use crate::sync::Xoshiro256;
+use crate::workload::{encode_key, fill_value, Zipf, KEY_LEN};
+
+/// One multi-tenant bench configuration.
+#[derive(Debug, Clone)]
+pub struct TenantBenchSpec {
+    /// Named tenants (≥ 2; each gets `mem_limit / tenants` at
+    /// registration).
+    pub tenants: usize,
+    /// Footprint skew across tenants: tenant `i`'s share of the key
+    /// catalog is proportional to `(i + 1)^skew`. 0 = identical
+    /// footprints (the arbiter has nothing to win).
+    pub skew: f64,
+    /// Total distinct keys across all tenants.
+    pub catalog: u64,
+    /// Per-tenant zipfian access skew.
+    pub alpha: f64,
+    /// Fraction of each tenant's ops that are reads (misses re-cache,
+    /// the standard cache-miss protocol).
+    pub read_ratio: f64,
+    /// Value bytes per item.
+    pub value_bytes: usize,
+    /// Total operations (round-robined across tenants).
+    pub ops: u64,
+    /// Run a maintenance tick (CLOCK decay + arbitration) every this
+    /// many operations.
+    pub maintenance_every: u64,
+    /// RNG seed; per-tenant streams derive from it.
+    pub seed: u64,
+}
+
+impl Default for TenantBenchSpec {
+    fn default() -> Self {
+        TenantBenchSpec {
+            tenants: 4,
+            skew: 1.0,
+            catalog: 200_000,
+            alpha: 0.99,
+            read_ratio: 0.95,
+            value_bytes: 256,
+            ops: 2_000_000,
+            maintenance_every: 4096,
+            seed: 0xF1EE_C0DE,
+        }
+    }
+}
+
+/// Per-tenant outcome row (plane snapshot plus the bench's own
+/// footprint fact).
+#[derive(Debug, Clone)]
+pub struct TenantBenchRow {
+    pub snapshot: TenantSnapshot,
+    /// Distinct keys this tenant cycled through.
+    pub catalog: u64,
+}
+
+/// One full run's outcome.
+#[derive(Debug, Clone)]
+pub struct TenantBenchReport {
+    pub arbiter: bool,
+    pub rows: Vec<TenantBenchRow>,
+    /// Aggregate gets across named tenants.
+    pub gets: u64,
+    /// Aggregate hits across named tenants.
+    pub hits: u64,
+    /// Lifetime bytes the arbiter moved (0 with it off).
+    pub moved_bytes: u64,
+}
+
+impl TenantBenchReport {
+    pub fn hit_ratio(&self) -> f64 {
+        if self.gets == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.gets as f64
+        }
+    }
+}
+
+/// Split `spec.catalog` across tenants by the power-law weights.
+/// Public so the CLI can print the footprints it is about to run.
+pub fn footprints(spec: &TenantBenchSpec) -> Vec<u64> {
+    let weights: Vec<f64> = (0..spec.tenants)
+        .map(|i| ((i + 1) as f64).powf(spec.skew))
+        .collect();
+    let total: f64 = weights.iter().sum();
+    weights
+        .iter()
+        .map(|w| ((spec.catalog as f64) * w / total).max(64.0) as u64)
+        .collect()
+}
+
+/// Run the workload against a fresh `cache` and report per-tenant hit
+/// ratios. Deterministic for a given `(spec, arbiter)` pair, so the
+/// off/on comparison isolates the arbiter.
+pub fn run_tenant_bench(
+    cache: &Arc<dyn Cache>,
+    spec: &TenantBenchSpec,
+    arbiter: bool,
+) -> TenantBenchReport {
+    assert!(spec.tenants >= 2, "need at least two tenants to arbitrate");
+    let plane = TenantPlane::new(cache.as_ref(), PlaneConfig { arbiter });
+    let mut tenants = Vec::with_capacity(spec.tenants);
+    for (i, catalog) in footprints(spec).into_iter().enumerate() {
+        let name = format!("t{i}");
+        let id = plane
+            .register(name.as_bytes())
+            .expect("bench tenant registration");
+        tenants.push(TenantLoop {
+            id,
+            prefix: plane.prefix_of(id),
+            catalog,
+            zipf: Zipf::new(catalog, spec.alpha),
+            rng: Xoshiro256::seeded(spec.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1)),
+        });
+    }
+
+    let mut key = [0u8; KEY_LEN];
+    let mut ns_key = Vec::with_capacity(KEY_LEN + 66);
+    let mut value = vec![0u8; spec.value_bytes];
+    for op in 0..spec.ops {
+        let t = &mut tenants[(op % spec.tenants as u64) as usize];
+        let id = t.zipf.sample(&mut t.rng);
+        let read = (t.rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64 <= spec.read_ratio;
+        ns_key.clear();
+        ns_key.extend_from_slice(&t.prefix);
+        ns_key.extend_from_slice(encode_key(&mut key, id));
+        // Same attribution bracket the server's flush puts around an
+        // engine crossing: allocations inside it land on this tenant.
+        crate::slab::tenant::set_current(t.id);
+        if read && cache.get(&ns_key).is_some() {
+            plane.note_get(t.id, true, || 0);
+        } else {
+            if read {
+                plane.note_get(t.id, false, || hash_key(&ns_key));
+            }
+            // Miss (or write): fetch-and-cache.
+            fill_value(id, &mut value);
+            let _ = cache.set(&ns_key, &value, 0, 0);
+            plane.note_set(t.id, hash_key(&ns_key));
+        }
+        crate::slab::tenant::set_current(crate::slab::DEFAULT_TENANT);
+        if (op + 1) % spec.maintenance_every == 0 {
+            cache.maintenance();
+            plane.arbitrate();
+        }
+    }
+
+    let snaps = plane.snapshot();
+    let mut rows = Vec::with_capacity(tenants.len());
+    let (mut gets, mut hits) = (0u64, 0u64);
+    for t in &tenants {
+        let snapshot = snaps[t.id as usize].clone();
+        gets += snapshot.gets;
+        hits += snapshot.hits;
+        rows.push(TenantBenchRow {
+            snapshot,
+            catalog: t.catalog,
+        });
+    }
+    TenantBenchReport {
+        arbiter,
+        rows,
+        gets,
+        hits,
+        moved_bytes: plane.moved_bytes(),
+    }
+}
+
+/// One tenant's generator state.
+struct TenantLoop {
+    id: u8,
+    prefix: Vec<u8>,
+    catalog: u64,
+    zipf: Zipf,
+    rng: Xoshiro256,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{build_engine, CacheConfig};
+
+    fn tiny_spec() -> TenantBenchSpec {
+        TenantBenchSpec {
+            tenants: 3,
+            skew: 1.0,
+            catalog: 3_000,
+            alpha: 1.01,
+            read_ratio: 0.9,
+            value_bytes: 128,
+            ops: 30_000,
+            maintenance_every: 512,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn footprints_follow_the_skew() {
+        let spec = tiny_spec();
+        let f = footprints(&spec);
+        assert_eq!(f.len(), 3);
+        assert!(f[0] < f[1] && f[1] < f[2], "{f:?}");
+        let flat = footprints(&TenantBenchSpec { skew: 0.0, ..spec });
+        assert_eq!(flat[0], flat[2]);
+    }
+
+    #[test]
+    fn bench_runs_and_reports_per_tenant_rows() {
+        let cache = build_engine("fleec", CacheConfig::small()).unwrap();
+        let spec = tiny_spec();
+        let report = run_tenant_bench(&cache, &spec, false);
+        assert_eq!(report.rows.len(), 3);
+        assert!(report.gets > 0);
+        assert!(report.hits > 0, "steady-state reads must hit");
+        assert_eq!(report.moved_bytes, 0, "arbiter off must never move budget");
+        for row in &report.rows {
+            assert!(row.snapshot.gets > 0, "{}", row.snapshot.name);
+            assert!(row.snapshot.sets > 0, "{}", row.snapshot.name);
+        }
+    }
+}

@@ -304,3 +304,132 @@ fn degradation_counters_surface_in_stats_internals() {
         drop(server);
     }
 }
+
+#[test]
+fn two_tenant_chaos_keeps_namespaces_isolated_under_alloc_faults() {
+    // The multi-tenant variant of the storm: two tenants hammer the
+    // SAME key names through one server while injected slab failures
+    // refuse ~5% of allocations. Invariants: every hit is byte-exact
+    // against that tenant's own oracle (a single leaked namespace byte
+    // is a mismatch), refused stores surface as the memcached OOM line
+    // on an otherwise healthy connection, and the server still drains.
+    let base = fleec::testutil::suite_seed(0x7E4A_2C4A);
+    for model in models() {
+        let _g = gate();
+        faults::configure(&format!("slab.alloc:oom:0.05:{base}")).unwrap();
+
+        let cache = build_engine(
+            "fleec",
+            CacheConfig {
+                mem_limit: 8 << 20,
+                ..CacheConfig::small()
+            },
+        )
+        .unwrap();
+        let plane = fleec::cache::tenant::TenantPlane::new(
+            cache.as_ref(),
+            fleec::cache::tenant::PlaneConfig { arbiter: false },
+        );
+        let mut server = Server::start(
+            ServerConfig {
+                addr: "127.0.0.1:0".parse().unwrap(),
+                model,
+                tenants: Some(plane),
+                ..ServerConfig::default()
+            },
+            cache,
+        )
+        .unwrap();
+        let addr = server.addr();
+
+        let mut verified = 0u64;
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (t, name) in ["alpha", "beta"].into_iter().enumerate() {
+                handles.push(s.spawn(move || -> u64 {
+                    let mut c =
+                        Client::connect_with(addr, Some(Duration::from_secs(10))).unwrap();
+                    assert_eq!(c.tenant(name.as_bytes()).unwrap(), "OK", "{model:?}");
+                    let mut rng = Xoshiro256::seeded(base ^ ((t as u64 + 1) << 32));
+                    // Shared key names, per-tenant oracle: the tenant is
+                    // the only writer of its own namespace, so any hit
+                    // must reproduce its own last STORED bytes — never
+                    // the sibling's.
+                    let mut oracle: HashMap<u64, Vec<u8>> = HashMap::new();
+                    let mut checked = 0u64;
+                    for _round in 0..ROUNDS {
+                        let mut queued = Vec::with_capacity(DEPTH);
+                        let mut p = c.pipeline();
+                        for _ in 0..DEPTH {
+                            let id = rng.next_below(64);
+                            let key = format!("sk{id}");
+                            if rng.chance(0.5) {
+                                p.get(key.as_bytes());
+                                queued.push(Q::Get(id));
+                            } else {
+                                let len = 8 + rng.next_below(800) as usize;
+                                let mut val = vec![0u8; len];
+                                for b in val.iter_mut() {
+                                    *b = rng.next_u64() as u8;
+                                }
+                                // Tenant-tagged first byte: a cross-read
+                                // fails even against an empty oracle.
+                                val[0] = t as u8;
+                                p.set(key.as_bytes(), &val, 0, 0);
+                                queued.push(Q::Set(id, val));
+                            }
+                        }
+                        // Alloc faults are op-level: the connection must
+                        // never die from one.
+                        let replies = p.run().unwrap_or_else(|e| {
+                            panic!("{model:?}/{name}: connection died under alloc faults: {e}")
+                        });
+                        for (q, r) in queued.iter().zip(replies) {
+                            match (q, r) {
+                                (Q::Get(id), PipelineReply::Values(v)) => {
+                                    if let Some(hit) = v.first() {
+                                        let expect = oracle.get(id).unwrap_or_else(|| {
+                                            panic!(
+                                                "{model:?}/{name}: hit for a key this \
+                                                 tenant never stored: sk{id}"
+                                            )
+                                        });
+                                        assert_eq!(
+                                            &hit.data, expect,
+                                            "{model:?}/{name}: cross-tenant bytes leaked"
+                                        );
+                                        checked += 1;
+                                    }
+                                }
+                                (Q::Set(id, val), PipelineReply::Store(line)) => {
+                                    match line.as_str() {
+                                        "STORED" => {
+                                            oracle.insert(*id, val.clone());
+                                        }
+                                        "SERVER_ERROR out of memory storing object" => {}
+                                        other => panic!(
+                                            "{model:?}/{name}: unexpected store reply: {other}"
+                                        ),
+                                    }
+                                }
+                                _ => panic!("{model:?}/{name}: reply desynced from request"),
+                            }
+                        }
+                    }
+                    checked
+                }));
+            }
+            for h in handles {
+                verified += h.join().expect("tenant chaos client panicked");
+            }
+        });
+
+        assert!(faults::fired("slab.alloc") > 0, "{model:?}: no alloc faults fired");
+        assert!(verified > 0, "{model:?}: differential never checked a hit");
+        faults::configure("").unwrap();
+        assert!(
+            server.drain(Duration::from_secs(10)),
+            "{model:?}: drain missed its deadline after the tenant storm"
+        );
+    }
+}

@@ -14,7 +14,7 @@ fn pump(cache: &dyn fleec::cache::Cache, wire: &[u8]) -> Vec<u8> {
     let mut arena = BatchArena::default();
     let mut consumed = 0;
     loop {
-        let d = drain(cache, 0, &wire[consumed..], &mut out, &mut arena, usize::MAX, None);
+        let d = drain(cache, 0, &wire[consumed..], &mut out, &mut arena, usize::MAX, None, None);
         consumed += d.consumed;
         match d.stop {
             fleec::server::batch::DrainStop::Budget => continue,

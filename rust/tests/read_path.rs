@@ -341,6 +341,7 @@ fn reference_pump(cache: &dyn Cache, wire: &[u8]) -> Vec<u8> {
                             sub,
                             &proto::ServerInfo::default(),
                             None,
+                            None,
                             &mut out,
                         ),
                         proto::Command::FlushAll { noreply } => {
@@ -375,7 +376,7 @@ fn sink_pump(cache: &dyn Cache, wire: &[u8]) -> Vec<u8> {
     let mut arena = BatchArena::default();
     let mut consumed = 0;
     loop {
-        let d = batch::drain(cache, 0, &wire[consumed..], &mut out, &mut arena, usize::MAX, None);
+        let d = batch::drain(cache, 0, &wire[consumed..], &mut out, &mut arena, usize::MAX, None, None);
         consumed += d.consumed;
         match d.stop {
             DrainStop::NeedMoreInput | DrainStop::Quit => break,

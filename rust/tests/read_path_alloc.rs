@@ -87,20 +87,20 @@ fn warm_get_round_allocates_nothing_per_hit() {
     // statics) with both shapes before measuring.
     for _ in 0..3 {
         out.clear();
-        drain(cache.as_ref(), 0, &wire_hit, &mut out, &mut arena, usize::MAX, Some(&obs));
-        drain(cache.as_ref(), 0, &wire_miss, &mut out, &mut arena, usize::MAX, Some(&obs));
+        drain(cache.as_ref(), 0, &wire_hit, &mut out, &mut arena, usize::MAX, Some(&obs), None);
+        drain(cache.as_ref(), 0, &wire_miss, &mut out, &mut arena, usize::MAX, Some(&obs), None);
     }
 
     out.clear();
     let before_hits = allocs();
-    let d = drain(cache.as_ref(), 0, &wire_hit, &mut out, &mut arena, usize::MAX, Some(&obs));
+    let d = drain(cache.as_ref(), 0, &wire_hit, &mut out, &mut arena, usize::MAX, Some(&obs), None);
     let hit_allocs = allocs() - before_hits;
     assert_eq!(d.consumed, wire_hit.len());
     let hit_bytes = out.len();
 
     out.clear();
     let before_misses = allocs();
-    let d = drain(cache.as_ref(), 0, &wire_miss, &mut out, &mut arena, usize::MAX, Some(&obs));
+    let d = drain(cache.as_ref(), 0, &wire_miss, &mut out, &mut arena, usize::MAX, Some(&obs), None);
     let miss_allocs = allocs() - before_misses;
     assert_eq!(d.consumed, wire_miss.len());
 

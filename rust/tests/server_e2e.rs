@@ -447,3 +447,91 @@ fn large_values_roundtrip_over_wire() {
         }
     }
 }
+
+#[test]
+fn per_tenant_oom_spares_other_tenants() {
+    // The multi-tenant sharpening of the OOM contract: a tenant pinned
+    // at a floor budget gets the memcached OOM line on every store —
+    // and *only* that tenant. A sibling on the same server, same slab,
+    // same key names keeps storing and reading. Soft limits are
+    // enforced by eviction steering, so the failure is per-op and
+    // per-tenant, never a session or server failure.
+    use fleec::cache::tenant::{PlaneConfig, TenantPlane};
+    for model in models() {
+        for engine in ["fleec", "oaflash"] {
+            let cache = build_engine(
+                engine,
+                CacheConfig {
+                    mem_limit: 4 << 20,
+                    ..CacheConfig::small()
+                },
+            )
+            .unwrap();
+            let plane = TenantPlane::new(cache.as_ref(), PlaneConfig { arbiter: false });
+            // Pre-register both tenants: registration re-splits budgets
+            // equally, so the floor override must come after.
+            let squeezed = plane.register(b"squeezed").unwrap();
+            plane.register(b"roomy").unwrap();
+            // 64 bytes is below a single item's footprint: every
+            // squeezed store is over budget with nothing of its own to
+            // evict — deterministic per-tenant OOM.
+            plane.set_budget(squeezed, 64);
+            let server = Server::start(
+                ServerConfig {
+                    addr: "127.0.0.1:0".parse().unwrap(),
+                    model,
+                    tenants: Some(Arc::clone(&plane)),
+                    ..ServerConfig::default()
+                },
+                Arc::clone(&cache),
+            )
+            .unwrap();
+            let mut a = Client::connect(server.addr()).unwrap();
+            let mut b = Client::connect(server.addr()).unwrap();
+            assert_eq!(a.tenant(b"squeezed").unwrap(), "OK", "{engine}/{model:?}");
+            assert_eq!(b.tenant(b"roomy").unwrap(), "OK", "{engine}/{model:?}");
+            let mut p = a.pipeline();
+            p.set(b"shared-name", &[0x5a; 1024], 0, 0);
+            let replies = p.run().unwrap();
+            assert_eq!(
+                replies[0],
+                PipelineReply::Store("SERVER_ERROR out of memory storing object".into()),
+                "{engine}/{model:?}: floor-budget tenant must see per-tenant OOM"
+            );
+            assert!(
+                b.set(b"shared-name", &[0x5a; 1024], 0, 0).unwrap(),
+                "{engine}/{model:?}: the sibling tenant must keep storing"
+            );
+            assert_eq!(
+                b.get(b"shared-name").unwrap().unwrap().data,
+                vec![0x5a; 1024],
+                "{engine}/{model:?}"
+            );
+            // The squeezed connection survived its OOM and still sees
+            // its own (empty) namespace, not the sibling's item.
+            assert!(
+                a.get(b"shared-name").unwrap().is_none(),
+                "{engine}/{model:?}: OOM'd tenant must not read the sibling's value"
+            );
+            assert!(
+                a.version().unwrap().starts_with("VERSION"),
+                "{engine}/{model:?}: connection must survive a per-tenant OOM"
+            );
+            // Accounting reached the wire: the roomy tenant owns live
+            // slab bytes, the squeezed one holds its floor budget.
+            let stats = a.stats_sub("tenants").unwrap();
+            let val = |k: &str| {
+                stats
+                    .iter()
+                    .find(|(name, _)| name == k)
+                    .unwrap_or_else(|| panic!("{engine}/{model:?}: missing stat {k}"))
+                    .1
+                    .parse::<u64>()
+                    .unwrap()
+            };
+            assert!(val("roomy:live_bytes") > 0, "{engine}/{model:?}");
+            assert_eq!(val("squeezed:budget_bytes"), 64, "{engine}/{model:?}");
+            assert!(val("squeezed:gets") >= 1, "{engine}/{model:?}");
+        }
+    }
+}

@@ -1,0 +1,394 @@
+//! Multi-tenant plane, held to its two core contracts:
+//!
+//! 1. **Transparency** — a server with the tenant plane enabled whose
+//!    clients never issue `tenant` must be *byte-exact* with a
+//!    tenant-less server: the default tenant's namespace prefix is
+//!    empty, execution keys equal client keys, and cas tokens move in
+//!    lockstep. Verified as a randomized wire differential across every
+//!    engine × {flat, 4-shard router}.
+//! 2. **Isolation** — two tenants using the *same key names* never see
+//!    each other's values, deletes, or cas tokens. Verified against a
+//!    per-tenant model on randomized interleavings.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use fleec::cache::tenant::{PlaneConfig, TenantConn, TenantPlane};
+use fleec::cache::{build_sharded, Cache, CacheConfig};
+use fleec::server::batch::{self, BatchArena, DrainStop};
+
+/// Pump `wire` through [`batch::drain`] — the live server path — with
+/// an optional per-connection tenant cursor, returning the reply bytes.
+fn pump(cache: &dyn Cache, mut tenant: Option<&mut TenantConn>, wire: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut arena = BatchArena::default();
+    let mut consumed = 0;
+    loop {
+        let d = batch::drain(
+            cache,
+            0,
+            &wire[consumed..],
+            &mut out,
+            &mut arena,
+            usize::MAX,
+            None,
+            tenant.as_deref_mut(),
+        );
+        consumed += d.consumed;
+        match d.stop {
+            DrainStop::NeedMoreInput | DrainStop::Quit => break,
+            DrainStop::Budget => continue,
+        }
+    }
+    assert_eq!(consumed, wire.len(), "pump left input unconsumed");
+    out
+}
+
+/// Random printable key from a small catalog (collisions wanted; same
+/// catalog for every tenant so isolation is actually exercised).
+fn pick_key(rng: &mut fleec::sync::Xoshiro256) -> String {
+    format!("tk{}", rng.next_below(24))
+}
+
+/// Append one random command (with its data block) to `wire` — the
+/// same command mix as the read-path differential, so the default
+/// tenant is proven transparent under every reply shape.
+fn push_random_command(rng: &mut fleec::sync::Xoshiro256, wire: &mut Vec<u8>) {
+    let noreply = if rng.chance(0.2) { " noreply" } else { "" };
+    match rng.next_below(100) {
+        0..=29 => {
+            let verb = if rng.chance(0.3) { "gets" } else { "get" };
+            let n = 1 + rng.next_below(4);
+            let mut line = verb.to_string();
+            for _ in 0..n {
+                line.push(' ');
+                line.push_str(&pick_key(rng));
+            }
+            wire.extend_from_slice(line.as_bytes());
+            wire.extend_from_slice(b"\r\n");
+        }
+        30..=59 => {
+            let verb = ["set", "add", "replace"][rng.next_below(3) as usize];
+            let len = rng.next_below(96) as usize;
+            let mut data = vec![0u8; len];
+            for b in data.iter_mut() {
+                *b = b'a' + (rng.next_below(26) as u8);
+            }
+            wire.extend_from_slice(
+                format!(
+                    "{verb} {} {} 0 {len}{noreply}\r\n",
+                    pick_key(rng),
+                    rng.next_below(1000)
+                )
+                .as_bytes(),
+            );
+            wire.extend_from_slice(&data);
+            wire.extend_from_slice(b"\r\n");
+        }
+        60..=67 => {
+            let verb = ["append", "prepend"][rng.next_below(2) as usize];
+            wire.extend_from_slice(
+                format!("{verb} {} 0 0 3{noreply}\r\nxyz\r\n", pick_key(rng)).as_bytes(),
+            );
+        }
+        68..=73 => {
+            // cas with a guessed token: identical deterministic outcome
+            // on both instances (token counters move in lockstep).
+            wire.extend_from_slice(
+                format!(
+                    "cas {} 0 0 2 {}{noreply}\r\nCC\r\n",
+                    pick_key(rng),
+                    rng.next_below(200)
+                )
+                .as_bytes(),
+            );
+        }
+        74..=81 => {
+            let verb = ["incr", "decr"][rng.next_below(2) as usize];
+            wire.extend_from_slice(
+                format!("{verb} {} {}{noreply}\r\n", pick_key(rng), rng.next_below(50)).as_bytes(),
+            );
+        }
+        82..=87 => {
+            wire.extend_from_slice(format!("delete {}{noreply}\r\n", pick_key(rng)).as_bytes());
+        }
+        88..=91 => {
+            wire.extend_from_slice(
+                format!("touch {} {}{noreply}\r\n", pick_key(rng), rng.next_below(500)).as_bytes(),
+            );
+        }
+        92..=93 => wire.extend_from_slice(b"version\r\n"),
+        94 => wire.extend_from_slice(format!("verbosity 1{noreply}\r\n").as_bytes()),
+        95 => wire.extend_from_slice(b"not-a-command\r\n"),
+        96 => wire.extend_from_slice(b"stats\r\n"),
+        _ => {
+            wire.extend_from_slice(
+                format!("set {} 0 0 2\r\n{:02}\r\n", pick_key(rng), rng.next_below(100)).as_bytes(),
+            );
+        }
+    }
+}
+
+#[test]
+fn single_default_tenant_is_byte_exact_with_tenantless_server() {
+    // The acceptance differential: tenant plane on, no `tenant` command
+    // ever issued → every reply byte (cas tokens included) must equal a
+    // tenant-less server fed the identical pipeline. The default
+    // tenant's prefix is empty, so execution keys are client keys and
+    // slab layouts match exactly.
+    for engine in fleec::cache::ENGINES {
+        for shards in [1usize, 4] {
+            fleec::testutil::run_prop(
+                &format!("tenant-transparency-{engine}-{shards}"),
+                0x7E4A_47 ^ ((shards as u64) << 8),
+                |rng| {
+                    let plain = build_sharded(engine, shards, CacheConfig::small()).unwrap();
+                    let tenanted = build_sharded(engine, shards, CacheConfig::small()).unwrap();
+                    let plane =
+                        TenantPlane::new(tenanted.as_ref(), PlaneConfig { arbiter: false });
+                    let mut conn = TenantConn::new(Arc::clone(&plane));
+                    let mut wire = Vec::new();
+                    let n_cmds = 60 + rng.next_below(200);
+                    for _ in 0..n_cmds {
+                        push_random_command(rng, &mut wire);
+                    }
+                    let want = pump(plain.as_ref(), None, &wire);
+                    let got = pump(tenanted.as_ref(), Some(&mut conn), &wire);
+                    assert_eq!(
+                        got,
+                        want,
+                        "{engine}/{shards}: default tenant is not transparent\ntenant: {:?}\nplain : {:?}",
+                        String::from_utf8_lossy(&got),
+                        String::from_utf8_lossy(&want)
+                    );
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn two_tenants_with_identical_keys_never_cross_read() {
+    // Randomized isolation: tenants `alpha` and `beta` run interleaved
+    // set/get/delete streams over the SAME key names; each reply must
+    // match that tenant's own model. A single leaked namespace byte
+    // shows up as a wrong VALUE body or a phantom DELETED.
+    for engine in fleec::cache::ENGINES {
+        for shards in [1usize, 4] {
+            fleec::testutil::run_prop(
+                &format!("tenant-isolation-{engine}-{shards}"),
+                0x150_1A7E ^ ((shards as u64) << 8),
+                |rng| {
+                    let cache = build_sharded(engine, shards, CacheConfig::small()).unwrap();
+                    let plane = TenantPlane::new(cache.as_ref(), PlaneConfig { arbiter: false });
+                    let mut conns = [
+                        TenantConn::new(Arc::clone(&plane)),
+                        TenantConn::new(Arc::clone(&plane)),
+                    ];
+                    assert_eq!(
+                        pump(cache.as_ref(), Some(&mut conns[0]), b"tenant alpha\r\n"),
+                        b"OK\r\n"
+                    );
+                    assert_eq!(
+                        pump(cache.as_ref(), Some(&mut conns[1]), b"tenant beta\r\n"),
+                        b"OK\r\n"
+                    );
+                    let mut models: [HashMap<String, Vec<u8>>; 2] =
+                        [HashMap::new(), HashMap::new()];
+                    for _ in 0..300 {
+                        let t = rng.next_below(2) as usize;
+                        let key = pick_key(rng);
+                        let mut wire = Vec::new();
+                        let mut want = Vec::new();
+                        match rng.next_below(10) {
+                            // Values are tenant-tagged so a cross-read
+                            // is a byte mismatch, not a silent alias.
+                            0..=4 => {
+                                let val =
+                                    format!("{}-{:03}", ["alpha", "beta"][t], rng.next_below(999))
+                                        .into_bytes();
+                                wire.extend_from_slice(
+                                    format!("set {key} 0 0 {}\r\n", val.len()).as_bytes(),
+                                );
+                                wire.extend_from_slice(&val);
+                                wire.extend_from_slice(b"\r\n");
+                                want.extend_from_slice(b"STORED\r\n");
+                                models[t].insert(key, val);
+                            }
+                            5..=7 => {
+                                wire.extend_from_slice(format!("get {key}\r\n").as_bytes());
+                                if let Some(val) = models[t].get(&key) {
+                                    want.extend_from_slice(
+                                        format!("VALUE {key} 0 {}\r\n", val.len()).as_bytes(),
+                                    );
+                                    want.extend_from_slice(val);
+                                    want.extend_from_slice(b"\r\n");
+                                }
+                                want.extend_from_slice(b"END\r\n");
+                            }
+                            _ => {
+                                wire.extend_from_slice(format!("delete {key}\r\n").as_bytes());
+                                want.extend_from_slice(if models[t].remove(&key).is_some() {
+                                    b"DELETED\r\n" as &[u8]
+                                } else {
+                                    b"NOT_FOUND\r\n"
+                                });
+                            }
+                        }
+                        let got = pump(cache.as_ref(), Some(&mut conns[t]), &wire);
+                        assert_eq!(
+                            got,
+                            want,
+                            "{engine}/{shards}: tenant {t} reply diverged from its model\ngot : {:?}\nwant: {:?}",
+                            String::from_utf8_lossy(&got),
+                            String::from_utf8_lossy(&want)
+                        );
+                    }
+                },
+            );
+        }
+    }
+}
+
+/// Parse the cas token out of a single-VALUE `gets` reply.
+fn cas_token(reply: &[u8]) -> u64 {
+    let text = std::str::from_utf8(reply).unwrap();
+    let line = text.lines().next().expect("VALUE line");
+    assert!(line.starts_with("VALUE "), "unexpected reply: {text:?}");
+    line.split_whitespace().nth(4).unwrap().parse().unwrap()
+}
+
+#[test]
+fn cas_tokens_are_independent_across_tenants() {
+    // Same key name in two tenants = two items = two cas tokens. A
+    // token leaked across the boundary must fail the cas (EXISTS), and
+    // must not disturb the other tenant's value.
+    let cache = build_sharded("fleec", 1, CacheConfig::small()).unwrap();
+    let plane = TenantPlane::new(cache.as_ref(), PlaneConfig { arbiter: false });
+    let mut a = TenantConn::new(Arc::clone(&plane));
+    let mut b = TenantConn::new(Arc::clone(&plane));
+    pump(cache.as_ref(), Some(&mut a), b"tenant alpha\r\n");
+    pump(cache.as_ref(), Some(&mut b), b"tenant beta\r\n");
+    pump(cache.as_ref(), Some(&mut a), b"set k 0 0 2\r\nAA\r\n");
+    pump(cache.as_ref(), Some(&mut b), b"set k 0 0 2\r\nBB\r\n");
+    let tok_a = cas_token(&pump(cache.as_ref(), Some(&mut a), b"gets k\r\n"));
+    let tok_b = cas_token(&pump(cache.as_ref(), Some(&mut b), b"gets k\r\n"));
+    assert_ne!(tok_a, tok_b, "tenants must not share cas tokens");
+    // Alpha's token against beta's item: wrong token, EXISTS.
+    let cross = pump(
+        cache.as_ref(),
+        Some(&mut b),
+        format!("cas k 0 0 2 {tok_a}\r\nXX\r\n").as_bytes(),
+    );
+    assert_eq!(cross, b"EXISTS\r\n");
+    assert_eq!(
+        pump(cache.as_ref(), Some(&mut b), b"get k\r\n"),
+        b"VALUE k 0 2\r\nBB\r\nEND\r\n",
+        "a cross-tenant cas attempt must not disturb the value"
+    );
+    // The token is still good in its own tenant.
+    let own = pump(
+        cache.as_ref(),
+        Some(&mut a),
+        format!("cas k 0 0 2 {tok_a}\r\nYY\r\n").as_bytes(),
+    );
+    assert_eq!(own, b"STORED\r\n");
+}
+
+#[test]
+fn tenant_command_surface() {
+    let cache = build_sharded("fleec", 1, CacheConfig::small()).unwrap();
+
+    // Tenant-less server: the command and its stats page both refuse.
+    assert_eq!(
+        pump(cache.as_ref(), None, b"tenant acme\r\n"),
+        b"CLIENT_ERROR tenant support is not enabled\r\n"
+    );
+    assert_eq!(
+        pump(cache.as_ref(), None, b"stats tenants\r\n"),
+        b"CLIENT_ERROR tenant support is not enabled\r\n"
+    );
+
+    let plane = TenantPlane::new(cache.as_ref(), PlaneConfig { arbiter: false });
+    let mut conn = TenantConn::new(Arc::clone(&plane));
+
+    // Bad names are rejected without switching.
+    assert_eq!(
+        pump(cache.as_ref(), Some(&mut conn), b"tenant bad!name\r\n"),
+        b"CLIENT_ERROR tenant name must be [A-Za-z0-9_.-]\r\n"
+    );
+    assert_eq!(
+        pump(cache.as_ref(), Some(&mut conn), b"tenant\r\n"),
+        b"CLIENT_ERROR tenant requires a name\r\n"
+    );
+    assert_eq!(conn.id(), 0, "failed switches must not move the cursor");
+
+    // Switch, store, and verify the namespace round-trip — then switch
+    // back to the default tenant by its reserved name.
+    assert_eq!(pump(cache.as_ref(), Some(&mut conn), b"tenant acme\r\n"), b"OK\r\n");
+    assert_eq!(
+        pump(cache.as_ref(), Some(&mut conn), b"tenant acme noreply\r\n"),
+        b""
+    );
+    pump(cache.as_ref(), Some(&mut conn), b"set nsk 0 0 2\r\nvv\r\n");
+    assert_eq!(
+        pump(cache.as_ref(), Some(&mut conn), b"get nsk\r\n"),
+        b"VALUE nsk 0 2\r\nvv\r\nEND\r\n"
+    );
+    assert_eq!(pump(cache.as_ref(), Some(&mut conn), b"tenant default\r\n"), b"OK\r\n");
+    assert_eq!(
+        pump(cache.as_ref(), Some(&mut conn), b"get nsk\r\n"),
+        b"END\r\n",
+        "acme's keys must be invisible to the default tenant"
+    );
+
+    // `stats tenants` renders one row per registered tenant.
+    let stats = pump(cache.as_ref(), Some(&mut conn), b"stats tenants\r\n");
+    let text = String::from_utf8(stats).unwrap();
+    assert!(text.contains("STAT acme:gets "), "{text:?}");
+    assert!(text.contains("STAT default:sets "), "{text:?}");
+    assert!(text.contains("STAT tenants 2\r\n"), "{text:?}");
+    assert!(text.ends_with("END\r\n"), "{text:?}");
+}
+
+#[test]
+fn namespaced_keys_consume_key_length_budget() {
+    // Documented degradation: the engine key cap (250 bytes) applies to
+    // the *execution* key, prefix included. A client key that fits the
+    // protocol but overflows once namespaced is refused as a normal
+    // store failure — never a protocol desync.
+    let cache = build_sharded("fleec", 1, CacheConfig::small()).unwrap();
+    let plane = TenantPlane::new(cache.as_ref(), PlaneConfig { arbiter: false });
+    let mut conn = TenantConn::new(Arc::clone(&plane));
+    let name = "n".repeat(64);
+    pump(
+        cache.as_ref(),
+        Some(&mut conn),
+        format!("tenant {name}\r\n").as_bytes(),
+    );
+    // 64-byte name + separator: a 190-byte key overflows (255 > 250), a
+    // 180-byte key still fits (245 ≤ 250).
+    let long = "k".repeat(190);
+    let fits = "k".repeat(180);
+    let reply = pump(
+        cache.as_ref(),
+        Some(&mut conn),
+        format!("set {long} 0 0 1\r\nx\r\n").as_bytes(),
+    );
+    assert_eq!(reply, b"NOT_STORED\r\n", "over-budget key must refuse cleanly");
+    let reply = pump(
+        cache.as_ref(),
+        Some(&mut conn),
+        format!("set {fits} 0 0 1\r\nx\r\n").as_bytes(),
+    );
+    assert_eq!(reply, b"STORED\r\n");
+    assert_eq!(
+        pump(
+            cache.as_ref(),
+            Some(&mut conn),
+            format!("get {long} {fits}\r\n").as_bytes()
+        ),
+        format!("VALUE {fits} 0 1\r\nx\r\nEND\r\n").into_bytes(),
+        "the over-budget key reads as a miss; the fitting one round-trips"
+    );
+}
